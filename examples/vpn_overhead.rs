@@ -1,0 +1,24 @@
+//! §II narrative ablation: the Calico VPN overlay bottleneck.
+//!
+//! Running the submit node as an unprivileged pod puts it behind the
+//! Kubernetes VPN; the paper observed encap processing capping throughput
+//! at ~25 Gbps, and had to run the submit container without the VPN to
+//! exceed 90 Gbps.
+//!
+//!     cargo run --release --example vpn_overhead [scale]
+
+use htcdm::coordinator::{Experiment, Scenario};
+
+fn main() -> anyhow::Result<()> {
+    let scale: u32 = std::env::args().nth(1).map(|s| s.parse().unwrap()).unwrap_or(1);
+    let novpn = Experiment::scenario(Scenario::LanPaper).scaled(scale).run()?;
+    let vpn = Experiment::scenario(Scenario::LanVpn).scaled(scale).run()?;
+    println!("{}", novpn.table_row(Some(90.0), Some(32.0)));
+    println!("{}", vpn.table_row(Some(25.0), None));
+    println!(
+        "\nVPN ceiling: {:.1} Gbps (paper: ~25 Gbps); host-network speedup {:.1}x",
+        vpn.sustained_gbps(),
+        novpn.sustained_gbps() / vpn.sustained_gbps()
+    );
+    Ok(())
+}

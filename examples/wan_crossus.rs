@@ -1,0 +1,23 @@
+//! Reproduce the paper's §IV / Fig. 2: the cross-US WAN benchmark.
+//!
+//! Same workload as Fig. 1, but the 200 slots live in New York
+//! (1×100 Gbps + 4×10 Gbps NICs) behind a shared 100 Gbps backbone with
+//! 58 ms RTT. Paper: ~60 Gbps sustained, all jobs done in 49 min.
+//!
+//!     cargo run --release --example wan_crossus [scale]
+
+use htcdm::coordinator::{Experiment, Scenario};
+
+fn main() -> anyhow::Result<()> {
+    let scale: u32 = std::env::args().nth(1).map(|s| s.parse().unwrap()).unwrap_or(1);
+    let report = Experiment::scenario(Scenario::WanPaper).scaled(scale).run()?;
+    println!(
+        "{}",
+        report.table_row(
+            Scenario::WanPaper.paper_sustained_gbps(),
+            Scenario::WanPaper.paper_makespan_min()
+        )
+    );
+    println!("\nFig. 2 (submit NIC, 5-min bins):\n{}", report.figure(100.0));
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT-lower the L2 transfer pipeline to HLO text artifacts for Rust.
+
+Emits, per chunk geometry in `model.CHUNK_GEOMETRIES`:
+
+    artifacts/seal_<name>.hlo.txt
+    artifacts/unseal_<name>.hlo.txt
+
+plus `artifacts/manifest.json` describing the ABI (arg shapes/dtypes, output
+arity, chunk geometry) that the Rust runtime consumes.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax ≥0.5
+emits protos with 64-bit instruction ids, which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from the `python/` directory, as the Makefile does):
+
+    python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+ABI_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text (return_tuple=True ABI)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(kind: str, n_blocks: int, tile: int) -> str:
+    """Trace + lower one (kind, geometry) pair to HLO text."""
+    import jax.numpy as jnp
+
+    key = jax.ShapeDtypeStruct((8,), jnp.uint32)
+    iv = jax.ShapeDtypeStruct((4,), jnp.uint32)
+    data = jax.ShapeDtypeStruct((n_blocks, 16), jnp.uint32)
+    fn = model.lowerable(kind, n_blocks, tile)
+    lowered = jax.jit(fn).lower(key, iv, data)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated geometry names to build (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = list(model.CHUNK_GEOMETRIES)
+    if args.only:
+        names = [n for n in names if n in set(args.only.split(","))]
+
+    manifest = {"abi_version": ABI_VERSION, "entries": []}
+    for name in names:
+        n_blocks, tile = model.CHUNK_GEOMETRIES[name]
+        for kind in ("seal", "unseal"):
+            text = lower_one(kind, n_blocks, tile)
+            fname = f"{kind}_{name}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["entries"].append(
+                {
+                    "kind": kind,
+                    "name": name,
+                    "file": fname,
+                    "n_blocks": n_blocks,
+                    "tile": tile,
+                    "chunk_bytes": 64 * n_blocks,
+                    # args: key (8,) u32, iv (4,) u32, data (n_blocks,16) u32
+                    "args": [
+                        {"shape": [8], "dtype": "u32"},
+                        {"shape": [4], "dtype": "u32"},
+                        {"shape": [n_blocks, 16], "dtype": "u32"},
+                    ],
+                    # outputs (1-tuple of 2): payload (n_blocks,16) u32, digest (4,) u32
+                    "outputs": [
+                        {"shape": [n_blocks, 16], "dtype": "u32"},
+                        {"shape": [4], "dtype": "u32"},
+                    ],
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')} ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""L1 Pallas kernel: fused ChaCha20 stream cipher + poly16 integrity digest.
+
+This is the data-plane hot-spot of the htcdm transfer pipeline: every byte
+that moves through the submit node is encrypted (or decrypted) and
+integrity-digested by this kernel.
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation):
+
+  * The chunk is an (N, 16) uint32 array — N independent 64-byte ChaCha
+    blocks. The grid tiles N into `tile` rows per step; each tile is
+    (tile, 16) u32 = 64·tile bytes in VMEM for input, the same for output,
+    plus 16 column vectors of registers for the round state. With the
+    default tile of 2048 rows that is 128 KiB in + 128 KiB out — far below
+    the ~16 MiB VMEM budget, leaving room for double-buffering the HBM↔VMEM
+    pipeline that `BlockSpec` expresses.
+  * The 20 ChaCha rounds are a statically unrolled loop of 8 vectorized
+    quarter-rounds per double round over (tile,) lanes — pure VPU
+    add/xor/rotl work, no MXU. This mirrors how the paper's testbed ran
+    AES-NI on CPU cores: bulk, embarrassingly parallel over counter blocks.
+  * The digest is XOR-decomposable across tiles, so each grid step XORs its
+    tile's lane digest into a (16,) accumulator output that all grid steps
+    share (same output block). Grid steps execute in order, and step 0
+    initializes the accumulator.
+
+`interpret=True` always: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO so the AOT artifact runs on
+any backend. Real-TPU performance is estimated in DESIGN.md from the VMEM
+footprint and VPU roofline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_TILE = 2048
+
+
+def _qr(x, a, b, c, d):
+    """In-place quarter round on state columns a,b,c,d of the list x."""
+    x[a] = (x[a] + x[b]).astype(jnp.uint32)
+    x[d] = ref.rotl32(x[d] ^ x[a], 16)
+    x[c] = (x[c] + x[d]).astype(jnp.uint32)
+    x[b] = ref.rotl32(x[b] ^ x[c], 12)
+    x[a] = (x[a] + x[b]).astype(jnp.uint32)
+    x[d] = ref.rotl32(x[d] ^ x[a], 8)
+    x[c] = (x[c] + x[d]).astype(jnp.uint32)
+    x[b] = ref.rotl32(x[b] ^ x[c], 7)
+
+
+def _chacha_tile_keystream(key, nonce, counters):
+    """Keystream for one tile: counters is (tile,) u32 -> (tile, 16) u32."""
+    tile = counters.shape[0]
+    ones = jnp.ones((tile,), dtype=jnp.uint32)
+    x = [ones * np.uint32(c) for c in ref.CHACHA_CONSTANTS]
+    x += [ones * key[i] for i in range(8)]
+    x += [counters.astype(jnp.uint32)]
+    x += [ones * nonce[i] for i in range(3)]
+    x0 = list(x)
+    for _ in range(10):
+        _qr(x, 0, 4, 8, 12)
+        _qr(x, 1, 5, 9, 13)
+        _qr(x, 2, 6, 10, 14)
+        _qr(x, 3, 7, 11, 15)
+        _qr(x, 0, 5, 10, 15)
+        _qr(x, 1, 6, 11, 12)
+        _qr(x, 2, 7, 8, 13)
+        _qr(x, 3, 4, 9, 14)
+    out = [(xi + x0i).astype(jnp.uint32) for xi, x0i in zip(x, x0)]
+    return jnp.stack(out, axis=1)
+
+
+def _tile_digest(chunk, row0_abs):
+    """poly16 digest of one (tile, 16) u32 chunk at absolute row offset."""
+    tile = chunk.shape[0]
+    rows = (row0_abs + jnp.arange(tile, dtype=jnp.uint32))[:, None]
+    lanes = jnp.arange(16, dtype=jnp.uint32)[None, :]
+    tweak = ((rows + np.uint32(1)) * np.uint32(ref.PHI32)
+             + lanes * np.uint32(ref.LANE_C)).astype(jnp.uint32)
+    x = (chunk.astype(jnp.uint32) + tweak).astype(jnp.uint32)
+    x = x ^ (x >> np.uint32(16))
+    x = (x * np.uint32(ref.MIX_M1)).astype(jnp.uint32)
+    x = x ^ (x >> np.uint32(15))
+    x = (x * np.uint32(ref.MIX_M2)).astype(jnp.uint32)
+    x = x ^ (x >> np.uint32(16))
+    return jax.lax.reduce(x, jnp.uint32(0), jax.lax.bitwise_xor, dimensions=(0,))
+
+
+def _seal_kernel(iv_ref, data_ref, key_ref, cipher_ref, digest_ref, *, tile, digest_input):
+    """Pallas kernel body for one grid step (one tile of rows).
+
+    iv_ref: (4,) u32 — [counter0, nonce0, nonce1, nonce2] (scalar prefetch).
+    data_ref: (tile, 16) u32 input block.
+    key_ref: (8,) u32 key (full, every step).
+    cipher_ref: (tile, 16) u32 output block.
+    digest_ref: (16,) u32 accumulator shared by all grid steps.
+
+    digest_input=False → digest the XORed output (seal path);
+    digest_input=True  → digest the raw input (unseal path).
+    """
+    pid = pl.program_id(0)
+    key = key_ref[...]
+    iv = iv_ref[...]
+    counter0 = iv[0]
+    nonce = iv[1:4]
+
+    row0 = (pid.astype(jnp.uint32) * np.uint32(tile)).astype(jnp.uint32)
+    counters = (counter0 + row0 + jnp.arange(tile, dtype=jnp.uint32)).astype(jnp.uint32)
+
+    data = data_ref[...]
+    ks = _chacha_tile_keystream(key, nonce, counters)
+    out = (data ^ ks).astype(jnp.uint32)
+    cipher_ref[...] = out
+
+    # Digest is defined over the ciphertext: the input on the unseal path,
+    # the output on the seal path. Absolute row index = counter0 + row0 so
+    # the digest is invariant to how the stream is chunked.
+    dig_src = data if digest_input else out
+    tile_dig = _tile_digest(dig_src, (counter0 + row0).astype(jnp.uint32))
+
+    @pl.when(pid == 0)
+    def _init():
+        digest_ref[...] = tile_dig
+
+    @pl.when(pid != 0)
+    def _acc():
+        digest_ref[...] = digest_ref[...] ^ tile_dig
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "tile", "digest_input"))
+def seal_chunk(key, iv, data, *, n_blocks, tile=DEFAULT_TILE, digest_input=False):
+    """Fused encrypt/decrypt + digest of one (n_blocks, 16) u32 chunk.
+
+    Args:
+      key: (8,) u32 ChaCha key words.
+      iv: (4,) u32 — [counter0, nonce0, nonce1, nonce2].
+      data: (n_blocks, 16) u32 chunk (plaintext to seal / ciphertext to
+        unseal — the XOR is symmetric).
+      n_blocks: static row count; must be a multiple of `tile`.
+      tile: grid tile height (rows per grid step).
+      digest_input: False → digest output (seal); True → digest input
+        (unseal).
+
+    Returns:
+      (out (n_blocks,16) u32, lane_digest (16,) u32).
+    """
+    if n_blocks % tile != 0:
+        raise ValueError(f"n_blocks={n_blocks} not a multiple of tile={tile}")
+    grid = n_blocks // tile
+    kernel = functools.partial(_seal_kernel, tile=tile, digest_input=digest_input)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((tile, 16), lambda i: (i, 0)),
+            pl.BlockSpec((8,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, 16), lambda i: (i, 0)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, 16), jnp.uint32),
+            jax.ShapeDtypeStruct((16,), jnp.uint32),
+        ],
+        interpret=True,
+    )(iv.astype(jnp.uint32), data.astype(jnp.uint32), key.astype(jnp.uint32))
+
+
+def vmem_bytes(tile: int) -> int:
+    """Estimated VMEM footprint of one grid step (input + output + state).
+
+    Used by DESIGN.md's real-TPU feasibility estimate and asserted in tests
+    to stay under the 16 MiB VMEM budget with double-buffering headroom.
+    """
+    io = 2 * tile * 16 * 4          # data in + cipher out
+    state = 33 * tile * 4           # 16 working cols + 16 initial cols + counters
+    small = (4 + 8 + 16) * 4        # iv, key, digest
+    return 2 * io + state + small   # ×2 for double buffering of the IO blocks

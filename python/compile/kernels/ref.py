@@ -1,0 +1,191 @@
+"""Pure-jnp correctness oracle for the sealed-transfer kernels.
+
+This module is the *reference semantics* for the data-plane hot path of the
+htcdm transfer pipeline:
+
+  * ChaCha20 keystream generation (RFC 7539 block function, vectorized over
+    independent counter blocks) and the XOR stream cipher built on it.
+  * The 16-lane polynomial integrity digest ("poly16") computed over the
+    ciphertext, plus its 4-word finalizer.
+
+The Pallas kernel in `chacha.py` must match these functions bit-for-bit
+(pytest enforces it), and `ref.py` itself is validated against the RFC 7539
+test vectors in `python/tests/test_ref_vectors.py`.
+
+Everything here is uint32 arithmetic; jnp/numpy uint32 wraps modulo 2^32,
+which is exactly the ChaCha semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ChaCha20 "expand 32-byte k" constants (RFC 7539 §2.3).
+CHACHA_CONSTANTS = (0x61707865, 0x3320646E, 0x79622D32, 0x6B206574)
+
+# Digest mixing constants: golden-ratio odd constant and murmur3-style
+# finalizer multipliers. Odd multipliers are invertible mod 2^32, so the
+# per-row mix is a bijection of the input word.
+PHI32 = 0x9E3779B1
+MIX_M1 = 0x7FEB352D
+MIX_M2 = 0x846CA68B
+LANE_C = 0x85EBCA6B
+
+
+def rotl32(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Rotate-left each uint32 lane by the static amount `n`."""
+    x = x.astype(jnp.uint32)
+    return (x << np.uint32(n)) | (x >> np.uint32(32 - n))
+
+
+def _quarter_round(a, b, c, d):
+    """One ChaCha quarter round on four uint32 lanes (vectorized)."""
+    a = (a + b).astype(jnp.uint32)
+    d = rotl32(d ^ a, 16)
+    c = (c + d).astype(jnp.uint32)
+    b = rotl32(b ^ c, 12)
+    a = (a + b).astype(jnp.uint32)
+    d = rotl32(d ^ a, 8)
+    c = (c + d).astype(jnp.uint32)
+    b = rotl32(b ^ c, 7)
+    return a, b, c, d
+
+
+def chacha20_keystream(key: jnp.ndarray, nonce: jnp.ndarray, counter0, n_blocks: int) -> jnp.ndarray:
+    """ChaCha20 keystream for `n_blocks` consecutive counter values.
+
+    Args:
+      key: (8,) uint32 — the 256-bit key as little-endian words.
+      nonce: (3,) uint32 — the 96-bit nonce as little-endian words.
+      counter0: scalar uint32 — block counter of the first block.
+      n_blocks: static number of 64-byte blocks.
+
+    Returns:
+      (n_blocks, 16) uint32 keystream words; row i is the block with counter
+      counter0 + i, serialized as the usual 16 little-endian words.
+    """
+    key = key.astype(jnp.uint32)
+    nonce = nonce.astype(jnp.uint32)
+    counters = jnp.uint32(counter0) + jnp.arange(n_blocks, dtype=jnp.uint32)
+
+    # State as 16 column vectors of shape (n_blocks,).
+    ones = jnp.ones((n_blocks,), dtype=jnp.uint32)
+    x = [ones * np.uint32(c) for c in CHACHA_CONSTANTS]
+    x += [ones * key[i] for i in range(8)]
+    x += [counters]
+    x += [ones * nonce[i] for i in range(3)]
+    x0 = list(x)
+
+    for _ in range(10):  # 10 double rounds = 20 rounds
+        # Column rounds.
+        x[0], x[4], x[8], x[12] = _quarter_round(x[0], x[4], x[8], x[12])
+        x[1], x[5], x[9], x[13] = _quarter_round(x[1], x[5], x[9], x[13])
+        x[2], x[6], x[10], x[14] = _quarter_round(x[2], x[6], x[10], x[14])
+        x[3], x[7], x[11], x[15] = _quarter_round(x[3], x[7], x[11], x[15])
+        # Diagonal rounds.
+        x[0], x[5], x[10], x[15] = _quarter_round(x[0], x[5], x[10], x[15])
+        x[1], x[6], x[11], x[12] = _quarter_round(x[1], x[6], x[11], x[12])
+        x[2], x[7], x[8], x[13] = _quarter_round(x[2], x[7], x[8], x[13])
+        x[3], x[4], x[9], x[14] = _quarter_round(x[3], x[4], x[9], x[14])
+
+    out = [(xi + x0i).astype(jnp.uint32) for xi, x0i in zip(x, x0)]
+    return jnp.stack(out, axis=1)
+
+
+def chacha20_xor(key, nonce, counter0, data: jnp.ndarray) -> jnp.ndarray:
+    """XOR `data` ((N,16) uint32 view of a byte chunk) with the keystream.
+
+    Encryption and decryption are the same operation.
+    """
+    n_blocks = data.shape[0]
+    ks = chacha20_keystream(key, nonce, counter0, n_blocks)
+    return (data.astype(jnp.uint32) ^ ks).astype(jnp.uint32)
+
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3-style avalanche finalizer on each uint32 lane."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> np.uint32(16))
+    x = (x * np.uint32(MIX_M1)).astype(jnp.uint32)
+    x = x ^ (x >> np.uint32(15))
+    x = (x * np.uint32(MIX_M2)).astype(jnp.uint32)
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def poly16_digest(data: jnp.ndarray, row0=0) -> jnp.ndarray:
+    """16-lane order-sensitive integrity digest over an (N,16) uint32 chunk.
+
+    Each row is whitened by a bijective mix keyed by its absolute row index
+    (row0 + i) and lane index, then XOR-folded. XOR folding makes the digest
+    fully parallel / tile-decomposable, while the row-index whitening keeps
+    it order-sensitive (swapping rows changes the digest).
+
+    Args:
+      data: (N, 16) uint32 chunk (ciphertext for encrypt-then-digest).
+      row0: absolute index of row 0 within the whole stream, so that chunked
+        digests can be XOR-combined by the caller.
+
+    Returns:
+      (16,) uint32 lane digest.
+    """
+    n = data.shape[0]
+    rows = (jnp.uint32(row0) + jnp.arange(n, dtype=jnp.uint32))[:, None]
+    lanes = jnp.arange(16, dtype=jnp.uint32)[None, :]
+    tweak = ((rows + np.uint32(1)) * np.uint32(PHI32) + lanes * np.uint32(LANE_C)).astype(jnp.uint32)
+    mixed = _mix32(data.astype(jnp.uint32) + tweak)
+    # XOR-reduce over rows.
+    acc = jax.lax.reduce(mixed, jnp.uint32(0), jax.lax.bitwise_xor, dimensions=(0,))
+    return acc.astype(jnp.uint32)
+
+
+def digest_finalize(lane_digest: jnp.ndarray, total_words, nonce) -> jnp.ndarray:
+    """Fold a (16,) lane digest into the final (4,) transfer digest.
+
+    Binds the total length (in words) and the nonce so that truncation or
+    nonce-swapping is detected.
+    """
+    nonce = jnp.asarray(nonce, dtype=jnp.uint32)
+    d = lane_digest.astype(jnp.uint32)
+    d = d.at[0].set(d[0] ^ jnp.uint32(total_words))
+    d = d.at[1].set(d[1] ^ nonce[0])
+    d = d.at[2].set(d[2] ^ nonce[1])
+    d = d.at[3].set(d[3] ^ nonce[2])
+    folded = _mix32((d[0:4] + _mix32((d[4:8] + _mix32((d[8:12] + _mix32(d[12:16])).astype(jnp.uint32))).astype(jnp.uint32))).astype(jnp.uint32))
+    return folded.astype(jnp.uint32)
+
+
+def seal_ref(key, nonce, counter0, data):
+    """Reference seal: encrypt, then digest the ciphertext lanes.
+
+    Returns (ciphertext (N,16) u32, lane digest (16,) u32).
+    """
+    cipher = chacha20_xor(key, nonce, counter0, data)
+    return cipher, poly16_digest(cipher, row0=counter0)
+
+
+def unseal_ref(key, nonce, counter0, cipher):
+    """Reference unseal: digest the ciphertext lanes, then decrypt.
+
+    Returns (plaintext (N,16) u32, lane digest (16,) u32). The digest is over
+    the *input* ciphertext, mirroring encrypt-then-digest on the seal side.
+    """
+    plain = chacha20_xor(key, nonce, counter0, cipher)
+    return plain, poly16_digest(cipher, row0=counter0)
+
+
+# ---------------------------------------------------------------------------
+# Plain-numpy helpers for the test suite (byte-level API).
+# ---------------------------------------------------------------------------
+
+def bytes_to_words(b: bytes) -> np.ndarray:
+    """Little-endian bytes -> (N,16) uint32 words, zero-padded to 64B blocks."""
+    pad = (-len(b)) % 64
+    b = b + b"\x00" * pad
+    return np.frombuffer(b, dtype="<u4").reshape(-1, 16).copy()
+
+
+def words_to_bytes(w: np.ndarray) -> bytes:
+    return np.asarray(w, dtype="<u4").tobytes()

@@ -1,0 +1,104 @@
+"""L2: the JAX transfer-pipeline compute graph built on the Pallas kernel.
+
+One sealed-transfer chunk is processed by a single fused computation:
+
+    seal(key, iv, data)   -> (ciphertext, digest4)   # submit-node side
+    unseal(key, iv, data) -> (plaintext,  digest4)   # worker side
+
+`data` is an (N, 16) uint32 view of a 64·N-byte chunk; `iv` is
+[counter0, nonce0, nonce1, nonce2]. The ChaCha20 XOR and the 16-lane
+digest run in the Pallas kernel (`kernels.chacha`); the 4-word digest
+finalizer (which binds length and nonce) is plain jnp fused into the same
+HLO module by XLA.
+
+These functions are traced and AOT-lowered once per supported chunk size by
+`aot.py`; the Rust runtime executes the resulting artifacts on the PJRT CPU
+client. Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import chacha, ref
+
+#: Supported chunk geometries: name -> (n_blocks, tile).
+#: Chunk bytes = 64 * n_blocks.
+CHUNK_GEOMETRIES = {
+    "probe": (16, 16),        # 1 KiB — handshake probe + cheap tests
+    "64k": (1024, 1024),      # 64 KiB
+    "256k": (4096, 2048),     # 256 KiB — default stream chunk
+    "1m": (16384, 2048),      # 1 MiB — bulk mode
+}
+
+
+def seal_fn(key, iv, data, *, n_blocks, tile=chacha.DEFAULT_TILE):
+    """Seal one chunk: encrypt then digest the ciphertext.
+
+    Returns (cipher (N,16) u32, digest (4,) u32).
+    """
+    cipher, lane_dig = chacha.seal_chunk(
+        key, iv, data, n_blocks=n_blocks, tile=tile, digest_input=False
+    )
+    digest = ref.digest_finalize(lane_dig, jnp.uint32(n_blocks * 16), iv[1:4])
+    return cipher, digest
+
+
+def unseal_fn(key, iv, data, *, n_blocks, tile=chacha.DEFAULT_TILE):
+    """Unseal one chunk: digest the (input) ciphertext and decrypt.
+
+    Returns (plain (N,16) u32, digest (4,) u32). The caller compares the
+    digest against the frame trailer before trusting the plaintext.
+    """
+    plain, lane_dig = chacha.seal_chunk(
+        key, iv, data, n_blocks=n_blocks, tile=tile, digest_input=True
+    )
+    digest = ref.digest_finalize(lane_dig, jnp.uint32(n_blocks * 16), iv[1:4])
+    return plain, digest
+
+
+def seal_ref_fn(key, iv, data):
+    """Pure-jnp oracle for seal_fn (any N, no tiling constraint)."""
+    cipher, lane_dig = ref.seal_ref(key, iv[1:4], iv[0], data)
+    digest = ref.digest_finalize(lane_dig, jnp.uint32(data.shape[0] * 16), iv[1:4])
+    return cipher, digest
+
+
+def unseal_ref_fn(key, iv, data):
+    """Pure-jnp oracle for unseal_fn."""
+    plain, lane_dig = ref.unseal_ref(key, iv[1:4], iv[0], data)
+    digest = ref.digest_finalize(lane_dig, jnp.uint32(data.shape[0] * 16), iv[1:4])
+    return plain, digest
+
+
+def lowerable(kind: str, n_blocks: int, tile: int):
+    """Return an AOT-lowerable f(key, iv, data) for the given geometry.
+
+    The returned callable returns a tuple so that `return_tuple=True`
+    lowering yields a stable 2-tuple ABI: (payload, digest).
+    """
+    base = seal_fn if kind == "seal" else unseal_fn
+
+    def fn(key, iv, data):
+        out, digest = base(key, iv, data, n_blocks=n_blocks, tile=tile)
+        return (out, digest)
+
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(kind: str, n_blocks: int, tile: int):
+    return jax.jit(lowerable(kind, n_blocks, tile))
+
+
+def run(kind: str, name: str, key, iv, data):
+    """Execute the same computation the artifact contains, in-process.
+
+    Used by the python test-suite to validate artifact semantics without
+    round-tripping through Rust.
+    """
+    n_blocks, tile = CHUNK_GEOMETRIES[name]
+    return _jitted(kind, n_blocks, tile)(key, iv, data)

@@ -1,0 +1,67 @@
+"""AOT lowering tests: the HLO-text artifacts and their manifest ABI."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_probe_lowering_deterministic(self):
+        a = aot.lower_one("seal", 16, 16)
+        b = aot.lower_one("seal", 16, 16)
+        assert a == b
+
+    def test_hlo_text_is_text_not_proto(self):
+        text = aot.lower_one("seal", 16, 16)
+        assert text.startswith("HloModule")
+        # Entry layout carries the (payload, digest) tuple ABI.
+        assert "u32[16,16]" in text and "u32[4]" in text
+
+    def test_seal_unseal_differ(self):
+        assert aot.lower_one("seal", 16, 16) != aot.lower_one("unseal", 16, 16)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_abi_version(self, manifest):
+        assert manifest["abi_version"] == aot.ABI_VERSION
+
+    def test_all_geometries_present(self, manifest):
+        have = {(e["kind"], e["name"]) for e in manifest["entries"]}
+        want = {
+            (k, n) for k in ("seal", "unseal") for n in model.CHUNK_GEOMETRIES
+        }
+        assert want <= have
+
+    def test_files_exist_and_hash(self, manifest):
+        import hashlib
+
+        for e in manifest["entries"]:
+            path = os.path.join(ART_DIR, e["file"])
+            assert os.path.exists(path), e["file"]
+            with open(path) as f:
+                text = f.read()
+            assert hashlib.sha256(text.encode()).hexdigest() == e["sha256"]
+
+    def test_abi_shapes(self, manifest):
+        for e in manifest["entries"]:
+            n = e["n_blocks"]
+            assert e["chunk_bytes"] == 64 * n
+            assert e["args"][0]["shape"] == [8]
+            assert e["args"][1]["shape"] == [4]
+            assert e["args"][2]["shape"] == [n, 16]
+            assert e["outputs"][0]["shape"] == [n, 16]
+            assert e["outputs"][1]["shape"] == [4]

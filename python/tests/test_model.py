@@ -1,0 +1,93 @@
+"""L2 model tests: the seal/unseal pipeline ABI the Rust runtime depends on."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand_words(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.array(rng.integers(0, 2**32, shape, dtype=np.uint32))
+
+
+@pytest.mark.parametrize("name", list(model.CHUNK_GEOMETRIES))
+class TestPipelinePerGeometry:
+    def test_seal_matches_ref(self, name):
+        n, _ = model.CHUNK_GEOMETRIES[name]
+        key, iv = rand_words((8,), 1), rand_words((4,), 2)
+        data = rand_words((n, 16), 3)
+        c, d = model.run("seal", name, key, iv, data)
+        ce, de = model.seal_ref_fn(key, iv, data)
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(ce))
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(de))
+
+    def test_unseal_roundtrip(self, name):
+        n, _ = model.CHUNK_GEOMETRIES[name]
+        key, iv = rand_words((8,), 4), rand_words((4,), 5)
+        data = rand_words((n, 16), 6)
+        c, d_seal = model.run("seal", name, key, iv, data)
+        p, d_unseal = model.run("unseal", name, key, iv, c)
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(data))
+        np.testing.assert_array_equal(np.asarray(d_seal), np.asarray(d_unseal))
+
+    def test_output_shapes_and_dtypes(self, name):
+        n, _ = model.CHUNK_GEOMETRIES[name]
+        key, iv = rand_words((8,), 7), rand_words((4,), 8)
+        data = rand_words((n, 16), 9)
+        c, d = model.run("seal", name, key, iv, data)
+        assert c.shape == (n, 16) and c.dtype == jnp.uint32
+        assert d.shape == (4,) and d.dtype == jnp.uint32
+
+
+class TestTamperDetection:
+    """The properties the worker relies on to reject corrupted sandboxes."""
+
+    def test_corrupted_cipher_changes_digest(self):
+        name = "probe"
+        n, _ = model.CHUNK_GEOMETRIES[name]
+        key, iv = rand_words((8,), 10), rand_words((4,), 11)
+        data = rand_words((n, 16), 12)
+        c, d = model.run("seal", name, key, iv, data)
+        c_bad = c.at[3, 7].set(c[3, 7] ^ jnp.uint32(0x80))
+        _, d_bad = model.run("unseal", name, key, iv, c_bad)
+        assert not np.array_equal(np.asarray(d), np.asarray(d_bad))
+
+    def test_wrong_key_garbles_but_digest_still_matches(self):
+        """Digest is over ciphertext: a wrong key yields garbage plaintext
+        with a *valid* digest — confidentiality and integrity are separate
+        properties (as in HTCondor, where AES and the integrity MAC use
+        session keys from the same handshake)."""
+        name = "probe"
+        n, _ = model.CHUNK_GEOMETRIES[name]
+        key, iv = rand_words((8,), 13), rand_words((4,), 14)
+        data = rand_words((n, 16), 15)
+        c, d = model.run("seal", name, key, iv, data)
+        key_bad = key.at[0].set(key[0] ^ jnp.uint32(1))
+        p_bad, d_ok = model.run("unseal", name, key_bad, iv, c)
+        np.testing.assert_array_equal(np.asarray(d_ok), np.asarray(d))
+        assert not np.array_equal(np.asarray(p_bad), np.asarray(data))
+
+    def test_wrong_nonce_changes_digest(self):
+        name = "probe"
+        n, _ = model.CHUNK_GEOMETRIES[name]
+        key, iv = rand_words((8,), 16), rand_words((4,), 17)
+        data = rand_words((n, 16), 18)
+        _, d = model.run("seal", name, key, iv, data)
+        iv2 = iv.at[2].set(iv[2] ^ jnp.uint32(1))
+        _, d2 = model.run("seal", name, key, iv2, data)
+        assert not np.array_equal(np.asarray(d), np.asarray(d2))
+
+
+class TestGeometryTable:
+    def test_chunk_bytes(self):
+        assert model.CHUNK_GEOMETRIES["probe"][0] * 64 == 1024
+        assert model.CHUNK_GEOMETRIES["64k"][0] * 64 == 64 * 1024
+        assert model.CHUNK_GEOMETRIES["256k"][0] * 64 == 256 * 1024
+        assert model.CHUNK_GEOMETRIES["1m"][0] * 64 == 1024 * 1024
+
+    def test_tiles_divide(self):
+        for name, (n, tile) in model.CHUNK_GEOMETRIES.items():
+            assert n % tile == 0, name

@@ -1,0 +1,177 @@
+"""Validate the pure-jnp reference (ref.py) against published ChaCha20
+test vectors (RFC 7539) and check the integrity-digest design properties.
+
+These tests anchor the whole stack: the Pallas kernel is tested against
+ref.py, the Rust native engine is tested against the AOT artifact, and the
+artifact is the lowering of the functions tested here.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+
+
+def words(hexstr: str) -> np.ndarray:
+    return np.frombuffer(bytes.fromhex(hexstr.replace(" ", "").replace("\n", "")), dtype="<u4")
+
+
+RFC_KEY = words("000102030405060708090a0b0c0d0e0f101112131415161718191a1b1c1d1e1f")
+
+
+class TestRfc7539Block:
+    """RFC 7539 §2.3.2 block function test vector."""
+
+    def test_keystream_block(self):
+        nonce = words("000000090000004a00000000")
+        ks = ref.chacha20_keystream(jnp.array(RFC_KEY), jnp.array(nonce), 1, 1)
+        got = np.asarray(ks).astype("<u4").tobytes()
+        exp = bytes.fromhex(
+            "10f1e7e4d13b5915500fdd1fa32071c4"
+            "c7d1f4c733c0680304 22aa9ac3d46c4e"
+            "d2826446079faa0914c2d705d98b02a2"
+            "b5129cd1de164eb9cbd083e8a2503c4e".replace(" ", "")
+        )
+        assert got == exp
+
+    def test_keystream_counter_advances(self):
+        """Row i of an n-block keystream equals a 1-block call at ctr0+i."""
+        nonce = words("000000090000004a00000000")
+        ks = np.asarray(ref.chacha20_keystream(jnp.array(RFC_KEY), jnp.array(nonce), 7, 5))
+        for i in range(5):
+            one = np.asarray(ref.chacha20_keystream(jnp.array(RFC_KEY), jnp.array(nonce), 7 + i, 1))
+            np.testing.assert_array_equal(ks[i : i + 1], one)
+
+
+class TestRfc7539Encryption:
+    """RFC 7539 §2.4.2 encryption test vector (the sunscreen plaintext)."""
+
+    PLAINTEXT = (
+        b"Ladies and Gentlemen of the class of '99: If I could offer you "
+        b"only one tip for the future, sunscreen would be it."
+    )
+    EXPECTED = bytes.fromhex(
+        "6e2e359a2568f98041ba0728dd0d6981"
+        "e97e7aec1d4360c20a27afccfd9fae0b"
+        "f91b65c5524733ab8f593dabcd62b357"
+        "1639d624e65152ab8f530c359f0861d8"
+        "07ca0dbf500d6a6156a38e088a22b65e"
+        "52bc514d16ccf806818ce91ab7793736"
+        "5af90bbf74a35be6b40b8eedf2785e42"
+        "874d"
+    )
+
+    def test_encrypt(self):
+        nonce = words("000000000000004a00000000")
+        data = jnp.array(ref.bytes_to_words(self.PLAINTEXT))
+        cipher = ref.chacha20_xor(jnp.array(RFC_KEY), jnp.array(nonce), 1, data)
+        got = ref.words_to_bytes(np.asarray(cipher))[: len(self.PLAINTEXT)]
+        assert got == self.EXPECTED
+
+    def test_decrypt_roundtrip(self):
+        nonce = words("000000000000004a00000000")
+        data = jnp.array(ref.bytes_to_words(self.PLAINTEXT))
+        cipher = ref.chacha20_xor(jnp.array(RFC_KEY), jnp.array(nonce), 1, data)
+        plain = ref.chacha20_xor(jnp.array(RFC_KEY), jnp.array(nonce), 1, cipher)
+        np.testing.assert_array_equal(np.asarray(plain), np.asarray(data))
+
+
+class TestKeystreamProperties:
+    def test_key_sensitivity(self):
+        nonce = jnp.zeros(3, dtype=jnp.uint32)
+        k1 = jnp.array(RFC_KEY)
+        k2 = k1.at[0].set(k1[0] ^ jnp.uint32(1))
+        a = np.asarray(ref.chacha20_keystream(k1, nonce, 0, 4))
+        b = np.asarray(ref.chacha20_keystream(k2, nonce, 0, 4))
+        # Avalanche: roughly half the bits differ in every block.
+        diff = np.unpackbits((a ^ b).view(np.uint8)).mean()
+        assert 0.4 < diff < 0.6
+
+    def test_nonce_sensitivity(self):
+        key = jnp.array(RFC_KEY)
+        n1 = jnp.zeros(3, dtype=jnp.uint32)
+        n2 = n1.at[2].set(jnp.uint32(1))
+        a = np.asarray(ref.chacha20_keystream(key, n1, 0, 2))
+        b = np.asarray(ref.chacha20_keystream(key, n2, 0, 2))
+        assert not np.array_equal(a, b)
+
+    @pytest.mark.parametrize("n_blocks", [1, 2, 3, 7, 16, 64])
+    def test_block_independence(self, n_blocks):
+        """Keystream of n blocks is the concat of per-block keystreams."""
+        key = jnp.array(RFC_KEY)
+        nonce = jnp.array(words("000000090000004a00000000"))
+        full = np.asarray(ref.chacha20_keystream(key, nonce, 3, n_blocks))
+        parts = [
+            np.asarray(ref.chacha20_keystream(key, nonce, 3 + i, 1))[0]
+            for i in range(n_blocks)
+        ]
+        np.testing.assert_array_equal(full, np.stack(parts))
+
+
+class TestPoly16Digest:
+    def _rand(self, n, seed=0):
+        rng = np.random.default_rng(seed)
+        return jnp.array(rng.integers(0, 2**32, (n, 16), dtype=np.uint32))
+
+    def test_deterministic(self):
+        d = self._rand(32)
+        a = np.asarray(ref.poly16_digest(d))
+        b = np.asarray(ref.poly16_digest(d))
+        np.testing.assert_array_equal(a, b)
+
+    def test_order_sensitive(self):
+        d = self._rand(8)
+        swapped = jnp.concatenate([d[1:2], d[0:1], d[2:]], axis=0)
+        assert not np.array_equal(
+            np.asarray(ref.poly16_digest(d)), np.asarray(ref.poly16_digest(swapped))
+        )
+
+    def test_single_bit_flip_detected(self):
+        d = self._rand(16)
+        for (i, j, bit) in [(0, 0, 0), (7, 3, 13), (15, 15, 31)]:
+            flipped = d.at[i, j].set(d[i, j] ^ jnp.uint32(1 << bit))
+            assert not np.array_equal(
+                np.asarray(ref.poly16_digest(d)), np.asarray(ref.poly16_digest(flipped))
+            ), (i, j, bit)
+
+    @pytest.mark.parametrize("split", [1, 4, 8, 15])
+    def test_chunk_decomposable(self, split):
+        """digest(whole) == digest(head, row0=0) XOR digest(tail, row0=split)."""
+        d = self._rand(16, seed=3)
+        whole = np.asarray(ref.poly16_digest(d, row0=0))
+        head = np.asarray(ref.poly16_digest(d[:split], row0=0))
+        tail = np.asarray(ref.poly16_digest(d[split:], row0=split))
+        np.testing.assert_array_equal(whole, head ^ tail)
+
+    def test_row0_matters(self):
+        d = self._rand(4, seed=5)
+        a = np.asarray(ref.poly16_digest(d, row0=0))
+        b = np.asarray(ref.poly16_digest(d, row0=1))
+        assert not np.array_equal(a, b)
+
+    def test_finalize_binds_length_and_nonce(self):
+        d = self._rand(4, seed=7)
+        lane = ref.poly16_digest(d)
+        nonce = jnp.array([1, 2, 3], dtype=jnp.uint32)
+        base = np.asarray(ref.digest_finalize(lane, 64, nonce))
+        assert not np.array_equal(base, np.asarray(ref.digest_finalize(lane, 65, nonce)))
+        nonce2 = nonce.at[1].set(jnp.uint32(9))
+        assert not np.array_equal(base, np.asarray(ref.digest_finalize(lane, 64, nonce2)))
+
+    def test_zero_data_nonzero_digest(self):
+        """The row/lane tweak whitens all-zero data to a non-trivial digest."""
+        d = jnp.zeros((8, 16), dtype=jnp.uint32)
+        dig = np.asarray(ref.poly16_digest(d))
+        assert np.count_nonzero(dig) >= 14
+
+
+class TestByteHelpers:
+    @pytest.mark.parametrize("n", [0, 1, 63, 64, 65, 1000])
+    def test_roundtrip_padding(self, n):
+        b = bytes(range(256)) * 4
+        b = b[:n]
+        w = ref.bytes_to_words(b)
+        assert w.shape[1] == 16 and w.shape[0] * 64 >= n
+        assert ref.words_to_bytes(w)[:n] == b
+        assert set(ref.words_to_bytes(w)[n:]) <= {0}

@@ -1,0 +1,33 @@
+//! Bench: sealed-stream chunk-size sweep on the real-mode loopback fabric.
+//!
+//! Frame size trades per-frame overhead (header+digest+engine dispatch)
+//! against latency and memory; this locates the knee for the native
+//! engine. See EXPERIMENTS.md §Perf for the artifact-engine variant.
+//! Run: cargo bench --bench chunk_sweep
+
+use htcdm::fabric::{run_real_pool, RealPoolConfig};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== sealed-stream chunk-size sweep (loopback, native engine) ===");
+    println!("  chunk      goodput    median transfer");
+    for chunk_words in [256usize, 1024, 4096, 16384, 65536] {
+        let cfg = RealPoolConfig {
+            n_jobs: 16,
+            workers: 4,
+            input_bytes: 8 << 20,
+            output_bytes: 4096,
+            chunk_words,
+            use_xla_engine: false,
+            passphrase: "bench".into(),
+        };
+        let r = run_real_pool(cfg)?;
+        anyhow::ensure!(r.errors == 0, "transfer errors in sweep");
+        println!(
+            "  {:>6} KiB  {:>7.3} Gbps   {:>6.3} s",
+            chunk_words * 4 / 1024,
+            r.gbps,
+            r.transfer_secs.median()
+        );
+    }
+    Ok(())
+}

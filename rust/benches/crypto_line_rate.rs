@@ -1,0 +1,84 @@
+//! Bench: data-plane line rate — can the sealed-transfer crypto keep up
+//! with a 100 Gbps NIC, as the paper's 8-core EPYC did with AES-NI?
+//!
+//! Measures the native engines (ChaCha20, AES-256-CTR, integrity-only) per
+//! chunk size, and — with HTCDM_BENCH_XLA=1 — the PJRT artifact engine
+//! (interpret-mode Pallas; see EXPERIMENTS.md §Perf for why that path is
+//! structural, not line-rate, on CPU).
+//! Run: cargo bench --bench crypto_line_rate
+
+use htcdm::runtime::engine::{Kind, NativeEngine, SealEngine};
+use htcdm::security::Method;
+use htcdm::util::Prng;
+
+fn bench_engine(label: &str, engine: &mut dyn SealEngine, words: usize, secs: f64) -> f64 {
+    let mut rng = Prng::new(1);
+    let mut data: Vec<u32> = (0..words).map(|_| rng.next_u32()).collect();
+    let key = [7u32; 8];
+    let nonce = [1, 2, 3];
+    // Warmup.
+    engine.process(Kind::Seal, &key, &nonce, 0, &mut data).unwrap();
+    let t0 = std::time::Instant::now();
+    let mut bytes = 0u64;
+    let mut ctr = 0u32;
+    while t0.elapsed().as_secs_f64() < secs {
+        engine.process(Kind::Seal, &key, &nonce, ctr, &mut data).unwrap();
+        bytes += (words * 4) as u64;
+        ctr = ctr.wrapping_add((words / 16) as u32);
+    }
+    let gbps = bytes as f64 * 8.0 / t0.elapsed().as_secs_f64() / 1e9;
+    println!("  {label:<28} {words:>8} words   {gbps:>8.3} Gbps");
+    gbps
+}
+
+fn main() {
+    println!("=== Data-plane line rate (seal = encrypt + digest), single thread ===");
+    println!("  paper context: submit node sustained 90 Gbps AES on 8 cores");
+    for words in [1024usize * 16, 4096 * 16, 16384 * 16] {
+        bench_engine(
+            "native ChaCha20+poly16",
+            &mut NativeEngine::new(Method::Chacha20),
+            words,
+            1.0,
+        );
+    }
+    bench_engine(
+        "native AES-256-CTR+poly16",
+        &mut NativeEngine::new(Method::Aes256Ctr),
+        1024 * 16,
+        1.0,
+    );
+    bench_engine(
+        "integrity only (poly16)",
+        &mut NativeEngine::new(Method::Plain),
+        1024 * 16,
+        1.0,
+    );
+    let chacha_1 = bench_engine(
+        "native ChaCha20 (64k chunks)",
+        &mut NativeEngine::new(Method::Chacha20),
+        1024 * 16,
+        1.0,
+    );
+    println!(
+        "  -> 8 cores x {chacha_1:.1} Gbps = {:.0} Gbps aggregate ({} the 90 Gbps the paper needed)",
+        8.0 * chacha_1,
+        if 8.0 * chacha_1 >= 90.0 { "meets" } else { "below" }
+    );
+
+    if std::env::var("HTCDM_BENCH_XLA").as_deref() == Ok("1") {
+        println!("\n  PJRT artifact engine (interpret-mode Pallas, 64k geometry):");
+        match htcdm::runtime::Manifest::load(htcdm::runtime::Manifest::default_dir())
+            .and_then(|m| htcdm::runtime::SealRuntime::load(&m, &["64k"]))
+        {
+            Ok(rt) => {
+                let mut e = htcdm::runtime::engine::XlaEngine::new(rt);
+                bench_engine("xla-pjrt ChaCha20+poly16", &mut e, 1024 * 16, 3.0);
+            }
+            Err(e) => println!("  (unavailable: {e:#})"),
+        }
+    } else {
+        println!("\n  (set HTCDM_BENCH_XLA=1 to also bench the PJRT artifact engine;");
+        println!("   skipped by default: XLA compilation of the artifact takes ~2 min)");
+    }
+}

@@ -1,0 +1,57 @@
+//! Bench: max-min solver + event-loop scaling — the L3 hot path.
+//!
+//! The paper-scale run re-solves the fluid network on every flow arrival/
+//! departure (~20k times for 10k jobs). This bench measures solver cost vs
+//! concurrent flow count and the end-to-end events/sec of the engine.
+//! Run: cargo bench --bench netsim_solver
+
+use htcdm::coordinator::engine::EngineSpec;
+use htcdm::coordinator::Experiment;
+use htcdm::netsim::topology::TestbedSpec;
+use htcdm::netsim::NetSim;
+use htcdm::transfer::ThrottlePolicy;
+use htcdm::util::units::{Bytes, Gbps};
+use htcdm::util::Prng;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== netsim max-min solver scaling ===");
+    println!("  flows   links   solve time");
+    for &nflows in &[50usize, 200, 800, 3200] {
+        let mut net = NetSim::new();
+        let mut links = Vec::new();
+        for i in 0..10 {
+            links.push(net.add_link(&format!("l{i}"), Gbps(100.0)));
+        }
+        let mut rng = Prng::new(9);
+        let mut ids = Vec::new();
+        for _ in 0..nflows {
+            let a = links[rng.range_usize(0, 4)];
+            let b = links[rng.range_usize(5, 9)];
+            ids.push(net.start_flow(vec![a, b], 1e12, rng.range_f64(0.05e9, 1e9)));
+        }
+        // Force repeated re-solves by toggling one link's capacity.
+        let t0 = std::time::Instant::now();
+        let iters = 200;
+        for i in 0..iters {
+            net.set_capacity(links[0], Gbps(100.0 - (i % 2) as f64));
+            net.resolve();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        println!("  {nflows:>5}   {:>5}   {:>9.1} us", 10, per * 1e6);
+    }
+
+    println!("\n=== end-to-end engine throughput (paper-scale fig1 run) ===");
+    let mut spec = EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled);
+    spec.input_bytes = Bytes(2_000_000_000);
+    let t0 = std::time::Instant::now();
+    let r = Experiment::custom("fig1-perf", spec).run()?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "  10k jobs, {:.0} TB virtual traffic simulated in {:.2} s wall ({:.0} jobs/s)",
+        10_000.0 * 2e9 / 1e12,
+        wall,
+        10_000.0 / wall
+    );
+    println!("  sustained {:.1} Gbps, makespan {:.1} min", r.sustained_gbps(), r.makespan.as_mins_f64());
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Bench: §II VPN-overlay ablation.
+//!
+//! Paper: the Calico VPN required for unprivileged pods bottlenecked the
+//! submit node at ~25 Gbps; host networking was needed to exceed 90 Gbps.
+//! Run: cargo bench --bench vpn_overhead
+
+use htcdm::coordinator::{Experiment, Scenario};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== §II ablation: Calico VPN overlay on the submit node ===");
+    let host = Experiment::scenario(Scenario::LanPaper).run()?;
+    let vpn = Experiment::scenario(Scenario::LanVpn).run()?;
+    println!("{}", host.table_row(Some(90.0), Some(32.0)));
+    println!("{}", vpn.table_row(Some(25.0), None));
+    println!("  metric                paper       measured");
+    println!("  VPN throughput cap    ~25 Gbps    {:.1} Gbps", vpn.sustained_gbps());
+    println!(
+        "  host-network speedup  ~3.6x       {:.1}x",
+        host.sustained_gbps() / vpn.sustained_gbps()
+    );
+    Ok(())
+}

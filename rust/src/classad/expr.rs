@@ -1,0 +1,1092 @@
+//! ClassAd expression engine: lexer, recursive-descent parser, evaluator.
+//!
+//! Implements the "old ClassAds" expression dialect used for matchmaking:
+//! three-valued logic (UNDEFINED/ERROR propagate), `MY.`/`TARGET.` scoped
+//! attribute references with unqualified fallback (MY then TARGET),
+//! case-insensitive string equality for `==` and the `=?=`/`=!=` identity
+//! operators, the ternary operator, lists, and the builtin function set the
+//! daemons rely on.
+
+use super::{Ad, Value};
+use std::fmt;
+
+// ---------------------------------------------------------------------------
+// AST
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Or,
+    And,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Is,    // =?= identity
+    Isnt,  // =!= non-identity
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Not,
+    Neg,
+    Plus,
+}
+
+#[derive(Debug, Clone)]
+pub enum Expr {
+    Lit(Value),
+    /// Unqualified attribute reference.
+    Attr(String),
+    /// MY.attr
+    My(String),
+    /// TARGET.attr
+    Target(String),
+    Un(UnOp, Box<Expr>),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    Ternary(Box<Expr>, Box<Expr>, Box<Expr>),
+    Call(String, Vec<Expr>),
+    List(Vec<Expr>),
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Lit(v) => write!(f, "{v}"),
+            Expr::Attr(a) => write!(f, "{a}"),
+            Expr::My(a) => write!(f, "MY.{a}"),
+            Expr::Target(a) => write!(f, "TARGET.{a}"),
+            Expr::Un(op, e) => {
+                let s = match op {
+                    UnOp::Not => "!",
+                    UnOp::Neg => "-",
+                    UnOp::Plus => "+",
+                };
+                write!(f, "{s}({e})")
+            }
+            Expr::Bin(op, l, r) => {
+                let s = match op {
+                    BinOp::Or => "||",
+                    BinOp::And => "&&",
+                    BinOp::Eq => "==",
+                    BinOp::Ne => "!=",
+                    BinOp::Lt => "<",
+                    BinOp::Le => "<=",
+                    BinOp::Gt => ">",
+                    BinOp::Ge => ">=",
+                    BinOp::Is => "=?=",
+                    BinOp::Isnt => "=!=",
+                    BinOp::Add => "+",
+                    BinOp::Sub => "-",
+                    BinOp::Mul => "*",
+                    BinOp::Div => "/",
+                    BinOp::Mod => "%",
+                };
+                write!(f, "({l} {s} {r})")
+            }
+            Expr::Ternary(c, t, e) => write!(f, "({c} ? {t} : {e})"),
+            Expr::Call(name, args) => {
+                write!(f, "{name}(")?;
+                for (i, a) in args.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{a}")?;
+                }
+                write!(f, ")")
+            }
+            Expr::List(xs) => {
+                write!(f, "{{")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Int(i64),
+    Real(f64),
+    Str(String),
+    Ident(String),
+    Op(&'static str),
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    Comma,
+    Question,
+    Colon,
+    Dot,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "classad parse error at {}: {}", self.pos, self.msg)
+    }
+}
+impl std::error::Error for ParseError {}
+
+fn lex(text: &str) -> Result<Vec<(usize, Tok)>, ParseError> {
+    let b = text.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'(' => {
+                toks.push((i, Tok::LParen));
+                i += 1;
+            }
+            b')' => {
+                toks.push((i, Tok::RParen));
+                i += 1;
+            }
+            b'{' => {
+                toks.push((i, Tok::LBrace));
+                i += 1;
+            }
+            b'}' => {
+                toks.push((i, Tok::RBrace));
+                i += 1;
+            }
+            b',' => {
+                toks.push((i, Tok::Comma));
+                i += 1;
+            }
+            b'?' => {
+                toks.push((i, Tok::Question));
+                i += 1;
+            }
+            b':' => {
+                toks.push((i, Tok::Colon));
+                i += 1;
+            }
+            b'.' if i + 1 < b.len() && !b[i + 1].is_ascii_digit() => {
+                toks.push((i, Tok::Dot));
+                i += 1;
+            }
+            b'"' => {
+                let start = i;
+                i += 1;
+                let mut s = String::new();
+                loop {
+                    if i >= b.len() {
+                        return Err(ParseError {
+                            pos: start,
+                            msg: "unterminated string".into(),
+                        });
+                    }
+                    match b[i] {
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        b'\\' if i + 1 < b.len() => {
+                            s.push(match b[i + 1] {
+                                b'n' => '\n',
+                                b't' => '\t',
+                                other => other as char,
+                            });
+                            i += 2;
+                        }
+                        other => {
+                            s.push(other as char);
+                            i += 1;
+                        }
+                    }
+                }
+                toks.push((start, Tok::Str(s)));
+            }
+            b'=' => {
+                if b[i..].starts_with(b"=?=") {
+                    toks.push((i, Tok::Op("=?=")));
+                    i += 3;
+                } else if b[i..].starts_with(b"=!=") {
+                    toks.push((i, Tok::Op("=!=")));
+                    i += 3;
+                } else if b[i..].starts_with(b"==") {
+                    toks.push((i, Tok::Op("==")));
+                    i += 2;
+                } else {
+                    return Err(ParseError {
+                        pos: i,
+                        msg: "bare '=' (assignment) not valid in expression".into(),
+                    });
+                }
+            }
+            b'!' => {
+                if b[i..].starts_with(b"!=") {
+                    toks.push((i, Tok::Op("!=")));
+                    i += 2;
+                } else {
+                    toks.push((i, Tok::Op("!")));
+                    i += 1;
+                }
+            }
+            b'<' => {
+                if b[i..].starts_with(b"<=") {
+                    toks.push((i, Tok::Op("<=")));
+                    i += 2;
+                } else {
+                    toks.push((i, Tok::Op("<")));
+                    i += 1;
+                }
+            }
+            b'>' => {
+                if b[i..].starts_with(b">=") {
+                    toks.push((i, Tok::Op(">=")));
+                    i += 2;
+                } else {
+                    toks.push((i, Tok::Op(">")));
+                    i += 1;
+                }
+            }
+            b'&' => {
+                if b[i..].starts_with(b"&&") {
+                    toks.push((i, Tok::Op("&&")));
+                    i += 2;
+                } else {
+                    return Err(ParseError {
+                        pos: i,
+                        msg: "single '&'".into(),
+                    });
+                }
+            }
+            b'|' => {
+                if b[i..].starts_with(b"||") {
+                    toks.push((i, Tok::Op("||")));
+                    i += 2;
+                } else {
+                    return Err(ParseError {
+                        pos: i,
+                        msg: "single '|'".into(),
+                    });
+                }
+            }
+            b'+' => {
+                toks.push((i, Tok::Op("+")));
+                i += 1;
+            }
+            b'-' => {
+                toks.push((i, Tok::Op("-")));
+                i += 1;
+            }
+            b'*' => {
+                toks.push((i, Tok::Op("*")));
+                i += 1;
+            }
+            b'/' => {
+                toks.push((i, Tok::Op("/")));
+                i += 1;
+            }
+            b'%' => {
+                toks.push((i, Tok::Op("%")));
+                i += 1;
+            }
+            b'0'..=b'9' | b'.' => {
+                let start = i;
+                let mut is_real = false;
+                while i < b.len()
+                    && (b[i].is_ascii_digit()
+                        || b[i] == b'.'
+                        || b[i] == b'e'
+                        || b[i] == b'E'
+                        || ((b[i] == b'+' || b[i] == b'-')
+                            && i > start
+                            && (b[i - 1] == b'e' || b[i - 1] == b'E')))
+                {
+                    if b[i] == b'.' || b[i] == b'e' || b[i] == b'E' {
+                        is_real = true;
+                    }
+                    i += 1;
+                }
+                let text = std::str::from_utf8(&b[start..i]).unwrap();
+                if is_real {
+                    let v = text.parse::<f64>().map_err(|_| ParseError {
+                        pos: start,
+                        msg: format!("bad real '{text}'"),
+                    })?;
+                    toks.push((start, Tok::Real(v)));
+                } else {
+                    let v = text.parse::<i64>().map_err(|_| ParseError {
+                        pos: start,
+                        msg: format!("bad int '{text}'"),
+                    })?;
+                    toks.push((start, Tok::Int(v)));
+                }
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                let ident = std::str::from_utf8(&b[start..i]).unwrap().to_string();
+                toks.push((start, Tok::Ident(ident)));
+            }
+            other => {
+                return Err(ParseError {
+                    pos: i,
+                    msg: format!("unexpected character '{}'", other as char),
+                })
+            }
+        }
+    }
+    Ok(toks)
+}
+
+// ---------------------------------------------------------------------------
+// Parser (precedence climbing)
+// ---------------------------------------------------------------------------
+
+struct Parser {
+    toks: Vec<(usize, Tok)>,
+    i: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i).map(|(_, t)| t)
+    }
+
+    fn bump(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.i).map(|(_, t)| t.clone());
+        self.i += 1;
+        t
+    }
+
+    fn err(&self, msg: &str) -> ParseError {
+        let pos = self.toks.get(self.i).map(|(p, _)| *p).unwrap_or(usize::MAX);
+        ParseError {
+            pos,
+            msg: msg.to_string(),
+        }
+    }
+
+    fn expr(&mut self) -> Result<Expr, ParseError> {
+        let cond = self.or_expr()?;
+        if self.peek() == Some(&Tok::Question) {
+            self.bump();
+            let then = self.expr()?;
+            match self.bump() {
+                Some(Tok::Colon) => {}
+                _ => return Err(self.err("expected ':' in ternary")),
+            }
+            let els = self.expr()?;
+            return Ok(Expr::Ternary(Box::new(cond), Box::new(then), Box::new(els)));
+        }
+        Ok(cond)
+    }
+
+    fn or_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.and_expr()?;
+        while self.peek() == Some(&Tok::Op("||")) {
+            self.bump();
+            let rhs = self.and_expr()?;
+            lhs = Expr::Bin(BinOp::Or, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.cmp_expr()?;
+        while self.peek() == Some(&Tok::Op("&&")) {
+            self.bump();
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Bin(BinOp::And, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.add_expr()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Op("==")) => BinOp::Eq,
+                Some(Tok::Op("!=")) => BinOp::Ne,
+                Some(Tok::Op("<")) => BinOp::Lt,
+                Some(Tok::Op("<=")) => BinOp::Le,
+                Some(Tok::Op(">")) => BinOp::Gt,
+                Some(Tok::Op(">=")) => BinOp::Ge,
+                Some(Tok::Op("=?=")) => BinOp::Is,
+                Some(Tok::Op("=!=")) => BinOp::Isnt,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.add_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn add_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Op("+")) => BinOp::Add,
+                Some(Tok::Op("-")) => BinOp::Sub,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Op("*")) => BinOp::Mul,
+                Some(Tok::Op("/")) => BinOp::Div,
+                Some(Tok::Op("%")) => BinOp::Mod,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr, ParseError> {
+        match self.peek() {
+            Some(Tok::Op("!")) => {
+                self.bump();
+                Ok(Expr::Un(UnOp::Not, Box::new(self.unary_expr()?)))
+            }
+            Some(Tok::Op("-")) => {
+                self.bump();
+                Ok(Expr::Un(UnOp::Neg, Box::new(self.unary_expr()?)))
+            }
+            Some(Tok::Op("+")) => {
+                self.bump();
+                Ok(Expr::Un(UnOp::Plus, Box::new(self.unary_expr()?)))
+            }
+            _ => self.primary(),
+        }
+    }
+
+    fn primary(&mut self) -> Result<Expr, ParseError> {
+        match self.bump() {
+            Some(Tok::Int(v)) => Ok(Expr::Lit(Value::Int(v))),
+            Some(Tok::Real(v)) => Ok(Expr::Lit(Value::Real(v))),
+            Some(Tok::Str(s)) => Ok(Expr::Lit(Value::Str(s))),
+            Some(Tok::LParen) => {
+                let e = self.expr()?;
+                match self.bump() {
+                    Some(Tok::RParen) => Ok(e),
+                    _ => Err(self.err("expected ')'")),
+                }
+            }
+            Some(Tok::LBrace) => {
+                let mut xs = Vec::new();
+                if self.peek() == Some(&Tok::RBrace) {
+                    self.bump();
+                    return Ok(Expr::List(xs));
+                }
+                loop {
+                    xs.push(self.expr()?);
+                    match self.bump() {
+                        Some(Tok::Comma) => continue,
+                        Some(Tok::RBrace) => return Ok(Expr::List(xs)),
+                        _ => return Err(self.err("expected ',' or '}' in list")),
+                    }
+                }
+            }
+            Some(Tok::Ident(id)) => {
+                let lower = id.to_ascii_lowercase();
+                match lower.as_str() {
+                    "true" => return Ok(Expr::Lit(Value::Bool(true))),
+                    "false" => return Ok(Expr::Lit(Value::Bool(false))),
+                    "undefined" => return Ok(Expr::Lit(Value::Undefined)),
+                    "error" => return Ok(Expr::Lit(Value::Error)),
+                    _ => {}
+                }
+                // MY.attr / TARGET.attr scoping.
+                if (lower == "my" || lower == "target") && self.peek() == Some(&Tok::Dot) {
+                    self.bump();
+                    let attr = match self.bump() {
+                        Some(Tok::Ident(a)) => a,
+                        _ => return Err(self.err("expected attribute after scope")),
+                    };
+                    return Ok(if lower == "my" {
+                        Expr::My(attr.to_ascii_lowercase())
+                    } else {
+                        Expr::Target(attr.to_ascii_lowercase())
+                    });
+                }
+                // Function call.
+                if self.peek() == Some(&Tok::LParen) {
+                    self.bump();
+                    let mut args = Vec::new();
+                    if self.peek() == Some(&Tok::RParen) {
+                        self.bump();
+                        return Ok(Expr::Call(lower, args));
+                    }
+                    loop {
+                        args.push(self.expr()?);
+                        match self.bump() {
+                            Some(Tok::Comma) => continue,
+                            Some(Tok::RParen) => return Ok(Expr::Call(lower, args)),
+                            _ => return Err(self.err("expected ',' or ')' in call")),
+                        }
+                    }
+                }
+                Ok(Expr::Attr(lower))
+            }
+            _ => Err(self.err("expected expression")),
+        }
+    }
+}
+
+/// Parse a ClassAd expression from text.
+pub fn parse_expr(text: &str) -> Result<Expr, ParseError> {
+    let toks = lex(text)?;
+    let mut p = Parser { toks, i: 0 };
+    let e = p.expr()?;
+    if p.i != p.toks.len() {
+        return Err(p.err("trailing tokens"));
+    }
+    Ok(e)
+}
+
+// ---------------------------------------------------------------------------
+// Evaluator
+// ---------------------------------------------------------------------------
+
+struct Ctx<'a> {
+    my: &'a Ad,
+    target: Option<&'a Ad>,
+    depth: u32,
+}
+
+/// Evaluate attribute `name` of `my`, with optional `target` in scope.
+pub fn eval_attr(my: &Ad, target: Option<&Ad>, name: &str) -> Value {
+    let mut ctx = Ctx {
+        my,
+        target,
+        depth: 0,
+    };
+    lookup(&mut ctx, name, false)
+}
+
+fn lookup(ctx: &mut Ctx, name: &str, target_scope: bool) -> Value {
+    if ctx.depth > 64 {
+        return Value::Error; // cyclic attribute definitions
+    }
+    let (ad, other) = if target_scope {
+        match ctx.target {
+            Some(t) => (t, Some(ctx.my)),
+            None => return Value::Undefined,
+        }
+    } else {
+        (ctx.my, ctx.target)
+    };
+    match ad.get_expr(name) {
+        Some(e) => {
+            let mut sub = Ctx {
+                my: ad,
+                target: other,
+                depth: ctx.depth + 1,
+            };
+            eval(&mut sub, &e.clone())
+        }
+        None => Value::Undefined,
+    }
+}
+
+fn eval(ctx: &mut Ctx, e: &Expr) -> Value {
+    match e {
+        Expr::Lit(v) => v.clone(),
+        Expr::My(a) => lookup(ctx, a, false),
+        Expr::Target(a) => lookup(ctx, a, true),
+        Expr::Attr(a) => {
+            // Unqualified: MY scope first, then TARGET (old-ClassAd fallback).
+            let v = lookup(ctx, a, false);
+            if v.is_undefined() && ctx.target.is_some() {
+                lookup(ctx, a, true)
+            } else {
+                v
+            }
+        }
+        Expr::Un(op, inner) => {
+            let v = eval(ctx, inner);
+            eval_unop(*op, v)
+        }
+        Expr::Bin(op, l, r) => eval_binop(ctx, *op, l, r),
+        Expr::Ternary(c, t, f) => match eval(ctx, c) {
+            Value::Bool(true) => eval(ctx, t),
+            Value::Bool(false) => eval(ctx, f),
+            Value::Undefined => Value::Undefined,
+            _ => Value::Error,
+        },
+        Expr::Call(name, args) => eval_call(ctx, name, args),
+        Expr::List(xs) => Value::List(xs.iter().map(|x| eval(ctx, x)).collect()),
+    }
+}
+
+fn eval_unop(op: UnOp, v: Value) -> Value {
+    match (op, v) {
+        (_, Value::Error) => Value::Error,
+        (UnOp::Not, Value::Undefined) => Value::Undefined,
+        (UnOp::Not, Value::Bool(b)) => Value::Bool(!b),
+        (UnOp::Not, _) => Value::Error,
+        (_, Value::Undefined) => Value::Undefined,
+        (UnOp::Neg, Value::Int(i)) => Value::Int(-i),
+        (UnOp::Neg, Value::Real(r)) => Value::Real(-r),
+        (UnOp::Plus, v @ (Value::Int(_) | Value::Real(_))) => v,
+        _ => Value::Error,
+    }
+}
+
+fn eval_binop(ctx: &mut Ctx, op: BinOp, l: &Expr, r: &Expr) -> Value {
+    // Short-circuiting three-valued logic first.
+    match op {
+        BinOp::And => {
+            let lv = eval(ctx, l);
+            return match lv {
+                Value::Bool(false) => Value::Bool(false),
+                Value::Error => Value::Error,
+                Value::Bool(true) | Value::Undefined => {
+                    let rv = eval(ctx, r);
+                    match (lv, rv) {
+                        (_, Value::Bool(false)) => Value::Bool(false),
+                        (_, Value::Error) => Value::Error,
+                        (Value::Undefined, _) | (_, Value::Undefined) => Value::Undefined,
+                        (_, Value::Bool(true)) => Value::Bool(true),
+                        _ => Value::Error,
+                    }
+                }
+                _ => Value::Error,
+            };
+        }
+        BinOp::Or => {
+            let lv = eval(ctx, l);
+            return match lv {
+                Value::Bool(true) => Value::Bool(true),
+                Value::Error => Value::Error,
+                Value::Bool(false) | Value::Undefined => {
+                    let rv = eval(ctx, r);
+                    match (lv, rv) {
+                        (_, Value::Bool(true)) => Value::Bool(true),
+                        (_, Value::Error) => Value::Error,
+                        (Value::Undefined, _) | (_, Value::Undefined) => Value::Undefined,
+                        (_, Value::Bool(false)) => Value::Bool(false),
+                        _ => Value::Error,
+                    }
+                }
+                _ => Value::Error,
+            };
+        }
+        _ => {}
+    }
+
+    let lv = eval(ctx, l);
+    let rv = eval(ctx, r);
+
+    // Identity operators never yield UNDEFINED/ERROR.
+    if op == BinOp::Is || op == BinOp::Isnt {
+        let same = values_identical(&lv, &rv);
+        return Value::Bool(if op == BinOp::Is { same } else { !same });
+    }
+
+    if lv.is_error() || rv.is_error() {
+        return Value::Error;
+    }
+    if lv.is_undefined() || rv.is_undefined() {
+        return Value::Undefined;
+    }
+
+    match op {
+        BinOp::Eq | BinOp::Ne | BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge => {
+            compare(op, &lv, &rv)
+        }
+        BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Mod => {
+            arithmetic(op, &lv, &rv)
+        }
+        BinOp::And | BinOp::Or | BinOp::Is | BinOp::Isnt => unreachable!(),
+    }
+}
+
+fn values_identical(a: &Value, b: &Value) -> bool {
+    match (a, b) {
+        (Value::Undefined, Value::Undefined) => true,
+        (Value::Error, Value::Error) => true,
+        (Value::Str(x), Value::Str(y)) => x == y, // case-SENSITIVE for =?=
+        (Value::Int(x), Value::Int(y)) => x == y,
+        (Value::Real(x), Value::Real(y)) => x == y,
+        (Value::Bool(x), Value::Bool(y)) => x == y,
+        (Value::List(x), Value::List(y)) => {
+            x.len() == y.len() && x.iter().zip(y).all(|(a, b)| values_identical(a, b))
+        }
+        _ => false,
+    }
+}
+
+fn compare(op: BinOp, l: &Value, r: &Value) -> Value {
+    use std::cmp::Ordering;
+    let ord: Option<Ordering> = match (l, r) {
+        (Value::Str(a), Value::Str(b)) => {
+            // ClassAd '=='/'<' on strings is case-insensitive.
+            Some(a.to_ascii_lowercase().cmp(&b.to_ascii_lowercase()))
+        }
+        (Value::Bool(a), Value::Bool(b)) => Some(a.cmp(b)),
+        _ => {
+            let (a, b) = (l.as_real(), r.as_real());
+            match (a, b) {
+                (Some(a), Some(b)) => a.partial_cmp(&b),
+                _ => None,
+            }
+        }
+    };
+    let Some(ord) = ord else {
+        return Value::Error;
+    };
+    let b = match op {
+        BinOp::Eq => ord == std::cmp::Ordering::Equal,
+        BinOp::Ne => ord != std::cmp::Ordering::Equal,
+        BinOp::Lt => ord == std::cmp::Ordering::Less,
+        BinOp::Le => ord != std::cmp::Ordering::Greater,
+        BinOp::Gt => ord == std::cmp::Ordering::Greater,
+        BinOp::Ge => ord != std::cmp::Ordering::Less,
+        _ => unreachable!(),
+    };
+    Value::Bool(b)
+}
+
+fn arithmetic(op: BinOp, l: &Value, r: &Value) -> Value {
+    // String concatenation via '+'.
+    if op == BinOp::Add {
+        if let (Value::Str(a), Value::Str(b)) = (l, r) {
+            return Value::Str(format!("{a}{b}"));
+        }
+    }
+    let both_int = matches!((l, r), (Value::Int(_) | Value::Bool(_), Value::Int(_) | Value::Bool(_)));
+    let (Some(a), Some(b)) = (l.as_real(), r.as_real()) else {
+        return Value::Error;
+    };
+    if both_int {
+        let (ai, bi) = (l.as_int().unwrap(), r.as_int().unwrap());
+        return match op {
+            BinOp::Add => Value::Int(ai.wrapping_add(bi)),
+            BinOp::Sub => Value::Int(ai.wrapping_sub(bi)),
+            BinOp::Mul => Value::Int(ai.wrapping_mul(bi)),
+            BinOp::Div => {
+                if bi == 0 {
+                    Value::Error
+                } else {
+                    Value::Int(ai.wrapping_div(bi))
+                }
+            }
+            BinOp::Mod => {
+                if bi == 0 {
+                    Value::Error
+                } else {
+                    Value::Int(ai.wrapping_rem(bi))
+                }
+            }
+            _ => unreachable!(),
+        };
+    }
+    match op {
+        BinOp::Add => Value::Real(a + b),
+        BinOp::Sub => Value::Real(a - b),
+        BinOp::Mul => Value::Real(a * b),
+        BinOp::Div => {
+            if b == 0.0 {
+                Value::Error
+            } else {
+                Value::Real(a / b)
+            }
+        }
+        BinOp::Mod => {
+            if b == 0.0 {
+                Value::Error
+            } else {
+                Value::Real(a % b)
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn eval_call(ctx: &mut Ctx, name: &str, args: &[Expr]) -> Value {
+    let vals: Vec<Value> = args.iter().map(|a| eval(ctx, a)).collect();
+    // isUndefined/isError inspect, never propagate.
+    match name {
+        "isundefined" => {
+            return match vals.as_slice() {
+                [v] => Value::Bool(v.is_undefined()),
+                _ => Value::Error,
+            }
+        }
+        "iserror" => {
+            return match vals.as_slice() {
+                [v] => Value::Bool(v.is_error()),
+                _ => Value::Error,
+            }
+        }
+        "ifthenelse" => {
+            return match vals.as_slice() {
+                [c, t, f] => match c {
+                    Value::Bool(true) => t.clone(),
+                    Value::Bool(false) => f.clone(),
+                    Value::Undefined => f.clone(),
+                    _ => Value::Error,
+                },
+                _ => Value::Error,
+            }
+        }
+        _ => {}
+    }
+    if vals.iter().any(|v| v.is_error()) {
+        return Value::Error;
+    }
+    if vals.iter().any(|v| v.is_undefined()) {
+        return Value::Undefined;
+    }
+    match (name, vals.as_slice()) {
+        ("strcat", vs) => {
+            let mut s = String::new();
+            for v in vs {
+                match v {
+                    Value::Str(x) => s.push_str(x),
+                    Value::Int(i) => s.push_str(&i.to_string()),
+                    Value::Real(r) => s.push_str(&r.to_string()),
+                    Value::Bool(b) => s.push_str(if *b { "true" } else { "false" }),
+                    _ => return Value::Error,
+                }
+            }
+            Value::Str(s)
+        }
+        ("size", [Value::Str(s)]) => Value::Int(s.len() as i64),
+        ("size", [Value::List(l)]) => Value::Int(l.len() as i64),
+        ("toupper", [Value::Str(s)]) => Value::Str(s.to_ascii_uppercase()),
+        ("tolower", [Value::Str(s)]) => Value::Str(s.to_ascii_lowercase()),
+        ("int", [v]) => v.as_int().map(Value::Int).unwrap_or(Value::Error),
+        ("real", [v]) => v.as_real().map(Value::Real).unwrap_or(Value::Error),
+        ("string", [v]) => Value::Str(match v {
+            Value::Str(s) => s.clone(),
+            other => other.to_string(),
+        }),
+        ("floor", [v]) => v.as_real().map(|r| Value::Int(r.floor() as i64)).unwrap_or(Value::Error),
+        ("ceiling", [v]) => v.as_real().map(|r| Value::Int(r.ceil() as i64)).unwrap_or(Value::Error),
+        ("round", [v]) => v.as_real().map(|r| Value::Int(r.round() as i64)).unwrap_or(Value::Error),
+        ("abs", [Value::Int(i)]) => Value::Int(i.abs()),
+        ("abs", [v]) => v.as_real().map(|r| Value::Real(r.abs())).unwrap_or(Value::Error),
+        ("min", [Value::List(l)]) => fold_real(l, f64::min),
+        ("max", [Value::List(l)]) => fold_real(l, f64::max),
+        ("member", [x, Value::List(l)]) => {
+            Value::Bool(l.iter().any(|v| values_identical(v, x)))
+        }
+        ("stringlistmember", [Value::Str(x), Value::Str(list)]) => {
+            Value::Bool(list.split(',').any(|t| t.trim().eq_ignore_ascii_case(x)))
+        }
+        ("stringlistsize", [Value::Str(list)]) => {
+            Value::Int(list.split(',').filter(|t| !t.trim().is_empty()).count() as i64)
+        }
+        _ => Value::Error,
+    }
+}
+
+fn fold_real(l: &[Value], f: impl Fn(f64, f64) -> f64) -> Value {
+    let mut acc: Option<f64> = None;
+    for v in l {
+        match v.as_real() {
+            Some(r) => acc = Some(acc.map_or(r, |a| f(a, r))),
+            None => return Value::Error,
+        }
+    }
+    acc.map(Value::Real).unwrap_or(Value::Undefined)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval_str(s: &str) -> Value {
+        let ad = Ad::new("Test");
+        let mut ctx = Ctx {
+            my: &ad,
+            target: None,
+            depth: 0,
+        };
+        eval(&mut ctx, &parse_expr(s).unwrap())
+    }
+
+    #[test]
+    fn arithmetic_int_and_real() {
+        assert_eq!(eval_str("1 + 2 * 3"), Value::Int(7));
+        assert_eq!(eval_str("(1 + 2) * 3"), Value::Int(9));
+        assert_eq!(eval_str("7 / 2"), Value::Int(3));
+        assert_eq!(eval_str("7.0 / 2"), Value::Real(3.5));
+        assert_eq!(eval_str("7 % 3"), Value::Int(1));
+        assert_eq!(eval_str("-3 + 1"), Value::Int(-2));
+        assert_eq!(eval_str("2.5e2"), Value::Real(250.0));
+    }
+
+    #[test]
+    fn division_by_zero_is_error() {
+        assert_eq!(eval_str("1 / 0"), Value::Error);
+        assert_eq!(eval_str("1 % 0"), Value::Error);
+        assert_eq!(eval_str("1.0 / 0.0"), Value::Error);
+    }
+
+    #[test]
+    fn comparisons() {
+        assert_eq!(eval_str("3 > 2"), Value::Bool(true));
+        assert_eq!(eval_str("3 <= 2"), Value::Bool(false));
+        assert_eq!(eval_str("2 == 2.0"), Value::Bool(true));
+        assert_eq!(eval_str("\"ABC\" == \"abc\""), Value::Bool(true), "case-insensitive ==");
+        assert_eq!(eval_str("\"ABC\" =?= \"abc\""), Value::Bool(false), "case-sensitive =?=");
+        assert_eq!(eval_str("\"a\" < \"B\""), Value::Bool(true));
+    }
+
+    #[test]
+    fn three_valued_logic() {
+        assert_eq!(eval_str("undefined && false"), Value::Bool(false));
+        assert_eq!(eval_str("undefined && true"), Value::Undefined);
+        assert_eq!(eval_str("undefined || true"), Value::Bool(true));
+        assert_eq!(eval_str("undefined || false"), Value::Undefined);
+        assert_eq!(eval_str("!undefined"), Value::Undefined);
+        assert_eq!(eval_str("error || true"), Value::Error);
+        assert_eq!(eval_str("undefined + 1"), Value::Undefined);
+        assert_eq!(eval_str("error + 1"), Value::Error);
+    }
+
+    #[test]
+    fn identity_operators() {
+        assert_eq!(eval_str("undefined =?= undefined"), Value::Bool(true));
+        assert_eq!(eval_str("undefined =?= 1"), Value::Bool(false));
+        assert_eq!(eval_str("undefined =!= 1"), Value::Bool(true));
+        assert_eq!(eval_str("error =?= error"), Value::Bool(true));
+    }
+
+    #[test]
+    fn ternary() {
+        assert_eq!(eval_str("true ? 1 : 2"), Value::Int(1));
+        assert_eq!(eval_str("false ? 1 : 2"), Value::Int(2));
+        assert_eq!(eval_str("undefined ? 1 : 2"), Value::Undefined);
+        assert_eq!(eval_str("3 ? 1 : 2"), Value::Error);
+    }
+
+    #[test]
+    fn builtins() {
+        assert_eq!(eval_str("strcat(\"a\", 1, \"b\")"), Value::Str("a1b".into()));
+        assert_eq!(eval_str("size(\"hello\")"), Value::Int(5));
+        assert_eq!(eval_str("toupper(\"aBc\")"), Value::Str("ABC".into()));
+        assert_eq!(eval_str("floor(2.7)"), Value::Int(2));
+        assert_eq!(eval_str("ceiling(2.1)"), Value::Int(3));
+        assert_eq!(eval_str("round(2.5)"), Value::Int(3));
+        assert_eq!(eval_str("abs(-4)"), Value::Int(4));
+        assert_eq!(eval_str("min({3, 1, 2})"), Value::Real(1.0));
+        assert_eq!(eval_str("max({3, 1, 2})"), Value::Real(3.0));
+        assert_eq!(eval_str("member(2, {1, 2, 3})"), Value::Bool(true));
+        assert_eq!(
+            eval_str("stringListMember(\"b\", \"a, B, c\")"),
+            Value::Bool(true)
+        );
+        assert_eq!(eval_str("stringListSize(\"a, b, c\")"), Value::Int(3));
+        assert_eq!(eval_str("isUndefined(undefined)"), Value::Bool(true));
+        assert_eq!(eval_str("isError(1/0)"), Value::Bool(true));
+        assert_eq!(eval_str("ifThenElse(true, 1, 2)"), Value::Int(1));
+        assert_eq!(eval_str("ifThenElse(undefined, 1, 2)"), Value::Int(2));
+        assert_eq!(eval_str("nosuchfn(1)"), Value::Error);
+    }
+
+    #[test]
+    fn string_concat_plus() {
+        assert_eq!(eval_str("\"a\" + \"b\""), Value::Str("ab".into()));
+    }
+
+    #[test]
+    fn undefined_attr_lookup() {
+        assert_eq!(eval_str("NoSuchAttr"), Value::Undefined);
+        assert_eq!(eval_str("NoSuchAttr > 5"), Value::Undefined);
+    }
+
+    #[test]
+    fn lists() {
+        assert_eq!(
+            eval_str("{1, 2+3}"),
+            Value::List(vec![Value::Int(1), Value::Int(5)])
+        );
+        assert_eq!(eval_str("size({1, 2})"), Value::Int(2));
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_expr("1 +").is_err());
+        assert!(parse_expr("(1").is_err());
+        assert!(parse_expr("a = b").is_err());
+        assert!(parse_expr("\"unterminated").is_err());
+        assert!(parse_expr("1 & 2").is_err());
+        assert!(parse_expr("1 2").is_err());
+        assert!(parse_expr("{1,").is_err());
+    }
+
+    #[test]
+    fn my_target_scoping() {
+        let mut my = Ad::new("Job");
+        my.insert("X", 1i64);
+        my.insert_expr("UsesTarget", "TARGET.Y + MY.X").unwrap();
+        let mut target = Ad::new("Machine");
+        target.insert("Y", 10i64);
+        assert_eq!(eval_attr(&my, Some(&target), "UsesTarget"), Value::Int(11));
+        // Without a target, TARGET.* is undefined.
+        assert_eq!(eval_attr(&my, None, "UsesTarget"), Value::Undefined);
+    }
+
+    #[test]
+    fn unqualified_falls_back_to_target() {
+        let mut my = Ad::new("Job");
+        my.insert_expr("R", "Memory >= 100").unwrap();
+        let mut target = Ad::new("Machine");
+        target.insert("Memory", 200i64);
+        assert_eq!(eval_attr(&my, Some(&target), "R"), Value::Bool(true));
+    }
+
+    #[test]
+    fn cyclic_attrs_are_error() {
+        let mut ad = Ad::new("Job");
+        ad.insert_expr("A", "B").unwrap();
+        ad.insert_expr("B", "A").unwrap();
+        assert_eq!(eval_attr(&ad, None, "A"), Value::Error);
+    }
+
+    #[test]
+    fn deep_expression_display_roundtrip() {
+        let src = "(TARGET.Memory >= MY.RequestMemory) && (KFlops > 1000 || Disk * 2 >= 10)";
+        let e = parse_expr(src).unwrap();
+        let printed = e.to_string();
+        // Round-trip: printing then reparsing yields an equal tree shape.
+        let e2 = parse_expr(&printed).unwrap();
+        assert_eq!(printed, e2.to_string());
+    }
+}

@@ -1,0 +1,353 @@
+//! ClassAds: HTCondor's attribute/expression language and bilateral
+//! matchmaking — the substrate every daemon speaks.
+//!
+//! Implemented here: the "old ClassAds" dialect HTCondor pools actually
+//! run on — flat attribute ads whose values are lazily-evaluated
+//! expressions with three-valued logic (`UNDEFINED` / `ERROR` propagate),
+//! `MY.`/`TARGET.` scoping, and the `Requirements`/`Rank` bilateral match
+//! used by the negotiator.
+//!
+//! ```no_run
+//! use htcdm::classad::{Ad, matches};
+//!
+//! let mut job = Ad::new("Job");
+//! job.insert_expr("Requirements", "TARGET.Memory >= 2048 && TARGET.Arch == \"X86_64\"").unwrap();
+//! job.insert("RequestMemory", 2048i64);
+//!
+//! let mut slot = Ad::new("Machine");
+//! slot.insert("Memory", 4096i64);
+//! slot.insert("Arch", "X86_64");
+//! slot.insert_expr("Requirements", "TARGET.RequestMemory <= MY.Memory").unwrap();
+//!
+//! assert!(matches(&job, &slot).unwrap());
+//! ```
+
+mod expr;
+
+pub use expr::{parse_expr, BinOp, Expr, ParseError, UnOp};
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A ClassAd value (the result of evaluating an expression).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Undefined,
+    Error,
+    Bool(bool),
+    Int(i64),
+    Real(f64),
+    Str(String),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Numeric coercion used by arithmetic.
+    pub fn as_real(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Real(r) => Some(*r),
+            Value::Bool(b) => Some(*b as i64 as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Real(r) => Some(*r as i64),
+            Value::Bool(b) => Some(*b as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn is_undefined(&self) -> bool {
+        matches!(self, Value::Undefined)
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, Value::Error)
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Undefined => write!(f, "undefined"),
+            Value::Error => write!(f, "error"),
+            Value::Bool(b) => write!(f, "{}", if *b { "true" } else { "false" }),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Real(r) => {
+                if r.fract() == 0.0 && r.is_finite() {
+                    write!(f, "{r:.1}")
+                } else {
+                    write!(f, "{r}")
+                }
+            }
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::List(xs) => {
+                write!(f, "{{")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Value {
+        Value::Bool(b)
+    }
+}
+impl From<i64> for Value {
+    fn from(i: i64) -> Value {
+        Value::Int(i)
+    }
+}
+impl From<u64> for Value {
+    fn from(i: u64) -> Value {
+        Value::Int(i as i64)
+    }
+}
+impl From<f64> for Value {
+    fn from(r: f64) -> Value {
+        Value::Real(r)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Value {
+        Value::Str(s)
+    }
+}
+
+/// An attribute ad: name -> expression (stored unevaluated, as HTCondor
+/// does, so `Rank = TARGET.KFlops` re-evaluates per candidate).
+#[derive(Debug, Clone)]
+pub struct Ad {
+    /// MyType: "Job", "Machine", "Scheduler", ...
+    pub my_type: String,
+    attrs: BTreeMap<String, Expr>,
+}
+
+impl Ad {
+    pub fn new(my_type: &str) -> Ad {
+        Ad {
+            my_type: my_type.to_string(),
+            attrs: BTreeMap::new(),
+        }
+    }
+
+    /// Insert a literal value.
+    pub fn insert(&mut self, name: &str, value: impl Into<Value>) {
+        self.attrs
+            .insert(name.to_ascii_lowercase(), Expr::Lit(value.into()));
+    }
+
+    /// Insert an expression (parsed from ClassAd syntax).
+    pub fn insert_expr(&mut self, name: &str, text: &str) -> Result<(), ParseError> {
+        let e = parse_expr(text)?;
+        self.attrs.insert(name.to_ascii_lowercase(), e);
+        Ok(())
+    }
+
+    pub fn get_expr(&self, name: &str) -> Option<&Expr> {
+        self.attrs.get(&name.to_ascii_lowercase())
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Expr> {
+        self.attrs.remove(&name.to_ascii_lowercase())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.attrs.contains_key(&name.to_ascii_lowercase())
+    }
+
+    pub fn len(&self) -> usize {
+        self.attrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.attrs.is_empty()
+    }
+
+    pub fn attr_names(&self) -> impl Iterator<Item = &str> {
+        self.attrs.keys().map(|s| s.as_str())
+    }
+
+    /// Evaluate an attribute in this ad's scope (no TARGET).
+    pub fn eval(&self, name: &str) -> Value {
+        expr::eval_attr(self, None, name)
+    }
+
+    /// Evaluate an attribute with a TARGET ad in scope.
+    pub fn eval_with(&self, target: &Ad, name: &str) -> Value {
+        expr::eval_attr(self, Some(target), name)
+    }
+
+    /// Convenience typed getters (evaluated without TARGET).
+    pub fn get_int(&self, name: &str) -> Option<i64> {
+        self.eval(name).as_int()
+    }
+    pub fn get_real(&self, name: &str) -> Option<f64> {
+        self.eval(name).as_real()
+    }
+    pub fn get_str(&self, name: &str) -> Option<String> {
+        match self.eval(name) {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn get_bool(&self, name: &str) -> Option<bool> {
+        self.eval(name).as_bool()
+    }
+}
+
+impl fmt::Display for Ad {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "MyType = \"{}\"", self.my_type)?;
+        for (k, v) in &self.attrs {
+            writeln!(f, "{k} = {v}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Bilateral match: both ads' `Requirements` must evaluate to true with the
+/// other ad as TARGET. `UNDEFINED`/`ERROR` requirements are a non-match
+/// (HTCondor semantics). A missing `Requirements` is treated as `true`.
+pub fn matches(left: &Ad, right: &Ad) -> Result<bool, ParseError> {
+    Ok(half_match(left, right) && half_match(right, left))
+}
+
+fn half_match(ad: &Ad, target: &Ad) -> bool {
+    if !ad.contains("requirements") {
+        return true;
+    }
+    matches!(ad.eval_with(target, "requirements"), Value::Bool(true))
+}
+
+/// Evaluate `Rank` of `ad` against a candidate; non-numeric ranks count as
+/// 0.0 (HTCondor semantics).
+pub fn rank(ad: &Ad, target: &Ad) -> f64 {
+    ad.eval_with(target, "rank").as_real().unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job_and_slot() -> (Ad, Ad) {
+        let mut job = Ad::new("Job");
+        job.insert("RequestMemory", 2048i64);
+        job.insert("RequestCpus", 1i64);
+        job.insert("Owner", "alice");
+        job.insert_expr(
+            "Requirements",
+            "TARGET.Memory >= MY.RequestMemory && TARGET.Cpus >= MY.RequestCpus",
+        )
+        .unwrap();
+        let mut slot = Ad::new("Machine");
+        slot.insert("Memory", 4096i64);
+        slot.insert("Cpus", 8i64);
+        slot.insert("KFlops", 1_000_000i64);
+        slot.insert_expr("Requirements", "TARGET.RequestMemory <= MY.Memory")
+            .unwrap();
+        (job, slot)
+    }
+
+    #[test]
+    fn bilateral_match() {
+        let (job, slot) = job_and_slot();
+        assert!(matches(&job, &slot).unwrap());
+    }
+
+    #[test]
+    fn match_fails_when_resources_insufficient() {
+        let (mut job, slot) = job_and_slot();
+        job.insert("RequestMemory", 8192i64);
+        assert!(!matches(&job, &slot).unwrap());
+    }
+
+    #[test]
+    fn missing_requirements_is_true() {
+        let mut a = Ad::new("Job");
+        a.insert("X", 1i64);
+        let b = Ad::new("Machine");
+        assert!(matches(&a, &b).unwrap());
+    }
+
+    #[test]
+    fn undefined_requirements_is_no_match() {
+        let mut job = Ad::new("Job");
+        job.insert_expr("Requirements", "TARGET.NoSuchAttr > 5").unwrap();
+        let slot = Ad::new("Machine");
+        assert!(!matches(&job, &slot).unwrap());
+    }
+
+    #[test]
+    fn rank_orders_candidates() {
+        let mut job = Ad::new("Job");
+        job.insert_expr("Rank", "TARGET.KFlops").unwrap();
+        let mut fast = Ad::new("Machine");
+        fast.insert("KFlops", 100i64);
+        let mut slow = Ad::new("Machine");
+        slow.insert("KFlops", 10i64);
+        assert!(rank(&job, &fast) > rank(&job, &slow));
+        // Missing rank -> 0
+        let norank = Ad::new("Job");
+        assert_eq!(rank(&norank, &fast), 0.0);
+    }
+
+    #[test]
+    fn attr_names_case_insensitive() {
+        let mut ad = Ad::new("Job");
+        ad.insert("FooBar", 1i64);
+        assert!(ad.contains("foobar"));
+        assert!(ad.contains("FOOBAR"));
+        assert_eq!(ad.get_int("fooBAR"), Some(1));
+    }
+
+    #[test]
+    fn display_roundtrips_through_parser() {
+        let (job, _) = job_and_slot();
+        let text = job.to_string();
+        assert!(text.contains("requirements ="));
+        // Every displayed attr line parses back.
+        for line in text.lines().skip(1) {
+            let (_, rhs) = line.split_once('=').unwrap();
+            parse_expr(rhs.trim()).unwrap();
+        }
+    }
+
+    #[test]
+    fn self_referencing_attr() {
+        let mut ad = Ad::new("Machine");
+        ad.insert("Base", 10i64);
+        ad.insert_expr("Total", "Base * 2").unwrap();
+        assert_eq!(ad.get_int("Total"), Some(20));
+    }
+}

@@ -1,0 +1,307 @@
+//! HTCondor-style configuration: `KEY = value` files with `$(MACRO)`
+//! expansion, comments, line continuations and typed accessors.
+//!
+//! This is both a faithful substrate (HTCondor pools are driven by exactly
+//! this format) and the crate's own config system — every knob the paper's
+//! experiments touch (transfer queue throttle, security method, NIC
+//! capacities…) is a named knob with a registered default, so experiment
+//! configs only state their deltas, like a real condor_config.local.
+//!
+//! ```text
+//! # fig1 LAN experiment
+//! WORKERS = 6
+//! SLOTS_TOTAL = 200
+//! FILE_TRANSFER_DISK_LOAD_THROTTLE = false
+//! SEC_DEFAULT_ENCRYPTION = CHACHA20
+//! SUBMIT_NIC_GBPS = 100
+//! POOL = htcdm-$(WORKERS)w
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed configuration table with macro expansion.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    entries: BTreeMap<String, String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("macro recursion while expanding $({0})")]
+    Recursion(String),
+    #[error("knob {0}: expected {1}, got '{2}'")]
+    Type(String, &'static str, String),
+}
+
+impl Config {
+    pub fn new() -> Config {
+        Config::default()
+    }
+
+    /// Parse config text, layering on top of the existing entries
+    /// (later files override earlier ones, as in HTCondor).
+    pub fn parse_into(&mut self, text: &str) -> Result<(), ConfigError> {
+        let mut pending = String::new();
+        let mut start_line = 0usize;
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim_end();
+            if pending.is_empty() {
+                start_line = i + 1;
+            }
+            // Continuation: trailing backslash.
+            if let Some(stripped) = line.strip_suffix('\\') {
+                pending.push_str(stripped);
+                pending.push(' ');
+                continue;
+            }
+            pending.push_str(line);
+            let full = std::mem::take(&mut pending);
+            self.parse_line(&full, start_line)?;
+        }
+        if !pending.trim().is_empty() {
+            return Err(ConfigError::Parse {
+                line: start_line,
+                msg: "dangling continuation".into(),
+            });
+        }
+        Ok(())
+    }
+
+    fn parse_line(&mut self, line: &str, lineno: usize) -> Result<(), ConfigError> {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            return Ok(());
+        }
+        let (k, v) = t.split_once('=').ok_or_else(|| ConfigError::Parse {
+            line: lineno,
+            msg: format!("expected KEY = value, got '{t}'"),
+        })?;
+        let key = k.trim();
+        if key.is_empty()
+            || !key
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.')
+        {
+            return Err(ConfigError::Parse {
+                line: lineno,
+                msg: format!("bad key '{key}'"),
+            });
+        }
+        self.entries
+            .insert(key.to_ascii_uppercase(), v.trim().to_string());
+        Ok(())
+    }
+
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut c = Config::new();
+        c.parse_into(text)?;
+        Ok(c)
+    }
+
+    /// Set a knob programmatically (same override semantics as a file).
+    pub fn set(&mut self, key: &str, value: impl fmt::Display) {
+        self.entries
+            .insert(key.to_ascii_uppercase(), value.to_string());
+    }
+
+    /// Raw (unexpanded) lookup.
+    pub fn raw(&self, key: &str) -> Option<&str> {
+        self.entries.get(&key.to_ascii_uppercase()).map(|s| s.as_str())
+    }
+
+    /// Lookup with `$(MACRO)` expansion.
+    pub fn get(&self, key: &str) -> Result<Option<String>, ConfigError> {
+        match self.raw(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(self.expand(v, 0)?)),
+        }
+    }
+
+    fn expand(&self, value: &str, depth: usize) -> Result<String, ConfigError> {
+        if depth > 16 {
+            return Err(ConfigError::Recursion(value.to_string()));
+        }
+        let mut out = String::with_capacity(value.len());
+        let mut rest = value;
+        while let Some(start) = rest.find("$(") {
+            out.push_str(&rest[..start]);
+            let after = &rest[start + 2..];
+            let end = after.find(')').ok_or_else(|| ConfigError::Parse {
+                line: 0,
+                msg: format!("unterminated $( in '{value}'"),
+            })?;
+            let name = &after[..end];
+            match self.raw(name) {
+                Some(sub) => out.push_str(&self.expand(sub, depth + 1)?),
+                None => {} // undefined macros expand to empty, as in HTCondor
+            }
+            rest = &after[end + 1..];
+        }
+        out.push_str(rest);
+        Ok(out)
+    }
+
+    // ---- typed accessors -------------------------------------------------
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).ok().flatten().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, ConfigError> {
+        match self.get(key).ok().flatten() {
+            None => Ok(default),
+            Some(v) => v
+                .trim()
+                .parse()
+                .map_err(|_| ConfigError::Type(key.into(), "integer", v)),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, ConfigError> {
+        match self.get(key).ok().flatten() {
+            None => Ok(default),
+            Some(v) => v
+                .trim()
+                .parse()
+                .map_err(|_| ConfigError::Type(key.into(), "float", v)),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.get(key).ok().flatten() {
+            None => Ok(default),
+            Some(v) => match v.trim().to_ascii_lowercase().as_str() {
+                "true" | "yes" | "1" | "on" => Ok(true),
+                "false" | "no" | "0" | "off" => Ok(false),
+                _ => Err(ConfigError::Type(key.into(), "bool", v)),
+            },
+        }
+    }
+
+    /// Byte sizes with HTCondor-ish suffixes: `2GB`, `64KB`, `1MB`, `512`.
+    pub fn get_bytes(&self, key: &str, default: u64) -> Result<u64, ConfigError> {
+        let Some(v) = self.get(key).ok().flatten() else {
+            return Ok(default);
+        };
+        parse_bytes(&v).ok_or_else(|| ConfigError::Type(key.into(), "byte size", v))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// `2GB` / `64KB` / `1.5MB` / `512` -> bytes (decimal multipliers, then
+/// binary `KiB/MiB/GiB` also accepted).
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let t = s.trim();
+    let (num, mult) = if let Some(p) = t.strip_suffix("GiB") {
+        (p, 1u64 << 30)
+    } else if let Some(p) = t.strip_suffix("MiB") {
+        (p, 1 << 20)
+    } else if let Some(p) = t.strip_suffix("KiB") {
+        (p, 1 << 10)
+    } else if let Some(p) = t.strip_suffix("GB") {
+        (p, 1_000_000_000)
+    } else if let Some(p) = t.strip_suffix("MB") {
+        (p, 1_000_000)
+    } else if let Some(p) = t.strip_suffix("KB") {
+        (p, 1_000)
+    } else if let Some(p) = t.strip_suffix('B') {
+        (p, 1)
+    } else {
+        (t, 1)
+    };
+    let n: f64 = num.trim().parse().ok()?;
+    if n < 0.0 {
+        return None;
+    }
+    Some((n * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_parse_and_override() {
+        let mut c = Config::parse("A = 1\nB = two\n# comment\n\nA=3").unwrap();
+        assert_eq!(c.get("a").unwrap().unwrap(), "3");
+        assert_eq!(c.get("B").unwrap().unwrap(), "two");
+        c.parse_into("B = overridden").unwrap();
+        assert_eq!(c.get("b").unwrap().unwrap(), "overridden");
+    }
+
+    #[test]
+    fn macro_expansion() {
+        let c = Config::parse("POOL = prp\nNAME = htcdm-$(POOL)-$(MISSING)x").unwrap();
+        assert_eq!(c.get("NAME").unwrap().unwrap(), "htcdm-prp-x");
+    }
+
+    #[test]
+    fn nested_macros() {
+        let c = Config::parse("A = a\nB = $(A)b\nC = $(B)c").unwrap();
+        assert_eq!(c.get("C").unwrap().unwrap(), "abc");
+    }
+
+    #[test]
+    fn recursion_detected() {
+        let c = Config::parse("A = $(B)\nB = $(A)").unwrap();
+        assert!(matches!(c.get("A"), Err(ConfigError::Recursion(_))));
+    }
+
+    #[test]
+    fn continuations() {
+        let c = Config::parse("LONG = a \\\n  b \\\n  c").unwrap();
+        assert_eq!(c.get("LONG").unwrap().unwrap(), "a    b    c");
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let c = Config::parse("N = 42\nF = 2.5\nT = True\nX = nope").unwrap();
+        assert_eq!(c.get_u64("N", 0).unwrap(), 42);
+        assert_eq!(c.get_u64("MISSING", 7).unwrap(), 7);
+        assert_eq!(c.get_f64("F", 0.0).unwrap(), 2.5);
+        assert!(c.get_bool("T", false).unwrap());
+        assert!(c.get_bool("X", false).is_err());
+        assert!(c.get_u64("X", 0).is_err());
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(parse_bytes("2GB"), Some(2_000_000_000));
+        assert_eq!(parse_bytes("2GiB"), Some(2 << 30));
+        assert_eq!(parse_bytes("64KB"), Some(64_000));
+        assert_eq!(parse_bytes("1.5MB"), Some(1_500_000));
+        assert_eq!(parse_bytes("512"), Some(512));
+        assert_eq!(parse_bytes("-1"), None);
+        assert_eq!(parse_bytes("junk"), None);
+        let c = Config::parse("SZ = 2GB").unwrap();
+        assert_eq!(c.get_bytes("SZ", 0).unwrap(), 2_000_000_000);
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Config::parse("NOEQUALS").is_err());
+        assert!(Config::parse("BAD KEY = 1").is_err());
+        assert!(Config::parse("= 1").is_err());
+    }
+
+    #[test]
+    fn keys_case_insensitive() {
+        let c = Config::parse("MiXeD = v").unwrap();
+        assert_eq!(c.raw("mixed"), Some("v"));
+        assert_eq!(c.raw("MIXED"), Some("v"));
+    }
+}

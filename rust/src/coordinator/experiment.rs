@@ -1,0 +1,253 @@
+//! Experiment presets and reports: one [`Scenario`] per paper experiment,
+//! and the [`Report`] type whose fields are exactly the numbers the paper
+//! quotes (sustained Gbps, makespan, median runtime, median input transfer
+//! time, error count).
+
+use super::engine::{Engine, EngineResult, EngineSpec};
+use crate::metrics::BinSeries;
+use crate::netsim::topology::TestbedSpec;
+use crate::transfer::ThrottlePolicy;
+use crate::util::units::{Gbps, SimTime};
+use crate::util::OnlineStats;
+use anyhow::Result;
+
+/// The experiments of the paper (see DESIGN.md's experiment index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// §III / Fig. 1: LAN, 10k × 2 GB, queue throttle disabled.
+    LanPaper,
+    /// §IV / Fig. 2: WAN (NY workers), same workload.
+    WanPaper,
+    /// §III narrative: same as LanPaper but with the default disk-load
+    /// transfer-queue throttle — paper observed ~2× the makespan.
+    LanDefaultQueue,
+    /// §II narrative: submit pod behind the Calico VPN overlay — paper
+    /// observed a ~25 Gbps ceiling.
+    LanVpn,
+}
+
+impl Scenario {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::LanPaper => "fig1-lan",
+            Scenario::WanPaper => "fig2-wan",
+            Scenario::LanDefaultQueue => "queue-default",
+            Scenario::LanVpn => "vpn-overlay",
+        }
+    }
+
+    pub fn spec(&self) -> EngineSpec {
+        match self {
+            Scenario::LanPaper => {
+                EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled)
+            }
+            Scenario::WanPaper => {
+                EngineSpec::paper(TestbedSpec::wan_paper(), ThrottlePolicy::Disabled)
+            }
+            Scenario::LanDefaultQueue => EngineSpec::paper(
+                TestbedSpec::lan_paper(),
+                ThrottlePolicy::htcondor_default(),
+            ),
+            Scenario::LanVpn => {
+                EngineSpec::paper(TestbedSpec::lan_vpn_paper(), ThrottlePolicy::Disabled)
+            }
+        }
+    }
+
+    /// Paper-reported values for comparison in the report (None where the
+    /// paper gives none).
+    pub fn paper_sustained_gbps(&self) -> Option<f64> {
+        match self {
+            Scenario::LanPaper => Some(90.0),
+            Scenario::WanPaper => Some(60.0),
+            Scenario::LanDefaultQueue => None,
+            Scenario::LanVpn => Some(25.0),
+        }
+    }
+
+    pub fn paper_makespan_min(&self) -> Option<f64> {
+        match self {
+            Scenario::LanPaper => Some(32.0),
+            Scenario::WanPaper => Some(49.0),
+            Scenario::LanDefaultQueue => Some(64.0),
+            Scenario::LanVpn => None,
+        }
+    }
+}
+
+/// A runnable experiment (scenario preset or custom spec).
+pub struct Experiment {
+    pub spec: EngineSpec,
+    pub label: String,
+}
+
+impl Experiment {
+    pub fn scenario(s: Scenario) -> Experiment {
+        Experiment {
+            spec: s.spec(),
+            label: s.name().to_string(),
+        }
+    }
+
+    pub fn custom(label: &str, spec: EngineSpec) -> Experiment {
+        Experiment {
+            spec,
+            label: label.to_string(),
+        }
+    }
+
+    /// Scale the workload down by `factor` (jobs and monitor bin) for fast
+    /// smoke runs; sustained throughput is unchanged, makespan scales.
+    pub fn scaled(mut self, factor: u32) -> Experiment {
+        assert!(factor >= 1);
+        self.spec.n_jobs = (self.spec.n_jobs / factor).max(1);
+        self.label = format!("{}(1/{factor})", self.label);
+        self
+    }
+
+    pub fn run(self) -> Result<Report> {
+        let result = Engine::new(self.spec.clone()).run()?;
+        Ok(Report::from_engine(self.label, &self.spec, result))
+    }
+}
+
+/// The numbers the paper quotes, measured from one run.
+#[derive(Debug)]
+pub struct Report {
+    pub label: String,
+    pub n_jobs: u32,
+    pub makespan: SimTime,
+    pub sustained: Gbps,
+    pub peak: Gbps,
+    pub median_runtime_s: f64,
+    /// Median input transfer time as the user log reports it (includes
+    /// transfer-queue wait — HTCondor's "input transfer time").
+    pub median_input_transfer: SimTime,
+    /// Median wire-only transfer time (excludes queue wait).
+    pub median_wire_transfer: SimTime,
+    pub peak_concurrent_transfers: u32,
+    pub negotiation_cycles: u64,
+    pub errors: u64,
+    /// Submit-NIC throughput binned like the paper's monitoring (5 min).
+    pub series_5min: BinSeries,
+    /// Finer series for plots/tests.
+    pub series: BinSeries,
+}
+
+impl Report {
+    fn from_engine(label: String, spec: &EngineSpec, r: EngineResult) -> Report {
+        let mut runtime = OnlineStats::new();
+        let mut ttransfer = OnlineStats::new();
+        let mut twire = OnlineStats::new();
+        for j in &r.schedd.jobs {
+            if let Some(d) = j.run_duration() {
+                runtime.push(d.as_secs_f64());
+            }
+            if let Some(d) = j.input_transfer_duration() {
+                ttransfer.push(d.as_secs_f64());
+            }
+            if let Some(d) = j.input_wire_duration() {
+                twire.push(d.as_secs_f64());
+            }
+        }
+        let five_min = SimTime::from_secs(300);
+        let series_5min = if r.monitor.bin_width().0 <= five_min.0
+            && five_min.0 % r.monitor.bin_width().0 == 0
+        {
+            r.monitor.rebin(five_min)
+        } else {
+            r.monitor.clone()
+        };
+        Report {
+            label,
+            n_jobs: spec.n_jobs,
+            makespan: r.schedd.makespan().unwrap_or(SimTime::ZERO),
+            sustained: r.monitor.sustained_gbps(0.5),
+            peak: r.monitor.peak_gbps(),
+            median_runtime_s: runtime.median(),
+            median_input_transfer: SimTime::from_secs_f64(ttransfer.median().max(0.0)),
+            median_wire_transfer: SimTime::from_secs_f64(twire.median().max(0.0)),
+            peak_concurrent_transfers: r.peak_concurrent_transfers,
+            negotiation_cycles: r.negotiation_cycles,
+            errors: r.errors,
+            series_5min,
+            series: r.monitor,
+        }
+    }
+
+    pub fn sustained_gbps(&self) -> f64 {
+        self.sustained.0
+    }
+
+    /// One row of the paper-vs-measured comparison table.
+    pub fn table_row(&self, paper_gbps: Option<f64>, paper_makespan_min: Option<f64>) -> String {
+        let fmt_opt = |o: Option<f64>| o.map(|v| format!("{v:.0}")).unwrap_or_else(|| "-".into());
+        format!(
+            "{:<16} {:>6} jobs | sustained {:>6.1} Gbps (paper {:>4}) | makespan {:>6.1} min (paper {:>4}) | median xfer {:>5.1} min | median run {:>4.1} s | errors {}",
+            self.label,
+            self.n_jobs,
+            self.sustained.0,
+            fmt_opt(paper_gbps),
+            self.makespan.as_mins_f64(),
+            fmt_opt(paper_makespan_min),
+            self.median_input_transfer.as_mins_f64(),
+            self.median_runtime_s,
+            self.errors,
+        )
+    }
+
+    /// Render the Fig. 1/2-style ASCII monitor chart.
+    pub fn figure(&self, cap_gbps: f64) -> String {
+        self.series_5min.ascii_chart(48, Gbps(cap_gbps))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::Bytes;
+
+    #[test]
+    fn scenario_specs_match_paper_setup() {
+        let lan = Scenario::LanPaper.spec();
+        assert_eq!(lan.n_jobs, 10_000);
+        assert_eq!(lan.input_bytes, Bytes(2_000_000_000));
+        assert_eq!(lan.testbed.total_slots(), 200);
+        assert_eq!(lan.throttle, ThrottlePolicy::Disabled);
+
+        let wan = Scenario::WanPaper.spec();
+        assert!(wan.testbed.wan.is_some());
+        assert_eq!(wan.testbed.total_slots(), 200);
+
+        let q = Scenario::LanDefaultQueue.spec();
+        assert_ne!(q.throttle, ThrottlePolicy::Disabled);
+
+        let v = Scenario::LanVpn.spec();
+        assert!(v.testbed.vpn_on_submit);
+    }
+
+    #[test]
+    fn scaled_reduces_jobs() {
+        let e = Experiment::scenario(Scenario::LanPaper).scaled(100);
+        assert_eq!(e.spec.n_jobs, 100);
+        assert!(e.label.contains("1/100"));
+    }
+
+    #[test]
+    fn small_report_has_sane_numbers() {
+        let mut spec = Scenario::LanPaper.spec();
+        spec.n_jobs = 60;
+        spec.input_bytes = Bytes(200_000_000);
+        spec.testbed.monitor_bin = SimTime::from_secs(5);
+        let report = Experiment::custom("smoke", spec).run().unwrap();
+        assert_eq!(report.errors, 0);
+        assert!(report.sustained_gbps() > 0.0);
+        assert!(report.makespan > SimTime::ZERO);
+        assert!(report.median_runtime_s > 0.5);
+        let row = report.table_row(Some(90.0), Some(32.0));
+        assert!(row.contains("smoke"));
+        assert!(row.contains("paper"));
+        let fig = report.figure(100.0);
+        assert!(fig.contains("Gbps"));
+    }
+}

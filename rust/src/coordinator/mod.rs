@@ -1,0 +1,12 @@
+//! The coordinator: ties daemons, transfer subsystem, storage and network
+//! into a runnable pool.
+//!
+//! * [`engine`] — the virtual-time experiment engine (paper-scale runs:
+//!   20 TB of traffic in seconds of wall time).
+//! * [`experiment`] — scenario presets for every figure/table in the
+//!   paper, and the report type benches print.
+
+pub mod engine;
+pub mod experiment;
+
+pub use experiment::{Experiment, Report, Scenario};

@@ -1,0 +1,131 @@
+//! The collector: the pool's ad registry. Every daemon advertises a
+//! ClassAd under a unique name; queries filter by `MyType` and an optional
+//! constraint expression.
+
+use crate::classad::{parse_expr, Ad, Value};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Collector {
+    ads: BTreeMap<String, Ad>,
+}
+
+impl Collector {
+    pub fn new() -> Collector {
+        Collector::default()
+    }
+
+    /// Advertise (insert or replace) an ad under `name`.
+    pub fn advertise(&mut self, name: &str, ad: Ad) {
+        self.ads.insert(name.to_string(), ad);
+    }
+
+    /// Remove an ad (daemon shutdown).
+    pub fn invalidate(&mut self, name: &str) -> bool {
+        self.ads.remove(name).is_some()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Ad> {
+        self.ads.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.ads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ads.is_empty()
+    }
+
+    /// All ads of a type, with names.
+    pub fn query_type(&self, my_type: &str) -> Vec<(&str, &Ad)> {
+        self.ads
+            .iter()
+            .filter(|(_, ad)| ad.my_type.eq_ignore_ascii_case(my_type))
+            .map(|(n, ad)| (n.as_str(), ad))
+            .collect()
+    }
+
+    /// Ads of a type satisfying a constraint expression (evaluated in the
+    /// ad's own scope), e.g. `State == "Unclaimed" && Memory > 1024`.
+    pub fn query(&self, my_type: &str, constraint: &str) -> Result<Vec<(&str, &Ad)>, String> {
+        let expr = parse_expr(constraint).map_err(|e| e.to_string())?;
+        let mut out = Vec::new();
+        for (name, ad) in self.query_type(my_type) {
+            let mut probe = ad.clone();
+            probe.remove("__constraint");
+            let mut tmp = probe.clone();
+            // Evaluate the constraint as a transient attribute of the ad.
+            tmp.insert_expr("__constraint", &expr.to_string())
+                .map_err(|e| e.to_string())?;
+            if tmp.eval("__constraint") == Value::Bool(true) {
+                out.push((name, ad));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine(name: &str, mem: i64, state: &str) -> Ad {
+        let mut ad = Ad::new("Machine");
+        ad.insert("Name", name);
+        ad.insert("Memory", mem);
+        ad.insert("State", state);
+        ad
+    }
+
+    #[test]
+    fn advertise_replace_invalidate() {
+        let mut c = Collector::new();
+        c.advertise("slot1@w0", machine("slot1@w0", 1024, "Unclaimed"));
+        c.advertise("slot1@w0", machine("slot1@w0", 2048, "Unclaimed"));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get("slot1@w0").unwrap().get_int("Memory"), Some(2048));
+        assert!(c.invalidate("slot1@w0"));
+        assert!(!c.invalidate("slot1@w0"));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn query_by_type() {
+        let mut c = Collector::new();
+        c.advertise("m1", machine("m1", 1024, "Unclaimed"));
+        let mut sched = Ad::new("Scheduler");
+        sched.insert("Name", "schedd@submit");
+        c.advertise("schedd", sched);
+        assert_eq!(c.query_type("Machine").len(), 1);
+        assert_eq!(c.query_type("Scheduler").len(), 1);
+        assert_eq!(c.query_type("Negotiator").len(), 0);
+    }
+
+    #[test]
+    fn query_with_constraint() {
+        let mut c = Collector::new();
+        c.advertise("m1", machine("m1", 1024, "Unclaimed"));
+        c.advertise("m2", machine("m2", 8192, "Claimed"));
+        c.advertise("m3", machine("m3", 8192, "Unclaimed"));
+        let hits = c
+            .query("Machine", "State == \"Unclaimed\" && Memory >= 2048")
+            .unwrap();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0, "m3");
+    }
+
+    #[test]
+    fn bad_constraint_is_error() {
+        let c = Collector::new();
+        assert!(c.query("Machine", "Memory >=").is_err());
+    }
+
+    #[test]
+    fn constraint_undefined_attr_excludes() {
+        let mut c = Collector::new();
+        c.advertise("m1", machine("m1", 512, "Unclaimed"));
+        let hits = c.query("Machine", "NoSuchAttr > 1").unwrap();
+        assert!(hits.is_empty(), "undefined constraint is not a match");
+    }
+}

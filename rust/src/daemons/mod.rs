@@ -1,0 +1,14 @@
+//! The HTCondor-shaped daemons: collector (ad registry), negotiator
+//! (matchmaking), schedd (job queue + shadows + transfer queue), startd
+//! (execute slots). The simulation engine (`coordinator::engine`) and the
+//! real-mode fabric both drive pools built from these pieces.
+
+pub mod collector;
+pub mod negotiator;
+pub mod schedd;
+pub mod startd;
+
+pub use collector::Collector;
+pub use negotiator::Negotiator;
+pub use schedd::Schedd;
+pub use startd::{SlotId, SlotState, Startd};

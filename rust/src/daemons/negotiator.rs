@@ -1,0 +1,190 @@
+//! The negotiator: periodic matchmaking cycles pairing idle jobs with
+//! unclaimed slots via bilateral ClassAd matching, with autocluster
+//! optimization (identical jobs are matched once per cycle, which is what
+//! lets HTCondor negotiate 10k-job submissions in seconds).
+
+use crate::classad::{matches, rank, Ad};
+use crate::jobs::{autocluster_signature, JobId};
+use std::collections::HashMap;
+
+use super::startd::SlotId;
+
+/// Result of one negotiation cycle.
+#[derive(Debug, Default)]
+pub struct CycleResult {
+    pub matches: Vec<(JobId, SlotId)>,
+    pub autoclusters: usize,
+    pub considered_slots: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct Negotiator {
+    pub cycles: u64,
+}
+
+impl Negotiator {
+    pub fn new() -> Negotiator {
+        Negotiator::default()
+    }
+
+    /// One cycle: greedily hand each idle job (grouped by autocluster) the
+    /// best-ranked matching unclaimed slot. `idle_jobs` are (id, ad) in
+    /// queue order; `slots` are (id, ad) of unclaimed slots.
+    pub fn negotiate(
+        &mut self,
+        idle_jobs: &[(JobId, &Ad)],
+        slots: &[(SlotId, Ad)],
+    ) -> CycleResult {
+        self.cycles += 1;
+        let mut result = CycleResult {
+            considered_slots: slots.len(),
+            ..Default::default()
+        };
+        if idle_jobs.is_empty() || slots.is_empty() {
+            return result;
+        }
+
+        // Group jobs by autocluster; candidate slot set is computed once
+        // per autocluster against a representative ad.
+        let mut cluster_of: HashMap<String, Vec<usize>> = HashMap::new();
+        let mut order: Vec<String> = Vec::new();
+        for (i, (_, ad)) in idle_jobs.iter().enumerate() {
+            let sig = autocluster_signature(ad);
+            if !cluster_of.contains_key(&sig) {
+                order.push(sig.clone());
+            }
+            cluster_of.entry(sig).or_default().push(i);
+        }
+        result.autoclusters = order.len();
+
+        let mut slot_free: Vec<bool> = vec![true; slots.len()];
+        for sig in order {
+            let members = &cluster_of[&sig];
+            let rep_ad = idle_jobs[members[0]].1;
+            // Rank all matching free slots once for the representative.
+            let mut candidates: Vec<(usize, f64)> = slots
+                .iter()
+                .enumerate()
+                .filter(|(si, _)| slot_free[*si])
+                .filter(|(_, (_, slot_ad))| matches(rep_ad, slot_ad).unwrap_or(false))
+                .map(|(si, (_, slot_ad))| (si, rank(rep_ad, slot_ad)))
+                .collect();
+            // Best rank first; stable by slot order for determinism.
+            candidates.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+            for (&job_idx, &(slot_idx, _)) in members.iter().zip(candidates.iter()) {
+                slot_free[slot_idx] = false;
+                result
+                    .matches
+                    .push((idle_jobs[job_idx].0, slots[slot_idx].0));
+            }
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::{build_job_ad, JobSpec};
+    use crate::util::units::Bytes;
+
+    fn jspec(p: u32) -> JobSpec {
+        JobSpec {
+            id: JobId { cluster: 1, proc: p },
+            owner: "a".into(),
+            input_file: format!("f{p}"),
+            input_bytes: Bytes::gib(2),
+            output_bytes: Bytes::kib(4),
+            runtime_median_s: 5.0,
+        }
+    }
+
+    fn slot_ad(mem: i64, kflops: i64) -> Ad {
+        let mut ad = Ad::new("Machine");
+        ad.insert("Cpus", 1i64);
+        ad.insert("Memory", mem);
+        ad.insert("KFlops", kflops);
+        ad.insert("HasFileTransfer", true);
+        ad
+    }
+
+    fn sid(w: u32, s: u32) -> SlotId {
+        SlotId { worker: w, slot: s }
+    }
+
+    #[test]
+    fn matches_up_to_slot_count() {
+        let ads: Vec<Ad> = (0..3).map(|p| build_job_ad(&jspec(p))).collect();
+        let jobs: Vec<(JobId, &Ad)> = ads
+            .iter()
+            .enumerate()
+            .map(|(p, ad)| (JobId { cluster: 1, proc: p as u32 }, ad))
+            .collect();
+        let slots = vec![(sid(0, 0), slot_ad(4096, 1)), (sid(0, 1), slot_ad(4096, 1))];
+        let mut neg = Negotiator::new();
+        let r = neg.negotiate(&jobs, &slots);
+        assert_eq!(r.matches.len(), 2, "two slots, three jobs");
+        assert_eq!(r.autoclusters, 1, "identical jobs share one autocluster");
+        // Distinct slots assigned.
+        assert_ne!(r.matches[0].1, r.matches[1].1);
+    }
+
+    #[test]
+    fn no_match_when_requirements_fail() {
+        let ad = build_job_ad(&jspec(0));
+        let jobs = vec![(JobId { cluster: 1, proc: 0 }, &ad)];
+        let mut bad_slot = slot_ad(4096, 1);
+        bad_slot.insert("HasFileTransfer", false);
+        let mut neg = Negotiator::new();
+        let r = neg.negotiate(&jobs, &[(sid(0, 0), bad_slot)]);
+        assert!(r.matches.is_empty());
+    }
+
+    #[test]
+    fn rank_prefers_better_slot() {
+        let mut ad = build_job_ad(&jspec(0));
+        ad.insert_expr("Rank", "TARGET.KFlops").unwrap();
+        let jobs = vec![(JobId { cluster: 1, proc: 0 }, &ad)];
+        let slots = vec![
+            (sid(0, 0), slot_ad(4096, 10)),
+            (sid(1, 0), slot_ad(4096, 1000)),
+            (sid(2, 0), slot_ad(4096, 100)),
+        ];
+        let mut neg = Negotiator::new();
+        let r = neg.negotiate(&jobs, &slots);
+        assert_eq!(r.matches, vec![(JobId { cluster: 1, proc: 0 }, sid(1, 0))]);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let mut neg = Negotiator::new();
+        let r = neg.negotiate(&[], &[]);
+        assert!(r.matches.is_empty());
+        assert_eq!(neg.cycles, 1);
+    }
+
+    #[test]
+    fn scales_to_10k_jobs_quickly() {
+        // The autocluster path must handle the paper's 10k-job transaction
+        // without 10k × 200 bilateral evaluations.
+        let ads: Vec<Ad> = (0..10_000).map(|p| build_job_ad(&jspec(p))).collect();
+        let jobs: Vec<(JobId, &Ad)> = ads
+            .iter()
+            .enumerate()
+            .map(|(p, ad)| (JobId { cluster: 1, proc: p as u32 }, ad))
+            .collect();
+        let slots: Vec<(SlotId, Ad)> = (0..200)
+            .map(|s| (sid(s / 34, s % 34), slot_ad(4096, 1)))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let mut neg = Negotiator::new();
+        let r = neg.negotiate(&jobs, &slots);
+        assert_eq!(r.matches.len(), 200);
+        assert_eq!(r.autoclusters, 1);
+        assert!(
+            t0.elapsed().as_secs_f64() < 2.0,
+            "negotiation took {:?}",
+            t0.elapsed()
+        );
+    }
+}

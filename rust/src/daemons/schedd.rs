@@ -1,0 +1,232 @@
+//! The schedd: the submit-side daemon owning the job queue, the user log,
+//! the transfer queue, and (in a default HTCondor setup) *all* sandbox
+//! data movement — which is exactly why the paper benchmarks it as the
+//! potential bottleneck.
+
+use crate::jobs::log::{EventKind, UserLog};
+use crate::jobs::{Job, JobId, JobSpec, JobState};
+use crate::transfer::{ThrottlePolicy, TransferQueue};
+use crate::util::units::SimTime;
+use std::collections::VecDeque;
+
+#[derive(Debug)]
+pub struct Schedd {
+    pub name: String,
+    pub jobs: Vec<Job>,
+    /// Procs waiting for a match, in submission order.
+    idle: VecDeque<u32>,
+    pub log: UserLog,
+    /// Upload (input sandbox) admission control.
+    pub transfer_queue: TransferQueue<u32>,
+}
+
+impl Schedd {
+    pub fn new(name: &str, policy: ThrottlePolicy) -> Schedd {
+        Schedd {
+            name: name.to_string(),
+            jobs: Vec::new(),
+            idle: VecDeque::new(),
+            log: UserLog::new(),
+            transfer_queue: TransferQueue::new(policy),
+        }
+    }
+
+    /// One submit transaction (the paper queued all 10k jobs in one).
+    pub fn submit_transaction(&mut self, specs: Vec<JobSpec>, t: SimTime) {
+        for spec in specs {
+            let id = spec.id;
+            debug_assert_eq!(id.proc as usize, self.jobs.len());
+            self.log.record(t, id, EventKind::Submitted);
+            self.idle.push_back(id.proc);
+            self.jobs.push(Job::new(spec, t));
+        }
+    }
+
+    pub fn job(&self, proc_: u32) -> &Job {
+        &self.jobs[proc_ as usize]
+    }
+
+    pub fn job_mut(&mut self, proc_: u32) -> &mut Job {
+        &mut self.jobs[proc_ as usize]
+    }
+
+    pub fn idle_count(&self) -> usize {
+        self.idle.len()
+    }
+
+    /// Idle (unmatched) jobs for the negotiator, in queue order.
+    pub fn idle_jobs(&self) -> Vec<(JobId, &crate::classad::Ad)> {
+        self.idle
+            .iter()
+            .map(|&p| (self.jobs[p as usize].spec.id, &self.jobs[p as usize].ad))
+            .collect()
+    }
+
+    /// Pop the next idle job (claim-reuse path: a freed slot takes the
+    /// next queued job directly, no negotiation round-trip).
+    pub fn take_next_idle(&mut self) -> Option<u32> {
+        self.idle.pop_front()
+    }
+
+    /// Remove a specific proc from the idle queue (it was matched by the
+    /// negotiator).
+    pub fn take_idle(&mut self, proc_: u32) -> bool {
+        if let Some(pos) = self.idle.iter().position(|&p| p == proc_) {
+            self.idle.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Job matched to a slot → its input transfer enters the queue.
+    /// Returns procs whose transfers may START now.
+    pub fn job_matched(&mut self, proc_: u32, t: SimTime) -> Vec<u32> {
+        let job = &mut self.jobs[proc_ as usize];
+        debug_assert_eq!(job.state, JobState::Idle);
+        job.state = JobState::TransferQueued;
+        job.t_matched = Some(t);
+        job.t_transfer_queued = Some(t);
+        let id = job.spec.id;
+        self.log.record(t, id, EventKind::TransferInputQueued);
+        self.transfer_queue.enqueue(proc_)
+    }
+
+    /// Admitted transfer goes on the wire.
+    pub fn input_started(&mut self, proc_: u32, t: SimTime) {
+        let job = &mut self.jobs[proc_ as usize];
+        debug_assert_eq!(job.state, JobState::TransferQueued);
+        job.state = JobState::TransferringInput;
+        job.t_input_started = Some(t);
+        let id = job.spec.id;
+        self.log.record(t, id, EventKind::TransferInputBegan);
+    }
+
+    /// Transfer finished → job executes; frees a transfer-queue slot.
+    /// Returns procs whose transfers may START now.
+    pub fn input_done(&mut self, proc_: u32, t: SimTime) -> Vec<u32> {
+        let job = &mut self.jobs[proc_ as usize];
+        debug_assert_eq!(job.state, JobState::TransferringInput);
+        job.state = JobState::Running;
+        job.t_input_done = Some(t);
+        let id = job.spec.id;
+        self.log.record(t, id, EventKind::TransferInputDone);
+        self.log.record(t, id, EventKind::Executing);
+        self.transfer_queue.release()
+    }
+
+    pub fn run_done(&mut self, proc_: u32, t: SimTime) {
+        let job = &mut self.jobs[proc_ as usize];
+        debug_assert_eq!(job.state, JobState::Running);
+        job.state = JobState::TransferringOutput;
+        job.t_run_done = Some(t);
+        let id = job.spec.id;
+        self.log.record(t, id, EventKind::TransferOutputBegan);
+    }
+
+    pub fn job_completed(&mut self, proc_: u32, t: SimTime) {
+        let job = &mut self.jobs[proc_ as usize];
+        debug_assert_eq!(job.state, JobState::TransferringOutput);
+        job.state = JobState::Completed;
+        job.t_completed = Some(t);
+        let id = job.spec.id;
+        self.log.record(t, id, EventKind::TransferOutputDone);
+        self.log.record(t, id, EventKind::Terminated);
+    }
+
+    pub fn completed_count(&self) -> usize {
+        self.jobs
+            .iter()
+            .filter(|j| j.state == JobState::Completed)
+            .count()
+    }
+
+    pub fn all_completed(&self) -> bool {
+        self.jobs.iter().all(|j| j.state == JobState::Completed)
+    }
+
+    /// Makespan: submission of the first job to completion of the last.
+    pub fn makespan(&self) -> Option<SimTime> {
+        let start = self.jobs.iter().map(|j| j.t_submitted).min()?;
+        let end = self.jobs.iter().map(|j| j.t_completed).max()??;
+        Some(end.since(start))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::Bytes;
+
+    fn specs(n: u32) -> Vec<JobSpec> {
+        (0..n)
+            .map(|p| JobSpec {
+                id: JobId { cluster: 1, proc: p },
+                owner: "a".into(),
+                input_file: format!("f{p}"),
+                input_bytes: Bytes::mib(1),
+                output_bytes: Bytes::kib(1),
+                runtime_median_s: 5.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn submit_transaction_queues_all() {
+        let mut s = Schedd::new("schedd", ThrottlePolicy::Disabled);
+        s.submit_transaction(specs(100), SimTime::ZERO);
+        assert_eq!(s.jobs.len(), 100);
+        assert_eq!(s.idle_count(), 100);
+        assert_eq!(s.log.count(EventKind::Submitted), 100);
+    }
+
+    #[test]
+    fn full_lifecycle_updates_state_and_log() {
+        let mut s = Schedd::new("schedd", ThrottlePolicy::Disabled);
+        s.submit_transaction(specs(1), SimTime::ZERO);
+        assert!(s.take_idle(0));
+        let started = s.job_matched(0, SimTime::from_secs(1));
+        assert_eq!(started, vec![0], "unthrottled: starts immediately");
+        s.input_started(0, SimTime::from_secs(1));
+        s.input_done(0, SimTime::from_secs(31));
+        s.run_done(0, SimTime::from_secs(36));
+        s.job_completed(0, SimTime::from_secs(37));
+        let j = s.job(0);
+        assert_eq!(j.state, JobState::Completed);
+        assert_eq!(j.input_transfer_duration(), Some(SimTime::from_secs(30)));
+        assert_eq!(s.makespan(), Some(SimTime::from_secs(37)));
+        assert!(s.all_completed());
+    }
+
+    #[test]
+    fn throttled_transfers_wait() {
+        let mut s = Schedd::new("schedd", ThrottlePolicy::MaxConcurrent(1));
+        s.submit_transaction(specs(3), SimTime::ZERO);
+        for p in 0..3 {
+            s.take_idle(p);
+        }
+        assert_eq!(s.job_matched(0, SimTime::ZERO), vec![0]);
+        assert_eq!(s.job_matched(1, SimTime::ZERO), vec![], "queued");
+        assert_eq!(s.job_matched(2, SimTime::ZERO), vec![]);
+        s.input_started(0, SimTime::ZERO);
+        let next = s.input_done(0, SimTime::from_secs(10));
+        assert_eq!(next, vec![1], "release admits next");
+    }
+
+    #[test]
+    fn claim_reuse_order() {
+        let mut s = Schedd::new("schedd", ThrottlePolicy::Disabled);
+        s.submit_transaction(specs(3), SimTime::ZERO);
+        assert_eq!(s.take_next_idle(), Some(0));
+        assert_eq!(s.take_next_idle(), Some(1));
+        assert!(s.take_idle(2));
+        assert_eq!(s.take_next_idle(), None);
+    }
+
+    #[test]
+    fn makespan_none_until_done() {
+        let mut s = Schedd::new("schedd", ThrottlePolicy::Disabled);
+        s.submit_transaction(specs(1), SimTime::ZERO);
+        assert!(s.makespan().is_none());
+    }
+}

@@ -1,0 +1,183 @@
+//! The startd: one per worker node, advertising execute slots and running
+//! starters. In the paper's tests the workers were Kubernetes pods
+//! providing 200 single-core slots in total.
+
+use crate::classad::Ad;
+use crate::jobs::JobId;
+
+/// Pool-unique slot identifier: (worker index, slot index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SlotId {
+    pub worker: u32,
+    pub slot: u32,
+}
+
+impl std::fmt::Display for SlotId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "slot{}@worker{}", self.slot, self.worker)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    /// Advertising, no claim.
+    Unclaimed,
+    /// Claimed by the schedd; idle between jobs (claim reuse).
+    ClaimedIdle,
+    /// A starter is processing a job (transfer or execution).
+    ClaimedBusy,
+}
+
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub id: SlotId,
+    pub state: SlotState,
+    pub job: Option<JobId>,
+}
+
+/// One worker node's startd.
+#[derive(Debug)]
+pub struct Startd {
+    pub worker: u32,
+    pub slots: Vec<Slot>,
+    /// Node attributes advertised in every slot ad.
+    cpus_per_slot: i64,
+    memory_per_slot: i64,
+}
+
+impl Startd {
+    pub fn new(worker: u32, n_slots: u32) -> Startd {
+        Startd {
+            worker,
+            slots: (0..n_slots)
+                .map(|slot| Slot {
+                    id: SlotId { worker, slot },
+                    state: SlotState::Unclaimed,
+                    job: None,
+                })
+                .collect(),
+            cpus_per_slot: 1,
+            memory_per_slot: 4096,
+        }
+    }
+
+    /// The ClassAd a slot advertises to the collector.
+    pub fn slot_ad(&self, slot: u32) -> Ad {
+        let s = &self.slots[slot as usize];
+        let mut ad = Ad::new("Machine");
+        ad.insert("Name", s.id.to_string());
+        ad.insert("SlotID", slot as i64 + 1);
+        ad.insert("Cpus", self.cpus_per_slot);
+        ad.insert("Memory", self.memory_per_slot);
+        ad.insert("HasFileTransfer", true);
+        ad.insert("Arch", "X86_64");
+        ad.insert("OpSys", "LINUX");
+        ad.insert(
+            "State",
+            match s.state {
+                SlotState::Unclaimed => "Unclaimed",
+                SlotState::ClaimedIdle | SlotState::ClaimedBusy => "Claimed",
+            },
+        );
+        ad.insert_expr("Requirements", "TARGET.RequestMemory <= MY.Memory")
+            .expect("static slot requirements");
+        ad
+    }
+
+    pub fn claim(&mut self, slot: u32) -> bool {
+        let s = &mut self.slots[slot as usize];
+        if s.state == SlotState::Unclaimed {
+            s.state = SlotState::ClaimedIdle;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn activate(&mut self, slot: u32, job: JobId) -> bool {
+        let s = &mut self.slots[slot as usize];
+        if s.state == SlotState::ClaimedIdle {
+            s.state = SlotState::ClaimedBusy;
+            s.job = Some(job);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Starter finished; claim is retained for the next job (HTCondor
+    /// claim reuse — crucial for back-to-back transfer scheduling).
+    pub fn deactivate(&mut self, slot: u32) {
+        let s = &mut self.slots[slot as usize];
+        debug_assert_eq!(s.state, SlotState::ClaimedBusy);
+        s.state = SlotState::ClaimedIdle;
+        s.job = None;
+    }
+
+    pub fn release(&mut self, slot: u32) {
+        let s = &mut self.slots[slot as usize];
+        s.state = SlotState::Unclaimed;
+        s.job = None;
+    }
+
+    pub fn count(&self, state: SlotState) -> usize {
+        self.slots.iter().filter(|s| s.state == state).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jid() -> JobId {
+        JobId { cluster: 1, proc: 0 }
+    }
+
+    #[test]
+    fn slot_lifecycle() {
+        let mut sd = Startd::new(0, 2);
+        assert_eq!(sd.count(SlotState::Unclaimed), 2);
+        assert!(sd.claim(0));
+        assert!(!sd.claim(0), "double claim refused");
+        assert!(sd.activate(0, jid()));
+        assert!(!sd.activate(0, jid()), "busy slot refuses");
+        assert_eq!(sd.count(SlotState::ClaimedBusy), 1);
+        sd.deactivate(0);
+        assert_eq!(sd.slots[0].state, SlotState::ClaimedIdle, "claim reused");
+        assert!(sd.slots[0].job.is_none());
+        sd.release(0);
+        assert_eq!(sd.count(SlotState::Unclaimed), 2);
+    }
+
+    #[test]
+    fn activate_requires_claim() {
+        let mut sd = Startd::new(0, 1);
+        assert!(!sd.activate(0, jid()));
+    }
+
+    #[test]
+    fn slot_ad_shape() {
+        let sd = Startd::new(3, 1);
+        let ad = sd.slot_ad(0);
+        assert_eq!(ad.get_str("Name").unwrap(), "slot0@worker3");
+        assert_eq!(ad.get_bool("HasFileTransfer"), Some(true));
+        assert_eq!(ad.get_str("State").unwrap(), "Unclaimed");
+        // A matching job matches the ad bilaterally.
+        let job = crate::jobs::build_job_ad(&crate::jobs::JobSpec {
+            id: jid(),
+            owner: "a".into(),
+            input_file: "f".into(),
+            input_bytes: crate::util::units::Bytes::gib(2),
+            output_bytes: crate::util::units::Bytes::kib(4),
+            runtime_median_s: 5.0,
+        });
+        assert!(crate::classad::matches(&job, &ad).unwrap());
+    }
+
+    #[test]
+    fn claimed_ad_state() {
+        let mut sd = Startd::new(0, 1);
+        sd.claim(0);
+        assert_eq!(sd.slot_ad(0).get_str("State").unwrap(), "Claimed");
+    }
+}

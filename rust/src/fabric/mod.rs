@@ -1,0 +1,12 @@
+//! Real-mode fabric: actual sealed bytes over TCP loopback.
+//!
+//! The same transfer architecture as the simulator — all sandbox data
+//! flowing through the submit node's file server, authenticated and
+//! sealed end-to-end — but with real sockets, real crypto (through the
+//! PJRT artifact when requested), and wall-clock time. Used by
+//! `examples/quickstart.rs` and the end-to-end tests; this is the proof
+//! that all three layers compose.
+
+pub mod tcp;
+
+pub use tcp::{FileServer, RealPoolConfig, RealPoolReport, run_real_pool};

@@ -1,0 +1,469 @@
+//! TCP loopback fabric: a submit-node file server and worker clients
+//! moving real sealed bytes through the full protocol stack:
+//!
+//! ```text
+//! worker                          submit file server
+//!   | ---- ClientHello ------------> |        (16B nonce + methods)
+//!   | <--- ServerHello ------------- |        (nonce, method, MAC)
+//!   | ---- client MAC -------------> |        (mutual auth done)
+//!   | ---- file request -----------> |        (u32 len + name)
+//!   | <--- sealed input stream ----- |        (transfer::stream)
+//!   | ---- sealed output stream ---> |        (job output sandbox)
+//! ```
+//!
+//! The server funnels all sealing through one crypto-service thread
+//! (optionally the PJRT artifact engine) — the submit node is the data hot
+//! spot, exactly as in the paper.
+
+use crate::jobs::JobSpec;
+use crate::runtime::engine::{NativeEngine, SealEngine};
+use crate::runtime::service::{EngineHandle, EngineService};
+use crate::security::session::{self, PoolKey};
+use crate::security::Method;
+use crate::transfer::stream::{recv_stream, send_stream, StreamStats};
+use crate::util::{OnlineStats, Prng};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes()).context("write u32")
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("read u32")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn method_code(m: Method) -> u8 {
+    match m {
+        Method::Chacha20 => 1,
+        Method::Aes256Ctr => 2,
+        Method::Plain => 3,
+    }
+}
+
+fn method_from(code: u8) -> Option<Method> {
+    match code {
+        1 => Some(Method::Chacha20),
+        2 => Some(Method::Aes256Ctr),
+        3 => Some(Method::Plain),
+        _ => None,
+    }
+}
+
+/// Server side of the wire handshake. Returns the session.
+fn server_handshake(sock: &mut TcpStream, key: &PoolKey, rng: &mut Prng) -> Result<session::Session> {
+    let mut client_nonce = [0u8; 16];
+    sock.read_exact(&mut client_nonce)?;
+    let n_methods = read_u32(sock)? as usize;
+    if n_methods == 0 || n_methods > 8 {
+        bail!("bad method count {n_methods}");
+    }
+    let mut methods = Vec::new();
+    for _ in 0..n_methods {
+        let mut b = [0u8; 1];
+        sock.read_exact(&mut b)?;
+        methods.push(method_from(b[0]).ok_or_else(|| anyhow!("unknown method {}", b[0]))?);
+    }
+    let hello = session::client_hello(client_nonce, &methods);
+
+    let mut server_nonce = [0u8; 16];
+    rng.fill_bytes(&mut server_nonce);
+    let reply = session::server_respond(key, &hello, server_nonce, &[Method::Chacha20, Method::Aes256Ctr])?;
+    sock.write_all(&reply.server_nonce)?;
+    sock.write_all(&[method_code(reply.method)])?;
+    sock.write_all(&reply.server_mac)?;
+
+    let mut client_mac = [0u8; 32];
+    sock.read_exact(&mut client_mac)?;
+    Ok(session::server_finish(key, &hello, &reply, &client_mac)?)
+}
+
+/// Client side of the wire handshake.
+fn client_handshake(
+    sock: &mut TcpStream,
+    key: &PoolKey,
+    rng: &mut Prng,
+    methods: &[Method],
+) -> Result<session::Session> {
+    let mut client_nonce = [0u8; 16];
+    rng.fill_bytes(&mut client_nonce);
+    let hello = session::client_hello(client_nonce, methods);
+    sock.write_all(&client_nonce)?;
+    write_u32(sock, methods.len() as u32)?;
+    for m in methods {
+        sock.write_all(&[method_code(*m)])?;
+    }
+
+    let mut server_nonce = [0u8; 16];
+    sock.read_exact(&mut server_nonce)?;
+    let mut mb = [0u8; 1];
+    sock.read_exact(&mut mb)?;
+    let method = method_from(mb[0]).ok_or_else(|| anyhow!("bad method byte"))?;
+    let mut server_mac = [0u8; 32];
+    sock.read_exact(&mut server_mac)?;
+    let reply = session::ServerHello {
+        server_nonce,
+        method,
+        server_mac,
+    };
+    let (mac, sess) = session::client_finish(key, &hello, &reply)?;
+    sock.write_all(&mac)?;
+    Ok(sess)
+}
+
+/// The submit-node file server: serves named in-memory files (the paper's
+/// hard-linked dataset) over sealed streams; receives output sandboxes.
+pub struct FileServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    pub bytes_served: Arc<AtomicU64>,
+    pub outputs_received: Arc<AtomicU64>,
+}
+
+impl FileServer {
+    /// Start serving. `files` maps name -> content (hardlinks = shared
+    /// `Arc<Vec<u8>>`). `engine` is the submit-side crypto service handle.
+    pub fn start(
+        files: HashMap<String, Arc<Vec<u8>>>,
+        pool_key: PoolKey,
+        engine: EngineHandle,
+        chunk_words: usize,
+    ) -> Result<FileServer> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind file server")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let bytes_served = Arc::new(AtomicU64::new(0));
+        let outputs_received = Arc::new(AtomicU64::new(0));
+
+        let stop2 = stop.clone();
+        let bytes2 = bytes_served.clone();
+        let outputs2 = outputs_received.clone();
+        let thread = std::thread::Builder::new()
+            .name("htcdm-fileserver".into())
+            .spawn(move || {
+                let mut conn_seq: u64 = 0;
+                let mut threads = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((sock, _)) => {
+                            conn_seq += 1;
+                            let files = files.clone();
+                            let key = pool_key.clone();
+                            let mut eng = engine.clone();
+                            let bytes3 = bytes2.clone();
+                            let outputs3 = outputs2.clone();
+                            let seq = conn_seq;
+                            threads.push(std::thread::spawn(move || {
+                                let mut rng = Prng::new(0xF11E_5E17 ^ seq);
+                                if let Err(e) = serve_one(
+                                    sock, &files, &key, &mut eng, &mut rng, chunk_words, &bytes3,
+                                    &outputs3,
+                                ) {
+                                    log::warn!("connection {seq}: {e:#}");
+                                }
+                            }));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(e) => {
+                            log::warn!("accept: {e}");
+                            break;
+                        }
+                    }
+                }
+                for t in threads {
+                    let _ = t.join();
+                }
+            })
+            .context("spawn file server")?;
+        Ok(FileServer {
+            addr,
+            stop,
+            thread: Some(thread),
+            bytes_served,
+            outputs_received,
+        })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for FileServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_one(
+    mut sock: TcpStream,
+    files: &HashMap<String, Arc<Vec<u8>>>,
+    key: &PoolKey,
+    engine: &mut EngineHandle,
+    rng: &mut Prng,
+    chunk_words: usize,
+    bytes_served: &AtomicU64,
+    outputs_received: &AtomicU64,
+) -> Result<()> {
+    sock.set_nodelay(true).ok();
+    let sess = server_handshake(&mut sock, key, rng)?;
+
+    // File request.
+    let name_len = read_u32(&mut sock)? as usize;
+    if name_len > 4096 {
+        bail!("file name too long");
+    }
+    let mut name_buf = vec![0u8; name_len];
+    sock.read_exact(&mut name_buf)?;
+    let name = String::from_utf8(name_buf).context("file name utf8")?;
+    let content = files
+        .get(&name)
+        .ok_or_else(|| anyhow!("no such input file '{name}'"))?
+        .clone();
+
+    let stats = send_stream(
+        &mut sock,
+        engine,
+        &sess.key_words,
+        &sess.nonce_words,
+        &content,
+        chunk_words,
+    )?;
+    bytes_served.fetch_add(stats.payload_bytes, Ordering::Relaxed);
+
+    // Output sandbox comes back on the same session. The output stream's
+    // counters continue after the input's (no keystream reuse).
+    let mut rx_engine = NativeEngine::new(sess.method);
+    let (_output, _ostats) = recv_stream(
+        &mut sock,
+        &mut rx_engine,
+        &sess.key_words,
+        &sess.nonce_words,
+    )?;
+    outputs_received.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
+/// One worker job cycle against the server: handshake, fetch input,
+/// validate, send output. Returns (input stats, wall seconds).
+pub fn run_job(
+    addr: std::net::SocketAddr,
+    pool_key: &PoolKey,
+    spec_input: &str,
+    output: &[u8],
+    rng: &mut Prng,
+) -> Result<(StreamStats, f64)> {
+    let t0 = std::time::Instant::now();
+    let mut sock = TcpStream::connect(addr).context("connect to submit")?;
+    sock.set_nodelay(true).ok();
+    let sess = client_handshake(&mut sock, pool_key, rng, &[Method::Chacha20, Method::Aes256Ctr])?;
+
+    write_u32(&mut sock, spec_input.len() as u32)?;
+    sock.write_all(spec_input.as_bytes())?;
+
+    let mut engine = NativeEngine::new(sess.method);
+    let (_input, stats) = recv_stream(&mut sock, &mut engine, &sess.key_words, &sess.nonce_words)?;
+
+    // "Run" the validation script: the data is already integrity-checked
+    // frame by frame; job output is tiny, as in the paper.
+    let mut tx_engine = NativeEngine::new(sess.method);
+    send_stream(
+        &mut sock,
+        &mut tx_engine,
+        &sess.key_words,
+        &sess.nonce_words,
+        output,
+        256,
+    )?;
+    Ok((stats, t0.elapsed().as_secs_f64()))
+}
+
+/// Configuration for a real-mode pool run.
+#[derive(Debug, Clone)]
+pub struct RealPoolConfig {
+    pub n_jobs: u32,
+    pub workers: u32,
+    pub input_bytes: usize,
+    pub output_bytes: usize,
+    pub chunk_words: usize,
+    /// Use the PJRT artifact engine on the submit side (requires
+    /// `make artifacts`); falls back to native if unavailable.
+    pub use_xla_engine: bool,
+    pub passphrase: String,
+}
+
+impl Default for RealPoolConfig {
+    fn default() -> Self {
+        RealPoolConfig {
+            n_jobs: 40,
+            workers: 4,
+            input_bytes: 4 << 20,
+            output_bytes: 4096,
+            chunk_words: crate::transfer::stream::DEFAULT_CHUNK_WORDS,
+            use_xla_engine: true,
+            passphrase: "htcdm-pool".into(),
+        }
+    }
+}
+
+/// Results of a real-mode pool run.
+#[derive(Debug)]
+pub struct RealPoolReport {
+    pub jobs_completed: u32,
+    pub total_payload_bytes: u64,
+    pub wall_secs: f64,
+    pub gbps: f64,
+    pub transfer_secs: OnlineStats,
+    pub engine_desc: String,
+    pub errors: u32,
+}
+
+/// Run a full real-mode pool on loopback: a submit file server with the
+/// hard-linked dataset and `workers` worker threads pulling jobs.
+pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
+    let pool_key = PoolKey::from_passphrase(&cfg.passphrase);
+
+    // The paper's dataset trick: one extent, many names.
+    let mut extent = vec![0u8; cfg.input_bytes];
+    Prng::new(2021).fill_bytes(&mut extent);
+    let extent = Arc::new(extent);
+    let mut files = HashMap::new();
+    for p in 0..cfg.n_jobs {
+        files.insert(format!("input_{p}"), extent.clone());
+    }
+
+    // Submit-side crypto service: PJRT artifact if available.
+    let use_xla = cfg.use_xla_engine;
+    let service = EngineService::spawn(move || {
+        if use_xla {
+            let dir = crate::runtime::Manifest::default_dir();
+            match crate::runtime::Manifest::load(&dir).and_then(|m| {
+                crate::runtime::SealRuntime::load(&m, &["64k"])
+            }) {
+                Ok(rt) => {
+                    return Ok(Box::new(crate::runtime::engine::XlaEngine::new(rt))
+                        as Box<dyn SealEngine>)
+                }
+                Err(e) => log::warn!("xla engine unavailable ({e:#}); using native"),
+            }
+        }
+        Ok(Box::new(NativeEngine::new(Method::Chacha20)) as Box<dyn SealEngine>)
+    });
+    let engine_desc = service.handle().describe();
+
+    let mut server = FileServer::start(files, pool_key.clone(), service.handle(), cfg.chunk_words)?;
+
+    let queue: Arc<Mutex<Vec<JobSpec>>> = Arc::new(Mutex::new(
+        crate::workload::benchmark_burst(
+            cfg.n_jobs,
+            crate::util::units::Bytes(cfg.input_bytes as u64),
+            crate::util::units::Bytes(cfg.output_bytes as u64),
+        )
+        .into_iter()
+        .rev()
+        .collect(),
+    ));
+
+    let t0 = std::time::Instant::now();
+    let stats = Arc::new(Mutex::new((OnlineStats::new(), 0u64, 0u32))); // (times, bytes, errors)
+    let mut worker_threads = Vec::new();
+    for w in 0..cfg.workers {
+        let queue = queue.clone();
+        let stats = stats.clone();
+        let key = pool_key.clone();
+        let addr = server.addr;
+        let out_bytes = cfg.output_bytes;
+        worker_threads.push(std::thread::spawn(move || {
+            let mut rng = Prng::new(0xBEEF_0000 + w as u64);
+            let output = vec![0xA5u8; out_bytes];
+            loop {
+                let job = queue.lock().unwrap().pop();
+                let Some(job) = job else { break };
+                match run_job(addr, &key, &job.input_file, &output, &mut rng) {
+                    Ok((st, secs)) => {
+                        let mut s = stats.lock().unwrap();
+                        s.0.push(secs);
+                        s.1 += st.payload_bytes;
+                    }
+                    Err(e) => {
+                        log::error!("job {} failed: {e:#}", job.id);
+                        stats.lock().unwrap().2 += 1;
+                    }
+                }
+            }
+        }));
+    }
+    for t in worker_threads {
+        t.join().map_err(|_| anyhow!("worker thread panicked"))?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    server.stop();
+
+    let (times, bytes, errors) = {
+        let s = stats.lock().unwrap();
+        (s.0.clone(), s.1, s.2)
+    };
+    Ok(RealPoolReport {
+        jobs_completed: cfg.n_jobs - errors,
+        total_payload_bytes: bytes,
+        wall_secs: wall,
+        gbps: bytes as f64 * 8.0 / wall / 1e9,
+        transfer_secs: times,
+        engine_desc,
+        errors,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_pool_native_roundtrip() {
+        let cfg = RealPoolConfig {
+            n_jobs: 8,
+            workers: 2,
+            input_bytes: 256 << 10,
+            output_bytes: 1024,
+            chunk_words: 1024, // 4 KiB frames keep the test quick
+            use_xla_engine: false,
+            passphrase: "test".into(),
+        };
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.jobs_completed, 8);
+        assert_eq!(r.total_payload_bytes, 8 * (256 << 10) as u64);
+        assert!(r.gbps > 0.0);
+        assert_eq!(r.transfer_secs.count(), 8);
+    }
+
+    #[test]
+    fn wrong_passphrase_fails_auth() {
+        let key_good = PoolKey::from_passphrase("right");
+        let files: HashMap<String, Arc<Vec<u8>>> =
+            [("f".to_string(), Arc::new(vec![1u8; 1024]))].into();
+        let svc = EngineService::spawn(|| {
+            Ok(Box::new(NativeEngine::new(Method::Chacha20)) as Box<dyn SealEngine>)
+        });
+        let mut server = FileServer::start(files, key_good, svc.handle(), 256).unwrap();
+        let bad = PoolKey::from_passphrase("wrong");
+        let mut rng = Prng::new(1);
+        let err = run_job(server.addr, &bad, "f", &[0u8; 16], &mut rng);
+        assert!(err.is_err(), "bad pool key must fail the handshake");
+        server.stop();
+    }
+}

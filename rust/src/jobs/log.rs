@@ -1,0 +1,163 @@
+//! Condor-style user event log: the flat-file event stream users tail to
+//! watch their jobs (`000 Job submitted`, `040 Started transferring input
+//! files`, …). The experiment reports are computed from these events, just
+//! as the paper read its numbers from HTCondor logs.
+
+use super::JobId;
+use crate::util::units::SimTime;
+use std::fmt;
+
+/// Event codes follow HTCondor's userlog numbering where one exists.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Submitted,           // 000
+    Executing,           // 001
+    Terminated,          // 005
+    TransferInputQueued, // 040 (transfer queued)
+    TransferInputBegan,  // 040 (started)
+    TransferInputDone,   // 040 (finished)
+    TransferOutputBegan, // 040
+    TransferOutputDone,  // 040
+    Held,                // 012
+}
+
+impl EventKind {
+    pub fn code(&self) -> u16 {
+        match self {
+            EventKind::Submitted => 0,
+            EventKind::Executing => 1,
+            EventKind::Terminated => 5,
+            EventKind::Held => 12,
+            _ => 40,
+        }
+    }
+
+    pub fn describe(&self) -> &'static str {
+        match self {
+            EventKind::Submitted => "Job submitted",
+            EventKind::Executing => "Job executing",
+            EventKind::Terminated => "Job terminated",
+            EventKind::TransferInputQueued => "Transfer queued: input files",
+            EventKind::TransferInputBegan => "Started transferring input files",
+            EventKind::TransferInputDone => "Finished transferring input files",
+            EventKind::TransferOutputBegan => "Started transferring output files",
+            EventKind::TransferOutputDone => "Finished transferring output files",
+            EventKind::Held => "Job was held",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub t: SimTime,
+    pub job: JobId,
+    pub kind: EventKind,
+}
+
+impl fmt::Display for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{:03} ({}) t+{:.1}s {}",
+            self.kind.code(),
+            self.job,
+            self.t.as_secs_f64(),
+            self.kind.describe()
+        )
+    }
+}
+
+/// An append-only in-memory user log (dumpable to text).
+#[derive(Debug, Default)]
+pub struct UserLog {
+    events: Vec<Event>,
+}
+
+impl UserLog {
+    pub fn new() -> UserLog {
+        UserLog::default()
+    }
+
+    pub fn record(&mut self, t: SimTime, job: JobId, kind: EventKind) {
+        self.events.push(Event { t, job, kind });
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn count(&self, kind: EventKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+
+    /// Events of one job, in order.
+    pub fn job_events(&self, job: JobId) -> Vec<Event> {
+        self.events.iter().copied().filter(|e| e.job == job).collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for e in &self.events {
+            s.push_str(&e.to_string());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jid(p: u32) -> JobId {
+        JobId { cluster: 1, proc: p }
+    }
+
+    #[test]
+    fn records_and_counts() {
+        let mut log = UserLog::new();
+        log.record(SimTime::ZERO, jid(0), EventKind::Submitted);
+        log.record(SimTime::from_secs(1), jid(1), EventKind::Submitted);
+        log.record(SimTime::from_secs(2), jid(0), EventKind::Executing);
+        assert_eq!(log.count(EventKind::Submitted), 2);
+        assert_eq!(log.count(EventKind::Executing), 1);
+        assert_eq!(log.job_events(jid(0)).len(), 2);
+    }
+
+    #[test]
+    fn event_ordering_preserved() {
+        let mut log = UserLog::new();
+        for k in [
+            EventKind::Submitted,
+            EventKind::TransferInputQueued,
+            EventKind::TransferInputBegan,
+            EventKind::TransferInputDone,
+            EventKind::Executing,
+            EventKind::Terminated,
+        ] {
+            log.record(SimTime::ZERO, jid(0), k);
+        }
+        let evs = log.job_events(jid(0));
+        assert_eq!(evs.first().unwrap().kind, EventKind::Submitted);
+        assert_eq!(evs.last().unwrap().kind, EventKind::Terminated);
+    }
+
+    #[test]
+    fn render_format() {
+        let mut log = UserLog::new();
+        log.record(SimTime::from_secs(90), jid(3), EventKind::Terminated);
+        let text = log.render();
+        assert!(text.contains("005"));
+        assert!(text.contains("(1.3)"));
+        assert!(text.contains("Job terminated"));
+    }
+
+    #[test]
+    fn codes_match_htcondor() {
+        assert_eq!(EventKind::Submitted.code(), 0);
+        assert_eq!(EventKind::Executing.code(), 1);
+        assert_eq!(EventKind::Terminated.code(), 5);
+        assert_eq!(EventKind::Held.code(), 12);
+        assert_eq!(EventKind::TransferInputDone.code(), 40);
+    }
+}

@@ -1,0 +1,216 @@
+//! Job system: submit descriptions, job ClassAds, lifecycle state machine
+//! and the condor-style user event log.
+//!
+//! A submit description is the HTCondor submit-file dialect the paper's
+//! test used — one transaction queueing 10k jobs, each with a unique input
+//! file:
+//!
+//! ```text
+//! executable = validate.sh
+//! transfer_input_files = input_$(Process)
+//! request_memory = 128
+//! queue 10000
+//! ```
+
+pub mod log;
+pub mod submit;
+
+use crate::classad::Ad;
+use crate::util::units::{Bytes, SimTime};
+
+/// Pool-unique job identifier (cluster.proc, as in HTCondor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId {
+    pub cluster: u32,
+    pub proc: u32,
+}
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}.{}", self.cluster, self.proc)
+    }
+}
+
+/// Job lifecycle states (the subset of HTCondor's that data movement
+/// exercises).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// In the queue, unmatched.
+    Idle,
+    /// Matched to a slot; input sandbox waiting in the transfer queue.
+    TransferQueued,
+    /// Input sandbox streaming to the worker.
+    TransferringInput,
+    /// Executing on the worker.
+    Running,
+    /// Output sandbox streaming back.
+    TransferringOutput,
+    /// Done; left the queue.
+    Completed,
+    /// Held after an error.
+    Held,
+}
+
+/// Everything the engine needs to move and run one job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub owner: String,
+    /// Input sandbox file name (resolved in the submit node's storage).
+    pub input_file: String,
+    pub input_bytes: Bytes,
+    pub output_bytes: Bytes,
+    /// Requested wall time of the payload (sampled at run time around
+    /// this median — the paper's validation script ran ~5 s).
+    pub runtime_median_s: f64,
+}
+
+/// A job in the schedd queue: spec + mutable lifecycle record.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub ad: Ad,
+    /// Timestamps for the report (all virtual time).
+    pub t_submitted: SimTime,
+    pub t_matched: Option<SimTime>,
+    pub t_transfer_queued: Option<SimTime>,
+    pub t_input_started: Option<SimTime>,
+    pub t_input_done: Option<SimTime>,
+    pub t_run_done: Option<SimTime>,
+    pub t_completed: Option<SimTime>,
+}
+
+impl Job {
+    pub fn new(spec: JobSpec, submitted: SimTime) -> Job {
+        let ad = build_job_ad(&spec);
+        Job {
+            spec,
+            state: JobState::Idle,
+            ad,
+            t_submitted: submitted,
+            t_matched: None,
+            t_transfer_queued: None,
+            t_input_started: None,
+            t_input_done: None,
+            t_run_done: None,
+            t_completed: None,
+        }
+    }
+
+    /// Input transfer duration as the user log reports it: from entering
+    /// the transfer queue to transfer completion (includes queue wait).
+    pub fn input_transfer_duration(&self) -> Option<SimTime> {
+        Some(self.t_input_done?.since(self.t_transfer_queued?))
+    }
+
+    /// Wire-only input transfer duration (excludes queue wait).
+    pub fn input_wire_duration(&self) -> Option<SimTime> {
+        Some(self.t_input_done?.since(self.t_input_started?))
+    }
+
+    pub fn run_duration(&self) -> Option<SimTime> {
+        Some(self.t_run_done?.since(self.t_input_done?))
+    }
+}
+
+/// Build the job's ClassAd (what the schedd sends to the negotiator).
+pub fn build_job_ad(spec: &JobSpec) -> Ad {
+    let mut ad = Ad::new("Job");
+    ad.insert("ClusterId", spec.id.cluster as i64);
+    ad.insert("ProcId", spec.id.proc as i64);
+    ad.insert("Owner", spec.owner.as_str());
+    ad.insert("TransferInput", spec.input_file.as_str());
+    ad.insert("TransferInputSizeMB", (spec.input_bytes.0 / 1_000_000) as i64);
+    ad.insert("RequestCpus", 1i64);
+    ad.insert("RequestMemory", 128i64);
+    ad.insert_expr(
+        "Requirements",
+        "TARGET.HasFileTransfer && TARGET.Cpus >= MY.RequestCpus \
+         && TARGET.Memory >= MY.RequestMemory",
+    )
+    .expect("static requirements parse");
+    ad
+}
+
+/// Signature used for autoclustering: jobs whose matchmaking-relevant
+/// attributes are identical share one autocluster and are matched once per
+/// negotiation cycle (HTCondor's optimization, essential at 10k jobs).
+pub fn autocluster_signature(ad: &Ad) -> String {
+    let mut sig = String::new();
+    for attr in ["requirements", "requestcpus", "requestmemory", "rank"] {
+        if let Some(e) = ad.get_expr(attr) {
+            sig.push_str(&format!("{attr}={e};"));
+        }
+    }
+    sig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(proc_: u32) -> JobSpec {
+        JobSpec {
+            id: JobId {
+                cluster: 1,
+                proc: proc_,
+            },
+            owner: "alice".into(),
+            input_file: format!("input_{proc_}"),
+            input_bytes: Bytes::gib(2),
+            output_bytes: Bytes::kib(4),
+            runtime_median_s: 5.0,
+        }
+    }
+
+    #[test]
+    fn job_ad_matches_capable_slot() {
+        let job = Job::new(spec(0), SimTime::ZERO);
+        let mut slot = Ad::new("Machine");
+        slot.insert("HasFileTransfer", true);
+        slot.insert("Cpus", 8i64);
+        slot.insert("Memory", 16384i64);
+        assert!(crate::classad::matches(&job.ad, &slot).unwrap());
+    }
+
+    #[test]
+    fn job_ad_rejects_incapable_slot() {
+        let job = Job::new(spec(0), SimTime::ZERO);
+        let mut slot = Ad::new("Machine");
+        slot.insert("HasFileTransfer", false);
+        slot.insert("Cpus", 8i64);
+        slot.insert("Memory", 16384i64);
+        assert!(!crate::classad::matches(&job.ad, &slot).unwrap());
+    }
+
+    #[test]
+    fn autocluster_groups_identical_jobs() {
+        let a = Job::new(spec(0), SimTime::ZERO);
+        let b = Job::new(spec(1), SimTime::ZERO);
+        assert_eq!(
+            autocluster_signature(&a.ad),
+            autocluster_signature(&b.ad),
+            "same requirements → same autocluster"
+        );
+        let mut c = Job::new(spec(2), SimTime::ZERO);
+        c.ad.insert_expr("Rank", "TARGET.KFlops").unwrap();
+        assert_ne!(autocluster_signature(&a.ad), autocluster_signature(&c.ad));
+    }
+
+    #[test]
+    fn transfer_durations() {
+        let mut j = Job::new(spec(0), SimTime::ZERO);
+        assert!(j.input_transfer_duration().is_none());
+        j.t_transfer_queued = Some(SimTime::from_secs(10));
+        j.t_input_started = Some(SimTime::from_secs(70));
+        j.t_input_done = Some(SimTime::from_secs(100));
+        assert_eq!(j.input_transfer_duration(), Some(SimTime::from_secs(90)));
+        assert_eq!(j.input_wire_duration(), Some(SimTime::from_secs(30)));
+    }
+
+    #[test]
+    fn jobid_display() {
+        assert_eq!(JobId { cluster: 12, proc: 3 }.to_string(), "12.3");
+    }
+}

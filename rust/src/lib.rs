@@ -1,0 +1,54 @@
+//! # htcdm — HTCondor-style data movement at 100 Gbps
+//!
+//! A from-scratch reproduction of the system benchmarked in
+//! *"HTCondor data movement at 100 Gbps"* (Sfiligoi, Würthwein, DeFanti,
+//! Graham — eScience 2021): a distributed high-throughput workload manager
+//! whose native file-transfer architecture routes every job's sandbox
+//! through the submit node, with end-to-end authentication, encryption and
+//! integrity checking.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: ClassAd matchmaking, a schedd
+//!   with a job queue and transfer queue, startds with execute slots,
+//!   shadow/starter transfer endpoints, and two interchangeable fabrics:
+//!   a fluid-flow network *simulator* calibrated to the paper's testbed
+//!   (100 Gbps NICs, cross-US WAN, Calico VPN overlay) and a *real* TCP
+//!   fabric that moves actual sealed bytes.
+//! * **L2 (python/compile/model.py)** — the sealed-transfer pipeline as a
+//!   JAX computation, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/chacha.py)** — the Pallas kernel: fused
+//!   ChaCha20 + poly16 integrity digest.
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT C API and
+//! executes them from the transfer hot path — Python is never on the
+//! request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use htcdm::coordinator::experiment::{Experiment, Scenario};
+//!
+//! // Reproduce the paper's Fig. 1 (LAN, 10k jobs, 200 slots):
+//! let report = Experiment::scenario(Scenario::LanPaper).run().unwrap();
+//! println!("sustained {:.1} Gbps", report.sustained_gbps());
+//! ```
+
+pub mod classad;
+pub mod config;
+pub mod coordinator;
+pub mod daemons;
+pub mod fabric;
+pub mod jobs;
+pub mod metrics;
+pub mod netsim;
+pub mod runtime;
+pub mod security;
+pub mod sim;
+pub mod storage;
+pub mod transfer;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

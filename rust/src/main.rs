@@ -1,0 +1,153 @@
+//! `htcdm` CLI — leader entrypoint.
+//!
+//! ```text
+//! htcdm experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay> [--scale N] [--csv FILE]
+//! htcdm pool [--jobs N] [--workers W] [--mb SIZE] [--native]
+//! htcdm submit <submit-file>       # parse + print the expanded transaction
+//! htcdm verify                     # cross-check PJRT artifact vs native engine
+//! htcdm sizing                     # the paper's §II steady-state arithmetic
+//! ```
+
+use htcdm::coordinator::{Experiment, Scenario};
+use htcdm::fabric::{run_real_pool, RealPoolConfig};
+use htcdm::jobs::submit::parse_submit;
+use htcdm::runtime::engine::{Kind, NativeEngine, SealEngine, VerifyingEngine, XlaEngine};
+use htcdm::runtime::{Manifest, SealRuntime};
+use htcdm::security::Method;
+use htcdm::util::Prng;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: htcdm <command>\n\
+         \n\
+         commands:\n\
+           experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay> [--scale N] [--csv FILE]\n\
+                      run a paper experiment on the simulated testbed\n\
+           pool       [--jobs N] [--workers W] [--mb SIZE] [--native]\n\
+                      run a real-mode loopback pool (sealed bytes via PJRT)\n\
+           submit     <file>   parse a submit description and print the jobs\n\
+           verify              cross-check the PJRT artifact vs the native engine\n\
+           sizing              print the paper's steady-state pool arithmetic"
+    );
+    std::process::exit(2)
+}
+
+fn arg_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("experiment") => cmd_experiment(&args[1..]),
+        Some("pool") => cmd_pool(&args[1..]),
+        Some("submit") => cmd_submit(&args[1..]),
+        Some("verify") => cmd_verify(),
+        Some("sizing") => {
+            println!(
+                "§II sizing: 20k slots × (3 min transfer / 6 h job) = {:.1} slots in transfer \
+                 (paper rounds to ~200)",
+                htcdm::workload::paper_sizing()
+            );
+            Ok(())
+        }
+        _ => usage(),
+    }
+}
+
+fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
+    let scenario = match args.first().map(|s| s.as_str()) {
+        Some("fig1-lan") => Scenario::LanPaper,
+        Some("fig2-wan") => Scenario::WanPaper,
+        Some("queue-default") => Scenario::LanDefaultQueue,
+        Some("vpn-overlay") => Scenario::LanVpn,
+        _ => usage(),
+    };
+    let scale: u32 = arg_value(args, "--scale")
+        .map(|v| v.parse().expect("--scale N"))
+        .unwrap_or(1);
+    let exp = Experiment::scenario(scenario).scaled(scale);
+    eprintln!("running {} ({} jobs)...", exp.label, exp.spec.n_jobs);
+    let report = exp.run()?;
+    println!(
+        "{}",
+        report.table_row(
+            scenario.paper_sustained_gbps(),
+            scenario.paper_makespan_min()
+        )
+    );
+    println!("\nSubmit-NIC throughput (5-min bins, as in the paper's Fig.):");
+    println!("{}", report.figure(100.0));
+    if let Some(csv) = arg_value(args, "--csv") {
+        std::fs::write(&csv, htcdm::metrics::to_csv(&report.series))?;
+        eprintln!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
+    let cfg = RealPoolConfig {
+        n_jobs: arg_value(args, "--jobs").map(|v| v.parse().unwrap()).unwrap_or(40),
+        workers: arg_value(args, "--workers").map(|v| v.parse().unwrap()).unwrap_or(4),
+        input_bytes: arg_value(args, "--mb")
+            .map(|v| v.parse::<usize>().unwrap() << 20)
+            .unwrap_or(4 << 20),
+        use_xla_engine: !args.iter().any(|a| a == "--native"),
+        ..Default::default()
+    };
+    eprintln!(
+        "real-mode pool: {} jobs × {} MiB over {} workers...",
+        cfg.n_jobs,
+        cfg.input_bytes >> 20,
+        cfg.workers
+    );
+    let r = run_real_pool(cfg)?;
+    println!(
+        "engine {} | {} jobs | {:.1} MiB moved | {:.2} s wall | {:.3} Gbps | median transfer {:.3} s | errors {}",
+        r.engine_desc,
+        r.jobs_completed,
+        r.total_payload_bytes as f64 / (1 << 20) as f64,
+        r.wall_secs,
+        r.gbps,
+        r.transfer_secs.median(),
+        r.errors
+    );
+    Ok(())
+}
+
+fn cmd_submit(args: &[String]) -> anyhow::Result<()> {
+    let path = args.first().cloned().unwrap_or_else(|| usage());
+    let text = std::fs::read_to_string(&path)?;
+    let specs = parse_submit(&text, 1)?;
+    println!("transaction: {} jobs", specs.len());
+    for s in specs.iter().take(5) {
+        println!("  {} input={} ({})", s.id, s.input_file, s.input_bytes);
+    }
+    if specs.len() > 5 {
+        println!("  ... and {} more", specs.len() - 5);
+    }
+    Ok(())
+}
+
+fn cmd_verify() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let rt = SealRuntime::load(&manifest, &["probe", "64k"])?;
+    let mut v = VerifyingEngine::new(XlaEngine::new(rt), NativeEngine::new(Method::Chacha20));
+    let mut rng = Prng::new(0xC0FFEE);
+    for round in 0..4u32 {
+        let mut key = [0u32; 8];
+        let mut nonce = [0u32; 3];
+        key.iter_mut().for_each(|k| *k = rng.next_u32());
+        nonce.iter_mut().for_each(|n| *n = rng.next_u32());
+        let mut data: Vec<u32> = (0..1024 * 16).map(|_| rng.next_u32()).collect();
+        v.process(Kind::Seal, &key, &nonce, round * 1024, &mut data)?;
+        v.process(Kind::Unseal, &key, &nonce, round * 1024, &mut data)?;
+    }
+    println!(
+        "OK: {} chunks bit-identical between PJRT artifact and native engine",
+        v.chunks_verified
+    );
+    Ok(())
+}

@@ -1,0 +1,233 @@
+//! Metrics: binned throughput timeseries (the paper's Fig. 1/2 are 5-min
+//! binned network monitor plots) and ASCII rendering for the CLI/benches.
+
+use crate::util::units::{Gbps, SimTime};
+
+/// A time-binned byte counter: bytes carried per fixed-width bin.
+#[derive(Debug, Clone)]
+pub struct BinSeries {
+    bin: SimTime,
+    bins: Vec<f64>,
+}
+
+impl BinSeries {
+    pub fn new(bin: SimTime) -> BinSeries {
+        assert!(bin.0 > 0);
+        BinSeries {
+            bin,
+            bins: Vec::new(),
+        }
+    }
+
+    pub fn bin_width(&self) -> SimTime {
+        self.bin
+    }
+
+    fn ensure(&mut self, idx: usize) {
+        if idx >= self.bins.len() {
+            self.bins.resize(idx + 1, 0.0);
+        }
+    }
+
+    /// Add `bytes` carried uniformly over [t0, t1), spreading across bins.
+    pub fn add_spread(&mut self, t0: SimTime, t1: SimTime, bytes: f64) {
+        if bytes <= 0.0 {
+            return;
+        }
+        if t1 <= t0 {
+            let idx = (t0.0 / self.bin.0) as usize;
+            self.ensure(idx);
+            self.bins[idx] += bytes;
+            return;
+        }
+        let span = (t1.0 - t0.0) as f64;
+        let first = t0.0 / self.bin.0;
+        let last = (t1.0.saturating_sub(1)) / self.bin.0;
+        self.ensure(last as usize);
+        for b in first..=last {
+            let bin_start = b * self.bin.0;
+            let bin_end = bin_start + self.bin.0;
+            let lo = bin_start.max(t0.0);
+            let hi = bin_end.min(t1.0);
+            let frac = (hi.saturating_sub(lo)) as f64 / span;
+            self.bins[b as usize] += bytes * frac;
+        }
+    }
+
+    /// Add all bytes at instant `t`.
+    pub fn add_at(&mut self, t: SimTime, bytes: f64) {
+        self.add_spread(t, t, bytes);
+    }
+
+    /// (bin start time, bytes) pairs.
+    pub fn bins(&self) -> Vec<(SimTime, f64)> {
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (SimTime(i as u64 * self.bin.0), b))
+            .collect()
+    }
+
+    /// Mean throughput per bin, in Gbps (the figure's y-axis).
+    pub fn gbps_series(&self) -> Vec<(SimTime, Gbps)> {
+        let secs = self.bin.as_secs_f64();
+        self.bins()
+            .into_iter()
+            .map(|(t, b)| (t, Gbps::from_bytes_per_sec(b / secs)))
+            .collect()
+    }
+
+    /// Re-bin into a coarser width (must be a multiple of the current one).
+    pub fn rebin(&self, new_bin: SimTime) -> BinSeries {
+        assert!(new_bin.0 >= self.bin.0 && new_bin.0 % self.bin.0 == 0);
+        let k = (new_bin.0 / self.bin.0) as usize;
+        let mut out = BinSeries::new(new_bin);
+        out.bins = self
+            .bins
+            .chunks(k)
+            .map(|c| c.iter().sum::<f64>())
+            .collect();
+        out
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.bins.iter().sum()
+    }
+
+    /// Peak bin throughput in Gbps.
+    pub fn peak_gbps(&self) -> Gbps {
+        let secs = self.bin.as_secs_f64();
+        let peak = self.bins.iter().cloned().fold(0.0, f64::max);
+        Gbps::from_bytes_per_sec(peak / secs)
+    }
+
+    /// Sustained throughput: mean of bins above `frac` of the peak — the
+    /// number one reads off the paper's monitoring screenshots (plateau
+    /// height, ignoring ramp-up/drain bins).
+    pub fn sustained_gbps(&self, frac: f64) -> Gbps {
+        let secs = self.bin.as_secs_f64();
+        let peak = self.bins.iter().cloned().fold(0.0, f64::max);
+        let plateau: Vec<f64> = self
+            .bins
+            .iter()
+            .cloned()
+            .filter(|&b| b >= peak * frac)
+            .collect();
+        if plateau.is_empty() {
+            return Gbps(0.0);
+        }
+        let mean = plateau.iter().sum::<f64>() / plateau.len() as f64;
+        Gbps::from_bytes_per_sec(mean / secs)
+    }
+
+    /// Render the series as an ASCII chart like the paper's monitoring
+    /// page (one row per bin).
+    pub fn ascii_chart(&self, width: usize, cap: Gbps) -> String {
+        let secs = self.bin.as_secs_f64();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:>8} | {:<width$} | Gbps\n",
+            "t",
+            format!("0 .. {cap}"),
+            width = width
+        ));
+        for (t, b) in self.bins() {
+            let gbps = b / secs * 8.0 / 1e9;
+            let n = ((gbps / cap.0) * width as f64).round().clamp(0.0, width as f64) as usize;
+            out.push_str(&format!(
+                "{:>8} | {:<width$} | {:6.1}\n",
+                format!("{:.0}m", t.as_mins_f64()),
+                "█".repeat(n),
+                gbps,
+                width = width
+            ));
+        }
+        out
+    }
+}
+
+/// CSV export of a gbps series ("minute,gbps" rows) for plotting.
+pub fn to_csv(series: &BinSeries) -> String {
+    let mut s = String::from("minute,gbps\n");
+    for (t, g) in series.gbps_series() {
+        s.push_str(&format!("{:.2},{:.3}\n", t.as_mins_f64(), g.0));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spread_across_bins() {
+        let mut s = BinSeries::new(SimTime::from_secs(10));
+        // 100 bytes over [5s, 25s): 25% in bin0, 50% in bin1, 25% in bin2.
+        s.add_spread(SimTime::from_secs(5), SimTime::from_secs(25), 100.0);
+        let bins = s.bins();
+        assert_eq!(bins.len(), 3);
+        assert!((bins[0].1 - 25.0).abs() < 1e-9);
+        assert!((bins[1].1 - 50.0).abs() < 1e-9);
+        assert!((bins[2].1 - 25.0).abs() < 1e-9);
+        assert!((s.total_bytes() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn instant_add() {
+        let mut s = BinSeries::new(SimTime::from_secs(10));
+        s.add_at(SimTime::from_secs(15), 7.0);
+        assert_eq!(s.bins().len(), 2);
+        assert!((s.bins()[1].1 - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gbps_conversion() {
+        let mut s = BinSeries::new(SimTime::from_secs(1));
+        s.add_spread(SimTime::ZERO, SimTime::from_secs(1), 12.5e9); // 100 Gb in 1s
+        let g = s.gbps_series();
+        assert!((g[0].1 .0 - 100.0).abs() < 1e-9);
+        assert!((s.peak_gbps().0 - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rebin_preserves_total() {
+        let mut s = BinSeries::new(SimTime::from_secs(60));
+        for i in 0..10 {
+            s.add_at(SimTime::from_secs(i * 60 + 1), i as f64);
+        }
+        let coarse = s.rebin(SimTime::from_secs(300));
+        assert_eq!(coarse.bins().len(), 2);
+        assert!((coarse.total_bytes() - s.total_bytes()).abs() < 1e-9);
+        assert!((coarse.bins()[0].1 - (0.0 + 1.0 + 2.0 + 3.0 + 4.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sustained_ignores_ramp() {
+        let mut s = BinSeries::new(SimTime::from_secs(1));
+        // ramp 10, plateau 100 ×4, drain 5
+        for (i, v) in [10.0, 100.0, 100.0, 100.0, 100.0, 5.0].iter().enumerate() {
+            s.add_at(SimTime::from_secs(i as u64), v * 1e9 / 8.0);
+        }
+        let sus = s.sustained_gbps(0.5);
+        assert!((sus.0 - 100.0).abs() < 1e-6, "got {sus}");
+        assert!(s.peak_gbps().0 >= sus.0);
+    }
+
+    #[test]
+    fn ascii_chart_shape() {
+        let mut s = BinSeries::new(SimTime::from_secs(60));
+        s.add_at(SimTime::from_secs(30), 60e9 / 8.0 * 60.0);
+        let art = s.ascii_chart(40, Gbps(100.0));
+        assert!(art.contains('█'));
+        assert!(art.lines().count() >= 2);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut s = BinSeries::new(SimTime::from_secs(60));
+        s.add_at(SimTime::ZERO, 1e9);
+        let csv = to_csv(&s);
+        assert!(csv.starts_with("minute,gbps\n"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

@@ -1,0 +1,405 @@
+//! Fluid-flow network simulator: the stand-in for the paper's testbed.
+//!
+//! The PRP testbed (100 Gbps NICs at UCSD, cross-US research backbone,
+//! Calico VPN overlay) is modeled as a set of capacitated *resources*
+//! (NIC tx/rx, backbone segments, per-node VPN-processing capacity) shared
+//! by *flows* under max-min fairness — the standard flow-level abstraction
+//! for aggregate TCP behaviour (cf. SimGrid). Each HTCondor file transfer
+//! is one flow whose path is the sequence of resources it crosses, with a
+//! per-flow rate cap from the TCP model ([`tcp`]).
+//!
+//! The simulator is *event-driven*: between flow arrivals/departures and
+//! capacity changes, rates are constant, so progress integrates exactly.
+//! [`NetSim::next_completion`] tells the experiment engine when the next
+//! flow will finish under current rates.
+
+pub mod calib;
+pub mod solver;
+pub mod tcp;
+pub mod topology;
+
+use crate::metrics::BinSeries;
+use crate::util::units::{Gbps, SimTime};
+use std::collections::HashMap;
+
+/// Index of a capacitated resource (NIC direction, backbone hop, VPN CPU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinkId(pub usize);
+
+/// Identifier of an active flow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FlowId(pub u64);
+
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub name: String,
+    /// Capacity in bytes/sec (already derated by protocol efficiency).
+    pub capacity_bps: f64,
+    /// Cumulative bytes carried (for monitors / figures).
+    pub bytes_carried: f64,
+    /// Optional throughput monitor (binned timeseries).
+    pub monitor: Option<BinSeries>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Flow {
+    pub path: Vec<LinkId>,
+    pub remaining: f64,
+    pub total: f64,
+    /// Per-flow rate cap (bytes/sec) from the TCP model.
+    pub cap_bps: f64,
+    /// Current allocated rate (bytes/sec).
+    pub rate: f64,
+    pub started: SimTime,
+}
+
+/// Statistics returned when a flow completes or is inspected.
+#[derive(Debug, Clone, Copy)]
+pub struct FlowStats {
+    pub bytes: f64,
+    pub started: SimTime,
+    pub finished: SimTime,
+}
+
+impl FlowStats {
+    pub fn duration(&self) -> SimTime {
+        self.finished.since(self.started)
+    }
+    pub fn mean_rate_bps(&self) -> f64 {
+        let d = self.duration().as_secs_f64();
+        if d > 0.0 {
+            self.bytes / d
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct NetSim {
+    links: Vec<Link>,
+    flows: HashMap<FlowId, Flow>,
+    next_flow: u64,
+    now: SimTime,
+    /// True when flow rates are stale and must be re-solved.
+    dirty: bool,
+    /// Incremented on every topology/flow change; used by the engine to
+    /// invalidate stale completion events.
+    pub epoch: u64,
+    solver_scratch: solver::Scratch,
+}
+
+impl Default for NetSim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NetSim {
+    pub fn new() -> NetSim {
+        NetSim {
+            links: Vec::new(),
+            flows: HashMap::new(),
+            next_flow: 0,
+            now: SimTime::ZERO,
+            dirty: false,
+            epoch: 0,
+            solver_scratch: solver::Scratch::default(),
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn add_link(&mut self, name: &str, capacity: Gbps) -> LinkId {
+        self.links.push(Link {
+            name: name.to_string(),
+            capacity_bps: capacity.bytes_per_sec(),
+            bytes_carried: 0.0,
+            monitor: None,
+        });
+        LinkId(self.links.len() - 1)
+    }
+
+    /// Attach a throughput monitor with the given bin width.
+    pub fn monitor_link(&mut self, link: LinkId, bin: SimTime) {
+        self.links[link.0].monitor = Some(BinSeries::new(bin));
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0]
+    }
+
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Change a link's capacity (background-traffic modulation). Takes
+    /// effect from the current instant; callers must have advanced time
+    /// first.
+    pub fn set_capacity(&mut self, link: LinkId, capacity: Gbps) {
+        self.links[link.0].capacity_bps = capacity.bytes_per_sec();
+        self.dirty = true;
+        self.epoch += 1;
+    }
+
+    /// Start a flow of `bytes` along `path` with per-flow cap `cap_bps`.
+    pub fn start_flow(&mut self, path: Vec<LinkId>, bytes: f64, cap_bps: f64) -> FlowId {
+        debug_assert!(bytes > 0.0 && cap_bps > 0.0);
+        debug_assert!(path.iter().all(|l| l.0 < self.links.len()));
+        let id = FlowId(self.next_flow);
+        self.next_flow += 1;
+        self.flows.insert(
+            id,
+            Flow {
+                path,
+                remaining: bytes,
+                total: bytes,
+                cap_bps,
+                rate: 0.0,
+                started: self.now,
+            },
+        );
+        self.dirty = true;
+        self.epoch += 1;
+        id
+    }
+
+    pub fn flow(&self, id: FlowId) -> Option<&Flow> {
+        self.flows.get(&id)
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Re-run the max-min solver if the flow set or capacities changed.
+    pub fn resolve(&mut self) {
+        if !self.dirty {
+            return;
+        }
+        solver::solve(&self.links, &mut self.flows, &mut self.solver_scratch);
+        self.dirty = false;
+    }
+
+    /// Advance virtual time to `t`, accruing bytes at current rates.
+    ///
+    /// Panics (debug) if any flow would finish strictly before `t`: the
+    /// engine must advance to completion instants, harvest, then continue.
+    pub fn advance_to(&mut self, t: SimTime) {
+        self.resolve();
+        let dt = t.since(self.now).as_secs_f64();
+        if dt <= 0.0 {
+            self.now = self.now.max(t);
+            return;
+        }
+        // Per-link carried bytes = sum of flow rates crossing it.
+        let mut link_bytes = vec![0.0f64; self.links.len()];
+        for f in self.flows.values_mut() {
+            let moved = (f.rate * dt).min(f.remaining);
+            f.remaining -= moved;
+            if f.remaining < 1e-6 {
+                f.remaining = 0.0;
+            }
+            for l in &f.path {
+                link_bytes[l.0] += moved;
+            }
+        }
+        for (i, b) in link_bytes.iter().enumerate() {
+            self.links[i].bytes_carried += b;
+            if let Some(mon) = &mut self.links[i].monitor {
+                mon.add_spread(self.now, t, *b);
+            }
+        }
+        self.now = t;
+    }
+
+    /// Earliest instant at which some active flow completes under current
+    /// rates (None if no active flows or all rates are zero).
+    pub fn next_completion(&mut self) -> Option<SimTime> {
+        self.resolve();
+        let mut best: Option<f64> = None;
+        for f in self.flows.values() {
+            if f.remaining <= 0.0 {
+                return Some(self.now); // already done, harvest now
+            }
+            if f.rate > 0.0 {
+                let eta = f.remaining / f.rate;
+                best = Some(best.map_or(eta, |b: f64| b.min(eta)));
+            }
+        }
+        // Round UP to the next nanosecond (+1) so that advancing to the
+        // returned instant always consumes the full remaining bytes —
+        // rounding down would leave sub-byte remainders and livelock the
+        // event loop on zero-length advances.
+        best.map(|eta| self.now + SimTime((eta * 1e9).ceil() as u64 + 1))
+    }
+
+    /// Flows that have finished by the current instant.
+    pub fn completed(&self) -> Vec<FlowId> {
+        let mut done: Vec<FlowId> = self
+            .flows
+            .iter()
+            .filter(|(_, f)| f.remaining <= 0.0)
+            .map(|(id, _)| *id)
+            .collect();
+        done.sort();
+        done
+    }
+
+    /// Remove a completed (or cancelled) flow, returning its stats.
+    pub fn finish_flow(&mut self, id: FlowId) -> Option<FlowStats> {
+        let f = self.flows.remove(&id)?;
+        self.dirty = true;
+        self.epoch += 1;
+        Some(FlowStats {
+            bytes: f.total - f.remaining,
+            started: f.started,
+            finished: self.now,
+        })
+    }
+
+    /// Current allocated rate of a flow in bytes/sec (after resolve).
+    pub fn flow_rate(&mut self, id: FlowId) -> Option<f64> {
+        self.resolve();
+        self.flows.get(&id).map(|f| f.rate)
+    }
+
+    /// Aggregate rate crossing a link right now (after resolve).
+    pub fn link_rate(&mut self, link: LinkId) -> f64 {
+        self.resolve();
+        self.flows
+            .values()
+            .filter(|f| f.path.contains(&link))
+            .map(|f| f.rate)
+            .sum()
+    }
+
+    /// Take the monitor series of a link (consumes it).
+    pub fn take_monitor(&mut self, link: LinkId) -> Option<BinSeries> {
+        self.links[link.0].monitor.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gb(n: f64) -> f64 {
+        n * 1e9
+    }
+
+    #[test]
+    fn single_flow_bounded_by_link() {
+        let mut net = NetSim::new();
+        let l = net.add_link("nic", Gbps(8.0)); // 1 GB/s
+        let f = net.start_flow(vec![l], gb(2.0), f64::INFINITY);
+        assert!((net.flow_rate(f).unwrap() - 1e9).abs() < 1.0);
+        let done = net.next_completion().unwrap();
+        assert!((done.as_secs_f64() - 2.0).abs() < 1e-6);
+        net.advance_to(done);
+        assert_eq!(net.completed(), vec![f]);
+        let st = net.finish_flow(f).unwrap();
+        assert!((st.bytes - gb(2.0)).abs() < 1.0);
+        assert!((st.mean_rate_bps() - 1e9).abs() < 1e3);
+    }
+
+    #[test]
+    fn fair_share_two_flows() {
+        let mut net = NetSim::new();
+        let l = net.add_link("nic", Gbps(8.0));
+        let f1 = net.start_flow(vec![l], gb(10.0), f64::INFINITY);
+        let f2 = net.start_flow(vec![l], gb(10.0), f64::INFINITY);
+        assert!((net.flow_rate(f1).unwrap() - 0.5e9).abs() < 1.0);
+        assert!((net.flow_rate(f2).unwrap() - 0.5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn per_flow_cap_respected_and_redistributed() {
+        let mut net = NetSim::new();
+        let l = net.add_link("nic", Gbps(8.0)); // 1 GB/s
+        let capped = net.start_flow(vec![l], gb(10.0), 0.1e9);
+        let free = net.start_flow(vec![l], gb(10.0), f64::INFINITY);
+        assert!((net.flow_rate(capped).unwrap() - 0.1e9).abs() < 1.0);
+        // The other flow picks up the slack (max-min, not plain 50/50).
+        assert!((net.flow_rate(free).unwrap() - 0.9e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn multi_link_path_bounded_by_narrowest() {
+        let mut net = NetSim::new();
+        let wide = net.add_link("wide", Gbps(100.0));
+        let narrow = net.add_link("narrow", Gbps(10.0));
+        let f = net.start_flow(vec![wide, narrow], gb(5.0), f64::INFINITY);
+        assert!((net.flow_rate(f).unwrap() - Gbps(10.0).bytes_per_sec()).abs() < 1.0);
+    }
+
+    #[test]
+    fn flow_completion_ordering() {
+        let mut net = NetSim::new();
+        let l = net.add_link("nic", Gbps(8.0));
+        let small = net.start_flow(vec![l], gb(1.0), f64::INFINITY);
+        let big = net.start_flow(vec![l], gb(4.0), f64::INFINITY);
+        // Both at 0.5 GB/s: small finishes at t=2.
+        let t1 = net.next_completion().unwrap();
+        assert!((t1.as_secs_f64() - 2.0).abs() < 1e-6);
+        net.advance_to(t1);
+        assert_eq!(net.completed(), vec![small]);
+        net.finish_flow(small);
+        // big now gets the full 1 GB/s with 3 GB left: finishes at t=5.
+        let t2 = net.next_completion().unwrap();
+        assert!((t2.as_secs_f64() - 5.0).abs() < 1e-6);
+        net.advance_to(t2);
+        assert_eq!(net.completed(), vec![big]);
+    }
+
+    #[test]
+    fn capacity_change_rebalances() {
+        let mut net = NetSim::new();
+        let l = net.add_link("backbone", Gbps(10.0));
+        let f = net.start_flow(vec![l], gb(100.0), f64::INFINITY);
+        net.advance_to(SimTime::from_secs(1));
+        net.set_capacity(l, Gbps(2.0));
+        let r = net.flow_rate(f).unwrap();
+        assert!((r - Gbps(2.0).bytes_per_sec()).abs() < 1.0);
+    }
+
+    #[test]
+    fn link_accounting_and_monitor() {
+        let mut net = NetSim::new();
+        let l = net.add_link("nic", Gbps(8.0));
+        net.monitor_link(l, SimTime::from_secs(1));
+        net.start_flow(vec![l], gb(3.0), f64::INFINITY);
+        net.advance_to(SimTime::from_secs(3));
+        assert!((net.link(l).bytes_carried - gb(3.0)).abs() < 1.0);
+        let mon = net.take_monitor(l).unwrap();
+        let bins = mon.bins();
+        assert_eq!(bins.len(), 3);
+        for (_, b) in bins {
+            assert!((b - gb(1.0)).abs() < 1e3, "each 1s bin carries 1GB, got {b}");
+        }
+    }
+
+    #[test]
+    fn epoch_bumps_on_changes() {
+        let mut net = NetSim::new();
+        let l = net.add_link("nic", Gbps(1.0));
+        let e0 = net.epoch;
+        let f = net.start_flow(vec![l], 100.0, 1e9);
+        assert!(net.epoch > e0);
+        let e1 = net.epoch;
+        net.finish_flow(f);
+        assert!(net.epoch > e1);
+    }
+
+    #[test]
+    fn zero_active_flows() {
+        let mut net = NetSim::new();
+        net.add_link("nic", Gbps(1.0));
+        assert!(net.next_completion().is_none());
+        assert!(net.completed().is_empty());
+        net.advance_to(SimTime::from_secs(10));
+        assert_eq!(net.now(), SimTime::from_secs(10));
+    }
+}

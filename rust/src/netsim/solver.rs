@@ -1,0 +1,310 @@
+//! Max-min fair-share solver (progressive filling / water-filling).
+//!
+//! Each flow is additionally constrained by its per-flow cap (its TCP
+//! throughput ceiling), modeled as a private pseudo-link. The algorithm is
+//! the textbook one: repeatedly find the most-constrained resource (the one
+//! with the smallest fair share among its unfrozen flows), freeze its flows
+//! at that share, subtract, repeat. Complexity O(iterations × flows ×
+//! path-length); with the paper's ~200 concurrent transfers over ~20
+//! resources a solve is microseconds (see `benches/netsim_solver.rs`).
+
+use super::{Flow, FlowId, Link};
+use std::collections::HashMap;
+
+/// Reusable allocations for the solver hot path.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    rem: Vec<f64>,
+    count: Vec<u32>,
+    order: Vec<FlowId>,
+    frozen: Vec<bool>,
+}
+
+/// Compute max-min fair rates for `flows` over `links`, writing each
+/// flow's `rate`.
+pub fn solve(links: &[Link], flows: &mut HashMap<FlowId, Flow>, scratch: &mut Scratch) {
+    let n = flows.len();
+    if n == 0 {
+        return;
+    }
+
+    // Deterministic flow order (HashMap iteration is not).
+    scratch.order.clear();
+    scratch.order.extend(flows.keys().copied());
+    scratch.order.sort();
+
+    scratch.rem.clear();
+    scratch.rem.extend(links.iter().map(|l| l.capacity_bps));
+    scratch.count.clear();
+    scratch.count.resize(links.len(), 0);
+    scratch.frozen.clear();
+    scratch.frozen.resize(n, false);
+
+    for id in &scratch.order {
+        for l in &flows[id].path {
+            scratch.count[l.0] += 1;
+        }
+    }
+
+    let mut unfrozen = n;
+    // Progressive filling: each iteration freezes at least one flow.
+    while unfrozen > 0 {
+        // Smallest fair share among saturable links and flow caps.
+        let mut limit = f64::INFINITY;
+        for (i, &rem) in scratch.rem.iter().enumerate() {
+            if scratch.count[i] > 0 {
+                limit = limit.min(rem / scratch.count[i] as f64);
+            }
+        }
+        let mut cap_limited = false;
+        for (fi, id) in scratch.order.iter().enumerate() {
+            if !scratch.frozen[fi] {
+                let cap = flows[id].cap_bps;
+                if cap <= limit {
+                    limit = cap;
+                    cap_limited = true;
+                }
+            }
+        }
+        if !limit.is_finite() {
+            // No constraining resource at all: flows are unbounded; pick a
+            // degenerate huge rate to make progress deterministically.
+            limit = 1e15;
+        }
+
+        // Freeze: (a) flows whose cap equals the limit; (b) flows crossing
+        // a link that is exactly exhausted at this fair share.
+        let mut froze_any = false;
+        for (fi, id) in scratch.order.iter().enumerate() {
+            if scratch.frozen[fi] {
+                continue;
+            }
+            let f = &flows[id];
+            let at_cap = cap_limited && f.cap_bps <= limit * (1.0 + 1e-12);
+            let on_bottleneck = f.path.iter().any(|l| {
+                scratch.count[l.0] > 0
+                    && scratch.rem[l.0] / scratch.count[l.0] as f64 <= limit * (1.0 + 1e-9)
+            });
+            if at_cap || on_bottleneck {
+                let rate = limit.min(f.cap_bps);
+                let path = f.path.clone();
+                flows.get_mut(id).unwrap().rate = rate;
+                scratch.frozen[fi] = true;
+                froze_any = true;
+                unfrozen -= 1;
+                for l in &path {
+                    scratch.rem[l.0] = (scratch.rem[l.0] - rate).max(0.0);
+                    scratch.count[l.0] -= 1;
+                }
+            }
+        }
+        debug_assert!(froze_any, "progressive filling must make progress");
+        if !froze_any {
+            // Defensive: freeze everything at the limit to avoid a hang.
+            for (fi, id) in scratch.order.iter().enumerate() {
+                if !scratch.frozen[fi] {
+                    flows.get_mut(id).unwrap().rate = limit.min(flows[id].cap_bps);
+                    scratch.frozen[fi] = true;
+                    unfrozen -= 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{Link, LinkId, NetSim};
+    use crate::util::units::Gbps;
+    use crate::util::Prng;
+
+    fn mklink(cap_gbps: f64) -> Link {
+        Link {
+            name: "l".into(),
+            capacity_bps: Gbps(cap_gbps).bytes_per_sec(),
+            bytes_carried: 0.0,
+            monitor: None,
+        }
+    }
+
+    fn mkflow(path: Vec<usize>, cap_bps: f64) -> Flow {
+        Flow {
+            path: path.into_iter().map(LinkId).collect(),
+            remaining: 1e12,
+            total: 1e12,
+            cap_bps,
+            rate: 0.0,
+            started: crate::util::units::SimTime::ZERO,
+        }
+    }
+
+    fn run(links: &[Link], flow_list: Vec<Flow>) -> Vec<f64> {
+        let mut flows = HashMap::new();
+        for (i, f) in flow_list.into_iter().enumerate() {
+            flows.insert(FlowId(i as u64), f);
+        }
+        let mut scratch = Scratch::default();
+        solve(links, &mut flows, &mut scratch);
+        let mut out: Vec<(FlowId, f64)> = flows.into_iter().map(|(id, f)| (id, f.rate)).collect();
+        out.sort_by_key(|(id, _)| *id);
+        out.into_iter().map(|(_, r)| r).collect()
+    }
+
+    #[test]
+    fn classic_three_flow_example() {
+        // Two links: L0 cap 1, L1 cap 2 (in GB/s-ish units via Gbps(8)=1GB/s).
+        // f0 uses L0, f1 uses L0+L1, f2 uses L1.
+        // Max-min: f0=f1=0.5 on L0; f2 = 2-0.5 = 1.5.
+        let links = vec![mklink(8.0), mklink(16.0)];
+        let rates = run(
+            &links,
+            vec![
+                mkflow(vec![0], f64::INFINITY),
+                mkflow(vec![0, 1], f64::INFINITY),
+                mkflow(vec![1], f64::INFINITY),
+            ],
+        );
+        assert!((rates[0] - 0.5e9).abs() < 1.0);
+        assert!((rates[1] - 0.5e9).abs() < 1.0);
+        assert!((rates[2] - 1.5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn caps_create_second_round() {
+        // One 1 GB/s link, 3 flows; one capped at 0.1 GB/s.
+        // Max-min: capped=0.1, others (1-0.1)/2 = 0.45.
+        let links = vec![mklink(8.0)];
+        let rates = run(
+            &links,
+            vec![
+                mkflow(vec![0], 0.1e9),
+                mkflow(vec![0], f64::INFINITY),
+                mkflow(vec![0], f64::INFINITY),
+            ],
+        );
+        assert!((rates[0] - 0.1e9).abs() < 1.0);
+        assert!((rates[1] - 0.45e9).abs() < 1.0);
+        assert!((rates[2] - 0.45e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn all_capped_below_fair_share() {
+        let links = vec![mklink(80.0)]; // 10 GB/s
+        let rates = run(
+            &links,
+            (0..5).map(|_| mkflow(vec![0], 0.2e9)).collect(),
+        );
+        for r in rates {
+            assert!((r - 0.2e9).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn unbounded_flows_get_finite_rate() {
+        // No link on path (empty path is not allowed by NetSim, but the
+        // solver itself must not hang if caps are infinite and links empty).
+        let links = vec![mklink(8.0)];
+        let rates = run(&links, vec![mkflow(vec![0], f64::INFINITY)]);
+        assert!((rates[0] - 1e9).abs() < 1.0);
+    }
+
+    /// Invariants, property-tested over random topologies:
+    ///  1. capacity: sum of rates on each link <= cap (+eps)
+    ///  2. cap: each flow rate <= its cap (+eps)
+    ///  3. bottleneck: every flow is at its cap OR crosses a saturated
+    ///     link where it has (weakly) the largest rate — the defining
+    ///     property of max-min fairness.
+    #[test]
+    fn maxmin_invariants_random() {
+        crate::util::testkit::check("maxmin-invariants", 60, |g| {
+            let nlinks = g.rng.range_usize(1, 8);
+            let links: Vec<Link> = (0..nlinks)
+                .map(|_| mklink(g.rng.range_f64(1.0, 100.0)))
+                .collect();
+            let nflows = g.rng.range_usize(1, 40);
+            let mut flows = HashMap::new();
+            for i in 0..nflows {
+                let plen = g.rng.range_usize(1, nlinks.min(4));
+                let mut path: Vec<usize> = (0..nlinks).collect();
+                g.rng.shuffle(&mut path);
+                path.truncate(plen);
+                let cap = if g.rng.next_f64() < 0.4 {
+                    g.rng.range_f64(0.01e9, 2e9)
+                } else {
+                    f64::INFINITY
+                };
+                flows.insert(FlowId(i as u64), mkflow(path, cap));
+            }
+            let mut scratch = Scratch::default();
+            solve(&links, &mut flows, &mut scratch);
+
+            let eps = 1e-3;
+            // (1) link capacity respected
+            for (li, l) in links.iter().enumerate() {
+                let used: f64 = flows
+                    .values()
+                    .filter(|f| f.path.iter().any(|x| x.0 == li))
+                    .map(|f| f.rate)
+                    .sum();
+                assert!(
+                    used <= l.capacity_bps * (1.0 + 1e-9) + eps,
+                    "link {li} over capacity: {used} > {}",
+                    l.capacity_bps
+                );
+            }
+            // (2) flow caps respected, rates positive
+            for f in flows.values() {
+                assert!(f.rate <= f.cap_bps * (1.0 + 1e-9) + eps);
+                assert!(f.rate > 0.0, "every flow gets a positive rate");
+            }
+            // (3) bottleneck property
+            for (id, f) in &flows {
+                if f.rate >= f.cap_bps * (1.0 - 1e-9) {
+                    continue; // at own cap
+                }
+                let has_bottleneck = f.path.iter().any(|l| {
+                    let on_link: Vec<f64> = flows
+                        .values()
+                        .filter(|g2| g2.path.contains(l))
+                        .map(|g2| g2.rate)
+                        .collect();
+                    let used: f64 = on_link.iter().sum();
+                    let saturated = used >= links[l.0].capacity_bps * (1.0 - 1e-6) - eps;
+                    let max_other = on_link.iter().cloned().fold(0.0, f64::max);
+                    saturated && f.rate >= max_other * (1.0 - 1e-6) - eps
+                });
+                assert!(
+                    has_bottleneck,
+                    "flow {id:?} rate {} has no bottleneck link",
+                    f.rate
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn solver_deterministic_across_runs() {
+        let mut rates1 = None;
+        for _ in 0..2 {
+            let mut net = NetSim::new();
+            let a = net.add_link("a", Gbps(10.0));
+            let b = net.add_link("b", Gbps(20.0));
+            let mut prng = Prng::new(99);
+            let mut ids = Vec::new();
+            for _ in 0..50 {
+                let path = if prng.next_f64() < 0.5 {
+                    vec![a]
+                } else {
+                    vec![a, b]
+                };
+                ids.push(net.start_flow(path, 1e9, prng.range_f64(0.05e9, 1e9)));
+            }
+            let rates: Vec<f64> = ids.iter().map(|id| net.flow_rate(*id).unwrap()).collect();
+            match &rates1 {
+                None => rates1 = Some(rates),
+                Some(prev) => assert_eq!(prev, &rates),
+            }
+        }
+    }
+}

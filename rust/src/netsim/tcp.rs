@@ -1,0 +1,137 @@
+//! Per-flow TCP throughput model.
+//!
+//! A fluid flow's *cap* is the steady-state throughput a single TCP stream
+//! can reach on its path, independent of fair-share contention:
+//!
+//!   cap = min( window / RTT,                 — receive/congestion window
+//!              Mathis MSS/(RTT·√p) · C,      — loss-limited (WAN)
+//!              per-stream endpoint ceiling ) — one shadow/starter pair's
+//!                                              crypto+syscall throughput
+//!
+//! On the LAN (RTT ≈ 0.2 ms, p ≈ 0) the endpoint ceiling dominates; across
+//! the US (RTT 58 ms over CENIC/I2/NYSERNet) the loss term does — which is
+//! exactly the mechanism the paper suspects for its 90 → 60 Gbps drop.
+//!
+//! Flow *setup* latency models the HTCondor shadow→starter handshake
+//! (TCP + authentication + key exchange ≈ `HANDSHAKE_RTTS` round trips)
+//! plus a slow-start ramp allowance.
+
+use super::calib;
+
+/// Path characteristics seen by one transfer stream.
+#[derive(Debug, Clone, Copy)]
+pub struct PathProfile {
+    /// Round-trip time in seconds.
+    pub rtt_s: f64,
+    /// Packet loss probability on the path (fraction, e.g. 6e-7).
+    pub loss: f64,
+    /// Kernel TCP window limit in bytes (rmem/wmem autotuning cap).
+    pub window_bytes: f64,
+    /// Per-stream endpoint ceiling in bytes/sec (crypto + syscall path of
+    /// one shadow/starter pair).
+    pub endpoint_bps: f64,
+}
+
+impl PathProfile {
+    pub fn lan() -> PathProfile {
+        PathProfile {
+            rtt_s: calib::LAN_RTT_S,
+            loss: calib::LAN_LOSS,
+            window_bytes: calib::TCP_WINDOW_BYTES,
+            endpoint_bps: calib::PER_STREAM_ENDPOINT_BPS,
+        }
+    }
+
+    pub fn wan() -> PathProfile {
+        PathProfile {
+            rtt_s: calib::WAN_RTT_S,
+            loss: calib::WAN_LOSS,
+            window_bytes: calib::TCP_WINDOW_BYTES,
+            endpoint_bps: calib::PER_STREAM_ENDPOINT_BPS,
+        }
+    }
+
+    /// Steady-state throughput cap of one stream (bytes/sec).
+    pub fn stream_cap_bps(&self) -> f64 {
+        let window_limit = self.window_bytes / self.rtt_s;
+        let loss_limit = if self.loss > 0.0 {
+            // Mathis et al.: rate = (MSS/RTT) · C/√p, C ≈ 1.22 (delayed acks off).
+            (calib::MSS_BYTES / self.rtt_s) * (calib::MATHIS_C / self.loss.sqrt())
+        } else {
+            f64::INFINITY
+        };
+        window_limit.min(loss_limit).min(self.endpoint_bps)
+    }
+
+    /// Connection + auth handshake latency before bytes flow (seconds).
+    pub fn setup_latency_s(&self) -> f64 {
+        // Handshake round trips + slow-start ramp to reach the cap:
+        // doubling from IW≈10 MSS each RTT until cwnd ≈ cap·RTT.
+        let cap = self.stream_cap_bps();
+        let target_w = (cap * self.rtt_s).max(calib::MSS_BYTES * 10.0);
+        let ramp_rtts = (target_w / (calib::MSS_BYTES * 10.0)).log2().max(0.0);
+        (calib::HANDSHAKE_RTTS + ramp_rtts) * self.rtt_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::Gbps;
+
+    #[test]
+    fn lan_cap_is_endpoint_bound() {
+        let p = PathProfile::lan();
+        let cap = p.stream_cap_bps();
+        assert!(
+            (cap - calib::PER_STREAM_ENDPOINT_BPS).abs() < 1.0,
+            "LAN streams are limited by the endpoint crypto path, got {cap}"
+        );
+    }
+
+    #[test]
+    fn wan_cap_is_loss_bound_near_300_mbps() {
+        let p = PathProfile::wan();
+        let cap_gbps = Gbps::from_bytes_per_sec(p.stream_cap_bps()).0;
+        // Calibration target: ~200 streams aggregate to ≈60 Gbps.
+        assert!(
+            (0.25..0.40).contains(&cap_gbps),
+            "WAN per-stream cap should be ≈0.3 Gbps, got {cap_gbps}"
+        );
+    }
+
+    #[test]
+    fn wan_slower_than_lan_per_stream() {
+        assert!(PathProfile::wan().stream_cap_bps() < PathProfile::lan().stream_cap_bps());
+    }
+
+    #[test]
+    fn setup_latency_scales_with_rtt() {
+        let lan = PathProfile::lan().setup_latency_s();
+        let wan = PathProfile::wan().setup_latency_s();
+        assert!(wan > lan * 50.0, "WAN setup ≫ LAN setup: {lan} vs {wan}");
+        assert!(wan < 5.0, "WAN setup stays small vs minutes-long transfers");
+    }
+
+    #[test]
+    fn mathis_monotone_in_loss() {
+        let mut p = PathProfile::wan();
+        let base = p.stream_cap_bps();
+        p.loss *= 4.0; // 2x sqrt -> half the rate (if loss-bound)
+        let worse = p.stream_cap_bps();
+        assert!(worse < base);
+        assert!((base / worse - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn zero_loss_falls_back_to_window() {
+        let p = PathProfile {
+            rtt_s: 0.058,
+            loss: 0.0,
+            window_bytes: 16.0 * 1024.0 * 1024.0,
+            endpoint_bps: f64::INFINITY,
+        };
+        let cap = p.stream_cap_bps();
+        assert!((cap - p.window_bytes / p.rtt_s).abs() < 1.0);
+    }
+}

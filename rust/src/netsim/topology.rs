@@ -1,0 +1,266 @@
+//! Testbed topology builders: the PRP deployments from the paper's §II–§IV
+//! expressed as NetSim link graphs.
+//!
+//! A transfer from the submit node to worker `w` crosses, in order:
+//!
+//! ```text
+//!   [submit VPN cpu]? -> submit NIC tx -> [backbone]? -> worker w NIC rx
+//! ```
+//!
+//! * LAN scenario (§III): submit + 6 workers, all 100 Gbps NICs, no
+//!   backbone constraint beyond the (quiet) campus core.
+//! * WAN scenario (§IV): workers in New York (1×100 Gbps + 4×10 Gbps),
+//!   shared 100 Gbps cross-US backbone with background traffic, 58 ms RTT.
+//! * VPN ablation (§II): the submit pod runs behind the Calico overlay —
+//!   an extra per-node processing resource capping encap throughput.
+
+use super::calib;
+use super::tcp::PathProfile;
+use super::{LinkId, NetSim};
+use crate::util::units::{Gbps, SimTime};
+
+/// One worker node: NIC capacity and number of execute slots.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerSpec {
+    pub nic_gbps: f64,
+    pub slots: u32,
+}
+
+/// WAN path characteristics (None = LAN-only deployment).
+#[derive(Debug, Clone, Copy)]
+pub struct WanSpec {
+    pub rtt_s: f64,
+    pub loss: f64,
+    pub backbone_gbps: f64,
+}
+
+/// Full testbed specification.
+#[derive(Debug, Clone)]
+pub struct TestbedSpec {
+    pub submit_nic_gbps: f64,
+    pub workers: Vec<WorkerSpec>,
+    pub wan: Option<WanSpec>,
+    /// Submit node runs behind the Calico VPN overlay (unprivileged pod).
+    pub vpn_on_submit: bool,
+    /// Width of the throughput monitor bins on the submit NIC.
+    pub monitor_bin: SimTime,
+}
+
+impl TestbedSpec {
+    /// §III LAN test: 6 workers × 100 Gbps NIC, 200 slots total.
+    pub fn lan_paper() -> TestbedSpec {
+        TestbedSpec {
+            submit_nic_gbps: 100.0,
+            workers: (0..6)
+                .map(|i| WorkerSpec {
+                    nic_gbps: 100.0,
+                    // 200 slots over 6 nodes: 34,34,33,33,33,33
+                    slots: if i < 2 { 34 } else { 33 },
+                })
+                .collect(),
+            wan: None,
+            vpn_on_submit: false,
+            monitor_bin: SimTime::from_secs(60),
+        }
+    }
+
+    /// §IV WAN test: NY workers, 1×100 Gbps + 4×10 Gbps, 58 ms RTT.
+    pub fn wan_paper() -> TestbedSpec {
+        let mut workers = vec![WorkerSpec {
+            nic_gbps: 100.0,
+            slots: 120,
+        }];
+        workers.extend((0..4).map(|_| WorkerSpec {
+            nic_gbps: 10.0,
+            slots: 20,
+        }));
+        TestbedSpec {
+            submit_nic_gbps: 100.0,
+            workers,
+            wan: Some(WanSpec {
+                rtt_s: calib::WAN_RTT_S,
+                loss: calib::WAN_LOSS,
+                backbone_gbps: 100.0,
+            }),
+            vpn_on_submit: false,
+            monitor_bin: SimTime::from_secs(60),
+        }
+    }
+
+    /// §II VPN ablation: LAN deployment, submit pod behind Calico.
+    pub fn lan_vpn_paper() -> TestbedSpec {
+        TestbedSpec {
+            vpn_on_submit: true,
+            ..TestbedSpec::lan_paper()
+        }
+    }
+
+    pub fn total_slots(&self) -> u32 {
+        self.workers.iter().map(|w| w.slots).sum()
+    }
+}
+
+/// A built testbed: the NetSim plus the link handles the engine needs.
+#[derive(Debug)]
+pub struct Testbed {
+    pub net: NetSim,
+    pub spec: TestbedSpec,
+    pub submit_tx: LinkId,
+    pub submit_vpn: Option<LinkId>,
+    pub backbone: Option<LinkId>,
+    pub worker_rx: Vec<LinkId>,
+}
+
+impl Testbed {
+    pub fn build(spec: TestbedSpec) -> Testbed {
+        let mut net = NetSim::new();
+        let eff = calib::NIC_PROTOCOL_EFFICIENCY;
+
+        let submit_vpn = spec.vpn_on_submit.then(|| {
+            net.add_link("submit.vpn", Gbps(calib::VPN_PROCESSING_GBPS))
+        });
+        let submit_tx = net.add_link("submit.nic.tx", Gbps(spec.submit_nic_gbps * eff));
+        net.monitor_link(submit_tx, spec.monitor_bin);
+
+        let backbone = spec
+            .wan
+            .map(|w| net.add_link("backbone", Gbps(w.backbone_gbps * eff)));
+
+        let worker_rx = spec
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| net.add_link(&format!("worker{i}.nic.rx"), Gbps(w.nic_gbps * eff)))
+            .collect();
+
+        Testbed {
+            net,
+            spec,
+            submit_tx,
+            submit_vpn,
+            backbone,
+            worker_rx,
+        }
+    }
+
+    /// Links crossed by a submit -> worker transfer.
+    pub fn path_to_worker(&self, worker: usize) -> Vec<LinkId> {
+        let mut p = Vec::with_capacity(4);
+        if let Some(v) = self.submit_vpn {
+            p.push(v);
+        }
+        p.push(self.submit_tx);
+        if let Some(b) = self.backbone {
+            p.push(b);
+        }
+        p.push(self.worker_rx[worker]);
+        p
+    }
+
+    /// Links crossed by a worker -> submit transfer (job output). The same
+    /// resources are crossed in the reverse direction; NIC duplex is
+    /// approximated as shared capacity, which is conservative and matches
+    /// the submit node being the hot spot.
+    pub fn path_from_worker(&self, worker: usize) -> Vec<LinkId> {
+        let mut p = self.path_to_worker(worker);
+        p.reverse();
+        p
+    }
+
+    /// TCP path profile for transfers to any worker in this testbed.
+    pub fn path_profile(&self) -> PathProfile {
+        match self.spec.wan {
+            None => PathProfile::lan(),
+            Some(w) => PathProfile {
+                rtt_s: w.rtt_s,
+                loss: w.loss,
+                window_bytes: calib::TCP_WINDOW_BYTES,
+                endpoint_bps: calib::PER_STREAM_ENDPOINT_BPS,
+            },
+        }
+    }
+
+    /// Background-traffic parameters for the shared path, if any:
+    /// (link, mean utilization, sd, step seconds, nominal Gbps).
+    pub fn background(&self) -> Option<(LinkId, f64, f64, f64, f64)> {
+        let eff = calib::NIC_PROTOCOL_EFFICIENCY;
+        match (self.backbone, self.spec.wan) {
+            (Some(b), Some(w)) => Some((
+                b,
+                calib::WAN_BG_MEAN,
+                calib::WAN_BG_SD,
+                calib::WAN_BG_STEP_S,
+                w.backbone_gbps * eff,
+            )),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lan_paper_shape() {
+        let spec = TestbedSpec::lan_paper();
+        assert_eq!(spec.workers.len(), 6);
+        assert_eq!(spec.total_slots(), 200);
+        let tb = Testbed::build(spec);
+        assert!(tb.backbone.is_none());
+        assert!(tb.submit_vpn.is_none());
+        assert_eq!(tb.worker_rx.len(), 6);
+        let p = tb.path_to_worker(3);
+        assert_eq!(p, vec![tb.submit_tx, tb.worker_rx[3]]);
+    }
+
+    #[test]
+    fn wan_paper_shape() {
+        let spec = TestbedSpec::wan_paper();
+        assert_eq!(spec.total_slots(), 200);
+        assert_eq!(spec.workers[0].nic_gbps, 100.0);
+        assert_eq!(spec.workers[4].nic_gbps, 10.0);
+        let tb = Testbed::build(spec);
+        let p = tb.path_to_worker(0);
+        assert_eq!(p.len(), 3, "submit tx + backbone + worker rx");
+        assert!((tb.path_profile().rtt_s - 0.058).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vpn_adds_processing_hop() {
+        let tb = Testbed::build(TestbedSpec::lan_vpn_paper());
+        let p = tb.path_to_worker(0);
+        assert_eq!(p.len(), 3, "vpn + submit tx + worker rx");
+        let vpn = tb.submit_vpn.unwrap();
+        assert_eq!(p[0], vpn);
+        // VPN capacity is the paper's observed 25 Gbps ceiling.
+        let cap = tb.net.link(vpn).capacity_bps * 8.0 / 1e9;
+        assert!((cap - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nic_derated_by_protocol_efficiency() {
+        let tb = Testbed::build(TestbedSpec::lan_paper());
+        let cap_gbps = tb.net.link(tb.submit_tx).capacity_bps * 8.0 / 1e9;
+        assert!((cap_gbps - 91.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn reverse_path() {
+        let tb = Testbed::build(TestbedSpec::wan_paper());
+        let fwd = tb.path_to_worker(1);
+        let mut rev = tb.path_from_worker(1);
+        rev.reverse();
+        assert_eq!(fwd, rev);
+    }
+
+    #[test]
+    fn background_only_on_wan() {
+        let lan = Testbed::build(TestbedSpec::lan_paper());
+        assert!(lan.background().is_none());
+        let wan = Testbed::build(TestbedSpec::wan_paper());
+        let (link, mean, _, _, nominal) = wan.background().unwrap();
+        assert_eq!(link, wan.backbone.unwrap());
+        assert!(mean > 0.0 && nominal > 90.0);
+    }
+}

@@ -1,0 +1,312 @@
+//! The seal engine abstraction: the one object the transfer hot path
+//! calls to encrypt+digest (or digest+decrypt) a chunk of words.
+//!
+//! Three implementations:
+//! * [`NativeEngine`] — pure Rust ([`crate::security::chacha`] /
+//!   [`crate::security::aesctr`]); always available, used by sim mode and
+//!   as the verification oracle.
+//! * [`XlaEngine`] — the AOT Pallas/JAX artifact executed via PJRT; the
+//!   paper-architecture hot path (L1/L2 compute, L3 orchestration).
+//! * [`VerifyingEngine`] — runs both and asserts bit-identical results
+//!   (used at startup and in tests; catches ABI drift instantly).
+
+use crate::security::{aesctr, chacha, Method};
+use anyhow::{bail, Result};
+
+/// Seal = encrypt-then-digest (sender); Unseal = digest-then-decrypt
+/// (receiver). Digest is always over the ciphertext.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Seal,
+    Unseal,
+}
+
+/// A data-plane engine processing whole chunks of u32 words in place.
+pub trait SealEngine {
+    /// Process `data` (whole 64-byte blocks) in place; returns the 4-word
+    /// transfer digest. `counter0` is the chunk's absolute block offset.
+    fn process(
+        &mut self,
+        kind: Kind,
+        key: &[u32; 8],
+        nonce: &[u32; 3],
+        counter0: u32,
+        data: &mut [u32],
+    ) -> Result<[u32; 4]>;
+
+    /// Human-readable engine description for logs/reports.
+    fn describe(&self) -> String;
+}
+
+/// Pure-Rust engine (ChaCha20 or AES-256-CTR + poly16).
+#[derive(Debug, Clone)]
+pub struct NativeEngine {
+    pub method: Method,
+}
+
+impl NativeEngine {
+    pub fn new(method: Method) -> NativeEngine {
+        NativeEngine { method }
+    }
+}
+
+impl SealEngine for NativeEngine {
+    fn process(
+        &mut self,
+        kind: Kind,
+        key: &[u32; 8],
+        nonce: &[u32; 3],
+        counter0: u32,
+        data: &mut [u32],
+    ) -> Result<[u32; 4]> {
+        if data.len() % 16 != 0 {
+            bail!("chunk must be whole 64-byte blocks, got {} words", data.len());
+        }
+        Ok(match (self.method, kind) {
+            (Method::Chacha20, Kind::Seal) => chacha::seal_chunk(key, nonce, counter0, data),
+            (Method::Chacha20, Kind::Unseal) => chacha::unseal_chunk(key, nonce, counter0, data),
+            (Method::Aes256Ctr, Kind::Seal) => aesctr::seal_chunk(key, nonce, counter0, data),
+            (Method::Aes256Ctr, Kind::Unseal) => aesctr::unseal_chunk(key, nonce, counter0, data),
+            (Method::Plain, _) => {
+                // Integrity only: digest the payload as-is.
+                let lane = chacha::poly16_digest(data, counter0);
+                chacha::digest_finalize(&lane, data.len() as u32, nonce)
+            }
+        })
+    }
+
+    fn describe(&self) -> String {
+        format!("native/{}", self.method.name())
+    }
+}
+
+/// PJRT artifact engine: ChaCha20+poly16 compiled from the Pallas kernel.
+pub struct XlaEngine {
+    runtime: super::SealRuntime,
+    /// Scratch buffer for padding odd-sized chunks to a geometry.
+    scratch: Vec<u32>,
+}
+
+impl XlaEngine {
+    pub fn new(runtime: super::SealRuntime) -> XlaEngine {
+        XlaEngine {
+            runtime,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Load the default artifacts (all geometries) from `dir`.
+    pub fn load_default(dir: impl AsRef<std::path::Path>) -> Result<XlaEngine> {
+        let manifest = super::Manifest::load(dir)?;
+        Ok(XlaEngine::new(super::SealRuntime::load(&manifest, &[])?))
+    }
+
+    pub fn runtime(&self) -> &super::SealRuntime {
+        &self.runtime
+    }
+}
+
+impl SealEngine for XlaEngine {
+    fn process(
+        &mut self,
+        kind: Kind,
+        key: &[u32; 8],
+        nonce: &[u32; 3],
+        counter0: u32,
+        data: &mut [u32],
+    ) -> Result<[u32; 4]> {
+        if data.len() % 16 != 0 {
+            bail!("chunk must be whole 64-byte blocks, got {} words", data.len());
+        }
+        // The artifact ABI is fixed-shape per geometry; a chunk is processed
+        // as a sequence of geometry-sized sub-chunks with advancing counter.
+        // Digests of sub-chunks are XOR-combined via the lane-digest
+        // decomposition property... but the artifact returns the *final*
+        // digest, so chunks must be geometry-aligned: the stream layer
+        // always sends geometry-sized chunks. Here we require exact fit of
+        // a single geometry and process it in one call.
+        let words = data.len();
+        let Some(geom) = self.runtime.pick_geometry(words) else {
+            bail!("no geometry loaded");
+        };
+        let gwords = self.runtime.n_blocks(geom).unwrap() * 16;
+        if gwords == words {
+            let iv = [counter0, nonce[0], nonce[1], nonce[2]];
+            let (out, digest) = self.runtime.run(kind, geom, key, &iv, data)?;
+            data.copy_from_slice(&out);
+            return Ok(digest);
+        }
+        // Not an exact geometry: pad into scratch using the smallest
+        // geometry that fits, then recompute the true digest natively over
+        // the unpadded ciphertext (rare path — tiny tail chunks only).
+        let mut padded = self.runtime.pick_geometry(usize::MAX).unwrap(); // smallest
+        for (name, _) in GEOM_SIZES {
+            if let Some(nb) = self.runtime.n_blocks(name) {
+                if nb * 16 >= words {
+                    padded = name;
+                    break;
+                }
+            }
+        }
+        let pwords = self.runtime.n_blocks(padded).unwrap() * 16;
+        if pwords < words {
+            bail!("chunk of {words} words exceeds largest loaded geometry ({pwords})");
+        }
+        self.scratch.clear();
+        self.scratch.resize(pwords, 0);
+        self.scratch[..words].copy_from_slice(data);
+        let iv = [counter0, nonce[0], nonce[1], nonce[2]];
+        let scratch = std::mem::take(&mut self.scratch);
+        let (out, _) = self.runtime.run(kind, padded, key, &iv, &scratch)?;
+        self.scratch = scratch;
+        data.copy_from_slice(&out[..words]);
+        // True digest over the actual (unpadded) ciphertext.
+        let cipher: &[u32] = match kind {
+            Kind::Seal => data,
+            Kind::Unseal => &self.scratch[..words],
+        };
+        let lane = chacha::poly16_digest(cipher, counter0);
+        Ok(chacha::digest_finalize(&lane, words as u32, nonce))
+    }
+
+    fn describe(&self) -> String {
+        format!("xla-pjrt/CHACHA20 ({:?})", self.runtime)
+    }
+}
+
+/// Geometry names ordered smallest-to-largest (mirrors super::GEOMETRIES
+/// with word sizes for the padding path).
+const GEOM_SIZES: &[(&str, usize)] = &[
+    ("probe", 16 * 16),
+    ("64k", 1024 * 16),
+    ("256k", 4096 * 16),
+    ("1m", 16384 * 16),
+];
+
+/// Runs a primary and a reference engine and asserts identical results.
+pub struct VerifyingEngine<A: SealEngine, B: SealEngine> {
+    pub primary: A,
+    pub reference: B,
+    pub chunks_verified: u64,
+}
+
+impl<A: SealEngine, B: SealEngine> VerifyingEngine<A, B> {
+    pub fn new(primary: A, reference: B) -> Self {
+        VerifyingEngine {
+            primary,
+            reference,
+            chunks_verified: 0,
+        }
+    }
+}
+
+impl<A: SealEngine, B: SealEngine> SealEngine for VerifyingEngine<A, B> {
+    fn process(
+        &mut self,
+        kind: Kind,
+        key: &[u32; 8],
+        nonce: &[u32; 3],
+        counter0: u32,
+        data: &mut [u32],
+    ) -> Result<[u32; 4]> {
+        let mut copy = data.to_vec();
+        let d1 = self.primary.process(kind, key, nonce, counter0, data)?;
+        let d2 = self
+            .reference
+            .process(kind, key, nonce, counter0, &mut copy)?;
+        if d1 != d2 || data != &copy[..] {
+            bail!(
+                "engine mismatch: {} vs {} (digest {:08x?} vs {:08x?})",
+                self.primary.describe(),
+                self.reference.describe(),
+                d1,
+                d2
+            );
+        }
+        self.chunks_verified += 1;
+        Ok(d1)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "verify[{} == {}]",
+            self.primary.describe(),
+            self.reference.describe()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_roundtrip_chacha() {
+        let mut e = NativeEngine::new(Method::Chacha20);
+        let key = [7u32; 8];
+        let nonce = [1, 2, 3];
+        let mut data: Vec<u32> = (0..256u32).collect();
+        let orig = data.clone();
+        let d1 = e.process(Kind::Seal, &key, &nonce, 0, &mut data).unwrap();
+        assert_ne!(data, orig);
+        let d2 = e.process(Kind::Unseal, &key, &nonce, 0, &mut data).unwrap();
+        assert_eq!(data, orig);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn native_roundtrip_aes() {
+        let mut e = NativeEngine::new(Method::Aes256Ctr);
+        let key = [7u32; 8];
+        let nonce = [1, 2, 3];
+        let mut data: Vec<u32> = (0..64u32).collect();
+        let orig = data.clone();
+        let d1 = e.process(Kind::Seal, &key, &nonce, 4, &mut data).unwrap();
+        let d2 = e.process(Kind::Unseal, &key, &nonce, 4, &mut data).unwrap();
+        assert_eq!(data, orig);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn plain_leaves_data_but_digests() {
+        let mut e = NativeEngine::new(Method::Plain);
+        let key = [0u32; 8];
+        let nonce = [0, 0, 0];
+        let mut data: Vec<u32> = (0..16u32).collect();
+        let orig = data.clone();
+        let d = e.process(Kind::Seal, &key, &nonce, 0, &mut data).unwrap();
+        assert_eq!(data, orig, "plain method does not encrypt");
+        assert_ne!(d, [0u32; 4]);
+    }
+
+    #[test]
+    fn rejects_partial_blocks() {
+        let mut e = NativeEngine::new(Method::Chacha20);
+        let mut data = vec![0u32; 15];
+        assert!(e
+            .process(Kind::Seal, &[0; 8], &[0; 3], 0, &mut data)
+            .is_err());
+    }
+
+    #[test]
+    fn verifying_engine_agrees_native_native() {
+        let mut v = VerifyingEngine::new(
+            NativeEngine::new(Method::Chacha20),
+            NativeEngine::new(Method::Chacha20),
+        );
+        let mut data: Vec<u32> = (0..32u32).collect();
+        v.process(Kind::Seal, &[1; 8], &[2; 3], 0, &mut data).unwrap();
+        assert_eq!(v.chunks_verified, 1);
+    }
+
+    #[test]
+    fn verifying_engine_detects_mismatch() {
+        // ChaCha vs AES produce different ciphertexts -> must error.
+        let mut v = VerifyingEngine::new(
+            NativeEngine::new(Method::Chacha20),
+            NativeEngine::new(Method::Aes256Ctr),
+        );
+        let mut data: Vec<u32> = (0..32u32).collect();
+        assert!(v.process(Kind::Seal, &[1; 8], &[2; 3], 0, &mut data).is_err());
+    }
+}

@@ -1,0 +1,280 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them from the transfer hot
+//! path. Python never runs here — the HLO text is compiled once by the
+//! PJRT CPU client at startup and executed as native code thereafter.
+//!
+//! * [`Manifest`] — the artifact ABI description (`manifest.json`).
+//! * [`SealRuntime`] — one compiled executable per (kind, chunk geometry).
+//! * [`engine`] — the [`engine::SealEngine`] trait with three impls:
+//!   native Rust, XLA artifact, and a cross-verifying wrapper.
+
+pub mod engine;
+pub mod service;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Supported chunk geometry names, smallest to largest.
+pub const GEOMETRIES: &[&str] = &["probe", "64k", "256k", "1m"];
+
+/// One artifact entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub kind: String,
+    pub name: String,
+    pub file: String,
+    pub n_blocks: usize,
+    pub tile: usize,
+    pub chunk_bytes: usize,
+    pub sha256: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub abi_version: u64,
+    pub entries: Vec<ManifestEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let abi_version = v
+            .get("abi_version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("manifest missing abi_version"))?;
+        if abi_version != 1 {
+            bail!("unsupported artifact ABI version {abi_version}");
+        }
+        let mut entries = Vec::new();
+        for e in v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let gets = |k: &str| -> Result<String> {
+                Ok(e.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing {k}"))?
+                    .to_string())
+            };
+            let getn = |k: &str| -> Result<usize> {
+                Ok(e.get(k)
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("entry missing {k}"))? as usize)
+            };
+            entries.push(ManifestEntry {
+                kind: gets("kind")?,
+                name: gets("name")?,
+                file: gets("file")?,
+                n_blocks: getn("n_blocks")?,
+                tile: getn("tile")?,
+                chunk_bytes: getn("chunk_bytes")?,
+                sha256: gets("sha256")?,
+            });
+        }
+        Ok(Manifest {
+            abi_version,
+            entries,
+            dir,
+        })
+    }
+
+    pub fn entry(&self, kind: &str, name: &str) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.name == name)
+    }
+
+    /// Default artifact directory: `$HTCDM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("HTCDM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+/// A compiled seal/unseal executable pair for one chunk geometry.
+struct CompiledGeometry {
+    n_blocks: usize,
+    seal: xla::PjRtLoadedExecutable,
+    unseal: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT-backed seal runtime: client + compiled executables.
+pub struct SealRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    geometries: HashMap<String, CompiledGeometry>,
+}
+
+impl std::fmt::Debug for SealRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SealRuntime({} geometries)", self.geometries.len())
+    }
+}
+
+impl SealRuntime {
+    /// Load and compile artifacts for the given geometry names (compile
+    /// everything in [`GEOMETRIES`] when `names` is empty).
+    pub fn load(manifest: &Manifest, names: &[&str]) -> Result<SealRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut geometries = HashMap::new();
+        let wanted: Vec<&str> = if names.is_empty() {
+            GEOMETRIES.to_vec()
+        } else {
+            names.to_vec()
+        };
+        for name in wanted {
+            let seal_e = manifest
+                .entry("seal", name)
+                .ok_or_else(|| anyhow!("manifest has no seal/{name}"))?;
+            let unseal_e = manifest
+                .entry("unseal", name)
+                .ok_or_else(|| anyhow!("manifest has no unseal/{name}"))?;
+            let seal = Self::compile_one(&client, &manifest.dir.join(&seal_e.file))?;
+            let unseal = Self::compile_one(&client, &manifest.dir.join(&unseal_e.file))?;
+            geometries.insert(
+                name.to_string(),
+                CompiledGeometry {
+                    n_blocks: seal_e.n_blocks,
+                    seal,
+                    unseal,
+                },
+            );
+        }
+        Ok(SealRuntime { client, geometries })
+    }
+
+    fn compile_one(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))
+    }
+
+    pub fn has_geometry(&self, name: &str) -> bool {
+        self.geometries.contains_key(name)
+    }
+
+    pub fn n_blocks(&self, name: &str) -> Option<usize> {
+        self.geometries.get(name).map(|g| g.n_blocks)
+    }
+
+    /// Largest loaded geometry whose chunk fits `words` words, else the
+    /// smallest loaded geometry.
+    pub fn pick_geometry(&self, words: usize) -> Option<&str> {
+        let mut best: Option<(&str, usize)> = None;
+        let mut smallest: Option<(&str, usize)> = None;
+        for (name, g) in &self.geometries {
+            let w = g.n_blocks * 16;
+            if smallest.is_none_or(|(_, sw)| w < sw) {
+                smallest = Some((name.as_str(), w));
+            }
+            if w <= words && best.is_none_or(|(_, bw)| w > bw) {
+                best = Some((name.as_str(), w));
+            }
+        }
+        best.or(smallest).map(|(n, _)| n)
+    }
+
+    /// Execute seal/unseal on one chunk. `data` must be exactly
+    /// `n_blocks*16` words. Returns (payload words, digest4).
+    pub fn run(
+        &self,
+        kind: engine::Kind,
+        name: &str,
+        key: &[u32; 8],
+        iv: &[u32; 4],
+        data: &[u32],
+    ) -> Result<(Vec<u32>, [u32; 4])> {
+        let g = self
+            .geometries
+            .get(name)
+            .ok_or_else(|| anyhow!("geometry {name} not loaded"))?;
+        if data.len() != g.n_blocks * 16 {
+            bail!(
+                "chunk size mismatch: {} words != {}",
+                data.len(),
+                g.n_blocks * 16
+            );
+        }
+        let exe = match kind {
+            engine::Kind::Seal => &g.seal,
+            engine::Kind::Unseal => &g.unseal,
+        };
+        let key_lit = xla::Literal::vec1(&key[..]);
+        let iv_lit = xla::Literal::vec1(&iv[..]);
+        let data_lit = xla::Literal::vec1(data).reshape(&[g.n_blocks as i64, 16])?;
+        let result = exe.execute::<xla::Literal>(&[key_lit, iv_lit, data_lit])?[0][0]
+            .to_literal_sync()?;
+        // return_tuple=True ABI: a 2-tuple (payload, digest).
+        let parts = result.to_tuple()?;
+        if parts.len() != 2 {
+            bail!("artifact returned {}-tuple, expected 2", parts.len());
+        }
+        let payload = parts[0].to_vec::<u32>()?;
+        let dig_vec = parts[1].to_vec::<u32>()?;
+        if dig_vec.len() != 4 {
+            bail!("digest length {} != 4", dig_vec.len());
+        }
+        Ok((payload, [dig_vec[0], dig_vec[1], dig_vec[2], dig_vec[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_from_fixture() {
+        let dir = std::env::temp_dir().join(format!("htcdm-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"abi_version": 1, "entries": [
+                {"kind":"seal","name":"probe","file":"seal_probe.hlo.txt",
+                 "n_blocks":16,"tile":16,"chunk_bytes":1024,
+                 "args":[],"outputs":[],"sha256":"x"}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.abi_version, 1);
+        assert_eq!(m.entries.len(), 1);
+        let e = m.entry("seal", "probe").unwrap();
+        assert_eq!(e.n_blocks, 16);
+        assert!(m.entry("unseal", "probe").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_bad_abi() {
+        let dir = std::env::temp_dir().join(format!("htcdm-badabi-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"abi_version": 99, "entries": []}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent/htcdm").is_err());
+    }
+}

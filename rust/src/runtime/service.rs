@@ -1,0 +1,216 @@
+//! Engine service: a dedicated thread owning a [`SealEngine`] and serving
+//! seal/unseal requests over channels.
+//!
+//! The PJRT client is not `Send`, so the XLA engine cannot hop threads.
+//! Real-mode pools instead run one crypto-service thread per node (just as
+//! the paper's submit node funneled all transfer crypto through its CPU),
+//! and every connection thread talks to it through a cloneable handle that
+//! itself implements [`SealEngine`].
+
+use super::engine::{Kind, SealEngine};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+
+enum Req {
+    Process {
+        kind: Kind,
+        key: [u32; 8],
+        nonce: [u32; 3],
+        counter0: u32,
+        data: Vec<u32>,
+        reply: mpsc::Sender<Result<(Vec<u32>, [u32; 4])>>,
+    },
+    Describe {
+        reply: mpsc::Sender<String>,
+    },
+}
+
+/// Cloneable handle to a crypto-service thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Req>,
+}
+
+/// The service: joinable thread + handle factory.
+pub struct EngineService {
+    handle: EngineHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EngineService {
+    /// Spawn a service thread; the engine is constructed *inside* the
+    /// thread by `factory` (so non-Send engines work).
+    pub fn spawn<F>(factory: F) -> EngineService
+    where
+        F: FnOnce() -> Result<Box<dyn SealEngine>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let thread = std::thread::Builder::new()
+            .name("htcdm-crypto".into())
+            .spawn(move || {
+                let mut engine = match factory() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        // Drain requests with the construction error.
+                        while let Ok(req) = rx.recv() {
+                            match req {
+                                Req::Process { reply, .. } => {
+                                    let _ = reply.send(Err(anyhow!("engine init failed: {e}")));
+                                }
+                                Req::Describe { reply } => {
+                                    let _ = reply.send(format!("failed: {e}"));
+                                }
+                            }
+                        }
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Process {
+                            kind,
+                            key,
+                            nonce,
+                            counter0,
+                            mut data,
+                            reply,
+                        } => {
+                            let r = engine
+                                .process(kind, &key, &nonce, counter0, &mut data)
+                                .map(|digest| (data, digest));
+                            let _ = reply.send(r);
+                        }
+                        Req::Describe { reply } => {
+                            let _ = reply.send(engine.describe());
+                        }
+                    }
+                }
+            })
+            .expect("spawn crypto thread");
+        EngineService {
+            handle: EngineHandle { tx },
+            thread: Some(thread),
+        }
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for EngineService {
+    fn drop(&mut self) {
+        // Closing our handle's sender isn't enough if clones are live; the
+        // thread exits when the last handle drops. Detach politely.
+        if let Some(t) = self.thread.take() {
+            drop(std::mem::replace(
+                &mut self.handle,
+                EngineHandle {
+                    tx: {
+                        let (tx, _rx) = mpsc::channel();
+                        tx
+                    },
+                },
+            ));
+            let _ = t.join();
+        }
+    }
+}
+
+impl SealEngine for EngineHandle {
+    fn process(
+        &mut self,
+        kind: Kind,
+        key: &[u32; 8],
+        nonce: &[u32; 3],
+        counter0: u32,
+        data: &mut [u32],
+    ) -> Result<[u32; 4]> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Req::Process {
+                kind,
+                key: *key,
+                nonce: *nonce,
+                counter0,
+                data: data.to_vec(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("crypto service gone"))?;
+        let (out, digest) = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("crypto service dropped reply"))??;
+        data.copy_from_slice(&out);
+        Ok(digest)
+    }
+
+    fn describe(&self) -> String {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if self.tx.send(Req::Describe { reply: reply_tx }).is_err() {
+            return "service(gone)".into();
+        }
+        reply_rx
+            .recv()
+            .map(|d| format!("service[{d}]"))
+            .unwrap_or_else(|_| "service(gone)".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::engine::NativeEngine;
+    use crate::security::{chacha, Method};
+
+    #[test]
+    fn service_matches_direct_engine() {
+        let svc = EngineService::spawn(|| {
+            Ok(Box::new(NativeEngine::new(Method::Chacha20)) as Box<dyn SealEngine>)
+        });
+        let mut h = svc.handle();
+        let key = [1u32; 8];
+        let nonce = [2, 3, 4];
+        let mut data: Vec<u32> = (0..64u32).collect();
+        let mut expect = data.clone();
+        let d_expect = chacha::seal_chunk(&key, &nonce, 0, &mut expect);
+        let d = h.process(Kind::Seal, &key, &nonce, 0, &mut data).unwrap();
+        assert_eq!(data, expect);
+        assert_eq!(d, d_expect);
+        assert!(h.describe().contains("native/CHACHA20"));
+    }
+
+    #[test]
+    fn service_shared_across_threads() {
+        let svc = EngineService::spawn(|| {
+            Ok(Box::new(NativeEngine::new(Method::Chacha20)) as Box<dyn SealEngine>)
+        });
+        let mut handles = Vec::new();
+        for i in 0..4u32 {
+            let mut h = svc.handle();
+            handles.push(std::thread::spawn(move || {
+                let key = [i; 8];
+                let nonce = [0, 0, i];
+                let mut data: Vec<u32> = (0..32u32).map(|x| x ^ i).collect();
+                let orig = data.clone();
+                let d1 = h.process(Kind::Seal, &key, &nonce, 0, &mut data).unwrap();
+                let d2 = h.process(Kind::Unseal, &key, &nonce, 0, &mut data).unwrap();
+                assert_eq!(data, orig);
+                assert_eq!(d1, d2);
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn failed_factory_reports_error() {
+        let svc = EngineService::spawn(|| Err(anyhow!("nope")));
+        let mut h = svc.handle();
+        let mut data = vec![0u32; 16];
+        let err = h
+            .process(Kind::Seal, &[0; 8], &[0; 3], 0, &mut data)
+            .unwrap_err();
+        assert!(err.to_string().contains("engine init failed"));
+    }
+}

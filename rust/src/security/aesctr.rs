@@ -1,0 +1,133 @@
+//! AES-256-CTR data plane via the `aes` crate — the cipher HTCondor 9.0.1
+//! actually defaults to. Selectable with `SEC_DEFAULT_ENCRYPTION = AES`.
+//!
+//! Shares the poly16 integrity digest with the ChaCha path, so frames are
+//! interchangeable apart from the keystream. The counter block layout is
+//! nonce (12 bytes LE words) || counter (4 bytes LE), mirroring the ChaCha
+//! (counter, nonce) addressing so the same (chunk counter0) framing works.
+
+use aes::cipher::{generic_array::GenericArray, BlockEncrypt, KeyInit};
+use aes::Aes256;
+
+use super::chacha::{digest_finalize, poly16_digest};
+
+/// AES-256-CTR keystream XOR over whole 64-byte "rows" (4 AES blocks per
+/// row, so row counters advance by 4 AES blocks).
+pub struct AesCtr {
+    cipher: Aes256,
+    nonce: [u32; 3],
+}
+
+impl AesCtr {
+    pub fn new(key_words: &[u32; 8], nonce: &[u32; 3]) -> AesCtr {
+        let mut key = [0u8; 32];
+        for (i, w) in key_words.iter().enumerate() {
+            key[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+        }
+        AesCtr {
+            cipher: Aes256::new(GenericArray::from_slice(&key)),
+            nonce: *nonce,
+        }
+    }
+
+    fn keystream_words(&self, aes_block_counter: u64) -> [u32; 4] {
+        let mut block = [0u8; 16];
+        block[0..4].copy_from_slice(&self.nonce[0].to_le_bytes());
+        block[4..8].copy_from_slice(&self.nonce[1].to_le_bytes());
+        block[8..12].copy_from_slice(&self.nonce[2].to_le_bytes());
+        block[12..16].copy_from_slice(&(aes_block_counter as u32).to_le_bytes());
+        let mut ga = GenericArray::clone_from_slice(&block);
+        self.cipher.encrypt_block(&mut ga);
+        let mut out = [0u32; 4];
+        for i in 0..4 {
+            out[i] = u32::from_le_bytes(ga[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        out
+    }
+
+    /// XOR data (multiple of 16 words) with the keystream; `row0` is the
+    /// 64-byte-row counter (matching the ChaCha chunk counter).
+    pub fn xor_stream(&self, row0: u32, data: &mut [u32]) {
+        assert!(data.len() % 16 == 0);
+        for (row, chunk) in data.chunks_mut(16).enumerate() {
+            let base = (row0 as u64 + row as u64) * 4;
+            for b in 0..4 {
+                let ks = self.keystream_words(base + b as u64);
+                for j in 0..4 {
+                    chunk[b * 4 + j] ^= ks[j];
+                }
+            }
+        }
+    }
+}
+
+/// Seal with AES-256-CTR + poly16 (encrypt-then-digest).
+pub fn seal_chunk(key: &[u32; 8], nonce: &[u32; 3], counter0: u32, data: &mut [u32]) -> [u32; 4] {
+    let ctr = AesCtr::new(key, nonce);
+    ctr.xor_stream(counter0, data);
+    let lane = poly16_digest(data, counter0);
+    digest_finalize(&lane, data.len() as u32, nonce)
+}
+
+/// Unseal with AES-256-CTR + poly16 (digest-then-decrypt).
+pub fn unseal_chunk(key: &[u32; 8], nonce: &[u32; 3], counter0: u32, data: &mut [u32]) -> [u32; 4] {
+    let lane = poly16_digest(data, counter0);
+    let digest = digest_finalize(&lane, data.len() as u32, nonce);
+    let ctr = AesCtr::new(key, nonce);
+    ctr.xor_stream(counter0, data);
+    digest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let key = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        let nonce = [11, 22, 33];
+        let mut data: Vec<u32> = (0..48u32).map(|i| i.wrapping_mul(0x9E3779B1)).collect();
+        let orig = data.clone();
+        let d1 = seal_chunk(&key, &nonce, 7, &mut data);
+        assert_ne!(data, orig);
+        let d2 = unseal_chunk(&key, &nonce, 7, &mut data);
+        assert_eq!(data, orig);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn differs_from_chacha_ciphertext() {
+        let key = [9u32; 8];
+        let nonce = [1, 2, 3];
+        let mut a: Vec<u32> = (0..16u32).collect();
+        let mut b = a.clone();
+        super::super::chacha::seal_chunk(&key, &nonce, 0, &mut a);
+        seal_chunk(&key, &nonce, 0, &mut b);
+        assert_ne!(a, b, "different ciphers, different ciphertext");
+    }
+
+    #[test]
+    fn counter_continuity() {
+        let key = [3u32; 8];
+        let nonce = [7, 7, 7];
+        let data: Vec<u32> = (0..64u32).collect();
+        let mut whole = data.clone();
+        AesCtr::new(&key, &nonce).xor_stream(10, &mut whole);
+        let mut head = data[..32].to_vec();
+        let mut tail = data[32..].to_vec();
+        let c = AesCtr::new(&key, &nonce);
+        c.xor_stream(10, &mut head);
+        c.xor_stream(12, &mut tail);
+        assert_eq!(&whole[..32], &head[..]);
+        assert_eq!(&whole[32..], &tail[..]);
+    }
+
+    #[test]
+    fn keystream_nonzero_and_counter_dependent() {
+        let c = AesCtr::new(&[0u32; 8], &[0, 0, 0]);
+        let a = c.keystream_words(0);
+        let b = c.keystream_words(1);
+        assert_ne!(a, [0u32; 4]);
+        assert_ne!(a, b);
+    }
+}

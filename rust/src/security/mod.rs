@@ -1,0 +1,89 @@
+//! Security layer: authentication, session key establishment, and the
+//! sealed (encrypted + integrity-digested) transfer primitives.
+//!
+//! The paper ran with HTCondor 9.0.1 defaults: *"all file transfers being
+//! fully authenticated, AES encrypted, and integrity checked"*. We
+//! reproduce that architecture:
+//!
+//! * [`session`] — pool-password authentication (HMAC-SHA256 challenge/
+//!   response) and per-connection session key + nonce derivation.
+//! * [`chacha`] — the native ChaCha20 + poly16 data-plane, bit-identical
+//!   to the Pallas kernel (the AOT artifact and this module are
+//!   cross-checked at engine startup and in `tests/artifact_runtime.rs`).
+//! * [`aesctr`] — AES-256-CTR via the `aes` crate, the drop-in alternate
+//!   cipher (HTCondor's default is AES; ChaCha20 is our TPU-shaped path —
+//!   see DESIGN.md §Hardware-Adaptation).
+//!
+//! Method negotiation mirrors HTCondor's `SEC_DEFAULT_ENCRYPTION` /
+//! crypto-methods list: each side offers an ordered list, the first common
+//! entry wins.
+
+pub mod aesctr;
+pub mod chacha;
+pub mod session;
+
+/// Negotiable data-plane cipher methods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// ChaCha20 + poly16 digest (the AOT/Pallas path or native Rust).
+    Chacha20,
+    /// AES-256-CTR + poly16 digest.
+    Aes256Ctr,
+    /// No encryption (integrity digest only) — for ablation runs.
+    Plain,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Chacha20 => "CHACHA20",
+            Method::Aes256Ctr => "AES",
+            Method::Plain => "PLAIN",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "CHACHA20" => Some(Method::Chacha20),
+            "AES" | "AES256CTR" => Some(Method::Aes256Ctr),
+            "PLAIN" | "NONE" => Some(Method::Plain),
+            _ => None,
+        }
+    }
+}
+
+/// First-common-entry method negotiation (client preference order wins,
+/// as in HTCondor's security negotiation).
+pub fn negotiate(client: &[Method], server: &[Method]) -> Option<Method> {
+    client.iter().copied().find(|m| server.contains(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in [Method::Chacha20, Method::Aes256Ctr, Method::Plain] {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("aes"), Some(Method::Aes256Ctr));
+        assert_eq!(Method::parse("none"), Some(Method::Plain));
+        assert_eq!(Method::parse("rot13"), None);
+    }
+
+    #[test]
+    fn negotiation_prefers_client_order() {
+        let client = [Method::Chacha20, Method::Aes256Ctr];
+        let server = [Method::Aes256Ctr, Method::Chacha20];
+        assert_eq!(negotiate(&client, &server), Some(Method::Chacha20));
+    }
+
+    #[test]
+    fn negotiation_fails_on_disjoint() {
+        assert_eq!(
+            negotiate(&[Method::Chacha20], &[Method::Aes256Ctr]),
+            None
+        );
+    }
+}

@@ -1,0 +1,255 @@
+//! Session establishment: pool-password authentication and per-connection
+//! key/nonce derivation — the "fully authenticated" part of the paper's
+//! default security stack.
+//!
+//! Protocol (a faithful miniature of HTCondor's PASSWORD method):
+//!
+//! 1. client → server: `ClientHello { client_nonce, methods }`
+//! 2. server → client: `ServerHello { server_nonce, method, server_mac }`
+//!    where `server_mac = HMAC(pool_key, "srv" || client_nonce || server_nonce)`
+//! 3. client → server: `client_mac = HMAC(pool_key, "cli" || server_nonce || client_nonce)`
+//! 4. both derive: `session_key = HMAC(pool_key, "key" || client_nonce || server_nonce)`
+//!    and a 96-bit data-plane nonce from the same PRF with label "non".
+//!
+//! Mutual authentication: each side proves knowledge of the pool key over
+//! the other's fresh nonce. The session key is never transmitted.
+
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+
+use super::Method;
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// Shared pool secret (HTCondor pool password).
+#[derive(Debug, Clone)]
+pub struct PoolKey(pub [u8; 32]);
+
+impl PoolKey {
+    /// Derive a pool key from a passphrase (sha256, as condor_store_cred
+    /// effectively does).
+    pub fn from_passphrase(p: &str) -> PoolKey {
+        use sha2::Digest;
+        let mut h = Sha256::new();
+        h.update(b"htcdm-pool-v1");
+        h.update(p.as_bytes());
+        PoolKey(h.finalize().into())
+    }
+}
+
+fn prf(key: &PoolKey, label: &[u8], a: &[u8; 16], b: &[u8; 16]) -> [u8; 32] {
+    let mut mac = HmacSha256::new_from_slice(&key.0).expect("hmac accepts any key length");
+    mac.update(label);
+    mac.update(a);
+    mac.update(b);
+    mac.finalize().into_bytes().into()
+}
+
+/// An established, mutually-authenticated session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Session {
+    /// Data-plane cipher key as 8 LE words (the artifact ABI's key arg).
+    pub key_words: [u32; 8],
+    /// 96-bit data-plane nonce as 3 LE words.
+    pub nonce_words: [u32; 3],
+    pub method: Method,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AuthError {
+    #[error("no common cipher method")]
+    NoCommonMethod,
+    #[error("server failed authentication (bad pool key?)")]
+    BadServerMac,
+    #[error("client failed authentication (bad pool key?)")]
+    BadClientMac,
+}
+
+/// Message 1.
+#[derive(Debug, Clone)]
+pub struct ClientHello {
+    pub client_nonce: [u8; 16],
+    pub methods: Vec<Method>,
+}
+
+/// Message 2.
+#[derive(Debug, Clone)]
+pub struct ServerHello {
+    pub server_nonce: [u8; 16],
+    pub method: Method,
+    pub server_mac: [u8; 32],
+}
+
+/// Client side: start a handshake.
+pub fn client_hello(client_nonce: [u8; 16], methods: &[Method]) -> ClientHello {
+    ClientHello {
+        client_nonce,
+        methods: methods.to_vec(),
+    }
+}
+
+/// Server side: answer a hello, proving pool-key knowledge.
+pub fn server_respond(
+    key: &PoolKey,
+    hello: &ClientHello,
+    server_nonce: [u8; 16],
+    server_methods: &[Method],
+) -> Result<ServerHello, AuthError> {
+    let method = super::negotiate(&hello.methods, server_methods).ok_or(AuthError::NoCommonMethod)?;
+    Ok(ServerHello {
+        server_nonce,
+        method,
+        server_mac: prf(key, b"srv", &hello.client_nonce, &server_nonce),
+    })
+}
+
+/// Client side: verify the server, produce the client MAC and the session.
+pub fn client_finish(
+    key: &PoolKey,
+    hello: &ClientHello,
+    reply: &ServerHello,
+) -> Result<([u8; 32], Session), AuthError> {
+    let expect = prf(key, b"srv", &hello.client_nonce, &reply.server_nonce);
+    if expect != reply.server_mac {
+        return Err(AuthError::BadServerMac);
+    }
+    let client_mac = prf(key, b"cli", &reply.server_nonce, &hello.client_nonce);
+    Ok((
+        client_mac,
+        derive_session(key, &hello.client_nonce, &reply.server_nonce, reply.method),
+    ))
+}
+
+/// Server side: verify the client MAC and derive the same session.
+pub fn server_finish(
+    key: &PoolKey,
+    hello: &ClientHello,
+    reply: &ServerHello,
+    client_mac: &[u8; 32],
+) -> Result<Session, AuthError> {
+    let expect = prf(key, b"cli", &reply.server_nonce, &hello.client_nonce);
+    if &expect != client_mac {
+        return Err(AuthError::BadClientMac);
+    }
+    Ok(derive_session(
+        key,
+        &hello.client_nonce,
+        &reply.server_nonce,
+        reply.method,
+    ))
+}
+
+fn derive_session(key: &PoolKey, cn: &[u8; 16], sn: &[u8; 16], method: Method) -> Session {
+    let key_material = prf(key, b"key", cn, sn);
+    let nonce_material = prf(key, b"non", cn, sn);
+    let mut key_words = [0u32; 8];
+    for i in 0..8 {
+        key_words[i] = u32::from_le_bytes(key_material[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    let mut nonce_words = [0u32; 3];
+    for i in 0..3 {
+        nonce_words[i] = u32::from_le_bytes(nonce_material[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    Session {
+        key_words,
+        nonce_words,
+        method,
+    }
+}
+
+/// Run the whole handshake in-process (sim mode uses this; real mode sends
+/// the three messages over the wire).
+pub fn handshake(
+    key: &PoolKey,
+    client_nonce: [u8; 16],
+    server_nonce: [u8; 16],
+    client_methods: &[Method],
+    server_methods: &[Method],
+) -> Result<Session, AuthError> {
+    let hello = client_hello(client_nonce, client_methods);
+    let reply = server_respond(key, &hello, server_nonce, server_methods)?;
+    let (mac, client_session) = client_finish(key, &hello, &reply)?;
+    let server_session = server_finish(key, &hello, &reply, &mac)?;
+    debug_assert_eq!(client_session, server_session);
+    Ok(server_session)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nonce(b: u8) -> [u8; 16] {
+        [b; 16]
+    }
+
+    #[test]
+    fn successful_handshake_derives_same_session() {
+        let key = PoolKey::from_passphrase("hunter2");
+        let s = handshake(
+            &key,
+            nonce(1),
+            nonce(2),
+            &[Method::Chacha20, Method::Aes256Ctr],
+            &[Method::Aes256Ctr, Method::Chacha20],
+        )
+        .unwrap();
+        assert_eq!(s.method, Method::Chacha20);
+        assert_ne!(s.key_words, [0u32; 8]);
+        assert_ne!(s.nonce_words, [0u32; 3]);
+    }
+
+    #[test]
+    fn wrong_pool_key_fails_both_ways() {
+        let good = PoolKey::from_passphrase("right");
+        let bad = PoolKey::from_passphrase("wrong");
+        let hello = client_hello(nonce(1), &[Method::Chacha20]);
+        let reply = server_respond(&bad, &hello, nonce(2), &[Method::Chacha20]).unwrap();
+        // Client detects the imposter server.
+        assert_eq!(
+            client_finish(&good, &hello, &reply).unwrap_err(),
+            AuthError::BadServerMac
+        );
+        // And an imposter client is detected by the server.
+        let reply2 = server_respond(&good, &hello, nonce(2), &[Method::Chacha20]).unwrap();
+        let (mac, _) = client_finish(&good, &hello, &reply2).unwrap();
+        let mut tampered = mac;
+        tampered[0] ^= 1;
+        assert_eq!(
+            server_finish(&good, &hello, &reply2, &tampered).unwrap_err(),
+            AuthError::BadClientMac
+        );
+    }
+
+    #[test]
+    fn sessions_differ_per_nonce_pair() {
+        let key = PoolKey::from_passphrase("p");
+        let m = [Method::Chacha20];
+        let s1 = handshake(&key, nonce(1), nonce(2), &m, &m).unwrap();
+        let s2 = handshake(&key, nonce(1), nonce(3), &m, &m).unwrap();
+        let s3 = handshake(&key, nonce(4), nonce(2), &m, &m).unwrap();
+        assert_ne!(s1.key_words, s2.key_words);
+        assert_ne!(s1.key_words, s3.key_words);
+        assert_ne!(s1.nonce_words, s2.nonce_words);
+    }
+
+    #[test]
+    fn no_common_method() {
+        let key = PoolKey::from_passphrase("p");
+        assert_eq!(
+            handshake(&key, nonce(1), nonce(2), &[Method::Chacha20], &[Method::Plain]).unwrap_err(),
+            AuthError::NoCommonMethod
+        );
+    }
+
+    #[test]
+    fn passphrase_determinism() {
+        assert_eq!(
+            PoolKey::from_passphrase("x").0,
+            PoolKey::from_passphrase("x").0
+        );
+        assert_ne!(
+            PoolKey::from_passphrase("x").0,
+            PoolKey::from_passphrase("y").0
+        );
+    }
+}

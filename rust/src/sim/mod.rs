@@ -1,0 +1,126 @@
+//! Discrete-event simulation core: a deterministic event queue over
+//! virtual [`SimTime`].
+//!
+//! Ties are broken by insertion sequence so runs are exactly reproducible.
+//! The experiment engine (`coordinator::engine`) drives everything through
+//! this queue: job lifecycle events, negotiation cycles, network
+//! re-solves, background-traffic updates.
+
+use crate::util::units::SimTime;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A deterministic time-ordered event queue.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<(SimTime, u64)>>,
+    payload: std::collections::HashMap<u64, E>,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            payload: std::collections::HashMap::new(),
+            seq: 0,
+        }
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `event` at absolute time `t`. Returns a token that can be
+    /// used to cancel the event.
+    pub fn push(&mut self, t: SimTime, event: E) -> u64 {
+        let tok = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse((t, tok)));
+        self.payload.insert(tok, event);
+        tok
+    }
+
+    /// Cancel a scheduled event by token. Returns the payload if it had not
+    /// fired yet.
+    pub fn cancel(&mut self, token: u64) -> Option<E> {
+        self.payload.remove(&token)
+    }
+
+    /// Pop the earliest live event.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        while let Some(Reverse((t, tok))) = self.heap.pop() {
+            if let Some(e) = self.payload.remove(&tok) {
+                return Some((t, e));
+            }
+            // cancelled — skip
+        }
+        None
+    }
+
+    /// Time of the earliest live event without popping it.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        while let Some(Reverse((t, tok))) = self.heap.peek().copied() {
+            if self.payload.contains_key(&tok) {
+                return Some(t);
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.payload.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.payload.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_by_time_then_insertion() {
+        let mut q = EventQueue::new();
+        q.push(SimTime::from_secs(5), "c");
+        q.push(SimTime::from_secs(1), "a1");
+        q.push(SimTime::from_secs(1), "a2");
+        q.push(SimTime::from_secs(3), "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a1", "a2", "b", "c"]);
+    }
+
+    #[test]
+    fn cancel_suppresses_event() {
+        let mut q = EventQueue::new();
+        let t1 = q.push(SimTime::from_secs(1), 1);
+        q.push(SimTime::from_secs(2), 2);
+        assert_eq!(q.cancel(t1), Some(1));
+        assert_eq!(q.cancel(t1), None, "double-cancel is None");
+        assert_eq!(q.pop(), Some((SimTime::from_secs(2), 2)));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn peek_skips_cancelled() {
+        let mut q = EventQueue::new();
+        let t = q.push(SimTime::from_secs(1), "x");
+        q.push(SimTime::from_secs(4), "y");
+        q.cancel(t);
+        assert_eq!(q.peek_time(), Some(SimTime::from_secs(4)));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn empty_queue() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+        assert!(q.peek_time().is_none());
+    }
+}

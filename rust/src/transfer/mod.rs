@@ -1,0 +1,18 @@
+//! The transfer subsystem — the paper's subject.
+//!
+//! In a default HTCondor setup every job's input and output sandbox flows
+//! through the submit node. Two pieces live here:
+//!
+//! * [`queue`] — the schedd's file-transfer queue: admission control over
+//!   concurrent sandbox transfers. HTCondor ships a disk-load throttle
+//!   tuned for spinning disks; the paper had to *disable* it to reach
+//!   90 Gbps (§III: default settings took 64 min instead of 32).
+//! * [`stream`] — the framed, sealed (encrypted + integrity-checked) chunk
+//!   stream used by real mode, running over any `Read`/`Write` transport
+//!   with the [`crate::runtime::engine::SealEngine`] doing the data-plane
+//!   work.
+
+pub mod queue;
+pub mod stream;
+
+pub use queue::{ThrottlePolicy, TransferQueue};

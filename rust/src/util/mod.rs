@@ -1,0 +1,11 @@
+//! Small shared substrates: units, PRNG, statistics, JSON, test kit.
+
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod testkit;
+pub mod units;
+
+pub use prng::Prng;
+pub use stats::{Histogram, OnlineStats};
+pub use units::{Bytes, Gbps, SimTime};

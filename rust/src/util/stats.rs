@@ -1,0 +1,193 @@
+//! Streaming statistics and histograms for experiment reports.
+
+/// Welford online mean/variance plus min/max and a value reservoir for
+/// exact percentiles (the experiment scales here are ≤ ~10⁵ samples, so we
+/// just keep everything).
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    values: Vec<f64>,
+    mean: f64,
+    m2: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> OnlineStats {
+        OnlineStats::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.values.push(x);
+        let n = self.values.len() as f64;
+        let delta = x - self.mean;
+        self.mean += delta / n;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.values.len() < 2 {
+            0.0
+        } else {
+            self.m2 / (self.values.len() - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact percentile (nearest-rank), p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+}
+
+/// Fixed-width histogram for transfer-time / rate distributions.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    width: f64,
+    bins: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Histogram {
+        assert!(hi > lo && nbins > 0);
+        Histogram {
+            lo,
+            width: (hi - lo) / nbins as f64,
+            bins: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else {
+            let i = ((x - self.lo) / self.width) as usize;
+            if i >= self.bins.len() {
+                self.overflow += 1;
+            } else {
+                self.bins[i] += 1;
+            }
+        }
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        self.lo + (i as f64 + 0.5) * self.width
+    }
+
+    /// Render as compact ASCII rows (used by the CLI `render` command).
+    pub fn ascii(&self, max_width: usize) -> String {
+        let peak = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.bins.iter().enumerate() {
+            let bar = "#".repeat((c as usize * max_width).div_ceil(peak as usize).min(max_width));
+            out.push_str(&format!("{:>10.2} | {:<6} {}\n", self.bin_center(i), c, bar));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let mut s = OnlineStats::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.variance() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.sum(), 15.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = OnlineStats::new();
+        for x in 0..100 {
+            s.push(x as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), 99.0);
+        assert!((s.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((s.percentile(90.0) - 89.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn empty_percentile_nan() {
+        assert!(OnlineStats::new().percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.5, 1.5, 1.6, 9.9, -1.0, 11.0] {
+            h.push(x);
+        }
+        assert_eq!(h.bins()[0], 1);
+        assert_eq!(h.bins()[1], 2);
+        assert_eq!(h.bins()[9], 1);
+        assert_eq!(h.total(), 6);
+        assert!((h.bin_center(0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_ascii_renders() {
+        let mut h = Histogram::new(0.0, 4.0, 4);
+        for _ in 0..8 {
+            h.push(1.5);
+        }
+        h.push(2.5);
+        let art = h.ascii(20);
+        assert!(art.contains('#'));
+        assert_eq!(art.lines().count(), 4);
+    }
+}

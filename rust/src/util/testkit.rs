@@ -1,0 +1,90 @@
+//! Mini property-testing kit (the vendor set has no proptest).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` deterministic random
+//! inputs drawn from a [`Gen`]; on failure it reports the case seed so the
+//! exact input can be replayed with `replay(seed, f)`. No shrinking — the
+//! generators are kept small enough that raw counterexamples are readable.
+
+use super::prng::Prng;
+
+/// A deterministic generator handle passed to property bodies.
+pub struct Gen {
+    pub rng: Prng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// A vector of length in [lo, hi] filled by `f`.
+    pub fn vec_of<T>(&mut self, lo: usize, hi: usize, mut f: impl FnMut(&mut Prng) -> T) -> Vec<T> {
+        let n = self.rng.range_usize(lo, hi);
+        (0..n).map(|_| f(&mut self.rng)).collect()
+    }
+
+    pub fn bytes(&mut self, lo: usize, hi: usize) -> Vec<u8> {
+        let n = self.rng.range_usize(lo, hi);
+        let mut v = vec![0u8; n];
+        self.rng.fill_bytes(&mut v);
+        v
+    }
+}
+
+/// Run a property over `cases` generated inputs. Panics with the failing
+/// case seed on the first violation.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000_0000 ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Prng::new(seed),
+            case,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single case by seed (for debugging a failure printed by check).
+pub fn replay(seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut g = Gen {
+        rng: Prng::new(seed),
+        case: 0,
+    };
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("trivial", 50, |g| {
+            let v = g.vec_of(0, 10, |r| r.next_u32());
+            assert!(v.len() <= 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing' failed")]
+    fn reports_failing_case() {
+        check("failing", 10, |g| {
+            let b = g.bytes(1, 4);
+            assert!(b.len() > 4, "too short");
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut seen1 = Vec::new();
+        check("collect1", 5, |g| seen1.push(g.rng.next_u64()));
+        let mut seen2 = Vec::new();
+        check("collect2", 5, |g| seen2.push(g.rng.next_u64()));
+        assert_eq!(seen1, seen2);
+    }
+}

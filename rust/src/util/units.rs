@@ -1,0 +1,199 @@
+//! Units for the simulator and the reports: bytes, rates, virtual time.
+//!
+//! Virtual time is kept in integer nanoseconds for deterministic event
+//! ordering; rates are `f64` bytes/second (the fluid solver is numeric
+//! anyway). Formatting helpers render the paper's units (Gbps, GB, min).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Virtual time in nanoseconds since simulation start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_secs_f64(s: f64) -> SimTime {
+        debug_assert!(s >= 0.0, "negative time: {s}");
+        SimTime((s * 1e9).round() as u64)
+    }
+    pub fn from_secs(s: u64) -> SimTime {
+        SimTime(s * 1_000_000_000)
+    }
+    pub fn from_millis(ms: u64) -> SimTime {
+        SimTime(ms * 1_000_000)
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    pub fn as_mins_f64(self) -> f64 {
+        self.as_secs_f64() / 60.0
+    }
+    /// Saturating difference.
+    pub fn since(self, earlier: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.as_secs_f64();
+        if s < 1.0 {
+            write!(f, "{:.1}ms", s * 1e3)
+        } else if s < 120.0 {
+            write!(f, "{s:.1}s")
+        } else {
+            write!(f, "{:.1}min", s / 60.0)
+        }
+    }
+}
+
+/// Byte counts (files, transfers, caches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Bytes(pub u64);
+
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+
+impl Bytes {
+    pub const ZERO: Bytes = Bytes(0);
+
+    pub fn kib(n: u64) -> Bytes {
+        Bytes(n * KIB)
+    }
+    pub fn mib(n: u64) -> Bytes {
+        Bytes(n * MIB)
+    }
+    pub fn gib(n: u64) -> Bytes {
+        Bytes(n * GIB)
+    }
+    pub fn as_f64(self) -> f64 {
+        self.0 as f64
+    }
+    /// Time to move these bytes at `rate` bytes/sec.
+    pub fn time_at(self, rate_bps: f64) -> SimTime {
+        debug_assert!(rate_bps > 0.0);
+        SimTime::from_secs_f64(self.0 as f64 / rate_bps)
+    }
+}
+
+impl Add for Bytes {
+    type Output = Bytes;
+    fn add(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 + rhs.0)
+    }
+}
+impl AddAssign for Bytes {
+    fn add_assign(&mut self, rhs: Bytes) {
+        self.0 += rhs.0;
+    }
+}
+
+impl fmt::Display for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.0 as f64;
+        if b >= GIB as f64 {
+            write!(f, "{:.2} GiB", b / GIB as f64)
+        } else if b >= MIB as f64 {
+            write!(f, "{:.2} MiB", b / MIB as f64)
+        } else if b >= KIB as f64 {
+            write!(f, "{:.2} KiB", b / KIB as f64)
+        } else {
+            write!(f, "{} B", self.0)
+        }
+    }
+}
+
+/// Network rate expressed the way the paper does (decimal gigabits/sec).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Gbps(pub f64);
+
+impl Gbps {
+    /// Decimal gigabits/sec -> bytes/sec (the solver's unit).
+    pub fn bytes_per_sec(self) -> f64 {
+        self.0 * 1e9 / 8.0
+    }
+    pub fn from_bytes_per_sec(bps: f64) -> Gbps {
+        Gbps(bps * 8.0 / 1e9)
+    }
+}
+
+impl fmt::Display for Gbps {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.1} Gbps", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simtime_roundtrip() {
+        let t = SimTime::from_secs_f64(12.5);
+        assert!((t.as_secs_f64() - 12.5).abs() < 1e-9);
+        assert_eq!(SimTime::from_secs(3).0, 3_000_000_000);
+        assert_eq!(SimTime::from_millis(1500), SimTime::from_secs_f64(1.5));
+    }
+
+    #[test]
+    fn simtime_arith_and_order() {
+        let a = SimTime::from_secs(10);
+        let b = SimTime::from_secs(4);
+        assert_eq!((a + b).as_secs_f64(), 14.0);
+        assert_eq!((a - b).as_secs_f64(), 6.0);
+        assert_eq!((b - a).0, 0, "saturating");
+        assert!(b < a);
+        assert_eq!(a.since(b), SimTime::from_secs(6));
+    }
+
+    #[test]
+    fn bytes_constructors() {
+        assert_eq!(Bytes::gib(2).0, 2 * 1024 * 1024 * 1024);
+        assert_eq!(Bytes::mib(1).0, 1 << 20);
+        assert_eq!(Bytes::kib(64).0, 65536);
+    }
+
+    #[test]
+    fn bytes_time_at() {
+        // 2 GiB at ~11.25 GB/s (90 Gbps) ≈ 0.19 s
+        let t = Bytes::gib(2).time_at(Gbps(90.0).bytes_per_sec());
+        assert!((t.as_secs_f64() - 0.1908).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gbps_conversion() {
+        let g = Gbps(100.0);
+        assert_eq!(g.bytes_per_sec(), 12.5e9);
+        let back = Gbps::from_bytes_per_sec(12.5e9);
+        assert!((back.0 - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(format!("{}", Bytes::gib(2)), "2.00 GiB");
+        assert_eq!(format!("{}", Bytes(512)), "512 B");
+        assert_eq!(format!("{}", SimTime::from_secs(300)), "5.0min");
+        assert_eq!(format!("{}", Gbps(90.0)), "90.0 Gbps");
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration: the AOT artifact (Pallas kernel → JAX → HLO text → PJRT)
+//! must be bit-identical to the native Rust data plane.
+//!
+//! This is the cross-language correctness anchor of the whole stack:
+//! python/tests pin the kernel to ref.py and the RFC 7539 vectors; these
+//! tests pin the *compiled artifact as executed from Rust* to the same
+//! semantics. Requires `make artifacts` (skips politely otherwise).
+
+use htcdm::runtime::engine::{Kind, NativeEngine, SealEngine, VerifyingEngine, XlaEngine};
+use htcdm::runtime::{Manifest, SealRuntime};
+use htcdm::security::chacha;
+use htcdm::security::Method;
+use htcdm::util::Prng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Manifest::default_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn artifact_matches_native_probe_geometry() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = SealRuntime::load(&manifest, &["probe"]).unwrap();
+
+    let mut rng = Prng::new(42);
+    for case in 0..8 {
+        let mut key = [0u32; 8];
+        let mut nonce = [0u32; 3];
+        key.iter_mut().for_each(|k| *k = rng.next_u32());
+        nonce.iter_mut().for_each(|n| *n = rng.next_u32());
+        let counter0 = rng.next_u32() & 0xFFFF;
+        let data: Vec<u32> = (0..256).map(|_| rng.next_u32()).collect();
+
+        // Artifact seal.
+        let iv = [counter0, nonce[0], nonce[1], nonce[2]];
+        let (cipher_xla, dig_xla) = rt.run(Kind::Seal, "probe", &key, &iv, &data).unwrap();
+        // Native seal.
+        let mut cipher_nat = data.clone();
+        let dig_nat = chacha::seal_chunk(&key, &nonce, counter0, &mut cipher_nat);
+
+        assert_eq!(cipher_xla, cipher_nat, "ciphertext mismatch (case {case})");
+        assert_eq!(dig_xla, dig_nat, "digest mismatch (case {case})");
+
+        // Artifact unseal restores plaintext and re-derives the digest.
+        let (plain_xla, dig_unseal) = rt
+            .run(Kind::Unseal, "probe", &key, &iv, &cipher_xla)
+            .unwrap();
+        assert_eq!(plain_xla, data, "roundtrip plaintext (case {case})");
+        assert_eq!(dig_unseal, dig_xla, "unseal digest (case {case})");
+    }
+}
+
+#[test]
+fn artifact_matches_native_64k_geometry() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = SealRuntime::load(&manifest, &["64k"]).unwrap();
+
+    let mut rng = Prng::new(7);
+    let mut key = [0u32; 8];
+    let mut nonce = [0u32; 3];
+    key.iter_mut().for_each(|k| *k = rng.next_u32());
+    nonce.iter_mut().for_each(|n| *n = rng.next_u32());
+    let data: Vec<u32> = (0..1024 * 16).map(|_| rng.next_u32()).collect();
+
+    let iv = [3, nonce[0], nonce[1], nonce[2]];
+    let (cipher_xla, dig_xla) = rt.run(Kind::Seal, "64k", &key, &iv, &data).unwrap();
+    let mut cipher_nat = data.clone();
+    let dig_nat = chacha::seal_chunk(&key, &nonce, 3, &mut cipher_nat);
+    assert_eq!(cipher_xla, cipher_nat);
+    assert_eq!(dig_xla, dig_nat);
+}
+
+#[test]
+fn verifying_engine_xla_vs_native() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let xla = XlaEngine::new(SealRuntime::load(&manifest, &["probe", "64k"]).unwrap());
+    let mut v = VerifyingEngine::new(xla, NativeEngine::new(Method::Chacha20));
+
+    let mut rng = Prng::new(99);
+    for _ in 0..4 {
+        let mut key = [0u32; 8];
+        let mut nonce = [0u32; 3];
+        key.iter_mut().for_each(|k| *k = rng.next_u32());
+        nonce.iter_mut().for_each(|n| *n = rng.next_u32());
+        // Exact probe geometry.
+        let mut data: Vec<u32> = (0..256).map(|_| rng.next_u32()).collect();
+        let orig = data.clone();
+        let d1 = v.process(Kind::Seal, &key, &nonce, 0, &mut data).unwrap();
+        let d2 = v.process(Kind::Unseal, &key, &nonce, 0, &mut data).unwrap();
+        assert_eq!(data, orig);
+        assert_eq!(d1, d2);
+    }
+    assert_eq!(v.chunks_verified, 8);
+}
+
+#[test]
+fn xla_engine_pads_odd_chunks() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut e = XlaEngine::new(SealRuntime::load(&manifest, &["probe"]).unwrap());
+    let key = [5u32; 8];
+    let nonce = [1, 2, 3];
+    // 2 blocks = 32 words: smaller than the probe geometry (256 words).
+    let mut data: Vec<u32> = (0..32u32).collect();
+    let orig = data.clone();
+    let d_seal = e.process(Kind::Seal, &key, &nonce, 0, &mut data).unwrap();
+    let mut native = orig.clone();
+    let d_native = chacha::seal_chunk(&key, &nonce, 0, &mut native);
+    assert_eq!(data, native, "padded path ciphertext matches native");
+    assert_eq!(d_seal, d_native, "padded path digest matches native");
+    let d_unseal = e.process(Kind::Unseal, &key, &nonce, 0, &mut data).unwrap();
+    assert_eq!(data, orig);
+    assert_eq!(d_unseal, d_seal);
+}
+
+#[test]
+fn pick_geometry_prefers_largest_fitting() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = SealRuntime::load(&manifest, &["probe", "64k"]).unwrap();
+    assert_eq!(rt.pick_geometry(1024 * 16), Some("64k"));
+    assert_eq!(rt.pick_geometry(256), Some("probe"));
+    assert_eq!(rt.pick_geometry(10), Some("probe"), "falls back to smallest");
+    assert_eq!(rt.pick_geometry(1024 * 16 + 1), Some("64k"));
+}

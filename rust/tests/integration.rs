@@ -1,0 +1,153 @@
+//! Cross-module integration: config -> experiment wiring, submit files ->
+//! engine workloads, security sessions -> sealed streams, collector ->
+//! negotiator -> schedd flow.
+
+use htcdm::classad::Ad;
+use htcdm::config::Config;
+use htcdm::coordinator::engine::EngineSpec;
+use htcdm::coordinator::{Experiment, Scenario};
+use htcdm::daemons::{Collector, Negotiator, Schedd, SlotId, Startd};
+use htcdm::jobs::submit::{paper_submit_text, parse_submit};
+use htcdm::netsim::topology::TestbedSpec;
+use htcdm::runtime::engine::NativeEngine;
+use htcdm::security::session::{handshake, PoolKey};
+use htcdm::security::Method;
+use htcdm::transfer::stream::{recv_stream, send_stream};
+use htcdm::transfer::ThrottlePolicy;
+use htcdm::util::units::{Bytes, SimTime};
+
+/// HTCondor-style config text drives a full experiment spec.
+#[test]
+fn config_to_experiment() {
+    let cfg = Config::parse(
+        "POOL = htcdm-test\n\
+         JOBS = 80\n\
+         INPUT_SIZE = 50MB\n\
+         FILE_TRANSFER_DISK_LOAD_THROTTLE = false\n\
+         SUBMIT_NIC_GBPS = 100\n\
+         NAME = bench-$(POOL)\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.get("NAME").unwrap().unwrap(), "bench-htcdm-test");
+    let throttle = if cfg.get_bool("FILE_TRANSFER_DISK_LOAD_THROTTLE", true).unwrap() {
+        ThrottlePolicy::htcondor_default()
+    } else {
+        ThrottlePolicy::Disabled
+    };
+    let mut spec = EngineSpec::paper(TestbedSpec::lan_paper(), throttle);
+    spec.n_jobs = cfg.get_u64("JOBS", 100).unwrap() as u32;
+    spec.input_bytes = Bytes(cfg.get_bytes("INPUT_SIZE", 0).unwrap());
+    let report = Experiment::custom("cfg", spec).run().unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.n_jobs, 80);
+}
+
+/// A parsed submit file produces the same workload the engine generates.
+#[test]
+fn submit_file_matches_engine_workload() {
+    let specs = parse_submit(&paper_submit_text(500), 1).unwrap();
+    assert_eq!(specs.len(), 500);
+    assert!(specs.iter().enumerate().all(|(i, s)| s.input_file == format!("input_{i}")));
+    assert!(specs.iter().all(|s| s.input_bytes == Bytes(2_000_000_000)));
+}
+
+/// Full daemon walk: slots advertised to the collector, negotiator matches,
+/// schedd drives transfers through the queue.
+#[test]
+fn collector_negotiator_schedd_roundtrip() {
+    let mut collector = Collector::new();
+    let startd = Startd::new(0, 4);
+    for s in 0..4 {
+        collector.advertise(&SlotId { worker: 0, slot: s }.to_string(), startd.slot_ad(s));
+    }
+    assert_eq!(collector.query_type("Machine").len(), 4);
+    assert_eq!(
+        collector
+            .query("Machine", "State == \"Unclaimed\"")
+            .unwrap()
+            .len(),
+        4
+    );
+
+    let mut schedd = Schedd::new("s", ThrottlePolicy::MaxConcurrent(2));
+    schedd.submit_transaction(parse_submit(&paper_submit_text(6), 1).unwrap(), SimTime::ZERO);
+    let idle = schedd.idle_jobs();
+    let slots: Vec<(SlotId, Ad)> = (0..4)
+        .map(|s| (SlotId { worker: 0, slot: s }, startd.slot_ad(s)))
+        .collect();
+    let mut neg = Negotiator::new();
+    let result = neg.negotiate(&idle, &slots);
+    assert_eq!(result.matches.len(), 4, "4 slots, 6 jobs");
+
+    let mut started = Vec::new();
+    for (job, _) in &result.matches {
+        schedd.take_idle(job.proc);
+        started.extend(schedd.job_matched(job.proc, SimTime::ZERO));
+    }
+    assert_eq!(started.len(), 2, "transfer queue admits only 2 of 4");
+    assert_eq!(schedd.transfer_queue.waiting(), 2);
+}
+
+/// Handshake-derived session keys drive the sealed stream end to end.
+#[test]
+fn session_to_stream_roundtrip() {
+    let key = PoolKey::from_passphrase("integration");
+    let sess = handshake(
+        &key,
+        [1u8; 16],
+        [2u8; 16],
+        &[Method::Chacha20],
+        &[Method::Chacha20],
+    )
+    .unwrap();
+    let data = vec![0x42u8; 100_000];
+    let mut tx = NativeEngine::new(sess.method);
+    let mut rx = NativeEngine::new(sess.method);
+    let mut wire = Vec::new();
+    send_stream(&mut wire, &mut tx, &sess.key_words, &sess.nonce_words, &data, 1024).unwrap();
+    let (out, stats) = recv_stream(
+        &mut std::io::Cursor::new(wire),
+        &mut rx,
+        &sess.key_words,
+        &sess.nonce_words,
+    )
+    .unwrap();
+    assert_eq!(out, data);
+    assert!(stats.wire_bytes > stats.payload_bytes, "framing overhead visible");
+}
+
+/// The four paper scenarios at 1/10 scale keep their qualitative ordering.
+/// (Plateau-based `sustained` is noisy on sub-minute runs, so ordering is
+/// checked on mean throughput = bytes/makespan.)
+#[test]
+fn scenario_ordering_holds_at_small_scale() {
+    let run = |s: Scenario| Experiment::scenario(s).scaled(10).run().unwrap();
+    let mean_gbps = |r: &htcdm::coordinator::Report| {
+        r.n_jobs as f64 * 2e9 * 8.0 / r.makespan.as_secs_f64() / 1e9
+    };
+    let lan = run(Scenario::LanPaper);
+    let wan = run(Scenario::WanPaper);
+    let queue = run(Scenario::LanDefaultQueue);
+    let vpn = run(Scenario::LanVpn);
+    assert!(mean_gbps(&lan) > mean_gbps(&wan), "LAN > WAN");
+    assert!(mean_gbps(&wan) > mean_gbps(&vpn), "WAN > VPN");
+    assert!(queue.makespan > lan.makespan, "default queue is slower");
+    assert!(mean_gbps(&vpn) < 27.0, "VPN ceiling ~25 Gbps");
+    for r in [&lan, &wan, &queue, &vpn] {
+        assert_eq!(r.errors, 0);
+    }
+}
+
+/// Storage hardlink dataset + engine: the 10k-names-one-extent trick.
+#[test]
+fn paper_dataset_feeds_pool() {
+    use htcdm::storage::{build_paper_dataset, DeviceProfile, Storage};
+    let mut st = Storage::new(DeviceProfile::nvme(), 8 << 30);
+    build_paper_dataset(&mut st, "input_", 2 << 30, 1000);
+    assert_eq!(st.len(), 1000);
+    assert_eq!(st.distinct_extents(), 1);
+    // Every stream the engine would open hits the page cache.
+    for i in 0..1000 {
+        assert!(st.open_read(&format!("input_{i}")).unwrap().cached);
+    }
+}

@@ -1,0 +1,54 @@
+//! End-to-end pool tests: the real-mode loopback fabric moving actual
+//! sealed bytes (native engine for speed; the artifact path is covered by
+//! tests/artifact_runtime.rs and examples/quickstart.rs).
+
+use htcdm::fabric::{run_real_pool, RealPoolConfig};
+
+fn cfg() -> RealPoolConfig {
+    RealPoolConfig {
+        n_jobs: 12,
+        workers: 3,
+        input_bytes: 512 << 10,
+        output_bytes: 2048,
+        chunk_words: 4096,
+        use_xla_engine: false,
+        passphrase: "e2e".into(),
+    }
+}
+
+#[test]
+fn pool_moves_all_bytes_with_integrity() {
+    let r = run_real_pool(cfg()).unwrap();
+    assert_eq!(r.errors, 0);
+    assert_eq!(r.jobs_completed, 12);
+    assert_eq!(r.total_payload_bytes, 12 * (512 << 10) as u64);
+    assert!(r.gbps > 0.0);
+    assert_eq!(r.transfer_secs.count(), 12);
+    assert!(r.transfer_secs.median() > 0.0);
+}
+
+#[test]
+fn pool_scales_with_workers() {
+    let mut c1 = cfg();
+    c1.workers = 1;
+    c1.n_jobs = 6;
+    let r1 = run_real_pool(c1).unwrap();
+    let mut c4 = cfg();
+    c4.workers = 4;
+    c4.n_jobs = 6;
+    let r4 = run_real_pool(c4).unwrap();
+    assert_eq!(r1.errors + r4.errors, 0);
+    // With 4 workers the same job count should not be slower by more than
+    // noise; loose bound to avoid flakiness on loaded CI.
+    assert!(r4.wall_secs < r1.wall_secs * 2.0);
+}
+
+#[test]
+fn pool_single_job_single_worker() {
+    let mut c = cfg();
+    c.n_jobs = 1;
+    c.workers = 1;
+    let r = run_real_pool(c).unwrap();
+    assert_eq!(r.jobs_completed, 1);
+    assert_eq!(r.errors, 0);
+}

@@ -1,0 +1,186 @@
+//! Cross-module property tests (mini-prop testkit; no proptest offline).
+
+use htcdm::classad::{matches, parse_expr, Ad, Value};
+use htcdm::metrics::BinSeries;
+use htcdm::netsim::NetSim;
+use htcdm::security::chacha;
+use htcdm::transfer::{ThrottlePolicy, TransferQueue};
+use htcdm::util::testkit::check;
+use htcdm::util::units::{Gbps, SimTime};
+
+/// Sealed roundtrip through random chunking always restores plaintext and
+/// digests XOR-combine across the chunk boundary structure.
+#[test]
+fn prop_chunked_seal_equals_whole() {
+    check("chunked-seal", 30, |g| {
+        let mut key = [0u32; 8];
+        let mut nonce = [0u32; 3];
+        key.iter_mut().for_each(|k| *k = g.rng.next_u32());
+        nonce.iter_mut().for_each(|n| *n = g.rng.next_u32());
+        let blocks = g.rng.range_usize(2, 40);
+        let data: Vec<u32> = (0..blocks * 16).map(|_| g.rng.next_u32()).collect();
+
+        // Whole-buffer seal.
+        let mut whole = data.clone();
+        chacha::xor_stream(&key, &nonce, 0, &mut whole);
+
+        // Random split seal with advancing counters.
+        let cut = g.rng.range_usize(1, blocks - 1) * 16;
+        let mut head = data[..cut].to_vec();
+        let mut tail = data[cut..].to_vec();
+        chacha::xor_stream(&key, &nonce, 0, &mut head);
+        chacha::xor_stream(&key, &nonce, (cut / 16) as u32, &mut tail);
+        assert_eq!(&whole[..cut], &head[..]);
+        assert_eq!(&whole[cut..], &tail[..]);
+
+        // Lane digests XOR-combine.
+        let d_whole = chacha::poly16_digest(&whole, 0);
+        let d_head = chacha::poly16_digest(&head, 0);
+        let d_tail = chacha::poly16_digest(&tail, (cut / 16) as u32);
+        for i in 0..16 {
+            assert_eq!(d_whole[i], d_head[i] ^ d_tail[i]);
+        }
+    });
+}
+
+/// NetSim conservation: bytes carried on a single-link topology equal the
+/// sum of all completed flow sizes, regardless of arrival pattern.
+#[test]
+fn prop_netsim_byte_conservation() {
+    check("netsim-conservation", 25, |g| {
+        let mut net = NetSim::new();
+        let link = net.add_link("nic", Gbps(g.rng.range_f64(1.0, 100.0)));
+        let n = g.rng.range_usize(1, 30);
+        let mut total = 0.0;
+        let mut pending = Vec::new();
+        for _ in 0..n {
+            let bytes = g.rng.range_f64(1e6, 1e9);
+            total += bytes;
+            pending.push(net.start_flow(vec![link], bytes, g.rng.range_f64(0.01e9, 2e9)));
+        }
+        let mut guard = 0;
+        while net.active_flows() > 0 {
+            guard += 1;
+            assert!(guard < 10_000, "stuck");
+            let t = net.next_completion().expect("flows active");
+            net.advance_to(t);
+            for f in net.completed() {
+                net.finish_flow(f);
+            }
+        }
+        let carried = net.link(link).bytes_carried;
+        let rel = (carried - total).abs() / total;
+        assert!(rel < 1e-6, "carried {carried} vs total {total}");
+    });
+}
+
+/// Transfer queue: FIFO admission order is preserved under random churn.
+#[test]
+fn prop_queue_fifo_order() {
+    check("queue-fifo", 40, |g| {
+        let cap = g.rng.range_u64(1, 8) as u32;
+        let mut q: TransferQueue<u64> = TransferQueue::new(ThrottlePolicy::MaxConcurrent(cap));
+        let mut next_ticket = 0u64;
+        let mut admitted = Vec::new();
+        for _ in 0..300 {
+            if g.rng.next_f64() < 0.55 {
+                admitted.extend(q.enqueue(next_ticket));
+                next_ticket += 1;
+            } else if q.active() > 0 {
+                admitted.extend(q.release());
+            }
+        }
+        // Admission order must be exactly ticket order (FIFO).
+        let sorted: Vec<u64> = {
+            let mut v = admitted.clone();
+            v.sort();
+            v
+        };
+        assert_eq!(admitted, sorted);
+    });
+}
+
+/// ClassAd evaluator never panics on random well-formed expressions, and
+/// bilateral matching is symmetric in its result.
+#[test]
+fn prop_classad_total_and_match_symmetric() {
+    const ATTRS: &[&str] = &["Memory", "Cpus", "Disk", "KFlops"];
+    const OPS: &[&str] = &["+", "-", "*", "/", "<", ">=", "==", "&&", "||"];
+    check("classad-total", 60, |g| {
+        // Random expression tree over the attr pool.
+        let mut expr = String::new();
+        let depth = g.rng.range_usize(1, 4);
+        for i in 0..depth {
+            if i > 0 {
+                expr.push_str(OPS[g.rng.range_usize(0, OPS.len() - 1)]);
+            }
+            match g.rng.range_usize(0, 2) {
+                0 => expr.push_str(ATTRS[g.rng.range_usize(0, ATTRS.len() - 1)]),
+                1 => expr.push_str(&format!("{}", g.rng.range_u64(0, 100))),
+                _ => expr.push_str(&format!("TARGET.{}", ATTRS[g.rng.range_usize(0, ATTRS.len() - 1)])),
+            }
+        }
+        let parsed = parse_expr(&expr).expect("generated exprs are well-formed");
+
+        let mut a = Ad::new("Job");
+        let mut b = Ad::new("Machine");
+        for attr in ATTRS {
+            if g.rng.next_f64() < 0.7 {
+                a.insert(attr, g.rng.range_u64(0, 1 << 20) as i64);
+            }
+            if g.rng.next_f64() < 0.7 {
+                b.insert(attr, g.rng.range_u64(0, 1 << 20) as i64);
+            }
+        }
+        a.insert_expr("Requirements", &parsed.to_string()).unwrap();
+        b.insert_expr("Requirements", &parsed.to_string()).unwrap();
+        // Evaluation is total (no panic) and match is symmetric.
+        let _ = a.eval_with(&b, "Requirements");
+        assert_eq!(matches(&a, &b).unwrap(), matches(&b, &a).unwrap());
+    });
+}
+
+/// BinSeries: spreading preserves totals for arbitrary interval patterns.
+#[test]
+fn prop_binseries_total_preserved() {
+    check("binseries-total", 40, |g| {
+        let mut s = BinSeries::new(SimTime::from_secs(g.rng.range_u64(1, 120)));
+        let mut total = 0.0;
+        for _ in 0..g.rng.range_usize(1, 50) {
+            let t0 = g.rng.range_u64(0, 10_000);
+            let dt = g.rng.range_u64(0, 5_000);
+            let bytes = g.rng.range_f64(1.0, 1e9);
+            total += bytes;
+            s.add_spread(
+                SimTime::from_millis(t0),
+                SimTime::from_millis(t0 + dt),
+                bytes,
+            );
+        }
+        let rel = (s.total_bytes() - total).abs() / total;
+        assert!(rel < 1e-9, "total drifted by {rel}");
+        // Rebin twice preserves again.
+        let coarse = s.rebin(SimTime(s.bin_width().0 * 5));
+        assert!((coarse.total_bytes() - total).abs() / total < 1e-9);
+    });
+}
+
+/// Undefined-propagation: any comparison against a missing attribute is
+/// UNDEFINED, and Requirements containing it never match.
+#[test]
+fn prop_undefined_never_matches() {
+    check("undefined-requirements", 30, |g| {
+        let mut job = Ad::new("Job");
+        job.insert_expr(
+            "Requirements",
+            &format!("TARGET.MissingAttr{} > 5", g.rng.range_u64(0, 1000)),
+        )
+        .unwrap();
+        let slot = Ad::new("Machine");
+        assert_eq!(
+            job.eval_with(&slot, "Requirements"),
+            Value::Undefined
+        );
+        assert!(!matches(&job, &slot).unwrap());
+    });
+}
