@@ -19,6 +19,7 @@ fn main() -> anyhow::Result<()> {
             chunk_words,
             use_xla_engine: false,
             passphrase: "bench".into(),
+            ..Default::default()
         };
         let r = run_real_pool(cfg)?;
         anyhow::ensure!(r.errors == 0, "transfer errors in sweep");

@@ -26,15 +26,26 @@ pub struct Config {
     entries: BTreeMap<String, String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("line {line}: {msg}")]
     Parse { line: usize, msg: String },
-    #[error("macro recursion while expanding $({0})")]
     Recursion(String),
-    #[error("knob {0}: expected {1}, got '{2}'")]
     Type(String, &'static str, String),
 }
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+            ConfigError::Recursion(m) => write!(f, "macro recursion while expanding $({m})"),
+            ConfigError::Type(knob, want, got) => {
+                write!(f, "knob {knob}: expected {want}, got '{got}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl Config {
     pub fn new() -> Config {

@@ -10,6 +10,7 @@
 
 use crate::daemons::{Collector, Negotiator, Schedd, SlotId, Startd};
 use crate::jobs::JobSpec;
+use crate::mover::{AdmissionConfig, MoverStats, ShadowPool};
 use crate::netsim::topology::{Testbed, TestbedSpec};
 use crate::netsim::{calib, FlowId};
 use crate::sim::EventQueue;
@@ -27,14 +28,22 @@ pub struct EngineSpec {
     pub input_bytes: Bytes,
     pub output_bytes: Bytes,
     pub runtime_median_s: f64,
-    pub throttle: ThrottlePolicy,
+    /// Transfer-admission policy driving the schedd's data mover.
+    pub policy: AdmissionConfig,
+    /// Shadow-pool shard count (1 = the paper's single-funnel submit
+    /// node; >1 models multi-shard data movers).
+    pub shadows: u32,
+    /// Distinct job owners, round-robined over procs (1 = the paper's
+    /// single benchmark user; >1 makes fair-share scheduling visible).
+    pub n_owners: u32,
     pub seed: u64,
     /// Negotiator cycle interval (HTCondor default: 60 s).
     pub negotiation_interval_s: f64,
 }
 
 impl EngineSpec {
-    /// The paper's main workload on the given testbed.
+    /// The paper's main workload on the given testbed with one of the
+    /// classic throttle knobs.
     pub fn paper(testbed: TestbedSpec, throttle: ThrottlePolicy) -> EngineSpec {
         EngineSpec {
             testbed,
@@ -42,10 +51,43 @@ impl EngineSpec {
             input_bytes: Bytes(2_000_000_000), // the paper's 2 GB files
             output_bytes: Bytes(4_000),
             runtime_median_s: 5.0,
-            throttle,
+            policy: throttle.into(),
+            shadows: 1,
+            n_owners: 1,
             seed: 20210901, // eScience 2021
             negotiation_interval_s: 60.0,
         }
+    }
+
+    /// Apply HTCondor-style config knobs on top of this spec (only knobs
+    /// present in the config override; see `config` module docs):
+    ///
+    /// ```text
+    /// JOBS = 1000
+    /// INPUT_SIZE = 2GB
+    /// OUTPUT_SIZE = 4KB
+    /// N_OWNERS = 4
+    /// TRANSFER_QUEUE_POLICY = FAIR_SHARE
+    /// TRANSFER_QUEUE_MAX_CONCURRENT = 200
+    /// SHADOW_POOL_SIZE = 4
+    /// ```
+    pub fn apply_config(
+        &mut self,
+        cfg: &crate::config::Config,
+    ) -> Result<(), crate::config::ConfigError> {
+        self.n_jobs = cfg.get_u64("JOBS", self.n_jobs as u64)? as u32;
+        self.input_bytes = Bytes(cfg.get_bytes("INPUT_SIZE", self.input_bytes.0)?);
+        self.output_bytes = Bytes(cfg.get_bytes("OUTPUT_SIZE", self.output_bytes.0)?);
+        self.n_owners = (cfg.get_u64("N_OWNERS", self.n_owners as u64)? as u32).max(1);
+        if cfg.raw("TRANSFER_QUEUE_POLICY").is_some()
+            || cfg.raw("TRANSFER_QUEUE_MAX_CONCURRENT").is_some()
+        {
+            self.policy = AdmissionConfig::from_config(cfg)?;
+        }
+        if cfg.raw("SHADOW_POOL_SIZE").is_some() {
+            self.shadows = AdmissionConfig::shadows_from_config(cfg)?;
+        }
+        Ok(())
     }
 }
 
@@ -83,6 +125,8 @@ pub struct EngineResult {
     pub peak_concurrent_transfers: u32,
     pub total_input_bytes: f64,
     pub errors: u64,
+    /// Data-mover accounting (per-shard routing, admission totals).
+    pub mover: MoverStats,
 }
 
 pub struct Engine {
@@ -102,8 +146,17 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(spec: EngineSpec) -> Engine {
+        let mover = ShadowPool::sim(spec.shadows.max(1), spec.policy.clone());
+        Engine::with_mover(spec, mover)
+    }
+
+    /// Build an engine around an existing data mover (e.g. to drive the
+    /// same policy object through the simulator and then the real
+    /// fabric — see `tests/mover_unified.rs`). The mover's shard count
+    /// and policy override the spec's knobs.
+    pub fn with_mover(spec: EngineSpec, mover: ShadowPool) -> Engine {
         let tb = Testbed::build(spec.testbed.clone());
-        let schedd = Schedd::new("schedd@submit", spec.throttle);
+        let schedd = Schedd::with_mover("schedd@submit", mover);
         let startds: Vec<Startd> = spec
             .testbed
             .workers
@@ -131,12 +184,19 @@ impl Engine {
     }
 
     /// Build the job specs for the paper workload (unique hard-linked
-    /// input names, as in §III).
+    /// input names, as in §III). With `n_owners > 1` the burst is
+    /// attributed round-robin to distinct owners so owner-aware
+    /// admission policies have something to schedule between.
     fn job_specs(&self) -> Vec<JobSpec> {
+        let n_owners = self.spec.n_owners.max(1);
         (0..self.spec.n_jobs)
             .map(|p| JobSpec {
                 id: crate::jobs::JobId { cluster: 1, proc: p },
-                owner: "benchmark".into(),
+                owner: if n_owners == 1 {
+                    "benchmark".into()
+                } else {
+                    format!("user{}", p % n_owners)
+                },
                 input_file: format!("input_{p}"),
                 input_bytes: self.spec.input_bytes,
                 output_bytes: self.spec.output_bytes,
@@ -164,7 +224,6 @@ impl Engine {
             );
         }
 
-        let mut peak_transfers = 0u32;
         let mut guard: u64 = 0;
         let max_events = 40 * self.spec.n_jobs as u64 + 10_000;
 
@@ -173,7 +232,6 @@ impl Engine {
             if guard > max_events {
                 bail!("engine exceeded event budget — likely stuck");
             }
-            peak_transfers = peak_transfers.max(self.schedd.transfer_queue.active());
 
             let t_ev = self.events.peek_time();
             let t_net = self.tb.net.next_completion();
@@ -213,14 +271,16 @@ impl Engine {
             .net
             .take_monitor(self.tb.submit_tx)
             .expect("submit NIC monitor");
+        let mover = self.schedd.mover.stats();
         Ok(EngineResult {
             total_input_bytes: self.spec.n_jobs as f64 * self.spec.input_bytes.0 as f64,
+            peak_concurrent_transfers: mover.peak_active,
             schedd: self.schedd,
             monitor,
             finished_at,
             negotiation_cycles: self.negotiator.cycles,
-            peak_concurrent_transfers: peak_transfers,
             errors: 0,
+            mover,
         })
     }
 
@@ -387,7 +447,9 @@ mod tests {
             input_bytes: Bytes(100_000_000), // 100 MB
             output_bytes: Bytes(4_000),
             runtime_median_s: 2.0,
-            throttle: ThrottlePolicy::Disabled,
+            policy: ThrottlePolicy::Disabled.into(),
+            shadows: 1,
+            n_owners: 1,
             seed: 1,
             negotiation_interval_s: 60.0,
         }
@@ -425,7 +487,7 @@ mod tests {
     fn throttle_slows_makespan() {
         let fast = Engine::new(tiny_spec()).run().unwrap();
         let mut spec = tiny_spec();
-        spec.throttle = ThrottlePolicy::MaxConcurrent(2);
+        spec.policy = ThrottlePolicy::MaxConcurrent(2).into();
         let slow = Engine::new(spec).run().unwrap();
         assert!(
             slow.finished_at > fast.finished_at,
@@ -460,5 +522,85 @@ mod tests {
         spec.n_jobs = 20;
         let r = Engine::new(spec).run().unwrap();
         assert_eq!(r.schedd.completed_count(), 20);
+    }
+
+    #[test]
+    fn multi_shard_sim_balances_bytes_across_shadows() {
+        let mut spec = tiny_spec();
+        spec.shadows = 4;
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 40);
+        assert_eq!(r.mover.bytes_per_shard.len(), 4);
+        let routed: u64 = r.mover.bytes_per_shard.iter().sum();
+        assert_eq!(routed as f64, r.total_input_bytes, "all inputs routed");
+        assert!(
+            r.mover.shard_imbalance() < 1.5,
+            "least-loaded assignment stays roughly even: {:?}",
+            r.mover.bytes_per_shard
+        );
+        assert_eq!(r.mover.released_without_active, 0);
+    }
+
+    #[test]
+    fn fair_share_policy_completes_and_respects_limit() {
+        let mut spec = tiny_spec();
+        spec.policy = crate::mover::AdmissionConfig::FairShare { limit: 3 };
+        spec.n_owners = 4;
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 40);
+        assert!(r.peak_concurrent_transfers <= 3);
+        // The burst really is multi-owner (fair-share had work to do).
+        let owners: std::collections::HashSet<&str> = r
+            .schedd
+            .jobs
+            .iter()
+            .map(|j| j.spec.owner.as_str())
+            .collect();
+        assert_eq!(owners.len(), 4);
+    }
+
+    #[test]
+    fn apply_config_overrides_mover_knobs() {
+        let cfg = crate::config::Config::parse(
+            "JOBS = 12\n\
+             INPUT_SIZE = 10MB\n\
+             N_OWNERS = 3\n\
+             TRANSFER_QUEUE_POLICY = WEIGHTED_BY_SIZE\n\
+             TRANSFER_QUEUE_MAX_CONCURRENT = 5\n\
+             SHADOW_POOL_SIZE = 2\n",
+        )
+        .unwrap();
+        let mut spec = tiny_spec();
+        spec.apply_config(&cfg).unwrap();
+        assert_eq!(spec.n_jobs, 12);
+        assert_eq!(spec.input_bytes, Bytes(10_000_000));
+        assert_eq!(spec.n_owners, 3);
+        assert_eq!(
+            spec.policy,
+            crate::mover::AdmissionConfig::WeightedBySize { limit: 5 }
+        );
+        assert_eq!(spec.shadows, 2);
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 12);
+        assert!(r.peak_concurrent_transfers <= 5);
+        assert_eq!(r.mover.bytes_per_shard.len(), 2);
+
+        // Knobs absent from the config leave the spec untouched.
+        let empty = crate::config::Config::parse("").unwrap();
+        let mut spec2 = tiny_spec();
+        spec2.shadows = 7;
+        spec2.apply_config(&empty).unwrap();
+        assert_eq!(spec2.shadows, 7);
+        assert_eq!(spec2.n_jobs, 40);
+    }
+
+    #[test]
+    fn weighted_by_size_policy_completes() {
+        let mut spec = tiny_spec();
+        spec.policy = crate::mover::AdmissionConfig::WeightedBySize { limit: 4 };
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 40);
+        assert!(r.peak_concurrent_transfers <= 4);
+        assert_eq!(r.errors, 0);
     }
 }

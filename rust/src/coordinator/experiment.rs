@@ -5,13 +5,15 @@
 
 use super::engine::{Engine, EngineResult, EngineSpec};
 use crate::metrics::BinSeries;
+use crate::mover::{AdmissionConfig, MoverStats};
 use crate::netsim::topology::TestbedSpec;
 use crate::transfer::ThrottlePolicy;
 use crate::util::units::{Gbps, SimTime};
 use crate::util::OnlineStats;
 use anyhow::Result;
 
-/// The experiments of the paper (see DESIGN.md's experiment index).
+/// The experiments of the paper (see DESIGN.md's experiment index), plus
+/// the data-mover variants the paper could only speculate about.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scenario {
     /// §III / Fig. 1: LAN, 10k × 2 GB, queue throttle disabled.
@@ -24,6 +26,11 @@ pub enum Scenario {
     /// §II narrative: submit pod behind the Calico VPN overlay — paper
     /// observed a ~25 Gbps ceiling.
     LanVpn,
+    /// LanPaper with per-owner fair-share admission at the paper's ~200
+    /// concurrent-transfer operating point.
+    LanFairShare,
+    /// LanPaper with a 4-shard shadow pool (multi-shard data mover).
+    LanSharded4,
 }
 
 impl Scenario {
@@ -33,6 +40,8 @@ impl Scenario {
             Scenario::WanPaper => "fig2-wan",
             Scenario::LanDefaultQueue => "queue-default",
             Scenario::LanVpn => "vpn-overlay",
+            Scenario::LanFairShare => "fair-share",
+            Scenario::LanSharded4 => "sharded-4",
         }
     }
 
@@ -51,6 +60,21 @@ impl Scenario {
             Scenario::LanVpn => {
                 EngineSpec::paper(TestbedSpec::lan_vpn_paper(), ThrottlePolicy::Disabled)
             }
+            Scenario::LanFairShare => {
+                let mut spec =
+                    EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled);
+                spec.policy = AdmissionConfig::FairShare { limit: 200 };
+                // Four competing owners, so the rotation actually matters
+                // (the paper's burst came from one benchmark user).
+                spec.n_owners = 4;
+                spec
+            }
+            Scenario::LanSharded4 => {
+                let mut spec =
+                    EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled);
+                spec.shadows = 4;
+                spec
+            }
         }
     }
 
@@ -62,6 +86,7 @@ impl Scenario {
             Scenario::WanPaper => Some(60.0),
             Scenario::LanDefaultQueue => None,
             Scenario::LanVpn => Some(25.0),
+            Scenario::LanFairShare | Scenario::LanSharded4 => None,
         }
     }
 
@@ -71,6 +96,7 @@ impl Scenario {
             Scenario::WanPaper => Some(49.0),
             Scenario::LanDefaultQueue => Some(64.0),
             Scenario::LanVpn => None,
+            Scenario::LanFairShare | Scenario::LanSharded4 => None,
         }
     }
 }
@@ -105,6 +131,18 @@ impl Experiment {
         self
     }
 
+    /// Override the transfer-admission policy (scenario knob).
+    pub fn with_policy(mut self, policy: AdmissionConfig) -> Experiment {
+        self.spec.policy = policy;
+        self
+    }
+
+    /// Override the shadow-pool shard count (scenario knob).
+    pub fn with_shadows(mut self, shadows: u32) -> Experiment {
+        self.spec.shadows = shadows.max(1);
+        self
+    }
+
     pub fn run(self) -> Result<Report> {
         let result = Engine::new(self.spec.clone()).run()?;
         Ok(Report::from_engine(self.label, &self.spec, result))
@@ -128,6 +166,12 @@ pub struct Report {
     pub peak_concurrent_transfers: u32,
     pub negotiation_cycles: u64,
     pub errors: u64,
+    /// Admission-policy label driving the data mover.
+    pub policy: String,
+    /// Shadow-pool shard count.
+    pub shards: usize,
+    /// Data-mover accounting (per-shard routing, spurious completes).
+    pub mover: MoverStats,
     /// Submit-NIC throughput binned like the paper's monitoring (5 min).
     pub series_5min: BinSeries,
     /// Finer series for plots/tests.
@@ -170,6 +214,9 @@ impl Report {
             peak_concurrent_transfers: r.peak_concurrent_transfers,
             negotiation_cycles: r.negotiation_cycles,
             errors: r.errors,
+            policy: spec.policy.label(),
+            shards: r.mover.bytes_per_shard.len(),
+            mover: r.mover,
             series_5min,
             series: r.monitor,
         }
@@ -213,17 +260,28 @@ mod tests {
         assert_eq!(lan.n_jobs, 10_000);
         assert_eq!(lan.input_bytes, Bytes(2_000_000_000));
         assert_eq!(lan.testbed.total_slots(), 200);
-        assert_eq!(lan.throttle, ThrottlePolicy::Disabled);
+        assert_eq!(
+            lan.policy,
+            AdmissionConfig::from(ThrottlePolicy::Disabled)
+        );
+        assert_eq!(lan.shadows, 1, "the paper's single-funnel submit node");
 
         let wan = Scenario::WanPaper.spec();
         assert!(wan.testbed.wan.is_some());
         assert_eq!(wan.testbed.total_slots(), 200);
 
         let q = Scenario::LanDefaultQueue.spec();
-        assert_ne!(q.throttle, ThrottlePolicy::Disabled);
+        assert_ne!(q.policy, AdmissionConfig::from(ThrottlePolicy::Disabled));
 
         let v = Scenario::LanVpn.spec();
         assert!(v.testbed.vpn_on_submit);
+
+        let fs = Scenario::LanFairShare.spec();
+        assert_eq!(fs.policy, AdmissionConfig::FairShare { limit: 200 });
+        assert_eq!(fs.n_owners, 4, "fair-share needs competing owners");
+
+        let sh = Scenario::LanSharded4.spec();
+        assert_eq!(sh.shadows, 4);
     }
 
     #[test]
@@ -231,6 +289,32 @@ mod tests {
         let e = Experiment::scenario(Scenario::LanPaper).scaled(100);
         assert_eq!(e.spec.n_jobs, 100);
         assert!(e.label.contains("1/100"));
+    }
+
+    #[test]
+    fn knob_helpers_override_policy_and_shadows() {
+        let e = Experiment::scenario(Scenario::LanPaper)
+            .with_policy(AdmissionConfig::WeightedBySize { limit: 50 })
+            .with_shadows(8);
+        assert_eq!(e.spec.policy, AdmissionConfig::WeightedBySize { limit: 50 });
+        assert_eq!(e.spec.shadows, 8);
+        let clamped = Experiment::scenario(Scenario::LanPaper).with_shadows(0);
+        assert_eq!(clamped.spec.shadows, 1);
+    }
+
+    #[test]
+    fn report_carries_mover_accounting() {
+        let mut spec = Scenario::LanSharded4.spec();
+        spec.n_jobs = 40;
+        spec.input_bytes = Bytes(50_000_000);
+        spec.testbed.monitor_bin = SimTime::from_secs(5);
+        let report = Experiment::custom("sharded-smoke", spec).run().unwrap();
+        assert_eq!(report.shards, 4);
+        assert_eq!(report.policy, "fifo/disabled");
+        assert_eq!(report.mover.total_admitted, 40);
+        assert_eq!(report.mover.released_without_active, 0);
+        let routed: u64 = report.mover.bytes_per_shard.iter().sum();
+        assert_eq!(routed, 40 * 50_000_000);
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! The schedd: the submit-side daemon owning the job queue, the user log,
-//! the transfer queue, and (in a default HTCondor setup) *all* sandbox
-//! data movement — which is exactly why the paper benchmarks it as the
-//! potential bottleneck.
+//! and (in a default HTCondor setup) *all* sandbox data movement — which
+//! is exactly why the paper benchmarks it as the potential bottleneck.
+//! Data movement itself is delegated to a [`crate::mover::ShadowPool`]:
+//! the schedd tracks job lifecycle, the mover owns admission and shard
+//! assignment.
 
 use crate::jobs::log::{EventKind, UserLog};
 use crate::jobs::{Job, JobId, JobSpec, JobState};
-use crate::transfer::{ThrottlePolicy, TransferQueue};
+use crate::mover::{ShadowPool, TransferRequest};
+use crate::transfer::ThrottlePolicy;
 use crate::util::units::SimTime;
 use std::collections::VecDeque;
 
@@ -16,19 +19,37 @@ pub struct Schedd {
     /// Procs waiting for a match, in submission order.
     idle: VecDeque<u32>,
     pub log: UserLog,
-    /// Upload (input sandbox) admission control.
-    pub transfer_queue: TransferQueue<u32>,
+    /// Upload (input sandbox) data movement — admission mechanics are
+    /// fully delegated to the sharded, policy-driven mover.
+    pub mover: ShadowPool,
 }
 
 impl Schedd {
+    /// A schedd with a single-shard mover running the given classic
+    /// throttle (the paper's configuration space).
     pub fn new(name: &str, policy: ThrottlePolicy) -> Schedd {
+        Schedd::with_mover(name, ShadowPool::sim(1, policy.into()))
+    }
+
+    /// A schedd delegating sandbox movement to the given mover.
+    pub fn with_mover(name: &str, mover: ShadowPool) -> Schedd {
         Schedd {
             name: name.to_string(),
             jobs: Vec::new(),
             idle: VecDeque::new(),
             log: UserLog::new(),
-            transfer_queue: TransferQueue::new(policy),
+            mover,
         }
+    }
+
+    /// Extract the mover (e.g. to hand the same policy object to the real
+    /// fabric after a simulated run); leaves a fresh single-shard
+    /// unthrottled mover behind.
+    pub fn take_mover(&mut self) -> ShadowPool {
+        std::mem::replace(
+            &mut self.mover,
+            ShadowPool::sim(1, ThrottlePolicy::Disabled.into()),
+        )
     }
 
     /// One submit transaction (the paper queued all 10k jobs in one).
@@ -79,7 +100,7 @@ impl Schedd {
         }
     }
 
-    /// Job matched to a slot → its input transfer enters the queue.
+    /// Job matched to a slot → its input transfer enters the mover.
     /// Returns procs whose transfers may START now.
     pub fn job_matched(&mut self, proc_: u32, t: SimTime) -> Vec<u32> {
         let job = &mut self.jobs[proc_ as usize];
@@ -88,8 +109,13 @@ impl Schedd {
         job.t_matched = Some(t);
         job.t_transfer_queued = Some(t);
         let id = job.spec.id;
+        let req = TransferRequest::new(proc_, job.spec.owner.clone(), job.spec.input_bytes.0);
         self.log.record(t, id, EventKind::TransferInputQueued);
-        self.transfer_queue.enqueue(proc_)
+        self.mover
+            .request(req)
+            .into_iter()
+            .map(|a| a.ticket)
+            .collect()
     }
 
     /// Admitted transfer goes on the wire.
@@ -102,7 +128,7 @@ impl Schedd {
         self.log.record(t, id, EventKind::TransferInputBegan);
     }
 
-    /// Transfer finished → job executes; frees a transfer-queue slot.
+    /// Transfer finished → job executes; frees a mover slot.
     /// Returns procs whose transfers may START now.
     pub fn input_done(&mut self, proc_: u32, t: SimTime) -> Vec<u32> {
         let job = &mut self.jobs[proc_ as usize];
@@ -112,7 +138,11 @@ impl Schedd {
         let id = job.spec.id;
         self.log.record(t, id, EventKind::TransferInputDone);
         self.log.record(t, id, EventKind::Executing);
-        self.transfer_queue.release()
+        self.mover
+            .complete(proc_)
+            .into_iter()
+            .map(|a| a.ticket)
+            .collect()
     }
 
     pub fn run_done(&mut self, proc_: u32, t: SimTime) {
@@ -228,5 +258,30 @@ mod tests {
         let mut s = Schedd::new("schedd", ThrottlePolicy::Disabled);
         s.submit_transaction(specs(1), SimTime::ZERO);
         assert!(s.makespan().is_none());
+    }
+
+    #[test]
+    fn schedd_delegates_to_custom_mover() {
+        use crate::mover::{AdmissionConfig, ShadowPool};
+        let mover = ShadowPool::sim(2, AdmissionConfig::WeightedBySize { limit: 1 });
+        let mut s = Schedd::with_mover("schedd", mover);
+        // Three jobs with distinct sizes; proc 2 is the smallest.
+        let mut sp = specs(3);
+        sp[0].input_bytes = Bytes::mib(100);
+        sp[1].input_bytes = Bytes::mib(50);
+        sp[2].input_bytes = Bytes::mib(1);
+        s.submit_transaction(sp, SimTime::ZERO);
+        for p in 0..3 {
+            s.take_idle(p);
+        }
+        assert_eq!(s.job_matched(0, SimTime::ZERO), vec![0], "capacity free");
+        assert_eq!(s.job_matched(1, SimTime::ZERO), vec![]);
+        assert_eq!(s.job_matched(2, SimTime::ZERO), vec![]);
+        s.input_started(0, SimTime::ZERO);
+        let next = s.input_done(0, SimTime::from_secs(5));
+        assert_eq!(next, vec![2], "weighted-by-size admits the smallest");
+        assert_eq!(s.mover.stats().total_admitted, 2);
+        let taken = s.take_mover();
+        assert_eq!(taken.stats().total_admitted, 2, "mover state travels");
     }
 }

@@ -9,4 +9,4 @@
 
 pub mod tcp;
 
-pub use tcp::{FileServer, RealPoolConfig, RealPoolReport, run_real_pool};
+pub use tcp::{run_real_pool, run_real_pool_with, FileServer, RealPoolConfig, RealPoolReport};

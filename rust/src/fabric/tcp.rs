@@ -11,23 +11,29 @@
 //!   | ---- sealed output stream ---> |        (job output sandbox)
 //! ```
 //!
-//! The server funnels all sealing through one crypto-service thread
-//! (optionally the PJRT artifact engine) — the submit node is the data hot
-//! spot, exactly as in the paper.
+//! Transfer admission and sealing both go through the unified
+//! [`ShadowPool`] data mover: jobs are admitted under the configured
+//! [`AdmissionConfig`] policy (the same object the simulator drives), and
+//! each admitted transfer is sealed by its assigned shadow shard's
+//! dedicated crypto-service thread. With one shard this reproduces the
+//! paper's single-funnel submit node; with N shards sealing parallelizes
+//! (see `benches/queue_ablation.rs` for the sweep).
 
 use crate::jobs::JobSpec;
+use crate::mover::{AdmissionConfig, MoverStats, ShadowPool, TransferRequest};
 use crate::runtime::engine::{NativeEngine, SealEngine};
-use crate::runtime::service::{EngineHandle, EngineService};
+use crate::runtime::service::EngineHandle;
 use crate::security::session::{self, PoolKey};
 use crate::security::Method;
 use crate::transfer::stream::{recv_stream, send_stream, StreamStats};
+use crate::transfer::ThrottlePolicy;
 use crate::util::{OnlineStats, Prng};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
     w.write_all(&v.to_le_bytes()).context("write u32")
@@ -129,13 +135,18 @@ pub struct FileServer {
 
 impl FileServer {
     /// Start serving. `files` maps name -> content (hardlinks = shared
-    /// `Arc<Vec<u8>>`). `engine` is the submit-side crypto service handle.
+    /// `Arc<Vec<u8>>`). `engines` holds one submit-side crypto-service
+    /// handle per shadow shard; each connection announces its assigned
+    /// shard and is sealed by that shard's engine.
     pub fn start(
         files: HashMap<String, Arc<Vec<u8>>>,
         pool_key: PoolKey,
-        engine: EngineHandle,
+        engines: Vec<EngineHandle>,
         chunk_words: usize,
     ) -> Result<FileServer> {
+        if engines.is_empty() {
+            bail!("file server needs at least one seal-engine handle");
+        }
         let listener = TcpListener::bind("127.0.0.1:0").context("bind file server")?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -157,14 +168,14 @@ impl FileServer {
                             conn_seq += 1;
                             let files = files.clone();
                             let key = pool_key.clone();
-                            let mut eng = engine.clone();
+                            let engines = engines.clone();
                             let bytes3 = bytes2.clone();
                             let outputs3 = outputs2.clone();
                             let seq = conn_seq;
                             threads.push(std::thread::spawn(move || {
                                 let mut rng = Prng::new(0xF11E_5E17 ^ seq);
                                 if let Err(e) = serve_one(
-                                    sock, &files, &key, &mut eng, &mut rng, chunk_words, &bytes3,
+                                    sock, &files, &key, &engines, &mut rng, chunk_words, &bytes3,
                                     &outputs3,
                                 ) {
                                     log::warn!("connection {seq}: {e:#}");
@@ -213,7 +224,7 @@ fn serve_one(
     mut sock: TcpStream,
     files: &HashMap<String, Arc<Vec<u8>>>,
     key: &PoolKey,
-    engine: &mut EngineHandle,
+    engines: &[EngineHandle],
     rng: &mut Prng,
     chunk_words: usize,
     bytes_served: &AtomicU64,
@@ -221,6 +232,11 @@ fn serve_one(
 ) -> Result<()> {
     sock.set_nodelay(true).ok();
     let sess = server_handshake(&mut sock, key, rng)?;
+
+    // Shadow-shard announcement: the mover assigned this transfer a
+    // shard at admission; its engine seals this connection.
+    let shard = read_u32(&mut sock)? as usize;
+    let mut engine = engines[shard % engines.len()].clone();
 
     // File request.
     let name_len = read_u32(&mut sock)? as usize;
@@ -237,7 +253,7 @@ fn serve_one(
 
     let stats = send_stream(
         &mut sock,
-        engine,
+        &mut engine,
         &sess.key_words,
         &sess.nonce_words,
         &content,
@@ -258,13 +274,15 @@ fn serve_one(
     Ok(())
 }
 
-/// One worker job cycle against the server: handshake, fetch input,
-/// validate, send output. Returns (input stats, wall seconds).
+/// One worker job cycle against the server: handshake, announce the
+/// mover-assigned shard, fetch input, validate, send output. Returns
+/// (input stats, wall seconds).
 pub fn run_job(
     addr: std::net::SocketAddr,
     pool_key: &PoolKey,
     spec_input: &str,
     output: &[u8],
+    shard: usize,
     rng: &mut Prng,
 ) -> Result<(StreamStats, f64)> {
     let t0 = std::time::Instant::now();
@@ -272,6 +290,7 @@ pub fn run_job(
     sock.set_nodelay(true).ok();
     let sess = client_handshake(&mut sock, pool_key, rng, &[Method::Chacha20, Method::Aes256Ctr])?;
 
+    write_u32(&mut sock, shard as u32)?;
     write_u32(&mut sock, spec_input.len() as u32)?;
     sock.write_all(spec_input.as_bytes())?;
 
@@ -304,6 +323,11 @@ pub struct RealPoolConfig {
     /// `make artifacts`); falls back to native if unavailable.
     pub use_xla_engine: bool,
     pub passphrase: String,
+    /// Shadow-pool shard count: each shard gets its own seal-engine
+    /// thread. 1 = the paper's single crypto funnel.
+    pub shadows: u32,
+    /// Transfer-admission policy (the same knob the simulator takes).
+    pub policy: AdmissionConfig,
 }
 
 impl Default for RealPoolConfig {
@@ -316,6 +340,8 @@ impl Default for RealPoolConfig {
             chunk_words: crate::transfer::stream::DEFAULT_CHUNK_WORDS,
             use_xla_engine: true,
             passphrase: "htcdm-pool".into(),
+            shadows: 1,
+            policy: AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
         }
     }
 }
@@ -330,12 +356,76 @@ pub struct RealPoolReport {
     pub transfer_secs: OnlineStats,
     pub engine_desc: String,
     pub errors: u32,
+    /// Data-mover accounting (per-shard routing, admission totals).
+    pub mover: MoverStats,
+}
+
+/// Seal-engine factory for one shadow shard: the PJRT artifact when
+/// requested and available, native ChaCha20 otherwise.
+fn shard_engine_factory(use_xla: bool) -> impl Fn(usize) -> Result<Box<dyn SealEngine>> + Send + Clone + 'static
+{
+    move |shard: usize| {
+        if use_xla {
+            let dir = crate::runtime::Manifest::default_dir();
+            match crate::runtime::Manifest::load(&dir)
+                .and_then(|m| crate::runtime::SealRuntime::load(&m, &["64k"]))
+            {
+                Ok(rt) => {
+                    return Ok(Box::new(crate::runtime::engine::XlaEngine::new(rt))
+                        as Box<dyn SealEngine>)
+                }
+                Err(e) => log::warn!("xla engine unavailable on shard {shard} ({e:#}); using native"),
+            }
+        }
+        Ok(Box::new(NativeEngine::new(Method::Chacha20)) as Box<dyn SealEngine>)
+    }
+}
+
+/// Admission gate shared between worker threads: the mover (the policy
+/// object) plus the set of admitted-but-not-yet-claimed tickets.
+struct GateState {
+    pool: ShadowPool,
+    ready: HashMap<u32, usize>,
 }
 
 /// Run a full real-mode pool on loopback: a submit file server with the
-/// hard-linked dataset and `workers` worker threads pulling jobs.
+/// hard-linked dataset and `workers` worker threads pulling jobs, all
+/// admission driven by a mover built from the config.
 pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
+    let mover = ShadowPool::with_engines(
+        cfg.shadows.max(1),
+        cfg.policy.clone(),
+        shard_engine_factory(cfg.use_xla_engine),
+    );
+    let (report, _mover) = run_real_pool_with(&cfg, mover)?;
+    Ok(report)
+}
+
+/// Like [`run_real_pool`] but driving a caller-supplied mover — the same
+/// policy object can first drive the simulator and then this fabric
+/// (`tests/mover_unified.rs`). Engines are spawned on demand if the mover
+/// arrived from sim mode; admission statistics accumulate across both.
+/// Returns the report and the mover (with its accumulated state).
+pub fn run_real_pool_with(
+    cfg: &RealPoolConfig,
+    mut mover: ShadowPool,
+) -> Result<(RealPoolReport, ShadowPool)> {
     let pool_key = PoolKey::from_passphrase(&cfg.passphrase);
+    mover.ensure_engines(shard_engine_factory(cfg.use_xla_engine));
+    if mover.config().limit() == 0 {
+        bail!("admission policy admits nothing (limit 0) — the pool would deadlock");
+    }
+    // A carried-over mover must be quiescent: stale in-flight tickets
+    // would hold admission slots no worker here will ever complete (and
+    // could collide with this run's job procs), wedging the pool.
+    if mover.active() > 0 || mover.waiting() > 0 {
+        bail!(
+            "mover still has {} active / {} waiting transfers — complete the previous run \
+             before driving the real fabric with it",
+            mover.active(),
+            mover.waiting()
+        );
+    }
 
     // The paper's dataset trick: one extent, many names.
     let mut extent = vec![0u8; cfg.input_bytes];
@@ -346,26 +436,17 @@ pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
         files.insert(format!("input_{p}"), extent.clone());
     }
 
-    // Submit-side crypto service: PJRT artifact if available.
-    let use_xla = cfg.use_xla_engine;
-    let service = EngineService::spawn(move || {
-        if use_xla {
-            let dir = crate::runtime::Manifest::default_dir();
-            match crate::runtime::Manifest::load(&dir).and_then(|m| {
-                crate::runtime::SealRuntime::load(&m, &["64k"])
-            }) {
-                Ok(rt) => {
-                    return Ok(Box::new(crate::runtime::engine::XlaEngine::new(rt))
-                        as Box<dyn SealEngine>)
-                }
-                Err(e) => log::warn!("xla engine unavailable ({e:#}); using native"),
-            }
-        }
-        Ok(Box::new(NativeEngine::new(Method::Chacha20)) as Box<dyn SealEngine>)
-    });
-    let engine_desc = service.handle().describe();
+    let handles = mover.handles();
+    let engine_desc = format!(
+        "{} x{}",
+        handles
+            .first()
+            .map(|h| h.describe())
+            .unwrap_or_else(|| "none".into()),
+        handles.len()
+    );
 
-    let mut server = FileServer::start(files, pool_key.clone(), service.handle(), cfg.chunk_words)?;
+    let mut server = FileServer::start(files, pool_key.clone(), handles, cfg.chunk_words)?;
 
     let queue: Arc<Mutex<Vec<JobSpec>>> = Arc::new(Mutex::new(
         crate::workload::benchmark_burst(
@@ -378,6 +459,14 @@ pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
         .collect(),
     ));
 
+    let gate = Arc::new((
+        Mutex::new(GateState {
+            pool: mover,
+            ready: HashMap::new(),
+        }),
+        Condvar::new(),
+    ));
+
     let t0 = std::time::Instant::now();
     let stats = Arc::new(Mutex::new((OnlineStats::new(), 0u64, 0u32))); // (times, bytes, errors)
     let mut worker_threads = Vec::new();
@@ -385,6 +474,7 @@ pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
         let queue = queue.clone();
         let stats = stats.clone();
         let key = pool_key.clone();
+        let gate = gate.clone();
         let addr = server.addr;
         let out_bytes = cfg.output_bytes;
         worker_threads.push(std::thread::spawn(move || {
@@ -393,7 +483,38 @@ pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
             loop {
                 let job = queue.lock().unwrap().pop();
                 let Some(job) = job else { break };
-                match run_job(addr, &key, &job.input_file, &output, &mut rng) {
+                let ticket = job.id.proc;
+
+                // Admission: request, then wait until the policy admits
+                // this ticket (it may admit other tickets first).
+                let (lock, cv) = &*gate;
+                let shard = {
+                    let mut g = lock.lock().unwrap();
+                    let req =
+                        TransferRequest::new(ticket, job.owner.clone(), job.input_bytes.0);
+                    for a in g.pool.request(req) {
+                        g.ready.insert(a.ticket, a.shard);
+                    }
+                    cv.notify_all();
+                    loop {
+                        if let Some(s) = g.ready.remove(&ticket) {
+                            break s;
+                        }
+                        g = cv.wait(g).unwrap();
+                    }
+                };
+
+                let result = run_job(addr, &key, &job.input_file, &output, shard, &mut rng);
+
+                {
+                    let mut g = lock.lock().unwrap();
+                    for a in g.pool.complete(ticket) {
+                        g.ready.insert(a.ticket, a.shard);
+                    }
+                    cv.notify_all();
+                }
+
+                match result {
                     Ok((st, secs)) => {
                         let mut s = stats.lock().unwrap();
                         s.0.push(secs);
@@ -417,7 +538,13 @@ pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
         let s = stats.lock().unwrap();
         (s.0.clone(), s.1, s.2)
     };
-    Ok(RealPoolReport {
+    let mover = Arc::try_unwrap(gate)
+        .map_err(|_| anyhow!("admission gate still referenced after join"))?
+        .0
+        .into_inner()
+        .map_err(|_| anyhow!("admission gate poisoned"))?
+        .pool;
+    let report = RealPoolReport {
         jobs_completed: cfg.n_jobs - errors,
         total_payload_bytes: bytes,
         wall_secs: wall,
@@ -425,16 +552,18 @@ pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
         transfer_secs: times,
         engine_desc,
         errors,
-    })
+        mover: mover.stats(),
+    };
+    Ok((report, mover))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::service::EngineService;
 
-    #[test]
-    fn real_pool_native_roundtrip() {
-        let cfg = RealPoolConfig {
+    fn base_cfg() -> RealPoolConfig {
+        RealPoolConfig {
             n_jobs: 8,
             workers: 2,
             input_bytes: 256 << 10,
@@ -442,13 +571,62 @@ mod tests {
             chunk_words: 1024, // 4 KiB frames keep the test quick
             use_xla_engine: false,
             passphrase: "test".into(),
-        };
-        let r = run_real_pool(cfg).unwrap();
+            shadows: 1,
+            policy: AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+        }
+    }
+
+    #[test]
+    fn real_pool_native_roundtrip() {
+        let r = run_real_pool(base_cfg()).unwrap();
         assert_eq!(r.errors, 0);
         assert_eq!(r.jobs_completed, 8);
         assert_eq!(r.total_payload_bytes, 8 * (256 << 10) as u64);
         assert!(r.gbps > 0.0);
         assert_eq!(r.transfer_secs.count(), 8);
+        assert_eq!(r.mover.total_admitted, 8);
+        assert_eq!(r.mover.released_without_active, 0);
+    }
+
+    #[test]
+    fn real_pool_multi_shard_routes_across_engines() {
+        let mut cfg = base_cfg();
+        cfg.shadows = 3;
+        cfg.workers = 3;
+        cfg.n_jobs = 9;
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.jobs_completed, 9);
+        assert_eq!(r.mover.admitted_per_shard.len(), 3);
+        let total: u64 = r.mover.admitted_per_shard.iter().sum();
+        assert_eq!(total, 9, "every job routed through some shard");
+        assert!(r.engine_desc.contains("x3"), "{}", r.engine_desc);
+    }
+
+    #[test]
+    fn real_pool_enforces_admission_limit() {
+        let mut cfg = base_cfg();
+        cfg.workers = 4;
+        cfg.policy = AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(2));
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.jobs_completed, 8);
+        assert!(
+            r.mover.peak_active <= 2,
+            "policy capped concurrency: peak {}",
+            r.mover.peak_active
+        );
+    }
+
+    #[test]
+    fn real_pool_fair_share_policy_runs_clean() {
+        let mut cfg = base_cfg();
+        cfg.policy = AdmissionConfig::FairShare { limit: 2 };
+        cfg.shadows = 2;
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.jobs_completed, 8);
+        assert!(r.mover.peak_active <= 2);
     }
 
     #[test]
@@ -459,10 +637,10 @@ mod tests {
         let svc = EngineService::spawn(|| {
             Ok(Box::new(NativeEngine::new(Method::Chacha20)) as Box<dyn SealEngine>)
         });
-        let mut server = FileServer::start(files, key_good, svc.handle(), 256).unwrap();
+        let mut server = FileServer::start(files, key_good, vec![svc.handle()], 256).unwrap();
         let bad = PoolKey::from_passphrase("wrong");
         let mut rng = Prng::new(1);
-        let err = run_job(server.addr, &bad, "f", &[0u8; 16], &mut rng);
+        let err = run_job(server.addr, &bad, "f", &[0u8; 16], 0, &mut rng);
         assert!(err.is_err(), "bad pool key must fail the handshake");
         server.stop();
     }

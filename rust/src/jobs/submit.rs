@@ -10,13 +10,22 @@ use super::{JobId, JobSpec};
 use crate::config::parse_bytes;
 use crate::util::units::Bytes;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SubmitError {
-    #[error("line {0}: {1}")]
     Parse(usize, String),
-    #[error("missing required command: {0}")]
     Missing(&'static str),
 }
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Parse(line, msg) => write!(f, "line {line}: {msg}"),
+            SubmitError::Missing(cmd) => write!(f, "missing required command: {cmd}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// A parsed submit description (before `queue` expansion).
 #[derive(Debug, Clone, Default)]

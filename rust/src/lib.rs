@@ -24,6 +24,42 @@
 //! executes them from the transfer hot path — Python is never on the
 //! request path.
 //!
+//! ## Data mover architecture
+//!
+//! Sandbox data movement is owned end-to-end by the [`mover`] subsystem,
+//! and the two fabrics consume it identically:
+//!
+//! ```text
+//!              requests (ticket, owner, bytes)
+//!                      │
+//!              ┌───────▼────────┐   AdmissionPolicy (pluggable):
+//!              │ AdmissionQueue │   fifo/disabled · fifo/disk-load ·
+//!              │ (policy-driven)│   fifo/max-concurrent · fair-share ·
+//!              └───────┬────────┘   weighted-by-size
+//!                      │ admitted
+//!              ┌───────▼────────┐
+//!              │   ShadowPool   │   least-loaded shard assignment
+//!              │  shard 0..N-1  │   (one SealEngine service per shard
+//!              └───┬────────┬───┘    in real mode)
+//!        sim mode  │        │  real mode
+//!   fluid flows over the    │  sealed frames over TCP, each
+//!   calibrated testbed      │  connection sealed by its shard's
+//!   (coordinator::engine)   │  dedicated engine thread (fabric::tcp)
+//! ```
+//!
+//! * The schedd ([`daemons::schedd`]) delegates all admission mechanics
+//!   to its `ShadowPool` — it no longer owns queue logic.
+//! * [`mover::AdmissionPolicy`] generalizes HTCondor's
+//!   `FILE_TRANSFER_DISK_LOAD_THROTTLE`: the three classic throttles stay
+//!   FIFO, while `FairShare` adds starvation-free per-owner round-robin
+//!   and `WeightedBySize` admits the smallest sandbox first.
+//! * Shadow count and policy are scenario knobs
+//!   ([`coordinator::experiment`], `TRANSFER_QUEUE_POLICY` /
+//!   `SHADOW_POOL_SIZE` in [`config`]), so the paper's single-funnel
+//!   submit node and multi-shard scaling variants run from the same code.
+//! * `tests/mover_unified.rs` drives one `ShadowPool` object through the
+//!   simulator and then the real TCP fabric, proving the path is shared.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -41,6 +77,7 @@ pub mod daemons;
 pub mod fabric;
 pub mod jobs;
 pub mod metrics;
+pub mod mover;
 pub mod netsim;
 pub mod runtime;
 pub mod security;

@@ -11,9 +11,11 @@
 use htcdm::coordinator::{Experiment, Scenario};
 use htcdm::fabric::{run_real_pool, RealPoolConfig};
 use htcdm::jobs::submit::parse_submit;
+use htcdm::mover::AdmissionConfig;
 use htcdm::runtime::engine::{Kind, NativeEngine, SealEngine, VerifyingEngine, XlaEngine};
 use htcdm::runtime::{Manifest, SealRuntime};
 use htcdm::security::Method;
+use htcdm::transfer::ThrottlePolicy;
 use htcdm::util::Prng;
 
 fn usage() -> ! {
@@ -21,9 +23,14 @@ fn usage() -> ! {
         "usage: htcdm <command>\n\
          \n\
          commands:\n\
-           experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay> [--scale N] [--csv FILE]\n\
-                      run a paper experiment on the simulated testbed\n\
+           experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay|fair-share|sharded-4>\n\
+                      [--scale N] [--csv FILE] [--config FILE]\n\
+                      run a paper experiment on the simulated testbed;\n\
+                      --config applies condor-style knobs (JOBS, INPUT_SIZE,\n\
+                      N_OWNERS, TRANSFER_QUEUE_POLICY, SHADOW_POOL_SIZE...)\n\
            pool       [--jobs N] [--workers W] [--mb SIZE] [--native]\n\
+                      [--shadows N] [--policy disabled|disk-load|max-concurrent|fair-share|weighted-by-size]\n\
+                      [--cap N]\n\
                       run a real-mode loopback pool (sealed bytes via PJRT)\n\
            submit     <file>   parse a submit description and print the jobs\n\
            verify              cross-check the PJRT artifact vs the native engine\n\
@@ -63,12 +70,19 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
         Some("fig2-wan") => Scenario::WanPaper,
         Some("queue-default") => Scenario::LanDefaultQueue,
         Some("vpn-overlay") => Scenario::LanVpn,
+        Some("fair-share") => Scenario::LanFairShare,
+        Some("sharded-4") => Scenario::LanSharded4,
         _ => usage(),
     };
     let scale: u32 = arg_value(args, "--scale")
         .map(|v| v.parse().expect("--scale N"))
         .unwrap_or(1);
-    let exp = Experiment::scenario(scenario).scaled(scale);
+    let mut exp = Experiment::scenario(scenario).scaled(scale);
+    if let Some(path) = arg_value(args, "--config") {
+        let cfg = htcdm::config::Config::parse(&std::fs::read_to_string(&path)?)?;
+        exp.spec.apply_config(&cfg)?;
+        eprintln!("applied config {path}");
+    }
     eprintln!("running {} ({} jobs)...", exp.label, exp.spec.n_jobs);
     let report = exp.run()?;
     println!(
@@ -88,6 +102,21 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
+    let cap: u32 = arg_value(args, "--cap")
+        .map(|v| v.parse().expect("--cap N"))
+        .unwrap_or(0);
+    let limit = if cap == 0 { u32::MAX } else { cap };
+    let policy = match arg_value(args, "--policy").as_deref() {
+        None | Some("disabled") => AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+        Some("disk-load") => ThrottlePolicy::htcondor_default().into(),
+        Some("max-concurrent") => ThrottlePolicy::MaxConcurrent(limit).into(),
+        Some("fair-share") => AdmissionConfig::FairShare { limit },
+        Some("weighted-by-size") => AdmissionConfig::WeightedBySize { limit },
+        Some(other) => {
+            eprintln!("unknown --policy '{other}'");
+            usage()
+        }
+    };
     let cfg = RealPoolConfig {
         n_jobs: arg_value(args, "--jobs").map(|v| v.parse().unwrap()).unwrap_or(40),
         workers: arg_value(args, "--workers").map(|v| v.parse().unwrap()).unwrap_or(4),
@@ -95,13 +124,19 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
             .map(|v| v.parse::<usize>().unwrap() << 20)
             .unwrap_or(4 << 20),
         use_xla_engine: !args.iter().any(|a| a == "--native"),
+        shadows: arg_value(args, "--shadows")
+            .map(|v| v.parse().expect("--shadows N"))
+            .unwrap_or(1),
+        policy,
         ..Default::default()
     };
     eprintln!(
-        "real-mode pool: {} jobs × {} MiB over {} workers...",
+        "real-mode pool: {} jobs × {} MiB over {} workers, {} shadow shard(s), policy {}...",
         cfg.n_jobs,
         cfg.input_bytes >> 20,
-        cfg.workers
+        cfg.workers,
+        cfg.shadows,
+        cfg.policy.label()
     );
     let r = run_real_pool(cfg)?;
     println!(
@@ -113,6 +148,10 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
         r.gbps,
         r.transfer_secs.median(),
         r.errors
+    );
+    println!(
+        "mover: peak active {} | per-shard jobs {:?} | spurious completes {}",
+        r.mover.peak_active, r.mover.admitted_per_shard, r.mover.released_without_active
     );
     Ok(())
 }

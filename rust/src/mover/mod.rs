@@ -1,0 +1,121 @@
+//! The unified data-mover subsystem: one sharded, policy-driven transfer
+//! path consumed identically by the simulated and the real TCP fabrics.
+//!
+//! The paper's submit node is a single data funnel: every sandbox flows
+//! through the schedd, and (in the seed reproduction) the real fabric
+//! additionally funneled *all* sealing through one crypto-service thread.
+//! This module turns that funnel into a tunable subsystem:
+//!
+//! * [`policy`] — the [`AdmissionPolicy`] trait generalizing the classic
+//!   `FILE_TRANSFER_DISK_LOAD_THROTTLE` choices (`Disabled` / `DiskLoad` /
+//!   `MaxConcurrent`, all FIFO) with two new scheduling policies:
+//!   `FairShare` (per-owner round-robin, starvation-free) and
+//!   `WeightedBySize` (smallest sandbox first).
+//! * [`queue`] — [`AdmissionQueue`]: the policy-driven admission queue
+//!   that owns the waiting/active bookkeeping the schedd used to hand-roll
+//!   (and whose release path can no longer underflow: spurious completes
+//!   are counted in [`MoverStats::released_without_active`]).
+//! * [`pool`] — [`ShadowPool`]: the [`DataMover`] implementation that
+//!   shards admitted transfers across N shadow workers, each with its
+//!   *own* [`SealEngine`](crate::runtime::engine::SealEngine) service —
+//!   replacing the single-crypto-thread funnel with per-shadow parallel
+//!   sealing on the real fabric, and per-shard accounting in the
+//!   simulator.
+//!
+//! The sim engine (`coordinator::engine`) drives a `ShadowPool` for
+//! admission and shard accounting of fluid flows; the real TCP fabric
+//! (`fabric::tcp`) drives the *same* object for admission and uses its
+//! per-shadow engine handles to seal real bytes. `tests/mover_unified.rs`
+//! moves one `ShadowPool` through both fabrics back to back.
+
+pub mod policy;
+pub mod pool;
+pub mod queue;
+
+pub use policy::{ActiveView, AdmissionConfig, AdmissionPolicy};
+pub use pool::ShadowPool;
+pub use queue::AdmissionQueue;
+
+/// One sandbox-transfer request entering the mover.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransferRequest {
+    /// Caller-scoped ticket (the engine uses job procs).
+    pub ticket: u32,
+    /// Job owner, the fair-share scheduling key.
+    pub owner: String,
+    /// Sandbox size, the weighted-by-size scheduling key.
+    pub bytes: u64,
+}
+
+impl TransferRequest {
+    pub fn new(ticket: u32, owner: impl Into<String>, bytes: u64) -> TransferRequest {
+        TransferRequest {
+            ticket,
+            owner: owner.into(),
+            bytes,
+        }
+    }
+}
+
+/// An admitted transfer: the ticket plus the shadow shard serving it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Admitted {
+    pub ticket: u32,
+    pub shard: usize,
+}
+
+/// Aggregated mover accounting for reports and benches.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MoverStats {
+    /// Highest concurrent admitted-transfer count observed.
+    pub peak_active: u32,
+    pub total_admitted: u64,
+    /// Completes that arrived with no matching active transfer (the old
+    /// `TransferQueue::release` underflow, now saturated and counted).
+    pub released_without_active: u64,
+    /// Transfers admitted per shadow shard.
+    pub admitted_per_shard: Vec<u64>,
+    /// Payload bytes routed per shadow shard.
+    pub bytes_per_shard: Vec<u64>,
+}
+
+impl MoverStats {
+    /// Ratio of the busiest shard's byte load to a perfectly even split
+    /// (1.0 = perfectly balanced). 0.0 when nothing moved.
+    pub fn shard_imbalance(&self) -> f64 {
+        let total: u64 = self.bytes_per_shard.iter().sum();
+        if total == 0 || self.bytes_per_shard.is_empty() {
+            return 0.0;
+        }
+        let even = total as f64 / self.bytes_per_shard.len() as f64;
+        let max = *self.bytes_per_shard.iter().max().unwrap() as f64;
+        max / even
+    }
+}
+
+/// The data-mover interface both fabrics drive: request admission for a
+/// sandbox transfer, learn which shard serves it, signal completion.
+pub trait DataMover: Send + std::fmt::Debug {
+    /// Submit a transfer request; returns every transfer (possibly
+    /// including this one) admitted *now* under the policy.
+    fn request(&mut self, req: TransferRequest) -> Vec<Admitted>;
+
+    /// A transfer finished (or failed); returns newly admitted transfers.
+    fn complete(&mut self, ticket: u32) -> Vec<Admitted>;
+
+    /// Currently admitted (in-flight) transfer count.
+    fn active(&self) -> u32;
+
+    /// Requests waiting for admission.
+    fn waiting(&self) -> usize;
+
+    /// Number of shadow shards.
+    fn shard_count(&self) -> usize;
+
+    /// Shard serving an admitted, not-yet-completed ticket.
+    fn shard_of(&self, ticket: u32) -> Option<usize>;
+
+    fn stats(&self) -> MoverStats;
+
+    fn describe(&self) -> String;
+}

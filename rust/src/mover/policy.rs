@@ -1,0 +1,376 @@
+//! Pluggable admission policies for the data mover.
+//!
+//! [`AdmissionConfig`] is the serializable knob (what scenarios, configs
+//! and `EngineSpec` carry); [`AdmissionPolicy`] is the behavior it builds.
+//! The three classic throttle modes stay FIFO — bit-compatible with the
+//! legacy `TransferQueue` — while `FairShare` and `WeightedBySize` add
+//! scheduling *order* on top of the concurrency limit.
+
+use super::TransferRequest;
+use crate::config::{Config, ConfigError};
+use crate::transfer::ThrottlePolicy;
+use std::collections::{HashMap, VecDeque};
+
+/// Read-only view of the queue's active-transfer bookkeeping, offered to
+/// policies at selection time.
+#[derive(Debug)]
+pub struct ActiveView<'a> {
+    pub active_total: u32,
+    pub active_by_owner: &'a HashMap<String, u32>,
+}
+
+/// An admission policy: a concurrency limit plus a selection order over
+/// the waiting queue. Called only while `active < limit()`.
+pub trait AdmissionPolicy: std::fmt::Debug + Send {
+    /// Maximum concurrent admitted transfers.
+    fn limit(&self) -> u32;
+
+    /// Index into `waiting` of the next request to admit, or `None` to
+    /// hold admission. Must return a valid index when `Some`.
+    fn select(&mut self, waiting: &VecDeque<TransferRequest>, view: &ActiveView<'_>)
+        -> Option<usize>;
+
+    /// Human-readable policy description for reports.
+    fn describe(&self) -> String;
+}
+
+/// FIFO admission under a fixed limit — the behavior of the legacy
+/// `TransferQueue` for all three [`ThrottlePolicy`] variants.
+#[derive(Debug, Clone)]
+pub struct Fifo {
+    limit: u32,
+    label: String,
+}
+
+impl Fifo {
+    pub fn new(limit: u32, label: impl Into<String>) -> Fifo {
+        Fifo {
+            limit,
+            label: label.into(),
+        }
+    }
+}
+
+impl AdmissionPolicy for Fifo {
+    fn limit(&self) -> u32 {
+        self.limit
+    }
+
+    fn select(
+        &mut self,
+        waiting: &VecDeque<TransferRequest>,
+        _view: &ActiveView<'_>,
+    ) -> Option<usize> {
+        if waiting.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+
+    fn describe(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// Per-owner round-robin: owners take turns in a fixed rotation (arrival
+/// order of first sighting), FIFO within each owner. Starvation-free: in
+/// any stretch where owner O has a waiting request, every other owner is
+/// admitted at most once before O is.
+#[derive(Debug, Clone)]
+pub struct FairShare {
+    limit: u32,
+    /// Ring position of each owner ever seen, in first-seen order.
+    ring_index: HashMap<String, usize>,
+    ring_len: usize,
+    /// Ring position where the next search starts (one past the owner
+    /// served last).
+    cursor: usize,
+}
+
+impl FairShare {
+    pub fn new(limit: u32) -> FairShare {
+        FairShare {
+            limit,
+            ring_index: HashMap::new(),
+            ring_len: 0,
+            cursor: 0,
+        }
+    }
+}
+
+impl AdmissionPolicy for FairShare {
+    fn limit(&self) -> u32 {
+        self.limit
+    }
+
+    fn select(
+        &mut self,
+        waiting: &VecDeque<TransferRequest>,
+        _view: &ActiveView<'_>,
+    ) -> Option<usize> {
+        // One pass: pick the waiting request whose owner sits closest
+        // after the cursor in the rotation ring (earliest arrival wins
+        // within an owner, so per-owner order stays FIFO).
+        let mut best: Option<(usize, usize, usize)> = None; // (dist, idx, ring pos)
+        for (idx, req) in waiting.iter().enumerate() {
+            let oi = match self.ring_index.get(&req.owner) {
+                Some(&oi) => oi,
+                None => {
+                    let oi = self.ring_len;
+                    self.ring_index.insert(req.owner.clone(), oi);
+                    self.ring_len += 1;
+                    oi
+                }
+            };
+            let dist = (oi + self.ring_len - self.cursor) % self.ring_len;
+            if best.is_none_or(|(bd, _, _)| dist < bd) {
+                best = Some((dist, idx, oi));
+            }
+        }
+        let (_, idx, oi) = best?;
+        self.cursor = (oi + 1) % self.ring_len;
+        Some(idx)
+    }
+
+    fn describe(&self) -> String {
+        if self.limit == u32::MAX {
+            "fair-share".to_string()
+        } else {
+            format!("fair-share(limit {})", self.limit)
+        }
+    }
+}
+
+/// Smallest sandbox first: minimizes mean wait when sizes are spread
+/// (shortest-job-first applied to transfer admission). Ties break FIFO.
+#[derive(Debug, Clone)]
+pub struct WeightedBySize {
+    limit: u32,
+}
+
+impl WeightedBySize {
+    pub fn new(limit: u32) -> WeightedBySize {
+        WeightedBySize { limit }
+    }
+}
+
+impl AdmissionPolicy for WeightedBySize {
+    fn limit(&self) -> u32 {
+        self.limit
+    }
+
+    fn select(
+        &mut self,
+        waiting: &VecDeque<TransferRequest>,
+        _view: &ActiveView<'_>,
+    ) -> Option<usize> {
+        // `min_by_key` keeps the first of equal keys → FIFO tie-break.
+        waiting
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| r.bytes)
+            .map(|(i, _)| i)
+    }
+
+    fn describe(&self) -> String {
+        if self.limit == u32::MAX {
+            "weighted-by-size".to_string()
+        } else {
+            format!("weighted-by-size(limit {})", self.limit)
+        }
+    }
+}
+
+/// The serializable admission knob: carried by `EngineSpec`, scenarios and
+/// `RealPoolConfig`; parsed from HTCondor-style config files.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdmissionConfig {
+    /// The classic throttles (FIFO order): `Disabled`, `DiskLoad`,
+    /// `MaxConcurrent`.
+    Throttle(ThrottlePolicy),
+    /// Per-owner round-robin; `limit == u32::MAX` means unlimited
+    /// concurrency (ordering still applies when a limit is later hit).
+    FairShare { limit: u32 },
+    /// Smallest-sandbox-first.
+    WeightedBySize { limit: u32 },
+}
+
+impl From<ThrottlePolicy> for AdmissionConfig {
+    fn from(t: ThrottlePolicy) -> AdmissionConfig {
+        AdmissionConfig::Throttle(t)
+    }
+}
+
+impl AdmissionConfig {
+    /// Build the runtime policy object.
+    pub fn build(&self) -> Box<dyn AdmissionPolicy + Send> {
+        match self {
+            AdmissionConfig::Throttle(t) => Box::new(Fifo::new(t.limit(), self.label())),
+            AdmissionConfig::FairShare { limit } => Box::new(FairShare::new(*limit)),
+            AdmissionConfig::WeightedBySize { limit } => Box::new(WeightedBySize::new(*limit)),
+        }
+    }
+
+    /// The concurrency limit this config imposes.
+    pub fn limit(&self) -> u32 {
+        match self {
+            AdmissionConfig::Throttle(t) => t.limit(),
+            AdmissionConfig::FairShare { limit } => *limit,
+            AdmissionConfig::WeightedBySize { limit } => *limit,
+        }
+    }
+
+    /// Short label for reports and bench tables.
+    pub fn label(&self) -> String {
+        match self {
+            AdmissionConfig::Throttle(ThrottlePolicy::Disabled) => "fifo/disabled".to_string(),
+            AdmissionConfig::Throttle(ThrottlePolicy::DiskLoad { .. }) => {
+                format!("fifo/disk-load(limit {})", self.limit())
+            }
+            AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(n)) => {
+                format!("fifo/max-concurrent({n})")
+            }
+            AdmissionConfig::FairShare { .. } => "fair-share".to_string(),
+            AdmissionConfig::WeightedBySize { .. } => "weighted-by-size".to_string(),
+        }
+    }
+
+    /// Parse from HTCondor-style config knobs:
+    ///
+    /// ```text
+    /// TRANSFER_QUEUE_POLICY = FAIR_SHARE     # DISABLED | DISK_LOAD |
+    ///                                        # MAX_CONCURRENT | FAIR_SHARE |
+    ///                                        # WEIGHTED_BY_SIZE
+    /// TRANSFER_QUEUE_MAX_CONCURRENT = 36    # 0 = unlimited
+    /// ```
+    pub fn from_config(cfg: &Config) -> Result<AdmissionConfig, ConfigError> {
+        let name = cfg.get_or("TRANSFER_QUEUE_POLICY", "DISABLED");
+        let raw_limit = cfg.get_u64("TRANSFER_QUEUE_MAX_CONCURRENT", 0)? as u32;
+        let limit = if raw_limit == 0 { u32::MAX } else { raw_limit };
+        match name.trim().to_ascii_uppercase().as_str() {
+            "DISABLED" | "NONE" => Ok(ThrottlePolicy::Disabled.into()),
+            "DISK_LOAD" | "DISKLOAD" | "DEFAULT" => Ok(ThrottlePolicy::htcondor_default().into()),
+            "MAX_CONCURRENT" => Ok(ThrottlePolicy::MaxConcurrent(limit).into()),
+            "FAIR_SHARE" | "FAIRSHARE" => Ok(AdmissionConfig::FairShare { limit }),
+            "WEIGHTED_BY_SIZE" | "SMALLEST_FIRST" => {
+                Ok(AdmissionConfig::WeightedBySize { limit })
+            }
+            other => Err(ConfigError::Type(
+                "TRANSFER_QUEUE_POLICY".into(),
+                "policy name",
+                other.to_string(),
+            )),
+        }
+    }
+
+    /// The shadow-pool size knob (`SHADOW_POOL_SIZE`, default 1 — the
+    /// paper's single-funnel submit node).
+    pub fn shadows_from_config(cfg: &Config) -> Result<u32, ConfigError> {
+        Ok((cfg.get_u64("SHADOW_POOL_SIZE", 1)?).max(1) as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(t: u32, owner: &str, bytes: u64) -> TransferRequest {
+        TransferRequest::new(t, owner, bytes)
+    }
+
+    fn view<'a>(map: &'a HashMap<String, u32>) -> ActiveView<'a> {
+        ActiveView {
+            active_total: 0,
+            active_by_owner: map,
+        }
+    }
+
+    #[test]
+    fn fifo_selects_front() {
+        let mut p = Fifo::new(4, "fifo");
+        let w: VecDeque<_> = [req(1, "a", 10), req(2, "b", 1)].into();
+        let m = HashMap::new();
+        assert_eq!(p.select(&w, &view(&m)), Some(0));
+        assert_eq!(p.limit(), 4);
+        let empty: VecDeque<TransferRequest> = VecDeque::new();
+        assert_eq!(p.select(&empty, &view(&m)), None);
+    }
+
+    #[test]
+    fn fair_share_rotates_owners() {
+        let mut p = FairShare::new(u32::MAX);
+        let m = HashMap::new();
+        let w: VecDeque<_> = [
+            req(0, "alice", 1),
+            req(1, "alice", 1),
+            req(2, "bob", 1),
+            req(3, "carol", 1),
+        ]
+        .into();
+        // Rotation starts after the cursor: alice, bob, carol, alice...
+        let first = p.select(&w, &view(&m)).unwrap();
+        assert_eq!(w[first].owner, "alice");
+        let w2: VecDeque<_> = [req(1, "alice", 1), req(2, "bob", 1), req(3, "carol", 1)].into();
+        let second = p.select(&w2, &view(&m)).unwrap();
+        assert_eq!(w2[second].owner, "bob");
+        let w3: VecDeque<_> = [req(1, "alice", 1), req(3, "carol", 1)].into();
+        let third = p.select(&w3, &view(&m)).unwrap();
+        assert_eq!(w3[third].owner, "carol");
+        let w4: VecDeque<_> = [req(1, "alice", 1)].into();
+        let fourth = p.select(&w4, &view(&m)).unwrap();
+        assert_eq!(w4[fourth].owner, "alice");
+    }
+
+    #[test]
+    fn weighted_by_size_picks_smallest_then_fifo() {
+        let mut p = WeightedBySize::new(8);
+        let m = HashMap::new();
+        let w: VecDeque<_> = [req(0, "a", 500), req(1, "b", 20), req(2, "c", 20)].into();
+        // Smallest wins; among equal sizes the earlier arrival wins.
+        assert_eq!(p.select(&w, &view(&m)), Some(1));
+    }
+
+    #[test]
+    fn config_roundtrip_and_labels() {
+        let cfg = Config::parse(
+            "TRANSFER_QUEUE_POLICY = FAIR_SHARE\nTRANSFER_QUEUE_MAX_CONCURRENT = 12\nSHADOW_POOL_SIZE = 4",
+        )
+        .unwrap();
+        let ac = AdmissionConfig::from_config(&cfg).unwrap();
+        assert_eq!(ac, AdmissionConfig::FairShare { limit: 12 });
+        assert_eq!(ac.limit(), 12);
+        assert_eq!(AdmissionConfig::shadows_from_config(&cfg).unwrap(), 4);
+
+        let dflt = Config::parse("").unwrap();
+        assert_eq!(
+            AdmissionConfig::from_config(&dflt).unwrap(),
+            AdmissionConfig::Throttle(ThrottlePolicy::Disabled)
+        );
+        assert_eq!(AdmissionConfig::shadows_from_config(&dflt).unwrap(), 1);
+
+        let bad = Config::parse("TRANSFER_QUEUE_POLICY = LIFO").unwrap();
+        assert!(AdmissionConfig::from_config(&bad).is_err());
+
+        assert_eq!(
+            AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(3)).label(),
+            "fifo/max-concurrent(3)"
+        );
+        assert!(AdmissionConfig::Throttle(ThrottlePolicy::htcondor_default())
+            .label()
+            .contains("disk-load"));
+    }
+
+    #[test]
+    fn throttle_conversion_preserves_limit() {
+        for t in [
+            ThrottlePolicy::Disabled,
+            ThrottlePolicy::htcondor_default(),
+            ThrottlePolicy::MaxConcurrent(7),
+        ] {
+            let ac: AdmissionConfig = t.into();
+            assert_eq!(ac.limit(), t.limit());
+            assert_eq!(ac.build().limit(), t.limit());
+        }
+    }
+}

@@ -1,0 +1,328 @@
+//! The sharded shadow pool: the one [`DataMover`] implementation both
+//! fabrics consume.
+//!
+//! HTCondor forks one *shadow* process per running job on the submit
+//! node; the paper's observation is that the submit node — not the
+//! shadows — is the funnel. The seed reproduction narrowed that funnel
+//! further by routing every connection's sealing through a single
+//! crypto-service thread. `ShadowPool` generalizes both: admitted
+//! transfers are assigned to one of N shadow shards (least-loaded first),
+//! and in real mode each shard owns a dedicated
+//! [`EngineService`](crate::runtime::service::EngineService) — its own
+//! [`SealEngine`](crate::runtime::engine::SealEngine) on its own thread —
+//! so sealing scales with the shard count instead of serializing.
+//!
+//! In sim mode no engine threads are spawned; shards are an accounting
+//! and admission structure (per-shard byte routing feeds the report and
+//! the multi-shard scaling scenarios).
+
+use super::policy::AdmissionConfig;
+use super::queue::AdmissionQueue;
+use super::{Admitted, DataMover, MoverStats, TransferRequest};
+use crate::runtime::engine::SealEngine;
+use crate::runtime::service::{EngineHandle, EngineService};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// A sharded, policy-driven data mover. See the module docs.
+pub struct ShadowPool {
+    queue: AdmissionQueue,
+    config: AdmissionConfig,
+    /// Shard serving each admitted, not-yet-completed ticket.
+    assignment: HashMap<u32, usize>,
+    active_per_shard: Vec<u32>,
+    admitted_per_shard: Vec<u64>,
+    bytes_per_shard: Vec<u64>,
+    /// One crypto service per shard in real mode; empty in sim mode.
+    engines: Vec<EngineService>,
+}
+
+impl std::fmt::Debug for ShadowPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShadowPool")
+            .field("shards", &self.active_per_shard.len())
+            .field("policy", &self.queue.policy_desc())
+            .field("active", &self.queue.active())
+            .field("waiting", &self.queue.waiting())
+            .field("engines", &self.engines.len())
+            .finish()
+    }
+}
+
+impl ShadowPool {
+    /// A simulation-mode pool: admission + shard accounting, no engine
+    /// threads.
+    pub fn sim(shards: u32, config: AdmissionConfig) -> ShadowPool {
+        let n = shards.max(1) as usize;
+        ShadowPool {
+            queue: AdmissionQueue::new(config.build()),
+            config,
+            assignment: HashMap::new(),
+            active_per_shard: vec![0; n],
+            admitted_per_shard: vec![0; n],
+            bytes_per_shard: vec![0; n],
+            engines: Vec::new(),
+        }
+    }
+
+    /// A real-mode pool: one [`EngineService`] (dedicated seal-engine
+    /// thread) per shard, built by `factory(shard)` inside each service
+    /// thread (so non-`Send` engines work).
+    pub fn with_engines<F>(shards: u32, config: AdmissionConfig, factory: F) -> ShadowPool
+    where
+        F: Fn(usize) -> Result<Box<dyn SealEngine>> + Send + Clone + 'static,
+    {
+        let mut pool = ShadowPool::sim(shards, config);
+        pool.spawn_engines(factory);
+        pool
+    }
+
+    /// Spawn per-shard engine services if none exist yet (idempotent).
+    /// Lets a sim-mode pool be handed to the real fabric afterwards —
+    /// admission state and statistics carry over.
+    pub fn ensure_engines<F>(&mut self, factory: F)
+    where
+        F: Fn(usize) -> Result<Box<dyn SealEngine>> + Send + Clone + 'static,
+    {
+        if self.engines.is_empty() {
+            self.spawn_engines(factory);
+        }
+    }
+
+    fn spawn_engines<F>(&mut self, factory: F)
+    where
+        F: Fn(usize) -> Result<Box<dyn SealEngine>> + Send + Clone + 'static,
+    {
+        let n = self.active_per_shard.len();
+        self.engines = (0..n)
+            .map(|shard| {
+                let f = factory.clone();
+                EngineService::spawn(move || f(shard))
+            })
+            .collect();
+    }
+
+    /// Per-shard seal-engine handles (empty in sim mode). Index = shard.
+    pub fn handles(&self) -> Vec<EngineHandle> {
+        self.engines.iter().map(|e| e.handle()).collect()
+    }
+
+    /// The admission configuration this pool was built with.
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.config
+    }
+
+    /// Least-loaded shard (fewest active transfers; ties → lowest index).
+    fn pick_shard(&self) -> usize {
+        self.active_per_shard
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &a)| a)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    fn assign(&mut self, admitted: Vec<TransferRequest>) -> Vec<Admitted> {
+        admitted
+            .into_iter()
+            .map(|req| {
+                let shard = self.pick_shard();
+                self.active_per_shard[shard] += 1;
+                self.admitted_per_shard[shard] += 1;
+                self.bytes_per_shard[shard] += req.bytes;
+                self.assignment.insert(req.ticket, shard);
+                Admitted {
+                    ticket: req.ticket,
+                    shard,
+                }
+            })
+            .collect()
+    }
+
+    // Inherent mirrors of the DataMover methods so callers holding the
+    // concrete type need no trait import.
+
+    pub fn request(&mut self, req: TransferRequest) -> Vec<Admitted> {
+        let admitted = self.queue.enqueue(req);
+        self.assign(admitted)
+    }
+
+    pub fn complete(&mut self, ticket: u32) -> Vec<Admitted> {
+        if let Some(shard) = self.assignment.remove(&ticket) {
+            self.active_per_shard[shard] = self.active_per_shard[shard].saturating_sub(1);
+        }
+        let admitted = self.queue.complete(ticket);
+        self.assign(admitted)
+    }
+
+    pub fn active(&self) -> u32 {
+        self.queue.active()
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.queue.waiting()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.active_per_shard.len()
+    }
+
+    pub fn shard_of(&self, ticket: u32) -> Option<usize> {
+        self.assignment.get(&ticket).copied()
+    }
+
+    pub fn stats(&self) -> MoverStats {
+        MoverStats {
+            peak_active: self.queue.peak_active,
+            total_admitted: self.queue.total_admitted,
+            released_without_active: self.queue.released_without_active,
+            admitted_per_shard: self.admitted_per_shard.clone(),
+            bytes_per_shard: self.bytes_per_shard.clone(),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "shadow-pool[{} shard{}, {}, {}]",
+            self.shard_count(),
+            if self.shard_count() == 1 { "" } else { "s" },
+            self.queue.policy_desc(),
+            if self.engines.is_empty() {
+                "sim".to_string()
+            } else {
+                "sealing".to_string()
+            }
+        )
+    }
+}
+
+impl DataMover for ShadowPool {
+    fn request(&mut self, req: TransferRequest) -> Vec<Admitted> {
+        ShadowPool::request(self, req)
+    }
+
+    fn complete(&mut self, ticket: u32) -> Vec<Admitted> {
+        ShadowPool::complete(self, ticket)
+    }
+
+    fn active(&self) -> u32 {
+        ShadowPool::active(self)
+    }
+
+    fn waiting(&self) -> usize {
+        ShadowPool::waiting(self)
+    }
+
+    fn shard_count(&self) -> usize {
+        ShadowPool::shard_count(self)
+    }
+
+    fn shard_of(&self, ticket: u32) -> Option<usize> {
+        ShadowPool::shard_of(self, ticket)
+    }
+
+    fn stats(&self) -> MoverStats {
+        ShadowPool::stats(self)
+    }
+
+    fn describe(&self) -> String {
+        ShadowPool::describe(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::engine::{Kind, NativeEngine};
+    use crate::security::Method;
+    use crate::transfer::ThrottlePolicy;
+
+    fn r(t: u32, bytes: u64) -> TransferRequest {
+        TransferRequest::new(t, "owner", bytes)
+    }
+
+    #[test]
+    fn shards_balance_least_loaded() {
+        let mut p = ShadowPool::sim(3, ThrottlePolicy::Disabled.into());
+        for t in 0..9 {
+            let adm = p.request(r(t, 100));
+            assert_eq!(adm.len(), 1);
+        }
+        let st = p.stats();
+        assert_eq!(st.admitted_per_shard, vec![3, 3, 3]);
+        assert_eq!(st.bytes_per_shard, vec![300, 300, 300]);
+        assert!((st.shard_imbalance() - 1.0).abs() < 1e-12);
+        // Completing a shard-0 transfer makes shard 0 least-loaded again.
+        let s0_ticket = (0..9).find(|&t| p.shard_of(t) == Some(0)).unwrap();
+        p.complete(s0_ticket);
+        let adm = p.request(r(100, 50));
+        assert_eq!(adm[0].shard, 0);
+    }
+
+    #[test]
+    fn admission_respects_policy_limit() {
+        let mut p = ShadowPool::sim(2, ThrottlePolicy::MaxConcurrent(2).into());
+        assert_eq!(p.request(r(1, 1)).len(), 1);
+        assert_eq!(p.request(r(2, 1)).len(), 1);
+        assert_eq!(p.request(r(3, 1)).len(), 0);
+        assert_eq!(p.active(), 2);
+        assert_eq!(p.waiting(), 1);
+        let adm = p.complete(1);
+        assert_eq!(adm.len(), 1);
+        assert_eq!(adm[0].ticket, 3);
+        assert_eq!(p.shard_of(3), Some(adm[0].shard));
+        assert_eq!(p.shard_of(1), None, "completed tickets are unassigned");
+    }
+
+    #[test]
+    fn spurious_complete_counted() {
+        let mut p = ShadowPool::sim(1, ThrottlePolicy::Disabled.into());
+        p.complete(42);
+        assert_eq!(p.stats().released_without_active, 1);
+        assert_eq!(p.active(), 0);
+    }
+
+    #[test]
+    fn engine_per_shard_seals_independently() {
+        let p = ShadowPool::with_engines(3, ThrottlePolicy::Disabled.into(), |_shard| {
+            Ok(Box::new(NativeEngine::new(Method::Chacha20)) as Box<dyn SealEngine>)
+        });
+        let handles = p.handles();
+        assert_eq!(handles.len(), 3);
+        // All shards produce identical sealing for identical inputs (they
+        // are interchangeable engines, just parallel).
+        let key = [1u32; 8];
+        let nonce = [2, 3, 4];
+        let mut outs = Vec::new();
+        for mut h in handles {
+            let mut data: Vec<u32> = (0..32u32).collect();
+            let d = h.process(Kind::Seal, &key, &nonce, 0, &mut data).unwrap();
+            outs.push((data, d));
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[1], outs[2]);
+    }
+
+    #[test]
+    fn ensure_engines_is_idempotent_and_preserves_state() {
+        let mut p = ShadowPool::sim(2, ThrottlePolicy::Disabled.into());
+        p.request(r(1, 10));
+        let factory = |_s: usize| {
+            Ok(Box::new(NativeEngine::new(Method::Chacha20)) as Box<dyn SealEngine>)
+        };
+        p.ensure_engines(factory);
+        assert_eq!(p.handles().len(), 2);
+        p.ensure_engines(factory);
+        assert_eq!(p.handles().len(), 2, "no respawn");
+        assert_eq!(p.active(), 1, "admission state preserved");
+        assert_eq!(p.stats().total_admitted, 1);
+    }
+
+    #[test]
+    fn describe_mentions_shards_and_policy() {
+        let p = ShadowPool::sim(4, AdmissionConfig::FairShare { limit: 8 });
+        let d = p.describe();
+        assert!(d.contains("4 shards"), "{d}");
+        assert!(d.contains("fair-share"), "{d}");
+    }
+}

@@ -1,0 +1,211 @@
+//! The policy-driven admission queue: waiting/active bookkeeping that the
+//! schedd (and the real fabric) delegate to instead of owning.
+//!
+//! Replaces the mechanics of the legacy FIFO `TransferQueue` with a
+//! pluggable selection order, per-owner accounting for fair-share, and a
+//! saturating complete path: a spurious `complete` (the old `release`
+//! underflow) is counted instead of corrupting the active count.
+
+use super::policy::{ActiveView, AdmissionPolicy};
+use super::TransferRequest;
+use std::collections::{HashMap, VecDeque};
+
+/// A transfer-admission queue driven by an [`AdmissionPolicy`].
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    policy: Box<dyn AdmissionPolicy + Send>,
+    waiting: VecDeque<TransferRequest>,
+    /// Owner of each admitted, not-yet-completed ticket.
+    active_owner: HashMap<u32, String>,
+    active_by_owner: HashMap<String, u32>,
+    active: u32,
+    pub peak_active: u32,
+    pub total_admitted: u64,
+    /// Completes with no matching active transfer (saturated, counted).
+    pub released_without_active: u64,
+}
+
+impl AdmissionQueue {
+    pub fn new(policy: Box<dyn AdmissionPolicy + Send>) -> AdmissionQueue {
+        AdmissionQueue {
+            policy,
+            waiting: VecDeque::new(),
+            active_owner: HashMap::new(),
+            active_by_owner: HashMap::new(),
+            active: 0,
+            peak_active: 0,
+            total_admitted: 0,
+            released_without_active: 0,
+        }
+    }
+
+    pub fn active(&self) -> u32 {
+        self.active
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn policy_desc(&self) -> String {
+        self.policy.describe()
+    }
+
+    /// Enqueue a request; returns the requests admitted NOW (possibly
+    /// including this one), in admission order.
+    pub fn enqueue(&mut self, req: TransferRequest) -> Vec<TransferRequest> {
+        self.waiting.push_back(req);
+        self.admit()
+    }
+
+    /// A transfer finished; returns newly admitted requests. A ticket
+    /// with no active transfer increments `released_without_active`
+    /// instead of underflowing.
+    pub fn complete(&mut self, ticket: u32) -> Vec<TransferRequest> {
+        match self.active_owner.remove(&ticket) {
+            Some(owner) => {
+                self.active = self.active.saturating_sub(1);
+                if let Some(n) = self.active_by_owner.get_mut(&owner) {
+                    *n = n.saturating_sub(1);
+                    if *n == 0 {
+                        self.active_by_owner.remove(&owner);
+                    }
+                }
+            }
+            None => {
+                self.released_without_active += 1;
+            }
+        }
+        self.admit()
+    }
+
+    fn admit(&mut self) -> Vec<TransferRequest> {
+        let mut out = Vec::new();
+        while self.active < self.policy.limit() && !self.waiting.is_empty() {
+            let view = ActiveView {
+                active_total: self.active,
+                active_by_owner: &self.active_by_owner,
+            };
+            let Some(idx) = self.policy.select(&self.waiting, &view) else {
+                break;
+            };
+            let req = self
+                .waiting
+                .remove(idx)
+                .expect("policy selected a valid waiting index");
+            self.active += 1;
+            *self.active_by_owner.entry(req.owner.clone()).or_insert(0) += 1;
+            self.active_owner.insert(req.ticket, req.owner.clone());
+            self.total_admitted += 1;
+            self.peak_active = self.peak_active.max(self.active);
+            out.push(req);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mover::policy::AdmissionConfig;
+    use crate::transfer::ThrottlePolicy;
+
+    fn q(cfg: AdmissionConfig) -> AdmissionQueue {
+        AdmissionQueue::new(cfg.build())
+    }
+
+    fn r(t: u32, owner: &str, bytes: u64) -> TransferRequest {
+        TransferRequest::new(t, owner, bytes)
+    }
+
+    fn tickets(v: &[TransferRequest]) -> Vec<u32> {
+        v.iter().map(|x| x.ticket).collect()
+    }
+
+    #[test]
+    fn fifo_matches_legacy_queue_semantics() {
+        let mut aq = q(ThrottlePolicy::MaxConcurrent(2).into());
+        assert_eq!(tickets(&aq.enqueue(r(1, "a", 10))), vec![1]);
+        assert_eq!(tickets(&aq.enqueue(r(2, "a", 10))), vec![2]);
+        assert_eq!(tickets(&aq.enqueue(r(3, "a", 10))), Vec::<u32>::new());
+        assert_eq!(aq.active(), 2);
+        assert_eq!(aq.waiting(), 1);
+        assert_eq!(tickets(&aq.complete(1)), vec![3]);
+        assert_eq!(aq.active(), 2);
+        aq.complete(2);
+        aq.complete(3);
+        assert_eq!(aq.active(), 0);
+        assert_eq!(aq.peak_active, 2);
+        assert_eq!(aq.total_admitted, 3);
+    }
+
+    #[test]
+    fn spurious_complete_is_counted_not_underflowed() {
+        let mut aq = q(ThrottlePolicy::Disabled.into());
+        assert!(aq.complete(99).is_empty());
+        assert_eq!(aq.active(), 0, "no underflow");
+        assert_eq!(aq.released_without_active, 1);
+        // Queue still functions normally afterwards.
+        assert_eq!(tickets(&aq.enqueue(r(1, "a", 1))), vec![1]);
+        aq.complete(1);
+        assert_eq!(aq.active(), 0);
+        // Double-complete of a finished ticket is also just counted.
+        aq.complete(1);
+        assert_eq!(aq.released_without_active, 2);
+    }
+
+    #[test]
+    fn fair_share_interleaves_two_owners() {
+        let mut aq = q(AdmissionConfig::FairShare { limit: 1 });
+        // alice floods first, bob arrives later — strict alternation.
+        aq.enqueue(r(0, "alice", 1));
+        for t in 1..4 {
+            aq.enqueue(r(t, "alice", 1));
+        }
+        for t in 4..7 {
+            aq.enqueue(r(t, "bob", 1));
+        }
+        let mut order = Vec::new();
+        let mut last = 0u32;
+        for _ in 0..6 {
+            let adm = aq.complete(last);
+            assert_eq!(adm.len(), 1);
+            order.push(adm[0].owner.clone());
+            last = adm[0].ticket;
+        }
+        assert_eq!(
+            order,
+            vec!["alice", "bob", "alice", "bob", "alice", "bob"],
+            "owners alternate once both are waiting"
+        );
+    }
+
+    #[test]
+    fn weighted_by_size_admits_small_first() {
+        let mut aq = q(AdmissionConfig::WeightedBySize { limit: 1 });
+        aq.enqueue(r(0, "a", 1000)); // admitted immediately (capacity free)
+        aq.enqueue(r(1, "a", 500));
+        aq.enqueue(r(2, "a", 10));
+        aq.enqueue(r(3, "a", 200));
+        let next = aq.complete(0);
+        assert_eq!(tickets(&next), vec![2], "smallest first");
+        let next = aq.complete(2);
+        assert_eq!(tickets(&next), vec![3]);
+        let next = aq.complete(3);
+        assert_eq!(tickets(&next), vec![1]);
+    }
+
+    #[test]
+    fn per_owner_accounting_tracks_completion() {
+        let mut aq = q(ThrottlePolicy::Disabled.into());
+        aq.enqueue(r(1, "a", 1));
+        aq.enqueue(r(2, "b", 1));
+        aq.enqueue(r(3, "a", 1));
+        assert_eq!(aq.active(), 3);
+        aq.complete(1);
+        aq.complete(3);
+        aq.complete(2);
+        assert_eq!(aq.active(), 0);
+        assert_eq!(aq.released_without_active, 0);
+    }
+}

@@ -13,6 +13,7 @@ pub mod service;
 
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -102,6 +103,7 @@ impl Manifest {
 }
 
 /// A compiled seal/unseal executable pair for one chunk geometry.
+#[cfg(feature = "xla")]
 struct CompiledGeometry {
     n_blocks: usize,
     seal: xla::PjRtLoadedExecutable,
@@ -109,18 +111,21 @@ struct CompiledGeometry {
 }
 
 /// The PJRT-backed seal runtime: client + compiled executables.
+#[cfg(feature = "xla")]
 pub struct SealRuntime {
     #[allow(dead_code)]
     client: xla::PjRtClient,
     geometries: HashMap<String, CompiledGeometry>,
 }
 
+#[cfg(feature = "xla")]
 impl std::fmt::Debug for SealRuntime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "SealRuntime({} geometries)", self.geometries.len())
     }
 }
 
+#[cfg(feature = "xla")]
 impl SealRuntime {
     /// Load and compile artifacts for the given geometry names (compile
     /// everything in [`GEOMETRIES`] when `names` is empty).
@@ -231,6 +236,57 @@ impl SealRuntime {
             bail!("digest length {} != 4", dig_vec.len());
         }
         Ok((payload, [dig_vec[0], dig_vec[1], dig_vec[2], dig_vec[3]]))
+    }
+}
+
+/// Stub seal runtime used when the crate is built without the `xla`
+/// feature (the default in offline environments): loading always fails
+/// with a clear message and the engine layer falls back to the native
+/// data plane. The API surface matches the real runtime so callers
+/// compile unchanged.
+#[cfg(not(feature = "xla"))]
+pub struct SealRuntime {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl std::fmt::Debug for SealRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SealRuntime(stub: built without `xla`)")
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl SealRuntime {
+    pub fn load(_manifest: &Manifest, _names: &[&str]) -> Result<SealRuntime> {
+        bail!(
+            "PJRT runtime unavailable: htcdm was built without the `xla` \
+             feature; rebuild with `--features xla` (and an xla crate \
+             provided by the environment) or use the native engine"
+        )
+    }
+
+    pub fn has_geometry(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn n_blocks(&self, _name: &str) -> Option<usize> {
+        None
+    }
+
+    pub fn pick_geometry(&self, _words: usize) -> Option<&str> {
+        None
+    }
+
+    pub fn run(
+        &self,
+        _kind: engine::Kind,
+        _name: &str,
+        _key: &[u32; 8],
+        _iv: &[u32; 4],
+        _data: &[u32],
+    ) -> Result<(Vec<u32>, [u32; 4])> {
+        bail!("PJRT runtime unavailable (built without the `xla` feature)")
     }
 }
 

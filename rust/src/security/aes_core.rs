@@ -1,0 +1,181 @@
+//! AES-256 block encryption (FIPS 197), implemented in-crate.
+//!
+//! Only encryption is needed: the data plane runs AES in CTR mode, where
+//! decryption is the same keystream XOR. Validated against the FIPS-197
+//! Appendix C.3 known-answer vector and a Python mirror of the same code.
+//!
+//! This is a straightforward table-driven implementation (S-box lookups,
+//! `xtime` for MixColumns) — clarity over speed; the crypto line-rate
+//! bench measures ChaCha20 as the fast path.
+
+/// The AES S-box (FIPS 197 Fig. 7).
+const SBOX: [u8; 256] = [
+    0x63, 0x7C, 0x77, 0x7B, 0xF2, 0x6B, 0x6F, 0xC5, 0x30, 0x01, 0x67, 0x2B, 0xFE, 0xD7, 0xAB, 0x76,
+    0xCA, 0x82, 0xC9, 0x7D, 0xFA, 0x59, 0x47, 0xF0, 0xAD, 0xD4, 0xA2, 0xAF, 0x9C, 0xA4, 0x72, 0xC0,
+    0xB7, 0xFD, 0x93, 0x26, 0x36, 0x3F, 0xF7, 0xCC, 0x34, 0xA5, 0xE5, 0xF1, 0x71, 0xD8, 0x31, 0x15,
+    0x04, 0xC7, 0x23, 0xC3, 0x18, 0x96, 0x05, 0x9A, 0x07, 0x12, 0x80, 0xE2, 0xEB, 0x27, 0xB2, 0x75,
+    0x09, 0x83, 0x2C, 0x1A, 0x1B, 0x6E, 0x5A, 0xA0, 0x52, 0x3B, 0xD6, 0xB3, 0x29, 0xE3, 0x2F, 0x84,
+    0x53, 0xD1, 0x00, 0xED, 0x20, 0xFC, 0xB1, 0x5B, 0x6A, 0xCB, 0xBE, 0x39, 0x4A, 0x4C, 0x58, 0xCF,
+    0xD0, 0xEF, 0xAA, 0xFB, 0x43, 0x4D, 0x33, 0x85, 0x45, 0xF9, 0x02, 0x7F, 0x50, 0x3C, 0x9F, 0xA8,
+    0x51, 0xA3, 0x40, 0x8F, 0x92, 0x9D, 0x38, 0xF5, 0xBC, 0xB6, 0xDA, 0x21, 0x10, 0xFF, 0xF3, 0xD2,
+    0xCD, 0x0C, 0x13, 0xEC, 0x5F, 0x97, 0x44, 0x17, 0xC4, 0xA7, 0x7E, 0x3D, 0x64, 0x5D, 0x19, 0x73,
+    0x60, 0x81, 0x4F, 0xDC, 0x22, 0x2A, 0x90, 0x88, 0x46, 0xEE, 0xB8, 0x14, 0xDE, 0x5E, 0x0B, 0xDB,
+    0xE0, 0x32, 0x3A, 0x0A, 0x49, 0x06, 0x24, 0x5C, 0xC2, 0xD3, 0xAC, 0x62, 0x91, 0x95, 0xE4, 0x79,
+    0xE7, 0xC8, 0x37, 0x6D, 0x8D, 0xD5, 0x4E, 0xA9, 0x6C, 0x56, 0xF4, 0xEA, 0x65, 0x7A, 0xAE, 0x08,
+    0xBA, 0x78, 0x25, 0x2E, 0x1C, 0xA6, 0xB4, 0xC6, 0xE8, 0xDD, 0x74, 0x1F, 0x4B, 0xBD, 0x8B, 0x8A,
+    0x70, 0x3E, 0xB5, 0x66, 0x48, 0x03, 0xF6, 0x0E, 0x61, 0x35, 0x57, 0xB9, 0x86, 0xC1, 0x1D, 0x9E,
+    0xE1, 0xF8, 0x98, 0x11, 0x69, 0xD9, 0x8E, 0x94, 0x9B, 0x1E, 0x87, 0xE9, 0xCE, 0x55, 0x28, 0xDF,
+    0x8C, 0xA1, 0x89, 0x0D, 0xBF, 0xE6, 0x42, 0x68, 0x41, 0x99, 0x2D, 0x0F, 0xB0, 0x54, 0xBB, 0x16,
+];
+
+/// Round constants for key expansion.
+const RCON: [u8; 10] = [0x01, 0x02, 0x04, 0x08, 0x10, 0x20, 0x40, 0x80, 0x1B, 0x36];
+
+#[inline(always)]
+fn xtime(a: u8) -> u8 {
+    (a << 1) ^ if a & 0x80 != 0 { 0x1B } else { 0 }
+}
+
+/// AES-256 encryption context: the 15 expanded round keys.
+#[derive(Debug, Clone)]
+pub struct Aes256 {
+    /// Round-key words, 4 bytes each; round r uses words 4r..4r+4.
+    w: [[u8; 4]; 60],
+}
+
+impl Aes256 {
+    pub fn new(key: &[u8; 32]) -> Aes256 {
+        let mut w = [[0u8; 4]; 60];
+        for (i, item) in w.iter_mut().take(8).enumerate() {
+            item.copy_from_slice(&key[i * 4..i * 4 + 4]);
+        }
+        for i in 8..60 {
+            let mut t = w[i - 1];
+            if i % 8 == 0 {
+                // RotWord + SubWord + Rcon.
+                t = [t[1], t[2], t[3], t[0]];
+                for b in t.iter_mut() {
+                    *b = SBOX[*b as usize];
+                }
+                t[0] ^= RCON[i / 8 - 1];
+            } else if i % 8 == 4 {
+                // AES-256's extra SubWord.
+                for b in t.iter_mut() {
+                    *b = SBOX[*b as usize];
+                }
+            }
+            for j in 0..4 {
+                w[i][j] = w[i - 8][j] ^ t[j];
+            }
+        }
+        Aes256 { w }
+    }
+
+    /// Encrypt one 16-byte block in place.
+    pub fn encrypt_block(&self, block: &mut [u8; 16]) {
+        // Column-major state: s[c][r] = block[4c + r].
+        let mut s = [[0u8; 4]; 4];
+        for c in 0..4 {
+            s[c].copy_from_slice(&block[c * 4..c * 4 + 4]);
+        }
+        self.add_round_key(&mut s, 0);
+        for round in 1..14 {
+            sub_bytes(&mut s);
+            shift_rows(&mut s);
+            mix_columns(&mut s);
+            self.add_round_key(&mut s, round);
+        }
+        sub_bytes(&mut s);
+        shift_rows(&mut s);
+        self.add_round_key(&mut s, 14);
+        for c in 0..4 {
+            block[c * 4..c * 4 + 4].copy_from_slice(&s[c]);
+        }
+    }
+
+    #[inline(always)]
+    fn add_round_key(&self, s: &mut [[u8; 4]; 4], round: usize) {
+        for c in 0..4 {
+            for r in 0..4 {
+                s[c][r] ^= self.w[4 * round + c][r];
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn sub_bytes(s: &mut [[u8; 4]; 4]) {
+    for col in s.iter_mut() {
+        for b in col.iter_mut() {
+            *b = SBOX[*b as usize];
+        }
+    }
+}
+
+#[inline(always)]
+fn shift_rows(s: &mut [[u8; 4]; 4]) {
+    for r in 1..4 {
+        let row = [s[0][r], s[1][r], s[2][r], s[3][r]];
+        for c in 0..4 {
+            s[c][r] = row[(c + r) % 4];
+        }
+    }
+}
+
+#[inline(always)]
+fn mix_columns(s: &mut [[u8; 4]; 4]) {
+    for col in s.iter_mut() {
+        let a = *col;
+        // 2·a0 ^ 3·a1 ^ a2 ^ a3 and rotations (3·x = xtime(x) ^ x).
+        col[0] = xtime(a[0]) ^ (xtime(a[1]) ^ a[1]) ^ a[2] ^ a[3];
+        col[1] = a[0] ^ xtime(a[1]) ^ (xtime(a[2]) ^ a[2]) ^ a[3];
+        col[2] = a[0] ^ a[1] ^ xtime(a[2]) ^ (xtime(a[3]) ^ a[3]);
+        col[3] = (xtime(a[0]) ^ a[0]) ^ a[1] ^ a[2] ^ xtime(a[3]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fips197_c3_known_answer() {
+        // FIPS 197 Appendix C.3: AES-256, key 00..1f, pt 00112233..eeff.
+        let mut key = [0u8; 32];
+        for (i, k) in key.iter_mut().enumerate() {
+            *k = i as u8;
+        }
+        let cipher = Aes256::new(&key);
+        let mut block = [
+            0x00, 0x11, 0x22, 0x33, 0x44, 0x55, 0x66, 0x77, 0x88, 0x99, 0xAA, 0xBB, 0xCC, 0xDD,
+            0xEE, 0xFF,
+        ];
+        cipher.encrypt_block(&mut block);
+        let expect = [
+            0x8E, 0xA2, 0xB7, 0xCA, 0x51, 0x67, 0x45, 0xBF, 0xEA, 0xFC, 0x49, 0x90, 0x4B, 0x49,
+            0x60, 0x89,
+        ];
+        assert_eq!(block, expect);
+    }
+
+    #[test]
+    fn different_keys_different_ciphertext() {
+        let a = Aes256::new(&[1u8; 32]);
+        let b = Aes256::new(&[2u8; 32]);
+        let mut x = [7u8; 16];
+        let mut y = [7u8; 16];
+        a.encrypt_block(&mut x);
+        b.encrypt_block(&mut y);
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = Aes256::new(&[9u8; 32]);
+        let mut x = [3u8; 16];
+        let mut y = [3u8; 16];
+        c.encrypt_block(&mut x);
+        c.encrypt_block(&mut y);
+        assert_eq!(x, y);
+    }
+}

@@ -1,14 +1,13 @@
-//! AES-256-CTR data plane via the `aes` crate — the cipher HTCondor 9.0.1
-//! actually defaults to. Selectable with `SEC_DEFAULT_ENCRYPTION = AES`.
+//! AES-256-CTR data plane via the in-crate [`super::aes_core`] block
+//! cipher — the cipher HTCondor 9.0.1 actually defaults to. Selectable
+//! with `SEC_DEFAULT_ENCRYPTION = AES`.
 //!
 //! Shares the poly16 integrity digest with the ChaCha path, so frames are
 //! interchangeable apart from the keystream. The counter block layout is
 //! nonce (12 bytes LE words) || counter (4 bytes LE), mirroring the ChaCha
 //! (counter, nonce) addressing so the same (chunk counter0) framing works.
 
-use aes::cipher::{generic_array::GenericArray, BlockEncrypt, KeyInit};
-use aes::Aes256;
-
+use super::aes_core::Aes256;
 use super::chacha::{digest_finalize, poly16_digest};
 
 /// AES-256-CTR keystream XOR over whole 64-byte "rows" (4 AES blocks per
@@ -25,7 +24,7 @@ impl AesCtr {
             key[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
         }
         AesCtr {
-            cipher: Aes256::new(GenericArray::from_slice(&key)),
+            cipher: Aes256::new(&key),
             nonce: *nonce,
         }
     }
@@ -36,11 +35,10 @@ impl AesCtr {
         block[4..8].copy_from_slice(&self.nonce[1].to_le_bytes());
         block[8..12].copy_from_slice(&self.nonce[2].to_le_bytes());
         block[12..16].copy_from_slice(&(aes_block_counter as u32).to_le_bytes());
-        let mut ga = GenericArray::clone_from_slice(&block);
-        self.cipher.encrypt_block(&mut ga);
+        self.cipher.encrypt_block(&mut block);
         let mut out = [0u32; 4];
         for i in 0..4 {
-            out[i] = u32::from_le_bytes(ga[i * 4..i * 4 + 4].try_into().unwrap());
+            out[i] = u32::from_le_bytes(block[i * 4..i * 4 + 4].try_into().unwrap());
         }
         out
     }

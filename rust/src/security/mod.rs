@@ -10,7 +10,7 @@
 //! * [`chacha`] — the native ChaCha20 + poly16 data-plane, bit-identical
 //!   to the Pallas kernel (the AOT artifact and this module are
 //!   cross-checked at engine startup and in `tests/artifact_runtime.rs`).
-//! * [`aesctr`] — AES-256-CTR via the `aes` crate, the drop-in alternate
+//! * [`aesctr`] — AES-256-CTR via the in-crate [`aes_core`] cipher, the drop-in alternate
 //!   cipher (HTCondor's default is AES; ChaCha20 is our TPU-shaped path —
 //!   see DESIGN.md §Hardware-Adaptation).
 //!
@@ -18,9 +18,11 @@
 //! crypto-methods list: each side offers an ordered list, the first common
 //! entry wins.
 
+pub mod aes_core;
 pub mod aesctr;
 pub mod chacha;
 pub mod session;
+pub mod sha256;
 
 /// Negotiable data-plane cipher methods.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

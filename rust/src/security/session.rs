@@ -14,12 +14,8 @@
 //! Mutual authentication: each side proves knowledge of the pool key over
 //! the other's fresh nonce. The session key is never transmitted.
 
-use hmac::{Hmac, Mac};
-use sha2::Sha256;
-
+use super::sha256::{hmac_sha256, Sha256};
 use super::Method;
-
-type HmacSha256 = Hmac<Sha256>;
 
 /// Shared pool secret (HTCondor pool password).
 #[derive(Debug, Clone)]
@@ -29,20 +25,15 @@ impl PoolKey {
     /// Derive a pool key from a passphrase (sha256, as condor_store_cred
     /// effectively does).
     pub fn from_passphrase(p: &str) -> PoolKey {
-        use sha2::Digest;
         let mut h = Sha256::new();
         h.update(b"htcdm-pool-v1");
         h.update(p.as_bytes());
-        PoolKey(h.finalize().into())
+        PoolKey(h.finalize())
     }
 }
 
 fn prf(key: &PoolKey, label: &[u8], a: &[u8; 16], b: &[u8; 16]) -> [u8; 32] {
-    let mut mac = HmacSha256::new_from_slice(&key.0).expect("hmac accepts any key length");
-    mac.update(label);
-    mac.update(a);
-    mac.update(b);
-    mac.finalize().into_bytes().into()
+    hmac_sha256(&key.0, &[label, a, b])
 }
 
 /// An established, mutually-authenticated session.
@@ -55,15 +46,24 @@ pub struct Session {
     pub method: Method,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AuthError {
-    #[error("no common cipher method")]
     NoCommonMethod,
-    #[error("server failed authentication (bad pool key?)")]
     BadServerMac,
-    #[error("client failed authentication (bad pool key?)")]
     BadClientMac,
 }
+
+impl std::fmt::Display for AuthError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AuthError::NoCommonMethod => "no common cipher method",
+            AuthError::BadServerMac => "server failed authentication (bad pool key?)",
+            AuthError::BadClientMac => "client failed authentication (bad pool key?)",
+        })
+    }
+}
+
+impl std::error::Error for AuthError {}
 
 /// Message 1.
 #[derive(Debug, Clone)]

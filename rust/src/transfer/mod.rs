@@ -3,10 +3,14 @@
 //! In a default HTCondor setup every job's input and output sandbox flows
 //! through the submit node. Two pieces live here:
 //!
-//! * [`queue`] — the schedd's file-transfer queue: admission control over
-//!   concurrent sandbox transfers. HTCondor ships a disk-load throttle
-//!   tuned for spinning disks; the paper had to *disable* it to reach
-//!   90 Gbps (§III: default settings took 64 min instead of 32).
+//! * [`queue`] — the classic FIFO file-transfer queue and the
+//!   [`ThrottlePolicy`] knob. HTCondor ships a disk-load throttle tuned
+//!   for spinning disks; the paper had to *disable* it to reach 90 Gbps
+//!   (§III: default settings took 64 min instead of 32). The schedd now
+//!   delegates admission to the policy-driven
+//!   [`crate::mover`] subsystem; `TransferQueue` remains as the minimal
+//!   standalone primitive (and the reference semantics for the mover's
+//!   FIFO policies).
 //! * [`stream`] — the framed, sealed (encrypted + integrity-checked) chunk
 //!   stream used by real mode, running over any `Read`/`Write` transport
 //!   with the [`crate::runtime::engine::SealEngine`] doing the data-plane

@@ -71,6 +71,11 @@ pub struct TransferQueue<T> {
     /// Totals for the report.
     pub peak_active: u32,
     pub total_admitted: u64,
+    /// Releases that arrived with no active transfer. The old behavior
+    /// was a `debug_assert!` that silently underflow-saturated in release
+    /// builds; now every spurious release is counted so operators can see
+    /// double-release bugs instead of a wedged queue.
+    pub released_without_active: u64,
 }
 
 impl<T> TransferQueue<T> {
@@ -81,6 +86,7 @@ impl<T> TransferQueue<T> {
             active: 0,
             peak_active: 0,
             total_admitted: 0,
+            released_without_active: 0,
         }
     }
 
@@ -103,10 +109,15 @@ impl<T> TransferQueue<T> {
         self.admit()
     }
 
-    /// A transfer finished; returns newly admitted tickets.
+    /// A transfer finished; returns newly admitted tickets. A release
+    /// with nothing active is counted in `released_without_active`
+    /// (saturating — never underflows, in debug or release builds).
     pub fn release(&mut self) -> Vec<T> {
-        debug_assert!(self.active > 0, "release without active transfer");
-        self.active = self.active.saturating_sub(1);
+        if self.active == 0 {
+            self.released_without_active += 1;
+        } else {
+            self.active -= 1;
+        }
         self.admit()
     }
 
@@ -178,6 +189,21 @@ mod tests {
         assert_eq!(q.release(), Vec::<i32>::new());
         assert_eq!(q.active(), 0, "all three finished");
         assert_eq!(q.total_admitted, 3);
+    }
+
+    #[test]
+    fn spurious_release_counts_instead_of_underflowing() {
+        let mut q: TransferQueue<u32> = TransferQueue::new(ThrottlePolicy::MaxConcurrent(2));
+        assert_eq!(q.release(), Vec::<u32>::new());
+        assert_eq!(q.active(), 0, "no u32 underflow");
+        assert_eq!(q.released_without_active, 1);
+        // The queue still admits normally afterwards.
+        assert_eq!(q.enqueue(7), vec![7]);
+        assert_eq!(q.active(), 1);
+        q.release();
+        q.release();
+        assert_eq!(q.released_without_active, 2);
+        assert_eq!(q.active(), 0);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! is transparent (see the counter-continuity tests in `security::chacha`).
 
 use crate::runtime::engine::{Kind, SealEngine};
-use crate::security::chacha::{bytes_to_words, words_to_bytes};
+use crate::security::chacha::bytes_to_words;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 
@@ -129,10 +129,15 @@ pub fn recv_stream(
     stats.wire_bytes += 4 + 4 + 8 + 4;
 
     let total_words = file_bytes.div_ceil(64) * 16;
-    let mut words: Vec<u32> = Vec::with_capacity(total_words);
+    // Hot path: one reusable word scratch per stream (not a fresh
+    // collect() per frame), and plaintext bytes appended frame by frame
+    // (no whole-payload words_to_bytes copy at the end).
+    let mut bytes: Vec<u8> = Vec::with_capacity(total_words * 4);
+    let mut received_words = 0usize;
     let mut expect_counter: u32 = 0;
     let mut byte_buf: Vec<u8> = Vec::new();
-    while words.len() < total_words {
+    let mut frame_words: Vec<u32> = Vec::new();
+    while received_words < total_words {
         let counter0 = read_u32(r)?;
         if counter0 != expect_counter {
             bail!("frame counter {counter0} != expected {expect_counter} (reorder/replay?)");
@@ -143,15 +148,17 @@ pub fn recv_stream(
         }
         byte_buf.resize(n_words * 4, 0);
         r.read_exact(&mut byte_buf).context("read frame payload")?;
-        let mut buf: Vec<u32> = byte_buf
-            .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+        frame_words.clear();
+        frame_words.extend(
+            byte_buf
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap())),
+        );
         let mut digest = [0u32; 4];
         for d in digest.iter_mut() {
             *d = read_u32(r)?;
         }
-        let computed = engine.process(Kind::Unseal, key, nonce, counter0, &mut buf)?;
+        let computed = engine.process(Kind::Unseal, key, nonce, counter0, &mut frame_words)?;
         if computed != digest {
             bail!(
                 "integrity failure in frame at counter {counter0}: {computed:08x?} != {digest:08x?}"
@@ -160,9 +167,11 @@ pub fn recv_stream(
         stats.wire_bytes += 8 + n_words as u64 * 4 + 16;
         stats.frames += 1;
         expect_counter = expect_counter.wrapping_add((n_words / 16) as u32);
-        words.extend_from_slice(&buf);
+        received_words += n_words;
+        for w in &frame_words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
     }
-    let mut bytes = words_to_bytes(&words);
     bytes.truncate(file_bytes);
     stats.payload_bytes = file_bytes as u64;
     Ok((bytes, stats))

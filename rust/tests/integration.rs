@@ -85,7 +85,7 @@ fn collector_negotiator_schedd_roundtrip() {
         started.extend(schedd.job_matched(job.proc, SimTime::ZERO));
     }
     assert_eq!(started.len(), 2, "transfer queue admits only 2 of 4");
-    assert_eq!(schedd.transfer_queue.waiting(), 2);
+    assert_eq!(schedd.mover.waiting(), 2);
 }
 
 /// Handshake-derived session keys drive the sealed stream end to end.

@@ -1,0 +1,107 @@
+//! The tentpole acceptance test: a single `ShadowPool` (one policy
+//! object, one shard map, one statistics block) drives BOTH fabrics —
+//! first the virtual-time simulator, then the real TCP loopback pool —
+//! with admission statistics accumulating across the two runs.
+
+use htcdm::coordinator::engine::{Engine, EngineSpec};
+use htcdm::fabric::{run_real_pool_with, RealPoolConfig};
+use htcdm::mover::{AdmissionConfig, DataMover, ShadowPool, TransferRequest};
+use htcdm::netsim::topology::TestbedSpec;
+use htcdm::transfer::ThrottlePolicy;
+use htcdm::util::units::Bytes;
+
+fn tiny_sim_spec(n_jobs: u32) -> EngineSpec {
+    let mut tb = TestbedSpec::lan_paper();
+    tb.workers.truncate(2);
+    tb.workers[0].slots = 4;
+    tb.workers[1].slots = 4;
+    let mut spec = EngineSpec::paper(tb, ThrottlePolicy::Disabled);
+    spec.n_jobs = n_jobs;
+    spec.input_bytes = Bytes(50_000_000);
+    spec.runtime_median_s = 1.0;
+    spec.seed = 7;
+    spec
+}
+
+/// One mover object serves the simulator and then the real fabric; the
+/// same admission policy gates both, and its counters accumulate.
+#[test]
+fn same_mover_object_drives_sim_and_real_fabric() {
+    let sim_jobs = 24u32;
+    let real_jobs = 8u32;
+    let policy = AdmissionConfig::FairShare { limit: 3 };
+    let mover = ShadowPool::sim(2, policy.clone());
+    assert_eq!(mover.config(), &policy);
+
+    // Phase 1: the simulated fabric (fluid flows over the calibrated
+    // testbed) drives admission through the mover.
+    let result = Engine::with_mover(tiny_sim_spec(sim_jobs), mover)
+        .run()
+        .unwrap();
+    assert_eq!(result.schedd.completed_count(), sim_jobs as usize);
+    assert_eq!(result.mover.total_admitted, sim_jobs as u64);
+    assert!(result.mover.peak_active <= 3, "policy limited the sim run");
+
+    // Extract the very same mover object from the sim schedd.
+    let mut schedd = result.schedd;
+    let mover = schedd.take_mover();
+    assert_eq!(mover.stats().total_admitted, sim_jobs as u64);
+
+    // Phase 2: the real TCP fabric moves sealed bytes through the same
+    // mover (engines spawn on demand, admission state carries over).
+    let cfg = RealPoolConfig {
+        n_jobs: real_jobs,
+        workers: 3,
+        input_bytes: 128 << 10,
+        output_bytes: 512,
+        chunk_words: 1024,
+        use_xla_engine: false,
+        passphrase: "unified".into(),
+        shadows: 2, // informational; the supplied mover's shard count wins
+        policy: policy.clone(),
+    };
+    let (report, mover) = run_real_pool_with(&cfg, mover).unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.jobs_completed, real_jobs);
+    assert_eq!(report.total_payload_bytes, real_jobs as u64 * (128 << 10));
+
+    // The SAME policy object accounted for both fabrics' admissions.
+    let stats = mover.stats();
+    assert_eq!(
+        stats.total_admitted,
+        (sim_jobs + real_jobs) as u64,
+        "admissions accumulated across sim and real runs"
+    );
+    assert_eq!(stats.released_without_active, 0);
+    assert!(stats.peak_active <= 3, "one policy bounded both fabrics");
+    assert_eq!(stats.admitted_per_shard.len(), 2);
+    assert_eq!(
+        stats.admitted_per_shard.iter().sum::<u64>(),
+        (sim_jobs + real_jobs) as u64,
+        "every transfer from both fabrics was routed through a shard"
+    );
+}
+
+/// The DataMover trait object interface works over a ShadowPool — the
+/// abstraction both fabrics program against.
+#[test]
+fn shadow_pool_as_dyn_data_mover() {
+    let mut mover: Box<dyn DataMover> = Box::new(ShadowPool::sim(
+        3,
+        AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(2)),
+    ));
+    let a = mover.request(TransferRequest::new(1, "a", 100));
+    assert_eq!(a.len(), 1);
+    let b = mover.request(TransferRequest::new(2, "b", 100));
+    assert_eq!(b.len(), 1);
+    assert!(mover.request(TransferRequest::new(3, "c", 100)).is_empty());
+    assert_eq!(mover.active(), 2);
+    assert_eq!(mover.waiting(), 1);
+    assert_eq!(mover.shard_count(), 3);
+    assert!(mover.shard_of(1).is_some());
+    let adm = mover.complete(1);
+    assert_eq!(adm.len(), 1);
+    assert_eq!(adm[0].ticket, 3);
+    assert!(mover.describe().contains("shadow-pool"));
+    assert_eq!(mover.stats().total_admitted, 3);
+}

@@ -3,6 +3,8 @@
 //! tests/artifact_runtime.rs and examples/quickstart.rs).
 
 use htcdm::fabric::{run_real_pool, RealPoolConfig};
+use htcdm::mover::AdmissionConfig;
+use htcdm::transfer::ThrottlePolicy;
 
 fn cfg() -> RealPoolConfig {
     RealPoolConfig {
@@ -13,6 +15,8 @@ fn cfg() -> RealPoolConfig {
         chunk_words: 4096,
         use_xla_engine: false,
         passphrase: "e2e".into(),
+        shadows: 1,
+        policy: AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
     }
 }
 
@@ -51,4 +55,19 @@ fn pool_single_job_single_worker() {
     let r = run_real_pool(c).unwrap();
     assert_eq!(r.jobs_completed, 1);
     assert_eq!(r.errors, 0);
+}
+
+#[test]
+fn pool_sharded_with_policy_moves_all_bytes() {
+    let mut c = cfg();
+    c.shadows = 4;
+    c.workers = 4;
+    c.policy = AdmissionConfig::WeightedBySize { limit: 3 };
+    let r = run_real_pool(c).unwrap();
+    assert_eq!(r.errors, 0);
+    assert_eq!(r.jobs_completed, 12);
+    assert_eq!(r.total_payload_bytes, 12 * (512 << 10) as u64);
+    assert_eq!(r.mover.admitted_per_shard.len(), 4);
+    assert_eq!(r.mover.admitted_per_shard.iter().sum::<u64>(), 12);
+    assert!(r.mover.peak_active <= 3, "policy limit respected");
 }

@@ -2,11 +2,13 @@
 
 use htcdm::classad::{matches, parse_expr, Ad, Value};
 use htcdm::metrics::BinSeries;
+use htcdm::mover::{AdmissionConfig, AdmissionQueue, TransferRequest};
 use htcdm::netsim::NetSim;
 use htcdm::security::chacha;
 use htcdm::transfer::{ThrottlePolicy, TransferQueue};
 use htcdm::util::testkit::check;
 use htcdm::util::units::{Gbps, SimTime};
+use std::collections::HashMap;
 
 /// Sealed roundtrip through random chunking always restores plaintext and
 /// digests XOR-combine across the chunk boundary structure.
@@ -162,6 +164,140 @@ fn prop_binseries_total_preserved() {
         // Rebin twice preserves again.
         let coarse = s.rebin(SimTime(s.bin_width().0 * 5));
         assert!((coarse.total_bytes() - total).abs() / total < 1e-9);
+    });
+}
+
+/// Every admission policy keeps the active count at or below its limit
+/// under random enqueue/complete churn, the queue's bookkeeping matches
+/// an independently tracked active set, and no request is ever lost.
+#[test]
+fn prop_policy_active_never_exceeds_limit() {
+    check("policy-limit", 30, |g| {
+        let limit = g.rng.range_u64(1, 10) as u32;
+        let configs = [
+            AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(limit)),
+            AdmissionConfig::Throttle(ThrottlePolicy::htcondor_default()),
+            AdmissionConfig::FairShare { limit },
+            AdmissionConfig::WeightedBySize { limit },
+        ];
+        for cfg in configs {
+            let lim = cfg.limit();
+            let mut q = AdmissionQueue::new(cfg.build());
+            let mut active: Vec<u32> = Vec::new();
+            let mut ticket = 0u32;
+            let mut enqueued = 0u64;
+            for _ in 0..150 {
+                if g.rng.next_f64() < 0.6 {
+                    let owner = format!("u{}", g.rng.range_u64(0, 3));
+                    let bytes = g.rng.range_u64(1, 1_000_000);
+                    let adm = q.enqueue(TransferRequest::new(ticket, owner, bytes));
+                    ticket += 1;
+                    enqueued += 1;
+                    active.extend(adm.iter().map(|a| a.ticket));
+                } else if !active.is_empty() {
+                    let i = g.rng.range_usize(0, active.len() - 1);
+                    let adm = q.complete(active.swap_remove(i));
+                    active.extend(adm.iter().map(|a| a.ticket));
+                }
+                assert!(q.active() <= lim, "active {} > limit {lim}", q.active());
+                assert_eq!(q.active() as usize, active.len(), "bookkeeping agrees");
+            }
+            // Drain: every enqueued request is eventually admitted.
+            let mut guard = 0;
+            while q.active() > 0 || q.waiting() > 0 {
+                guard += 1;
+                assert!(guard < 10_000, "drain stuck");
+                assert!(!active.is_empty(), "waiting requests but nothing active");
+                let i = g.rng.range_usize(0, active.len() - 1);
+                let adm = q.complete(active.swap_remove(i));
+                active.extend(adm.iter().map(|a| a.ticket));
+            }
+            assert_eq!(q.total_admitted, enqueued, "no request lost");
+            assert_eq!(q.released_without_active, 0);
+            assert!(q.peak_active <= lim);
+        }
+    });
+}
+
+/// FairShare never starves an owner: with every owner continuously
+/// backlogged, admissions rotate so per-owner admitted counts never
+/// drift apart by more than one.
+#[test]
+fn prop_fair_share_never_starves() {
+    check("fair-share-no-starvation", 30, |g| {
+        let owners = g.rng.range_usize(2, 5);
+        let per_owner = g.rng.range_usize(3, 8);
+        let limit = g.rng.range_u64(1, 4) as u32;
+        let mut q = AdmissionQueue::new(AdmissionConfig::FairShare { limit }.build());
+        let mut active: Vec<u32> = Vec::new();
+
+        // Fill capacity with dummy transfers so that none of the real
+        // owners' requests admit during the arrival phase — every real
+        // admission then happens under full backlog.
+        for d in 0..limit {
+            let adm = q.enqueue(TransferRequest::new(1_000_000 + d, "zz-dummy", 1));
+            active.extend(adm.iter().map(|a| a.ticket));
+        }
+        assert_eq!(active.len(), limit as usize);
+
+        let mut arrivals: Vec<usize> = (0..owners)
+            .flat_map(|o| std::iter::repeat(o).take(per_owner))
+            .collect();
+        g.rng.shuffle(&mut arrivals);
+        let mut ticket = 0u32;
+        for o in arrivals {
+            let adm = q.enqueue(TransferRequest::new(ticket, format!("owner{o}"), 100));
+            assert!(adm.is_empty(), "capacity is full during arrivals");
+            ticket += 1;
+        }
+        assert_eq!(q.waiting(), owners * per_owner);
+
+        // Random completion churn; track per-owner admitted counts and
+        // remaining backlog.
+        let mut admitted_count: HashMap<String, usize> = HashMap::new();
+        let mut remaining: HashMap<String, usize> = (0..owners)
+            .map(|o| (format!("owner{o}"), per_owner))
+            .collect();
+        let mut all_backlogged = true;
+        let mut total = 0usize;
+        let mut guard = 0;
+        while q.active() > 0 || q.waiting() > 0 {
+            guard += 1;
+            assert!(guard < 10_000, "stuck");
+            let i = g.rng.range_usize(0, active.len() - 1);
+            for a in q.complete(active.swap_remove(i)) {
+                active.push(a.ticket);
+                if a.owner == "zz-dummy" {
+                    continue;
+                }
+                *admitted_count.entry(a.owner.clone()).or_insert(0) += 1;
+                *remaining.get_mut(&a.owner).unwrap() -= 1;
+                total += 1;
+                if remaining.values().any(|&r| r == 0) {
+                    // An owner drained its backlog; the balance invariant
+                    // only applies while everyone is backlogged.
+                    all_backlogged = false;
+                }
+                if all_backlogged {
+                    let max = admitted_count.values().max().copied().unwrap_or(0);
+                    let min = (0..owners)
+                        .map(|o| {
+                            admitted_count
+                                .get(&format!("owner{o}"))
+                                .copied()
+                                .unwrap_or(0)
+                        })
+                        .min()
+                        .unwrap();
+                    assert!(
+                        max - min <= 1,
+                        "rotation drifted: counts {admitted_count:?}"
+                    );
+                }
+            }
+        }
+        assert_eq!(total, owners * per_owner, "every owner fully served");
+        assert!(remaining.values().all(|&r| r == 0), "nobody starved");
     });
 }
 

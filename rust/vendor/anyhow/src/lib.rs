@@ -1,0 +1,260 @@
+//! Offline shim of the `anyhow` API surface htcdm uses.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides the subset we need with compatible semantics: an opaque
+//! [`Error`] convertible from any `std::error::Error`, the [`anyhow!`] /
+//! [`bail!`] macros, a [`Context`] extension trait, and `Result<T>`.
+//!
+//! Formatting matches anyhow's conventions where tests rely on them:
+//! `Display` shows the outermost message, `{:#}` shows the whole context
+//! chain joined by `": "`, and `Debug` shows the chain with a
+//! `Caused by:` trailer.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An opaque error: a root cause plus a stack of context messages.
+pub struct Error {
+    /// Root message (always present; mirrors the root cause's Display).
+    root: String,
+    /// Original typed cause, when constructed from a `std::error::Error`.
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+    /// Context messages, innermost first.
+    contexts: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a plain message (the `anyhow!` macro entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            root: message.to_string(),
+            source: None,
+            contexts: Vec::new(),
+        }
+    }
+
+    /// Construct from a typed error, preserving it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error {
+            root: error.to_string(),
+            source: Some(Box::new(error)),
+            contexts: Vec::new(),
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.contexts.push(context.to_string());
+        self
+    }
+
+    /// The root cause, if this error wraps a typed `std::error::Error`.
+    pub fn source_ref(&self) -> Option<&(dyn StdError + Send + Sync + 'static)> {
+        self.source.as_deref()
+    }
+
+    /// Outermost message (what `Display` shows).
+    fn outermost(&self) -> &str {
+        self.contexts.last().map(String::as_str).unwrap_or(&self.root)
+    }
+
+    /// Messages outermost-to-innermost, ending at the root.
+    fn chain_strings(&self) -> impl Iterator<Item = &str> {
+        self.contexts
+            .iter()
+            .rev()
+            .map(String::as_str)
+            .chain(std::iter::once(self.root.as_str()))
+    }
+
+    /// Downcast a reference to the original typed cause.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.source.as_deref().and_then(|s| s.downcast_ref::<E>())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for part in self.chain_strings() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(part)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.outermost())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.outermost())?;
+        let rest: Vec<&str> = self.chain_strings().skip(1).collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, part) in rest.iter().enumerate() {
+                write!(f, "\n    {i}: {part}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that keeps the blanket `From` below coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context()` / `.with_context()`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "root cause")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Error::new(io_err()).context("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "root cause");
+    }
+
+    #[test]
+    fn context_trait_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("while frobbing").unwrap_err();
+        assert_eq!(format!("{e:#}"), "while frobbing: root cause");
+
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero not allowed (got {x})");
+            }
+            ensure!(x < 10, "too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed (got 0)");
+        assert_eq!(f(12).unwrap_err().to_string(), "too big: 12");
+        assert_eq!(f(3).unwrap(), 3);
+        let e = anyhow!("plain {}", 42);
+        assert_eq!(e.to_string(), "plain 42");
+    }
+
+    #[test]
+    fn debug_includes_cause_chain() {
+        let e = Error::new(io_err()).context("inner ctx").context("outer ctx");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer ctx"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root cause"));
+    }
+
+    #[test]
+    fn downcast_ref_recovers_typed_cause() {
+        let e = Error::new(io_err()).context("ctx");
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+    }
+}

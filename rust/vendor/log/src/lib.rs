@@ -1,0 +1,51 @@
+//! Offline shim of the `log` facade: the five level macros, printing to
+//! stderr when `HTCDM_LOG` is set in the environment (any value). No
+//! logger registration, no level filtering — htcdm only needs best-effort
+//! diagnostics from daemon threads.
+
+use std::fmt;
+
+/// Emit one log line if logging is enabled. Called by the macros.
+pub fn __emit(level: &str, args: fmt::Arguments<'_>) {
+    if std::env::var_os("HTCDM_LOG").is_some() {
+        eprintln!("[{level:>5}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit("ERROR", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit("WARN", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit("INFO", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__emit("DEBUG", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__emit("TRACE", ::std::format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_accept_format_args_without_panicking() {
+        let err = std::io::Error::new(std::io::ErrorKind::Other, "x");
+        crate::error!("job {} failed: {err}", 3);
+        crate::warn!("w {:#}", 1);
+        crate::info!("i");
+        crate::debug!("d {}", "s");
+        crate::trace!("t");
+    }
+}
