@@ -8,17 +8,20 @@
 //!
 //! New sections:
 //! * an admission-POLICY sweep on the simulator (same workload, five
-//!   policies through the same mover), and
+//!   policies through the same mover),
 //! * a shadow-SHARD sweep on the real loopback fabric: N per-shard seal
 //!   engines vs the paper-faithful single crypto funnel. With N > 1 the
-//!   parallel sealing beats the single-funnel baseline.
+//!   parallel sealing beats the single-funnel baseline, and
+//! * a SUBMIT-NODE sweep (1/2/4/8) on the real loopback fabric: the
+//!   scale-out throughput of N file servers behind the pool router vs
+//!   the paper's single submit node.
 //!
 //! Run: cargo bench --bench queue_ablation
 
 use htcdm::coordinator::engine::EngineSpec;
 use htcdm::coordinator::{Experiment, Scenario};
 use htcdm::fabric::{run_real_pool, RealPoolConfig};
-use htcdm::mover::AdmissionConfig;
+use htcdm::mover::{AdmissionConfig, RouterPolicy};
 use htcdm::netsim::topology::TestbedSpec;
 use htcdm::transfer::ThrottlePolicy;
 
@@ -109,6 +112,41 @@ fn main() -> anyhow::Result<()> {
     println!(
         "  multi-shard best vs single-funnel: {:.2}x",
         best_gbps / baseline_gbps
+    );
+
+    println!("\n=== submit-node sweep (real loopback fabric, scale-out) ===");
+    println!("  one file server per submit node behind the round-robin pool");
+    println!("  router vs the paper's single submit node:");
+    println!("  nodes   goodput     wall      per-node jobs");
+    let mut single_node_gbps = 0.0;
+    let mut best_scaleout: f64 = 0.0;
+    for nodes in [1u32, 2, 4, 8] {
+        let cfg = RealPoolConfig {
+            n_jobs: 32,
+            workers: 8,
+            input_bytes: 8 << 20,
+            output_bytes: 4096,
+            use_xla_engine: false,
+            passphrase: "scale-out".into(),
+            n_submit_nodes: nodes,
+            router: RouterPolicy::RoundRobin,
+            ..Default::default()
+        };
+        let r = run_real_pool(cfg)?;
+        anyhow::ensure!(r.errors == 0, "transfer errors in submit-node sweep");
+        if nodes == 1 {
+            single_node_gbps = r.gbps;
+        } else {
+            best_scaleout = best_scaleout.max(r.gbps);
+        }
+        println!(
+            "  {:>4}   {:>7.3} Gbps  {:>6.2} s   {:?}",
+            nodes, r.gbps, r.wall_secs, r.router.routed_per_node
+        );
+    }
+    println!(
+        "  scale-out best vs single submit node: {:.2}x",
+        best_scaleout / single_node_gbps
     );
     Ok(())
 }

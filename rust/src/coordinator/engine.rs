@@ -10,7 +10,10 @@
 
 use crate::daemons::{Collector, Negotiator, Schedd, SlotId, Startd};
 use crate::jobs::JobSpec;
-use crate::mover::{AdmissionConfig, MoverStats, ShadowPool};
+use crate::metrics::BinSeries;
+use crate::mover::{
+    AdmissionConfig, MoverStats, PoolRouter, RouterPolicy, RouterStats, ShadowPool,
+};
 use crate::netsim::topology::{Testbed, TestbedSpec};
 use crate::netsim::{calib, FlowId};
 use crate::sim::EventQueue;
@@ -33,6 +36,16 @@ pub struct EngineSpec {
     /// Shadow-pool shard count (1 = the paper's single-funnel submit
     /// node; >1 models multi-shard data movers).
     pub shadows: u32,
+    /// Submit-node count: each node runs its own `ShadowPool` (with
+    /// `shadows` shards and its own copy of `policy`) behind a
+    /// [`PoolRouter`], and gets its own monitored NIC in the topology.
+    /// [`Engine::new`] takes the max of this and the testbed's own
+    /// `n_submit_nodes`, then syncs both; a caller-supplied router
+    /// ([`Engine::with_router`]) overrides both.
+    pub n_submit_nodes: u32,
+    /// Pool-level routing strategy splitting the burst across submit
+    /// nodes (irrelevant when `n_submit_nodes == 1`).
+    pub router: RouterPolicy,
     /// Distinct job owners, round-robined over procs (1 = the paper's
     /// single benchmark user; >1 makes fair-share scheduling visible).
     pub n_owners: u32,
@@ -53,6 +66,8 @@ impl EngineSpec {
             runtime_median_s: 5.0,
             policy: throttle.into(),
             shadows: 1,
+            n_submit_nodes: 1,
+            router: RouterPolicy::LeastLoaded,
             n_owners: 1,
             seed: 20210901, // eScience 2021
             negotiation_interval_s: 60.0,
@@ -70,6 +85,8 @@ impl EngineSpec {
     /// TRANSFER_QUEUE_POLICY = FAIR_SHARE
     /// TRANSFER_QUEUE_MAX_CONCURRENT = 200
     /// SHADOW_POOL_SIZE = 4
+    /// N_SUBMIT_NODES = 4
+    /// ROUTER_POLICY = ROUND_ROBIN
     /// ```
     pub fn apply_config(
         &mut self,
@@ -86,6 +103,25 @@ impl EngineSpec {
         }
         if cfg.raw("SHADOW_POOL_SIZE").is_some() {
             self.shadows = AdmissionConfig::shadows_from_config(cfg)?;
+        }
+        if cfg.raw("N_SUBMIT_NODES").is_some() {
+            self.n_submit_nodes = RouterPolicy::nodes_from_config(cfg)?;
+        }
+        if cfg.raw("ROUTER_POLICY").is_some() {
+            self.router = RouterPolicy::from_config(cfg)?;
+        }
+        // Heterogeneous submit fleets: SUBMIT_NODE_GBPS = 100, 100, 25
+        // sets per-node NIC capacity (topology AND router weights).
+        if let Some(raw) = cfg.raw("SUBMIT_NODE_GBPS") {
+            let caps: Result<Vec<f64>, _> =
+                raw.split(',').map(|s| s.trim().parse::<f64>()).collect();
+            self.testbed.submit_node_gbps = caps.map_err(|_| {
+                crate::config::ConfigError::Type(
+                    "SUBMIT_NODE_GBPS".into(),
+                    "comma-separated Gbps list",
+                    raw.to_string(),
+                )
+            })?;
         }
         Ok(())
     }
@@ -119,14 +155,21 @@ struct FlowCtx {
 #[derive(Debug)]
 pub struct EngineResult {
     pub schedd: Schedd,
-    pub monitor: crate::metrics::BinSeries,
+    /// Aggregate submit-NIC throughput: the element-wise sum of
+    /// `monitors` (with one submit node, identical to `monitors[0]`).
+    pub monitor: BinSeries,
+    /// Per-submit-node NIC throughput series, index = node.
+    pub monitors: Vec<BinSeries>,
     pub finished_at: SimTime,
     pub negotiation_cycles: u64,
     pub peak_concurrent_transfers: u32,
     pub total_input_bytes: f64,
     pub errors: u64,
-    /// Data-mover accounting (per-shard routing, admission totals).
+    /// Aggregate data-mover accounting (per-shard routing node-major,
+    /// admission totals, failed-node count).
     pub mover: MoverStats,
+    /// Per-submit-node router accounting.
+    pub router: RouterStats,
 }
 
 pub struct Engine {
@@ -140,23 +183,52 @@ pub struct Engine {
     rng: Prng,
     /// proc -> assigned slot (claims).
     assignment: HashMap<u32, SlotId>,
+    /// proc -> submit node serving its sandbox (recorded at admission,
+    /// dropped once the output sandbox goes on the wire).
+    node_by_proc: HashMap<u32, usize>,
     flows: HashMap<FlowId, FlowCtx>,
     bg_nominal_gbps: f64,
 }
 
 impl Engine {
     pub fn new(spec: EngineSpec) -> Engine {
-        let mover = ShadowPool::sim(spec.shadows.max(1), spec.policy.clone());
-        Engine::with_mover(spec, mover)
+        // The spec and its testbed both carry a submit-node count (the
+        // testbed's is honored by Testbed::build standalone); whichever
+        // was raised wins, so neither knob is silently a no-op.
+        // Router NIC budgets mirror the topology's per-node capacities,
+        // so weighted-by-capacity routing tracks heterogeneous fleets.
+        let n = spec
+            .n_submit_nodes
+            .max(spec.testbed.n_submit_nodes)
+            .max(1) as usize;
+        let nodes: Vec<ShadowPool> = (0..n)
+            .map(|_| ShadowPool::sim(spec.shadows.max(1), spec.policy.clone()))
+            .collect();
+        let capacities: Vec<f64> = (0..n)
+            .map(|s| spec.testbed.submit_node_nic_gbps(s))
+            .collect();
+        let router = PoolRouter::new(nodes, capacities, spec.router);
+        Engine::with_router(spec, router)
     }
 
-    /// Build an engine around an existing data mover (e.g. to drive the
-    /// same policy object through the simulator and then the real
-    /// fabric — see `tests/mover_unified.rs`). The mover's shard count
-    /// and policy override the spec's knobs.
+    /// Build an engine around an existing single-node data mover (e.g.
+    /// to drive the same policy object through the simulator and then
+    /// the real fabric — see `tests/mover_unified.rs`). The mover's
+    /// shard count and policy override the spec's knobs.
     pub fn with_mover(spec: EngineSpec, mover: ShadowPool) -> Engine {
+        Engine::with_router(spec, PoolRouter::single(mover))
+    }
+
+    /// Build an engine around an existing pool router (the multi-node
+    /// analogue of [`Engine::with_mover`] — see
+    /// `tests/router_unified.rs`). The router's node count overrides the
+    /// spec's `n_submit_nodes`, and the topology gets one monitored
+    /// submit NIC per node.
+    pub fn with_router(mut spec: EngineSpec, router: PoolRouter) -> Engine {
+        spec.n_submit_nodes = router.node_count() as u32;
+        spec.testbed.n_submit_nodes = router.node_count() as u32;
         let tb = Testbed::build(spec.testbed.clone());
-        let schedd = Schedd::with_mover("schedd@submit", mover);
+        let schedd = Schedd::with_router("schedd@submit", router);
         let startds: Vec<Startd> = spec
             .testbed
             .workers
@@ -178,6 +250,7 @@ impl Engine {
             negotiator: Negotiator::new(),
             events: EventQueue::new(),
             assignment: HashMap::new(),
+            node_by_proc: HashMap::new(),
             flows: HashMap::new(),
             bg_nominal_gbps,
         }
@@ -266,21 +339,32 @@ impl Engine {
         }
 
         let finished_at = self.tb.net.now();
-        let monitor = self
+        let monitors: Vec<BinSeries> = self
             .tb
-            .net
-            .take_monitor(self.tb.submit_tx)
-            .expect("submit NIC monitor");
+            .submit_txs
+            .clone()
+            .into_iter()
+            .map(|tx| {
+                self.tb
+                    .net
+                    .take_monitor(tx)
+                    .expect("every submit NIC is monitored")
+            })
+            .collect();
+        let monitor = BinSeries::sum(&monitors);
         let mover = self.schedd.mover.stats();
+        let router = self.schedd.mover.router_stats();
         Ok(EngineResult {
             total_input_bytes: self.spec.n_jobs as f64 * self.spec.input_bytes.0 as f64,
             peak_concurrent_transfers: mover.peak_active,
             schedd: self.schedd,
             monitor,
+            monitors,
             finished_at,
             negotiation_cycles: self.negotiator.cycles,
             errors: 0,
             mover,
+            router,
         })
     }
 
@@ -305,7 +389,7 @@ impl Engine {
             }
         }
         let result = self.negotiator.negotiate(&idle, &slots);
-        let mut to_start: Vec<u32> = Vec::new();
+        let mut to_start: Vec<crate::mover::Routed> = Vec::new();
         for (job_id, slot_id) in result.matches {
             let proc_ = job_id.proc;
             self.schedd.take_idle(proc_);
@@ -317,9 +401,7 @@ impl Engine {
             self.assignment.insert(proc_, slot_id);
             to_start.extend(self.schedd.job_matched(proc_, t));
         }
-        for proc_ in to_start {
-            self.schedule_input_start(proc_, t);
-        }
+        self.start_routed(to_start, t);
         // Re-negotiate while unmatched jobs and unclaimed slots remain.
         if self.schedd.idle_count() > 0
             && self
@@ -331,6 +413,16 @@ impl Engine {
                 t + SimTime::from_secs_f64(self.spec.negotiation_interval_s),
                 Ev::Negotiate,
             );
+        }
+    }
+
+    /// Record each admitted transfer's submit node and schedule its
+    /// connection setup — the single bookkeeping point for every
+    /// admission the router returns.
+    fn start_routed(&mut self, routed: Vec<crate::mover::Routed>, t: SimTime) {
+        for r in routed {
+            self.node_by_proc.insert(r.ticket, r.node);
+            self.schedule_input_start(r.ticket, t);
         }
     }
 
@@ -346,8 +438,9 @@ impl Engine {
 
     fn start_input_flow(&mut self, proc_: u32, t: SimTime) {
         let slot = self.assignment[&proc_];
+        let node = self.node_by_proc[&proc_];
         self.schedd.input_started(proc_, t);
-        let path = self.tb.path_to_worker(slot.worker as usize);
+        let path = self.tb.path_to_worker(node, slot.worker as usize);
         let cap = self.tb.path_profile().stream_cap_bps();
         let bytes = self.schedd.job(proc_).spec.input_bytes.0 as f64;
         let fid = self.tb.net.start_flow(path, bytes, cap);
@@ -364,9 +457,7 @@ impl Engine {
         match ctx.kind {
             FlowKind::Input => {
                 let admitted = self.schedd.input_done(ctx.proc_, t);
-                for p in admitted {
-                    self.schedule_input_start(p, t);
-                }
+                self.start_routed(admitted, t);
                 // Execute the payload: the paper's validation script,
                 // median ≈ 5 s, mild spread.
                 let runtime = self
@@ -390,9 +481,7 @@ impl Engine {
                     sd.activate(slot.slot, job_id);
                     self.assignment.insert(next, slot);
                     let admitted = self.schedd.job_matched(next, t);
-                    for p in admitted {
-                        self.schedule_input_start(p, t);
-                    }
+                    self.start_routed(admitted, t);
                 } else {
                     sd.release(slot.slot);
                 }
@@ -403,9 +492,13 @@ impl Engine {
     fn on_run_done(&mut self, proc_: u32, t: SimTime) {
         self.schedd.run_done(proc_, t);
         let slot = self.assignment[&proc_];
-        // Output sandbox flows worker -> submit (not queued: HTCondor's
-        // download throttle exists but outputs here are 4 KB).
-        let path = self.tb.path_from_worker(slot.worker as usize);
+        // Output sandbox flows worker -> its submit node (not queued:
+        // HTCondor's download throttle exists but outputs here are 4 KB).
+        let node = self
+            .node_by_proc
+            .remove(&proc_)
+            .expect("routed proc has a submit node");
+        let path = self.tb.path_from_worker(node, slot.worker as usize);
         let cap = self.tb.path_profile().stream_cap_bps();
         let bytes = self.schedd.job(proc_).spec.output_bytes.0.max(1) as f64;
         let fid = self.tb.net.start_flow(path, bytes, cap);
@@ -449,6 +542,8 @@ mod tests {
             runtime_median_s: 2.0,
             policy: ThrottlePolicy::Disabled.into(),
             shadows: 1,
+            n_submit_nodes: 1,
+            router: RouterPolicy::LeastLoaded,
             n_owners: 1,
             seed: 1,
             negotiation_interval_s: 60.0,
@@ -542,6 +637,48 @@ mod tests {
     }
 
     #[test]
+    fn multi_submit_nodes_split_the_burst() {
+        let mut spec = tiny_spec();
+        spec.n_submit_nodes = 4;
+        spec.router = RouterPolicy::RoundRobin;
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 40);
+        // One monitored NIC per submit node, summing to the aggregate.
+        assert_eq!(r.monitors.len(), 4);
+        let per_node_total: f64 = r.monitors.iter().map(|m| m.total_bytes()).sum();
+        assert!((per_node_total - r.monitor.total_bytes()).abs() < 1e-6);
+        // Round-robin put exactly a quarter of the burst on each node.
+        assert_eq!(r.router.routed_per_node, vec![10, 10, 10, 10]);
+        let routed: u64 = r.router.bytes_per_node.iter().sum();
+        assert_eq!(routed as f64, r.total_input_bytes);
+        // Every node's NIC actually carried its share of input bytes.
+        for (i, m) in r.monitors.iter().enumerate() {
+            assert!(
+                m.total_bytes() >= r.router.bytes_per_node[i] as f64,
+                "node {i}: NIC {} < routed {}",
+                m.total_bytes(),
+                r.router.bytes_per_node[i]
+            );
+        }
+        assert_eq!(r.mover.shard_failed, 0);
+    }
+
+    #[test]
+    fn weighted_by_capacity_tracks_heterogeneous_nics() {
+        let mut spec = tiny_spec();
+        spec.n_submit_nodes = 2;
+        spec.testbed.submit_node_gbps = vec![100.0, 25.0];
+        spec.router = RouterPolicy::WeightedByCapacity;
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 40);
+        // Deficit round-robin at 100:25 puts exactly 4/5 of the burst on
+        // the fat node.
+        assert_eq!(r.router.routed_per_node, vec![32, 8]);
+        // And the fat node's NIC really carried the larger share.
+        assert!(r.monitors[0].total_bytes() > r.monitors[1].total_bytes());
+    }
+
+    #[test]
     fn fair_share_policy_completes_and_respects_limit() {
         let mut spec = tiny_spec();
         spec.policy = crate::mover::AdmissionConfig::FairShare { limit: 3 };
@@ -567,7 +704,10 @@ mod tests {
              N_OWNERS = 3\n\
              TRANSFER_QUEUE_POLICY = WEIGHTED_BY_SIZE\n\
              TRANSFER_QUEUE_MAX_CONCURRENT = 5\n\
-             SHADOW_POOL_SIZE = 2\n",
+             SHADOW_POOL_SIZE = 2\n\
+             N_SUBMIT_NODES = 2\n\
+             ROUTER_POLICY = ROUND_ROBIN\n\
+             SUBMIT_NODE_GBPS = 100, 25\n",
         )
         .unwrap();
         let mut spec = tiny_spec();
@@ -580,17 +720,27 @@ mod tests {
             crate::mover::AdmissionConfig::WeightedBySize { limit: 5 }
         );
         assert_eq!(spec.shadows, 2);
+        assert_eq!(spec.n_submit_nodes, 2);
+        assert_eq!(spec.router, RouterPolicy::RoundRobin);
+        assert_eq!(spec.testbed.submit_node_gbps, vec![100.0, 25.0]);
         let r = Engine::new(spec).run().unwrap();
         assert_eq!(r.schedd.completed_count(), 12);
-        assert!(r.peak_concurrent_transfers <= 5);
-        assert_eq!(r.mover.bytes_per_shard.len(), 2);
+        assert!(
+            r.peak_concurrent_transfers <= 10,
+            "per-node limit 5 x 2 nodes"
+        );
+        assert_eq!(r.mover.bytes_per_shard.len(), 4, "2 nodes x 2 shards");
+        assert_eq!(r.monitors.len(), 2);
 
         // Knobs absent from the config leave the spec untouched.
         let empty = crate::config::Config::parse("").unwrap();
         let mut spec2 = tiny_spec();
         spec2.shadows = 7;
+        spec2.n_submit_nodes = 3;
         spec2.apply_config(&empty).unwrap();
         assert_eq!(spec2.shadows, 7);
+        assert_eq!(spec2.n_submit_nodes, 3);
+        assert_eq!(spec2.router, RouterPolicy::LeastLoaded);
         assert_eq!(spec2.n_jobs, 40);
     }
 

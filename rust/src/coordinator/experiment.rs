@@ -2,10 +2,21 @@
 //! and the [`Report`] type whose fields are exactly the numbers the paper
 //! quotes (sustained Gbps, makespan, median runtime, median input transfer
 //! time, error count).
+//!
+//! ## Per-submit-node NIC aggregation format
+//!
+//! Multi-submit-node runs monitor every submit NIC separately:
+//! [`Report::per_node_series`] holds one [`BinSeries`] per node (index =
+//! node, all with the same bin width), and the aggregate
+//! [`Report::series`] is their element-wise sum — bin `b` of the
+//! aggregate equals `Σ_node per_node_series[node][b]`
+//! ([`BinSeries::sum`]). The 5-minute [`Report::series_5min`] figure is
+//! rebinned from the aggregate, exactly like the paper's monitoring
+//! plots; per-node figures can be rebinned the same way.
 
 use super::engine::{Engine, EngineResult, EngineSpec};
 use crate::metrics::BinSeries;
-use crate::mover::{AdmissionConfig, MoverStats};
+use crate::mover::{AdmissionConfig, MoverStats, RouterPolicy, RouterStats};
 use crate::netsim::topology::TestbedSpec;
 use crate::transfer::ThrottlePolicy;
 use crate::util::units::{Gbps, SimTime};
@@ -31,6 +42,9 @@ pub enum Scenario {
     LanFairShare,
     /// LanPaper with a 4-shard shadow pool (multi-shard data mover).
     LanSharded4,
+    /// The scale-out scenario the paper motivates: the same burst split
+    /// across 4 submit nodes (4 × 100 Gbps NICs) by a pool router.
+    LanMultiSubmit4,
 }
 
 impl Scenario {
@@ -42,6 +56,7 @@ impl Scenario {
             Scenario::LanVpn => "vpn-overlay",
             Scenario::LanFairShare => "fair-share",
             Scenario::LanSharded4 => "sharded-4",
+            Scenario::LanMultiSubmit4 => "multi-submit-4",
         }
     }
 
@@ -75,6 +90,13 @@ impl Scenario {
                 spec.shadows = 4;
                 spec
             }
+            Scenario::LanMultiSubmit4 => {
+                let mut spec =
+                    EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled);
+                spec.n_submit_nodes = 4;
+                spec.router = RouterPolicy::RoundRobin;
+                spec
+            }
         }
     }
 
@@ -86,7 +108,7 @@ impl Scenario {
             Scenario::WanPaper => Some(60.0),
             Scenario::LanDefaultQueue => None,
             Scenario::LanVpn => Some(25.0),
-            Scenario::LanFairShare | Scenario::LanSharded4 => None,
+            Scenario::LanFairShare | Scenario::LanSharded4 | Scenario::LanMultiSubmit4 => None,
         }
     }
 
@@ -96,7 +118,7 @@ impl Scenario {
             Scenario::WanPaper => Some(49.0),
             Scenario::LanDefaultQueue => Some(64.0),
             Scenario::LanVpn => None,
-            Scenario::LanFairShare | Scenario::LanSharded4 => None,
+            Scenario::LanFairShare | Scenario::LanSharded4 | Scenario::LanMultiSubmit4 => None,
         }
     }
 }
@@ -143,6 +165,14 @@ impl Experiment {
         self
     }
 
+    /// Override the submit-node count and pool-router strategy
+    /// (scenario knob).
+    pub fn with_submit_nodes(mut self, nodes: u32, router: RouterPolicy) -> Experiment {
+        self.spec.n_submit_nodes = nodes.max(1);
+        self.spec.router = router;
+        self
+    }
+
     pub fn run(self) -> Result<Report> {
         let result = Engine::new(self.spec.clone()).run()?;
         Ok(Report::from_engine(self.label, &self.spec, result))
@@ -166,16 +196,30 @@ pub struct Report {
     pub peak_concurrent_transfers: u32,
     pub negotiation_cycles: u64,
     pub errors: u64,
-    /// Admission-policy label driving the data mover.
+    /// Admission-policy label driving each node's data mover.
     pub policy: String,
-    /// Shadow-pool shard count.
+    /// Shadow shards across the whole pool (nodes × per-node shards).
     pub shards: usize,
-    /// Data-mover accounting (per-shard routing, spurious completes).
+    /// Submit-node count.
+    pub n_submit_nodes: usize,
+    /// Pool-router strategy label (meaningful when `n_submit_nodes > 1`).
+    pub router_policy: String,
+    /// Aggregate data-mover accounting (per-shard vectors node-major,
+    /// spurious completes, failed-node count).
     pub mover: MoverStats,
-    /// Submit-NIC throughput binned like the paper's monitoring (5 min).
+    /// Per-submit-node router accounting (routing decisions and bytes).
+    pub router: RouterStats,
+    /// Aggregate submit-NIC throughput binned like the paper's
+    /// monitoring (5 min).
     pub series_5min: BinSeries,
-    /// Finer series for plots/tests.
+    /// Finer aggregate series for plots/tests.
     pub series: BinSeries,
+    /// Per-submit-node NIC series (index = node, same bin width as
+    /// `series`). Aggregation contract: `series` is the element-wise sum
+    /// of these — bin `b` of `series` equals the sum over nodes of bin
+    /// `b` of `per_node_series[node]` — so per-node and pool-level plots
+    /// stay consistent by construction (`metrics::BinSeries::sum`).
+    pub per_node_series: Vec<BinSeries>,
 }
 
 impl Report {
@@ -216,9 +260,13 @@ impl Report {
             errors: r.errors,
             policy: spec.policy.label(),
             shards: r.mover.bytes_per_shard.len(),
+            n_submit_nodes: r.monitors.len(),
+            router_policy: spec.router.label().to_string(),
             mover: r.mover,
+            router: r.router,
             series_5min,
             series: r.monitor,
+            per_node_series: r.monitors,
         }
     }
 
@@ -282,6 +330,11 @@ mod tests {
 
         let sh = Scenario::LanSharded4.spec();
         assert_eq!(sh.shadows, 4);
+
+        let ms = Scenario::LanMultiSubmit4.spec();
+        assert_eq!(ms.n_submit_nodes, 4);
+        assert_eq!(ms.router, RouterPolicy::RoundRobin);
+        assert_eq!(ms.shadows, 1, "per-node pools stay single-shard");
     }
 
     #[test]
@@ -300,6 +353,10 @@ mod tests {
         assert_eq!(e.spec.shadows, 8);
         let clamped = Experiment::scenario(Scenario::LanPaper).with_shadows(0);
         assert_eq!(clamped.spec.shadows, 1);
+        let routed = Experiment::scenario(Scenario::LanPaper)
+            .with_submit_nodes(4, RouterPolicy::OwnerAffinity);
+        assert_eq!(routed.spec.n_submit_nodes, 4);
+        assert_eq!(routed.spec.router, RouterPolicy::OwnerAffinity);
     }
 
     #[test]
@@ -315,6 +372,28 @@ mod tests {
         assert_eq!(report.mover.released_without_active, 0);
         let routed: u64 = report.mover.bytes_per_shard.iter().sum();
         assert_eq!(routed, 40 * 50_000_000);
+    }
+
+    #[test]
+    fn multi_submit_report_series_are_consistent() {
+        let mut spec = Scenario::LanMultiSubmit4.spec();
+        spec.n_jobs = 40;
+        spec.input_bytes = Bytes(50_000_000);
+        spec.testbed.monitor_bin = SimTime::from_secs(5);
+        let report = Experiment::custom("multi-submit-smoke", spec).run().unwrap();
+        assert_eq!(report.n_submit_nodes, 4);
+        assert_eq!(report.router_policy, "round-robin");
+        assert_eq!(report.per_node_series.len(), 4);
+        // The aggregation contract: per-node series sum to the aggregate,
+        // bin by bin.
+        let summed = BinSeries::sum(&report.per_node_series);
+        let agg = report.series.bins();
+        let per = summed.bins();
+        assert_eq!(agg.len(), per.len());
+        for ((_, a), (_, b)) in agg.iter().zip(per.iter()) {
+            assert!((a - b).abs() < 1e-6, "bin mismatch: {a} vs {b}");
+        }
+        assert_eq!(report.router.routed_per_node.iter().sum::<u64>(), 40);
     }
 
     #[test]

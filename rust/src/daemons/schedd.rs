@@ -1,13 +1,15 @@
 //! The schedd: the submit-side daemon owning the job queue, the user log,
 //! and (in a default HTCondor setup) *all* sandbox data movement — which
 //! is exactly why the paper benchmarks it as the potential bottleneck.
-//! Data movement itself is delegated to a [`crate::mover::ShadowPool`]:
-//! the schedd tracks job lifecycle, the mover owns admission and shard
-//! assignment.
+//! Data movement itself is delegated to a [`crate::mover::PoolRouter`]
+//! over per-submit-node [`crate::mover::ShadowPool`]s: the schedd tracks
+//! job lifecycle, the router owns node routing, admission and shard
+//! assignment (a single-node router is exactly the paper's one submit
+//! node).
 
 use crate::jobs::log::{EventKind, UserLog};
 use crate::jobs::{Job, JobId, JobSpec, JobState};
-use crate::mover::{ShadowPool, TransferRequest};
+use crate::mover::{PoolRouter, Routed, ShadowPool, TransferRequest};
 use crate::transfer::ThrottlePolicy;
 use crate::util::units::SimTime;
 use std::collections::VecDeque;
@@ -19,37 +21,50 @@ pub struct Schedd {
     /// Procs waiting for a match, in submission order.
     idle: VecDeque<u32>,
     pub log: UserLog,
-    /// Upload (input sandbox) data movement — admission mechanics are
-    /// fully delegated to the sharded, policy-driven mover.
-    pub mover: ShadowPool,
+    /// Upload (input sandbox) data movement — node routing and admission
+    /// mechanics are fully delegated to the pool router.
+    pub mover: PoolRouter,
 }
 
 impl Schedd {
-    /// A schedd with a single-shard mover running the given classic
-    /// throttle (the paper's configuration space).
+    /// A schedd with a single-node, single-shard mover running the given
+    /// classic throttle (the paper's configuration space).
     pub fn new(name: &str, policy: ThrottlePolicy) -> Schedd {
         Schedd::with_mover(name, ShadowPool::sim(1, policy.into()))
     }
 
-    /// A schedd delegating sandbox movement to the given mover.
+    /// A schedd delegating sandbox movement to one submit node's pool.
     pub fn with_mover(name: &str, mover: ShadowPool) -> Schedd {
+        Schedd::with_router(name, PoolRouter::single(mover))
+    }
+
+    /// A schedd delegating sandbox movement to a multi-node pool router.
+    pub fn with_router(name: &str, router: PoolRouter) -> Schedd {
         Schedd {
             name: name.to_string(),
             jobs: Vec::new(),
             idle: VecDeque::new(),
             log: UserLog::new(),
-            mover,
+            mover: router,
         }
     }
 
-    /// Extract the mover (e.g. to hand the same policy object to the real
-    /// fabric after a simulated run); leaves a fresh single-shard
-    /// unthrottled mover behind.
-    pub fn take_mover(&mut self) -> ShadowPool {
+    /// Extract the router (e.g. to hand the same policy object to the
+    /// real fabric after a simulated run); leaves a fresh single-node
+    /// unthrottled router behind.
+    pub fn take_router(&mut self) -> PoolRouter {
         std::mem::replace(
             &mut self.mover,
-            ShadowPool::sim(1, ThrottlePolicy::Disabled.into()),
+            PoolRouter::single(ShadowPool::sim(1, ThrottlePolicy::Disabled.into())),
         )
+    }
+
+    /// [`Schedd::take_router`] for the single-node case, recovering the
+    /// inner [`ShadowPool`]. Panics on a multi-node router.
+    pub fn take_mover(&mut self) -> ShadowPool {
+        self.take_router()
+            .into_single()
+            .unwrap_or_else(|r| panic!("take_mover on a {}-node router", r.node_count()))
     }
 
     /// One submit transaction (the paper queued all 10k jobs in one).
@@ -101,8 +116,9 @@ impl Schedd {
     }
 
     /// Job matched to a slot → its input transfer enters the mover.
-    /// Returns procs whose transfers may START now.
-    pub fn job_matched(&mut self, proc_: u32, t: SimTime) -> Vec<u32> {
+    /// Returns routed transfers that may START now (ticket = proc, plus
+    /// the submit node and shadow shard serving it).
+    pub fn job_matched(&mut self, proc_: u32, t: SimTime) -> Vec<Routed> {
         let job = &mut self.jobs[proc_ as usize];
         debug_assert_eq!(job.state, JobState::Idle);
         job.state = JobState::TransferQueued;
@@ -111,11 +127,7 @@ impl Schedd {
         let id = job.spec.id;
         let req = TransferRequest::new(proc_, job.spec.owner.clone(), job.spec.input_bytes.0);
         self.log.record(t, id, EventKind::TransferInputQueued);
-        self.mover
-            .request(req)
-            .into_iter()
-            .map(|a| a.ticket)
-            .collect()
+        self.mover.request(req)
     }
 
     /// Admitted transfer goes on the wire.
@@ -129,8 +141,8 @@ impl Schedd {
     }
 
     /// Transfer finished → job executes; frees a mover slot.
-    /// Returns procs whose transfers may START now.
-    pub fn input_done(&mut self, proc_: u32, t: SimTime) -> Vec<u32> {
+    /// Returns routed transfers that may START now.
+    pub fn input_done(&mut self, proc_: u32, t: SimTime) -> Vec<Routed> {
         let job = &mut self.jobs[proc_ as usize];
         debug_assert_eq!(job.state, JobState::TransferringInput);
         job.state = JobState::Running;
@@ -138,11 +150,7 @@ impl Schedd {
         let id = job.spec.id;
         self.log.record(t, id, EventKind::TransferInputDone);
         self.log.record(t, id, EventKind::Executing);
-        self.mover
-            .complete(proc_)
-            .into_iter()
-            .map(|a| a.ticket)
-            .collect()
+        self.mover.complete(proc_)
     }
 
     pub fn run_done(&mut self, proc_: u32, t: SimTime) {
@@ -188,6 +196,10 @@ mod tests {
     use super::*;
     use crate::util::units::Bytes;
 
+    fn tickets(v: &[Routed]) -> Vec<u32> {
+        v.iter().map(|r| r.ticket).collect()
+    }
+
     fn specs(n: u32) -> Vec<JobSpec> {
         (0..n)
             .map(|p| JobSpec {
@@ -216,7 +228,8 @@ mod tests {
         s.submit_transaction(specs(1), SimTime::ZERO);
         assert!(s.take_idle(0));
         let started = s.job_matched(0, SimTime::from_secs(1));
-        assert_eq!(started, vec![0], "unthrottled: starts immediately");
+        assert_eq!(tickets(&started), vec![0], "unthrottled: starts immediately");
+        assert_eq!(started[0].node, 0, "single-node router");
         s.input_started(0, SimTime::from_secs(1));
         s.input_done(0, SimTime::from_secs(31));
         s.run_done(0, SimTime::from_secs(36));
@@ -235,12 +248,12 @@ mod tests {
         for p in 0..3 {
             s.take_idle(p);
         }
-        assert_eq!(s.job_matched(0, SimTime::ZERO), vec![0]);
-        assert_eq!(s.job_matched(1, SimTime::ZERO), vec![], "queued");
-        assert_eq!(s.job_matched(2, SimTime::ZERO), vec![]);
+        assert_eq!(tickets(&s.job_matched(0, SimTime::ZERO)), vec![0]);
+        assert!(s.job_matched(1, SimTime::ZERO).is_empty(), "queued");
+        assert!(s.job_matched(2, SimTime::ZERO).is_empty());
         s.input_started(0, SimTime::ZERO);
         let next = s.input_done(0, SimTime::from_secs(10));
-        assert_eq!(next, vec![1], "release admits next");
+        assert_eq!(tickets(&next), vec![1], "release admits next");
     }
 
     #[test]
@@ -274,12 +287,16 @@ mod tests {
         for p in 0..3 {
             s.take_idle(p);
         }
-        assert_eq!(s.job_matched(0, SimTime::ZERO), vec![0], "capacity free");
-        assert_eq!(s.job_matched(1, SimTime::ZERO), vec![]);
-        assert_eq!(s.job_matched(2, SimTime::ZERO), vec![]);
+        assert_eq!(
+            tickets(&s.job_matched(0, SimTime::ZERO)),
+            vec![0],
+            "capacity free"
+        );
+        assert!(s.job_matched(1, SimTime::ZERO).is_empty());
+        assert!(s.job_matched(2, SimTime::ZERO).is_empty());
         s.input_started(0, SimTime::ZERO);
         let next = s.input_done(0, SimTime::from_secs(5));
-        assert_eq!(next, vec![2], "weighted-by-size admits the smallest");
+        assert_eq!(tickets(&next), vec![2], "weighted-by-size admits the smallest");
         assert_eq!(s.mover.stats().total_admitted, 2);
         let taken = s.take_mover();
         assert_eq!(taken.stats().total_admitted, 2, "mover state travels");

@@ -9,4 +9,7 @@
 
 pub mod tcp;
 
-pub use tcp::{run_real_pool, run_real_pool_with, FileServer, RealPoolConfig, RealPoolReport};
+pub use tcp::{
+    run_real_pool, run_real_pool_router, run_real_pool_with, FileServer, RealPoolConfig,
+    RealPoolReport,
+};

@@ -12,15 +12,22 @@
 //! ```
 //!
 //! Transfer admission and sealing both go through the unified
-//! [`ShadowPool`] data mover: jobs are admitted under the configured
-//! [`AdmissionConfig`] policy (the same object the simulator drives), and
-//! each admitted transfer is sealed by its assigned shadow shard's
-//! dedicated crypto-service thread. With one shard this reproduces the
-//! paper's single-funnel submit node; with N shards sealing parallelizes
-//! (see `benches/queue_ablation.rs` for the sweep).
+//! [`PoolRouter`]/[`ShadowPool`] data mover: jobs are routed to a submit
+//! node and admitted under that node's configured [`AdmissionConfig`]
+//! policy (the same objects the simulator drives), and each admitted
+//! transfer is sealed by its assigned shadow shard's dedicated
+//! crypto-service thread. With one node and one shard this reproduces
+//! the paper's single-funnel submit node; with N shards sealing
+//! parallelizes, and with N submit nodes (`n_submit_nodes > 1`) each
+//! node runs its *own* [`FileServer`] — its own listener, dataset view
+//! and per-shard engines — behind the router (see
+//! `benches/queue_ablation.rs` for both sweeps).
 
 use crate::jobs::JobSpec;
-use crate::mover::{AdmissionConfig, MoverStats, ShadowPool, TransferRequest};
+use crate::mover::{
+    AdmissionConfig, MoverStats, PoolRouter, RouterPolicy, RouterStats, ShadowPool,
+    TransferRequest,
+};
 use crate::runtime::engine::{NativeEngine, SealEngine};
 use crate::runtime::service::EngineHandle;
 use crate::security::session::{self, PoolKey};
@@ -323,11 +330,21 @@ pub struct RealPoolConfig {
     /// `make artifacts`); falls back to native if unavailable.
     pub use_xla_engine: bool,
     pub passphrase: String,
-    /// Shadow-pool shard count: each shard gets its own seal-engine
-    /// thread. 1 = the paper's single crypto funnel.
+    /// Shadow-pool shard count per submit node: each shard gets its own
+    /// seal-engine thread. 1 = the paper's single crypto funnel.
     pub shadows: u32,
-    /// Transfer-admission policy (the same knob the simulator takes).
+    /// Transfer-admission policy (the same knob the simulator takes);
+    /// every submit node runs its own copy.
     pub policy: AdmissionConfig,
+    /// Submit-node count: one [`FileServer`] (own listener + per-shard
+    /// engines) per node, fed by the pool router.
+    pub n_submit_nodes: u32,
+    /// Pool-level routing strategy across submit nodes.
+    pub router: RouterPolicy,
+    /// Relative per-node NIC budgets for weighted-by-capacity routing
+    /// (e.g. `[100.0, 25.0]`). Empty = uniform; otherwise must have
+    /// `n_submit_nodes` entries.
+    pub node_capacities: Vec<f64>,
 }
 
 impl Default for RealPoolConfig {
@@ -342,6 +359,9 @@ impl Default for RealPoolConfig {
             passphrase: "htcdm-pool".into(),
             shadows: 1,
             policy: AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+            n_submit_nodes: 1,
+            router: RouterPolicy::LeastLoaded,
+            node_capacities: Vec::new(),
         }
     }
 }
@@ -356,8 +376,14 @@ pub struct RealPoolReport {
     pub transfer_secs: OnlineStats,
     pub engine_desc: String,
     pub errors: u32,
-    /// Data-mover accounting (per-shard routing, admission totals).
+    /// Aggregate data-mover accounting (per-shard routing node-major,
+    /// admission totals).
     pub mover: MoverStats,
+    /// Per-submit-node router accounting.
+    pub router: RouterStats,
+    /// Payload bytes each submit node's file server put on the wire
+    /// (index = node; sums to roughly `total_payload_bytes`).
+    pub bytes_served_per_node: Vec<u64>,
 }
 
 /// Seal-engine factory for one shadow shard: the PJRT artifact when
@@ -381,53 +407,90 @@ fn shard_engine_factory(use_xla: bool) -> impl Fn(usize) -> Result<Box<dyn SealE
     }
 }
 
-/// Admission gate shared between worker threads: the mover (the policy
-/// object) plus the set of admitted-but-not-yet-claimed tickets.
+/// Admission gate shared between worker threads: the router (the policy
+/// object) plus the set of admitted-but-not-yet-claimed tickets, mapped
+/// to their (submit node, shadow shard).
 struct GateState {
-    pool: ShadowPool,
-    ready: HashMap<u32, usize>,
+    router: PoolRouter,
+    ready: HashMap<u32, (usize, usize)>,
 }
 
-/// Run a full real-mode pool on loopback: a submit file server with the
-/// hard-linked dataset and `workers` worker threads pulling jobs, all
-/// admission driven by a mover built from the config.
+/// Run a full real-mode pool on loopback: one submit file server per
+/// submit node with the hard-linked dataset and `workers` worker threads
+/// pulling jobs, all routing and admission driven by a router built from
+/// the config.
 pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
-    let mover = ShadowPool::with_engines(
-        cfg.shadows.max(1),
-        cfg.policy.clone(),
-        shard_engine_factory(cfg.use_xla_engine),
-    );
-    let (report, _mover) = run_real_pool_with(&cfg, mover)?;
+    let n_nodes = cfg.n_submit_nodes.max(1) as usize;
+    let nodes: Vec<ShadowPool> = (0..n_nodes)
+        .map(|_| ShadowPool::sim(cfg.shadows.max(1), cfg.policy.clone()))
+        .collect();
+    let capacities = if cfg.node_capacities.is_empty() {
+        vec![1.0; n_nodes]
+    } else if cfg.node_capacities.len() == n_nodes {
+        cfg.node_capacities.clone()
+    } else {
+        bail!(
+            "node_capacities has {} entries for {} submit nodes",
+            cfg.node_capacities.len(),
+            n_nodes
+        );
+    };
+    let router = PoolRouter::new(nodes, capacities, cfg.router);
+    let (report, _router) = run_real_pool_router(&cfg, router)?;
     Ok(report)
 }
 
-/// Like [`run_real_pool`] but driving a caller-supplied mover — the same
-/// policy object can first drive the simulator and then this fabric
-/// (`tests/mover_unified.rs`). Engines are spawned on demand if the mover
-/// arrived from sim mode; admission statistics accumulate across both.
-/// Returns the report and the mover (with its accumulated state).
+/// Like [`run_real_pool`] but driving a caller-supplied single-node
+/// mover — the same policy object can first drive the simulator and then
+/// this fabric (`tests/mover_unified.rs`). Engines are spawned on demand
+/// if the mover arrived from sim mode; admission statistics accumulate
+/// across both. Returns the report and the mover (with its accumulated
+/// state).
 pub fn run_real_pool_with(
     cfg: &RealPoolConfig,
-    mut mover: ShadowPool,
+    mover: ShadowPool,
 ) -> Result<(RealPoolReport, ShadowPool)> {
+    let (report, router) = run_real_pool_router(cfg, PoolRouter::single(mover))?;
+    let mover = router
+        .into_single()
+        .map_err(|_| anyhow!("single-node router came back multi-node"))?;
+    Ok((report, mover))
+}
+
+/// The multi-submit-node core both entry points share: drive a
+/// caller-supplied [`PoolRouter`] (N nodes → N file servers) through a
+/// real loopback burst. The same router object can first drive the
+/// simulator (`tests/router_unified.rs`); engines spawn on demand and
+/// statistics accumulate. Returns the report and the router.
+pub fn run_real_pool_router(
+    cfg: &RealPoolConfig,
+    mut router: PoolRouter,
+) -> Result<(RealPoolReport, PoolRouter)> {
     let pool_key = PoolKey::from_passphrase(&cfg.passphrase);
-    mover.ensure_engines(shard_engine_factory(cfg.use_xla_engine));
-    if mover.config().limit() == 0 {
-        bail!("admission policy admits nothing (limit 0) — the pool would deadlock");
+    router.ensure_engines(shard_engine_factory(cfg.use_xla_engine));
+    for node in 0..router.node_count() {
+        if router.node_config(node).limit() == 0 {
+            bail!(
+                "node {node}'s admission policy admits nothing (limit 0) — the pool would \
+                 deadlock"
+            );
+        }
     }
-    // A carried-over mover must be quiescent: stale in-flight tickets
+    // A carried-over router must be quiescent: stale in-flight tickets
     // would hold admission slots no worker here will ever complete (and
     // could collide with this run's job procs), wedging the pool.
-    if mover.active() > 0 || mover.waiting() > 0 {
+    if router.active() > 0 || router.waiting() > 0 {
         bail!(
-            "mover still has {} active / {} waiting transfers — complete the previous run \
+            "router still has {} active / {} waiting transfers — complete the previous run \
              before driving the real fabric with it",
-            mover.active(),
-            mover.waiting()
+            router.active(),
+            router.waiting()
         );
     }
 
-    // The paper's dataset trick: one extent, many names.
+    // The paper's dataset trick: one extent, many names. Every submit
+    // node serves the same hard-linked dataset (shared `Arc`s, so the
+    // extent exists once regardless of node count).
     let mut extent = vec![0u8; cfg.input_bytes];
     Prng::new(2021).fill_bytes(&mut extent);
     let extent = Arc::new(extent);
@@ -436,17 +499,31 @@ pub fn run_real_pool_with(
         files.insert(format!("input_{p}"), extent.clone());
     }
 
-    let handles = mover.handles();
+    let first_handles = router.handles(0);
     let engine_desc = format!(
-        "{} x{}",
-        handles
+        "{} x{}{}",
+        first_handles
             .first()
             .map(|h| h.describe())
             .unwrap_or_else(|| "none".into()),
-        handles.len()
+        first_handles.len(),
+        if router.node_count() > 1 {
+            format!(" x{} nodes", router.node_count())
+        } else {
+            String::new()
+        }
     );
 
-    let mut server = FileServer::start(files, pool_key.clone(), handles, cfg.chunk_words)?;
+    let mut servers = Vec::with_capacity(router.node_count());
+    for node in 0..router.node_count() {
+        servers.push(FileServer::start(
+            files.clone(),
+            pool_key.clone(),
+            router.handles(node),
+            cfg.chunk_words,
+        )?);
+    }
+    let addrs: Vec<std::net::SocketAddr> = servers.iter().map(|s| s.addr).collect();
 
     let queue: Arc<Mutex<Vec<JobSpec>>> = Arc::new(Mutex::new(
         crate::workload::benchmark_burst(
@@ -461,7 +538,7 @@ pub fn run_real_pool_with(
 
     let gate = Arc::new((
         Mutex::new(GateState {
-            pool: mover,
+            router,
             ready: HashMap::new(),
         }),
         Condvar::new(),
@@ -475,7 +552,7 @@ pub fn run_real_pool_with(
         let stats = stats.clone();
         let key = pool_key.clone();
         let gate = gate.clone();
-        let addr = server.addr;
+        let addrs = addrs.clone();
         let out_bytes = cfg.output_bytes;
         worker_threads.push(std::thread::spawn(move || {
             let mut rng = Prng::new(0xBEEF_0000 + w as u64);
@@ -485,31 +562,33 @@ pub fn run_real_pool_with(
                 let Some(job) = job else { break };
                 let ticket = job.id.proc;
 
-                // Admission: request, then wait until the policy admits
-                // this ticket (it may admit other tickets first).
+                // Routing + admission: request, then wait until some
+                // node's policy admits this ticket (it may admit other
+                // tickets first).
                 let (lock, cv) = &*gate;
-                let shard = {
+                let (node, shard) = {
                     let mut g = lock.lock().unwrap();
                     let req =
                         TransferRequest::new(ticket, job.owner.clone(), job.input_bytes.0);
-                    for a in g.pool.request(req) {
-                        g.ready.insert(a.ticket, a.shard);
+                    for a in g.router.request(req) {
+                        g.ready.insert(a.ticket, (a.node, a.shard));
                     }
                     cv.notify_all();
                     loop {
-                        if let Some(s) = g.ready.remove(&ticket) {
-                            break s;
+                        if let Some(ns) = g.ready.remove(&ticket) {
+                            break ns;
                         }
                         g = cv.wait(g).unwrap();
                     }
                 };
 
-                let result = run_job(addr, &key, &job.input_file, &output, shard, &mut rng);
+                let result =
+                    run_job(addrs[node], &key, &job.input_file, &output, shard, &mut rng);
 
                 {
                     let mut g = lock.lock().unwrap();
-                    for a in g.pool.complete(ticket) {
-                        g.ready.insert(a.ticket, a.shard);
+                    for a in g.router.complete(ticket) {
+                        g.ready.insert(a.ticket, (a.node, a.shard));
                     }
                     cv.notify_all();
                 }
@@ -532,18 +611,22 @@ pub fn run_real_pool_with(
         t.join().map_err(|_| anyhow!("worker thread panicked"))?;
     }
     let wall = t0.elapsed().as_secs_f64();
-    server.stop();
+    let mut bytes_served_per_node = Vec::with_capacity(servers.len());
+    for server in &mut servers {
+        server.stop();
+        bytes_served_per_node.push(server.bytes_served.load(Ordering::Relaxed));
+    }
 
     let (times, bytes, errors) = {
         let s = stats.lock().unwrap();
         (s.0.clone(), s.1, s.2)
     };
-    let mover = Arc::try_unwrap(gate)
+    let router = Arc::try_unwrap(gate)
         .map_err(|_| anyhow!("admission gate still referenced after join"))?
         .0
         .into_inner()
         .map_err(|_| anyhow!("admission gate poisoned"))?
-        .pool;
+        .router;
     let report = RealPoolReport {
         jobs_completed: cfg.n_jobs - errors,
         total_payload_bytes: bytes,
@@ -552,9 +635,11 @@ pub fn run_real_pool_with(
         transfer_secs: times,
         engine_desc,
         errors,
-        mover: mover.stats(),
+        mover: router.stats(),
+        router: router.router_stats(),
+        bytes_served_per_node,
     };
-    Ok((report, mover))
+    Ok((report, router))
 }
 
 #[cfg(test)]
@@ -573,6 +658,9 @@ mod tests {
             passphrase: "test".into(),
             shadows: 1,
             policy: AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+            n_submit_nodes: 1,
+            router: RouterPolicy::LeastLoaded,
+            node_capacities: Vec::new(),
         }
     }
 
@@ -601,6 +689,53 @@ mod tests {
         let total: u64 = r.mover.admitted_per_shard.iter().sum();
         assert_eq!(total, 9, "every job routed through some shard");
         assert!(r.engine_desc.contains("x3"), "{}", r.engine_desc);
+    }
+
+    #[test]
+    fn real_pool_multi_submit_nodes_round_robin() {
+        let mut cfg = base_cfg();
+        cfg.n_submit_nodes = 2;
+        cfg.router = RouterPolicy::RoundRobin;
+        cfg.workers = 4;
+        cfg.n_jobs = 8;
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.jobs_completed, 8);
+        assert_eq!(r.router.routed_per_node, vec![4, 4], "±0 split of 8 jobs");
+        assert_eq!(r.bytes_served_per_node.len(), 2);
+        // Each node's file server really moved its share of the bytes.
+        let served: u64 = r.bytes_served_per_node.iter().sum();
+        assert_eq!(served, 8 * (256 << 10) as u64);
+        for (node, &b) in r.bytes_served_per_node.iter().enumerate() {
+            assert_eq!(b, 4 * (256 << 10) as u64, "node {node} served its half");
+        }
+        assert!(r.engine_desc.contains("x2 nodes"), "{}", r.engine_desc);
+        assert_eq!(r.mover.shard_failed, 0);
+    }
+
+    #[test]
+    fn real_pool_weighted_by_capacity_splits_3_to_1() {
+        let mut cfg = base_cfg();
+        cfg.n_submit_nodes = 2;
+        cfg.router = RouterPolicy::WeightedByCapacity;
+        cfg.node_capacities = vec![3.0, 1.0];
+        cfg.workers = 4;
+        cfg.n_jobs = 8;
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(
+            r.router.routed_per_node,
+            vec![6, 2],
+            "deficit round-robin tracks the 3:1 budget"
+        );
+    }
+
+    #[test]
+    fn real_pool_rejects_mismatched_capacities() {
+        let mut cfg = base_cfg();
+        cfg.n_submit_nodes = 2;
+        cfg.node_capacities = vec![1.0, 2.0, 3.0];
+        assert!(run_real_pool(cfg).is_err());
     }
 
     #[test]

@@ -32,23 +32,35 @@
 //! ```text
 //!              requests (ticket, owner, bytes)
 //!                      │
-//!              ┌───────▼────────┐   AdmissionPolicy (pluggable):
-//!              │ AdmissionQueue │   fifo/disabled · fifo/disk-load ·
-//!              │ (policy-driven)│   fifo/max-concurrent · fair-share ·
-//!              └───────┬────────┘   weighted-by-size
+//!              ┌───────▼────────┐   RouterPolicy (pluggable):
+//!              │   PoolRouter   │   round-robin · least-loaded ·
+//!              │ node 0..M-1    │   owner-affinity · weighted-by-
+//!              └───────┬────────┘   NIC-capacity (+ fail_node drain)
+//!                      │ routed to one submit node
+//!              ┌───────▼────────┐   AdmissionPolicy (pluggable, per
+//!              │ AdmissionQueue │   node): fifo/disabled · fifo/disk-
+//!              │ (policy-driven)│   load · fifo/max-concurrent ·
+//!              └───────┬────────┘   fair-share · weighted-by-size
 //!                      │ admitted
 //!              ┌───────▼────────┐
 //!              │   ShadowPool   │   least-loaded shard assignment
 //!              │  shard 0..N-1  │   (one SealEngine service per shard
 //!              └───┬────────┬───┘    in real mode)
 //!        sim mode  │        │  real mode
-//!   fluid flows over the    │  sealed frames over TCP, each
-//!   calibrated testbed      │  connection sealed by its shard's
-//!   (coordinator::engine)   │  dedicated engine thread (fabric::tcp)
+//!   fluid flows over M      │  sealed frames over TCP: one FileServer
+//!   monitored submit NICs   │  per submit node, each connection sealed
+//!   (coordinator::engine)   │  by its shard's engine (fabric::tcp)
 //! ```
 //!
-//! * The schedd ([`daemons::schedd`]) delegates all admission mechanics
-//!   to its `ShadowPool` — it no longer owns queue logic.
+//! * The schedd ([`daemons::schedd`]) delegates all routing and
+//!   admission mechanics to its [`mover::PoolRouter`] — a single-node
+//!   router is exactly the paper's one submit node.
+//! * [`mover::RouterPolicy`] is the scale-out knob the paper motivates
+//!   (its ~90 Gbps plateau is one submit NIC): `N_SUBMIT_NODES` /
+//!   `ROUTER_POLICY` in [`config`], `--submit-nodes` / `--router` on the
+//!   CLI. [`mover::PoolRouter::fail_node`] re-routes a dead node's
+//!   waiting *and* in-flight transfers to the survivors (counted in
+//!   `MoverStats::shard_failed`), so bursts drain through failures.
 //! * [`mover::AdmissionPolicy`] generalizes HTCondor's
 //!   `FILE_TRANSFER_DISK_LOAD_THROTTLE`: the three classic throttles stay
 //!   FIFO, while `FairShare` adds starvation-free per-owner round-robin
@@ -56,9 +68,15 @@
 //! * Shadow count and policy are scenario knobs
 //!   ([`coordinator::experiment`], `TRANSFER_QUEUE_POLICY` /
 //!   `SHADOW_POOL_SIZE` in [`config`]), so the paper's single-funnel
-//!   submit node and multi-shard scaling variants run from the same code.
+//!   submit node, multi-shard and multi-submit-node scaling variants run
+//!   from the same code.
+//! * Reports carry one NIC series per submit node
+//!   (`Report::per_node_series`); the aggregate `Report::series` is
+//!   their element-wise sum ([`metrics::BinSeries::sum`]).
 //! * `tests/mover_unified.rs` drives one `ShadowPool` object through the
-//!   simulator and then the real TCP fabric, proving the path is shared.
+//!   simulator and then the real TCP fabric; `tests/router_unified.rs`
+//!   does the same with one multi-node `PoolRouter`, proving the whole
+//!   path — router included — is shared.
 //!
 //! ## Quickstart
 //!

@@ -23,15 +23,19 @@ fn usage() -> ! {
         "usage: htcdm <command>\n\
          \n\
          commands:\n\
-           experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay|fair-share|sharded-4>\n\
+           experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay|fair-share|sharded-4|multi-submit-4>\n\
                       [--scale N] [--csv FILE] [--config FILE]\n\
                       run a paper experiment on the simulated testbed;\n\
                       --config applies condor-style knobs (JOBS, INPUT_SIZE,\n\
-                      N_OWNERS, TRANSFER_QUEUE_POLICY, SHADOW_POOL_SIZE...)\n\
+                      N_OWNERS, TRANSFER_QUEUE_POLICY, SHADOW_POOL_SIZE,\n\
+                      N_SUBMIT_NODES, ROUTER_POLICY...)\n\
            pool       [--jobs N] [--workers W] [--mb SIZE] [--native]\n\
                       [--shadows N] [--policy disabled|disk-load|max-concurrent|fair-share|weighted-by-size]\n\
-                      [--cap N]\n\
-                      run a real-mode loopback pool (sealed bytes via PJRT)\n\
+                      [--cap N] [--submit-nodes N] [--node-gbps G1,G2,...]\n\
+                      [--router round-robin|least-loaded|owner-affinity|weighted-by-capacity]\n\
+                      run a real-mode loopback pool (sealed bytes via PJRT);\n\
+                      --submit-nodes > 1 runs one file server per submit node\n\
+                      behind the pool router\n\
            submit     <file>   parse a submit description and print the jobs\n\
            verify              cross-check the PJRT artifact vs the native engine\n\
            sizing              print the paper's steady-state pool arithmetic"
@@ -72,6 +76,7 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
         Some("vpn-overlay") => Scenario::LanVpn,
         Some("fair-share") => Scenario::LanFairShare,
         Some("sharded-4") => Scenario::LanSharded4,
+        Some("multi-submit-4") => Scenario::LanMultiSubmit4,
         _ => usage(),
     };
     let scale: u32 = arg_value(args, "--scale")
@@ -94,6 +99,20 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
     );
     println!("\nSubmit-NIC throughput (5-min bins, as in the paper's Fig.):");
     println!("{}", report.figure(100.0));
+    if report.n_submit_nodes > 1 {
+        println!(
+            "router: {} over {} submit nodes | per-node jobs {:?} | per-node GB {:?}",
+            report.router_policy,
+            report.n_submit_nodes,
+            report.router.routed_per_node,
+            report
+                .router
+                .bytes_per_node
+                .iter()
+                .map(|b| (*b as f64 / 1e9 * 10.0).round() / 10.0)
+                .collect::<Vec<_>>()
+        );
+    }
     if let Some(csv) = arg_value(args, "--csv") {
         std::fs::write(&csv, htcdm::metrics::to_csv(&report.series))?;
         eprintln!("wrote {csv}");
@@ -102,9 +121,17 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
+    use htcdm::mover::RouterPolicy;
     let cap: u32 = arg_value(args, "--cap")
         .map(|v| v.parse().expect("--cap N"))
         .unwrap_or(0);
+    let router = match arg_value(args, "--router") {
+        None => RouterPolicy::LeastLoaded,
+        Some(name) => RouterPolicy::parse(&name).unwrap_or_else(|| {
+            eprintln!("unknown --router '{name}'");
+            usage()
+        }),
+    };
     let limit = if cap == 0 { u32::MAX } else { cap };
     let policy = match arg_value(args, "--policy").as_deref() {
         None | Some("disabled") => AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
@@ -128,13 +155,27 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
             .map(|v| v.parse().expect("--shadows N"))
             .unwrap_or(1),
         policy,
+        n_submit_nodes: arg_value(args, "--submit-nodes")
+            .map(|v| v.parse().expect("--submit-nodes N"))
+            .unwrap_or(1),
+        router,
+        node_capacities: arg_value(args, "--node-gbps")
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim().parse::<f64>().expect("--node-gbps G1,G2,..."))
+                    .collect()
+            })
+            .unwrap_or_default(),
         ..Default::default()
     };
     eprintln!(
-        "real-mode pool: {} jobs × {} MiB over {} workers, {} shadow shard(s), policy {}...",
+        "real-mode pool: {} jobs × {} MiB over {} workers, {} submit node(s) ({} router), \
+         {} shadow shard(s)/node, policy {}...",
         cfg.n_jobs,
         cfg.input_bytes >> 20,
         cfg.workers,
+        cfg.n_submit_nodes,
+        cfg.router.label(),
         cfg.shadows,
         cfg.policy.label()
     );
@@ -153,6 +194,17 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
         "mover: peak active {} | per-shard jobs {:?} | spurious completes {}",
         r.mover.peak_active, r.mover.admitted_per_shard, r.mover.released_without_active
     );
+    if r.router.routed_per_node.len() > 1 {
+        println!(
+            "router: per-node jobs {:?} | per-node MiB served {:?} | failed nodes {}",
+            r.router.routed_per_node,
+            r.bytes_served_per_node
+                .iter()
+                .map(|b| b >> 20)
+                .collect::<Vec<_>>(),
+            r.router.shard_failed
+        );
+    }
     Ok(())
 }
 

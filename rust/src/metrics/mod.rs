@@ -94,6 +94,32 @@ impl BinSeries {
         self.bins.iter().sum()
     }
 
+    /// Element-wise add another series (same bin width) into this one —
+    /// how per-submit-node NIC monitors aggregate into the pool series.
+    pub fn merge(&mut self, other: &BinSeries) {
+        assert_eq!(
+            self.bin, other.bin,
+            "can only merge series with equal bin widths"
+        );
+        if !other.bins.is_empty() {
+            self.ensure(other.bins.len() - 1);
+        }
+        for (i, b) in other.bins.iter().enumerate() {
+            self.bins[i] += b;
+        }
+    }
+
+    /// Element-wise sum of several series with equal bin widths (at least
+    /// one required).
+    pub fn sum(series: &[BinSeries]) -> BinSeries {
+        let first = series.first().expect("sum needs at least one series");
+        let mut out = BinSeries::new(first.bin_width());
+        for s in series {
+            out.merge(s);
+        }
+        out
+    }
+
     /// Peak bin throughput in Gbps.
     pub fn peak_gbps(&self) -> Gbps {
         let secs = self.bin.as_secs_f64();
@@ -220,6 +246,21 @@ mod tests {
         let art = s.ascii_chart(40, Gbps(100.0));
         assert!(art.contains('█'));
         assert!(art.lines().count() >= 2);
+    }
+
+    #[test]
+    fn merge_and_sum_are_elementwise() {
+        let mut a = BinSeries::new(SimTime::from_secs(10));
+        a.add_at(SimTime::from_secs(5), 10.0);
+        let mut b = BinSeries::new(SimTime::from_secs(10));
+        b.add_at(SimTime::from_secs(25), 4.0);
+        let total = BinSeries::sum(&[a.clone(), b.clone()]);
+        assert_eq!(total.bins().len(), 3);
+        assert!((total.bins()[0].1 - 10.0).abs() < 1e-12);
+        assert!((total.bins()[2].1 - 4.0).abs() < 1e-12);
+        assert!((total.total_bytes() - 14.0).abs() < 1e-12);
+        a.merge(&b);
+        assert!((a.total_bytes() - 14.0).abs() < 1e-12);
     }
 
     #[test]

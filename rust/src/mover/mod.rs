@@ -15,6 +15,11 @@
 //!   that owns the waiting/active bookkeeping the schedd used to hand-roll
 //!   (and whose release path can no longer underflow: spurious completes
 //!   are counted in [`MoverStats::released_without_active`]).
+//! * [`router`] — [`PoolRouter`]: the scale-out layer above the pools —
+//!   N submit-node shards (each a full [`ShadowPool`] with its own
+//!   policy and NIC budget) behind a pluggable [`RouterPolicy`]
+//!   (round-robin / least-loaded / owner-affinity / weighted-by-NIC-
+//!   capacity), with mid-burst node-failure drain.
 //! * [`pool`] — [`ShadowPool`]: the [`DataMover`] implementation that
 //!   shards admitted transfers across N shadow workers, each with its
 //!   *own* [`SealEngine`](crate::runtime::engine::SealEngine) service —
@@ -31,10 +36,12 @@
 pub mod policy;
 pub mod pool;
 pub mod queue;
+pub mod router;
 
 pub use policy::{ActiveView, AdmissionConfig, AdmissionPolicy};
 pub use pool::ShadowPool;
 pub use queue::AdmissionQueue;
+pub use router::{PoolRouter, Routed, RouterPolicy, RouterStats};
 
 /// One sandbox-transfer request entering the mover.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -73,10 +80,18 @@ pub struct MoverStats {
     /// Completes that arrived with no matching active transfer (the old
     /// `TransferQueue::release` underflow, now saturated and counted).
     pub released_without_active: u64,
-    /// Transfers admitted per shadow shard.
+    /// Completes that cancelled a still-waiting request — the failover
+    /// path where a re-routed transfer's original executor reports in
+    /// while the request queues on its new node.
+    pub cancelled_waiting: u64,
+    /// Transfers admitted per shadow shard. For a [`PoolRouter`] the
+    /// vector concatenates every node's shards node-major.
     pub admitted_per_shard: Vec<u64>,
-    /// Payload bytes routed per shadow shard.
+    /// Payload bytes routed per shadow shard (node-major for a router).
     pub bytes_per_shard: Vec<u64>,
+    /// Submit-node shards poisoned mid-run (see [`PoolRouter::fail_node`]);
+    /// always 0 for a plain [`ShadowPool`].
+    pub shard_failed: u64,
 }
 
 impl MoverStats {

@@ -112,6 +112,13 @@ impl ShadowPool {
         &self.config
     }
 
+    /// Remove and return every waiting request (failover drain — see
+    /// [`PoolRouter::fail_node`](super::PoolRouter::fail_node)). Waiting
+    /// requests have no shard assignment yet, so only the queue empties.
+    pub fn drain_waiting(&mut self) -> Vec<TransferRequest> {
+        self.queue.drain_waiting()
+    }
+
     /// Least-loaded shard (fewest active transfers; ties → lowest index).
     fn pick_shard(&self) -> usize {
         self.active_per_shard
@@ -176,8 +183,10 @@ impl ShadowPool {
             peak_active: self.queue.peak_active,
             total_admitted: self.queue.total_admitted,
             released_without_active: self.queue.released_without_active,
+            cancelled_waiting: self.queue.cancelled_waiting,
             admitted_per_shard: self.admitted_per_shard.clone(),
             bytes_per_shard: self.bytes_per_shard.clone(),
+            shard_failed: 0,
         }
     }
 

@@ -21,8 +21,12 @@ pub struct AdmissionQueue {
     active: u32,
     pub peak_active: u32,
     pub total_admitted: u64,
-    /// Completes with no matching active transfer (saturated, counted).
+    /// Completes with no matching active OR waiting transfer (saturated,
+    /// counted).
     pub released_without_active: u64,
+    /// Completes that cancelled a still-waiting request (failover: the
+    /// original executor of a re-routed transfer reporting in).
+    pub cancelled_waiting: u64,
 }
 
 impl AdmissionQueue {
@@ -36,6 +40,7 @@ impl AdmissionQueue {
             peak_active: 0,
             total_admitted: 0,
             released_without_active: 0,
+            cancelled_waiting: 0,
         }
     }
 
@@ -58,9 +63,20 @@ impl AdmissionQueue {
         self.admit()
     }
 
-    /// A transfer finished; returns newly admitted requests. A ticket
-    /// with no active transfer increments `released_without_active`
-    /// instead of underflowing.
+    /// Remove and return every waiting (not-yet-admitted) request — the
+    /// failover path when this queue's submit node dies and the router
+    /// re-routes its backlog. Active transfers are untouched.
+    pub fn drain_waiting(&mut self) -> Vec<TransferRequest> {
+        self.waiting.drain(..).collect()
+    }
+
+    /// A transfer finished; returns newly admitted requests. A complete
+    /// for a still-WAITING ticket cancels its queue entry (the failover
+    /// path: after `PoolRouter::fail_node` re-routes an in-flight
+    /// transfer, the original executor's completion must not leave a
+    /// ghost request that would later be admitted with no owner). A
+    /// ticket with neither an active nor a waiting transfer increments
+    /// `released_without_active` instead of underflowing.
     pub fn complete(&mut self, ticket: u32) -> Vec<TransferRequest> {
         match self.active_owner.remove(&ticket) {
             Some(owner) => {
@@ -73,7 +89,12 @@ impl AdmissionQueue {
                 }
             }
             None => {
-                self.released_without_active += 1;
+                if let Some(pos) = self.waiting.iter().position(|r| r.ticket == ticket) {
+                    self.waiting.remove(pos);
+                    self.cancelled_waiting += 1;
+                } else {
+                    self.released_without_active += 1;
+                }
             }
         }
         self.admit()
@@ -152,6 +173,23 @@ mod tests {
         // Double-complete of a finished ticket is also just counted.
         aq.complete(1);
         assert_eq!(aq.released_without_active, 2);
+    }
+
+    #[test]
+    fn complete_of_waiting_ticket_cancels_it() {
+        let mut aq = q(ThrottlePolicy::MaxConcurrent(1).into());
+        assert_eq!(tickets(&aq.enqueue(r(1, "a", 1))), vec![1]);
+        assert!(aq.enqueue(r(2, "a", 1)).is_empty(), "queued behind 1");
+        // The failover path: ticket 2's original executor reports in
+        // while 2 is still waiting — the entry must vanish, not ghost.
+        assert!(aq.complete(2).is_empty());
+        assert_eq!(aq.waiting(), 0, "waiting entry cancelled");
+        assert_eq!(aq.cancelled_waiting, 1);
+        assert_eq!(aq.released_without_active, 0);
+        // Completing 1 must not resurrect 2.
+        assert!(aq.complete(1).is_empty());
+        assert_eq!(aq.active(), 0);
+        assert_eq!(aq.total_admitted, 1, "2 was never admitted");
     }
 
     #[test]

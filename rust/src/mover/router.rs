@@ -1,0 +1,827 @@
+//! The pool-level router: N submit-node shards behind one admission
+//! front door.
+//!
+//! The paper's ~90 Gbps ceiling is a *single* submit node's NIC; the
+//! Petascale DTN project (arXiv:2105.12880) showed the next rung is
+//! parallelism across nodes. [`PoolRouter`] owns one full [`ShadowPool`]
+//! per submit node — each with its own [`AdmissionConfig`] policy and NIC
+//! budget — and splits an incoming job burst across them with a pluggable
+//! [`RouterPolicy`]:
+//!
+//! * `RoundRobin` — rotate over live nodes; spread is within ±1.
+//! * `LeastLoaded` — fewest active transfers first (ties: fewer waiting,
+//!   then lowest index).
+//! * `OwnerAffinity` — stable hash of the job owner, so one owner's
+//!   sandboxes always land on the same node (cache/claim locality).
+//! * `WeightedByCapacity` — deficit round-robin proportional to each
+//!   node's NIC capacity (heterogeneous submit fleets).
+//!
+//! The router survives node loss: [`PoolRouter::fail_node`] poisons a
+//! node, drains its waiting queue AND its in-flight transfers, and
+//! re-routes all of them to the surviving nodes (counted in
+//! [`MoverStats::shard_failed`]), so a burst never deadlocks on a dead
+//! submit node.
+//!
+//! Both fabrics consume the router exactly like they consume a single
+//! `ShadowPool` (it implements [`DataMover`] with node-major global shard
+//! indices); `tests/router_unified.rs` drives one router object through
+//! the simulator and then the real TCP loopback fabric.
+
+use super::policy::AdmissionConfig;
+use super::pool::ShadowPool;
+use super::{Admitted, DataMover, MoverStats, TransferRequest};
+use crate::config::{Config, ConfigError};
+use crate::runtime::engine::SealEngine;
+use crate::runtime::service::EngineHandle;
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+
+/// Pool-level routing strategy across submit nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Rotate over live nodes in index order.
+    RoundRobin,
+    /// Node with the fewest active transfers (ties: fewer waiting, then
+    /// lowest index).
+    LeastLoaded,
+    /// Stable hash of the job owner over the live node set.
+    OwnerAffinity,
+    /// Deficit round-robin weighted by each node's NIC capacity.
+    WeightedByCapacity,
+}
+
+impl RouterPolicy {
+    /// Short label for reports and bench tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::OwnerAffinity => "owner-affinity",
+            RouterPolicy::WeightedByCapacity => "weighted-by-capacity",
+        }
+    }
+
+    /// Parse a policy name (CLI flag / config value spellings).
+    pub fn parse(name: &str) -> Option<RouterPolicy> {
+        match name.trim().to_ascii_uppercase().replace('-', "_").as_str() {
+            "ROUND_ROBIN" => Some(RouterPolicy::RoundRobin),
+            "LEAST_LOADED" => Some(RouterPolicy::LeastLoaded),
+            "OWNER_AFFINITY" => Some(RouterPolicy::OwnerAffinity),
+            "WEIGHTED_BY_CAPACITY" | "WEIGHTED" => Some(RouterPolicy::WeightedByCapacity),
+            _ => None,
+        }
+    }
+
+    /// The `ROUTER_POLICY` condor-style knob (default: least-loaded).
+    ///
+    /// ```text
+    /// ROUTER_POLICY = ROUND_ROBIN   # ROUND_ROBIN | LEAST_LOADED |
+    ///                               # OWNER_AFFINITY | WEIGHTED_BY_CAPACITY
+    /// ```
+    pub fn from_config(cfg: &Config) -> Result<RouterPolicy, ConfigError> {
+        let name = cfg.get_or("ROUTER_POLICY", "LEAST_LOADED");
+        RouterPolicy::parse(&name).ok_or_else(|| {
+            ConfigError::Type("ROUTER_POLICY".into(), "router policy name", name)
+        })
+    }
+
+    /// The `N_SUBMIT_NODES` knob (default 1 — the paper's single submit
+    /// node).
+    pub fn nodes_from_config(cfg: &Config) -> Result<u32, ConfigError> {
+        Ok((cfg.get_u64("N_SUBMIT_NODES", 1)?).max(1) as u32)
+    }
+}
+
+/// A routed admission: the ticket plus the submit node and the shadow
+/// shard (node-local index) serving it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Routed {
+    pub ticket: u32,
+    pub node: usize,
+    pub shard: usize,
+}
+
+/// Per-node router accounting for reports and benches.
+#[derive(Debug, Clone)]
+pub struct RouterStats {
+    /// Each submit node's mover accounting (node-major).
+    pub per_node: Vec<MoverStats>,
+    /// Routing decisions per node (re-routes after a failure count again
+    /// on the surviving node).
+    pub routed_per_node: Vec<u64>,
+    /// Payload bytes routed per node.
+    pub bytes_per_node: Vec<u64>,
+    /// Nodes poisoned via [`PoolRouter::fail_node`].
+    pub shard_failed: u64,
+    /// Requests that could not be routed because every node had failed.
+    pub stranded: usize,
+}
+
+/// FNV-1a over the owner string: stable across runs and processes, so
+/// owner-affinity is deterministic (a property `tests/props.rs` checks).
+fn owner_hash(owner: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in owner.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A pool-level router over per-submit-node [`ShadowPool`]s. See the
+/// module docs.
+pub struct PoolRouter {
+    nodes: Vec<ShadowPool>,
+    /// Relative NIC capacity per node (weighted-by-capacity routing).
+    capacity: Vec<f64>,
+    policy: RouterPolicy,
+    rr_cursor: usize,
+    /// Deficit counters for weighted-by-capacity routing.
+    credit: Vec<f64>,
+    failed: Vec<bool>,
+    /// Submit node of every in-router (waiting or active) ticket.
+    node_of: HashMap<u32, usize>,
+    /// Request bodies of in-router tickets, kept so a node failure can
+    /// re-route its whole backlog — waiting AND in-flight.
+    requests: HashMap<u32, TransferRequest>,
+    /// Requests held because every node has failed.
+    stranded: VecDeque<TransferRequest>,
+    routed_per_node: Vec<u64>,
+    bytes_per_node: Vec<u64>,
+    shard_failed: u64,
+    /// Completes for tickets the router never routed.
+    unrouted_completes: u64,
+    /// Completes that cancelled a stranded (all-nodes-failed) request.
+    cancelled_stranded: u64,
+    /// Highest concurrent admitted count across all nodes.
+    peak_active: u32,
+}
+
+impl std::fmt::Debug for PoolRouter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolRouter")
+            .field("nodes", &self.nodes.len())
+            .field("policy", &self.policy)
+            .field("active", &self.active())
+            .field("waiting", &self.waiting())
+            .field("failed", &self.failed.iter().filter(|&&x| x).count())
+            .finish()
+    }
+}
+
+impl PoolRouter {
+    /// A router over the given per-node pools with explicit NIC budgets
+    /// (`capacity` must match `nodes` in length; values are relative).
+    pub fn new(nodes: Vec<ShadowPool>, capacity: Vec<f64>, policy: RouterPolicy) -> PoolRouter {
+        assert!(!nodes.is_empty(), "router needs at least one node");
+        assert_eq!(nodes.len(), capacity.len(), "one capacity per node");
+        let n = nodes.len();
+        PoolRouter {
+            nodes,
+            capacity,
+            policy,
+            rr_cursor: 0,
+            credit: vec![0.0; n],
+            failed: vec![false; n],
+            node_of: HashMap::new(),
+            requests: HashMap::new(),
+            stranded: VecDeque::new(),
+            routed_per_node: vec![0; n],
+            bytes_per_node: vec![0; n],
+            shard_failed: 0,
+            unrouted_completes: 0,
+            cancelled_stranded: 0,
+            peak_active: 0,
+        }
+    }
+
+    /// A simulation-mode router: `n_nodes` uniform submit nodes, each a
+    /// sim [`ShadowPool`] with `shards` shadow shards and its own copy of
+    /// the admission policy.
+    pub fn sim(n_nodes: u32, shards: u32, config: AdmissionConfig, policy: RouterPolicy) -> PoolRouter {
+        let n = n_nodes.max(1) as usize;
+        let nodes = (0..n)
+            .map(|_| ShadowPool::sim(shards, config.clone()))
+            .collect();
+        PoolRouter::new(nodes, vec![1.0; n], policy)
+    }
+
+    /// The degenerate single-node router wrapping an existing pool — the
+    /// paper's one-submit-node deployment expressed in router terms.
+    pub fn single(pool: ShadowPool) -> PoolRouter {
+        PoolRouter::new(vec![pool], vec![1.0], RouterPolicy::LeastLoaded)
+    }
+
+    /// Recover the inner pool of a single-node router (admission state
+    /// and statistics intact). Errors with `self` when multi-node.
+    pub fn into_single(mut self) -> Result<ShadowPool, PoolRouter> {
+        if self.nodes.len() == 1 {
+            Ok(self.nodes.pop().expect("one node"))
+        } else {
+            Err(self)
+        }
+    }
+
+    /// Spawn per-shard engine services on every node that has none yet
+    /// (idempotent; mirrors [`ShadowPool::ensure_engines`]).
+    pub fn ensure_engines<F>(&mut self, factory: F)
+    where
+        F: Fn(usize) -> Result<Box<dyn SealEngine>> + Send + Clone + 'static,
+    {
+        for node in &mut self.nodes {
+            node.ensure_engines(factory.clone());
+        }
+    }
+
+    /// Seal-engine handles of one node's shards (empty in sim mode).
+    pub fn handles(&self, node: usize) -> Vec<EngineHandle> {
+        self.nodes[node].handles()
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The node's admission configuration.
+    pub fn node_config(&self, node: usize) -> &AdmissionConfig {
+        self.nodes[node].config()
+    }
+
+    /// Active transfers per node (routing-visible load).
+    pub fn active_per_node(&self) -> Vec<u32> {
+        self.nodes.iter().map(|n| n.active()).collect()
+    }
+
+    /// Waiting requests per node.
+    pub fn waiting_per_node(&self) -> Vec<usize> {
+        self.nodes.iter().map(|n| n.waiting()).collect()
+    }
+
+    /// Submit node of an in-router (waiting or admitted) ticket.
+    pub fn node_of(&self, ticket: u32) -> Option<usize> {
+        self.node_of.get(&ticket).copied()
+    }
+
+    pub fn is_failed(&self, node: usize) -> bool {
+        self.failed[node]
+    }
+
+    /// Global shard index (node-major) of an admitted ticket: the shard
+    /// namespace the [`DataMover`] view exposes.
+    pub fn global_shard_of(&self, ticket: u32) -> Option<usize> {
+        let node = self.node_of(ticket)?;
+        let local = self.nodes[node].shard_of(ticket)?;
+        Some(self.shard_offset(node) + local)
+    }
+
+    fn shard_offset(&self, node: usize) -> usize {
+        self.nodes[..node].iter().map(|n| n.shard_count()).sum()
+    }
+
+    fn live_nodes(&self) -> Vec<usize> {
+        (0..self.nodes.len()).filter(|&i| !self.failed[i]).collect()
+    }
+
+    /// Pick the submit node for a request under the routing policy, or
+    /// `None` when every node has failed.
+    fn pick_node(&mut self, req: &TransferRequest) -> Option<usize> {
+        let live = self.live_nodes();
+        if live.is_empty() {
+            return None;
+        }
+        Some(match self.policy {
+            RouterPolicy::RoundRobin => loop {
+                let n = self.rr_cursor % self.nodes.len();
+                self.rr_cursor += 1;
+                if !self.failed[n] {
+                    break n;
+                }
+            },
+            RouterPolicy::LeastLoaded => live
+                .into_iter()
+                .min_by_key(|&i| (self.nodes[i].active(), self.nodes[i].waiting(), i))
+                .expect("live is non-empty"),
+            RouterPolicy::OwnerAffinity => {
+                live[(owner_hash(&req.owner) % live.len() as u64) as usize]
+            }
+            RouterPolicy::WeightedByCapacity => {
+                // Deficit round-robin: every request deposits one request's
+                // worth of credit, split proportionally to live capacity;
+                // the node deepest in credit serves it.
+                let total: f64 = live.iter().map(|&i| self.capacity[i]).sum();
+                if total > 0.0 {
+                    for &i in &live {
+                        self.credit[i] += self.capacity[i] / total;
+                    }
+                }
+                let &best = live
+                    .iter()
+                    .max_by(|&&a, &&b| {
+                        self.credit[a]
+                            .partial_cmp(&self.credit[b])
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(b.cmp(&a)) // ties → lowest index
+                    })
+                    .expect("live is non-empty");
+                self.credit[best] -= 1.0;
+                best
+            }
+        })
+    }
+
+    /// Hand a request to a node's pool and translate its admissions.
+    fn route_to(&mut self, node: usize, req: TransferRequest) -> Vec<Routed> {
+        self.routed_per_node[node] += 1;
+        self.bytes_per_node[node] += req.bytes;
+        self.node_of.insert(req.ticket, node);
+        let admitted = self.nodes[node].request(req);
+        self.after_op(node, admitted)
+    }
+
+    fn after_op(&mut self, node: usize, admitted: Vec<Admitted>) -> Vec<Routed> {
+        let out = admitted
+            .into_iter()
+            .map(|a| Routed {
+                ticket: a.ticket,
+                node,
+                shard: a.shard,
+            })
+            .collect();
+        let active: u32 = self.nodes.iter().map(|n| n.active()).sum();
+        self.peak_active = self.peak_active.max(active);
+        out
+    }
+
+    /// Submit a transfer request; returns every transfer (possibly on a
+    /// different node) admitted *now*.
+    pub fn request(&mut self, req: TransferRequest) -> Vec<Routed> {
+        self.requests.insert(req.ticket, req.clone());
+        match self.pick_node(&req) {
+            Some(node) => self.route_to(node, req),
+            None => {
+                self.stranded.push_back(req);
+                Vec::new()
+            }
+        }
+    }
+
+    /// A transfer finished (or failed); returns newly admitted transfers
+    /// on that ticket's node. A complete for a STRANDED ticket (queued
+    /// while every node was failed) cancels its entry — same
+    /// no-ghost contract as the node queues' `cancelled_waiting` path.
+    pub fn complete(&mut self, ticket: u32) -> Vec<Routed> {
+        self.requests.remove(&ticket);
+        let Some(node) = self.node_of.remove(&ticket) else {
+            if let Some(pos) = self.stranded.iter().position(|r| r.ticket == ticket) {
+                self.stranded.remove(pos);
+                self.cancelled_stranded += 1;
+            } else {
+                self.unrouted_completes += 1;
+            }
+            return Vec::new();
+        };
+        let admitted = self.nodes[node].complete(ticket);
+        self.after_op(node, admitted)
+    }
+
+    /// Poison a submit node mid-burst: its waiting queue AND its
+    /// in-flight transfers are re-routed to the surviving nodes, so the
+    /// burst drains instead of deadlocking. Returns the transfers newly
+    /// admitted on surviving nodes. Idempotent per node.
+    pub fn fail_node(&mut self, node: usize) -> Vec<Routed> {
+        if self.failed[node] {
+            return Vec::new();
+        }
+        self.failed[node] = true;
+        self.shard_failed += 1;
+
+        // Waiting requests leave the dead node's queue wholesale…
+        let waiting = self.nodes[node].drain_waiting();
+        for req in &waiting {
+            self.node_of.remove(&req.ticket);
+        }
+        // …and transfers in flight on the dead node are lost with it:
+        // clear their bookkeeping there, then resubmit them elsewhere.
+        // (After the waiting drain, tickets still mapped to this node are
+        // exactly the admitted ones.)
+        let mut inflight: Vec<u32> = self
+            .node_of
+            .iter()
+            .filter(|&(_, &n)| n == node)
+            .map(|(&t, _)| t)
+            .collect();
+        inflight.sort_unstable(); // HashMap order is arbitrary; re-route deterministically
+        let mut to_reroute: Vec<TransferRequest> =
+            Vec::with_capacity(inflight.len() + waiting.len());
+        for t in inflight {
+            self.node_of.remove(&t);
+            let _ = self.nodes[node].complete(t); // queue already drained: admits nothing
+            if let Some(req) = self.requests.get(&t) {
+                to_reroute.push(req.clone());
+            }
+        }
+        to_reroute.extend(waiting);
+
+        let mut out = Vec::new();
+        for req in to_reroute {
+            match self.pick_node(&req) {
+                Some(n) => out.extend(self.route_to(n, req)),
+                None => self.stranded.push_back(req),
+            }
+        }
+        out
+    }
+
+    /// Currently admitted (in-flight) transfers across all nodes.
+    pub fn active(&self) -> u32 {
+        self.nodes.iter().map(|n| n.active()).sum()
+    }
+
+    /// Requests waiting for admission (including stranded ones).
+    pub fn waiting(&self) -> usize {
+        self.nodes.iter().map(|n| n.waiting()).sum::<usize>() + self.stranded.len()
+    }
+
+    /// Total shadow shards across all nodes.
+    pub fn shard_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.shard_count()).sum()
+    }
+
+    /// Per-node detail (per-node mover stats, routing counts, failures).
+    pub fn router_stats(&self) -> RouterStats {
+        RouterStats {
+            per_node: self.nodes.iter().map(|n| n.stats()).collect(),
+            routed_per_node: self.routed_per_node.clone(),
+            bytes_per_node: self.bytes_per_node.clone(),
+            shard_failed: self.shard_failed,
+            stranded: self.stranded.len(),
+        }
+    }
+
+    /// Aggregate mover accounting: per-shard vectors concatenate
+    /// node-major (node 0's shards first), so their length is
+    /// [`PoolRouter::shard_count`] and their sums cover the whole pool.
+    pub fn stats(&self) -> MoverStats {
+        let per_node: Vec<MoverStats> = self.nodes.iter().map(|n| n.stats()).collect();
+        MoverStats {
+            peak_active: self.peak_active,
+            total_admitted: per_node.iter().map(|s| s.total_admitted).sum(),
+            released_without_active: self.unrouted_completes
+                + per_node.iter().map(|s| s.released_without_active).sum::<u64>(),
+            cancelled_waiting: self.cancelled_stranded
+                + per_node.iter().map(|s| s.cancelled_waiting).sum::<u64>(),
+            admitted_per_shard: per_node
+                .iter()
+                .flat_map(|s| s.admitted_per_shard.iter().copied())
+                .collect(),
+            bytes_per_shard: per_node
+                .iter()
+                .flat_map(|s| s.bytes_per_shard.iter().copied())
+                .collect(),
+            shard_failed: self.shard_failed,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "pool-router[{} node{}, {}, {}]",
+            self.nodes.len(),
+            if self.nodes.len() == 1 { "" } else { "s" },
+            self.policy.label(),
+            self.nodes
+                .first()
+                .map(|n| n.describe())
+                .unwrap_or_else(|| "empty".into())
+        )
+    }
+}
+
+/// The router is itself a [`DataMover`]: callers that only understand a
+/// flat shard namespace see node-major global shard indices.
+impl DataMover for PoolRouter {
+    fn request(&mut self, req: TransferRequest) -> Vec<Admitted> {
+        PoolRouter::request(self, req)
+            .into_iter()
+            .map(|r| Admitted {
+                ticket: r.ticket,
+                shard: self.shard_offset(r.node) + r.shard,
+            })
+            .collect()
+    }
+
+    fn complete(&mut self, ticket: u32) -> Vec<Admitted> {
+        PoolRouter::complete(self, ticket)
+            .into_iter()
+            .map(|r| Admitted {
+                ticket: r.ticket,
+                shard: self.shard_offset(r.node) + r.shard,
+            })
+            .collect()
+    }
+
+    fn active(&self) -> u32 {
+        PoolRouter::active(self)
+    }
+
+    fn waiting(&self) -> usize {
+        PoolRouter::waiting(self)
+    }
+
+    fn shard_count(&self) -> usize {
+        PoolRouter::shard_count(self)
+    }
+
+    fn shard_of(&self, ticket: u32) -> Option<usize> {
+        self.global_shard_of(ticket)
+    }
+
+    fn stats(&self) -> MoverStats {
+        PoolRouter::stats(self)
+    }
+
+    fn describe(&self) -> String {
+        PoolRouter::describe(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfer::ThrottlePolicy;
+
+    fn r(t: u32, owner: &str, bytes: u64) -> TransferRequest {
+        TransferRequest::new(t, owner, bytes)
+    }
+
+    fn rr_router(nodes: u32) -> PoolRouter {
+        PoolRouter::sim(
+            nodes,
+            1,
+            ThrottlePolicy::Disabled.into(),
+            RouterPolicy::RoundRobin,
+        )
+    }
+
+    #[test]
+    fn round_robin_rotates_nodes() {
+        let mut router = rr_router(3);
+        for t in 0..9 {
+            let adm = router.request(r(t, "o", 10));
+            assert_eq!(adm.len(), 1);
+            assert_eq!(adm[0].node, (t as usize) % 3);
+        }
+        let st = router.router_stats();
+        assert_eq!(st.routed_per_node, vec![3, 3, 3]);
+        assert_eq!(st.bytes_per_node, vec![30, 30, 30]);
+        assert_eq!(st.shard_failed, 0);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_node() {
+        let mut router = PoolRouter::sim(
+            2,
+            1,
+            ThrottlePolicy::Disabled.into(),
+            RouterPolicy::LeastLoaded,
+        );
+        let a = router.request(r(0, "o", 1));
+        assert_eq!(a[0].node, 0);
+        let b = router.request(r(1, "o", 1));
+        assert_eq!(b[0].node, 1, "node 0 is busier");
+        router.complete(0);
+        let c = router.request(r(2, "o", 1));
+        assert_eq!(c[0].node, 0, "node 0 drained back to idle");
+    }
+
+    #[test]
+    fn owner_affinity_is_sticky() {
+        let mut router = PoolRouter::sim(
+            4,
+            1,
+            ThrottlePolicy::Disabled.into(),
+            RouterPolicy::OwnerAffinity,
+        );
+        let mut homes: HashMap<String, usize> = HashMap::new();
+        for t in 0..40 {
+            let owner = format!("user{}", t % 5);
+            let adm = router.request(r(t, &owner, 1));
+            let node = adm[0].node;
+            let prev = homes.entry(owner).or_insert(node);
+            assert_eq!(*prev, node, "owner moved nodes");
+        }
+    }
+
+    #[test]
+    fn weighted_by_capacity_splits_proportionally() {
+        let nodes = vec![
+            ShadowPool::sim(1, ThrottlePolicy::Disabled.into()),
+            ShadowPool::sim(1, ThrottlePolicy::Disabled.into()),
+        ];
+        let mut router =
+            PoolRouter::new(nodes, vec![100.0, 25.0], RouterPolicy::WeightedByCapacity);
+        for t in 0..100 {
+            router.request(r(t, "o", 1));
+        }
+        let st = router.router_stats();
+        assert_eq!(st.routed_per_node[0] + st.routed_per_node[1], 100);
+        assert_eq!(st.routed_per_node[0], 80, "100:25 split of 100 requests");
+        assert_eq!(st.routed_per_node[1], 20);
+    }
+
+    #[test]
+    fn fail_node_reroutes_waiting_and_inflight() {
+        // Per-node limit 2, so node 0 holds 2 active + a backlog.
+        let mut router = PoolRouter::sim(
+            2,
+            1,
+            ThrottlePolicy::MaxConcurrent(2).into(),
+            RouterPolicy::RoundRobin,
+        );
+        for t in 0..10 {
+            router.request(r(t, "o", 5));
+        }
+        assert_eq!(router.active(), 4, "2 per node");
+        assert_eq!(router.waiting(), 6);
+
+        let rescued = router.fail_node(0);
+        assert!(router.is_failed(0));
+        // Node 1 was already at its limit of 2, so nothing admits NOW…
+        assert!(rescued.is_empty());
+        // …but node 0's whole backlog (3 waiting + 2 in-flight) moved over.
+        assert_eq!(router.active(), 2);
+        assert_eq!(router.waiting(), 8);
+        assert_eq!(router.stats().shard_failed, 1);
+        // The re-route corrupted no accounting on the dead node.
+        assert_eq!(router.stats().released_without_active, 0);
+
+        // Drain: completing everything on node 1 admits the full backlog.
+        let mut done = 0u32;
+        let mut pending: Vec<u32> =
+            (0..10).filter(|&t| router.global_shard_of(t).is_some()).collect();
+        let mut guard = 0;
+        while let Some(t) = pending.pop() {
+            guard += 1;
+            assert!(guard < 100, "drain deadlocked");
+            done += 1;
+            for a in router.complete(t) {
+                assert_eq!(a.node, 1, "survivor serves everything");
+                pending.push(a.ticket);
+            }
+        }
+        assert_eq!(done, 10, "every transfer finished despite the dead node");
+        assert_eq!(router.active(), 0);
+        assert_eq!(router.waiting(), 0);
+    }
+
+    #[test]
+    fn complete_after_reroute_cancels_instead_of_ghosting() {
+        // T1 active on node 0, T2 active on node 1 (limit 1 each).
+        let mut router = PoolRouter::sim(
+            2,
+            1,
+            ThrottlePolicy::MaxConcurrent(1).into(),
+            RouterPolicy::RoundRobin,
+        );
+        assert_eq!(router.request(r(1, "o", 1)).len(), 1);
+        assert_eq!(router.request(r(2, "o", 1)).len(), 1);
+        // Node 0 dies: T1 re-routes to node 1's queue (node 1 is full).
+        let rescued = router.fail_node(0);
+        assert!(rescued.is_empty(), "survivor is at its limit");
+        assert_eq!(router.waiting(), 1, "T1 waits on node 1");
+        // T1's original executor reports the (failed) transfer done while
+        // T1 still waits — that must cancel the entry, not ghost it.
+        assert!(router.complete(1).is_empty());
+        assert_eq!(router.waiting(), 0, "waiting entry cancelled");
+        let st = router.stats();
+        assert_eq!(st.cancelled_waiting, 1);
+        assert_eq!(st.released_without_active, 0);
+        // Completing T2 must NOT resurrect T1 as an ownerless admission.
+        assert!(router.complete(2).is_empty());
+        assert_eq!(router.active(), 0);
+        assert_eq!(router.waiting(), 0);
+        assert_eq!(router.stats().total_admitted, 2);
+    }
+
+    #[test]
+    fn fail_node_is_idempotent_and_avoids_dead_nodes() {
+        let mut router = rr_router(2);
+        router.request(r(0, "o", 1));
+        assert!(router.fail_node(1).is_empty());
+        assert!(router.fail_node(1).is_empty(), "second poison is a no-op");
+        assert_eq!(router.stats().shard_failed, 1);
+        for t in 1..5 {
+            let adm = router.request(r(t, "o", 1));
+            assert_eq!(adm[0].node, 0, "round-robin skips the dead node");
+        }
+    }
+
+    #[test]
+    fn all_nodes_failed_strands_requests() {
+        let mut router = rr_router(2);
+        router.fail_node(0);
+        router.fail_node(1);
+        assert!(router.request(r(0, "o", 1)).is_empty());
+        assert_eq!(router.waiting(), 1);
+        assert_eq!(router.router_stats().stranded, 1);
+        // A complete for the stranded ticket cancels it — no ghost entry
+        // keeps waiting()/stranded overcounting forever.
+        assert!(router.complete(0).is_empty());
+        assert_eq!(router.waiting(), 0);
+        assert_eq!(router.router_stats().stranded, 0);
+        assert_eq!(router.stats().cancelled_waiting, 1);
+        assert_eq!(router.stats().released_without_active, 0);
+    }
+
+    #[test]
+    fn aggregate_stats_concat_node_major() {
+        let mut router = PoolRouter::sim(
+            2,
+            2,
+            ThrottlePolicy::Disabled.into(),
+            RouterPolicy::RoundRobin,
+        );
+        for t in 0..8 {
+            router.request(r(t, "o", 100));
+        }
+        let st = router.stats();
+        assert_eq!(st.admitted_per_shard.len(), 4, "2 nodes × 2 shards");
+        assert_eq!(st.total_admitted, 8);
+        assert_eq!(st.bytes_per_shard.iter().sum::<u64>(), 800);
+        assert_eq!(st.peak_active, 8);
+        assert_eq!(st.shard_failed, 0);
+        assert_eq!(router.shard_count(), 4);
+    }
+
+    #[test]
+    fn router_as_dyn_data_mover_uses_global_shards() {
+        let mut mover: Box<dyn DataMover> = Box::new(PoolRouter::sim(
+            2,
+            3,
+            ThrottlePolicy::Disabled.into(),
+            RouterPolicy::RoundRobin,
+        ));
+        let a = mover.request(TransferRequest::new(1, "a", 10));
+        assert_eq!(a[0].shard, 0, "node 0, local shard 0");
+        let b = mover.request(TransferRequest::new(2, "a", 10));
+        assert_eq!(b[0].shard, 3, "node 1's shards start at offset 3");
+        assert_eq!(mover.shard_count(), 6);
+        assert_eq!(mover.shard_of(2), Some(3));
+        assert!(mover.describe().contains("pool-router"));
+        mover.complete(2);
+        assert_eq!(mover.shard_of(2), None);
+    }
+
+    #[test]
+    fn single_roundtrip_preserves_pool_state() {
+        let mut pool = ShadowPool::sim(2, ThrottlePolicy::Disabled.into());
+        pool.request(r(7, "o", 42));
+        let mut router = PoolRouter::single(pool);
+        assert_eq!(router.node_count(), 1);
+        assert_eq!(router.active(), 1);
+        router.request(r(8, "o", 1));
+        let pool = router.into_single().expect("single node");
+        assert_eq!(pool.stats().total_admitted, 2);
+        assert_eq!(pool.shard_of(7), Some(0));
+    }
+
+    #[test]
+    fn unrouted_complete_is_counted() {
+        let mut router = rr_router(2);
+        assert!(router.complete(99).is_empty());
+        assert_eq!(router.stats().released_without_active, 1);
+    }
+
+    #[test]
+    fn policy_parse_and_config() {
+        assert_eq!(
+            RouterPolicy::parse("round-robin"),
+            Some(RouterPolicy::RoundRobin)
+        );
+        assert_eq!(
+            RouterPolicy::parse("WEIGHTED_BY_CAPACITY"),
+            Some(RouterPolicy::WeightedByCapacity)
+        );
+        assert_eq!(RouterPolicy::parse("nope"), None);
+
+        let cfg = Config::parse("N_SUBMIT_NODES = 4\nROUTER_POLICY = OWNER_AFFINITY").unwrap();
+        assert_eq!(
+            RouterPolicy::from_config(&cfg).unwrap(),
+            RouterPolicy::OwnerAffinity
+        );
+        assert_eq!(RouterPolicy::nodes_from_config(&cfg).unwrap(), 4);
+
+        let dflt = Config::parse("").unwrap();
+        assert_eq!(
+            RouterPolicy::from_config(&dflt).unwrap(),
+            RouterPolicy::LeastLoaded
+        );
+        assert_eq!(RouterPolicy::nodes_from_config(&dflt).unwrap(), 1);
+
+        let bad = Config::parse("ROUTER_POLICY = HASH").unwrap();
+        assert!(RouterPolicy::from_config(&bad).is_err());
+    }
+}

@@ -1,11 +1,15 @@
 //! Testbed topology builders: the PRP deployments from the paper's §II–§IV
 //! expressed as NetSim link graphs.
 //!
-//! A transfer from the submit node to worker `w` crosses, in order:
+//! A transfer from submit node `s` to worker `w` crosses, in order:
 //!
 //! ```text
-//!   [submit VPN cpu]? -> submit NIC tx -> [backbone]? -> worker w NIC rx
+//!   [submit s VPN cpu]? -> submit s NIC tx -> [backbone]? -> worker w NIC rx
 //! ```
+//!
+//! The paper's deployments have one submit node; `n_submit_nodes > 1`
+//! models the scale-out pool (one NIC + monitor per submit node, each
+//! fed by its own `ShadowPool` behind the `PoolRouter`).
 //!
 //! * LAN scenario (§III): submit + 6 workers, all 100 Gbps NICs, no
 //!   backbone constraint beyond the (quiet) campus core.
@@ -38,6 +42,13 @@ pub struct WanSpec {
 #[derive(Debug, Clone)]
 pub struct TestbedSpec {
     pub submit_nic_gbps: f64,
+    /// Submit-node count; each node gets its own NIC (and VPN hop, when
+    /// enabled). 1 = the paper's deployments.
+    pub n_submit_nodes: u32,
+    /// Per-submit-node NIC overrides in Gbps (heterogeneous fleets).
+    /// Empty = every node gets `submit_nic_gbps`; extra entries beyond
+    /// `n_submit_nodes` are ignored, missing ones fall back.
+    pub submit_node_gbps: Vec<f64>,
     pub workers: Vec<WorkerSpec>,
     pub wan: Option<WanSpec>,
     /// Submit node runs behind the Calico VPN overlay (unprivileged pod).
@@ -51,6 +62,8 @@ impl TestbedSpec {
     pub fn lan_paper() -> TestbedSpec {
         TestbedSpec {
             submit_nic_gbps: 100.0,
+            n_submit_nodes: 1,
+            submit_node_gbps: Vec::new(),
             workers: (0..6)
                 .map(|i| WorkerSpec {
                     nic_gbps: 100.0,
@@ -76,6 +89,8 @@ impl TestbedSpec {
         }));
         TestbedSpec {
             submit_nic_gbps: 100.0,
+            n_submit_nodes: 1,
+            submit_node_gbps: Vec::new(),
             workers,
             wan: Some(WanSpec {
                 rtt_s: calib::WAN_RTT_S,
@@ -98,6 +113,14 @@ impl TestbedSpec {
     pub fn total_slots(&self) -> u32 {
         self.workers.iter().map(|w| w.slots).sum()
     }
+
+    /// NIC capacity of submit node `s` in Gbps (override or default).
+    pub fn submit_node_nic_gbps(&self, s: usize) -> f64 {
+        self.submit_node_gbps
+            .get(s)
+            .copied()
+            .unwrap_or(self.submit_nic_gbps)
+    }
 }
 
 /// A built testbed: the NetSim plus the link handles the engine needs.
@@ -105,8 +128,11 @@ impl TestbedSpec {
 pub struct Testbed {
     pub net: NetSim,
     pub spec: TestbedSpec,
-    pub submit_tx: LinkId,
-    pub submit_vpn: Option<LinkId>,
+    /// One monitored tx link per submit node (index = node).
+    pub submit_txs: Vec<LinkId>,
+    /// One VPN processing hop per submit node when the overlay is on;
+    /// empty otherwise.
+    pub submit_vpns: Vec<LinkId>,
     pub backbone: Option<LinkId>,
     pub worker_rx: Vec<LinkId>,
 }
@@ -115,12 +141,23 @@ impl Testbed {
     pub fn build(spec: TestbedSpec) -> Testbed {
         let mut net = NetSim::new();
         let eff = calib::NIC_PROTOCOL_EFFICIENCY;
+        let n_submit = spec.n_submit_nodes.max(1) as usize;
 
-        let submit_vpn = spec.vpn_on_submit.then(|| {
-            net.add_link("submit.vpn", Gbps(calib::VPN_PROCESSING_GBPS))
-        });
-        let submit_tx = net.add_link("submit.nic.tx", Gbps(spec.submit_nic_gbps * eff));
-        net.monitor_link(submit_tx, spec.monitor_bin);
+        let mut submit_vpns = Vec::new();
+        let mut submit_txs = Vec::with_capacity(n_submit);
+        for s in 0..n_submit {
+            if spec.vpn_on_submit {
+                submit_vpns.push(
+                    net.add_link(&format!("submit{s}.vpn"), Gbps(calib::VPN_PROCESSING_GBPS)),
+                );
+            }
+            let tx = net.add_link(
+                &format!("submit{s}.nic.tx"),
+                Gbps(spec.submit_node_nic_gbps(s) * eff),
+            );
+            net.monitor_link(tx, spec.monitor_bin);
+            submit_txs.push(tx);
+        }
 
         let backbone = spec
             .wan
@@ -136,20 +173,25 @@ impl Testbed {
         Testbed {
             net,
             spec,
-            submit_tx,
-            submit_vpn,
+            submit_txs,
+            submit_vpns,
             backbone,
             worker_rx,
         }
     }
 
-    /// Links crossed by a submit -> worker transfer.
-    pub fn path_to_worker(&self, worker: usize) -> Vec<LinkId> {
+    /// Submit-node count this testbed was built with.
+    pub fn n_submit_nodes(&self) -> usize {
+        self.submit_txs.len()
+    }
+
+    /// Links crossed by a submit node -> worker transfer.
+    pub fn path_to_worker(&self, submit_node: usize, worker: usize) -> Vec<LinkId> {
         let mut p = Vec::with_capacity(4);
-        if let Some(v) = self.submit_vpn {
+        if let Some(&v) = self.submit_vpns.get(submit_node) {
             p.push(v);
         }
-        p.push(self.submit_tx);
+        p.push(self.submit_txs[submit_node]);
         if let Some(b) = self.backbone {
             p.push(b);
         }
@@ -157,12 +199,12 @@ impl Testbed {
         p
     }
 
-    /// Links crossed by a worker -> submit transfer (job output). The same
-    /// resources are crossed in the reverse direction; NIC duplex is
-    /// approximated as shared capacity, which is conservative and matches
-    /// the submit node being the hot spot.
-    pub fn path_from_worker(&self, worker: usize) -> Vec<LinkId> {
-        let mut p = self.path_to_worker(worker);
+    /// Links crossed by a worker -> submit node transfer (job output).
+    /// The same resources are crossed in the reverse direction; NIC
+    /// duplex is approximated as shared capacity, which is conservative
+    /// and matches the submit node being the hot spot.
+    pub fn path_from_worker(&self, submit_node: usize, worker: usize) -> Vec<LinkId> {
+        let mut p = self.path_to_worker(submit_node, worker);
         p.reverse();
         p
     }
@@ -208,10 +250,46 @@ mod tests {
         assert_eq!(spec.total_slots(), 200);
         let tb = Testbed::build(spec);
         assert!(tb.backbone.is_none());
-        assert!(tb.submit_vpn.is_none());
+        assert!(tb.submit_vpns.is_empty());
+        assert_eq!(tb.n_submit_nodes(), 1);
         assert_eq!(tb.worker_rx.len(), 6);
-        let p = tb.path_to_worker(3);
-        assert_eq!(p, vec![tb.submit_tx, tb.worker_rx[3]]);
+        let p = tb.path_to_worker(0, 3);
+        assert_eq!(p, vec![tb.submit_txs[0], tb.worker_rx[3]]);
+    }
+
+    #[test]
+    fn multi_submit_nodes_get_own_monitored_nics() {
+        let mut spec = TestbedSpec::lan_paper();
+        spec.n_submit_nodes = 4;
+        let tb = Testbed::build(spec);
+        assert_eq!(tb.n_submit_nodes(), 4);
+        assert_eq!(tb.submit_txs.len(), 4);
+        // Distinct NICs: paths from different submit nodes share only the
+        // worker rx link.
+        let p0 = tb.path_to_worker(0, 2);
+        let p3 = tb.path_to_worker(3, 2);
+        assert_ne!(p0[0], p3[0]);
+        assert_eq!(p0[1], p3[1]);
+        // Each submit NIC carries the full per-node capacity.
+        for &tx in &tb.submit_txs {
+            let cap = tb.net.link(tx).capacity_bps * 8.0 / 1e9;
+            assert!((cap - 91.0).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_submit_nics_get_per_node_capacity() {
+        let mut spec = TestbedSpec::lan_paper();
+        spec.n_submit_nodes = 2;
+        spec.submit_node_gbps = vec![100.0, 25.0];
+        assert_eq!(spec.submit_node_nic_gbps(0), 100.0);
+        assert_eq!(spec.submit_node_nic_gbps(1), 25.0);
+        assert_eq!(spec.submit_node_nic_gbps(9), 100.0, "fallback to default");
+        let tb = Testbed::build(spec);
+        let c0 = tb.net.link(tb.submit_txs[0]).capacity_bps * 8.0 / 1e9;
+        let c1 = tb.net.link(tb.submit_txs[1]).capacity_bps * 8.0 / 1e9;
+        assert!((c0 - 91.0).abs() < 0.01);
+        assert!((c1 - 22.75).abs() < 0.01, "25 Gbps derated: {c1}");
     }
 
     #[test]
@@ -221,7 +299,7 @@ mod tests {
         assert_eq!(spec.workers[0].nic_gbps, 100.0);
         assert_eq!(spec.workers[4].nic_gbps, 10.0);
         let tb = Testbed::build(spec);
-        let p = tb.path_to_worker(0);
+        let p = tb.path_to_worker(0, 0);
         assert_eq!(p.len(), 3, "submit tx + backbone + worker rx");
         assert!((tb.path_profile().rtt_s - 0.058).abs() < 1e-9);
     }
@@ -229,9 +307,9 @@ mod tests {
     #[test]
     fn vpn_adds_processing_hop() {
         let tb = Testbed::build(TestbedSpec::lan_vpn_paper());
-        let p = tb.path_to_worker(0);
+        let p = tb.path_to_worker(0, 0);
         assert_eq!(p.len(), 3, "vpn + submit tx + worker rx");
-        let vpn = tb.submit_vpn.unwrap();
+        let vpn = tb.submit_vpns[0];
         assert_eq!(p[0], vpn);
         // VPN capacity is the paper's observed 25 Gbps ceiling.
         let cap = tb.net.link(vpn).capacity_bps * 8.0 / 1e9;
@@ -241,15 +319,15 @@ mod tests {
     #[test]
     fn nic_derated_by_protocol_efficiency() {
         let tb = Testbed::build(TestbedSpec::lan_paper());
-        let cap_gbps = tb.net.link(tb.submit_tx).capacity_bps * 8.0 / 1e9;
+        let cap_gbps = tb.net.link(tb.submit_txs[0]).capacity_bps * 8.0 / 1e9;
         assert!((cap_gbps - 91.0).abs() < 0.01);
     }
 
     #[test]
     fn reverse_path() {
         let tb = Testbed::build(TestbedSpec::wan_paper());
-        let fwd = tb.path_to_worker(1);
-        let mut rev = tb.path_from_worker(1);
+        let fwd = tb.path_to_worker(0, 1);
+        let mut rev = tb.path_from_worker(0, 1);
         rev.reverse();
         assert_eq!(fwd, rev);
     }

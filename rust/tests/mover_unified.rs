@@ -59,6 +59,7 @@ fn same_mover_object_drives_sim_and_real_fabric() {
         passphrase: "unified".into(),
         shadows: 2, // informational; the supplied mover's shard count wins
         policy: policy.clone(),
+        ..RealPoolConfig::default()
     };
     let (report, mover) = run_real_pool_with(&cfg, mover).unwrap();
     assert_eq!(report.errors, 0);

@@ -17,6 +17,7 @@ fn cfg() -> RealPoolConfig {
         passphrase: "e2e".into(),
         shadows: 1,
         policy: AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+        ..RealPoolConfig::default()
     }
 }
 

@@ -2,7 +2,7 @@
 
 use htcdm::classad::{matches, parse_expr, Ad, Value};
 use htcdm::metrics::BinSeries;
-use htcdm::mover::{AdmissionConfig, AdmissionQueue, TransferRequest};
+use htcdm::mover::{AdmissionConfig, AdmissionQueue, PoolRouter, RouterPolicy, TransferRequest};
 use htcdm::netsim::NetSim;
 use htcdm::security::chacha;
 use htcdm::transfer::{ThrottlePolicy, TransferQueue};
@@ -298,6 +298,111 @@ fn prop_fair_share_never_starves() {
         }
         assert_eq!(total, owners * per_owner, "every owner fully served");
         assert!(remaining.values().all(|&r| r == 0), "nobody starved");
+    });
+}
+
+/// Owner-affinity routing is deterministic per owner: within a run an
+/// owner never changes submit node, and a fresh router (same node count)
+/// reproduces the identical owner → node mapping.
+#[test]
+fn prop_owner_affinity_deterministic_per_owner() {
+    check("owner-affinity-deterministic", 30, |g| {
+        let nodes = g.rng.range_u64(2, 6) as u32;
+        let n_owners = g.rng.range_usize(1, 6);
+        let make = || {
+            PoolRouter::sim(
+                nodes,
+                1,
+                AdmissionConfig::Throttle(htcdm::transfer::ThrottlePolicy::Disabled),
+                RouterPolicy::OwnerAffinity,
+            )
+        };
+        let mut a = make();
+        let mut b = make();
+        let mut homes: HashMap<String, usize> = HashMap::new();
+        for t in 0..60u32 {
+            let owner = format!("owner{}", g.rng.range_usize(0, n_owners - 1));
+            let adm_a = a.request(TransferRequest::new(t, owner.clone(), 1));
+            let adm_b = b.request(TransferRequest::new(t, owner.clone(), 1));
+            assert_eq!(adm_a.len(), 1);
+            let node = adm_a[0].node;
+            assert_eq!(node, adm_b[0].node, "two routers disagree for {owner}");
+            let prev = homes.entry(owner.clone()).or_insert(node);
+            assert_eq!(*prev, node, "{owner} moved node mid-run");
+            // Random churn must not perturb affinity.
+            if g.rng.next_f64() < 0.5 {
+                a.complete(t);
+                b.complete(t);
+            }
+        }
+    });
+}
+
+/// Least-loaded routing never routes to a node that has strictly more
+/// active transfers than some other live node: the chosen node is always
+/// at the minimum active count at decision time.
+#[test]
+fn prop_least_loaded_routes_to_minimum() {
+    check("least-loaded-minimum", 30, |g| {
+        let nodes = g.rng.range_u64(2, 5) as u32;
+        let mut router = PoolRouter::sim(
+            nodes,
+            1,
+            AdmissionConfig::Throttle(htcdm::transfer::ThrottlePolicy::Disabled),
+            RouterPolicy::LeastLoaded,
+        );
+        let mut inflight: Vec<u32> = Vec::new();
+        for t in 0..120u32 {
+            if g.rng.next_f64() < 0.6 || inflight.is_empty() {
+                let before = router.active_per_node();
+                let min = *before.iter().min().unwrap();
+                let adm = router.request(TransferRequest::new(t, "o", 1));
+                assert_eq!(adm.len(), 1, "unthrottled: admits immediately");
+                let chosen = adm[0].node;
+                assert_eq!(
+                    before[chosen], min,
+                    "routed to node {chosen} with {} active while another had {min}",
+                    before[chosen]
+                );
+                inflight.push(t);
+            } else {
+                let i = g.rng.range_usize(0, inflight.len() - 1);
+                router.complete(inflight.swap_remove(i));
+            }
+        }
+    });
+}
+
+/// Round-robin spread stays within ±1 across nodes regardless of
+/// completion churn (routing ignores load by design).
+#[test]
+fn prop_round_robin_spread_within_one() {
+    check("round-robin-spread", 30, |g| {
+        let nodes = g.rng.range_u64(2, 8) as u32;
+        let mut router = PoolRouter::sim(
+            nodes,
+            1,
+            AdmissionConfig::Throttle(htcdm::transfer::ThrottlePolicy::Disabled),
+            RouterPolicy::RoundRobin,
+        );
+        let n_reqs = g.rng.range_u64(10, 200) as u32;
+        let mut inflight: Vec<u32> = Vec::new();
+        for t in 0..n_reqs {
+            router.request(TransferRequest::new(t, "o", 1));
+            inflight.push(t);
+            if g.rng.next_f64() < 0.4 && !inflight.is_empty() {
+                let i = g.rng.range_usize(0, inflight.len() - 1);
+                router.complete(inflight.swap_remove(i));
+            }
+        }
+        let routed = router.router_stats().routed_per_node;
+        assert_eq!(routed.iter().sum::<u64>(), n_reqs as u64);
+        let max = routed.iter().max().unwrap();
+        let min = routed.iter().min().unwrap();
+        assert!(
+            max - min <= 1,
+            "round-robin drifted: {routed:?} over {nodes} nodes"
+        );
     });
 }
 

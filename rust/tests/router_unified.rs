@@ -1,0 +1,244 @@
+//! The tentpole acceptance tests for multi-submit-node sharding: one
+//! `PoolRouter` (N per-node `ShadowPool`s behind a routing strategy)
+//! drives BOTH fabrics — first the virtual-time simulator, then the real
+//! TCP loopback pool — with routing and admission statistics
+//! accumulating across the two runs (mirroring `mover_unified.rs`, one
+//! layer up).
+
+use htcdm::coordinator::engine::{Engine, EngineSpec};
+use htcdm::coordinator::{Experiment, Scenario};
+use htcdm::fabric::{run_real_pool, run_real_pool_router, RealPoolConfig};
+use htcdm::metrics::BinSeries;
+use htcdm::mover::{AdmissionConfig, PoolRouter, RouterPolicy, TransferRequest};
+use htcdm::netsim::topology::TestbedSpec;
+use htcdm::transfer::ThrottlePolicy;
+use htcdm::util::units::Bytes;
+
+fn tiny_sim_spec(n_jobs: u32) -> EngineSpec {
+    let mut tb = TestbedSpec::lan_paper();
+    tb.workers.truncate(2);
+    tb.workers[0].slots = 4;
+    tb.workers[1].slots = 4;
+    let mut spec = EngineSpec::paper(tb, ThrottlePolicy::Disabled);
+    spec.n_jobs = n_jobs;
+    spec.input_bytes = Bytes(50_000_000);
+    spec.runtime_median_s = 1.0;
+    spec.seed = 11;
+    spec
+}
+
+fn real_cfg(n_jobs: u32) -> RealPoolConfig {
+    RealPoolConfig {
+        n_jobs,
+        workers: 3,
+        input_bytes: 128 << 10,
+        output_bytes: 512,
+        chunk_words: 1024,
+        use_xla_engine: false,
+        passphrase: "router-unified".into(),
+        ..RealPoolConfig::default()
+    }
+}
+
+/// One router object serves the simulator and then the real fabric; the
+/// same routing strategy and per-node policies gate both, every job
+/// lands on exactly one node's shard, and the multi-node run moves the
+/// same aggregate bytes as the single-node baseline.
+#[test]
+fn same_router_object_drives_sim_and_real_fabric() {
+    let sim_jobs = 24u32;
+    let real_jobs = 8u32;
+    let policy = AdmissionConfig::FairShare { limit: 4 };
+    let router = PoolRouter::sim(2, 2, policy.clone(), RouterPolicy::RoundRobin);
+    assert_eq!(router.node_count(), 2);
+    assert_eq!(router.shard_count(), 4, "2 nodes × 2 shards");
+
+    // Phase 1: the simulated fabric (fluid flows over a 2-submit-NIC
+    // testbed) drives routing + admission through the router.
+    let mut spec = tiny_sim_spec(sim_jobs);
+    spec.n_owners = 3; // fair-share has owners to rotate between
+    let result = Engine::with_router(spec, router).run().unwrap();
+    assert_eq!(result.schedd.completed_count(), sim_jobs as usize);
+    assert_eq!(result.mover.total_admitted, sim_jobs as u64);
+    assert!(result.mover.peak_active <= 8, "limit 4 per node × 2 nodes");
+    assert_eq!(result.monitors.len(), 2, "one NIC monitor per submit node");
+    // Every job was routed to exactly one node: per-node routing counts
+    // partition the burst.
+    assert_eq!(
+        result.router.routed_per_node.iter().sum::<u64>(),
+        sim_jobs as u64
+    );
+    assert_eq!(
+        result.router.routed_per_node,
+        vec![sim_jobs as u64 / 2; 2],
+        "round-robin halves the burst"
+    );
+
+    // Extract the very same router object from the sim schedd.
+    let mut schedd = result.schedd;
+    let router = schedd.take_router();
+    assert_eq!(router.stats().total_admitted, sim_jobs as u64);
+
+    // Single-node baseline on the real fabric: the aggregate bytes the
+    // multi-node run must match.
+    let baseline = run_real_pool(real_cfg(real_jobs)).unwrap();
+    assert_eq!(baseline.errors, 0);
+    assert_eq!(
+        baseline.total_payload_bytes,
+        real_jobs as u64 * (128 << 10) as u64
+    );
+
+    // Phase 2: the real TCP fabric — one file server per submit node —
+    // moves sealed bytes through the same router (engines spawn on
+    // demand, routing state carries over).
+    let (report, router) = run_real_pool_router(&real_cfg(real_jobs), router).unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.jobs_completed, real_jobs);
+    assert_eq!(
+        report.total_payload_bytes, baseline.total_payload_bytes,
+        "scale-out run moves exactly the single-node baseline's bytes"
+    );
+    assert_eq!(report.bytes_served_per_node.len(), 2);
+    assert_eq!(
+        report.bytes_served_per_node.iter().sum::<u64>(),
+        baseline.total_payload_bytes,
+        "the two file servers partition the dataset"
+    );
+
+    // The SAME router object accounted for both fabrics.
+    let stats = router.stats();
+    assert_eq!(
+        stats.total_admitted,
+        (sim_jobs + real_jobs) as u64,
+        "admissions accumulated across sim and real runs"
+    );
+    assert_eq!(stats.released_without_active, 0);
+    assert_eq!(stats.shard_failed, 0);
+    // Exactly-one-shard invariant: per-shard admissions partition the
+    // combined burst (no job double-routed, none lost).
+    assert_eq!(stats.admitted_per_shard.len(), 4);
+    assert_eq!(
+        stats.admitted_per_shard.iter().sum::<u64>(),
+        (sim_jobs + real_jobs) as u64,
+        "every transfer from both fabrics landed on exactly one shard"
+    );
+    let rstats = router.router_stats();
+    assert_eq!(
+        rstats.routed_per_node.iter().sum::<u64>(),
+        (sim_jobs + real_jobs) as u64
+    );
+}
+
+/// Acceptance: an `n_submit_nodes = 4` sim scenario emits per-submit-node
+/// NIC series whose element-wise sum equals the aggregate series.
+#[test]
+fn multi_submit_4_per_node_series_sum_to_aggregate() {
+    let mut spec = Scenario::LanMultiSubmit4.spec();
+    spec.n_jobs = 48;
+    spec.input_bytes = Bytes(50_000_000);
+    spec.testbed.monitor_bin = htcdm::util::units::SimTime::from_secs(5);
+    let report = Experiment::custom("multi-submit-4-accept", spec)
+        .run()
+        .unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.n_submit_nodes, 4);
+    assert_eq!(report.per_node_series.len(), 4);
+
+    let summed = BinSeries::sum(&report.per_node_series);
+    let agg = report.series.bins();
+    let per = summed.bins();
+    assert_eq!(agg.len(), per.len(), "same bin count");
+    for (i, ((_, a), (_, b))) in agg.iter().zip(per.iter()).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-6,
+            "bin {i}: aggregate {a} != per-node sum {b}"
+        );
+    }
+    // And the series carry real traffic: all input bytes crossed some
+    // submit NIC.
+    assert!(summed.total_bytes() >= 48.0 * 50_000_000.0);
+    // Each of the 4 nodes carried a share of the burst.
+    for (node, s) in report.per_node_series.iter().enumerate() {
+        assert!(s.total_bytes() > 0.0, "node {node} idle");
+    }
+}
+
+/// Failure path: poison one submit node mid-burst; the router re-routes
+/// its waiting queue AND its in-flight transfers to the survivor, the
+/// burst drains without deadlock, and the failure is counted.
+#[test]
+fn failed_node_drains_to_survivors_mid_burst() {
+    let mut router = PoolRouter::sim(
+        2,
+        1,
+        AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(3)),
+        RouterPolicy::LeastLoaded,
+    );
+    let n_jobs = 30u32;
+    let mut admitted: Vec<u32> = Vec::new();
+    for t in 0..n_jobs {
+        admitted.extend(router.request(TransferRequest::new(t, "o", 1000)).iter().map(|a| a.ticket));
+    }
+    assert_eq!(router.active(), 6, "3 per node");
+
+    // Mid-burst: complete a few, then node 0 dies.
+    let mut completed = 0u32;
+    for _ in 0..4 {
+        let t = admitted.pop().expect("admitted transfers exist");
+        completed += 1;
+        admitted.extend(router.complete(t).iter().map(|a| a.ticket));
+    }
+    let rescued = router.fail_node(0);
+    // Node 0's formerly-admitted transfers are now *waiting* on node 1;
+    // only tickets still holding a shard are in flight.
+    admitted.retain(|&t| router.global_shard_of(t).is_some());
+    admitted.extend(rescued.iter().map(|a| a.ticket));
+    assert_eq!(router.stats().shard_failed, 1);
+
+    // Drain to completion on the survivor — bounded, no deadlock.
+    let mut guard = 0;
+    while completed < n_jobs {
+        guard += 1;
+        assert!(guard < 1000, "burst deadlocked after node failure");
+        let t = admitted.pop().expect("no admitted transfer while jobs remain");
+        completed += 1;
+        for a in router.complete(t) {
+            assert_eq!(a.node, 1, "survivor serves the re-routed backlog");
+            admitted.push(a.ticket);
+        }
+    }
+    assert_eq!(completed, n_jobs, "every job finished despite the dead node");
+    assert_eq!(router.active(), 0);
+    assert_eq!(router.waiting(), 0);
+    assert_eq!(router.stats().released_without_active, 0);
+}
+
+/// Slow scale-out e2e (CI's `--ignored` tier): sweep submit-node counts
+/// on the real fabric; every width moves the identical aggregate bytes
+/// and partitions the burst cleanly.
+#[test]
+#[ignore = "slower e2e sweep; run with cargo test --release -- --ignored"]
+fn router_scaleout_e2e_sweep() {
+    let total_bytes = |jobs: u32, sz: usize| jobs as u64 * sz as u64;
+    let mut baseline = None;
+    for nodes in [1u32, 2, 4] {
+        let mut cfg = real_cfg(16);
+        cfg.input_bytes = 1 << 20;
+        cfg.workers = 4;
+        cfg.n_submit_nodes = nodes;
+        cfg.router = RouterPolicy::RoundRobin;
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0, "{nodes}-node run had transfer errors");
+        assert_eq!(r.jobs_completed, 16);
+        assert_eq!(r.total_payload_bytes, total_bytes(16, 1 << 20));
+        assert_eq!(r.router.routed_per_node.len(), nodes as usize);
+        assert_eq!(r.router.routed_per_node.iter().sum::<u64>(), 16);
+        let spread = r.router.routed_per_node.iter().max().unwrap()
+            - r.router.routed_per_node.iter().min().unwrap();
+        assert!(spread <= 1, "round-robin spread {spread} > 1");
+        match baseline {
+            None => baseline = Some(r.total_payload_bytes),
+            Some(b) => assert_eq!(r.total_payload_bytes, b, "bytes match the 1-node baseline"),
+        }
+    }
+}
