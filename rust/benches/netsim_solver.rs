@@ -4,6 +4,8 @@
 //! departure (~20k times for 10k jobs). This bench measures solver cost vs
 //! concurrent flow count and the end-to-end events/sec of the engine.
 //! Run: cargo bench --bench netsim_solver
+//! CI smoke: cargo bench --bench netsim_solver -- --smoke
+//! (one solver point, single iteration, 1/100-scale engine run)
 
 use htcdm::coordinator::engine::EngineSpec;
 use htcdm::coordinator::Experiment;
@@ -14,9 +16,15 @@ use htcdm::util::units::{Bytes, Gbps};
 use htcdm::util::Prng;
 
 fn main() -> anyhow::Result<()> {
+    let smoke =
+        std::env::args().any(|a| a == "--smoke") || std::env::var_os("BENCH_SMOKE").is_some();
+    if smoke {
+        println!("[smoke mode: single-point, single-iteration pass]");
+    }
     println!("=== netsim max-min solver scaling ===");
     println!("  flows   links   solve time");
-    for &nflows in &[50usize, 200, 800, 3200] {
+    let flow_sweep: &[usize] = if smoke { &[50] } else { &[50, 200, 800, 3200] };
+    for &nflows in flow_sweep {
         let mut net = NetSim::new();
         let mut links = Vec::new();
         for i in 0..10 {
@@ -31,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         }
         // Force repeated re-solves by toggling one link's capacity.
         let t0 = std::time::Instant::now();
-        let iters = 200;
+        let iters = if smoke { 1 } else { 200 };
         for i in 0..iters {
             net.set_capacity(links[0], Gbps(100.0 - (i % 2) as f64));
             net.resolve();
@@ -43,14 +51,19 @@ fn main() -> anyhow::Result<()> {
     println!("\n=== end-to-end engine throughput (paper-scale fig1 run) ===");
     let mut spec = EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled);
     spec.input_bytes = Bytes(2_000_000_000);
+    if smoke {
+        spec.n_jobs = 100;
+    }
+    let n_jobs = spec.n_jobs as f64;
     let t0 = std::time::Instant::now();
     let r = Experiment::custom("fig1-perf", spec).run()?;
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "  10k jobs, {:.0} TB virtual traffic simulated in {:.2} s wall ({:.0} jobs/s)",
-        10_000.0 * 2e9 / 1e12,
+        "  {:.0} jobs, {:.1} TB virtual traffic simulated in {:.2} s wall ({:.0} jobs/s)",
+        n_jobs,
+        n_jobs * 2e9 / 1e12,
         wall,
-        10_000.0 / wall
+        n_jobs / wall
     );
     println!("  sustained {:.1} Gbps, makespan {:.1} min", r.sustained_gbps(), r.makespan.as_mins_f64());
     Ok(())

@@ -17,6 +17,8 @@
 //!   the paper's single submit node.
 //!
 //! Run: cargo bench --bench queue_ablation
+//! CI smoke: cargo bench --bench queue_ablation -- --smoke
+//! (single-iteration, 1/100-scale pass so the bench can't bit-rot)
 
 use htcdm::coordinator::engine::EngineSpec;
 use htcdm::coordinator::{Experiment, Scenario};
@@ -25,10 +27,23 @@ use htcdm::mover::{AdmissionConfig, RouterPolicy};
 use htcdm::netsim::topology::TestbedSpec;
 use htcdm::transfer::ThrottlePolicy;
 
+/// `--smoke` (or `BENCH_SMOKE=1`): shrink every sweep to a single cheap
+/// point so CI can execute the bench end-to-end on each PR.
+fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke") || std::env::var_os("BENCH_SMOKE").is_some()
+}
+
 fn main() -> anyhow::Result<()> {
+    let smoke = smoke_mode();
+    let sim_scale = if smoke { 100 } else { 1 };
+    if smoke {
+        println!("[smoke mode: 1/100-scale sims, single-point sweeps]");
+    }
     println!("=== §III ablation: file-transfer queue policies (10k x 2 GB LAN) ===");
-    let tuned = Experiment::scenario(Scenario::LanPaper).run()?;
-    let dflt = Experiment::scenario(Scenario::LanDefaultQueue).run()?;
+    let tuned = Experiment::scenario(Scenario::LanPaper).scaled(sim_scale).run()?;
+    let dflt = Experiment::scenario(Scenario::LanDefaultQueue)
+        .scaled(sim_scale)
+        .run()?;
     println!("{}", tuned.table_row(Some(90.0), Some(32.0)));
     println!("{}", dflt.table_row(None, Some(64.0)));
     println!(
@@ -37,12 +52,15 @@ fn main() -> anyhow::Result<()> {
     );
     println!("\n  concurrency-cap sweep (MaxConcurrent override):");
     println!("  cap    sustained   makespan    peak-active");
-    for cap in [10u32, 20, 36, 50, 100, 200] {
+    let caps: &[u32] = if smoke { &[36] } else { &[10, 20, 36, 50, 100, 200] };
+    for &cap in caps {
         let spec = EngineSpec::paper(
             TestbedSpec::lan_paper(),
             ThrottlePolicy::MaxConcurrent(cap),
         );
-        let r = Experiment::custom(&format!("cap{cap}"), spec).run()?;
+        let r = Experiment::custom(&format!("cap{cap}"), spec)
+            .scaled(sim_scale)
+            .run()?;
         println!(
             "  {:>4}   {:>6.1} Gbps  {:>6.1} min  {:>4}",
             cap,
@@ -66,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     ];
     for policy in policies {
         let mut e = Experiment::scenario(Scenario::LanPaper)
-            .scaled(10)
+            .scaled(10.max(sim_scale))
             .with_policy(policy);
         e.spec.n_owners = 4;
         let r = e.run()?;
@@ -85,11 +103,12 @@ fn main() -> anyhow::Result<()> {
     println!("  shards   goodput     wall      per-shard jobs");
     let mut baseline_gbps = 0.0;
     let mut best_gbps: f64 = 0.0;
-    for shards in [1u32, 2, 4, 8] {
+    let shard_sweep: &[u32] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    for &shards in shard_sweep {
         let cfg = RealPoolConfig {
-            n_jobs: 32,
+            n_jobs: if smoke { 8 } else { 32 },
             workers: 8,
-            input_bytes: 8 << 20,
+            input_bytes: if smoke { 1 << 20 } else { 8 << 20 },
             output_bytes: 4096,
             use_xla_engine: false,
             passphrase: "ablation".into(),
@@ -120,11 +139,12 @@ fn main() -> anyhow::Result<()> {
     println!("  nodes   goodput     wall      per-node jobs");
     let mut single_node_gbps = 0.0;
     let mut best_scaleout: f64 = 0.0;
-    for nodes in [1u32, 2, 4, 8] {
+    let node_sweep: &[u32] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    for &nodes in node_sweep {
         let cfg = RealPoolConfig {
-            n_jobs: 32,
+            n_jobs: if smoke { 8 } else { 32 },
             workers: 8,
-            input_bytes: 8 << 20,
+            input_bytes: if smoke { 1 << 20 } else { 8 << 20 },
             output_bytes: 4096,
             use_xla_engine: false,
             passphrase: "scale-out".into(),

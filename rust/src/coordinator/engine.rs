@@ -11,6 +11,7 @@
 use crate::daemons::{Collector, Negotiator, Schedd, SlotId, Startd};
 use crate::jobs::JobSpec;
 use crate::metrics::BinSeries;
+use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan};
 use crate::mover::{
     AdmissionConfig, MoverStats, PoolRouter, RouterPolicy, RouterStats, ShadowPool,
 };
@@ -49,6 +50,11 @@ pub struct EngineSpec {
     /// Distinct job owners, round-robined over procs (1 = the paper's
     /// single benchmark user; >1 makes fair-share scheduling visible).
     pub n_owners: u32,
+    /// Fault-injection schedule (virtual-time seconds): submit nodes are
+    /// killed / recovered / degraded mid-burst, with the router draining,
+    /// re-admitting and work-stealing exactly as on the real fabric.
+    /// Empty = the paper's fault-free runs.
+    pub faults: FaultPlan,
     pub seed: u64,
     /// Negotiator cycle interval (HTCondor default: 60 s).
     pub negotiation_interval_s: f64,
@@ -69,6 +75,7 @@ impl EngineSpec {
             n_submit_nodes: 1,
             router: RouterPolicy::LeastLoaded,
             n_owners: 1,
+            faults: FaultPlan::default(),
             seed: 20210901, // eScience 2021
             negotiation_interval_s: 60.0,
         }
@@ -87,6 +94,8 @@ impl EngineSpec {
     /// SHADOW_POOL_SIZE = 4
     /// N_SUBMIT_NODES = 4
     /// ROUTER_POLICY = ROUND_ROBIN
+    /// FAULT_PLAN = kill:1@300; recover:1@900
+    /// STEAL_THRESHOLD = 4
     /// ```
     pub fn apply_config(
         &mut self,
@@ -110,6 +119,9 @@ impl EngineSpec {
         if cfg.raw("ROUTER_POLICY").is_some() {
             self.router = RouterPolicy::from_config(cfg)?;
         }
+        if cfg.raw("FAULT_PLAN").is_some() || cfg.raw("STEAL_THRESHOLD").is_some() {
+            self.faults = FaultPlan::from_config(cfg)?;
+        }
         // Heterogeneous submit fleets: SUBMIT_NODE_GBPS = 100, 100, 25
         // sets per-node NIC capacity (topology AND router weights).
         if let Some(raw) = cfg.raw("SUBMIT_NODE_GBPS") {
@@ -131,12 +143,18 @@ impl EngineSpec {
 enum Ev {
     /// Negotiation cycle.
     Negotiate,
-    /// An admitted transfer's connection setup finished; put it on the wire.
-    StartInputFlow { proc_: u32 },
+    /// An admitted transfer's connection setup finished; put it on the
+    /// wire. The epoch stamps one routing decision: a node failure
+    /// re-routes the proc and bumps its epoch, so stale starts (scheduled
+    /// before the failure) are dropped instead of double-starting.
+    StartInputFlow { proc_: u32, epoch: u32 },
     /// Job payload finished executing on its slot.
     RunDone { proc_: u32 },
     /// Background-traffic step on the shared backbone.
     BgUpdate,
+    /// Injected fault from the spec's `FaultPlan` (index into the sorted
+    /// event list).
+    Fault { idx: usize },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -166,10 +184,12 @@ pub struct EngineResult {
     pub total_input_bytes: f64,
     pub errors: u64,
     /// Aggregate data-mover accounting (per-shard routing node-major,
-    /// admission totals, failed-node count).
+    /// admission totals, failed/recovered-node and work-stealing counts).
     pub mover: MoverStats,
     /// Per-submit-node router accounting.
     pub router: RouterStats,
+    /// Applied fault events (empty for fault-free runs).
+    pub chaos: ChaosTimeline,
 }
 
 pub struct Engine {
@@ -184,10 +204,19 @@ pub struct Engine {
     /// proc -> assigned slot (claims).
     assignment: HashMap<u32, SlotId>,
     /// proc -> submit node serving its sandbox (recorded at admission,
-    /// dropped once the output sandbox goes on the wire).
+    /// dropped once the output sandbox goes on the wire, or when the
+    /// node is killed — outputs then return through a survivor).
     node_by_proc: HashMap<u32, usize>,
+    /// proc -> routing epoch: bumped on every (re-)admission so pending
+    /// `StartInputFlow` events from a superseded routing are stale.
+    epoch_by_proc: HashMap<u32, u32>,
     flows: HashMap<FlowId, FlowCtx>,
     bg_nominal_gbps: f64,
+    /// The spec's fault plan, sorted by injection time (`Ev::Fault`
+    /// carries an index into this).
+    faults: Vec<FaultEvent>,
+    /// Applied-fault timeline for the report.
+    chaos: ChaosTimeline,
 }
 
 impl Engine {
@@ -240,6 +269,7 @@ impl Engine {
             .background()
             .map(|(_, _, _, _, nominal)| nominal)
             .unwrap_or(0.0);
+        let faults = spec.faults.sorted();
         Engine {
             rng: Prng::new(spec.seed),
             spec,
@@ -251,8 +281,11 @@ impl Engine {
             events: EventQueue::new(),
             assignment: HashMap::new(),
             node_by_proc: HashMap::new(),
+            epoch_by_proc: HashMap::new(),
             flows: HashMap::new(),
             bg_nominal_gbps,
+            faults,
+            chaos: ChaosTimeline::default(),
         }
     }
 
@@ -290,6 +323,13 @@ impl Engine {
         self.schedd
             .submit_transaction(self.job_specs(), SimTime::ZERO);
         self.events.push(SimTime::ZERO, Ev::Negotiate);
+        if let Err(e) = self.spec.faults.validate(self.schedd.mover.node_count()) {
+            bail!("invalid fault plan: {e}");
+        }
+        for (idx, ev) in self.faults.iter().enumerate() {
+            self.events
+                .push(SimTime::from_secs_f64(ev.at()), Ev::Fault { idx });
+        }
         if self.tb.background().is_some() {
             self.events.push(
                 SimTime::from_secs_f64(calib::WAN_BG_STEP_S),
@@ -365,15 +405,17 @@ impl Engine {
             errors: 0,
             mover,
             router,
+            chaos: self.chaos,
         })
     }
 
     fn handle_event(&mut self, ev: Ev, t: SimTime) {
         match ev {
             Ev::Negotiate => self.do_negotiate(t),
-            Ev::StartInputFlow { proc_ } => self.start_input_flow(proc_, t),
+            Ev::StartInputFlow { proc_, epoch } => self.start_input_flow(proc_, epoch, t),
             Ev::RunDone { proc_ } => self.on_run_done(proc_, t),
             Ev::BgUpdate => self.do_bg_update(t),
+            Ev::Fault { idx } => self.apply_fault(idx, t),
         }
     }
 
@@ -418,25 +460,38 @@ impl Engine {
 
     /// Record each admitted transfer's submit node and schedule its
     /// connection setup — the single bookkeeping point for every
-    /// admission the router returns.
+    /// admission the router returns. Each (re-)admission bumps the
+    /// proc's routing epoch so starts scheduled by a superseded routing
+    /// (the node died during connection setup) fall stale.
     fn start_routed(&mut self, routed: Vec<crate::mover::Routed>, t: SimTime) {
         for r in routed {
             self.node_by_proc.insert(r.ticket, r.node);
-            self.schedule_input_start(r.ticket, t);
+            let epoch = {
+                let e = self.epoch_by_proc.entry(r.ticket).or_insert(0);
+                *e += 1;
+                *e
+            };
+            self.schedule_input_start(r.ticket, epoch, t);
         }
     }
 
     /// Admitted by the transfer queue: connection setup (auth handshake +
     /// slow start) delays the wire by the path's setup latency.
-    fn schedule_input_start(&mut self, proc_: u32, t: SimTime) {
+    fn schedule_input_start(&mut self, proc_: u32, epoch: u32, t: SimTime) {
         let setup = self.tb.path_profile().setup_latency_s();
         self.events.push(
             t + SimTime::from_secs_f64(setup),
-            Ev::StartInputFlow { proc_ },
+            Ev::StartInputFlow { proc_, epoch },
         );
     }
 
-    fn start_input_flow(&mut self, proc_: u32, t: SimTime) {
+    fn start_input_flow(&mut self, proc_: u32, epoch: u32, t: SimTime) {
+        // Stale start: the proc's submit node died after this event was
+        // scheduled and the router re-routed it (a fresh start event is
+        // scheduled when its new node admits it).
+        if self.epoch_by_proc.get(&proc_) != Some(&epoch) {
+            return;
+        }
         let slot = self.assignment[&proc_];
         let node = self.node_by_proc[&proc_];
         self.schedd.input_started(proc_, t);
@@ -494,10 +549,13 @@ impl Engine {
         let slot = self.assignment[&proc_];
         // Output sandbox flows worker -> its submit node (not queued:
         // HTCondor's download throttle exists but outputs here are 4 KB).
-        let node = self
-            .node_by_proc
-            .remove(&proc_)
-            .expect("routed proc has a submit node");
+        // If that node was killed while the payload ran, the (tiny)
+        // output returns through a survivor instead — the sim analogue of
+        // workers retrying through the router.
+        let node = match self.node_by_proc.remove(&proc_) {
+            Some(n) => n,
+            None => self.schedd.mover.first_live_node().unwrap_or(0),
+        };
         let path = self.tb.path_from_worker(node, slot.worker as usize);
         let cap = self.tb.path_profile().stream_cap_bps();
         let bytes = self.schedd.job(proc_).spec.output_bytes.0.max(1) as f64;
@@ -520,6 +578,71 @@ impl Engine {
             self.events
                 .push(t + SimTime::from_secs_f64(step), Ev::BgUpdate);
         }
+    }
+
+    /// Inject one fault event: engine-side teardown/restore first (flows,
+    /// NIC rates, job states), then the router-side half that is shared
+    /// verbatim with the real fabric (`chaos::apply_to_router`), then
+    /// start whatever the surviving/recovered nodes admitted.
+    fn apply_fault(&mut self, idx: usize, t: SimTime) {
+        let ev = self.faults[idx];
+        let node = ev.node();
+        let bytes_before = self.tb.net.link(self.tb.submit_txs[node]).bytes_carried as u64;
+        match ev {
+            FaultEvent::KillNode { .. } => {
+                // Everything the dead node was serving is torn down
+                // BEFORE the router re-routes: in-flight input flows
+                // abort (partial bytes stay accounted and the jobs
+                // return to TransferQueued), procs still in connection
+                // setup lose their pending start via the epoch bump, and
+                // running jobs' outputs will return through a survivor.
+                let procs: Vec<u32> = self
+                    .node_by_proc
+                    .iter()
+                    .filter(|&(_, &n)| n == node)
+                    .map(|(&p, _)| p)
+                    .collect();
+                for &p in &procs {
+                    *self.epoch_by_proc.entry(p).or_insert(0) += 1;
+                    self.node_by_proc.remove(&p);
+                }
+                let aborted: Vec<FlowId> = self
+                    .flows
+                    .iter()
+                    .filter(|(_, ctx)| {
+                        matches!(ctx.kind, FlowKind::Input) && procs.contains(&ctx.proc_)
+                    })
+                    .map(|(&fid, _)| fid)
+                    .collect();
+                for fid in aborted {
+                    let ctx = self.flows.remove(&fid).expect("aborted flow has context");
+                    self.tb.net.finish_flow(fid);
+                    self.schedd.input_aborted(ctx.proc_, t);
+                }
+            }
+            FaultEvent::RecoverNode { .. } => {
+                // Restore the node's full NIC rate (undoes DegradeNic).
+                let gbps = self.tb.spec.submit_node_nic_gbps(node);
+                self.tb.set_submit_nic_gbps(node, gbps);
+            }
+            FaultEvent::DegradeNic { gbps, .. } => {
+                self.tb.set_submit_nic_gbps(node, gbps);
+            }
+        }
+        let admitted = apply_to_router(
+            &ev,
+            &mut self.schedd.mover,
+            self.spec.faults.steal_threshold,
+        );
+        self.chaos.record(
+            node,
+            ev.label(),
+            ev.at(),
+            t.as_secs_f64(),
+            admitted.len(),
+            bytes_before,
+        );
+        self.start_routed(admitted, t);
     }
 }
 
@@ -545,6 +668,7 @@ mod tests {
             n_submit_nodes: 1,
             router: RouterPolicy::LeastLoaded,
             n_owners: 1,
+            faults: FaultPlan::default(),
             seed: 1,
             negotiation_interval_s: 60.0,
         }
@@ -707,11 +831,15 @@ mod tests {
              SHADOW_POOL_SIZE = 2\n\
              N_SUBMIT_NODES = 2\n\
              ROUTER_POLICY = ROUND_ROBIN\n\
-             SUBMIT_NODE_GBPS = 100, 25\n",
+             SUBMIT_NODE_GBPS = 100, 25\n\
+             FAULT_PLAN = kill:1@5; recover:1@20\n\
+             STEAL_THRESHOLD = 3\n",
         )
         .unwrap();
         let mut spec = tiny_spec();
         spec.apply_config(&cfg).unwrap();
+        assert_eq!(spec.faults.events.len(), 2);
+        assert_eq!(spec.faults.steal_threshold, Some(3));
         assert_eq!(spec.n_jobs, 12);
         assert_eq!(spec.input_bytes, Bytes(10_000_000));
         assert_eq!(spec.n_owners, 3);

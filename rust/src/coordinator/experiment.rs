@@ -16,7 +16,9 @@
 
 use super::engine::{Engine, EngineResult, EngineSpec};
 use crate::metrics::BinSeries;
-use crate::mover::{AdmissionConfig, MoverStats, RouterPolicy, RouterStats};
+use crate::mover::{
+    AdmissionConfig, ChaosTimeline, FaultPlan, MoverStats, RouterPolicy, RouterStats,
+};
 use crate::netsim::topology::TestbedSpec;
 use crate::transfer::ThrottlePolicy;
 use crate::util::units::{Gbps, SimTime};
@@ -45,6 +47,13 @@ pub enum Scenario {
     /// The scale-out scenario the paper motivates: the same burst split
     /// across 4 submit nodes (4 × 100 Gbps NICs) by a pool router.
     LanMultiSubmit4,
+    /// Heterogeneous submit fleet: 2 × 100 Gbps + 2 × 25 Gbps NICs,
+    /// routed weighted-by-capacity (the ROADMAP's mixed-fleet preset).
+    Hetero25100,
+    /// Chaos scenario: the 4-node scale-out pool with submit node 1
+    /// killed mid-burst and recovered later; the router drains, retries
+    /// and work-steals so the burst finishes at line rate.
+    KillRecover4,
 }
 
 impl Scenario {
@@ -57,6 +66,8 @@ impl Scenario {
             Scenario::LanFairShare => "fair-share",
             Scenario::LanSharded4 => "sharded-4",
             Scenario::LanMultiSubmit4 => "multi-submit-4",
+            Scenario::Hetero25100 => "hetero-25-100",
+            Scenario::KillRecover4 => "kill-recover-4",
         }
     }
 
@@ -97,6 +108,28 @@ impl Scenario {
                 spec.router = RouterPolicy::RoundRobin;
                 spec
             }
+            Scenario::Hetero25100 => {
+                let mut spec =
+                    EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled);
+                spec.n_submit_nodes = 4;
+                spec.testbed.submit_node_gbps = vec![100.0, 100.0, 25.0, 25.0];
+                spec.router = RouterPolicy::WeightedByCapacity;
+                spec
+            }
+            Scenario::KillRecover4 => {
+                let mut spec =
+                    EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled);
+                spec.n_submit_nodes = 4;
+                spec.router = RouterPolicy::LeastLoaded;
+                // Node 1 dies 5 minutes into the ~32-minute burst and
+                // returns 10 minutes later; recovered/idle nodes steal
+                // queued work beyond a 4-deep imbalance.
+                spec.faults = FaultPlan::default()
+                    .kill(1, 300.0)
+                    .recover(1, 900.0)
+                    .with_steal_threshold(4);
+                spec
+            }
         }
     }
 
@@ -108,7 +141,11 @@ impl Scenario {
             Scenario::WanPaper => Some(60.0),
             Scenario::LanDefaultQueue => None,
             Scenario::LanVpn => Some(25.0),
-            Scenario::LanFairShare | Scenario::LanSharded4 | Scenario::LanMultiSubmit4 => None,
+            Scenario::LanFairShare
+            | Scenario::LanSharded4
+            | Scenario::LanMultiSubmit4
+            | Scenario::Hetero25100
+            | Scenario::KillRecover4 => None,
         }
     }
 
@@ -118,7 +155,11 @@ impl Scenario {
             Scenario::WanPaper => Some(49.0),
             Scenario::LanDefaultQueue => Some(64.0),
             Scenario::LanVpn => None,
-            Scenario::LanFairShare | Scenario::LanSharded4 | Scenario::LanMultiSubmit4 => None,
+            Scenario::LanFairShare
+            | Scenario::LanSharded4
+            | Scenario::LanMultiSubmit4
+            | Scenario::Hetero25100
+            | Scenario::KillRecover4 => None,
         }
     }
 }
@@ -205,10 +246,14 @@ pub struct Report {
     /// Pool-router strategy label (meaningful when `n_submit_nodes > 1`).
     pub router_policy: String,
     /// Aggregate data-mover accounting (per-shard vectors node-major,
-    /// spurious completes, failed-node count).
+    /// spurious completes, failed/recovered-node and work-steal counts).
     pub mover: MoverStats,
     /// Per-submit-node router accounting (routing decisions and bytes).
     pub router: RouterStats,
+    /// Per-node fault timeline: every applied `FaultPlan` event with its
+    /// planned/applied instants, the transfers it re-admitted and the
+    /// bytes the node had served (empty for fault-free runs).
+    pub chaos: ChaosTimeline,
     /// Aggregate submit-NIC throughput binned like the paper's
     /// monitoring (5 min).
     pub series_5min: BinSeries,
@@ -264,6 +309,7 @@ impl Report {
             router_policy: spec.router.label().to_string(),
             mover: r.mover,
             router: r.router,
+            chaos: r.chaos,
             series_5min,
             series: r.monitor,
             per_node_series: r.monitors,
@@ -335,6 +381,55 @@ mod tests {
         assert_eq!(ms.n_submit_nodes, 4);
         assert_eq!(ms.router, RouterPolicy::RoundRobin);
         assert_eq!(ms.shadows, 1, "per-node pools stay single-shard");
+
+        let het = Scenario::Hetero25100.spec();
+        assert_eq!(het.n_submit_nodes, 4);
+        assert_eq!(het.testbed.submit_node_gbps, vec![100.0, 100.0, 25.0, 25.0]);
+        assert_eq!(het.router, RouterPolicy::WeightedByCapacity);
+
+        let kr = Scenario::KillRecover4.spec();
+        assert_eq!(kr.n_submit_nodes, 4);
+        assert_eq!(kr.faults.events.len(), 2);
+        assert_eq!(kr.faults.steal_threshold, Some(4));
+        assert!(kr.faults.validate(4).is_ok());
+    }
+
+    /// ROADMAP calibration: on the mixed 25/100 Gbps fleet, routing
+    /// weighted by NIC capacity must beat round-robin's makespan —
+    /// round-robin drowns the 25 Gbps nodes in a burst their NICs can't
+    /// drain at full stream rate.
+    #[test]
+    fn hetero_weighted_beats_round_robin_makespan() {
+        let base = |router: RouterPolicy| {
+            let mut spec = Scenario::Hetero25100.spec();
+            // 200 simultaneous 200 MB transfers: under round-robin each
+            // 25 Gbps node carries 50 × 1.1 Gbps streams — 2.4× its NIC —
+            // while weighted 4:1 routing keeps every NIC under its rate.
+            spec.n_jobs = 200;
+            spec.input_bytes = Bytes(200_000_000);
+            spec.runtime_median_s = 0.6;
+            spec.testbed.monitor_bin = SimTime::from_secs(5);
+            spec.router = router;
+            spec
+        };
+        let weighted = Experiment::custom("hetero-weighted", base(RouterPolicy::WeightedByCapacity))
+            .run()
+            .unwrap();
+        let rr = Experiment::custom("hetero-rr", base(RouterPolicy::RoundRobin))
+            .run()
+            .unwrap();
+        assert_eq!(weighted.errors, 0);
+        assert_eq!(rr.errors, 0);
+        assert_eq!(weighted.mover.total_admitted, 200);
+        // 4:1 deficit round-robin: 80/80/20/20.
+        assert_eq!(weighted.router.routed_per_node, vec![80, 80, 20, 20]);
+        assert_eq!(rr.router.routed_per_node, vec![50, 50, 50, 50]);
+        assert!(
+            weighted.makespan < rr.makespan,
+            "weighted {} !< round-robin {}",
+            weighted.makespan,
+            rr.makespan
+        );
     }
 
     #[test]

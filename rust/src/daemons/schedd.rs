@@ -140,6 +140,18 @@ impl Schedd {
         self.log.record(t, id, EventKind::TransferInputBegan);
     }
 
+    /// The input transfer died with its submit node (fault injection):
+    /// the job returns to the transfer queue; the router re-admits it on
+    /// a survivor (the mover side is handled by `fail_node`, which sees
+    /// the ticket as in-flight and re-routes it).
+    pub fn input_aborted(&mut self, proc_: u32, t: SimTime) {
+        let job = &mut self.jobs[proc_ as usize];
+        debug_assert_eq!(job.state, JobState::TransferringInput);
+        job.state = JobState::TransferQueued;
+        let id = job.spec.id;
+        self.log.record(t, id, EventKind::TransferInputAborted);
+    }
+
     /// Transfer finished → job executes; frees a mover slot.
     /// Returns routed transfers that may START now.
     pub fn input_done(&mut self, proc_: u32, t: SimTime) -> Vec<Routed> {

@@ -24,6 +24,7 @@
 //! `benches/queue_ablation.rs` for both sweeps).
 
 use crate::jobs::JobSpec;
+use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan};
 use crate::mover::{
     AdmissionConfig, MoverStats, PoolRouter, RouterPolicy, RouterStats, ShadowPool,
     TransferRequest,
@@ -138,6 +139,11 @@ pub struct FileServer {
     thread: Option<std::thread::JoinHandle<()>>,
     pub bytes_served: Arc<AtomicU64>,
     pub outputs_received: Arc<AtomicU64>,
+    /// Live connection sockets (keyed by connection sequence, removed
+    /// when their serving thread finishes); [`FileServer::stop`] shuts
+    /// them down so a chaos kill looks like a node crash (mid-transfer
+    /// socket errors) rather than a graceful drain.
+    conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
 }
 
 impl FileServer {
@@ -160,10 +166,12 @@ impl FileServer {
         let stop = Arc::new(AtomicBool::new(false));
         let bytes_served = Arc::new(AtomicU64::new(0));
         let outputs_received = Arc::new(AtomicU64::new(0));
+        let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::new(Mutex::new(Vec::new()));
 
         let stop2 = stop.clone();
         let bytes2 = bytes_served.clone();
         let outputs2 = outputs_received.clone();
+        let conns2 = conns.clone();
         let thread = std::thread::Builder::new()
             .name("htcdm-fileserver".into())
             .spawn(move || {
@@ -173,11 +181,15 @@ impl FileServer {
                     match listener.accept() {
                         Ok((sock, _)) => {
                             conn_seq += 1;
+                            if let Ok(dup) = sock.try_clone() {
+                                conns2.lock().unwrap().push((conn_seq, dup));
+                            }
                             let files = files.clone();
                             let key = pool_key.clone();
                             let engines = engines.clone();
                             let bytes3 = bytes2.clone();
                             let outputs3 = outputs2.clone();
+                            let conns3 = conns2.clone();
                             let seq = conn_seq;
                             threads.push(std::thread::spawn(move || {
                                 let mut rng = Prng::new(0xF11E_5E17 ^ seq);
@@ -187,6 +199,10 @@ impl FileServer {
                                 ) {
                                     log::warn!("connection {seq}: {e:#}");
                                 }
+                                // Done serving: drop this connection's
+                                // kill handle so long bursts don't
+                                // accumulate open fds.
+                                conns3.lock().unwrap().retain(|(s, _)| *s != seq);
                             }));
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -209,11 +225,18 @@ impl FileServer {
             thread: Some(thread),
             bytes_served,
             outputs_received,
+            conns,
         })
     }
 
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        // Break in-flight connections so stopping mid-burst behaves like
+        // a node crash; at a normal end of run every socket is already
+        // drained and the list is empty.
+        for (_, c) in self.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
@@ -345,6 +368,13 @@ pub struct RealPoolConfig {
     /// (e.g. `[100.0, 25.0]`). Empty = uniform; otherwise must have
     /// `n_submit_nodes` entries.
     pub node_capacities: Vec<f64>,
+    /// Fault-injection schedule (wall-clock seconds from burst start):
+    /// `KillNode` crashes the node's file server mid-burst (in-flight
+    /// connections break; workers retry through the router),
+    /// `RecoverNode` restarts it on a fresh port and rebalances queued
+    /// work onto it, `DegradeNic` re-rates its routing weight. Empty =
+    /// fault-free.
+    pub faults: FaultPlan,
 }
 
 impl Default for RealPoolConfig {
@@ -362,6 +392,7 @@ impl Default for RealPoolConfig {
             n_submit_nodes: 1,
             router: RouterPolicy::LeastLoaded,
             node_capacities: Vec::new(),
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -381,9 +412,13 @@ pub struct RealPoolReport {
     pub mover: MoverStats,
     /// Per-submit-node router accounting.
     pub router: RouterStats,
-    /// Payload bytes each submit node's file server put on the wire
-    /// (index = node; sums to roughly `total_payload_bytes`).
+    /// Payload bytes each submit node's file servers put on the wire
+    /// (index = node; accumulated across a killed node's generations,
+    /// so it keeps growing after a recovery; sums to roughly
+    /// `total_payload_bytes` plus re-served partial transfers).
     pub bytes_served_per_node: Vec<u64>,
+    /// Per-node fault timeline (empty for fault-free runs).
+    pub chaos: ChaosTimeline,
 }
 
 /// Seal-engine factory for one shadow shard: the PJRT artifact when
@@ -468,6 +503,9 @@ pub fn run_real_pool_router(
 ) -> Result<(RealPoolReport, PoolRouter)> {
     let pool_key = PoolKey::from_passphrase(&cfg.passphrase);
     router.ensure_engines(shard_engine_factory(cfg.use_xla_engine));
+    if let Err(e) = cfg.faults.validate(router.node_count()) {
+        bail!("invalid fault plan: {e}");
+    }
     for node in 0..router.node_count() {
         if router.node_config(node).limit() == 0 {
             bail!(
@@ -514,16 +552,30 @@ pub fn run_real_pool_router(
         }
     );
 
-    let mut servers = Vec::with_capacity(router.node_count());
-    for node in 0..router.node_count() {
-        servers.push(FileServer::start(
+    // One file server per submit node. Chaos can crash and restart a
+    // node's server mid-burst, so servers live in shared slots and the
+    // address table is re-read by workers on every (re)connection.
+    let n_nodes = router.node_count();
+    let mut server_vec: Vec<Option<FileServer>> = Vec::with_capacity(n_nodes);
+    for node in 0..n_nodes {
+        server_vec.push(Some(FileServer::start(
             files.clone(),
             pool_key.clone(),
             router.handles(node),
             cfg.chunk_words,
-        )?);
+        )?));
     }
-    let addrs: Vec<std::net::SocketAddr> = servers.iter().map(|s| s.addr).collect();
+    let addrs: Arc<Mutex<Vec<std::net::SocketAddr>>> = Arc::new(Mutex::new(
+        server_vec
+            .iter()
+            .map(|s| s.as_ref().expect("just started").addr)
+            .collect(),
+    ));
+    let servers: Arc<Mutex<Vec<Option<FileServer>>>> = Arc::new(Mutex::new(server_vec));
+    // Bytes served per node, accumulated across server generations
+    // (a killed node's total carries over into its recovered server).
+    let served_totals: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n_nodes).map(|_| AtomicU64::new(0)).collect());
 
     let queue: Arc<Mutex<Vec<JobSpec>>> = Arc::new(Mutex::new(
         crate::workload::benchmark_burst(
@@ -545,6 +597,111 @@ pub fn run_real_pool_router(
     ));
 
     let t0 = std::time::Instant::now();
+    let chaos_log: Arc<Mutex<ChaosTimeline>> = Arc::new(Mutex::new(ChaosTimeline::default()));
+    let burst_done = Arc::new(AtomicBool::new(false));
+    let chaos_thread = if cfg.faults.is_empty() {
+        None
+    } else {
+        let events = cfg.faults.sorted();
+        let threshold = cfg.faults.steal_threshold;
+        let gate = gate.clone();
+        let servers = servers.clone();
+        let addrs = addrs.clone();
+        let served_totals = served_totals.clone();
+        let chaos_log = chaos_log.clone();
+        let burst_done = burst_done.clone();
+        let files = files.clone();
+        let key = pool_key.clone();
+        let chunk_words = cfg.chunk_words;
+        Some(
+            std::thread::Builder::new()
+                .name("htcdm-chaos".into())
+                .spawn(move || {
+                    for ev in events {
+                        // Wait for the event's wall-clock instant; give
+                        // up only on events still in the future when the
+                        // burst drains (an event whose time has arrived
+                        // always applies, so t=0 events never race the
+                        // workers).
+                        while t0.elapsed().as_secs_f64() < ev.at() {
+                            if burst_done.load(Ordering::Relaxed) {
+                                return;
+                            }
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        let node = ev.node();
+                        let mut bytes_before = served_totals[node].load(Ordering::Relaxed);
+                        // A recovering node's fresh file server must be
+                        // listening BEFORE the router routes to it again.
+                        // Recovering a node that never died is a no-op on
+                        // the router side — don't crash its healthy
+                        // server by replacing it.
+                        if matches!(ev, FaultEvent::RecoverNode { .. }) {
+                            let (handles, was_failed) = {
+                                let (lock, _) = &*gate;
+                                let g = lock.lock().unwrap();
+                                (g.router.handles(node), g.router.is_failed(node))
+                            };
+                            if was_failed {
+                                match FileServer::start(
+                                    files.clone(),
+                                    key.clone(),
+                                    handles,
+                                    chunk_words,
+                                ) {
+                                    Ok(server) => {
+                                        addrs.lock().unwrap()[node] = server.addr;
+                                        servers.lock().unwrap()[node] = Some(server);
+                                    }
+                                    Err(e) => {
+                                        log::error!(
+                                            "chaos: node {node} recovery failed to restart \
+                                             its file server: {e:#}"
+                                        );
+                                        continue;
+                                    }
+                                }
+                            }
+                        }
+                        // Router-side half, shared verbatim with the sim
+                        // engine: poison/drain, un-poison/re-route, or
+                        // re-rate, plus threshold work-stealing.
+                        let admitted = {
+                            let (lock, cv) = &*gate;
+                            let mut g = lock.lock().unwrap();
+                            let admitted = apply_to_router(&ev, &mut g.router, threshold);
+                            for a in &admitted {
+                                g.ready.insert(a.ticket, (a.node, a.shard));
+                            }
+                            cv.notify_all();
+                            admitted.len()
+                        };
+                        // A killed node's server crashes AFTER the router
+                        // is poisoned, so failing workers find their
+                        // tickets already re-routed when they retry.
+                        if matches!(ev, FaultEvent::KillNode { .. }) {
+                            let taken = servers.lock().unwrap()[node].take();
+                            if let Some(mut server) = taken {
+                                server.stop();
+                                let b = server.bytes_served.load(Ordering::Relaxed);
+                                served_totals[node].fetch_add(b, Ordering::Relaxed);
+                                bytes_before += b;
+                            }
+                        }
+                        chaos_log.lock().unwrap().record(
+                            node,
+                            ev.label(),
+                            ev.at(),
+                            t0.elapsed().as_secs_f64(),
+                            admitted,
+                            bytes_before,
+                        );
+                    }
+                })
+                .context("spawn chaos controller")?,
+        )
+    };
+
     let stats = Arc::new(Mutex::new((OnlineStats::new(), 0u64, 0u32))); // (times, bytes, errors)
     let mut worker_threads = Vec::new();
     for w in 0..cfg.workers {
@@ -564,9 +721,11 @@ pub fn run_real_pool_router(
 
                 // Routing + admission: request, then wait until some
                 // node's policy admits this ticket (it may admit other
-                // tickets first).
+                // tickets first). A ticket stranded with every node dead
+                // gives up after ~30 s instead of wedging the pool —
+                // same backstop as the mid-transfer retry path below.
                 let (lock, cv) = &*gate;
-                let (node, shard) = {
+                let admission = {
                     let mut g = lock.lock().unwrap();
                     let req =
                         TransferRequest::new(ticket, job.owner.clone(), job.input_bytes.0);
@@ -574,16 +733,112 @@ pub fn run_real_pool_router(
                         g.ready.insert(a.ticket, (a.node, a.shard));
                     }
                     cv.notify_all();
+                    let mut strand_waits = 0u32;
                     loop {
                         if let Some(ns) = g.ready.remove(&ticket) {
-                            break ns;
+                            break Some(ns);
                         }
-                        g = cv.wait(g).unwrap();
+                        if g.router.node_of(ticket).is_some() {
+                            // Queued on a live node: the admission will
+                            // be signalled as the pool drains.
+                            strand_waits = 0;
+                            g = cv.wait(g).unwrap();
+                        } else {
+                            strand_waits += 1;
+                            if strand_waits >= 600 {
+                                break None; // stranded ~30 s
+                            }
+                            let (g2, _) = cv
+                                .wait_timeout(
+                                    g,
+                                    std::time::Duration::from_millis(50),
+                                )
+                                .unwrap();
+                            g = g2;
+                        }
                     }
                 };
+                let Some((mut node, mut shard)) = admission else {
+                    // Every node dead and nothing recovered: fail the
+                    // job and cancel its stranded request.
+                    {
+                        let mut g = lock.lock().unwrap();
+                        for a in g.router.complete(ticket) {
+                            g.ready.insert(a.ticket, (a.node, a.shard));
+                        }
+                        cv.notify_all();
+                    }
+                    log::error!("job {} stranded: every submit node is down", job.id);
+                    stats.lock().unwrap().2 += 1;
+                    continue;
+                };
 
-                let result =
-                    run_job(addrs[node], &key, &job.input_file, &output, shard, &mut rng);
+                // Run the job, retrying through the router when the
+                // assigned submit node is killed mid-transfer: the
+                // failure shows up as a socket error, the router has
+                // already re-routed the ticket, and the worker waits for
+                // its new admission and reconnects there.
+                let mut attempts = 0u32;
+                let result = loop {
+                    let addr = addrs.lock().unwrap()[node];
+                    match run_job(addr, &key, &job.input_file, &output, shard, &mut rng) {
+                        Ok(ok) => break Ok(ok),
+                        Err(e) => {
+                            attempts += 1;
+                            let mut g = lock.lock().unwrap();
+                            // The failure is retryable when the router
+                            // moved this ticket off the node we just
+                            // failed against (its node died — even if it
+                            // has since recovered).
+                            let rerouted = g.router.is_failed(node)
+                                || g.ready.contains_key(&ticket)
+                                || g.router.node_of(ticket).is_some_and(|n| n != node);
+                            if attempts >= 5 || !rerouted {
+                                // Not a node failure (or too many): final.
+                                break Err(e);
+                            }
+                            // Wait for the re-admission. A ticket still
+                            // queued on a live node WILL be admitted as
+                            // the pool drains, so only a stranded ticket
+                            // (every node dead, no recovery in ~30 s) —
+                            // or a pathological wedge — gives up.
+                            let mut total_waits = 0u32;
+                            let mut strand_waits = 0u32;
+                            let next = loop {
+                                if let Some(ns) = g.ready.remove(&ticket) {
+                                    break Some(ns);
+                                }
+                                if g.router.node_of(ticket).is_some() {
+                                    strand_waits = 0;
+                                } else {
+                                    strand_waits += 1;
+                                    if strand_waits >= 600 {
+                                        break None; // stranded ~30 s
+                                    }
+                                }
+                                total_waits += 1;
+                                if total_waits >= 36_000 {
+                                    break None; // 30 min anti-wedge backstop
+                                }
+                                let (g2, _) = cv
+                                    .wait_timeout(
+                                        g,
+                                        std::time::Duration::from_millis(50),
+                                    )
+                                    .unwrap();
+                                g = g2;
+                            };
+                            drop(g);
+                            match next {
+                                Some((n2, s2)) => {
+                                    node = n2;
+                                    shard = s2;
+                                }
+                                None => break Err(e),
+                            }
+                        }
+                    }
+                };
 
                 {
                     let mut g = lock.lock().unwrap();
@@ -611,11 +866,25 @@ pub fn run_real_pool_router(
         t.join().map_err(|_| anyhow!("worker thread panicked"))?;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let mut bytes_served_per_node = Vec::with_capacity(servers.len());
-    for server in &mut servers {
-        server.stop();
-        bytes_served_per_node.push(server.bytes_served.load(Ordering::Relaxed));
+    burst_done.store(true, Ordering::Relaxed);
+    if let Some(t) = chaos_thread {
+        t.join().map_err(|_| anyhow!("chaos thread panicked"))?;
     }
+    {
+        let mut servers = servers.lock().unwrap();
+        for (node, slot) in servers.iter_mut().enumerate() {
+            if let Some(server) = slot.as_mut() {
+                server.stop();
+                served_totals[node]
+                    .fetch_add(server.bytes_served.load(Ordering::Relaxed), Ordering::Relaxed);
+            }
+            *slot = None;
+        }
+    }
+    let bytes_served_per_node: Vec<u64> = served_totals
+        .iter()
+        .map(|t| t.load(Ordering::Relaxed))
+        .collect();
 
     let (times, bytes, errors) = {
         let s = stats.lock().unwrap();
@@ -627,6 +896,10 @@ pub fn run_real_pool_router(
         .into_inner()
         .map_err(|_| anyhow!("admission gate poisoned"))?
         .router;
+    let chaos = Arc::try_unwrap(chaos_log)
+        .map_err(|_| anyhow!("chaos timeline still referenced after join"))?
+        .into_inner()
+        .map_err(|_| anyhow!("chaos timeline poisoned"))?;
     let report = RealPoolReport {
         jobs_completed: cfg.n_jobs - errors,
         total_payload_bytes: bytes,
@@ -638,6 +911,7 @@ pub fn run_real_pool_router(
         mover: router.stats(),
         router: router.router_stats(),
         bytes_served_per_node,
+        chaos,
     };
     Ok((report, router))
 }
@@ -661,6 +935,7 @@ mod tests {
             n_submit_nodes: 1,
             router: RouterPolicy::LeastLoaded,
             node_capacities: Vec::new(),
+            faults: FaultPlan::default(),
         }
     }
 
@@ -762,6 +1037,33 @@ mod tests {
         assert_eq!(r.errors, 0);
         assert_eq!(r.jobs_completed, 8);
         assert!(r.mover.peak_active <= 2);
+    }
+
+    #[test]
+    fn real_pool_rejects_out_of_range_fault_plan() {
+        let mut cfg = base_cfg();
+        cfg.faults = FaultPlan::default().kill(3, 0.1);
+        let err = run_real_pool(cfg);
+        assert!(err.is_err(), "node 3 does not exist in a 1-node pool");
+    }
+
+    #[test]
+    fn real_pool_degrade_event_records_timeline() {
+        // Degrade is the lightest chaos event (no server crash), so it
+        // exercises the controller thread deterministically: it always
+        // applies (at t=0) and always lands in the report's timeline.
+        let mut cfg = base_cfg();
+        cfg.n_submit_nodes = 2;
+        cfg.router = RouterPolicy::WeightedByCapacity;
+        cfg.node_capacities = vec![100.0, 100.0];
+        cfg.faults = FaultPlan::default().degrade(1, 0.0, 25.0);
+        cfg.workers = 2;
+        cfg.n_jobs = 8;
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.jobs_completed, 8);
+        assert_eq!(r.chaos.count("degrade"), 1);
+        assert_eq!(r.chaos.records[0].node, 1);
     }
 
     #[test]

@@ -13,9 +13,10 @@ pub enum EventKind {
     Submitted,           // 000
     Executing,           // 001
     Terminated,          // 005
-    TransferInputQueued, // 040 (transfer queued)
-    TransferInputBegan,  // 040 (started)
-    TransferInputDone,   // 040 (finished)
+    TransferInputQueued,  // 040 (transfer queued)
+    TransferInputBegan,   // 040 (started)
+    TransferInputDone,    // 040 (finished)
+    TransferInputAborted, // 040 (node failure; transfer re-queued)
     TransferOutputBegan, // 040
     TransferOutputDone,  // 040
     Held,                // 012
@@ -40,6 +41,9 @@ impl EventKind {
             EventKind::TransferInputQueued => "Transfer queued: input files",
             EventKind::TransferInputBegan => "Started transferring input files",
             EventKind::TransferInputDone => "Finished transferring input files",
+            EventKind::TransferInputAborted => {
+                "Input transfer aborted (submit node failed); re-queued"
+            }
             EventKind::TransferOutputBegan => "Started transferring output files",
             EventKind::TransferOutputDone => "Finished transferring output files",
             EventKind::Held => "Job was held",

@@ -60,7 +60,24 @@
 //!   `ROUTER_POLICY` in [`config`], `--submit-nodes` / `--router` on the
 //!   CLI. [`mover::PoolRouter::fail_node`] re-routes a dead node's
 //!   waiting *and* in-flight transfers to the survivors (counted in
-//!   `MoverStats::shard_failed`), so bursts drain through failures.
+//!   `MoverStats::shard_failed`; re-routed in-flight transfers in
+//!   `MoverStats::retried_after_fault`), so bursts drain through
+//!   failures.
+//! * The [`mover::chaos`] layer makes failures a first-class scenario
+//!   knob: a [`mover::FaultPlan`] — ordered `kill:N@T` / `recover:N@T` /
+//!   `degrade:N@T:GBPS` events (`FAULT_PLAN` / `STEAL_THRESHOLD` in
+//!   [`config`], `--fault` / `--steal` on the CLI, `kill-recover-4`
+//!   scenario) — is executed identically by both fabrics. The simulator
+//!   aborts the dead node's in-flight flows and re-rates its monitored
+//!   NIC; the real fabric crashes the node's `FileServer` mid-connection
+//!   and restarts it on recovery, with workers retrying through the
+//!   router. Recovery un-poisons the node
+//!   ([`mover::PoolRouter::recover_node`], `MoverStats::node_recovered`)
+//!   and [`mover::PoolRouter::rebalance`] work-steals waiting transfers
+//!   from long survivor queues onto it until the max/min queue gap is
+//!   within the configured threshold (`MoverStats::stolen`). Reports
+//!   carry the per-node fault timeline (`Report::chaos`,
+//!   `RealPoolReport::chaos`).
 //! * [`mover::AdmissionPolicy`] generalizes HTCondor's
 //!   `FILE_TRANSFER_DISK_LOAD_THROTTLE`: the three classic throttles stay
 //!   FIFO, while `FairShare` adds starvation-free per-owner round-robin
@@ -75,8 +92,10 @@
 //!   their element-wise sum ([`metrics::BinSeries::sum`]).
 //! * `tests/mover_unified.rs` drives one `ShadowPool` object through the
 //!   simulator and then the real TCP fabric; `tests/router_unified.rs`
-//!   does the same with one multi-node `PoolRouter`, proving the whole
-//!   path — router included — is shared.
+//!   does the same with one multi-node `PoolRouter`; and
+//!   `tests/chaos_unified.rs` drives one `FaultPlan` shape through both
+//!   fabrics, proving the whole path — router and chaos layer included —
+//!   is shared.
 //!
 //! ## Quickstart
 //!

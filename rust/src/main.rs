@@ -23,19 +23,25 @@ fn usage() -> ! {
         "usage: htcdm <command>\n\
          \n\
          commands:\n\
-           experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay|fair-share|sharded-4|multi-submit-4>\n\
+           experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay|fair-share|sharded-4|\n\
+                       multi-submit-4|hetero-25-100|kill-recover-4>\n\
                       [--scale N] [--csv FILE] [--config FILE]\n\
                       run a paper experiment on the simulated testbed;\n\
                       --config applies condor-style knobs (JOBS, INPUT_SIZE,\n\
                       N_OWNERS, TRANSFER_QUEUE_POLICY, SHADOW_POOL_SIZE,\n\
-                      N_SUBMIT_NODES, ROUTER_POLICY...)\n\
+                      N_SUBMIT_NODES, ROUTER_POLICY, FAULT_PLAN,\n\
+                      STEAL_THRESHOLD...)\n\
            pool       [--jobs N] [--workers W] [--mb SIZE] [--native]\n\
                       [--shadows N] [--policy disabled|disk-load|max-concurrent|fair-share|weighted-by-size]\n\
                       [--cap N] [--submit-nodes N] [--node-gbps G1,G2,...]\n\
                       [--router round-robin|least-loaded|owner-affinity|weighted-by-capacity]\n\
+                      [--fault PLAN] [--steal N]\n\
                       run a real-mode loopback pool (sealed bytes via PJRT);\n\
                       --submit-nodes > 1 runs one file server per submit node\n\
-                      behind the pool router\n\
+                      behind the pool router; --fault injects chaos, e.g.\n\
+                      'kill:1@0.5; recover:1@2' (wall-clock seconds), with\n\
+                      --steal N enabling work-stealing past an N-deep\n\
+                      queue imbalance\n\
            submit     <file>   parse a submit description and print the jobs\n\
            verify              cross-check the PJRT artifact vs the native engine\n\
            sizing              print the paper's steady-state pool arithmetic"
@@ -77,6 +83,8 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
         Some("fair-share") => Scenario::LanFairShare,
         Some("sharded-4") => Scenario::LanSharded4,
         Some("multi-submit-4") => Scenario::LanMultiSubmit4,
+        Some("hetero-25-100") => Scenario::Hetero25100,
+        Some("kill-recover-4") => Scenario::KillRecover4,
         _ => usage(),
     };
     let scale: u32 = arg_value(args, "--scale")
@@ -113,6 +121,17 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
                 .collect::<Vec<_>>()
         );
     }
+    if !report.chaos.is_empty() {
+        println!("\nfault timeline:\n{}", report.chaos.render());
+        println!(
+            "chaos: nodes failed {} / recovered {} | transfers retried-after-fault {} | \
+             work-stolen {}",
+            report.mover.shard_failed,
+            report.mover.node_recovered,
+            report.mover.retried_after_fault,
+            report.mover.stolen
+        );
+    }
     if let Some(csv) = arg_value(args, "--csv") {
         std::fs::write(&csv, htcdm::metrics::to_csv(&report.series))?;
         eprintln!("wrote {csv}");
@@ -144,6 +163,16 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
             usage()
         }
     };
+    let mut faults = match arg_value(args, "--fault") {
+        None => htcdm::mover::FaultPlan::default(),
+        Some(text) => htcdm::mover::FaultPlan::parse(&text).unwrap_or_else(|e| {
+            eprintln!("bad --fault plan: {e}");
+            usage()
+        }),
+    };
+    if let Some(th) = arg_value(args, "--steal") {
+        faults.steal_threshold = Some(th.parse().expect("--steal N"));
+    }
     let cfg = RealPoolConfig {
         n_jobs: arg_value(args, "--jobs").map(|v| v.parse().unwrap()).unwrap_or(40),
         workers: arg_value(args, "--workers").map(|v| v.parse().unwrap()).unwrap_or(4),
@@ -166,6 +195,7 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
                     .collect()
             })
             .unwrap_or_default(),
+        faults,
         ..Default::default()
     };
     eprintln!(
@@ -203,6 +233,13 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
                 .map(|b| b >> 20)
                 .collect::<Vec<_>>(),
             r.router.shard_failed
+        );
+    }
+    if !r.chaos.is_empty() {
+        println!("fault timeline:\n{}", r.chaos.render());
+        println!(
+            "chaos: recovered {} | retried-after-fault {} | work-stolen {}",
+            r.mover.node_recovered, r.mover.retried_after_fault, r.mover.stolen
         );
     }
     Ok(())

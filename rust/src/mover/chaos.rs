@@ -1,0 +1,462 @@
+//! Fault injection and recovery: one [`FaultPlan`] drives BOTH fabrics.
+//!
+//! The Petascale DTN project (arXiv:2105.12880) frames sustained transfer
+//! throughput as a property that must survive node-level churn; once the
+//! pool router sharded the paper's single submit node across N nodes, the
+//! next question is whether the pool keeps serving at line rate when one
+//! of those nodes dies mid-burst — and comes back. This module is the
+//! shared vocabulary for that experiment:
+//!
+//! * [`FaultEvent`] — `KillNode` / `RecoverNode` / `DegradeNic`, each at
+//!   a fabric-local time (virtual seconds in the simulator, wall-clock
+//!   seconds on the real TCP fabric).
+//! * [`FaultPlan`] — an ordered list of events plus an optional
+//!   work-stealing threshold, attached to `EngineSpec`,
+//!   `RealPoolConfig` and the `kill-recover-4` scenario, and parseable
+//!   from the `FAULT_PLAN` condor-style knob / `--fault` CLI flag.
+//! * [`apply_to_router`] — the router-side half of every event, shared
+//!   verbatim by both consumers: kill poisons + drains
+//!   ([`PoolRouter::fail_node`]), recover un-poisons + re-routes
+//!   stranded work ([`PoolRouter::recover_node`]), degrade re-rates the
+//!   node's routing weight, and each event triggers threshold
+//!   work-stealing ([`PoolRouter::rebalance`]).
+//! * [`ChaosTimeline`] — the per-node fault timeline reports carry: what
+//!   was applied, when, how many transfers it re-admitted, and how many
+//!   bytes the node had served at that instant.
+//!
+//! Fabric-specific effects wrap around [`apply_to_router`]: the sim
+//! engine tears down the dead node's in-flight flows and re-rates its
+//! monitored NIC; the real fabric crashes / restarts the node's
+//! `FileServer` and lets workers retry through the router.
+//! `tests/chaos_unified.rs` proves one plan drives both fabrics to
+//! equivalent drain/recover behavior.
+
+use super::router::{PoolRouter, Routed};
+use crate::config::{Config, ConfigError};
+
+/// One injected fault, at a fabric-local time in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// The submit node crashes: its file server / NIC vanish and the
+    /// router drains its waiting AND in-flight transfers to survivors.
+    KillNode { node: usize, at: f64 },
+    /// The node comes back: it rejoins routing, stranded work is
+    /// re-routed, and long survivor queues rebalance onto it.
+    RecoverNode { node: usize, at: f64 },
+    /// The node's NIC degrades to `gbps` (nominal): the sim re-rates the
+    /// monitored link, and weighted-by-capacity routing tracks the new
+    /// budget on both fabrics.
+    DegradeNic { node: usize, at: f64, gbps: f64 },
+}
+
+impl FaultEvent {
+    /// Fabric-local injection time in seconds.
+    pub fn at(&self) -> f64 {
+        match *self {
+            FaultEvent::KillNode { at, .. }
+            | FaultEvent::RecoverNode { at, .. }
+            | FaultEvent::DegradeNic { at, .. } => at,
+        }
+    }
+
+    /// Submit node the event targets.
+    pub fn node(&self) -> usize {
+        match *self {
+            FaultEvent::KillNode { node, .. }
+            | FaultEvent::RecoverNode { node, .. }
+            | FaultEvent::DegradeNic { node, .. } => node,
+        }
+    }
+
+    /// Short action label for timelines and plan text.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultEvent::KillNode { .. } => "kill",
+            FaultEvent::RecoverNode { .. } => "recover",
+            FaultEvent::DegradeNic { .. } => "degrade",
+        }
+    }
+}
+
+/// An ordered fault schedule, executed identically by both fabrics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    /// When set, every applied event is followed by
+    /// [`PoolRouter::rebalance`] with this threshold, so long per-node
+    /// queues spill onto recovered or idle nodes.
+    pub steal_threshold: Option<usize>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Append a `KillNode` event (builder style).
+    pub fn kill(mut self, node: usize, at: f64) -> FaultPlan {
+        self.events.push(FaultEvent::KillNode { node, at });
+        self
+    }
+
+    /// Append a `RecoverNode` event (builder style).
+    pub fn recover(mut self, node: usize, at: f64) -> FaultPlan {
+        self.events.push(FaultEvent::RecoverNode { node, at });
+        self
+    }
+
+    /// Append a `DegradeNic` event (builder style).
+    pub fn degrade(mut self, node: usize, at: f64, gbps: f64) -> FaultPlan {
+        self.events.push(FaultEvent::DegradeNic { node, at, gbps });
+        self
+    }
+
+    /// Set the work-stealing threshold (builder style).
+    pub fn with_steal_threshold(mut self, threshold: usize) -> FaultPlan {
+        self.steal_threshold = Some(threshold);
+        self
+    }
+
+    /// Events in injection order (stable sort by time, so same-instant
+    /// events keep their listed order).
+    pub fn sorted(&self) -> Vec<FaultEvent> {
+        let mut v = self.events.clone();
+        v.sort_by(|a, b| {
+            a.at()
+                .partial_cmp(&b.at())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        v
+    }
+
+    /// Check every event against the pool shape before running it.
+    pub fn validate(&self, n_nodes: usize) -> Result<(), String> {
+        for ev in &self.events {
+            if ev.node() >= n_nodes {
+                return Err(format!(
+                    "{} targets node {} but the pool has {} submit node(s)",
+                    ev.label(),
+                    ev.node(),
+                    n_nodes
+                ));
+            }
+            if !ev.at().is_finite() || ev.at() < 0.0 {
+                return Err(format!("{} at {} — time must be >= 0", ev.label(), ev.at()));
+            }
+            if let FaultEvent::DegradeNic { gbps, .. } = ev {
+                if !gbps.is_finite() || *gbps <= 0.0 {
+                    return Err(format!("degrade to {gbps} Gbps — must be > 0"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the plan text used by the `FAULT_PLAN` knob and the
+    /// `--fault` CLI flag:
+    ///
+    /// ```text
+    /// FAULT_PLAN = kill:1@30; recover:1@90; degrade:0@10:25
+    /// ```
+    ///
+    /// Events are `;`- or `,`-separated; each is `ACTION:NODE@SECONDS`,
+    /// with degrade taking a trailing `:GBPS`.
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for part in text.split([';', ',']) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (action, rest) = part
+                .split_once(':')
+                .ok_or_else(|| format!("'{part}': expected ACTION:NODE@SECONDS"))?;
+            let (node_s, time_s) = rest
+                .split_once('@')
+                .ok_or_else(|| format!("'{part}': expected NODE@SECONDS"))?;
+            let node: usize = node_s
+                .trim()
+                .parse()
+                .map_err(|_| format!("'{part}': bad node index '{node_s}'"))?;
+            match action.trim().to_ascii_lowercase().as_str() {
+                "kill" => events.push(FaultEvent::KillNode {
+                    node,
+                    at: parse_secs(time_s, part)?,
+                }),
+                "recover" => events.push(FaultEvent::RecoverNode {
+                    node,
+                    at: parse_secs(time_s, part)?,
+                }),
+                "degrade" => {
+                    let (t_s, g_s) = time_s
+                        .split_once(':')
+                        .ok_or_else(|| format!("'{part}': degrade needs NODE@SECONDS:GBPS"))?;
+                    let gbps: f64 = g_s
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("'{part}': bad Gbps '{g_s}'"))?;
+                    events.push(FaultEvent::DegradeNic {
+                        node,
+                        at: parse_secs(t_s, part)?,
+                        gbps,
+                    });
+                }
+                other => return Err(format!("unknown fault action '{other}'")),
+            }
+        }
+        Ok(FaultPlan {
+            events,
+            steal_threshold: None,
+        })
+    }
+
+    /// The `FAULT_PLAN` / `STEAL_THRESHOLD` condor-style knobs (an absent
+    /// `FAULT_PLAN` yields the empty plan).
+    pub fn from_config(cfg: &Config) -> Result<FaultPlan, ConfigError> {
+        let mut plan = match cfg.raw("FAULT_PLAN") {
+            Some(raw) => FaultPlan::parse(raw).map_err(|_| {
+                ConfigError::Type(
+                    "FAULT_PLAN".into(),
+                    "fault plan (kill:N@T; recover:N@T; degrade:N@T:GBPS)",
+                    raw.to_string(),
+                )
+            })?,
+            None => FaultPlan::default(),
+        };
+        if cfg.raw("STEAL_THRESHOLD").is_some() {
+            plan.steal_threshold = Some(cfg.get_u64("STEAL_THRESHOLD", 0)? as usize);
+        }
+        Ok(plan)
+    }
+
+    /// Plan text in the same spelling [`FaultPlan::parse`] accepts.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .events
+            .iter()
+            .map(|ev| match *ev {
+                FaultEvent::KillNode { node, at } => format!("kill:{node}@{at}"),
+                FaultEvent::RecoverNode { node, at } => format!("recover:{node}@{at}"),
+                FaultEvent::DegradeNic { node, at, gbps } => {
+                    format!("degrade:{node}@{at}:{gbps}")
+                }
+            })
+            .collect();
+        parts.join("; ")
+    }
+}
+
+fn parse_secs(text: &str, part: &str) -> Result<f64, String> {
+    let at: f64 = text
+        .trim()
+        .parse()
+        .map_err(|_| format!("'{part}': bad time '{text}'"))?;
+    if !at.is_finite() || at < 0.0 {
+        return Err(format!("'{part}': time must be >= 0"));
+    }
+    Ok(at)
+}
+
+/// The router-side half of one fault event — identical for both fabrics
+/// (fabric-specific effects wrap around it: the sim tears down flows and
+/// re-rates NICs, the real fabric crashes / restarts file servers).
+/// Returns every transfer admitted NOW on the surviving / recovered
+/// nodes, including any freed by threshold work-stealing.
+pub fn apply_to_router(
+    ev: &FaultEvent,
+    router: &mut PoolRouter,
+    steal_threshold: Option<usize>,
+) -> Vec<Routed> {
+    let mut out = match *ev {
+        FaultEvent::KillNode { node, .. } => router.fail_node(node),
+        FaultEvent::RecoverNode { node, .. } => router.recover_node(node),
+        FaultEvent::DegradeNic { node, gbps, .. } => {
+            router.set_node_capacity(node, gbps);
+            Vec::new()
+        }
+    };
+    if let Some(threshold) = steal_threshold {
+        out.extend(router.rebalance(threshold));
+    }
+    out
+}
+
+/// One applied fault, for reports.
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    pub node: usize,
+    /// `"kill"` / `"recover"` / `"degrade"` (see [`FaultEvent::label`]).
+    pub action: &'static str,
+    /// When the plan scheduled the event (fabric-local seconds).
+    pub planned_s: f64,
+    /// When the fabric actually applied it.
+    pub applied_s: f64,
+    /// Transfers admitted on surviving/recovered nodes by this event.
+    pub admitted: usize,
+    /// Bytes the node had served when the event applied (submit-NIC
+    /// `bytes_carried` in the simulator; cumulative `FileServer` payload
+    /// bytes on the real fabric). A recovered node whose final served
+    /// total exceeds its recovery record's value demonstrably served
+    /// bytes again.
+    pub bytes_served_before: u64,
+}
+
+/// The per-node fault timeline a chaos run reports.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosTimeline {
+    pub records: Vec<FaultRecord>,
+}
+
+impl ChaosTimeline {
+    pub fn record(
+        &mut self,
+        node: usize,
+        action: &'static str,
+        planned_s: f64,
+        applied_s: f64,
+        admitted: usize,
+        bytes_served_before: u64,
+    ) {
+        self.records.push(FaultRecord {
+            node,
+            action,
+            planned_s,
+            applied_s,
+            admitted,
+            bytes_served_before,
+        });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Records touching one node, in application order.
+    pub fn for_node(&self, node: usize) -> Vec<&FaultRecord> {
+        self.records.iter().filter(|r| r.node == node).collect()
+    }
+
+    /// Applied events with the given action label.
+    pub fn count(&self, action: &str) -> usize {
+        self.records.iter().filter(|r| r.action == action).count()
+    }
+
+    /// One line per applied event, for the CLI.
+    pub fn render(&self) -> String {
+        self.records
+            .iter()
+            .map(|r| {
+                format!(
+                    "{} node {} @{:.2}s (planned {:.2}s): {} re-admitted, {} B served before",
+                    r.action, r.node, r.applied_s, r.planned_s, r.admitted, r.bytes_served_before
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mover::{AdmissionConfig, RouterPolicy, TransferRequest};
+    use crate::transfer::ThrottlePolicy;
+
+    #[test]
+    fn parse_roundtrip_and_sort() {
+        let plan = FaultPlan::parse("recover:1@90; kill:1@30, degrade:0@10.5:25").unwrap();
+        assert_eq!(plan.events.len(), 3);
+        let sorted = plan.sorted();
+        assert_eq!(sorted[0].label(), "degrade");
+        assert_eq!(sorted[1].label(), "kill");
+        assert_eq!(sorted[2].label(), "recover");
+        assert_eq!(sorted[0].node(), 0);
+        assert!((sorted[0].at() - 10.5).abs() < 1e-12);
+        // describe() re-parses to the same plan.
+        let text = plan.describe();
+        assert_eq!(FaultPlan::parse(&text).unwrap(), plan);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_plans() {
+        assert!(FaultPlan::parse("kill1@30").is_err());
+        assert!(FaultPlan::parse("kill:x@30").is_err());
+        assert!(FaultPlan::parse("kill:1@-3").is_err());
+        assert!(FaultPlan::parse("explode:1@3").is_err());
+        assert!(FaultPlan::parse("degrade:1@3").is_err(), "degrade needs Gbps");
+        assert!(FaultPlan::parse("degrade:1@3:0").unwrap().validate(2).is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn validate_checks_node_bounds() {
+        let plan = FaultPlan::default().kill(3, 1.0);
+        assert!(plan.validate(4).is_ok());
+        assert!(plan.validate(3).is_err());
+    }
+
+    #[test]
+    fn from_config_reads_plan_and_threshold() {
+        let cfg = Config::parse(
+            "FAULT_PLAN = kill:1@30; recover:1@90\nSTEAL_THRESHOLD = 4",
+        )
+        .unwrap();
+        let plan = FaultPlan::from_config(&cfg).unwrap();
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(plan.steal_threshold, Some(4));
+
+        let empty = Config::parse("").unwrap();
+        assert!(FaultPlan::from_config(&empty).unwrap().is_empty());
+
+        let bad = Config::parse("FAULT_PLAN = frobnicate:1@2").unwrap();
+        assert!(FaultPlan::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn apply_to_router_drives_kill_recover_and_steal() {
+        let mut router = PoolRouter::sim(
+            2,
+            1,
+            AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(1)),
+            RouterPolicy::RoundRobin,
+        );
+        for t in 0..10 {
+            router.request(TransferRequest::new(t, "o", 5));
+        }
+        let kill = FaultEvent::KillNode { node: 0, at: 1.0 };
+        let rescued = apply_to_router(&kill, &mut router, Some(1));
+        assert!(rescued.is_empty(), "survivor is at its limit");
+        assert!(router.is_failed(0));
+        assert_eq!(router.stats().shard_failed, 1);
+        assert_eq!(router.waiting(), 9, "node 0's backlog moved to node 1");
+
+        let recover = FaultEvent::RecoverNode { node: 0, at: 2.0 };
+        let admitted = apply_to_router(&recover, &mut router, Some(1));
+        assert!(!router.is_failed(0));
+        // The recovered node admits a stolen transfer immediately…
+        assert_eq!(admitted.len(), 1);
+        assert_eq!(admitted[0].node, 0);
+        // …and the queues end up within the threshold.
+        let lens = router.waiting_per_node();
+        let max = lens.iter().max().unwrap();
+        let min = lens.iter().min().unwrap();
+        assert!(max - min <= 1, "imbalance {lens:?} above threshold");
+        let st = router.stats();
+        assert_eq!(st.node_recovered, 1);
+        assert!(st.stolen > 0);
+    }
+
+    #[test]
+    fn timeline_accounting() {
+        let mut tl = ChaosTimeline::default();
+        tl.record(1, "kill", 30.0, 30.1, 4, 1000);
+        tl.record(1, "recover", 90.0, 90.0, 2, 1000);
+        tl.record(0, "degrade", 10.0, 10.0, 0, 0);
+        assert_eq!(tl.count("kill"), 1);
+        assert_eq!(tl.for_node(1).len(), 2);
+        assert!(!tl.is_empty());
+        let text = tl.render();
+        assert!(text.contains("kill node 1"), "{text}");
+        assert!(text.contains("recover node 1"), "{text}");
+    }
+}

@@ -19,7 +19,13 @@
 //!   N submit-node shards (each a full [`ShadowPool`] with its own
 //!   policy and NIC budget) behind a pluggable [`RouterPolicy`]
 //!   (round-robin / least-loaded / owner-affinity / weighted-by-NIC-
-//!   capacity), with mid-burst node-failure drain.
+//!   capacity), with mid-burst node-failure drain, node recovery and
+//!   threshold work-stealing between node queues.
+//! * [`chaos`] — fault injection: a [`FaultPlan`] of ordered
+//!   `KillNode` / `RecoverNode` / `DegradeNic` events executed
+//!   identically by the simulator (flows abort, NICs re-rate) and the
+//!   real TCP fabric (file servers crash and restart, workers retry
+//!   through the router), with per-node fault timelines in the reports.
 //! * [`pool`] — [`ShadowPool`]: the [`DataMover`] implementation that
 //!   shards admitted transfers across N shadow workers, each with its
 //!   *own* [`SealEngine`](crate::runtime::engine::SealEngine) service —
@@ -33,11 +39,13 @@
 //! per-shadow engine handles to seal real bytes. `tests/mover_unified.rs`
 //! moves one `ShadowPool` through both fabrics back to back.
 
+pub mod chaos;
 pub mod policy;
 pub mod pool;
 pub mod queue;
 pub mod router;
 
+pub use chaos::{ChaosTimeline, FaultEvent, FaultPlan, FaultRecord};
 pub use policy::{ActiveView, AdmissionConfig, AdmissionPolicy};
 pub use pool::ShadowPool;
 pub use queue::AdmissionQueue;
@@ -92,6 +100,15 @@ pub struct MoverStats {
     /// Submit-node shards poisoned mid-run (see [`PoolRouter::fail_node`]);
     /// always 0 for a plain [`ShadowPool`].
     pub shard_failed: u64,
+    /// Nodes un-poisoned mid-run (see [`PoolRouter::recover_node`]).
+    pub node_recovered: u64,
+    /// Waiting requests work-stolen between node queues (see
+    /// [`PoolRouter::rebalance`]).
+    pub stolen: u64,
+    /// In-flight transfers re-routed off a dead node — each one's
+    /// executor retries it through the router (the real fabric's workers
+    /// reconnect to the survivor; the sim engine restarts the flow).
+    pub retried_after_fault: u64,
 }
 
 impl MoverStats {

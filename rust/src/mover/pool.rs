@@ -119,6 +119,14 @@ impl ShadowPool {
         self.queue.drain_waiting()
     }
 
+    /// Remove and return the most recently queued waiting request (the
+    /// router's work-stealing path — see
+    /// [`PoolRouter::rebalance`](super::PoolRouter::rebalance)). The head
+    /// of the queue keeps its admission priority.
+    pub fn steal_waiting(&mut self) -> Option<TransferRequest> {
+        self.queue.steal_waiting()
+    }
+
     /// Least-loaded shard (fewest active transfers; ties → lowest index).
     fn pick_shard(&self) -> usize {
         self.active_per_shard
@@ -187,6 +195,9 @@ impl ShadowPool {
             admitted_per_shard: self.admitted_per_shard.clone(),
             bytes_per_shard: self.bytes_per_shard.clone(),
             shard_failed: 0,
+            node_recovered: 0,
+            stolen: 0,
+            retried_after_fault: 0,
         }
     }
 

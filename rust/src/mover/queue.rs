@@ -70,6 +70,13 @@ impl AdmissionQueue {
         self.waiting.drain(..).collect()
     }
 
+    /// Remove and return the most recently enqueued waiting request —
+    /// the work-stealing path steals from the tail so the oldest
+    /// requests keep their admission order on their home node.
+    pub fn steal_waiting(&mut self) -> Option<TransferRequest> {
+        self.waiting.pop_back()
+    }
+
     /// A transfer finished; returns newly admitted requests. A complete
     /// for a still-WAITING ticket cancels its queue entry (the failover
     /// path: after `PoolRouter::fail_node` re-routes an in-flight

@@ -19,8 +19,15 @@
 //! The router survives node loss: [`PoolRouter::fail_node`] poisons a
 //! node, drains its waiting queue AND its in-flight transfers, and
 //! re-routes all of them to the surviving nodes (counted in
-//! [`MoverStats::shard_failed`]), so a burst never deadlocks on a dead
-//! submit node.
+//! [`MoverStats::shard_failed`]; re-routed in-flight transfers count in
+//! [`MoverStats::retried_after_fault`]), so a burst never deadlocks on a
+//! dead submit node. The loss is reversible: [`PoolRouter::recover_node`]
+//! un-poisons the node and re-routes stranded work
+//! ([`MoverStats::node_recovered`]), and [`PoolRouter::rebalance`]
+//! work-steals waiting requests from long queues onto recovered or idle
+//! nodes until the max/min queue-length gap falls within a threshold
+//! ([`MoverStats::stolen`]). The `mover::chaos` fault-injection layer
+//! drives all three from one `FaultPlan` on both fabrics.
 //!
 //! Both fabrics consume the router exactly like they consume a single
 //! `ShadowPool` (it implements [`DataMover`] with node-major global shard
@@ -134,6 +141,10 @@ pub struct PoolRouter {
     nodes: Vec<ShadowPool>,
     /// Relative NIC capacity per node (weighted-by-capacity routing).
     capacity: Vec<f64>,
+    /// As-built capacities; [`PoolRouter::recover_node`] restores a
+    /// node's weight to this, undoing any [`PoolRouter::set_node_capacity`]
+    /// degradation.
+    nominal_capacity: Vec<f64>,
     policy: RouterPolicy,
     rr_cursor: usize,
     /// Deficit counters for weighted-by-capacity routing.
@@ -149,6 +160,13 @@ pub struct PoolRouter {
     routed_per_node: Vec<u64>,
     bytes_per_node: Vec<u64>,
     shard_failed: u64,
+    /// Nodes un-poisoned via [`PoolRouter::recover_node`].
+    node_recovered: u64,
+    /// Waiting requests moved between nodes by [`PoolRouter::rebalance`].
+    stolen: u64,
+    /// In-flight transfers re-routed off a dead node by
+    /// [`PoolRouter::fail_node`] (each one's executor retries it).
+    retried_after_fault: u64,
     /// Completes for tickets the router never routed.
     unrouted_completes: u64,
     /// Completes that cancelled a stranded (all-nodes-failed) request.
@@ -178,6 +196,7 @@ impl PoolRouter {
         let n = nodes.len();
         PoolRouter {
             nodes,
+            nominal_capacity: capacity.clone(),
             capacity,
             policy,
             rr_cursor: 0,
@@ -189,6 +208,9 @@ impl PoolRouter {
             routed_per_node: vec![0; n],
             bytes_per_node: vec![0; n],
             shard_failed: 0,
+            node_recovered: 0,
+            stolen: 0,
+            retried_after_fault: 0,
             unrouted_completes: 0,
             cancelled_stranded: 0,
             peak_active: 0,
@@ -421,6 +443,7 @@ impl PoolRouter {
             self.node_of.remove(&t);
             let _ = self.nodes[node].complete(t); // queue already drained: admits nothing
             if let Some(req) = self.requests.get(&t) {
+                self.retried_after_fault += 1;
                 to_reroute.push(req.clone());
             }
         }
@@ -434,6 +457,86 @@ impl PoolRouter {
             }
         }
         out
+    }
+
+    /// Un-poison a node: it rejoins routing with a clean deficit counter
+    /// and its as-built routing weight (undoing any
+    /// [`PoolRouter::set_node_capacity`] degradation — the weight restore
+    /// applies even to a live node, mirroring the sim engine restoring
+    /// the physical NIC rate), and requests stranded while every node
+    /// was failed are routed immediately. Returns the transfers admitted
+    /// NOW. Otherwise idempotent: recovering a live node admits nothing.
+    /// Callers wanting the survivors' long queues rebalanced onto the
+    /// recovered node follow up with [`PoolRouter::rebalance`] (the
+    /// `mover::chaos` executor does both).
+    pub fn recover_node(&mut self, node: usize) -> Vec<Routed> {
+        self.capacity[node] = self.nominal_capacity[node];
+        if !self.failed[node] {
+            return Vec::new();
+        }
+        self.failed[node] = false;
+        self.credit[node] = 0.0;
+        self.node_recovered += 1;
+        let stranded: Vec<TransferRequest> = self.stranded.drain(..).collect();
+        let mut out = Vec::new();
+        for req in stranded {
+            match self.pick_node(&req) {
+                Some(n) => out.extend(self.route_to(n, req)),
+                None => self.stranded.push_back(req),
+            }
+        }
+        out
+    }
+
+    /// Threshold-triggered work-stealing: while some live node's waiting
+    /// queue is more than `threshold` longer than the shortest live
+    /// queue (and moving a request would strictly shrink the gap), the
+    /// most recently queued request moves from the longest queue to the
+    /// shortest — so a recovered or idle node absorbs the survivors'
+    /// backlog. Moves count in [`MoverStats::stolen`]; returns the
+    /// transfers target nodes admitted NOW.
+    pub fn rebalance(&mut self, threshold: usize) -> Vec<Routed> {
+        let mut out = Vec::new();
+        loop {
+            let live = self.live_nodes();
+            if live.len() < 2 {
+                return out;
+            }
+            let mut hi = live[0];
+            let mut lo = live[0];
+            for &i in &live {
+                if self.nodes[i].waiting() > self.nodes[hi].waiting() {
+                    hi = i;
+                }
+                if self.nodes[i].waiting() < self.nodes[lo].waiting() {
+                    lo = i;
+                }
+            }
+            let gap = self.nodes[hi].waiting() - self.nodes[lo].waiting();
+            // gap >= 2 also guards the ping-pong a zero threshold would
+            // otherwise loop on (moving across a gap of 1 just swaps it).
+            if gap <= threshold || gap < 2 {
+                return out;
+            }
+            let Some(req) = self.nodes[hi].steal_waiting() else {
+                return out;
+            };
+            self.stolen += 1;
+            self.node_of.remove(&req.ticket);
+            out.extend(self.route_to(lo, req));
+        }
+    }
+
+    /// Re-rate a node's relative NIC budget so weighted-by-capacity
+    /// routing tracks a degraded NIC. [`PoolRouter::recover_node`]
+    /// restores the as-built weight.
+    pub fn set_node_capacity(&mut self, node: usize, capacity: f64) {
+        self.capacity[node] = capacity.max(0.0);
+    }
+
+    /// Lowest-indexed live node (`None` when every node has failed).
+    pub fn first_live_node(&self) -> Option<usize> {
+        self.failed.iter().position(|&f| !f)
     }
 
     /// Currently admitted (in-flight) transfers across all nodes.
@@ -483,6 +586,9 @@ impl PoolRouter {
                 .flat_map(|s| s.bytes_per_shard.iter().copied())
                 .collect(),
             shard_failed: self.shard_failed,
+            node_recovered: self.node_recovered,
+            stolen: self.stolen,
+            retried_after_fault: self.retried_after_fault,
         }
     }
 
@@ -823,5 +929,134 @@ mod tests {
 
         let bad = Config::parse("ROUTER_POLICY = HASH").unwrap();
         assert!(RouterPolicy::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn recover_node_rejoins_routing_and_unstrands() {
+        let mut router = rr_router(2);
+        router.fail_node(0);
+        router.fail_node(1);
+        // Both nodes down: requests strand.
+        assert!(router.request(r(0, "o", 1)).is_empty());
+        assert!(router.request(r(1, "o", 1)).is_empty());
+        assert_eq!(router.router_stats().stranded, 2);
+        assert_eq!(router.first_live_node(), None);
+
+        // Recovery re-routes the stranded backlog immediately.
+        let admitted = router.recover_node(1);
+        assert_eq!(admitted.len(), 2, "stranded requests admit on recovery");
+        assert!(admitted.iter().all(|a| a.node == 1));
+        assert_eq!(router.router_stats().stranded, 0);
+        assert_eq!(router.first_live_node(), Some(1));
+        let st = router.stats();
+        assert_eq!(st.node_recovered, 1);
+        assert_eq!(st.shard_failed, 2);
+
+        // Idempotent: recovering a live node is a no-op.
+        assert!(router.recover_node(1).is_empty());
+        assert_eq!(router.stats().node_recovered, 1);
+
+        // New requests route again (only node 1 is live).
+        let adm = router.request(r(2, "o", 1));
+        assert_eq!(adm[0].node, 1);
+    }
+
+    #[test]
+    fn fail_node_counts_inflight_retries() {
+        let mut router = PoolRouter::sim(
+            2,
+            1,
+            ThrottlePolicy::MaxConcurrent(2).into(),
+            RouterPolicy::RoundRobin,
+        );
+        for t in 0..8 {
+            router.request(r(t, "o", 1));
+        }
+        // Node 0: 2 in-flight + 2 waiting. Only the in-flight pair counts
+        // as retried (their executors must re-run them); the waiting pair
+        // just moves queues.
+        router.fail_node(0);
+        let st = router.stats();
+        assert_eq!(st.retried_after_fault, 2);
+        assert_eq!(st.shard_failed, 1);
+    }
+
+    #[test]
+    fn rebalance_steals_until_gap_within_threshold() {
+        // Owner-affinity with one owner piles everything on one node.
+        let mut router = PoolRouter::sim(
+            3,
+            1,
+            ThrottlePolicy::MaxConcurrent(1).into(),
+            RouterPolicy::OwnerAffinity,
+        );
+        for t in 0..16 {
+            router.request(r(t, "alice", 1));
+        }
+        let lens = router.waiting_per_node();
+        assert_eq!(lens.iter().sum::<usize>(), 15, "1 active + 15 waiting");
+        assert_eq!(lens.iter().filter(|&&l| l > 0).count(), 1, "one hot node");
+
+        let admitted = router.rebalance(2);
+        // The two idle nodes each admit a stolen transfer immediately…
+        assert_eq!(admitted.len(), 2);
+        // …and the queues settle within the threshold.
+        let lens = router.waiting_per_node();
+        let max = lens.iter().max().unwrap();
+        let min = lens.iter().min().unwrap();
+        assert!(max - min <= 2, "imbalance {lens:?} above threshold");
+        assert!(router.stats().stolen > 0);
+        // Nothing lost or duplicated: 3 active + waiting == 16.
+        assert_eq!(router.active() as usize + router.waiting(), 16);
+
+        // A second pass is a no-op (already balanced).
+        let before = router.stats().stolen;
+        assert!(router.rebalance(2).is_empty());
+        assert_eq!(router.stats().stolen, before);
+    }
+
+    #[test]
+    fn rebalance_zero_threshold_terminates() {
+        let mut router = PoolRouter::sim(
+            2,
+            1,
+            ThrottlePolicy::MaxConcurrent(1).into(),
+            RouterPolicy::OwnerAffinity,
+        );
+        for t in 0..6 {
+            router.request(r(t, "bob", 1));
+        }
+        router.rebalance(0);
+        let lens = router.waiting_per_node();
+        let max = lens.iter().max().unwrap();
+        let min = lens.iter().min().unwrap();
+        assert!(max - min <= 1, "gap {lens:?} not minimal");
+    }
+
+    #[test]
+    fn degraded_capacity_shifts_weighted_routing() {
+        let nodes = vec![
+            ShadowPool::sim(1, ThrottlePolicy::Disabled.into()),
+            ShadowPool::sim(1, ThrottlePolicy::Disabled.into()),
+        ];
+        let mut router =
+            PoolRouter::new(nodes, vec![100.0, 100.0], RouterPolicy::WeightedByCapacity);
+        router.set_node_capacity(1, 25.0);
+        for t in 0..100 {
+            router.request(r(t, "o", 1));
+        }
+        let st = router.router_stats();
+        assert_eq!(st.routed_per_node[0], 80, "100:25 after degrade");
+        assert_eq!(st.routed_per_node[1], 20);
+
+        // Recovery restores the as-built weight (even on a live node),
+        // so the next batch splits evenly again.
+        assert!(router.recover_node(1).is_empty(), "live node: admits nothing");
+        for t in 100..200 {
+            router.request(r(t, "o", 1));
+        }
+        let st = router.router_stats();
+        assert_eq!(st.routed_per_node[0] - 80, 50, "even split after restore");
+        assert_eq!(st.routed_per_node[1] - 20, 50);
     }
 }

@@ -185,6 +185,17 @@ impl Testbed {
         self.submit_txs.len()
     }
 
+    /// Re-rate one submit node's NIC mid-run (fault injection: degrade,
+    /// or restore on recovery). `gbps` is nominal; protocol-efficiency
+    /// derating applies exactly as in [`Testbed::build`]. A floor keeps
+    /// the link's capacity strictly positive so flows never stall
+    /// forever on a zero-rate link.
+    pub fn set_submit_nic_gbps(&mut self, node: usize, gbps: f64) {
+        let eff = calib::NIC_PROTOCOL_EFFICIENCY;
+        let link = self.submit_txs[node];
+        self.net.set_capacity(link, Gbps(gbps.max(0.001) * eff));
+    }
+
     /// Links crossed by a submit node -> worker transfer.
     pub fn path_to_worker(&self, submit_node: usize, worker: usize) -> Vec<LinkId> {
         let mut p = Vec::with_capacity(4);
@@ -314,6 +325,17 @@ mod tests {
         // VPN capacity is the paper's observed 25 Gbps ceiling.
         let cap = tb.net.link(vpn).capacity_bps * 8.0 / 1e9;
         assert!((cap - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn submit_nic_rerates_with_efficiency() {
+        let mut tb = Testbed::build(TestbedSpec::lan_paper());
+        tb.set_submit_nic_gbps(0, 25.0);
+        let cap = tb.net.link(tb.submit_txs[0]).capacity_bps * 8.0 / 1e9;
+        assert!((cap - 22.75).abs() < 0.01, "degraded: {cap}");
+        tb.set_submit_nic_gbps(0, 100.0);
+        let cap = tb.net.link(tb.submit_txs[0]).capacity_bps * 8.0 / 1e9;
+        assert!((cap - 91.0).abs() < 0.01, "restored: {cap}");
     }
 
     #[test]

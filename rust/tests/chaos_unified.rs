@@ -1,0 +1,285 @@
+//! Tentpole acceptance tests for fault injection & recovery: one
+//! `FaultPlan` shape — kill a submit node mid-burst, recover it later,
+//! work-steal queued transfers onto it — drives BOTH fabrics to
+//! equivalent drain/recover behavior:
+//!
+//! * the virtual-time simulator kills node 1's NIC service (in-flight
+//!   flows abort and re-register on survivors) and restores it, and
+//! * the real TCP loopback fabric crashes node 1's `FileServer`
+//!   (in-flight connections break; workers retry through the router) and
+//!   restarts it on a fresh port.
+//!
+//! In both: every transfer completes despite the dead node, the
+//! recovered node serves bytes again, and the shared `MoverStats`
+//! counters (`shard_failed`, `node_recovered`, `retried_after_fault`,
+//! `stolen`) account for the churn. Event times are fabric-local
+//! (virtual vs wall-clock seconds); the plan structure is identical.
+
+use htcdm::coordinator::engine::{Engine, EngineSpec};
+use htcdm::fabric::{run_real_pool_router, RealPoolConfig};
+use htcdm::mover::{AdmissionConfig, FaultPlan, PoolRouter, RouterPolicy};
+use htcdm::netsim::topology::TestbedSpec;
+use htcdm::transfer::ThrottlePolicy;
+use htcdm::util::units::{Bytes, SimTime};
+
+/// Kill node 1, recover it later, steal work beyond the threshold — the
+/// one plan shape both fabrics execute (times are fabric-local seconds).
+fn kill_recover_plan(kill_at: f64, recover_at: f64) -> FaultPlan {
+    FaultPlan::default()
+        .kill(1, kill_at)
+        .recover(1, recover_at)
+        .with_steal_threshold(2)
+}
+
+const SIM_KILL_AT: f64 = 4.0;
+const SIM_RECOVER_AT: f64 = 14.0;
+
+/// A transfer-bound 4-submit-node burst: 60 slots feed 120 × 200 MB
+/// sandboxes through per-node MaxConcurrent(2) admission, so every node
+/// holds in-flight transfers AND a deep waiting queue when the fault
+/// fires, and the burst (~25 virtual seconds) comfortably spans both
+/// fault times.
+fn chaos_sim_spec() -> EngineSpec {
+    let mut tb = TestbedSpec::lan_paper();
+    tb.workers.truncate(2);
+    tb.workers[0].slots = 30;
+    tb.workers[1].slots = 30;
+    tb.monitor_bin = SimTime::from_secs(2);
+    let mut spec = EngineSpec::paper(tb, ThrottlePolicy::MaxConcurrent(2));
+    spec.n_jobs = 120;
+    spec.input_bytes = Bytes(200_000_000);
+    spec.runtime_median_s = 0.6;
+    spec.n_submit_nodes = 4;
+    spec.router = RouterPolicy::RoundRobin;
+    spec.seed = 7;
+    spec.faults = kill_recover_plan(SIM_KILL_AT, SIM_RECOVER_AT);
+    spec
+}
+
+/// Simulated fabric: `KillNode` mid-burst aborts node 1's in-flight
+/// flows and re-routes its backlog; every job still completes via the
+/// survivors; `RecoverNode` puts node 1 back to work (its NIC carries
+/// bytes again) after stealing queued transfers from the survivors.
+#[test]
+fn sim_fault_plan_drains_and_recovers() {
+    let spec = chaos_sim_spec();
+    let r = Engine::new(spec).run().unwrap();
+
+    // Drain: the dead node lost in-flight transfers, yet the whole burst
+    // completed with clean accounting.
+    assert_eq!(r.schedd.completed_count(), 120);
+    assert_eq!(r.errors, 0);
+    assert_eq!(r.mover.shard_failed, 1);
+    assert!(
+        r.mover.retried_after_fault >= 1,
+        "node 1 held in-flight transfers at t={SIM_KILL_AT}"
+    );
+    assert_eq!(r.mover.released_without_active, 0);
+
+    // Recover: the node rejoined and queued work was stolen onto it.
+    assert_eq!(r.mover.node_recovered, 1);
+    assert!(r.mover.stolen > 0, "survivor queues rebalanced on recovery");
+
+    // Timeline: both events applied at their planned virtual instants,
+    // and the node had served bytes before dying.
+    assert_eq!(r.chaos.records.len(), 2);
+    assert_eq!(r.chaos.records[0].action, "kill");
+    assert_eq!(r.chaos.records[1].action, "recover");
+    assert!((r.chaos.records[0].applied_s - SIM_KILL_AT).abs() < 1e-6);
+    assert!((r.chaos.records[1].applied_s - SIM_RECOVER_AT).abs() < 1e-6);
+    assert!(r.chaos.records[0].bytes_served_before > 0);
+    assert_eq!(r.chaos.for_node(1).len(), 2);
+
+    // The makespan really spans the fault window (precondition for the
+    // NIC-series assertions below).
+    assert!(
+        r.finished_at.as_secs_f64() > SIM_RECOVER_AT + 2.0,
+        "burst drained too early ({}) to observe the recovery",
+        r.finished_at
+    );
+
+    // Node 1's monitored NIC: dark while dead, serving again afterwards.
+    let node1 = &r.monitors[1];
+    let mut dead_window = 0.0;
+    let mut post_recover = 0.0;
+    for (t, b) in node1.bins() {
+        let start = t.as_secs_f64();
+        if start >= SIM_KILL_AT + 2.0 && start + 2.0 <= SIM_RECOVER_AT {
+            dead_window += b;
+        }
+        if start >= SIM_RECOVER_AT {
+            post_recover += b;
+        }
+    }
+    assert!(
+        dead_window < 1.0,
+        "killed node carried {dead_window} bytes while dead"
+    );
+    assert!(
+        post_recover > 0.0,
+        "recovered node's NIC never carried bytes again"
+    );
+
+    // Survivors carried the whole burst: aggregate bytes still cover all
+    // inputs (aborted partial transfers only add to the total).
+    assert!(r.monitor.total_bytes() >= r.total_input_bytes);
+}
+
+/// The same fault schedule is deterministic: two identical runs apply it
+/// at identical virtual instants with identical accounting.
+#[test]
+fn sim_fault_plan_is_deterministic() {
+    let a = Engine::new(chaos_sim_spec()).run().unwrap();
+    let b = Engine::new(chaos_sim_spec()).run().unwrap();
+    assert_eq!(a.finished_at, b.finished_at);
+    assert_eq!(a.mover.retried_after_fault, b.mover.retried_after_fault);
+    assert_eq!(a.mover.stolen, b.mover.stolen);
+    assert_eq!(a.chaos.records.len(), b.chaos.records.len());
+}
+
+fn real_cfg(n_jobs: u32, faults: FaultPlan) -> RealPoolConfig {
+    RealPoolConfig {
+        n_jobs,
+        workers: 3,
+        input_bytes: 4 << 20,
+        output_bytes: 512,
+        chunk_words: 1024,
+        use_xla_engine: false,
+        passphrase: "chaos-unified".into(),
+        policy: AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(1)),
+        faults,
+        ..RealPoolConfig::default()
+    }
+}
+
+fn chaos_router() -> PoolRouter {
+    PoolRouter::sim(
+        2,
+        1,
+        AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(1)),
+        RouterPolicy::RoundRobin,
+    )
+}
+
+/// Real TCP fabric, same plan shape split across two bursts for
+/// determinism on any machine: the kill fires 40 ms into a burst that is
+/// guaranteed to still be moving sealed bytes (in-flight connections
+/// break, workers retry via the router, zero errors), then the SAME
+/// router object — node 1 still poisoned — runs a second burst whose
+/// plan recovers node 1 immediately, proving the restarted `FileServer`
+/// serves bytes again.
+#[test]
+fn real_fabric_kill_then_recover_drains_both_bursts() {
+    // Burst 1: kill node 1 mid-burst.
+    let plan = kill_recover_plan(0.04, 0.0);
+    let kill_only = FaultPlan {
+        events: vec![plan.events[0]],
+        steal_threshold: plan.steal_threshold,
+    };
+    let (r1, router) =
+        run_real_pool_router(&real_cfg(24, kill_only), chaos_router()).unwrap();
+    assert_eq!(r1.errors, 0, "workers retried through the router");
+    assert_eq!(r1.jobs_completed, 24);
+    assert_eq!(r1.total_payload_bytes, 24 * (4 << 20) as u64);
+    assert_eq!(r1.mover.shard_failed, 1);
+    assert_eq!(r1.chaos.count("kill"), 1);
+    // The survivors carried every byte the workers received.
+    assert!(
+        r1.bytes_served_per_node.iter().sum::<u64>() >= r1.total_payload_bytes,
+        "served {:?} < payload {}",
+        r1.bytes_served_per_node,
+        r1.total_payload_bytes
+    );
+
+    // Burst 2: the carried-over router still has node 1 poisoned; the
+    // plan's recover event un-poisons it at t=0 and the restarted file
+    // server serves its share of a fresh burst.
+    let recover_only = FaultPlan {
+        events: vec![plan.events[1]],
+        steal_threshold: plan.steal_threshold,
+    };
+    let (r2, router) = run_real_pool_router(&real_cfg(24, recover_only), router).unwrap();
+    assert_eq!(r2.errors, 0);
+    assert_eq!(r2.jobs_completed, 24);
+    let stats = router.stats();
+    assert_eq!(stats.node_recovered, 1);
+    assert_eq!(r2.chaos.count("recover"), 1);
+    assert!(
+        r2.bytes_served_per_node[1] > 0,
+        "recovered node served no bytes: {:?}",
+        r2.bytes_served_per_node
+    );
+    assert!(
+        r2.router.routed_per_node[1] > 0,
+        "router never used the recovered node: {:?}",
+        r2.router.routed_per_node
+    );
+    // Both bursts accounted on one router object.
+    assert!(stats.total_admitted >= 48, "{}", stats.total_admitted);
+    assert_eq!(stats.released_without_active, 0);
+}
+
+/// Chaos tier (CI `--ignored` job): the full single-burst wall-clock
+/// schedule — kill node 1 at 100 ms, recover it at 400 ms — against a
+/// burst long enough (~120 × 8 MiB at 1 transfer/node) that both events
+/// land mid-burst. Writes a JSON report for the CI artifact upload when
+/// `CHAOS_REPORT_DIR` is set.
+#[test]
+#[ignore = "chaos tier: wall-clock fault schedule; run with cargo test --release -- --ignored"]
+fn chaos_e2e_single_plan_kill_recover_real_fabric() {
+    let mut cfg = real_cfg(120, kill_recover_plan(0.10, 0.40));
+    cfg.input_bytes = 8 << 20;
+    cfg.workers = 4;
+    let (r, router) = run_real_pool_router(&cfg, chaos_router()).unwrap();
+
+    assert_eq!(r.errors, 0, "every killed transfer was retried to success");
+    assert_eq!(r.jobs_completed, 120);
+    assert_eq!(r.total_payload_bytes, 120 * (8 << 20) as u64);
+    let stats = router.stats();
+    assert_eq!(stats.shard_failed, 1);
+    assert_eq!(stats.node_recovered, 1);
+    assert!(
+        stats.retried_after_fault >= 1,
+        "node 1 was mid-transfer at the kill"
+    );
+    assert!(stats.stolen >= 1, "recovery rebalanced the survivor's queue");
+    assert_eq!(r.chaos.count("kill"), 1);
+    assert_eq!(r.chaos.count("recover"), 1);
+    // The recovered node served bytes AFTER recovery: its cumulative
+    // total exceeds what it had served when recovered.
+    let recover_rec = r
+        .chaos
+        .records
+        .iter()
+        .find(|rec| rec.action == "recover")
+        .expect("recover record");
+    assert!(
+        r.bytes_served_per_node[1] > recover_rec.bytes_served_before,
+        "node 1 total {} never grew past its at-recovery total {}",
+        r.bytes_served_per_node[1],
+        recover_rec.bytes_served_before
+    );
+
+    if let Ok(dir) = std::env::var("CHAOS_REPORT_DIR") {
+        std::fs::create_dir_all(&dir).ok();
+        let json = format!(
+            "{{\"test\":\"chaos_e2e_single_plan_kill_recover_real_fabric\",\
+             \"jobs\":{},\"errors\":{},\"wall_secs\":{:.3},\"gbps\":{:.4},\
+             \"shard_failed\":{},\"node_recovered\":{},\
+             \"retried_after_fault\":{},\"stolen\":{},\
+             \"bytes_served_per_node\":{:?},\"timeline\":\"{}\"}}",
+            r.jobs_completed,
+            r.errors,
+            r.wall_secs,
+            r.gbps,
+            stats.shard_failed,
+            stats.node_recovered,
+            stats.retried_after_fault,
+            stats.stolen,
+            r.bytes_served_per_node,
+            r.chaos.render().replace('\n', "; "),
+        );
+        std::fs::write(format!("{dir}/kill_recover_e2e.json"), json)
+            .expect("write chaos report");
+    }
+}

@@ -406,6 +406,85 @@ fn prop_round_robin_spread_within_one() {
     });
 }
 
+/// Failover race: a `complete()` for a transfer already re-routed off a
+/// dead node must cancel its new entry, never double-release an
+/// admission slot. Under random request / complete / kill / recover /
+/// rebalance churn — with every ticket completed exactly once, at an
+/// arbitrary point relative to its re-routes — per-node active counts
+/// never exceed the policy limit, failed nodes hold no work, and no
+/// spurious release is ever recorded.
+#[test]
+fn prop_complete_racing_fail_node_never_double_releases() {
+    check("fail-node-complete-race", 25, |g| {
+        let n_nodes = g.rng.range_u64(2, 4) as u32;
+        let limit = g.rng.range_u64(1, 3) as u32;
+        let mut router = PoolRouter::sim(
+            n_nodes,
+            1,
+            AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(limit)),
+            RouterPolicy::LeastLoaded,
+        );
+        let mut outstanding: Vec<u32> = Vec::new();
+        let mut next_ticket = 0u32;
+        for _ in 0..200 {
+            match g.rng.range_u64(0, 9) {
+                0..=4 => {
+                    let owner = format!("u{}", next_ticket % 3);
+                    router.request(TransferRequest::new(next_ticket, owner, 10));
+                    outstanding.push(next_ticket);
+                    next_ticket += 1;
+                }
+                5..=7 => {
+                    // The executor reports in — possibly for a ticket
+                    // that was re-routed (now waiting on another node)
+                    // or stranded. Exactly once per ticket.
+                    if !outstanding.is_empty() {
+                        let i = g.rng.range_usize(0, outstanding.len() - 1);
+                        router.complete(outstanding.swap_remove(i));
+                    }
+                }
+                8 => {
+                    let node = g.rng.range_usize(0, n_nodes as usize - 1);
+                    router.fail_node(node);
+                }
+                _ => {
+                    let node = g.rng.range_usize(0, n_nodes as usize - 1);
+                    router.recover_node(node);
+                    router.rebalance(1);
+                }
+            }
+            let active = router.active_per_node();
+            let waiting = router.waiting_per_node();
+            for i in 0..n_nodes as usize {
+                assert!(
+                    active[i] <= limit,
+                    "node {i} active {} > limit {limit}",
+                    active[i]
+                );
+                if router.is_failed(i) {
+                    assert_eq!(active[i], 0, "failed node {i} still active");
+                    assert_eq!(waiting[i], 0, "failed node {i} still queues");
+                }
+            }
+            assert_eq!(router.stats().released_without_active, 0);
+        }
+        // Drain: completing every outstanding ticket exactly once (some
+        // were re-routed several times) empties the router entirely.
+        if router.first_live_node().is_none() {
+            router.recover_node(0);
+        }
+        let mut guard = 0;
+        while let Some(t) = outstanding.pop() {
+            guard += 1;
+            assert!(guard < 10_000, "drain stuck");
+            router.complete(t);
+        }
+        assert_eq!(router.active(), 0, "slot leaked or double-released");
+        assert_eq!(router.waiting(), 0, "ghost waiting entry survived");
+        assert_eq!(router.stats().released_without_active, 0);
+    });
+}
+
 /// Undefined-propagation: any comparison against a missing attribute is
 /// UNDEFINED, and Requirements containing it never match.
 #[test]
