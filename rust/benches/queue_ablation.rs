@@ -11,10 +11,17 @@
 //!   policies through the same mover),
 //! * a shadow-SHARD sweep on the real loopback fabric: N per-shard seal
 //!   engines vs the paper-faithful single crypto funnel. With N > 1 the
-//!   parallel sealing beats the single-funnel baseline, and
+//!   parallel sealing beats the single-funnel baseline,
 //! * a SUBMIT-NODE sweep (1/2/4/8) on the real loopback fabric: the
 //!   scale-out throughput of N file servers behind the pool router vs
-//!   the paper's single submit node.
+//!   the paper's single submit node, and
+//! * a DATA-SOURCE sweep (funnel vs dedicated DTNs) on the real
+//!   loopback fabric: the offload win of serving bytes from a DTN
+//!   fleet while the submit node keeps only scheduling duties.
+//!
+//! Every sweep row is also recorded as a JSON object; set
+//! `BENCH_REPORT_DIR` to write them to `queue_ablation.json` (the CI
+//! bench-smoke job uploads them as artifacts).
 //!
 //! Run: cargo bench --bench queue_ablation
 //! CI smoke: cargo bench --bench queue_ablation -- --smoke
@@ -23,7 +30,7 @@
 use htcdm::coordinator::engine::EngineSpec;
 use htcdm::coordinator::{Experiment, Scenario};
 use htcdm::fabric::{run_real_pool, RealPoolConfig};
-use htcdm::mover::{AdmissionConfig, RouterPolicy};
+use htcdm::mover::{AdmissionConfig, RouterPolicy, SourcePlan};
 use htcdm::netsim::topology::TestbedSpec;
 use htcdm::transfer::ThrottlePolicy;
 
@@ -36,6 +43,9 @@ fn smoke_mode() -> bool {
 fn main() -> anyhow::Result<()> {
     let smoke = smoke_mode();
     let sim_scale = if smoke { 100 } else { 1 };
+    // One JSON object per sweep row, written to
+    // $BENCH_REPORT_DIR/queue_ablation.json at the end.
+    let mut json_rows: Vec<String> = Vec::new();
     if smoke {
         println!("[smoke mode: 1/100-scale sims, single-point sweeps]");
     }
@@ -127,6 +137,10 @@ fn main() -> anyhow::Result<()> {
             "  {:>4}   {:>7.3} Gbps  {:>6.2} s   {:?}",
             shards, r.gbps, r.wall_secs, r.mover.admitted_per_shard
         );
+        json_rows.push(format!(
+            "{{\"sweep\":\"shards\",\"shards\":{},\"gbps\":{:.4},\"wall_secs\":{:.3}}}",
+            shards, r.gbps, r.wall_secs
+        ));
     }
     println!(
         "  multi-shard best vs single-funnel: {:.2}x",
@@ -163,10 +177,84 @@ fn main() -> anyhow::Result<()> {
             "  {:>4}   {:>7.3} Gbps  {:>6.2} s   {:?}",
             nodes, r.gbps, r.wall_secs, r.router.routed_per_node
         );
+        json_rows.push(format!(
+            "{{\"sweep\":\"submit-nodes\",\"nodes\":{},\"gbps\":{:.4},\"wall_secs\":{:.3}}}",
+            nodes, r.gbps, r.wall_secs
+        ));
     }
     println!(
         "  scale-out best vs single submit node: {:.2}x",
         best_scaleout / single_node_gbps
     );
+
+    println!("\n=== data-source sweep (real loopback fabric, funnel vs DTN offload) ===");
+    println!("  the paper's submit funnel vs dedicated data nodes serving the");
+    println!("  bytes while the submit node keeps only scheduling duties:");
+    println!("  source            goodput     wall      submit MiB   dtn MiB");
+    let mut funnel_gbps = 0.0;
+    let mut dtn_gbps = 0.0;
+    let source_sweep: &[(&str, u32, SourcePlan)] = if smoke {
+        &[
+            ("funnel", 0, SourcePlan::SubmitFunnel),
+            ("dtn-2", 2, SourcePlan::DedicatedDtn),
+        ]
+    } else {
+        &[
+            ("funnel", 0, SourcePlan::SubmitFunnel),
+            ("dtn-2", 2, SourcePlan::DedicatedDtn),
+            ("dtn-4", 4, SourcePlan::DedicatedDtn),
+            ("hybrid-4", 4, SourcePlan::Hybrid { threshold: 4 << 20 }),
+        ]
+    };
+    for &(label, data_nodes, source) in source_sweep {
+        let cfg = RealPoolConfig {
+            n_jobs: if smoke { 8 } else { 32 },
+            workers: 8,
+            input_bytes: if smoke { 1 << 20 } else { 8 << 20 },
+            output_bytes: 4096,
+            use_xla_engine: false,
+            passphrase: "source-sweep".into(),
+            data_nodes,
+            source,
+            ..Default::default()
+        };
+        let r = run_real_pool(cfg)?;
+        anyhow::ensure!(r.errors == 0, "transfer errors in data-source sweep");
+        let submit_bytes: u64 = r.bytes_served_per_node.iter().sum();
+        let submit_mib: u64 = submit_bytes >> 20;
+        let dtn_mib: u64 = r.bytes_served_per_dtn.iter().sum::<u64>() >> 20;
+        if data_nodes == 0 {
+            funnel_gbps = r.gbps;
+        } else if source == SourcePlan::DedicatedDtn {
+            // The offload claim is measured, not assumed: a dedicated
+            // plan that leaks payload through the funnel fails the bench.
+            anyhow::ensure!(
+                submit_bytes == 0,
+                "dedicated-dtn run served {submit_bytes} B through the submit funnel"
+            );
+            dtn_gbps = dtn_gbps.max(r.gbps);
+        }
+        println!(
+            "  {:<14}   {:>7.3} Gbps  {:>6.2} s   {:>8}   {:>7}",
+            label, r.gbps, r.wall_secs, submit_mib, dtn_mib
+        );
+        json_rows.push(format!(
+            "{{\"sweep\":\"source\",\"source\":\"{}\",\"data_nodes\":{},\"gbps\":{:.4},\
+             \"wall_secs\":{:.3},\"submit_mib\":{},\"dtn_mib\":{}}}",
+            label, data_nodes, r.gbps, r.wall_secs, submit_mib, dtn_mib
+        ));
+    }
+    println!(
+        "  dtn offload vs submit funnel: {:.2}x (dedicated rows verified to serve 0 \
+         payload bytes through the submit node)",
+        dtn_gbps / funnel_gbps
+    );
+
+    if let Ok(dir) = std::env::var("BENCH_REPORT_DIR") {
+        std::fs::create_dir_all(&dir).ok();
+        let path = format!("{dir}/queue_ablation.json");
+        std::fs::write(&path, format!("[{}]\n", json_rows.join(",\n ")))?;
+        eprintln!("wrote {path}");
+    }
     Ok(())
 }

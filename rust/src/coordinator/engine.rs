@@ -13,7 +13,8 @@ use crate::jobs::JobSpec;
 use crate::metrics::BinSeries;
 use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan};
 use crate::mover::{
-    AdmissionConfig, MoverStats, PoolRouter, RouterPolicy, RouterStats, ShadowPool,
+    AdmissionConfig, DataSource, MoverStats, PoolRouter, RouterPolicy, RouterStats, ShadowPool,
+    SourcePlan,
 };
 use crate::netsim::topology::{Testbed, TestbedSpec};
 use crate::netsim::{calib, FlowId};
@@ -47,6 +48,16 @@ pub struct EngineSpec {
     /// Pool-level routing strategy splitting the burst across submit
     /// nodes (irrelevant when `n_submit_nodes == 1`).
     pub router: RouterPolicy,
+    /// Dedicated data-transfer-node fleet size: each data node gets its
+    /// own monitored NIC in the topology and serves sandbox bytes under
+    /// the `source` plan. [`Engine::new`] takes the max of this and the
+    /// testbed's own `n_data_nodes`, then syncs both; a caller-supplied
+    /// router overrides both.
+    pub n_data_nodes: u32,
+    /// Data-source plan: whether admitted transfers' bytes are served
+    /// by the scheduling node's funnel (the paper baseline), the DTN
+    /// fleet, or a size-split hybrid.
+    pub source: SourcePlan,
     /// Distinct job owners, round-robined over procs (1 = the paper's
     /// single benchmark user; >1 makes fair-share scheduling visible).
     pub n_owners: u32,
@@ -74,6 +85,8 @@ impl EngineSpec {
             shadows: 1,
             n_submit_nodes: 1,
             router: RouterPolicy::LeastLoaded,
+            n_data_nodes: 0,
+            source: SourcePlan::SubmitFunnel,
             n_owners: 1,
             faults: FaultPlan::default(),
             seed: 20210901, // eScience 2021
@@ -94,8 +107,12 @@ impl EngineSpec {
     /// SHADOW_POOL_SIZE = 4
     /// N_SUBMIT_NODES = 4
     /// ROUTER_POLICY = ROUND_ROBIN
+    /// DATA_NODES = 4
+    /// SOURCE_PLAN = DEDICATED_DTN
+    /// DTN_THRESHOLD = 64MB
     /// FAULT_PLAN = kill:1@300; recover:1@900
     /// STEAL_THRESHOLD = 4
+    /// RECOVERY_RAMP = 32
     /// ```
     pub fn apply_config(
         &mut self,
@@ -119,8 +136,41 @@ impl EngineSpec {
         if cfg.raw("ROUTER_POLICY").is_some() {
             self.router = RouterPolicy::from_config(cfg)?;
         }
-        if cfg.raw("FAULT_PLAN").is_some() || cfg.raw("STEAL_THRESHOLD").is_some() {
-            self.faults = FaultPlan::from_config(cfg)?;
+        // FAULT_PLAN replaces the event schedule; STEAL_THRESHOLD and
+        // RECOVERY_RAMP are individual overrides, so a config carrying
+        // only a tuning knob doesn't wipe a scenario's built-in plan.
+        if cfg.raw("FAULT_PLAN").is_some() {
+            self.faults.events = FaultPlan::from_config(cfg)?.events;
+        }
+        if cfg.raw("STEAL_THRESHOLD").is_some() {
+            self.faults.steal_threshold = Some(cfg.get_u64("STEAL_THRESHOLD", 0)? as usize);
+        }
+        if cfg.raw("RECOVERY_RAMP").is_some() {
+            self.faults.recovery_ramp = Some(cfg.get_u64("RECOVERY_RAMP", 0)? as u32);
+        }
+        if cfg.raw("DATA_NODES").is_some() {
+            self.n_data_nodes = SourcePlan::data_nodes_from_config(cfg)?;
+        }
+        // SOURCE_PLAN replaces the plan; DTN_THRESHOLD alone only
+        // re-tunes an existing hybrid plan (it must not silently reset
+        // a scenario's preset plan to the funnel default).
+        if cfg.raw("SOURCE_PLAN").is_some() {
+            self.source = SourcePlan::from_config(cfg)?;
+        } else if let SourcePlan::Hybrid { ref mut threshold } = self.source {
+            *threshold = cfg.get_bytes("DTN_THRESHOLD", *threshold)?;
+        }
+        // Heterogeneous data fleets: DATA_NODE_GBPS = 100, 25 sets
+        // per-DTN NIC capacity.
+        if let Some(raw) = cfg.raw("DATA_NODE_GBPS") {
+            let caps: Result<Vec<f64>, _> =
+                raw.split(',').map(|s| s.trim().parse::<f64>()).collect();
+            self.testbed.data_node_gbps = caps.map_err(|_| {
+                crate::config::ConfigError::Type(
+                    "DATA_NODE_GBPS".into(),
+                    "comma-separated Gbps list",
+                    raw.to_string(),
+                )
+            })?;
         }
         // Heterogeneous submit fleets: SUBMIT_NODE_GBPS = 100, 100, 25
         // sets per-node NIC capacity (topology AND router weights).
@@ -173,11 +223,15 @@ struct FlowCtx {
 #[derive(Debug)]
 pub struct EngineResult {
     pub schedd: Schedd,
-    /// Aggregate submit-NIC throughput: the element-wise sum of
-    /// `monitors` (with one submit node, identical to `monitors[0]`).
+    /// Aggregate data-plane throughput: the element-wise sum of every
+    /// monitored source NIC — `monitors` AND `dtn_monitors` (with one
+    /// submit node and no DTNs, identical to `monitors[0]`).
     pub monitor: BinSeries,
     /// Per-submit-node NIC throughput series, index = node.
     pub monitors: Vec<BinSeries>,
+    /// Per-data-node NIC throughput series, index = dtn (empty with no
+    /// DTN fleet).
+    pub dtn_monitors: Vec<BinSeries>,
     pub finished_at: SimTime,
     pub negotiation_cycles: u64,
     pub peak_concurrent_transfers: u32,
@@ -207,6 +261,10 @@ pub struct Engine {
     /// dropped once the output sandbox goes on the wire, or when the
     /// node is killed — outputs then return through a survivor).
     node_by_proc: HashMap<u32, usize>,
+    /// proc -> data source serving its sandbox bytes (recorded at
+    /// admission alongside `node_by_proc`; a killed DTN's entries are
+    /// re-recorded when the router re-sources them).
+    source_by_proc: HashMap<u32, DataSource>,
     /// proc -> routing epoch: bumped on every (re-)admission so pending
     /// `StartInputFlow` events from a superseded routing are stale.
     epoch_by_proc: HashMap<u32, u32>,
@@ -236,7 +294,14 @@ impl Engine {
         let capacities: Vec<f64> = (0..n)
             .map(|s| spec.testbed.submit_node_nic_gbps(s))
             .collect();
-        let router = PoolRouter::new(nodes, capacities, spec.router);
+        // The data-source plane: the DTN fleet mirrors the topology's
+        // data-node NIC budgets, like submit capacities above.
+        let n_dtns = spec.n_data_nodes.max(spec.testbed.n_data_nodes) as usize;
+        let dtn_caps: Vec<f64> = (0..n_dtns)
+            .map(|d| spec.testbed.data_node_nic_gbps(d))
+            .collect();
+        let router = PoolRouter::new(nodes, capacities, spec.router)
+            .with_source_plan(spec.source, dtn_caps);
         Engine::with_router(spec, router)
     }
 
@@ -253,9 +318,15 @@ impl Engine {
     /// `tests/router_unified.rs`). The router's node count overrides the
     /// spec's `n_submit_nodes`, and the topology gets one monitored
     /// submit NIC per node.
-    pub fn with_router(mut spec: EngineSpec, router: PoolRouter) -> Engine {
+    pub fn with_router(mut spec: EngineSpec, mut router: PoolRouter) -> Engine {
         spec.n_submit_nodes = router.node_count() as u32;
         spec.testbed.n_submit_nodes = router.node_count() as u32;
+        spec.n_data_nodes = router.dtn_count() as u32;
+        spec.testbed.n_data_nodes = router.dtn_count() as u32;
+        spec.source = router.source_plan();
+        if let Some(ramp) = spec.faults.recovery_ramp {
+            router.set_recovery_ramp(ramp);
+        }
         let tb = Testbed::build(spec.testbed.clone());
         let schedd = Schedd::with_router("schedd@submit", router);
         let startds: Vec<Startd> = spec
@@ -281,6 +352,7 @@ impl Engine {
             events: EventQueue::new(),
             assignment: HashMap::new(),
             node_by_proc: HashMap::new(),
+            source_by_proc: HashMap::new(),
             epoch_by_proc: HashMap::new(),
             flows: HashMap::new(),
             bg_nominal_gbps,
@@ -323,8 +395,20 @@ impl Engine {
         self.schedd
             .submit_transaction(self.job_specs(), SimTime::ZERO);
         self.events.push(SimTime::ZERO, Ev::Negotiate);
-        if let Err(e) = self.spec.faults.validate(self.schedd.mover.node_count()) {
+        if let Err(e) = self
+            .spec
+            .faults
+            .validate(self.schedd.mover.node_count(), self.schedd.mover.dtn_count())
+        {
             bail!("invalid fault plan: {e}");
+        }
+        if let Err(e) = self
+            .schedd
+            .mover
+            .source_plan()
+            .validate(self.schedd.mover.dtn_count())
+        {
+            bail!("invalid source plan: {e}");
         }
         for (idx, ev) in self.faults.iter().enumerate() {
             self.events
@@ -391,7 +475,26 @@ impl Engine {
                     .expect("every submit NIC is monitored")
             })
             .collect();
-        let monitor = BinSeries::sum(&monitors);
+        let dtn_monitors: Vec<BinSeries> = self
+            .tb
+            .data_txs
+            .clone()
+            .into_iter()
+            .map(|tx| {
+                self.tb
+                    .net
+                    .take_monitor(tx)
+                    .expect("every data NIC is monitored")
+            })
+            .collect();
+        // The aggregate covers the whole data plane: submit funnels AND
+        // the DTN fleet (per-source series sum to it by construction).
+        let all: Vec<BinSeries> = monitors
+            .iter()
+            .chain(dtn_monitors.iter())
+            .cloned()
+            .collect();
+        let monitor = BinSeries::sum(&all);
         let mover = self.schedd.mover.stats();
         let router = self.schedd.mover.router_stats();
         Ok(EngineResult {
@@ -400,6 +503,7 @@ impl Engine {
             schedd: self.schedd,
             monitor,
             monitors,
+            dtn_monitors,
             finished_at,
             negotiation_cycles: self.negotiator.cycles,
             errors: 0,
@@ -466,6 +570,7 @@ impl Engine {
     fn start_routed(&mut self, routed: Vec<crate::mover::Routed>, t: SimTime) {
         for r in routed {
             self.node_by_proc.insert(r.ticket, r.node);
+            self.source_by_proc.insert(r.ticket, r.source);
             let epoch = {
                 let e = self.epoch_by_proc.entry(r.ticket).or_insert(0);
                 *e += 1;
@@ -494,8 +599,13 @@ impl Engine {
         }
         let slot = self.assignment[&proc_];
         let node = self.node_by_proc[&proc_];
+        let source = self
+            .source_by_proc
+            .get(&proc_)
+            .copied()
+            .unwrap_or(DataSource::Funnel { node });
         self.schedd.input_started(proc_, t);
-        let path = self.tb.path_to_worker(node, slot.worker as usize);
+        let path = self.source_path(source, slot.worker as usize);
         let cap = self.tb.path_profile().stream_cap_bps();
         let bytes = self.schedd.job(proc_).spec.input_bytes.0 as f64;
         let fid = self.tb.net.start_flow(path, bytes, cap);
@@ -544,10 +654,18 @@ impl Engine {
         }
     }
 
+    /// Links a transfer from `source` to `worker` crosses.
+    fn source_path(&self, source: DataSource, worker: usize) -> Vec<crate::netsim::LinkId> {
+        match source {
+            DataSource::Funnel { node } => self.tb.path_to_worker(node, worker),
+            DataSource::Dtn { dtn } => self.tb.dtn_path_to_worker(dtn, worker),
+        }
+    }
+
     fn on_run_done(&mut self, proc_: u32, t: SimTime) {
         self.schedd.run_done(proc_, t);
         let slot = self.assignment[&proc_];
-        // Output sandbox flows worker -> its submit node (not queued:
+        // Output sandbox flows worker -> its data source (not queued:
         // HTCondor's download throttle exists but outputs here are 4 KB).
         // If that node was killed while the payload ran, the (tiny)
         // output returns through a survivor instead — the sim analogue of
@@ -556,7 +674,15 @@ impl Engine {
             Some(n) => n,
             None => self.schedd.mover.first_live_node().unwrap_or(0),
         };
-        let path = self.tb.path_from_worker(node, slot.worker as usize);
+        let preferred = self
+            .source_by_proc
+            .remove(&proc_)
+            .unwrap_or(DataSource::Funnel { node });
+        let source = self.schedd.mover.output_source(preferred, node);
+        let path = match source {
+            DataSource::Funnel { node } => self.tb.path_from_worker(node, slot.worker as usize),
+            DataSource::Dtn { dtn } => self.tb.dtn_path_from_worker(dtn, slot.worker as usize),
+        };
         let cap = self.tb.path_profile().stream_cap_bps();
         let bytes = self.schedd.job(proc_).spec.output_bytes.0.max(1) as f64;
         let fid = self.tb.net.start_flow(path, bytes, cap);
@@ -580,6 +706,30 @@ impl Engine {
         }
     }
 
+    /// Tear down the transfers a fault strands: bump the procs' routing
+    /// epochs (pending `StartInputFlow` events fall stale) and abort
+    /// their in-flight INPUT flows (partial bytes stay accounted, the
+    /// jobs return to `TransferQueued` for re-admission). Shared by the
+    /// submit-node and data-node kill paths.
+    fn abort_input_procs(&mut self, procs: &[u32], t: SimTime) {
+        for &p in procs {
+            *self.epoch_by_proc.entry(p).or_insert(0) += 1;
+        }
+        let aborted: Vec<FlowId> = self
+            .flows
+            .iter()
+            .filter(|(_, ctx)| {
+                matches!(ctx.kind, FlowKind::Input) && procs.contains(&ctx.proc_)
+            })
+            .map(|(&fid, _)| fid)
+            .collect();
+        for fid in aborted {
+            let ctx = self.flows.remove(&fid).expect("aborted flow has context");
+            self.tb.net.finish_flow(fid);
+            self.schedd.input_aborted(ctx.proc_, t);
+        }
+    }
+
     /// Inject one fault event: engine-side teardown/restore first (flows,
     /// NIC rates, job states), then the router-side half that is shared
     /// verbatim with the real fabric (`chaos::apply_to_router`), then
@@ -587,7 +737,11 @@ impl Engine {
     fn apply_fault(&mut self, idx: usize, t: SimTime) {
         let ev = self.faults[idx];
         let node = ev.node();
-        let bytes_before = self.tb.net.link(self.tb.submit_txs[node]).bytes_carried as u64;
+        let bytes_before = if ev.is_dtn() {
+            self.tb.net.link(self.tb.data_txs[node]).bytes_carried as u64
+        } else {
+            self.tb.net.link(self.tb.submit_txs[node]).bytes_carried as u64
+        };
         match ev {
             FaultEvent::KillNode { .. } => {
                 // Everything the dead node was serving is torn down
@@ -603,22 +757,15 @@ impl Engine {
                     .map(|(&p, _)| p)
                     .collect();
                 for &p in &procs {
-                    *self.epoch_by_proc.entry(p).or_insert(0) += 1;
                     self.node_by_proc.remove(&p);
+                    // A source pointing at the dead funnel dies with it
+                    // (outputs fall back to a survivor); a DTN source
+                    // outlives its scheduling node.
+                    if self.source_by_proc.get(&p) == Some(&DataSource::Funnel { node }) {
+                        self.source_by_proc.remove(&p);
+                    }
                 }
-                let aborted: Vec<FlowId> = self
-                    .flows
-                    .iter()
-                    .filter(|(_, ctx)| {
-                        matches!(ctx.kind, FlowKind::Input) && procs.contains(&ctx.proc_)
-                    })
-                    .map(|(&fid, _)| fid)
-                    .collect();
-                for fid in aborted {
-                    let ctx = self.flows.remove(&fid).expect("aborted flow has context");
-                    self.tb.net.finish_flow(fid);
-                    self.schedd.input_aborted(ctx.proc_, t);
-                }
+                self.abort_input_procs(&procs, t);
             }
             FaultEvent::RecoverNode { .. } => {
                 // Restore the node's full NIC rate (undoes DegradeNic).
@@ -627,6 +774,40 @@ impl Engine {
             }
             FaultEvent::DegradeNic { gbps, .. } => {
                 self.tb.set_submit_nic_gbps(node, gbps);
+            }
+            FaultEvent::KillDtn { dtn, .. } => {
+                // The data node's in-flight INPUT transfers die with it;
+                // scheduling state (admission slots) survives — the
+                // router re-sources the tickets and fresh starts are
+                // scheduled below. Jobs already executing keep running;
+                // their outputs return via `output_source`'s fallback.
+                let candidates: Vec<u32> = self
+                    .source_by_proc
+                    .iter()
+                    .filter(|&(_, &s)| s == DataSource::Dtn { dtn })
+                    .map(|(&p, _)| p)
+                    .collect();
+                let torn: Vec<u32> = candidates
+                    .into_iter()
+                    .filter(|&p| {
+                        matches!(
+                            self.schedd.job(p).state,
+                            crate::jobs::JobState::TransferQueued
+                                | crate::jobs::JobState::TransferringInput
+                        )
+                    })
+                    .collect();
+                for &p in &torn {
+                    self.source_by_proc.remove(&p);
+                }
+                self.abort_input_procs(&torn, t);
+            }
+            FaultEvent::RecoverDtn { dtn, .. } => {
+                let gbps = self.tb.spec.data_node_nic_gbps(dtn);
+                self.tb.set_data_nic_gbps(dtn, gbps);
+            }
+            FaultEvent::DegradeDtnNic { dtn, gbps, .. } => {
+                self.tb.set_data_nic_gbps(dtn, gbps);
             }
         }
         let admitted = apply_to_router(
@@ -667,6 +848,8 @@ mod tests {
             shadows: 1,
             n_submit_nodes: 1,
             router: RouterPolicy::LeastLoaded,
+            n_data_nodes: 0,
+            source: SourcePlan::SubmitFunnel,
             n_owners: 1,
             faults: FaultPlan::default(),
             seed: 1,
@@ -803,6 +986,78 @@ mod tests {
     }
 
     #[test]
+    fn dedicated_dtn_offloads_the_submit_nic() {
+        let mut spec = tiny_spec();
+        spec.n_data_nodes = 2;
+        spec.source = SourcePlan::DedicatedDtn;
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 40);
+        assert_eq!(r.dtn_monitors.len(), 2);
+        // Every input byte crossed a data-node NIC...
+        let dtn_total: f64 = r.dtn_monitors.iter().map(|m| m.total_bytes()).sum();
+        assert!(
+            dtn_total >= r.total_input_bytes,
+            "dtn NICs {dtn_total} >= inputs {}",
+            r.total_input_bytes
+        );
+        // ...and the submit funnel carried nothing (control traffic is
+        // not modeled on the NIC).
+        assert_eq!(r.monitors.len(), 1);
+        assert_eq!(r.monitors[0].total_bytes(), 0.0);
+        // Round-robin placement across the fleet.
+        assert_eq!(r.router.routed_per_dtn, vec![20, 20]);
+        assert_eq!(r.router.dtn_failed, 0);
+        // Per-source series sum to the aggregate.
+        let sum: f64 = r.monitors.iter().chain(r.dtn_monitors.iter())
+            .map(|m| m.total_bytes())
+            .sum();
+        assert!((sum - r.monitor.total_bytes()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dtn_plan_without_data_nodes_errors() {
+        let mut spec = tiny_spec();
+        spec.source = SourcePlan::DedicatedDtn; // no data nodes
+        assert!(Engine::new(spec).run().is_err());
+    }
+
+    #[test]
+    fn dtn_kill_fails_over_mid_burst() {
+        let mut spec = tiny_spec();
+        spec.n_data_nodes = 2;
+        spec.source = SourcePlan::DedicatedDtn;
+        // Kill dtn 0 early in the burst; never recover it.
+        spec.faults = FaultPlan::default().kill_dtn(0, 5.0);
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 40, "burst survives the dead DTN");
+        assert_eq!(r.chaos.count("kill-dtn"), 1);
+        assert_eq!(r.router.dtn_failed, 1);
+        // The survivor picked up everything admitted after the kill.
+        assert!(
+            r.router.routed_per_dtn[1] > r.router.routed_per_dtn[0],
+            "survivor serves more: {:?}",
+            r.router.routed_per_dtn
+        );
+        assert_eq!(r.errors, 0);
+    }
+
+    #[test]
+    fn dtn_flap_schedule_completes() {
+        let mut spec = tiny_spec();
+        spec.n_data_nodes = 2;
+        spec.source = SourcePlan::DedicatedDtn;
+        spec.faults = FaultPlan::default().flap_dtn(0, 2.0, 10.0, 1.0);
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 40);
+        assert_eq!(
+            r.chaos.count("degrade-dtn") + r.chaos.count("recover-dtn"),
+            r.chaos.records.len(),
+            "only flap events fired"
+        );
+        assert!(r.chaos.count("degrade-dtn") >= 1);
+    }
+
+    #[test]
     fn fair_share_policy_completes_and_respects_limit() {
         let mut spec = tiny_spec();
         spec.policy = crate::mover::AdmissionConfig::FairShare { limit: 3 };
@@ -832,14 +1087,28 @@ mod tests {
              N_SUBMIT_NODES = 2\n\
              ROUTER_POLICY = ROUND_ROBIN\n\
              SUBMIT_NODE_GBPS = 100, 25\n\
+             DATA_NODES = 2\n\
+             SOURCE_PLAN = HYBRID\n\
+             DTN_THRESHOLD = 50MB\n\
+             DATA_NODE_GBPS = 100, 40\n\
              FAULT_PLAN = kill:1@5; recover:1@20\n\
-             STEAL_THRESHOLD = 3\n",
+             STEAL_THRESHOLD = 3\n\
+             RECOVERY_RAMP = 8\n",
         )
         .unwrap();
         let mut spec = tiny_spec();
         spec.apply_config(&cfg).unwrap();
         assert_eq!(spec.faults.events.len(), 2);
         assert_eq!(spec.faults.steal_threshold, Some(3));
+        assert_eq!(spec.faults.recovery_ramp, Some(8));
+        assert_eq!(spec.n_data_nodes, 2);
+        assert_eq!(
+            spec.source,
+            SourcePlan::Hybrid {
+                threshold: 50_000_000
+            }
+        );
+        assert_eq!(spec.testbed.data_node_gbps, vec![100.0, 40.0]);
         assert_eq!(spec.n_jobs, 12);
         assert_eq!(spec.input_bytes, Bytes(10_000_000));
         assert_eq!(spec.n_owners, 3);
@@ -859,6 +1128,33 @@ mod tests {
         );
         assert_eq!(r.mover.bytes_per_shard.len(), 4, "2 nodes x 2 shards");
         assert_eq!(r.monitors.len(), 2);
+
+        // A config carrying only a fault TUNING knob must not wipe a
+        // pre-set fault schedule (e.g. a scenario's built-in plan).
+        let tune_only = crate::config::Config::parse("RECOVERY_RAMP = 16").unwrap();
+        let mut spec3 = tiny_spec();
+        spec3.faults = FaultPlan::default().kill(0, 5.0).with_steal_threshold(2);
+        spec3.apply_config(&tune_only).unwrap();
+        assert_eq!(spec3.faults.events.len(), 1, "schedule survives");
+        assert_eq!(spec3.faults.steal_threshold, Some(2));
+        assert_eq!(spec3.faults.recovery_ramp, Some(16));
+
+        // Likewise DTN_THRESHOLD alone re-tunes a hybrid plan but never
+        // resets a preset plan to the funnel default.
+        let thr_only = crate::config::Config::parse("DTN_THRESHOLD = 7MB").unwrap();
+        let mut spec4 = tiny_spec();
+        spec4.source = SourcePlan::DedicatedDtn;
+        spec4.apply_config(&thr_only).unwrap();
+        assert_eq!(spec4.source, SourcePlan::DedicatedDtn, "plan survives");
+        let mut spec5 = tiny_spec();
+        spec5.source = SourcePlan::Hybrid { threshold: 1 };
+        spec5.apply_config(&thr_only).unwrap();
+        assert_eq!(
+            spec5.source,
+            SourcePlan::Hybrid {
+                threshold: 7_000_000
+            }
+        );
 
         // Knobs absent from the config leave the spec untouched.
         let empty = crate::config::Config::parse("").unwrap();

@@ -3,21 +3,22 @@
 //! quotes (sustained Gbps, makespan, median runtime, median input transfer
 //! time, error count).
 //!
-//! ## Per-submit-node NIC aggregation format
+//! ## Per-source NIC aggregation format
 //!
-//! Multi-submit-node runs monitor every submit NIC separately:
-//! [`Report::per_node_series`] holds one [`BinSeries`] per node (index =
-//! node, all with the same bin width), and the aggregate
-//! [`Report::series`] is their element-wise sum — bin `b` of the
-//! aggregate equals `Σ_node per_node_series[node][b]`
-//! ([`BinSeries::sum`]). The 5-minute [`Report::series_5min`] figure is
-//! rebinned from the aggregate, exactly like the paper's monitoring
-//! plots; per-node figures can be rebinned the same way.
+//! Multi-source runs monitor every serving NIC separately:
+//! [`Report::per_node_series`] holds one [`BinSeries`] per submit node
+//! and [`Report::per_dtn_series`] one per dedicated data node (all with
+//! the same bin width), and the aggregate [`Report::series`] is their
+//! element-wise sum — bin `b` of the aggregate equals
+//! `Σ_source per_source_series[source][b]` ([`BinSeries::sum`]). The
+//! 5-minute [`Report::series_5min`] figure is rebinned from the
+//! aggregate, exactly like the paper's monitoring plots; per-source
+//! figures can be rebinned the same way.
 
 use super::engine::{Engine, EngineResult, EngineSpec};
 use crate::metrics::BinSeries;
 use crate::mover::{
-    AdmissionConfig, ChaosTimeline, FaultPlan, MoverStats, RouterPolicy, RouterStats,
+    AdmissionConfig, ChaosTimeline, FaultPlan, MoverStats, RouterPolicy, RouterStats, SourcePlan,
 };
 use crate::netsim::topology::TestbedSpec;
 use crate::transfer::ThrottlePolicy;
@@ -54,6 +55,11 @@ pub enum Scenario {
     /// killed mid-burst and recovered later; the router drains, retries
     /// and work-steals so the burst finishes at line rate.
     KillRecover4,
+    /// The DTN offload the paper's caveat motivates: one submit node
+    /// handles scheduling only, while a fleet of 4 dedicated data nodes
+    /// (4 × 100 Gbps NICs) serves every sandbox byte — the Petascale
+    /// DTN deployment shape.
+    DtnOffload4,
 }
 
 impl Scenario {
@@ -68,6 +74,7 @@ impl Scenario {
             Scenario::LanMultiSubmit4 => "multi-submit-4",
             Scenario::Hetero25100 => "hetero-25-100",
             Scenario::KillRecover4 => "kill-recover-4",
+            Scenario::DtnOffload4 => "dtn-offload-4",
         }
     }
 
@@ -130,6 +137,13 @@ impl Scenario {
                     .with_steal_threshold(4);
                 spec
             }
+            Scenario::DtnOffload4 => {
+                let mut spec =
+                    EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled);
+                spec.n_data_nodes = 4;
+                spec.source = SourcePlan::DedicatedDtn;
+                spec
+            }
         }
     }
 
@@ -145,7 +159,8 @@ impl Scenario {
             | Scenario::LanSharded4
             | Scenario::LanMultiSubmit4
             | Scenario::Hetero25100
-            | Scenario::KillRecover4 => None,
+            | Scenario::KillRecover4
+            | Scenario::DtnOffload4 => None,
         }
     }
 
@@ -159,7 +174,8 @@ impl Scenario {
             | Scenario::LanSharded4
             | Scenario::LanMultiSubmit4
             | Scenario::Hetero25100
-            | Scenario::KillRecover4 => None,
+            | Scenario::KillRecover4
+            | Scenario::DtnOffload4 => None,
         }
     }
 }
@@ -214,6 +230,14 @@ impl Experiment {
         self
     }
 
+    /// Override the data-node fleet size and source plan (scenario
+    /// knob).
+    pub fn with_data_nodes(mut self, nodes: u32, source: SourcePlan) -> Experiment {
+        self.spec.n_data_nodes = nodes;
+        self.spec.source = source;
+        self
+    }
+
     pub fn run(self) -> Result<Report> {
         let result = Engine::new(self.spec.clone()).run()?;
         Ok(Report::from_engine(self.label, &self.spec, result))
@@ -245,6 +269,11 @@ pub struct Report {
     pub n_submit_nodes: usize,
     /// Pool-router strategy label (meaningful when `n_submit_nodes > 1`).
     pub router_policy: String,
+    /// Dedicated data-node count (0 = submit-funnel-only pool).
+    pub n_data_nodes: usize,
+    /// Data-source plan label (`submit-funnel` / `dedicated-dtn` /
+    /// `hybrid@<bytes>`).
+    pub source_plan: String,
     /// Aggregate data-mover accounting (per-shard vectors node-major,
     /// spurious completes, failed/recovered-node and work-steal counts).
     pub mover: MoverStats,
@@ -261,10 +290,14 @@ pub struct Report {
     pub series: BinSeries,
     /// Per-submit-node NIC series (index = node, same bin width as
     /// `series`). Aggregation contract: `series` is the element-wise sum
-    /// of these — bin `b` of `series` equals the sum over nodes of bin
-    /// `b` of `per_node_series[node]` — so per-node and pool-level plots
-    /// stay consistent by construction (`metrics::BinSeries::sum`).
+    /// of ALL per-source series — these AND `per_dtn_series` — so
+    /// per-source and pool-level plots stay consistent by construction
+    /// (`metrics::BinSeries::sum`).
     pub per_node_series: Vec<BinSeries>,
+    /// Per-data-node NIC series (index = dtn, same bin width as
+    /// `series`; empty with no DTN fleet). Part of the same aggregation
+    /// contract as `per_node_series`.
+    pub per_dtn_series: Vec<BinSeries>,
 }
 
 impl Report {
@@ -307,12 +340,15 @@ impl Report {
             shards: r.mover.bytes_per_shard.len(),
             n_submit_nodes: r.monitors.len(),
             router_policy: spec.router.label().to_string(),
+            n_data_nodes: r.dtn_monitors.len(),
+            source_plan: spec.source.label(),
             mover: r.mover,
             router: r.router,
             chaos: r.chaos,
             series_5min,
             series: r.monitor,
             per_node_series: r.monitors,
+            per_dtn_series: r.dtn_monitors,
         }
     }
 
@@ -391,7 +427,72 @@ mod tests {
         assert_eq!(kr.n_submit_nodes, 4);
         assert_eq!(kr.faults.events.len(), 2);
         assert_eq!(kr.faults.steal_threshold, Some(4));
-        assert!(kr.faults.validate(4).is_ok());
+        assert!(kr.faults.validate(4, 0).is_ok());
+
+        let dtn = Scenario::DtnOffload4.spec();
+        assert_eq!(dtn.n_data_nodes, 4);
+        assert_eq!(dtn.source, SourcePlan::DedicatedDtn);
+        assert_eq!(dtn.n_submit_nodes, 1, "scheduling stays on one node");
+    }
+
+    /// The tentpole acceptance experiment: with 4 DTNs serving the
+    /// bytes, the submit-node NIC carries <10% of what it carries under
+    /// the funnel baseline, at equal aggregate goodput.
+    #[test]
+    fn dtn_offload_keeps_submit_nic_near_idle_at_equal_goodput() {
+        let shrink = |mut spec: EngineSpec| {
+            spec.n_jobs = 60;
+            spec.input_bytes = Bytes(200_000_000);
+            spec.testbed.monitor_bin = SimTime::from_secs(5);
+            spec
+        };
+        let funnel = Experiment::custom("funnel-baseline", shrink(Scenario::LanPaper.spec()))
+            .run()
+            .unwrap();
+        let offload = Experiment::custom("dtn-offload", shrink(Scenario::DtnOffload4.spec()))
+            .run()
+            .unwrap();
+        assert_eq!(funnel.errors, 0);
+        assert_eq!(offload.errors, 0);
+
+        let submit_bytes = |r: &Report| -> f64 {
+            r.per_node_series.iter().map(|s| s.total_bytes()).sum()
+        };
+        let funnel_submit = submit_bytes(&funnel);
+        let offload_submit = submit_bytes(&offload);
+        assert!(funnel_submit > 0.0);
+        assert!(
+            offload_submit < 0.10 * funnel_submit,
+            "submit NIC still hot under DTN offload: {offload_submit} vs funnel {funnel_submit}"
+        );
+        // The DTN fleet carried the burst instead...
+        let dtn_bytes: f64 = offload.per_dtn_series.iter().map(|s| s.total_bytes()).sum();
+        assert!(dtn_bytes >= 60.0 * 200_000_000.0);
+        // ...at matching aggregate goodput.
+        assert!(
+            offload.sustained_gbps() >= 0.9 * funnel.sustained_gbps(),
+            "offload goodput {} dropped vs funnel {}",
+            offload.sustained_gbps(),
+            funnel.sustained_gbps()
+        );
+        assert!(
+            offload.makespan.as_secs_f64() <= funnel.makespan.as_secs_f64() * 1.1,
+            "offload makespan {} regressed vs funnel {}",
+            offload.makespan,
+            funnel.makespan
+        );
+        // Per-source aggregation contract holds with a DTN fleet.
+        let mut all = offload.per_node_series.clone();
+        all.extend(offload.per_dtn_series.iter().cloned());
+        let summed = BinSeries::sum(&all);
+        let agg = offload.series.bins();
+        let per = summed.bins();
+        assert_eq!(agg.len(), per.len());
+        for ((_, a), (_, b)) in agg.iter().zip(per.iter()) {
+            assert!((a - b).abs() < 1e-6, "bin mismatch: {a} vs {b}");
+        }
+        assert_eq!(offload.n_data_nodes, 4);
+        assert_eq!(offload.source_plan, "dedicated-dtn");
     }
 
     /// ROADMAP calibration: on the mixed 25/100 Gbps fleet, routing
@@ -452,6 +553,13 @@ mod tests {
             .with_submit_nodes(4, RouterPolicy::OwnerAffinity);
         assert_eq!(routed.spec.n_submit_nodes, 4);
         assert_eq!(routed.spec.router, RouterPolicy::OwnerAffinity);
+        let sourced = Experiment::scenario(Scenario::LanPaper)
+            .with_data_nodes(2, SourcePlan::Hybrid { threshold: 1 << 20 });
+        assert_eq!(sourced.spec.n_data_nodes, 2);
+        assert_eq!(
+            sourced.spec.source,
+            SourcePlan::Hybrid { threshold: 1 << 20 }
+        );
     }
 
     #[test]

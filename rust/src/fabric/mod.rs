@@ -11,5 +11,5 @@ pub mod tcp;
 
 pub use tcp::{
     run_real_pool, run_real_pool_router, run_real_pool_with, FileServer, RealPoolConfig,
-    RealPoolReport,
+    RealPoolReport, ServerRole,
 };

@@ -26,11 +26,11 @@
 use crate::jobs::JobSpec;
 use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan};
 use crate::mover::{
-    AdmissionConfig, MoverStats, PoolRouter, RouterPolicy, RouterStats, ShadowPool,
-    TransferRequest,
+    AdmissionConfig, DataSource, MoverStats, PoolRouter, Routed, RouterPolicy, RouterStats,
+    ShadowPool, SourcePlan, TransferRequest,
 };
 use crate::runtime::engine::{NativeEngine, SealEngine};
-use crate::runtime::service::EngineHandle;
+use crate::runtime::service::{EngineHandle, EngineService};
 use crate::security::session::{self, PoolKey};
 use crate::security::Method;
 use crate::transfer::stream::{recv_stream, send_stream, StreamStats};
@@ -131,8 +131,29 @@ fn client_handshake(
     Ok(sess)
 }
 
-/// The submit-node file server: serves named in-memory files (the paper's
+/// The role a [`FileServer`] plays in the pool: the scheduling node's
+/// own funnel (the paper baseline) or a dedicated data-transfer node.
+/// Same server type, same wire protocol — the role only names the
+/// endpoint in thread names and logs, which is the point: a DTN *is* a
+/// submit-node file server minus the scheduling duties.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServerRole {
+    Funnel,
+    Dtn,
+}
+
+impl ServerRole {
+    fn thread_name(&self) -> &'static str {
+        match self {
+            ServerRole::Funnel => "htcdm-fileserver",
+            ServerRole::Dtn => "htcdm-dtn",
+        }
+    }
+}
+
+/// A pool file server: serves named in-memory files (the paper's
 /// hard-linked dataset) over sealed streams; receives output sandboxes.
+/// Backs both the submit-funnel and the DTN role (see [`ServerRole`]).
 pub struct FileServer {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
@@ -147,11 +168,24 @@ pub struct FileServer {
 }
 
 impl FileServer {
-    /// Start serving. `files` maps name -> content (hardlinks = shared
-    /// `Arc<Vec<u8>>`). `engines` holds one submit-side crypto-service
-    /// handle per shadow shard; each connection announces its assigned
-    /// shard and is sealed by that shard's engine.
+    /// Start serving in the submit-funnel role. `files` maps name ->
+    /// content (hardlinks = shared `Arc<Vec<u8>>`). `engines` holds one
+    /// server-side crypto-service handle per shadow shard; each
+    /// connection announces its assigned shard and is sealed by that
+    /// shard's engine.
     pub fn start(
+        files: HashMap<String, Arc<Vec<u8>>>,
+        pool_key: PoolKey,
+        engines: Vec<EngineHandle>,
+        chunk_words: usize,
+    ) -> Result<FileServer> {
+        FileServer::start_with_role(ServerRole::Funnel, files, pool_key, engines, chunk_words)
+    }
+
+    /// [`FileServer::start`] with an explicit [`ServerRole`] (the DTN
+    /// fleet uses [`ServerRole::Dtn`]).
+    pub fn start_with_role(
+        role: ServerRole,
         files: HashMap<String, Arc<Vec<u8>>>,
         pool_key: PoolKey,
         engines: Vec<EngineHandle>,
@@ -173,7 +207,7 @@ impl FileServer {
         let outputs2 = outputs_received.clone();
         let conns2 = conns.clone();
         let thread = std::thread::Builder::new()
-            .name("htcdm-fileserver".into())
+            .name(role.thread_name().into())
             .spawn(move || {
                 let mut conn_seq: u64 = 0;
                 let mut threads = Vec::new();
@@ -368,6 +402,12 @@ pub struct RealPoolConfig {
     /// (e.g. `[100.0, 25.0]`). Empty = uniform; otherwise must have
     /// `n_submit_nodes` entries.
     pub node_capacities: Vec<f64>,
+    /// Dedicated data-transfer-node fleet size: one [`ServerRole::Dtn`]
+    /// file server per data node, serving bytes under `source` while
+    /// the submit node keeps only scheduling (admission) duties.
+    pub data_nodes: u32,
+    /// Data-source plan choosing funnel vs DTN per admitted transfer.
+    pub source: SourcePlan,
     /// Fault-injection schedule (wall-clock seconds from burst start):
     /// `KillNode` crashes the node's file server mid-burst (in-flight
     /// connections break; workers retry through the router),
@@ -392,6 +432,8 @@ impl Default for RealPoolConfig {
             n_submit_nodes: 1,
             router: RouterPolicy::LeastLoaded,
             node_capacities: Vec::new(),
+            data_nodes: 0,
+            source: SourcePlan::SubmitFunnel,
             faults: FaultPlan::default(),
         }
     }
@@ -417,6 +459,13 @@ pub struct RealPoolReport {
     /// so it keeps growing after a recovery; sums to roughly
     /// `total_payload_bytes` plus re-served partial transfers).
     pub bytes_served_per_node: Vec<u64>,
+    /// Payload bytes each data node's file servers put on the wire
+    /// (index = dtn; same generation-accumulation rule; empty with no
+    /// DTN fleet). Under `SourcePlan::DedicatedDtn` these carry the
+    /// whole burst while `bytes_served_per_node` stays ~0.
+    pub bytes_served_per_dtn: Vec<u64>,
+    /// Data-source plan label the run executed with.
+    pub source_plan: String,
     /// Per-node fault timeline (empty for fault-free runs).
     pub chaos: ChaosTimeline,
 }
@@ -444,10 +493,75 @@ fn shard_engine_factory(use_xla: bool) -> impl Fn(usize) -> Result<Box<dyn SealE
 
 /// Admission gate shared between worker threads: the router (the policy
 /// object) plus the set of admitted-but-not-yet-claimed tickets, mapped
-/// to their (submit node, shadow shard).
+/// to their full routing decision (schedule node, shard, data source).
+/// A chaos re-source overwrites a ticket's entry with its new source.
 struct GateState {
     router: PoolRouter,
-    ready: HashMap<u32, (usize, usize)>,
+    ready: HashMap<u32, Routed>,
+}
+
+/// Chaos kill, server side: crash one endpoint's file server (funnel or
+/// DTN — same protocol), accumulate its served bytes into the
+/// cross-generation total, and return them.
+fn crash_server(
+    servers: &Mutex<Vec<Option<FileServer>>>,
+    totals: &[AtomicU64],
+    node: usize,
+) -> u64 {
+    match servers.lock().unwrap()[node].take() {
+        Some(mut server) => {
+            server.stop();
+            let b = server.bytes_served.load(Ordering::Relaxed);
+            totals[node].fetch_add(b, Ordering::Relaxed);
+            b
+        }
+        None => 0,
+    }
+}
+
+/// End-of-run shutdown: stop every live server in a fleet (funnel or
+/// DTN) and fold its served bytes into the cross-generation totals —
+/// the same stop-and-accumulate contract as [`crash_server`].
+fn stop_fleet(servers: &Mutex<Vec<Option<FileServer>>>, totals: &[AtomicU64]) {
+    let mut servers = servers.lock().unwrap();
+    for (node, slot) in servers.iter_mut().enumerate() {
+        if let Some(server) = slot.as_mut() {
+            server.stop();
+            totals[node]
+                .fetch_add(server.bytes_served.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        *slot = None;
+    }
+}
+
+/// Chaos recovery, server side: restart one endpoint's file server on a
+/// fresh port and publish the new address — shared by the funnel and
+/// DTN roles so the restart-before-unpoison protocol lives in one
+/// place. Returns false when the rebind failed (the event is skipped).
+#[allow(clippy::too_many_arguments)]
+fn restart_server(
+    role: ServerRole,
+    files: &HashMap<String, Arc<Vec<u8>>>,
+    key: &PoolKey,
+    handles: Vec<EngineHandle>,
+    chunk_words: usize,
+    addrs: &Mutex<Vec<std::net::SocketAddr>>,
+    servers: &Mutex<Vec<Option<FileServer>>>,
+    node: usize,
+) -> bool {
+    match FileServer::start_with_role(role, files.clone(), key.clone(), handles, chunk_words) {
+        Ok(server) => {
+            addrs.lock().unwrap()[node] = server.addr;
+            servers.lock().unwrap()[node] = Some(server);
+            true
+        }
+        Err(e) => {
+            log::error!(
+                "chaos: {role:?} {node} recovery failed to restart its file server: {e:#}"
+            );
+            false
+        }
+    }
 }
 
 /// Run a full real-mode pool on loopback: one submit file server per
@@ -470,7 +584,8 @@ pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
             n_nodes
         );
     };
-    let router = PoolRouter::new(nodes, capacities, cfg.router);
+    let router = PoolRouter::new(nodes, capacities, cfg.router)
+        .with_source_plan(cfg.source, vec![1.0; cfg.data_nodes as usize]);
     let (report, _router) = run_real_pool_router(&cfg, router)?;
     Ok(report)
 }
@@ -503,8 +618,14 @@ pub fn run_real_pool_router(
 ) -> Result<(RealPoolReport, PoolRouter)> {
     let pool_key = PoolKey::from_passphrase(&cfg.passphrase);
     router.ensure_engines(shard_engine_factory(cfg.use_xla_engine));
-    if let Err(e) = cfg.faults.validate(router.node_count()) {
+    if let Err(e) = cfg.faults.validate(router.node_count(), router.dtn_count()) {
         bail!("invalid fault plan: {e}");
+    }
+    if let Err(e) = router.source_plan().validate(router.dtn_count()) {
+        bail!("invalid source plan: {e}");
+    }
+    if let Some(ramp) = cfg.faults.recovery_ramp {
+        router.set_recovery_ramp(ramp);
     }
     for node in 0..router.node_count() {
         if router.node_config(node).limit() == 0 {
@@ -577,6 +698,50 @@ pub fn run_real_pool_router(
     let served_totals: Arc<Vec<AtomicU64>> =
         Arc::new((0..n_nodes).map(|_| AtomicU64::new(0)).collect());
 
+    // The DTN fleet: one ServerRole::Dtn file server per data node, each
+    // with its own seal-engine services (the same dataset view — every
+    // endpoint serves the shared hard-linked extents). The services
+    // outlive server generations so a chaos kill/recover restarts the
+    // listener without respawning engines. A fleet no code path can
+    // reach — a SubmitFunnel plan with no DTN-addressed faults — is not
+    // spawned at all (no idle listeners or crypto threads).
+    let fleet_reachable = router.source_plan().uses_dtns()
+        || cfg.faults.events.iter().any(|e| e.is_dtn());
+    let n_dtns = if fleet_reachable { router.dtn_count() } else { 0 };
+    let mut dtn_services: Vec<EngineService> = Vec::new();
+    let mut dtn_handles: Vec<Vec<EngineHandle>> = Vec::with_capacity(n_dtns);
+    for _ in 0..n_dtns {
+        let mut handles = Vec::with_capacity(cfg.shadows.max(1) as usize);
+        for _ in 0..cfg.shadows.max(1) {
+            let svc = EngineService::spawn({
+                let f = shard_engine_factory(cfg.use_xla_engine);
+                move || f(0)
+            });
+            handles.push(svc.handle());
+            dtn_services.push(svc);
+        }
+        dtn_handles.push(handles);
+    }
+    let mut dtn_server_vec: Vec<Option<FileServer>> = Vec::with_capacity(n_dtns);
+    for handles in &dtn_handles {
+        dtn_server_vec.push(Some(FileServer::start_with_role(
+            ServerRole::Dtn,
+            files.clone(),
+            pool_key.clone(),
+            handles.clone(),
+            cfg.chunk_words,
+        )?));
+    }
+    let dtn_addrs: Arc<Mutex<Vec<std::net::SocketAddr>>> = Arc::new(Mutex::new(
+        dtn_server_vec
+            .iter()
+            .map(|s| s.as_ref().expect("just started").addr)
+            .collect(),
+    ));
+    let dtn_servers: Arc<Mutex<Vec<Option<FileServer>>>> = Arc::new(Mutex::new(dtn_server_vec));
+    let dtn_served_totals: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n_dtns).map(|_| AtomicU64::new(0)).collect());
+
     let queue: Arc<Mutex<Vec<JobSpec>>> = Arc::new(Mutex::new(
         crate::workload::benchmark_burst(
             cfg.n_jobs,
@@ -608,6 +773,10 @@ pub fn run_real_pool_router(
         let servers = servers.clone();
         let addrs = addrs.clone();
         let served_totals = served_totals.clone();
+        let dtn_servers = dtn_servers.clone();
+        let dtn_addrs = dtn_addrs.clone();
+        let dtn_served_totals = dtn_served_totals.clone();
+        let dtn_handles = dtn_handles.clone();
         let chaos_log = chaos_log.clone();
         let burst_done = burst_done.clone();
         let files = files.clone();
@@ -630,7 +799,11 @@ pub fn run_real_pool_router(
                             std::thread::sleep(std::time::Duration::from_millis(5));
                         }
                         let node = ev.node();
-                        let mut bytes_before = served_totals[node].load(Ordering::Relaxed);
+                        let mut bytes_before = if ev.is_dtn() {
+                            dtn_served_totals[node].load(Ordering::Relaxed)
+                        } else {
+                            served_totals[node].load(Ordering::Relaxed)
+                        };
                         // A recovering node's fresh file server must be
                         // listening BEFORE the router routes to it again.
                         // Recovering a node that never died is a no-op on
@@ -642,51 +815,65 @@ pub fn run_real_pool_router(
                                 let g = lock.lock().unwrap();
                                 (g.router.handles(node), g.router.is_failed(node))
                             };
-                            if was_failed {
-                                match FileServer::start(
-                                    files.clone(),
-                                    key.clone(),
+                            if was_failed
+                                && !restart_server(
+                                    ServerRole::Funnel,
+                                    &files,
+                                    &key,
                                     handles,
                                     chunk_words,
-                                ) {
-                                    Ok(server) => {
-                                        addrs.lock().unwrap()[node] = server.addr;
-                                        servers.lock().unwrap()[node] = Some(server);
-                                    }
-                                    Err(e) => {
-                                        log::error!(
-                                            "chaos: node {node} recovery failed to restart \
-                                             its file server: {e:#}"
-                                        );
-                                        continue;
-                                    }
-                                }
+                                    &addrs,
+                                    &servers,
+                                    node,
+                                )
+                            {
+                                continue;
+                            }
+                        }
+                        // Same rule for a recovering data node.
+                        if matches!(ev, FaultEvent::RecoverDtn { .. }) {
+                            let was_failed = {
+                                let (lock, _) = &*gate;
+                                lock.lock().unwrap().router.is_dtn_failed(node)
+                            };
+                            if was_failed
+                                && !restart_server(
+                                    ServerRole::Dtn,
+                                    &files,
+                                    &key,
+                                    dtn_handles[node].clone(),
+                                    chunk_words,
+                                    &dtn_addrs,
+                                    &dtn_servers,
+                                    node,
+                                )
+                            {
+                                continue;
                             }
                         }
                         // Router-side half, shared verbatim with the sim
-                        // engine: poison/drain, un-poison/re-route, or
+                        // engine: poison/drain/re-source, un-poison, or
                         // re-rate, plus threshold work-stealing.
                         let admitted = {
                             let (lock, cv) = &*gate;
                             let mut g = lock.lock().unwrap();
                             let admitted = apply_to_router(&ev, &mut g.router, threshold);
                             for a in &admitted {
-                                g.ready.insert(a.ticket, (a.node, a.shard));
+                                g.ready.insert(a.ticket, *a);
                             }
                             cv.notify_all();
                             admitted.len()
                         };
                         // A killed node's server crashes AFTER the router
                         // is poisoned, so failing workers find their
-                        // tickets already re-routed when they retry.
+                        // tickets already re-routed when they retry; a
+                        // killed data node likewise, with its tickets
+                        // already re-sourced.
                         if matches!(ev, FaultEvent::KillNode { .. }) {
-                            let taken = servers.lock().unwrap()[node].take();
-                            if let Some(mut server) = taken {
-                                server.stop();
-                                let b = server.bytes_served.load(Ordering::Relaxed);
-                                served_totals[node].fetch_add(b, Ordering::Relaxed);
-                                bytes_before += b;
-                            }
+                            bytes_before += crash_server(&servers, &served_totals, node);
+                        }
+                        if matches!(ev, FaultEvent::KillDtn { .. }) {
+                            bytes_before += crash_server(&dtn_servers, &dtn_served_totals, node);
                         }
                         chaos_log.lock().unwrap().record(
                             node,
@@ -710,6 +897,7 @@ pub fn run_real_pool_router(
         let key = pool_key.clone();
         let gate = gate.clone();
         let addrs = addrs.clone();
+        let dtn_addrs = dtn_addrs.clone();
         let out_bytes = cfg.output_bytes;
         worker_threads.push(std::thread::spawn(move || {
             let mut rng = Prng::new(0xBEEF_0000 + w as u64);
@@ -730,7 +918,7 @@ pub fn run_real_pool_router(
                     let req =
                         TransferRequest::new(ticket, job.owner.clone(), job.input_bytes.0);
                     for a in g.router.request(req) {
-                        g.ready.insert(a.ticket, (a.node, a.shard));
+                        g.ready.insert(a.ticket, a);
                     }
                     cv.notify_all();
                     let mut strand_waits = 0u32;
@@ -758,13 +946,13 @@ pub fn run_real_pool_router(
                         }
                     }
                 };
-                let Some((mut node, mut shard)) = admission else {
+                let Some(mut routed) = admission else {
                     // Every node dead and nothing recovered: fail the
                     // job and cancel its stranded request.
                     {
                         let mut g = lock.lock().unwrap();
                         for a in g.router.complete(ticket) {
-                            g.ready.insert(a.ticket, (a.node, a.shard));
+                            g.ready.insert(a.ticket, a);
                         }
                         cv.notify_all();
                     }
@@ -773,26 +961,46 @@ pub fn run_real_pool_router(
                     continue;
                 };
 
-                // Run the job, retrying through the router when the
-                // assigned submit node is killed mid-transfer: the
-                // failure shows up as a socket error, the router has
-                // already re-routed the ticket, and the worker waits for
-                // its new admission and reconnects there.
+                // Run the job against its data source, retrying through
+                // the router when the serving endpoint — the scheduling
+                // node's funnel OR its data node — is killed
+                // mid-transfer: the failure shows up as a socket error,
+                // the router has already re-routed / re-sourced the
+                // ticket, and the worker waits for its new placement and
+                // reconnects there.
                 let mut attempts = 0u32;
                 let result = loop {
-                    let addr = addrs.lock().unwrap()[node];
-                    match run_job(addr, &key, &job.input_file, &output, shard, &mut rng) {
+                    let addr = match routed.source {
+                        DataSource::Funnel { node } => addrs.lock().unwrap()[node],
+                        DataSource::Dtn { dtn } => dtn_addrs.lock().unwrap()[dtn],
+                    };
+                    match run_job(addr, &key, &job.input_file, &output, routed.shard, &mut rng)
+                    {
                         Ok(ok) => break Ok(ok),
                         Err(e) => {
                             attempts += 1;
                             let mut g = lock.lock().unwrap();
                             // The failure is retryable when the router
-                            // moved this ticket off the node we just
-                            // failed against (its node died — even if it
-                            // has since recovered).
-                            let rerouted = g.router.is_failed(node)
-                                || g.ready.contains_key(&ticket)
-                                || g.router.node_of(ticket).is_some_and(|n| n != node);
+                            // moved this ticket off the endpoint we just
+                            // failed against (its node or DTN died —
+                            // even if it has since recovered).
+                            let rerouted = g.ready.contains_key(&ticket)
+                                || match routed.source {
+                                    DataSource::Funnel { node } => {
+                                        g.router.is_failed(node)
+                                            || g
+                                                .router
+                                                .node_of(ticket)
+                                                .is_some_and(|n| n != node)
+                                    }
+                                    DataSource::Dtn { dtn } => {
+                                        g.router.is_dtn_failed(dtn)
+                                            || g
+                                                .router
+                                                .source_of(ticket)
+                                                .is_some_and(|s| s != routed.source)
+                                    }
+                                };
                             if attempts >= 5 || !rerouted {
                                 // Not a node failure (or too many): final.
                                 break Err(e);
@@ -830,10 +1038,7 @@ pub fn run_real_pool_router(
                             };
                             drop(g);
                             match next {
-                                Some((n2, s2)) => {
-                                    node = n2;
-                                    shard = s2;
-                                }
+                                Some(r2) => routed = r2,
                                 None => break Err(e),
                             }
                         }
@@ -842,8 +1047,11 @@ pub fn run_real_pool_router(
 
                 {
                     let mut g = lock.lock().unwrap();
+                    // Scrub any re-source that raced this completion so
+                    // it can't sit in `ready` forever.
+                    g.ready.remove(&ticket);
                     for a in g.router.complete(ticket) {
-                        g.ready.insert(a.ticket, (a.node, a.shard));
+                        g.ready.insert(a.ticket, a);
                     }
                     cv.notify_all();
                 }
@@ -870,18 +1078,13 @@ pub fn run_real_pool_router(
     if let Some(t) = chaos_thread {
         t.join().map_err(|_| anyhow!("chaos thread panicked"))?;
     }
-    {
-        let mut servers = servers.lock().unwrap();
-        for (node, slot) in servers.iter_mut().enumerate() {
-            if let Some(server) = slot.as_mut() {
-                server.stop();
-                served_totals[node]
-                    .fetch_add(server.bytes_served.load(Ordering::Relaxed), Ordering::Relaxed);
-            }
-            *slot = None;
-        }
-    }
+    stop_fleet(&servers, &served_totals);
+    stop_fleet(&dtn_servers, &dtn_served_totals);
     let bytes_served_per_node: Vec<u64> = served_totals
+        .iter()
+        .map(|t| t.load(Ordering::Relaxed))
+        .collect();
+    let bytes_served_per_dtn: Vec<u64> = dtn_served_totals
         .iter()
         .map(|t| t.load(Ordering::Relaxed))
         .collect();
@@ -909,8 +1112,10 @@ pub fn run_real_pool_router(
         engine_desc,
         errors,
         mover: router.stats(),
+        source_plan: router.source_plan().label(),
         router: router.router_stats(),
         bytes_served_per_node,
+        bytes_served_per_dtn,
         chaos,
     };
     Ok((report, router))
@@ -935,6 +1140,8 @@ mod tests {
             n_submit_nodes: 1,
             router: RouterPolicy::LeastLoaded,
             node_capacities: Vec::new(),
+            data_nodes: 0,
+            source: SourcePlan::SubmitFunnel,
             faults: FaultPlan::default(),
         }
     }
@@ -1037,6 +1244,70 @@ mod tests {
         assert_eq!(r.errors, 0);
         assert_eq!(r.jobs_completed, 8);
         assert!(r.mover.peak_active <= 2);
+    }
+
+    #[test]
+    fn real_pool_dedicated_dtn_offloads_the_submit_server() {
+        let mut cfg = base_cfg();
+        cfg.data_nodes = 2;
+        cfg.source = SourcePlan::DedicatedDtn;
+        cfg.workers = 4;
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.jobs_completed, 8);
+        assert_eq!(r.source_plan, "dedicated-dtn");
+        // The submit node's server carried no payload — the fleet did.
+        assert_eq!(r.bytes_served_per_node, vec![0]);
+        assert_eq!(r.bytes_served_per_dtn.len(), 2);
+        let dtn_served: u64 = r.bytes_served_per_dtn.iter().sum();
+        assert_eq!(dtn_served, 8 * (256 << 10) as u64);
+        // Round-robin placement across the fleet.
+        assert_eq!(r.router.routed_per_dtn, vec![4, 4]);
+        assert_eq!(r.router.dtn_failed, 0);
+    }
+
+    #[test]
+    fn real_pool_hybrid_splits_by_size() {
+        // 256 KiB inputs against a 1-byte threshold: everything rides
+        // the DTN; against a huge threshold: everything rides the
+        // funnel. (Uniform sizes: the boundary property lives in
+        // tests/props.rs.)
+        for (threshold, via_dtn) in [(1u64, true), (u64::MAX, false)] {
+            let mut cfg = base_cfg();
+            cfg.data_nodes = 1;
+            cfg.source = SourcePlan::Hybrid { threshold };
+            let r = run_real_pool(cfg).unwrap();
+            assert_eq!(r.errors, 0, "threshold {threshold}");
+            let dtn_served: u64 = r.bytes_served_per_dtn.iter().sum();
+            let funnel_served: u64 = r.bytes_served_per_node.iter().sum();
+            if via_dtn {
+                assert_eq!(dtn_served, 8 * (256 << 10) as u64);
+                assert_eq!(funnel_served, 0);
+            } else {
+                assert_eq!(dtn_served, 0);
+                assert_eq!(funnel_served, 8 * (256 << 10) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn real_pool_rejects_dtn_plan_without_data_nodes() {
+        let mut cfg = base_cfg();
+        cfg.source = SourcePlan::DedicatedDtn;
+        assert!(run_real_pool(cfg).is_err());
+    }
+
+    #[test]
+    fn real_pool_dtn_degrade_records_timeline() {
+        let mut cfg = base_cfg();
+        cfg.data_nodes = 2;
+        cfg.source = SourcePlan::DedicatedDtn;
+        cfg.faults = FaultPlan::default().degrade_dtn(1, 0.0, 25.0);
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.jobs_completed, 8);
+        assert_eq!(r.chaos.count("degrade-dtn"), 1);
+        assert_eq!(r.chaos.records[0].node, 1);
     }
 
     #[test]

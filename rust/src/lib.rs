@@ -52,6 +52,50 @@
 //!   (coordinator::engine)   │  by its shard's engine (fabric::tcp)
 //! ```
 //!
+//! ## Data source plane
+//!
+//! The paper's central caveat — both input and output data route
+//! through the submission node — is now one *configuration* of a
+//! pluggable endpoint layer ([`mover::source`]). A [`mover::SourcePlan`]
+//! decides, per admitted transfer, which endpoint serves its bytes;
+//! every routing decision is a `(schedule node, data source)` pair:
+//!
+//! ```text
+//!         submit-funnel (paper baseline)        dedicated-dtn / hybrid
+//!
+//!         ┌────────────┐                        ┌────────────┐ scheduling
+//!         │ submit node│ scheduling             │ submit node│ control
+//!         │  + bytes   │ + every byte           └────────────┘ only
+//!         └─────┬──────┘                        ┌────┐ ┌────┐ ┌────┐
+//!               │ NIC (the ~90 Gbps             │dtn0│ │dtn1│ │dtn2│ bytes
+//!               ▼      ceiling)                 └──┬─┘ └──┬─┘ └──┬─┘
+//!         ┌──────────┐                             ▼      ▼      ▼
+//!         │ workers  │                          ┌──────────────────┐
+//!         └──────────┘                          │     workers      │
+//!                                               └──────────────────┘
+//! ```
+//!
+//! * `SubmitFunnel` — today's behavior; `DedicatedDtn` — a DTN fleet
+//!   with its own monitored NICs (outside the VPN overlay) serves every
+//!   byte while the submit node keeps only scheduling; `Hybrid` — small
+//!   sandboxes ride the funnel, sandboxes at/above `DTN_THRESHOLD` go
+//!   via DTNs. Knobs: `DATA_NODES` / `SOURCE_PLAN` / `DTN_THRESHOLD` /
+//!   `DATA_NODE_GBPS` in [`config`], `--data-nodes` / `--source` on the
+//!   CLI, and the `dtn-offload-4` scenario (4 × 100 Gbps DTNs behind
+//!   one scheduling node).
+//! * Selection is deterministic (round-robin over the live fleet;
+//!   hybrid compares `bytes >= threshold`), and failure-aware: a killed
+//!   DTN's in-flight transfers re-source onto survivors or fall back to
+//!   the funnel ([`mover::PoolRouter::fail_dtn`]), without touching
+//!   their admission slots. Chaos plans address data nodes with the
+//!   `dN` spelling (`kill:d0@30`), and `flap:N@T:PERIOD:GBPS` expands
+//!   into periodic slow-NIC degrade/restore cycles.
+//! * Reports carry one NIC series per source (`Report::per_node_series`
+//!   + `Report::per_dtn_series`, summing element-wise to
+//!   `Report::series`), so the acceptance experiment is a one-liner:
+//!   under `dtn-offload-4` the submit NIC series stays near-idle while
+//!   aggregate goodput matches the funnel baseline.
+//!
 //! * The schedd ([`daemons::schedd`]) delegates all routing and
 //!   admission mechanics to its [`mover::PoolRouter`] — a single-node
 //!   router is exactly the paper's one submit node.
@@ -75,8 +119,12 @@
 //!   ([`mover::PoolRouter::recover_node`], `MoverStats::node_recovered`)
 //!   and [`mover::PoolRouter::rebalance`] work-steals waiting transfers
 //!   from long survivor queues onto it until the max/min queue gap is
-//!   within the configured threshold (`MoverStats::stolen`). Reports
-//!   carry the per-node fault timeline (`Report::chaos`,
+//!   within the configured threshold (`MoverStats::stolen`). With
+//!   `RECOVERY_RAMP` / `--ramp` set, recovery is hysteretic: the node's
+//!   weighted-by-capacity routing weight ramps back over that many
+//!   decisions instead of step-restoring
+//!   ([`mover::PoolRouter::set_recovery_ramp`]). Reports carry the
+//!   per-node fault timeline (`Report::chaos`,
 //!   `RealPoolReport::chaos`).
 //! * [`mover::AdmissionPolicy`] generalizes HTCondor's
 //!   `FILE_TRANSFER_DISK_LOAD_THROTTLE`: the three classic throttles stay

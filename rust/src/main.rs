@@ -24,24 +24,28 @@ fn usage() -> ! {
          \n\
          commands:\n\
            experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay|fair-share|sharded-4|\n\
-                       multi-submit-4|hetero-25-100|kill-recover-4>\n\
+                       multi-submit-4|hetero-25-100|kill-recover-4|dtn-offload-4>\n\
                       [--scale N] [--csv FILE] [--config FILE]\n\
                       run a paper experiment on the simulated testbed;\n\
                       --config applies condor-style knobs (JOBS, INPUT_SIZE,\n\
                       N_OWNERS, TRANSFER_QUEUE_POLICY, SHADOW_POOL_SIZE,\n\
-                      N_SUBMIT_NODES, ROUTER_POLICY, FAULT_PLAN,\n\
-                      STEAL_THRESHOLD...)\n\
+                      N_SUBMIT_NODES, ROUTER_POLICY, DATA_NODES,\n\
+                      SOURCE_PLAN, DTN_THRESHOLD, FAULT_PLAN,\n\
+                      STEAL_THRESHOLD, RECOVERY_RAMP...)\n\
            pool       [--jobs N] [--workers W] [--mb SIZE] [--native]\n\
                       [--shadows N] [--policy disabled|disk-load|max-concurrent|fair-share|weighted-by-size]\n\
                       [--cap N] [--submit-nodes N] [--node-gbps G1,G2,...]\n\
                       [--router round-robin|least-loaded|owner-affinity|weighted-by-capacity]\n\
-                      [--fault PLAN] [--steal N]\n\
+                      [--data-nodes N] [--source funnel|dtn|hybrid[:BYTES]]\n\
+                      [--fault PLAN] [--steal N] [--ramp N]\n\
                       run a real-mode loopback pool (sealed bytes via PJRT);\n\
                       --submit-nodes > 1 runs one file server per submit node\n\
-                      behind the pool router; --fault injects chaos, e.g.\n\
-                      'kill:1@0.5; recover:1@2' (wall-clock seconds), with\n\
+                      behind the pool router; --data-nodes N serves bytes\n\
+                      from N dedicated DTN file servers under --source;\n\
+                      --fault injects chaos, e.g. 'kill:1@0.5; recover:1@2;\n\
+                      kill:d0@1' (wall-clock seconds, dN = data node), with\n\
                       --steal N enabling work-stealing past an N-deep\n\
-                      queue imbalance\n\
+                      queue imbalance and --ramp N hysteretic recovery\n\
            submit     <file>   parse a submit description and print the jobs\n\
            verify              cross-check the PJRT artifact vs the native engine\n\
            sizing              print the paper's steady-state pool arithmetic"
@@ -85,6 +89,7 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
         Some("multi-submit-4") => Scenario::LanMultiSubmit4,
         Some("hetero-25-100") => Scenario::Hetero25100,
         Some("kill-recover-4") => Scenario::KillRecover4,
+        Some("dtn-offload-4") => Scenario::DtnOffload4,
         _ => usage(),
     };
     let scale: u32 = arg_value(args, "--scale")
@@ -118,6 +123,26 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
                 .bytes_per_node
                 .iter()
                 .map(|b| (*b as f64 / 1e9 * 10.0).round() / 10.0)
+                .collect::<Vec<_>>()
+        );
+    }
+    if report.n_data_nodes > 0 {
+        println!(
+            "sources: {} over {} data nodes | per-dtn jobs {:?} | per-dtn GB {:?} | \
+             submit-NIC GB {:?}",
+            report.source_plan,
+            report.n_data_nodes,
+            report.router.routed_per_dtn,
+            report
+                .router
+                .bytes_per_dtn
+                .iter()
+                .map(|b| (*b as f64 / 1e9 * 10.0).round() / 10.0)
+                .collect::<Vec<_>>(),
+            report
+                .per_node_series
+                .iter()
+                .map(|s| (s.total_bytes() / 1e9 * 10.0).round() / 10.0)
                 .collect::<Vec<_>>()
         );
     }
@@ -173,6 +198,16 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
     if let Some(th) = arg_value(args, "--steal") {
         faults.steal_threshold = Some(th.parse().expect("--steal N"));
     }
+    if let Some(r) = arg_value(args, "--ramp") {
+        faults.recovery_ramp = Some(r.parse().expect("--ramp N"));
+    }
+    let source = match arg_value(args, "--source") {
+        None => htcdm::mover::SourcePlan::SubmitFunnel,
+        Some(name) => htcdm::mover::SourcePlan::parse(&name).unwrap_or_else(|| {
+            eprintln!("unknown --source '{name}'");
+            usage()
+        }),
+    };
     let cfg = RealPoolConfig {
         n_jobs: arg_value(args, "--jobs").map(|v| v.parse().unwrap()).unwrap_or(40),
         workers: arg_value(args, "--workers").map(|v| v.parse().unwrap()).unwrap_or(4),
@@ -195,17 +230,23 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
                     .collect()
             })
             .unwrap_or_default(),
+        data_nodes: arg_value(args, "--data-nodes")
+            .map(|v| v.parse().expect("--data-nodes N"))
+            .unwrap_or(0),
+        source,
         faults,
         ..Default::default()
     };
     eprintln!(
         "real-mode pool: {} jobs × {} MiB over {} workers, {} submit node(s) ({} router), \
-         {} shadow shard(s)/node, policy {}...",
+         {} data node(s) ({} sources), {} shadow shard(s)/node, policy {}...",
         cfg.n_jobs,
         cfg.input_bytes >> 20,
         cfg.workers,
         cfg.n_submit_nodes,
         cfg.router.label(),
+        cfg.data_nodes,
+        cfg.source.label(),
         cfg.shadows,
         cfg.policy.label()
     );
@@ -233,6 +274,23 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
                 .map(|b| b >> 20)
                 .collect::<Vec<_>>(),
             r.router.shard_failed
+        );
+    }
+    if !r.bytes_served_per_dtn.is_empty() {
+        println!(
+            "sources: {} | per-dtn jobs {:?} | per-dtn MiB served {:?} | submit MiB served {:?} \
+             | failed dtns {}",
+            r.source_plan,
+            r.router.routed_per_dtn,
+            r.bytes_served_per_dtn
+                .iter()
+                .map(|b| b >> 20)
+                .collect::<Vec<_>>(),
+            r.bytes_served_per_node
+                .iter()
+                .map(|b| b >> 20)
+                .collect::<Vec<_>>(),
+            r.router.dtn_failed
         );
     }
     if !r.chaos.is_empty() {

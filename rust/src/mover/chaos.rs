@@ -7,11 +7,16 @@
 //! of those nodes dies mid-burst — and comes back. This module is the
 //! shared vocabulary for that experiment:
 //!
-//! * [`FaultEvent`] — `KillNode` / `RecoverNode` / `DegradeNic`, each at
-//!   a fabric-local time (virtual seconds in the simulator, wall-clock
-//!   seconds on the real TCP fabric).
+//! * [`FaultEvent`] — `KillNode` / `RecoverNode` / `DegradeNic` (and
+//!   their `KillDtn` / `RecoverDtn` / `DegradeDtnNic` data-node
+//!   counterparts, spelled `dN` in plan text), each at a fabric-local
+//!   time (virtual seconds in the simulator, wall-clock seconds on the
+//!   real TCP fabric). `flap:N@T:PERIOD:GBPS` terms expand at parse
+//!   time into [`FLAP_CYCLES`] periodic degrade/restore pairs — the
+//!   slow-NIC flap model.
 //! * [`FaultPlan`] — an ordered list of events plus an optional
-//!   work-stealing threshold, attached to `EngineSpec`,
+//!   work-stealing threshold and recovery-ramp width (hysteresis:
+//!   [`PoolRouter::set_recovery_ramp`]), attached to `EngineSpec`,
 //!   `RealPoolConfig` and the `kill-recover-4` scenario, and parseable
 //!   from the `FAULT_PLAN` condor-style knob / `--fault` CLI flag.
 //! * [`apply_to_router`] — the router-side half of every event, shared
@@ -34,7 +39,14 @@
 use super::router::{PoolRouter, Routed};
 use crate::config::{Config, ConfigError};
 
-/// One injected fault, at a fabric-local time in seconds.
+/// Flap schedules (`flap:N@T:PERIOD:GBPS`) expand at parse time into
+/// this many degrade/restore cycles; compose several flap terms for
+/// longer schedules.
+pub const FLAP_CYCLES: usize = 6;
+
+/// One injected fault, at a fabric-local time in seconds. Events target
+/// either a submit node or (with the `d` prefix in plan text) a
+/// dedicated data node.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum FaultEvent {
     /// The submit node crashes: its file server / NIC vanish and the
@@ -47,6 +59,14 @@ pub enum FaultEvent {
     /// monitored link, and weighted-by-capacity routing tracks the new
     /// budget on both fabrics.
     DegradeNic { node: usize, at: f64, gbps: f64 },
+    /// The data node crashes: its in-flight transfers re-source onto
+    /// surviving DTNs or fail over to the submit funnel
+    /// ([`PoolRouter::fail_dtn`]); scheduling state is untouched.
+    KillDtn { dtn: usize, at: f64 },
+    /// The data node comes back and rejoins source selection.
+    RecoverDtn { dtn: usize, at: f64 },
+    /// The data node's NIC degrades to `gbps` (nominal).
+    DegradeDtnNic { dtn: usize, at: f64, gbps: f64 },
 }
 
 impl FaultEvent {
@@ -55,17 +75,34 @@ impl FaultEvent {
         match *self {
             FaultEvent::KillNode { at, .. }
             | FaultEvent::RecoverNode { at, .. }
-            | FaultEvent::DegradeNic { at, .. } => at,
+            | FaultEvent::DegradeNic { at, .. }
+            | FaultEvent::KillDtn { at, .. }
+            | FaultEvent::RecoverDtn { at, .. }
+            | FaultEvent::DegradeDtnNic { at, .. } => at,
         }
     }
 
-    /// Submit node the event targets.
+    /// Index of the node the event targets — a submit node, or a data
+    /// node when [`FaultEvent::is_dtn`] is true.
     pub fn node(&self) -> usize {
         match *self {
             FaultEvent::KillNode { node, .. }
             | FaultEvent::RecoverNode { node, .. }
             | FaultEvent::DegradeNic { node, .. } => node,
+            FaultEvent::KillDtn { dtn, .. }
+            | FaultEvent::RecoverDtn { dtn, .. }
+            | FaultEvent::DegradeDtnNic { dtn, .. } => dtn,
         }
+    }
+
+    /// Does the event target a dedicated data node (vs a submit node)?
+    pub fn is_dtn(&self) -> bool {
+        matches!(
+            self,
+            FaultEvent::KillDtn { .. }
+                | FaultEvent::RecoverDtn { .. }
+                | FaultEvent::DegradeDtnNic { .. }
+        )
     }
 
     /// Short action label for timelines and plan text.
@@ -74,6 +111,9 @@ impl FaultEvent {
             FaultEvent::KillNode { .. } => "kill",
             FaultEvent::RecoverNode { .. } => "recover",
             FaultEvent::DegradeNic { .. } => "degrade",
+            FaultEvent::KillDtn { .. } => "kill-dtn",
+            FaultEvent::RecoverDtn { .. } => "recover-dtn",
+            FaultEvent::DegradeDtnNic { .. } => "degrade-dtn",
         }
     }
 }
@@ -86,6 +126,11 @@ pub struct FaultPlan {
     /// [`PoolRouter::rebalance`] with this threshold, so long per-node
     /// queues spill onto recovered or idle nodes.
     pub steal_threshold: Option<usize>,
+    /// When set, a recovered node's routing weight ramps back over this
+    /// many routing decisions instead of step-restoring
+    /// ([`PoolRouter::set_recovery_ramp`]); both fabrics arm the router
+    /// with it before the burst.
+    pub recovery_ramp: Option<u32>,
 }
 
 impl FaultPlan {
@@ -111,9 +156,71 @@ impl FaultPlan {
         self
     }
 
+    /// Append a `KillDtn` event (builder style).
+    pub fn kill_dtn(mut self, dtn: usize, at: f64) -> FaultPlan {
+        self.events.push(FaultEvent::KillDtn { dtn, at });
+        self
+    }
+
+    /// Append a `RecoverDtn` event (builder style).
+    pub fn recover_dtn(mut self, dtn: usize, at: f64) -> FaultPlan {
+        self.events.push(FaultEvent::RecoverDtn { dtn, at });
+        self
+    }
+
+    /// Append a `DegradeDtnNic` event (builder style).
+    pub fn degrade_dtn(mut self, dtn: usize, at: f64, gbps: f64) -> FaultPlan {
+        self.events.push(FaultEvent::DegradeDtnNic { dtn, at, gbps });
+        self
+    }
+
+    /// Append a slow-NIC flap schedule (builder style): [`FLAP_CYCLES`]
+    /// degrade/restore pairs starting at `at`, one per `period` seconds
+    /// (degrade at the cycle start, restore half a period later). The
+    /// restore is a `RecoverNode`, which on a live node only restores
+    /// the NIC rate and routing weight.
+    pub fn flap(mut self, node: usize, at: f64, period: f64, gbps: f64) -> FaultPlan {
+        for k in 0..FLAP_CYCLES {
+            let start = at + k as f64 * period;
+            self.events.push(FaultEvent::DegradeNic {
+                node,
+                at: start,
+                gbps,
+            });
+            self.events.push(FaultEvent::RecoverNode {
+                node,
+                at: start + period / 2.0,
+            });
+        }
+        self
+    }
+
+    /// [`FaultPlan::flap`] against a data node (`flap:dN@T:PERIOD:GBPS`).
+    pub fn flap_dtn(mut self, dtn: usize, at: f64, period: f64, gbps: f64) -> FaultPlan {
+        for k in 0..FLAP_CYCLES {
+            let start = at + k as f64 * period;
+            self.events.push(FaultEvent::DegradeDtnNic {
+                dtn,
+                at: start,
+                gbps,
+            });
+            self.events.push(FaultEvent::RecoverDtn {
+                dtn,
+                at: start + period / 2.0,
+            });
+        }
+        self
+    }
+
     /// Set the work-stealing threshold (builder style).
     pub fn with_steal_threshold(mut self, threshold: usize) -> FaultPlan {
         self.steal_threshold = Some(threshold);
+        self
+    }
+
+    /// Set the recovery-ramp decision count (builder style).
+    pub fn with_recovery_ramp(mut self, decisions: u32) -> FaultPlan {
+        self.recovery_ramp = Some(decisions);
         self
     }
 
@@ -129,10 +236,20 @@ impl FaultPlan {
         v
     }
 
-    /// Check every event against the pool shape before running it.
-    pub fn validate(&self, n_nodes: usize) -> Result<(), String> {
+    /// Check every event against the pool shape (submit nodes AND data
+    /// nodes) before running it.
+    pub fn validate(&self, n_nodes: usize, n_dtns: usize) -> Result<(), String> {
         for ev in &self.events {
-            if ev.node() >= n_nodes {
+            if ev.is_dtn() {
+                if ev.node() >= n_dtns {
+                    return Err(format!(
+                        "{} targets data node {} but the pool has {} data node(s)",
+                        ev.label(),
+                        ev.node(),
+                        n_dtns
+                    ));
+                }
+            } else if ev.node() >= n_nodes {
                 return Err(format!(
                     "{} targets node {} but the pool has {} submit node(s)",
                     ev.label(),
@@ -143,7 +260,9 @@ impl FaultPlan {
             if !ev.at().is_finite() || ev.at() < 0.0 {
                 return Err(format!("{} at {} — time must be >= 0", ev.label(), ev.at()));
             }
-            if let FaultEvent::DegradeNic { gbps, .. } = ev {
+            if let FaultEvent::DegradeNic { gbps, .. } | FaultEvent::DegradeDtnNic { gbps, .. } =
+                ev
+            {
                 if !gbps.is_finite() || *gbps <= 0.0 {
                     return Err(format!("degrade to {gbps} Gbps — must be > 0"));
                 }
@@ -156,13 +275,17 @@ impl FaultPlan {
     /// `--fault` CLI flag:
     ///
     /// ```text
-    /// FAULT_PLAN = kill:1@30; recover:1@90; degrade:0@10:25
+    /// FAULT_PLAN = kill:1@30; recover:1@90; degrade:0@10:25; kill:d0@40; flap:d1@60:20:25
     /// ```
     ///
     /// Events are `;`- or `,`-separated; each is `ACTION:NODE@SECONDS`,
-    /// with degrade taking a trailing `:GBPS`.
+    /// with degrade taking a trailing `:GBPS`. A node spelled `dN`
+    /// targets data node N instead of submit node N.
+    /// `flap:NODE@START:PERIOD:GBPS` expands at parse time into
+    /// [`FLAP_CYCLES`] periodic degrade/restore pairs (degrade at each
+    /// cycle start, restore half a period later).
     pub fn parse(text: &str) -> Result<FaultPlan, String> {
-        let mut events = Vec::new();
+        let mut plan = FaultPlan::default();
         for part in text.split([';', ',']) {
             let part = part.trim();
             if part.is_empty() {
@@ -174,50 +297,79 @@ impl FaultPlan {
             let (node_s, time_s) = rest
                 .split_once('@')
                 .ok_or_else(|| format!("'{part}': expected NODE@SECONDS"))?;
-            let node: usize = node_s
-                .trim()
+            let node_s = node_s.trim();
+            let (is_dtn, idx_s) = match node_s.strip_prefix(['d', 'D']) {
+                Some(idx) => (true, idx),
+                None => (false, node_s),
+            };
+            let node: usize = idx_s
                 .parse()
                 .map_err(|_| format!("'{part}': bad node index '{node_s}'"))?;
-            match action.trim().to_ascii_lowercase().as_str() {
-                "kill" => events.push(FaultEvent::KillNode {
-                    node,
-                    at: parse_secs(time_s, part)?,
-                }),
-                "recover" => events.push(FaultEvent::RecoverNode {
-                    node,
-                    at: parse_secs(time_s, part)?,
-                }),
-                "degrade" => {
+            match (action.trim().to_ascii_lowercase().as_str(), is_dtn) {
+                ("kill", false) => {
+                    plan = plan.kill(node, parse_secs(time_s, part)?);
+                }
+                ("kill", true) => {
+                    plan = plan.kill_dtn(node, parse_secs(time_s, part)?);
+                }
+                ("recover", false) => {
+                    plan = plan.recover(node, parse_secs(time_s, part)?);
+                }
+                ("recover", true) => {
+                    plan = plan.recover_dtn(node, parse_secs(time_s, part)?);
+                }
+                ("degrade", dtn) => {
                     let (t_s, g_s) = time_s
                         .split_once(':')
                         .ok_or_else(|| format!("'{part}': degrade needs NODE@SECONDS:GBPS"))?;
-                    let gbps: f64 = g_s
+                    let gbps = parse_gbps(g_s, part)?;
+                    let at = parse_secs(t_s, part)?;
+                    plan = if dtn {
+                        plan.degrade_dtn(node, at, gbps)
+                    } else {
+                        plan.degrade(node, at, gbps)
+                    };
+                }
+                ("flap", dtn) => {
+                    let mut it = time_s.split(':');
+                    let t_s = it.next().unwrap_or("");
+                    let (p_s, g_s) = match (it.next(), it.next(), it.next()) {
+                        (Some(p), Some(g), None) => (p, g),
+                        _ => {
+                            return Err(format!(
+                                "'{part}': flap needs NODE@START:PERIOD:GBPS"
+                            ))
+                        }
+                    };
+                    let at = parse_secs(t_s, part)?;
+                    let period: f64 = p_s
                         .trim()
                         .parse()
-                        .map_err(|_| format!("'{part}': bad Gbps '{g_s}'"))?;
-                    events.push(FaultEvent::DegradeNic {
-                        node,
-                        at: parse_secs(t_s, part)?,
-                        gbps,
-                    });
+                        .map_err(|_| format!("'{part}': bad period '{p_s}'"))?;
+                    if !period.is_finite() || period <= 0.0 {
+                        return Err(format!("'{part}': flap period must be > 0"));
+                    }
+                    let gbps = parse_gbps(g_s, part)?;
+                    plan = if dtn {
+                        plan.flap_dtn(node, at, period, gbps)
+                    } else {
+                        plan.flap(node, at, period, gbps)
+                    };
                 }
-                other => return Err(format!("unknown fault action '{other}'")),
+                (other, _) => return Err(format!("unknown fault action '{other}'")),
             }
         }
-        Ok(FaultPlan {
-            events,
-            steal_threshold: None,
-        })
+        Ok(plan)
     }
 
-    /// The `FAULT_PLAN` / `STEAL_THRESHOLD` condor-style knobs (an absent
-    /// `FAULT_PLAN` yields the empty plan).
+    /// The `FAULT_PLAN` / `STEAL_THRESHOLD` / `RECOVERY_RAMP`
+    /// condor-style knobs (an absent `FAULT_PLAN` yields the empty plan).
     pub fn from_config(cfg: &Config) -> Result<FaultPlan, ConfigError> {
         let mut plan = match cfg.raw("FAULT_PLAN") {
             Some(raw) => FaultPlan::parse(raw).map_err(|_| {
                 ConfigError::Type(
                     "FAULT_PLAN".into(),
-                    "fault plan (kill:N@T; recover:N@T; degrade:N@T:GBPS)",
+                    "fault plan (kill:N@T; recover:N@T; degrade:N@T:GBPS; flap:N@T:PERIOD:GBPS; dN targets data nodes)",
                     raw.to_string(),
                 )
             })?,
@@ -226,10 +378,14 @@ impl FaultPlan {
         if cfg.raw("STEAL_THRESHOLD").is_some() {
             plan.steal_threshold = Some(cfg.get_u64("STEAL_THRESHOLD", 0)? as usize);
         }
+        if cfg.raw("RECOVERY_RAMP").is_some() {
+            plan.recovery_ramp = Some(cfg.get_u64("RECOVERY_RAMP", 0)? as u32);
+        }
         Ok(plan)
     }
 
-    /// Plan text in the same spelling [`FaultPlan::parse`] accepts.
+    /// Plan text in the same spelling [`FaultPlan::parse`] accepts
+    /// (flap schedules appear in their expanded degrade/restore form).
     pub fn describe(&self) -> String {
         let parts: Vec<String> = self
             .events
@@ -239,6 +395,11 @@ impl FaultPlan {
                 FaultEvent::RecoverNode { node, at } => format!("recover:{node}@{at}"),
                 FaultEvent::DegradeNic { node, at, gbps } => {
                     format!("degrade:{node}@{at}:{gbps}")
+                }
+                FaultEvent::KillDtn { dtn, at } => format!("kill:d{dtn}@{at}"),
+                FaultEvent::RecoverDtn { dtn, at } => format!("recover:d{dtn}@{at}"),
+                FaultEvent::DegradeDtnNic { dtn, at, gbps } => {
+                    format!("degrade:d{dtn}@{at}:{gbps}")
                 }
             })
             .collect();
@@ -257,11 +418,17 @@ fn parse_secs(text: &str, part: &str) -> Result<f64, String> {
     Ok(at)
 }
 
+fn parse_gbps(text: &str, part: &str) -> Result<f64, String> {
+    text.trim()
+        .parse()
+        .map_err(|_| format!("'{part}': bad Gbps '{text}'"))
+}
+
 /// The router-side half of one fault event — identical for both fabrics
 /// (fabric-specific effects wrap around it: the sim tears down flows and
 /// re-rates NICs, the real fabric crashes / restarts file servers).
-/// Returns every transfer admitted NOW on the surviving / recovered
-/// nodes, including any freed by threshold work-stealing.
+/// Returns every transfer admitted or re-sourced NOW on the surviving /
+/// recovered nodes, including any freed by threshold work-stealing.
 pub fn apply_to_router(
     ev: &FaultEvent,
     router: &mut PoolRouter,
@@ -274,6 +441,15 @@ pub fn apply_to_router(
             router.set_node_capacity(node, gbps);
             Vec::new()
         }
+        FaultEvent::KillDtn { dtn, .. } => router.fail_dtn(dtn),
+        FaultEvent::RecoverDtn { dtn, .. } => {
+            router.recover_dtn(dtn);
+            Vec::new()
+        }
+        FaultEvent::DegradeDtnNic { dtn, gbps, .. } => {
+            router.set_dtn_capacity(dtn, gbps);
+            Vec::new()
+        }
     };
     if let Some(threshold) = steal_threshold {
         out.extend(router.rebalance(threshold));
@@ -281,11 +457,14 @@ pub fn apply_to_router(
     out
 }
 
-/// One applied fault, for reports.
+/// One applied fault, for reports. `node` indexes the submit fleet for
+/// plain actions and the DATA fleet for `*-dtn` actions
+/// ([`FaultRecord::is_dtn`] discriminates).
 #[derive(Debug, Clone)]
 pub struct FaultRecord {
     pub node: usize,
-    /// `"kill"` / `"recover"` / `"degrade"` (see [`FaultEvent::label`]).
+    /// `"kill"` / `"recover"` / `"degrade"` and their `-dtn` variants
+    /// (see [`FaultEvent::label`]).
     pub action: &'static str,
     /// When the plan scheduled the event (fabric-local seconds).
     pub planned_s: f64,
@@ -299,6 +478,13 @@ pub struct FaultRecord {
     /// total exceeds its recovery record's value demonstrably served
     /// bytes again.
     pub bytes_served_before: u64,
+}
+
+impl FaultRecord {
+    /// Does this record target a data node (vs a submit node)?
+    pub fn is_dtn(&self) -> bool {
+        self.action.ends_with("-dtn")
+    }
 }
 
 /// The per-node fault timeline a chaos run reports.
@@ -331,9 +517,22 @@ impl ChaosTimeline {
         self.records.is_empty()
     }
 
-    /// Records touching one node, in application order.
+    /// Records touching one SUBMIT node, in application order (data-node
+    /// records live in their own index space — see
+    /// [`ChaosTimeline::for_dtn`]).
     pub fn for_node(&self, node: usize) -> Vec<&FaultRecord> {
-        self.records.iter().filter(|r| r.node == node).collect()
+        self.records
+            .iter()
+            .filter(|r| !r.is_dtn() && r.node == node)
+            .collect()
+    }
+
+    /// Records touching one DATA node, in application order.
+    pub fn for_dtn(&self, dtn: usize) -> Vec<&FaultRecord> {
+        self.records
+            .iter()
+            .filter(|r| r.is_dtn() && r.node == dtn)
+            .collect()
     }
 
     /// Applied events with the given action label.
@@ -347,8 +546,14 @@ impl ChaosTimeline {
             .iter()
             .map(|r| {
                 format!(
-                    "{} node {} @{:.2}s (planned {:.2}s): {} re-admitted, {} B served before",
-                    r.action, r.node, r.applied_s, r.planned_s, r.admitted, r.bytes_served_before
+                    "{} {} {} @{:.2}s (planned {:.2}s): {} re-admitted, {} B served before",
+                    r.action,
+                    if r.is_dtn() { "data node" } else { "node" },
+                    r.node,
+                    r.applied_s,
+                    r.planned_s,
+                    r.admitted,
+                    r.bytes_served_before
                 )
             })
             .collect::<Vec<_>>()
@@ -384,26 +589,133 @@ mod tests {
         assert!(FaultPlan::parse("kill:1@-3").is_err());
         assert!(FaultPlan::parse("explode:1@3").is_err());
         assert!(FaultPlan::parse("degrade:1@3").is_err(), "degrade needs Gbps");
-        assert!(FaultPlan::parse("degrade:1@3:0").unwrap().validate(2).is_err());
+        assert!(
+            FaultPlan::parse("degrade:1@3:0")
+                .unwrap()
+                .validate(2, 0)
+                .is_err()
+        );
+        assert!(FaultPlan::parse("flap:1@3:20").is_err(), "flap needs Gbps");
+        assert!(FaultPlan::parse("flap:1@3:0:25").is_err(), "period > 0");
+        assert!(FaultPlan::parse("kill:dx@3").is_err());
         assert!(FaultPlan::parse("").unwrap().is_empty());
     }
 
     #[test]
     fn validate_checks_node_bounds() {
         let plan = FaultPlan::default().kill(3, 1.0);
-        assert!(plan.validate(4).is_ok());
-        assert!(plan.validate(3).is_err());
+        assert!(plan.validate(4, 0).is_ok());
+        assert!(plan.validate(3, 0).is_err());
+    }
+
+    #[test]
+    fn validate_checks_dtn_bounds_separately() {
+        // kill:d3 needs 4 DATA nodes, regardless of submit-node count.
+        let plan = FaultPlan::default().kill_dtn(3, 1.0);
+        assert!(plan.validate(1, 4).is_ok());
+        assert!(plan.validate(8, 3).is_err());
+    }
+
+    #[test]
+    fn parse_dtn_events_roundtrip() {
+        let plan = FaultPlan::parse("kill:d1@30; recover:d1@90; degrade:d0@10:25").unwrap();
+        assert_eq!(
+            plan.events,
+            vec![
+                FaultEvent::KillDtn { dtn: 1, at: 30.0 },
+                FaultEvent::RecoverDtn { dtn: 1, at: 90.0 },
+                FaultEvent::DegradeDtnNic {
+                    dtn: 0,
+                    at: 10.0,
+                    gbps: 25.0
+                },
+            ]
+        );
+        assert!(plan.events.iter().all(|e| e.is_dtn()));
+        assert_eq!(FaultPlan::parse(&plan.describe()).unwrap(), plan);
+    }
+
+    #[test]
+    fn flap_expands_to_periodic_degrade_restore_pairs() {
+        let plan = FaultPlan::parse("flap:1@30:20:25").unwrap();
+        assert_eq!(plan.events.len(), 2 * FLAP_CYCLES);
+        assert_eq!(
+            plan.events[0],
+            FaultEvent::DegradeNic {
+                node: 1,
+                at: 30.0,
+                gbps: 25.0
+            }
+        );
+        assert_eq!(
+            plan.events[1],
+            FaultEvent::RecoverNode { node: 1, at: 40.0 }
+        );
+        assert_eq!(
+            plan.events[2],
+            FaultEvent::DegradeNic {
+                node: 1,
+                at: 50.0,
+                gbps: 25.0
+            }
+        );
+        // Expanded form survives a describe/parse roundtrip and the
+        // events are already in time order.
+        assert_eq!(FaultPlan::parse(&plan.describe()).unwrap(), plan);
+        assert_eq!(plan.sorted(), plan.events);
+        assert!(plan.validate(2, 0).is_ok());
+
+        // The same schedule against a data node.
+        let dplan = FaultPlan::parse("flap:d0@0:10:5").unwrap();
+        assert_eq!(dplan.events.len(), 2 * FLAP_CYCLES);
+        assert!(dplan.events.iter().all(|e| e.is_dtn()));
+        assert_eq!(
+            dplan.events[1],
+            FaultEvent::RecoverDtn { dtn: 0, at: 5.0 }
+        );
+        assert!(dplan.validate(1, 1).is_ok());
+        assert!(dplan.validate(1, 0).is_err());
+    }
+
+    #[test]
+    fn apply_to_router_drives_dtn_kill_and_recover() {
+        use crate::mover::{DataSource, SourcePlan};
+        let mut router = PoolRouter::sim(
+            1,
+            1,
+            AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+            RouterPolicy::RoundRobin,
+        )
+        .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0, 1.0]);
+        for t in 0..4 {
+            router.request(TransferRequest::new(t, "o", 5));
+        }
+        let kill = FaultEvent::KillDtn { dtn: 0, at: 1.0 };
+        let moved = apply_to_router(&kill, &mut router, None);
+        assert_eq!(moved.len(), 2, "dtn 0's two transfers re-source");
+        assert!(moved
+            .iter()
+            .all(|m| m.source == DataSource::Dtn { dtn: 1 }));
+        assert!(router.is_dtn_failed(0));
+
+        let recover = FaultEvent::RecoverDtn { dtn: 0, at: 2.0 };
+        assert!(apply_to_router(&recover, &mut router, None).is_empty());
+        assert!(!router.is_dtn_failed(0));
+        let st = router.router_stats();
+        assert_eq!(st.dtn_failed, 1);
+        assert_eq!(st.dtn_recovered, 1);
     }
 
     #[test]
     fn from_config_reads_plan_and_threshold() {
         let cfg = Config::parse(
-            "FAULT_PLAN = kill:1@30; recover:1@90\nSTEAL_THRESHOLD = 4",
+            "FAULT_PLAN = kill:1@30; recover:1@90\nSTEAL_THRESHOLD = 4\nRECOVERY_RAMP = 16",
         )
         .unwrap();
         let plan = FaultPlan::from_config(&cfg).unwrap();
         assert_eq!(plan.events.len(), 2);
         assert_eq!(plan.steal_threshold, Some(4));
+        assert_eq!(plan.recovery_ramp, Some(16));
 
         let empty = Config::parse("").unwrap();
         assert!(FaultPlan::from_config(&empty).unwrap().is_empty());
@@ -452,11 +764,17 @@ mod tests {
         tl.record(1, "kill", 30.0, 30.1, 4, 1000);
         tl.record(1, "recover", 90.0, 90.0, 2, 1000);
         tl.record(0, "degrade", 10.0, 10.0, 0, 0);
+        // Data node 1's fault must NOT be conflated with submit node 1.
+        tl.record(1, "kill-dtn", 40.0, 40.0, 3, 500);
         assert_eq!(tl.count("kill"), 1);
-        assert_eq!(tl.for_node(1).len(), 2);
+        assert_eq!(tl.count("kill-dtn"), 1);
+        assert_eq!(tl.for_node(1).len(), 2, "submit records only");
+        assert_eq!(tl.for_dtn(1).len(), 1);
+        assert!(tl.for_node(1).iter().all(|r| !r.is_dtn()));
         assert!(!tl.is_empty());
         let text = tl.render();
         assert!(text.contains("kill node 1"), "{text}");
         assert!(text.contains("recover node 1"), "{text}");
+        assert!(text.contains("kill-dtn data node 1"), "{text}");
     }
 }

@@ -21,8 +21,15 @@
 //!   (round-robin / least-loaded / owner-affinity / weighted-by-NIC-
 //!   capacity), with mid-burst node-failure drain, node recovery and
 //!   threshold work-stealing between node queues.
+//! * [`source`] — the data-source plane: a [`SourcePlan`] decides per
+//!   admitted transfer whether its bytes are served by the scheduling
+//!   node's own funnel (the paper baseline) or by a dedicated
+//!   data-transfer node (DTN), so the submit funnel becomes one
+//!   configuration of a pluggable endpoint layer. Every routing
+//!   decision is a `(schedule node, data source)` pair.
 //! * [`chaos`] — fault injection: a [`FaultPlan`] of ordered
-//!   `KillNode` / `RecoverNode` / `DegradeNic` events executed
+//!   `KillNode` / `RecoverNode` / `DegradeNic` events (plus their DTN
+//!   counterparts and parse-time-expanded `flap` schedules) executed
 //!   identically by the simulator (flows abort, NICs re-rate) and the
 //!   real TCP fabric (file servers crash and restart, workers retry
 //!   through the router), with per-node fault timelines in the reports.
@@ -44,12 +51,14 @@ pub mod policy;
 pub mod pool;
 pub mod queue;
 pub mod router;
+pub mod source;
 
 pub use chaos::{ChaosTimeline, FaultEvent, FaultPlan, FaultRecord};
 pub use policy::{ActiveView, AdmissionConfig, AdmissionPolicy};
 pub use pool::ShadowPool;
 pub use queue::AdmissionQueue;
 pub use router::{PoolRouter, Routed, RouterPolicy, RouterStats};
+pub use source::{DataSource, SourcePlan, DEFAULT_DTN_THRESHOLD};
 
 /// One sandbox-transfer request entering the mover.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -29,6 +29,23 @@
 //! ([`MoverStats::stolen`]). The `mover::chaos` fault-injection layer
 //! drives all three from one `FaultPlan` on both fabrics.
 //!
+//! The router also owns the **data-source plane** (`mover::source`):
+//! every admission it reports is a `(schedule node, data source)` pair.
+//! Under the default [`SourcePlan::SubmitFunnel`] the source is the
+//! scheduling node itself — the paper's funnel. With a DTN fleet
+//! configured ([`PoolRouter::with_source_plan`]) the plan may place the
+//! bytes on a dedicated data node instead, round-robining over the live
+//! fleet; [`PoolRouter::fail_dtn`] re-sources a dead DTN's in-flight
+//! transfers onto survivors (or back onto the funnel), the data-plane
+//! analogue of [`PoolRouter::fail_node`]'s re-routing.
+//!
+//! Recovery is hysteretic when a ramp is configured
+//! ([`PoolRouter::set_recovery_ramp`]): a node recovered by
+//! [`PoolRouter::recover_node`] re-enters weighted-by-capacity routing
+//! at a fraction of its as-built weight and ramps back to full weight
+//! over the configured number of routing decisions, so a freshly
+//! revived node is not instantly buried under the backlog.
+//!
 //! Both fabrics consume the router exactly like they consume a single
 //! `ShadowPool` (it implements [`DataMover`] with node-major global shard
 //! indices); `tests/router_unified.rs` drives one router object through
@@ -36,6 +53,7 @@
 
 use super::policy::AdmissionConfig;
 use super::pool::ShadowPool;
+use super::source::{DataSource, SourcePlan};
 use super::{Admitted, DataMover, MoverStats, TransferRequest};
 use crate::config::{Config, ConfigError};
 use crate::runtime::engine::SealEngine;
@@ -99,13 +117,16 @@ impl RouterPolicy {
     }
 }
 
-/// A routed admission: the ticket plus the submit node and the shadow
-/// shard (node-local index) serving it.
+/// A routed admission: the ticket, the submit node that *scheduled* it,
+/// the shadow shard (node-local index) sealing it, and the data source
+/// its bytes are *served* from. With the default submit-funnel plan the
+/// source is the scheduling node itself.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Routed {
     pub ticket: u32,
     pub node: usize,
     pub shard: usize,
+    pub source: DataSource,
 }
 
 /// Per-node router accounting for reports and benches.
@@ -122,6 +143,15 @@ pub struct RouterStats {
     pub shard_failed: u64,
     /// Requests that could not be routed because every node had failed.
     pub stranded: usize,
+    /// Admissions whose bytes were placed on each data node (empty with
+    /// no DTN fleet). Re-sourced transfers count again on the new DTN.
+    pub routed_per_dtn: Vec<u64>,
+    /// Payload bytes placed on each data node.
+    pub bytes_per_dtn: Vec<u64>,
+    /// Data nodes poisoned via [`PoolRouter::fail_dtn`].
+    pub dtn_failed: u64,
+    /// Data nodes un-poisoned via [`PoolRouter::recover_dtn`].
+    pub dtn_recovered: u64,
 }
 
 /// FNV-1a over the owner string: stable across runs and processes, so
@@ -150,6 +180,30 @@ pub struct PoolRouter {
     /// Deficit counters for weighted-by-capacity routing.
     credit: Vec<f64>,
     failed: Vec<bool>,
+    /// Data-source plan: where admitted transfers' bytes are served
+    /// from (default: the scheduling node's own funnel).
+    plan: SourcePlan,
+    /// Per-DTN down flags (empty with no DTN fleet).
+    dtn_down: Vec<bool>,
+    /// Relative NIC budget per DTN (informational; selection is
+    /// round-robin over the live fleet).
+    dtn_capacity: Vec<f64>,
+    /// As-built DTN budgets, restored by [`PoolRouter::recover_dtn`].
+    dtn_nominal: Vec<f64>,
+    /// Round-robin cursor over the DTN fleet (deterministic selection).
+    dtn_cursor: usize,
+    /// Data source of every admitted, not-yet-completed ticket.
+    source_of: HashMap<u32, DataSource>,
+    routed_per_dtn: Vec<u64>,
+    bytes_per_dtn: Vec<u64>,
+    dtn_failed_count: u64,
+    dtn_recovered_count: u64,
+    /// Recovery hysteresis: decisions a recovered node's routing weight
+    /// takes to ramp back to full (0 = step-restore, the default).
+    ramp_decisions: u32,
+    /// Remaining ramp decisions per node (counts down on every routing
+    /// decision; a node at 0 routes at full weight).
+    ramp_left: Vec<u32>,
     /// Submit node of every in-router (waiting or active) ticket.
     node_of: HashMap<u32, usize>,
     /// Request bodies of in-router tickets, kept so a node failure can
@@ -202,6 +256,18 @@ impl PoolRouter {
             rr_cursor: 0,
             credit: vec![0.0; n],
             failed: vec![false; n],
+            plan: SourcePlan::SubmitFunnel,
+            dtn_down: Vec::new(),
+            dtn_capacity: Vec::new(),
+            dtn_nominal: Vec::new(),
+            dtn_cursor: 0,
+            source_of: HashMap::new(),
+            routed_per_dtn: Vec::new(),
+            bytes_per_dtn: Vec::new(),
+            dtn_failed_count: 0,
+            dtn_recovered_count: 0,
+            ramp_decisions: 0,
+            ramp_left: vec![0; n],
             node_of: HashMap::new(),
             requests: HashMap::new(),
             stranded: VecDeque::new(),
@@ -242,6 +308,158 @@ impl PoolRouter {
         } else {
             Err(self)
         }
+    }
+
+    /// Attach a data-source plan and a DTN fleet (builder style). Each
+    /// entry of `dtn_capacity` is one data node's relative NIC budget.
+    /// With an empty fleet every plan degenerates to the submit funnel
+    /// (callers should [`SourcePlan::validate`] before running a plan
+    /// that needs DTNs).
+    pub fn with_source_plan(mut self, plan: SourcePlan, dtn_capacity: Vec<f64>) -> PoolRouter {
+        let n = dtn_capacity.len();
+        self.plan = plan;
+        self.dtn_nominal = dtn_capacity.clone();
+        self.dtn_capacity = dtn_capacity;
+        self.dtn_down = vec![false; n];
+        self.routed_per_dtn = vec![0; n];
+        self.bytes_per_dtn = vec![0; n];
+        self
+    }
+
+    /// Configure recovery hysteresis: a node recovered by
+    /// [`PoolRouter::recover_node`] ramps its weighted-by-capacity
+    /// routing weight back to full over `decisions` routing decisions
+    /// instead of step-restoring it (0 disables the ramp).
+    pub fn set_recovery_ramp(&mut self, decisions: u32) {
+        self.ramp_decisions = decisions;
+    }
+
+    /// The data-source plan this router places bytes with.
+    pub fn source_plan(&self) -> SourcePlan {
+        self.plan
+    }
+
+    /// Data-transfer-node fleet size (0 = funnel-only pool).
+    pub fn dtn_count(&self) -> usize {
+        self.dtn_down.len()
+    }
+
+    pub fn is_dtn_failed(&self, dtn: usize) -> bool {
+        self.dtn_down[dtn]
+    }
+
+    /// Data source of an admitted, not-yet-completed ticket.
+    pub fn source_of(&self, ticket: u32) -> Option<DataSource> {
+        self.source_of.get(&ticket).copied()
+    }
+
+    /// Pick the data source for one admitted transfer under the plan.
+    /// Deterministic: round-robin over live DTNs; `Hybrid` compares
+    /// `bytes >= threshold`; an all-dead fleet fails over to `node`'s
+    /// funnel.
+    fn select_source(&mut self, bytes: u64, node: usize) -> DataSource {
+        let via_dtn = match self.plan {
+            SourcePlan::SubmitFunnel => false,
+            SourcePlan::DedicatedDtn => true,
+            SourcePlan::Hybrid { threshold } => bytes >= threshold,
+        };
+        if !via_dtn || self.dtn_down.iter().all(|&d| d) {
+            return DataSource::Funnel { node };
+        }
+        let dtn = loop {
+            let d = self.dtn_cursor % self.dtn_down.len();
+            self.dtn_cursor += 1;
+            if !self.dtn_down[d] {
+                break d;
+            }
+        };
+        DataSource::Dtn { dtn }
+    }
+
+    /// Assign (and account) the data source of a freshly admitted
+    /// ticket.
+    fn assign_source(&mut self, ticket: u32, node: usize) -> DataSource {
+        let bytes = self.requests.get(&ticket).map(|r| r.bytes).unwrap_or(0);
+        let source = self.select_source(bytes, node);
+        if let DataSource::Dtn { dtn } = source {
+            self.routed_per_dtn[dtn] += 1;
+            self.bytes_per_dtn[dtn] += bytes;
+        }
+        self.source_of.insert(ticket, source);
+        source
+    }
+
+    /// The source an already-admitted transfer (e.g. a job output)
+    /// should use NOW: `preferred` if still live, else a surviving DTN,
+    /// else `node`'s funnel.
+    pub fn output_source(&self, preferred: DataSource, node: usize) -> DataSource {
+        match preferred {
+            DataSource::Dtn { dtn } if self.dtn_down.get(dtn).copied().unwrap_or(true) => {
+                match self.dtn_down.iter().position(|&d| !d) {
+                    Some(live) => DataSource::Dtn { dtn: live },
+                    None => DataSource::Funnel { node },
+                }
+            }
+            other => other,
+        }
+    }
+
+    /// Poison a data node: its in-flight transfers are re-sourced onto
+    /// surviving DTNs (or the funnel), without touching their admission
+    /// — the schedule node still holds their slots; only the byte
+    /// endpoint moves. Each re-sourced transfer counts in
+    /// [`MoverStats::retried_after_fault`] (its executor restarts the
+    /// transfer against the new source) and is returned so the fabric
+    /// can re-drive it. Idempotent per DTN.
+    pub fn fail_dtn(&mut self, dtn: usize) -> Vec<Routed> {
+        if self.dtn_down[dtn] {
+            return Vec::new();
+        }
+        self.dtn_down[dtn] = true;
+        self.dtn_failed_count += 1;
+        let mut affected: Vec<u32> = self
+            .source_of
+            .iter()
+            .filter(|&(_, &s)| s == DataSource::Dtn { dtn })
+            .map(|(&t, _)| t)
+            .collect();
+        affected.sort_unstable(); // HashMap order is arbitrary; re-source deterministically
+        let mut out = Vec::new();
+        for ticket in affected {
+            let Some(&node) = self.node_of.get(&ticket) else {
+                continue;
+            };
+            let Some(shard) = self.nodes[node].shard_of(ticket) else {
+                continue;
+            };
+            let source = self.assign_source(ticket, node);
+            self.retried_after_fault += 1;
+            out.push(Routed {
+                ticket,
+                node,
+                shard,
+                source,
+            });
+        }
+        out
+    }
+
+    /// Un-poison a data node: it rejoins source selection with its
+    /// as-built budget. Nothing is re-driven (new admissions reach it
+    /// via the round-robin cursor). Idempotent.
+    pub fn recover_dtn(&mut self, dtn: usize) {
+        self.dtn_capacity[dtn] = self.dtn_nominal[dtn];
+        if !self.dtn_down[dtn] {
+            return;
+        }
+        self.dtn_down[dtn] = false;
+        self.dtn_recovered_count += 1;
+    }
+
+    /// Re-rate a data node's relative NIC budget (fault injection;
+    /// informational — source selection stays round-robin).
+    pub fn set_dtn_capacity(&mut self, dtn: usize, capacity: f64) {
+        self.dtn_capacity[dtn] = capacity.max(0.0);
     }
 
     /// Spawn per-shard engine services on every node that has none yet
@@ -308,12 +526,29 @@ impl PoolRouter {
         (0..self.nodes.len()).filter(|&i| !self.failed[i]).collect()
     }
 
+    /// A node's routing weight right now: its capacity scaled down while
+    /// the recovery ramp is still running (a node `k` decisions into an
+    /// `n`-decision ramp weighs `capacity * (k + 1) / (n + 1)`).
+    fn effective_capacity(&self, node: usize) -> f64 {
+        if self.ramp_decisions > 0 && self.ramp_left[node] > 0 {
+            let total = self.ramp_decisions as f64;
+            let done = (self.ramp_decisions - self.ramp_left[node]) as f64;
+            self.capacity[node] * (done + 1.0) / (total + 1.0)
+        } else {
+            self.capacity[node]
+        }
+    }
+
     /// Pick the submit node for a request under the routing policy, or
     /// `None` when every node has failed.
     fn pick_node(&mut self, req: &TransferRequest) -> Option<usize> {
         let live = self.live_nodes();
         if live.is_empty() {
             return None;
+        }
+        // Every routing decision advances all running recovery ramps.
+        for l in &mut self.ramp_left {
+            *l = l.saturating_sub(1);
         }
         Some(match self.policy {
             RouterPolicy::RoundRobin => loop {
@@ -332,12 +567,13 @@ impl PoolRouter {
             }
             RouterPolicy::WeightedByCapacity => {
                 // Deficit round-robin: every request deposits one request's
-                // worth of credit, split proportionally to live capacity;
+                // worth of credit, split proportionally to live capacity
+                // (ramping recovered nodes count at their reduced weight);
                 // the node deepest in credit serves it.
-                let total: f64 = live.iter().map(|&i| self.capacity[i]).sum();
+                let total: f64 = live.iter().map(|&i| self.effective_capacity(i)).sum();
                 if total > 0.0 {
                     for &i in &live {
-                        self.credit[i] += self.capacity[i] / total;
+                        self.credit[i] += self.effective_capacity(i) / total;
                     }
                 }
                 let &best = live
@@ -365,14 +601,18 @@ impl PoolRouter {
     }
 
     fn after_op(&mut self, node: usize, admitted: Vec<Admitted>) -> Vec<Routed> {
-        let out = admitted
-            .into_iter()
-            .map(|a| Routed {
+        let mut out = Vec::with_capacity(admitted.len());
+        for a in admitted {
+            // Admission is the moment the data source is chosen: the
+            // plan sees the final (post-failover) schedule node.
+            let source = self.assign_source(a.ticket, node);
+            out.push(Routed {
                 ticket: a.ticket,
                 node,
                 shard: a.shard,
-            })
-            .collect();
+                source,
+            });
+        }
         let active: u32 = self.nodes.iter().map(|n| n.active()).sum();
         self.peak_active = self.peak_active.max(active);
         out
@@ -397,6 +637,7 @@ impl PoolRouter {
     /// no-ghost contract as the node queues' `cancelled_waiting` path.
     pub fn complete(&mut self, ticket: u32) -> Vec<Routed> {
         self.requests.remove(&ticket);
+        self.source_of.remove(&ticket);
         let Some(node) = self.node_of.remove(&ticket) else {
             if let Some(pos) = self.stranded.iter().position(|r| r.ticket == ticket) {
                 self.stranded.remove(pos);
@@ -441,6 +682,7 @@ impl PoolRouter {
             Vec::with_capacity(inflight.len() + waiting.len());
         for t in inflight {
             self.node_of.remove(&t);
+            self.source_of.remove(&t); // a fresh source is chosen on re-admission
             let _ = self.nodes[node].complete(t); // queue already drained: admits nothing
             if let Some(req) = self.requests.get(&t) {
                 self.retried_after_fault += 1;
@@ -477,6 +719,9 @@ impl PoolRouter {
         self.failed[node] = false;
         self.credit[node] = 0.0;
         self.node_recovered += 1;
+        // Hysteresis: re-enter weighted routing at reduced weight and
+        // ramp back over the configured number of decisions.
+        self.ramp_left[node] = self.ramp_decisions;
         let stranded: Vec<TransferRequest> = self.stranded.drain(..).collect();
         let mut out = Vec::new();
         for req in stranded {
@@ -554,7 +799,8 @@ impl PoolRouter {
         self.nodes.iter().map(|n| n.shard_count()).sum()
     }
 
-    /// Per-node detail (per-node mover stats, routing counts, failures).
+    /// Per-node detail (per-node mover stats, routing counts, failures,
+    /// per-DTN source placement).
     pub fn router_stats(&self) -> RouterStats {
         RouterStats {
             per_node: self.nodes.iter().map(|n| n.stats()).collect(),
@@ -562,6 +808,10 @@ impl PoolRouter {
             bytes_per_node: self.bytes_per_node.clone(),
             shard_failed: self.shard_failed,
             stranded: self.stranded.len(),
+            routed_per_dtn: self.routed_per_dtn.clone(),
+            bytes_per_dtn: self.bytes_per_dtn.clone(),
+            dtn_failed: self.dtn_failed_count,
+            dtn_recovered: self.dtn_recovered_count,
         }
     }
 
@@ -593,11 +843,17 @@ impl PoolRouter {
     }
 
     pub fn describe(&self) -> String {
+        let sources = if self.dtn_count() > 0 {
+            format!(", {} over {} dtn(s)", self.plan.label(), self.dtn_count())
+        } else {
+            String::new()
+        };
         format!(
-            "pool-router[{} node{}, {}, {}]",
+            "pool-router[{} node{}, {}{}, {}]",
             self.nodes.len(),
             if self.nodes.len() == 1 { "" } else { "s" },
             self.policy.label(),
+            sources,
             self.nodes
                 .first()
                 .map(|n| n.describe())
@@ -1031,6 +1287,178 @@ mod tests {
         let max = lens.iter().max().unwrap();
         let min = lens.iter().min().unwrap();
         assert!(max - min <= 1, "gap {lens:?} not minimal");
+    }
+
+    #[test]
+    fn funnel_plan_sources_on_schedule_node() {
+        let mut router = rr_router(2);
+        for t in 0..4 {
+            let adm = router.request(r(t, "o", 10));
+            assert_eq!(
+                adm[0].source,
+                DataSource::Funnel { node: adm[0].node },
+                "default plan serves bytes from the scheduling node"
+            );
+        }
+        let st = router.router_stats();
+        assert!(st.routed_per_dtn.is_empty());
+        assert_eq!(st.dtn_failed, 0);
+    }
+
+    #[test]
+    fn dedicated_dtn_round_robins_live_fleet() {
+        let mut router = rr_router(2).with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 3]);
+        assert_eq!(router.dtn_count(), 3);
+        for t in 0..6 {
+            let adm = router.request(r(t, "o", 10));
+            assert_eq!(
+                adm[0].source,
+                DataSource::Dtn {
+                    dtn: (t as usize) % 3
+                },
+                "round-robin over the fleet"
+            );
+            assert_eq!(router.source_of(t), Some(adm[0].source));
+        }
+        let st = router.router_stats();
+        assert_eq!(st.routed_per_dtn, vec![2, 2, 2]);
+        assert_eq!(st.bytes_per_dtn, vec![20, 20, 20]);
+        // Completion clears the source bookkeeping.
+        router.complete(0);
+        assert_eq!(router.source_of(0), None);
+    }
+
+    #[test]
+    fn hybrid_respects_threshold_at_the_boundary() {
+        let mut router =
+            rr_router(1).with_source_plan(SourcePlan::Hybrid { threshold: 100 }, vec![1.0; 2]);
+        let small = router.request(r(0, "o", 99));
+        assert_eq!(small[0].source, DataSource::Funnel { node: 0 });
+        let exact = router.request(r(1, "o", 100));
+        assert!(exact[0].source.is_dtn(), "bytes == threshold goes via DTN");
+        let big = router.request(r(2, "o", 101));
+        assert!(big[0].source.is_dtn());
+    }
+
+    #[test]
+    fn fail_dtn_resources_inflight_then_fails_over_to_funnel() {
+        let mut router = rr_router(1).with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 2]);
+        for t in 0..4 {
+            router.request(r(t, "o", 5));
+        }
+        // Tickets 0,2 sit on dtn 0; 1,3 on dtn 1.
+        let moved = router.fail_dtn(0);
+        assert_eq!(moved.len(), 2, "dtn 0's transfers re-source");
+        for m in &moved {
+            assert_eq!(m.source, DataSource::Dtn { dtn: 1 });
+            assert_eq!(m.node, 0, "admission (schedule node) is untouched");
+        }
+        assert!(router.is_dtn_failed(0));
+        assert!(router.fail_dtn(0).is_empty(), "second poison is a no-op");
+        let st = router.stats();
+        assert_eq!(st.retried_after_fault, 2);
+        assert_eq!(router.router_stats().dtn_failed, 1);
+        // Admission accounting never moved: everything still active.
+        assert_eq!(router.active(), 4);
+
+        // The whole fleet dies: re-sourcing falls back to the funnel.
+        let moved = router.fail_dtn(1);
+        assert_eq!(moved.len(), 4, "all four were on dtn 1 by now");
+        assert!(moved
+            .iter()
+            .all(|m| m.source == DataSource::Funnel { node: 0 }));
+        let adm = router.request(r(9, "o", 5));
+        assert_eq!(
+            adm[0].source,
+            DataSource::Funnel { node: 0 },
+            "new admissions also fail over to the funnel"
+        );
+
+        // Recovery: the fleet serves again.
+        router.recover_dtn(0);
+        assert!(!router.is_dtn_failed(0));
+        let adm = router.request(r(10, "o", 5));
+        assert_eq!(adm[0].source, DataSource::Dtn { dtn: 0 });
+        assert_eq!(router.router_stats().dtn_recovered, 1);
+        router.recover_dtn(0);
+        assert_eq!(
+            router.router_stats().dtn_recovered,
+            1,
+            "recover is idempotent"
+        );
+    }
+
+    #[test]
+    fn output_source_prefers_live_preferred_then_survivor_then_funnel() {
+        let mut router = rr_router(1).with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 2]);
+        let d0 = DataSource::Dtn { dtn: 0 };
+        assert_eq!(router.output_source(d0, 0), d0, "live preferred wins");
+        router.fail_dtn(0);
+        assert_eq!(
+            router.output_source(d0, 0),
+            DataSource::Dtn { dtn: 1 },
+            "survivor replaces the dead preferred"
+        );
+        router.fail_dtn(1);
+        assert_eq!(
+            router.output_source(d0, 0),
+            DataSource::Funnel { node: 0 },
+            "funnel is the last resort"
+        );
+        let funnel = DataSource::Funnel { node: 0 };
+        assert_eq!(router.output_source(funnel, 0), funnel);
+    }
+
+    #[test]
+    fn recovery_ramp_rebuilds_weight_gradually() {
+        let nodes = vec![
+            ShadowPool::sim(1, ThrottlePolicy::Disabled.into()),
+            ShadowPool::sim(1, ThrottlePolicy::Disabled.into()),
+        ];
+        let mut router =
+            PoolRouter::new(nodes, vec![100.0, 100.0], RouterPolicy::WeightedByCapacity);
+        router.set_recovery_ramp(40);
+        router.fail_node(1);
+        router.recover_node(1);
+        // First batch: node 1 is still ramping, so node 0 carries more.
+        for t in 0..40 {
+            router.request(r(t, "o", 1));
+        }
+        let st = router.router_stats();
+        assert!(
+            st.routed_per_node[0] > st.routed_per_node[1],
+            "ramping node under-weighted: {:?}",
+            st.routed_per_node
+        );
+        // After the ramp the split returns to even.
+        let before = router.router_stats().routed_per_node.clone();
+        for t in 40..140 {
+            router.request(r(t, "o", 1));
+        }
+        let after = router.router_stats().routed_per_node.clone();
+        let d0 = after[0] - before[0];
+        let d1 = after[1] - before[1];
+        assert!(
+            d0.abs_diff(d1) <= 2,
+            "post-ramp split should be even: +{d0} vs +{d1}"
+        );
+    }
+
+    #[test]
+    fn zero_ramp_step_restores_weight() {
+        let nodes = vec![
+            ShadowPool::sim(1, ThrottlePolicy::Disabled.into()),
+            ShadowPool::sim(1, ThrottlePolicy::Disabled.into()),
+        ];
+        let mut router =
+            PoolRouter::new(nodes, vec![100.0, 100.0], RouterPolicy::WeightedByCapacity);
+        router.fail_node(1);
+        router.recover_node(1);
+        for t in 0..100 {
+            router.request(r(t, "o", 1));
+        }
+        let st = router.router_stats();
+        assert_eq!(st.routed_per_node, vec![50, 50], "no ramp: instant even split");
     }
 
     #[test]

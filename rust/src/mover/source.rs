@@ -1,0 +1,233 @@
+//! The data-source plane: *where* an admitted transfer's bytes are
+//! served from, decoupled from *which* submit node scheduled it.
+//!
+//! The paper's central caveat is that HTCondor "routes both the input
+//! and output data through the submission node, making it a potential
+//! bottleneck". The Petascale DTN project (arXiv:2105.12880) and the
+//! Globus exascale enhancements (arXiv:2503.22981) show the production
+//! answer: dedicated data-transfer nodes (DTNs) decoupled from the
+//! scheduling node. This module makes the transfer *endpoint* a
+//! first-class layer, so the paper's submit funnel becomes one
+//! configuration of a more general data plane:
+//!
+//! * [`DataSource`] — the endpoint serving one admitted transfer's
+//!   bytes: the scheduling node's own NIC ([`DataSource::Funnel`], the
+//!   paper baseline) or a dedicated data node ([`DataSource::Dtn`]).
+//! * [`SourcePlan`] — the policy choosing a source per admitted
+//!   transfer: `SubmitFunnel` (every byte through the schedule node),
+//!   `DedicatedDtn` (every byte through the DTN fleet, submit nodes
+//!   carry only scheduling control traffic), or `Hybrid` (small
+//!   sandboxes ride the funnel, sandboxes at or above a size threshold
+//!   go via DTNs — the latency/throughput split Globus applies to
+//!   small-file workloads).
+//!
+//! The [`PoolRouter`](super::PoolRouter) owns the plan: every admission
+//! it reports ([`Routed`](super::Routed)) now carries a `(schedule
+//! node, data source)` pair. Source selection is deterministic — a
+//! round-robin cursor over the live DTN fleet, with `Hybrid` comparing
+//! `bytes >= threshold` — so the same request sequence always produces
+//! the same placement (`tests/props.rs` holds this as a property).
+//! When every DTN is dead, selection fails over to the funnel, and a
+//! killed DTN's in-flight transfers are re-sourced onto survivors (or
+//! the funnel) by [`PoolRouter::fail_dtn`](super::PoolRouter::fail_dtn),
+//! mirroring what `fail_node` does one layer up.
+
+use crate::config::{Config, ConfigError};
+
+/// Default `Hybrid` size threshold: sandboxes of 100 MB and above go
+/// via the DTN fleet (the Petascale DTN benchmark's working set is
+/// dominated by such files).
+pub const DEFAULT_DTN_THRESHOLD: u64 = 100_000_000;
+
+/// The endpoint an admitted transfer's bytes are served from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataSource {
+    /// The scheduling submit node's own NIC — the paper's baseline
+    /// funnel (`node` is the submit node that admitted the transfer).
+    Funnel { node: usize },
+    /// A dedicated data-transfer node, decoupled from scheduling.
+    Dtn { dtn: usize },
+}
+
+impl DataSource {
+    /// Short label for reports and logs (`submit3` / `dtn1`).
+    pub fn label(&self) -> String {
+        match self {
+            DataSource::Funnel { node } => format!("submit{node}"),
+            DataSource::Dtn { dtn } => format!("dtn{dtn}"),
+        }
+    }
+
+    pub fn is_dtn(&self) -> bool {
+        matches!(self, DataSource::Dtn { .. })
+    }
+}
+
+/// Policy choosing the [`DataSource`] of each admitted transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SourcePlan {
+    /// Today's behavior and the paper baseline: every byte through the
+    /// scheduling submit node.
+    #[default]
+    SubmitFunnel,
+    /// Every byte through the DTN fleet; the submit node handles only
+    /// scheduling control traffic. Requires at least one data node.
+    DedicatedDtn,
+    /// Sandboxes with `bytes >= threshold` go via DTNs, smaller ones
+    /// ride the funnel (connection setup dominates small transfers, so
+    /// the funnel's warm path wins there).
+    Hybrid { threshold: u64 },
+}
+
+impl SourcePlan {
+    /// Short label for reports and bench tables.
+    pub fn label(&self) -> String {
+        match self {
+            SourcePlan::SubmitFunnel => "submit-funnel".into(),
+            SourcePlan::DedicatedDtn => "dedicated-dtn".into(),
+            SourcePlan::Hybrid { threshold } => format!("hybrid@{threshold}"),
+        }
+    }
+
+    /// Parse a plan name (CLI flag / config value spellings). `hybrid`
+    /// takes the default threshold; `hybrid:<bytes>` overrides it.
+    pub fn parse(name: &str) -> Option<SourcePlan> {
+        let norm = name.trim().to_ascii_uppercase().replace('-', "_");
+        match norm.as_str() {
+            "SUBMIT_FUNNEL" | "FUNNEL" => Some(SourcePlan::SubmitFunnel),
+            "DEDICATED_DTN" | "DTN" => Some(SourcePlan::DedicatedDtn),
+            "HYBRID" => Some(SourcePlan::Hybrid {
+                threshold: DEFAULT_DTN_THRESHOLD,
+            }),
+            _ => {
+                let (head, tail) = norm.split_once([':', '@'])?;
+                if head != "HYBRID" {
+                    return None;
+                }
+                tail.trim()
+                    .parse()
+                    .ok()
+                    .map(|threshold| SourcePlan::Hybrid { threshold })
+            }
+        }
+    }
+
+    /// Does this plan ever route bytes via the DTN fleet?
+    pub fn uses_dtns(&self) -> bool {
+        !matches!(self, SourcePlan::SubmitFunnel)
+    }
+
+    /// Check the plan against the data-node fleet before running it.
+    pub fn validate(&self, n_dtns: usize) -> Result<(), String> {
+        if self.uses_dtns() && n_dtns == 0 {
+            return Err(format!(
+                "source plan '{}' needs data nodes but the pool has none \
+                 (set DATA_NODES / --data-nodes)",
+                self.label()
+            ));
+        }
+        Ok(())
+    }
+
+    /// The `SOURCE_PLAN` / `DTN_THRESHOLD` condor-style knobs:
+    ///
+    /// ```text
+    /// SOURCE_PLAN = HYBRID        # SUBMIT_FUNNEL | DEDICATED_DTN | HYBRID
+    /// DTN_THRESHOLD = 64MB        # hybrid split point (size suffixes ok)
+    /// ```
+    pub fn from_config(cfg: &Config) -> Result<SourcePlan, ConfigError> {
+        let name = cfg.get_or("SOURCE_PLAN", "SUBMIT_FUNNEL");
+        let mut plan = SourcePlan::parse(&name).ok_or_else(|| {
+            ConfigError::Type("SOURCE_PLAN".into(), "source plan name", name)
+        })?;
+        if let SourcePlan::Hybrid { ref mut threshold } = plan {
+            *threshold = cfg.get_bytes("DTN_THRESHOLD", *threshold)?;
+        }
+        Ok(plan)
+    }
+
+    /// The `DATA_NODES` knob (default 0 — the paper has no DTN fleet).
+    pub fn data_nodes_from_config(cfg: &Config) -> Result<u32, ConfigError> {
+        Ok(cfg.get_u64("DATA_NODES", 0)? as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_spellings() {
+        assert_eq!(SourcePlan::parse("funnel"), Some(SourcePlan::SubmitFunnel));
+        assert_eq!(
+            SourcePlan::parse("SUBMIT_FUNNEL"),
+            Some(SourcePlan::SubmitFunnel)
+        );
+        assert_eq!(
+            SourcePlan::parse("dedicated-dtn"),
+            Some(SourcePlan::DedicatedDtn)
+        );
+        assert_eq!(SourcePlan::parse("dtn"), Some(SourcePlan::DedicatedDtn));
+        assert_eq!(
+            SourcePlan::parse("hybrid"),
+            Some(SourcePlan::Hybrid {
+                threshold: DEFAULT_DTN_THRESHOLD
+            })
+        );
+        assert_eq!(
+            SourcePlan::parse("hybrid:5000"),
+            Some(SourcePlan::Hybrid { threshold: 5000 })
+        );
+        assert_eq!(SourcePlan::parse("teleport"), None);
+        assert_eq!(SourcePlan::parse("hybrid:x"), None);
+    }
+
+    #[test]
+    fn validate_requires_dtns_when_plan_uses_them() {
+        assert!(SourcePlan::SubmitFunnel.validate(0).is_ok());
+        assert!(SourcePlan::DedicatedDtn.validate(0).is_err());
+        assert!(SourcePlan::DedicatedDtn.validate(1).is_ok());
+        assert!(SourcePlan::Hybrid { threshold: 1 }.validate(0).is_err());
+        assert!(SourcePlan::Hybrid { threshold: 1 }.validate(2).is_ok());
+    }
+
+    #[test]
+    fn from_config_reads_plan_and_threshold() {
+        let cfg = Config::parse("SOURCE_PLAN = HYBRID\nDTN_THRESHOLD = 64MB").unwrap();
+        assert_eq!(
+            SourcePlan::from_config(&cfg).unwrap(),
+            SourcePlan::Hybrid {
+                threshold: 64_000_000
+            }
+        );
+        let dflt = Config::parse("").unwrap();
+        assert_eq!(
+            SourcePlan::from_config(&dflt).unwrap(),
+            SourcePlan::SubmitFunnel
+        );
+        assert_eq!(SourcePlan::data_nodes_from_config(&dflt).unwrap(), 0);
+        let n = Config::parse("DATA_NODES = 4").unwrap();
+        assert_eq!(SourcePlan::data_nodes_from_config(&n).unwrap(), 4);
+        let bad = Config::parse("SOURCE_PLAN = WARP").unwrap();
+        assert!(SourcePlan::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn labels_roundtrip_through_parse() {
+        for plan in [
+            SourcePlan::SubmitFunnel,
+            SourcePlan::DedicatedDtn,
+            SourcePlan::Hybrid { threshold: 1234 },
+        ] {
+            assert_eq!(SourcePlan::parse(&plan.label()), Some(plan));
+        }
+    }
+
+    #[test]
+    fn source_labels() {
+        assert_eq!(DataSource::Funnel { node: 3 }.label(), "submit3");
+        assert_eq!(DataSource::Dtn { dtn: 1 }.label(), "dtn1");
+        assert!(DataSource::Dtn { dtn: 0 }.is_dtn());
+        assert!(!DataSource::Funnel { node: 0 }.is_dtn());
+    }
+}

@@ -49,6 +49,15 @@ pub struct TestbedSpec {
     /// Empty = every node gets `submit_nic_gbps`; extra entries beyond
     /// `n_submit_nodes` are ignored, missing ones fall back.
     pub submit_node_gbps: Vec<f64>,
+    /// Dedicated data-transfer-node count (0 = the paper's deployments:
+    /// every byte through the submit funnel). Each data node gets its
+    /// own monitored NIC, outside the VPN overlay.
+    pub n_data_nodes: u32,
+    /// Default data-node NIC capacity in Gbps.
+    pub data_nic_gbps: f64,
+    /// Per-data-node NIC overrides in Gbps (same fallback semantics as
+    /// `submit_node_gbps`).
+    pub data_node_gbps: Vec<f64>,
     pub workers: Vec<WorkerSpec>,
     pub wan: Option<WanSpec>,
     /// Submit node runs behind the Calico VPN overlay (unprivileged pod).
@@ -64,6 +73,9 @@ impl TestbedSpec {
             submit_nic_gbps: 100.0,
             n_submit_nodes: 1,
             submit_node_gbps: Vec::new(),
+            n_data_nodes: 0,
+            data_nic_gbps: 100.0,
+            data_node_gbps: Vec::new(),
             workers: (0..6)
                 .map(|i| WorkerSpec {
                     nic_gbps: 100.0,
@@ -91,6 +103,9 @@ impl TestbedSpec {
             submit_nic_gbps: 100.0,
             n_submit_nodes: 1,
             submit_node_gbps: Vec::new(),
+            n_data_nodes: 0,
+            data_nic_gbps: 100.0,
+            data_node_gbps: Vec::new(),
             workers,
             wan: Some(WanSpec {
                 rtt_s: calib::WAN_RTT_S,
@@ -121,6 +136,14 @@ impl TestbedSpec {
             .copied()
             .unwrap_or(self.submit_nic_gbps)
     }
+
+    /// NIC capacity of data node `d` in Gbps (override or default).
+    pub fn data_node_nic_gbps(&self, d: usize) -> f64 {
+        self.data_node_gbps
+            .get(d)
+            .copied()
+            .unwrap_or(self.data_nic_gbps)
+    }
 }
 
 /// A built testbed: the NetSim plus the link handles the engine needs.
@@ -133,6 +156,11 @@ pub struct Testbed {
     /// One VPN processing hop per submit node when the overlay is on;
     /// empty otherwise.
     pub submit_vpns: Vec<LinkId>,
+    /// One monitored tx link per dedicated data node (index = dtn).
+    /// Data nodes sit outside the VPN overlay — they are dedicated data
+    /// movers, which is exactly why DTN deployments escape the paper's
+    /// ~25 Gbps overlay ceiling.
+    pub data_txs: Vec<LinkId>,
     pub backbone: Option<LinkId>,
     pub worker_rx: Vec<LinkId>,
 }
@@ -159,6 +187,16 @@ impl Testbed {
             submit_txs.push(tx);
         }
 
+        let mut data_txs = Vec::with_capacity(spec.n_data_nodes as usize);
+        for d in 0..spec.n_data_nodes as usize {
+            let tx = net.add_link(
+                &format!("data{d}.nic.tx"),
+                Gbps(spec.data_node_nic_gbps(d) * eff),
+            );
+            net.monitor_link(tx, spec.monitor_bin);
+            data_txs.push(tx);
+        }
+
         let backbone = spec
             .wan
             .map(|w| net.add_link("backbone", Gbps(w.backbone_gbps * eff)));
@@ -175,6 +213,7 @@ impl Testbed {
             spec,
             submit_txs,
             submit_vpns,
+            data_txs,
             backbone,
             worker_rx,
         }
@@ -183,6 +222,11 @@ impl Testbed {
     /// Submit-node count this testbed was built with.
     pub fn n_submit_nodes(&self) -> usize {
         self.submit_txs.len()
+    }
+
+    /// Dedicated data-node count this testbed was built with.
+    pub fn n_data_nodes(&self) -> usize {
+        self.data_txs.len()
     }
 
     /// Re-rate one submit node's NIC mid-run (fault injection: degrade,
@@ -218,6 +262,36 @@ impl Testbed {
         let mut p = self.path_to_worker(submit_node, worker);
         p.reverse();
         p
+    }
+
+    /// Links crossed by a data node -> worker transfer. Data nodes sit
+    /// outside the VPN overlay (no encap hop).
+    pub fn dtn_path_to_worker(&self, dtn: usize, worker: usize) -> Vec<LinkId> {
+        let mut p = Vec::with_capacity(3);
+        p.push(self.data_txs[dtn]);
+        if let Some(b) = self.backbone {
+            p.push(b);
+        }
+        p.push(self.worker_rx[worker]);
+        p
+    }
+
+    /// Links crossed by a worker -> data node transfer (job output via
+    /// the data plane); same duplex approximation as
+    /// [`Testbed::path_from_worker`].
+    pub fn dtn_path_from_worker(&self, dtn: usize, worker: usize) -> Vec<LinkId> {
+        let mut p = self.dtn_path_to_worker(dtn, worker);
+        p.reverse();
+        p
+    }
+
+    /// Re-rate one data node's NIC mid-run (fault injection), with the
+    /// same derating and positive-capacity floor as
+    /// [`Testbed::set_submit_nic_gbps`].
+    pub fn set_data_nic_gbps(&mut self, dtn: usize, gbps: f64) {
+        let eff = calib::NIC_PROTOCOL_EFFICIENCY;
+        let link = self.data_txs[dtn];
+        self.net.set_capacity(link, Gbps(gbps.max(0.001) * eff));
     }
 
     /// TCP path profile for transfers to any worker in this testbed.
@@ -301,6 +375,42 @@ mod tests {
         let c1 = tb.net.link(tb.submit_txs[1]).capacity_bps * 8.0 / 1e9;
         assert!((c0 - 91.0).abs() < 0.01);
         assert!((c1 - 22.75).abs() < 0.01, "25 Gbps derated: {c1}");
+    }
+
+    #[test]
+    fn data_nodes_get_own_monitored_nics_outside_the_overlay() {
+        let mut spec = TestbedSpec::lan_vpn_paper();
+        spec.n_data_nodes = 2;
+        spec.data_node_gbps = vec![100.0, 25.0];
+        assert_eq!(spec.data_node_nic_gbps(1), 25.0);
+        assert_eq!(spec.data_node_nic_gbps(5), 100.0, "fallback to default");
+        let tb = Testbed::build(spec);
+        assert_eq!(tb.n_data_nodes(), 2);
+        // DTN paths skip the VPN hop the submit funnel pays.
+        let funnel = tb.path_to_worker(0, 1);
+        assert_eq!(funnel.len(), 3, "vpn + submit tx + worker rx");
+        let dtn = tb.dtn_path_to_worker(0, 1);
+        assert_eq!(dtn, vec![tb.data_txs[0], tb.worker_rx[1]]);
+        // Reverse path crosses the same links.
+        let mut rev = tb.dtn_path_from_worker(0, 1);
+        rev.reverse();
+        assert_eq!(rev, dtn);
+        // Per-DTN capacities are derated like every other NIC.
+        let c1 = tb.net.link(tb.data_txs[1]).capacity_bps * 8.0 / 1e9;
+        assert!((c1 - 22.75).abs() < 0.01, "25 Gbps derated: {c1}");
+    }
+
+    #[test]
+    fn data_nic_rerates_with_efficiency() {
+        let mut spec = TestbedSpec::lan_paper();
+        spec.n_data_nodes = 1;
+        let mut tb = Testbed::build(spec);
+        tb.set_data_nic_gbps(0, 25.0);
+        let cap = tb.net.link(tb.data_txs[0]).capacity_bps * 8.0 / 1e9;
+        assert!((cap - 22.75).abs() < 0.01, "degraded: {cap}");
+        tb.set_data_nic_gbps(0, 100.0);
+        let cap = tb.net.link(tb.data_txs[0]).capacity_bps * 8.0 / 1e9;
+        assert!((cap - 91.0).abs() < 0.01, "restored: {cap}");
     }
 
     #[test]

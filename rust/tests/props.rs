@@ -2,7 +2,10 @@
 
 use htcdm::classad::{matches, parse_expr, Ad, Value};
 use htcdm::metrics::BinSeries;
-use htcdm::mover::{AdmissionConfig, AdmissionQueue, PoolRouter, RouterPolicy, TransferRequest};
+use htcdm::mover::{
+    AdmissionConfig, AdmissionQueue, DataSource, PoolRouter, RouterPolicy, SourcePlan,
+    TransferRequest,
+};
 use htcdm::netsim::NetSim;
 use htcdm::security::chacha;
 use htcdm::transfer::{ThrottlePolicy, TransferQueue};
@@ -482,6 +485,72 @@ fn prop_complete_racing_fail_node_never_double_releases() {
         assert_eq!(router.active(), 0, "slot leaked or double-released");
         assert_eq!(router.waiting(), 0, "ghost waiting entry survived");
         assert_eq!(router.stats().released_without_active, 0);
+    });
+}
+
+/// Hybrid-plan source selection is deterministic — two identical
+/// routers fed the same request sequence make identical placements —
+/// and respects the size threshold exactly at the boundary: a request
+/// of `threshold` bytes goes via a DTN, `threshold - 1` via the funnel,
+/// under arbitrary completion churn and fleet sizes.
+#[test]
+fn prop_hybrid_source_selection_deterministic_and_threshold_exact() {
+    check("hybrid-source-threshold", 30, |g| {
+        let n_dtns = g.rng.range_usize(1, 4);
+        let threshold = g.rng.range_u64(2, 1_000_000);
+        let make = || {
+            PoolRouter::sim(
+                1,
+                1,
+                AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+                RouterPolicy::LeastLoaded,
+            )
+            .with_source_plan(SourcePlan::Hybrid { threshold }, vec![1.0; n_dtns])
+        };
+        let mut a = make();
+        let mut b = make();
+        let mut inflight: Vec<u32> = Vec::new();
+        for t in 0..80u32 {
+            // Mix of sizes clustered around the boundary, including the
+            // exact threshold and threshold - 1.
+            let bytes = match g.rng.range_usize(0, 3) {
+                0 => threshold,
+                1 => threshold - 1,
+                2 => g.rng.range_u64(1, threshold - 1),
+                _ => threshold + g.rng.range_u64(0, threshold),
+            };
+            let adm_a = a.request(TransferRequest::new(t, "o", bytes));
+            let adm_b = b.request(TransferRequest::new(t, "o", bytes));
+            assert_eq!(adm_a.len(), 1, "unthrottled: admits immediately");
+            assert_eq!(
+                adm_a[0].source, adm_b[0].source,
+                "two identical routers disagree on ticket {t} ({bytes} B)"
+            );
+            match adm_a[0].source {
+                DataSource::Dtn { .. } => assert!(
+                    bytes >= threshold,
+                    "{bytes} B below threshold {threshold} placed on a DTN"
+                ),
+                DataSource::Funnel { .. } => assert!(
+                    bytes < threshold,
+                    "{bytes} B at/above threshold {threshold} stayed on the funnel"
+                ),
+            }
+            inflight.push(t);
+            // Random completion churn must not perturb determinism
+            // (both routers see the same churn).
+            if g.rng.next_f64() < 0.4 && !inflight.is_empty() {
+                let i = g.rng.range_usize(0, inflight.len() - 1);
+                let done = inflight.swap_remove(i);
+                a.complete(done);
+                b.complete(done);
+            }
+        }
+        // Per-DTN placement counts agree exactly.
+        assert_eq!(
+            a.router_stats().routed_per_dtn,
+            b.router_stats().routed_per_dtn
+        );
     });
 }
 

@@ -1,0 +1,226 @@
+//! The tentpole acceptance tests for the data-source plane: one
+//! `PoolRouter` carrying a `SourcePlan` (submit-funnel / dedicated-dtn
+//! / hybrid) drives BOTH fabrics — first the virtual-time simulator,
+//! then the real TCP loopback pool — with source placement and
+//! admission statistics accumulating across the two runs (mirroring
+//! `router_unified.rs`, one layer down the data plane).
+
+use htcdm::coordinator::engine::{Engine, EngineSpec};
+use htcdm::coordinator::{Experiment, Scenario};
+use htcdm::fabric::{run_real_pool, run_real_pool_router, RealPoolConfig};
+use htcdm::mover::{DataSource, FaultPlan, PoolRouter, RouterPolicy, SourcePlan};
+use htcdm::netsim::topology::TestbedSpec;
+use htcdm::transfer::ThrottlePolicy;
+use htcdm::util::units::{Bytes, SimTime};
+
+fn tiny_sim_spec(n_jobs: u32) -> EngineSpec {
+    let mut tb = TestbedSpec::lan_paper();
+    tb.workers.truncate(2);
+    tb.workers[0].slots = 4;
+    tb.workers[1].slots = 4;
+    tb.monitor_bin = SimTime::from_secs(5);
+    let mut spec = EngineSpec::paper(tb, ThrottlePolicy::Disabled);
+    spec.n_jobs = n_jobs;
+    spec.input_bytes = Bytes(50_000_000);
+    spec.runtime_median_s = 1.0;
+    spec.seed = 13;
+    spec
+}
+
+fn real_cfg(n_jobs: u32) -> RealPoolConfig {
+    RealPoolConfig {
+        n_jobs,
+        workers: 3,
+        input_bytes: 128 << 10,
+        output_bytes: 512,
+        chunk_words: 1024,
+        use_xla_engine: false,
+        passphrase: "source-unified".into(),
+        ..RealPoolConfig::default()
+    }
+}
+
+/// One router object carrying a dedicated-DTN plan serves the simulator
+/// and then the real fabric: in both, every payload byte is served by
+/// the DTN fleet while the submit node keeps only scheduling duties.
+#[test]
+fn same_source_plan_drives_sim_and_real_fabric() {
+    let sim_jobs = 24u32;
+    let real_jobs = 8u32;
+    let router = PoolRouter::sim(
+        1,
+        2,
+        ThrottlePolicy::Disabled.into(),
+        RouterPolicy::LeastLoaded,
+    )
+    .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0, 1.0]);
+    assert_eq!(router.dtn_count(), 2);
+
+    // Phase 1: the simulated fabric routes every input flow over the
+    // two monitored data-node NICs; the submit NIC stays dark.
+    let result = Engine::with_router(tiny_sim_spec(sim_jobs), router)
+        .run()
+        .unwrap();
+    assert_eq!(result.schedd.completed_count(), sim_jobs as usize);
+    assert_eq!(result.dtn_monitors.len(), 2);
+    let dtn_bytes: f64 = result.dtn_monitors.iter().map(|m| m.total_bytes()).sum();
+    assert!(
+        dtn_bytes >= sim_jobs as f64 * 50_000_000.0,
+        "DTN NICs carried the sim burst: {dtn_bytes}"
+    );
+    assert_eq!(
+        result.monitors[0].total_bytes(),
+        0.0,
+        "submit NIC carries no payload under dedicated-dtn"
+    );
+    assert_eq!(
+        result.router.routed_per_dtn.iter().sum::<u64>(),
+        sim_jobs as u64
+    );
+
+    // Extract the very same router object from the sim schedd.
+    let mut schedd = result.schedd;
+    let router = schedd.take_router();
+    assert_eq!(router.source_plan(), SourcePlan::DedicatedDtn);
+    assert_eq!(router.stats().total_admitted, sim_jobs as u64);
+
+    // Phase 2: the real TCP fabric — two ServerRole::Dtn file servers
+    // plus the (idle) submit funnel — moves sealed bytes through the
+    // same router.
+    let (report, router) = run_real_pool_router(&real_cfg(real_jobs), router).unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.jobs_completed, real_jobs);
+    assert_eq!(report.source_plan, "dedicated-dtn");
+    assert_eq!(
+        report.bytes_served_per_node,
+        vec![0],
+        "the submit server moved nothing"
+    );
+    assert_eq!(
+        report.bytes_served_per_dtn.iter().sum::<u64>(),
+        real_jobs as u64 * (128 << 10) as u64,
+        "the DTN fleet served the whole real burst"
+    );
+
+    // The SAME router accounted for both fabrics, per-DTN.
+    let rstats = router.router_stats();
+    assert_eq!(
+        rstats.routed_per_dtn.iter().sum::<u64>(),
+        (sim_jobs + real_jobs) as u64,
+        "source placements accumulated across sim and real runs"
+    );
+    assert_eq!(router.stats().released_without_active, 0);
+}
+
+/// A hybrid plan on the real fabric with a threshold exactly at the
+/// input size: everything is "large", so everything rides the DTN —
+/// the boundary is inclusive on both fabrics.
+#[test]
+fn hybrid_threshold_boundary_is_inclusive_on_the_real_fabric() {
+    let mut cfg = real_cfg(6);
+    cfg.data_nodes = 1;
+    cfg.source = SourcePlan::Hybrid {
+        threshold: 128 << 10, // == input_bytes
+    };
+    let r = run_real_pool(cfg).unwrap();
+    assert_eq!(r.errors, 0);
+    assert_eq!(
+        r.bytes_served_per_dtn.iter().sum::<u64>(),
+        6 * (128 << 10) as u64,
+        "bytes == threshold goes via the DTN"
+    );
+    assert_eq!(r.bytes_served_per_node, vec![0]);
+}
+
+/// Chaos against the data plane on the real fabric: kill one of two
+/// DTNs at t=0 — its transfers re-source to the survivor mid-burst and
+/// the run still completes every job.
+#[test]
+fn real_dtn_kill_fails_over_to_survivor() {
+    let mut cfg = real_cfg(10);
+    cfg.data_nodes = 2;
+    cfg.source = SourcePlan::DedicatedDtn;
+    cfg.workers = 2;
+    cfg.faults = FaultPlan::default().kill_dtn(0, 0.0);
+    let r = run_real_pool(cfg).unwrap();
+    assert_eq!(r.errors, 0, "burst survives the dead DTN");
+    assert_eq!(r.jobs_completed, 10);
+    assert_eq!(r.chaos.count("kill-dtn"), 1);
+    assert_eq!(r.router.dtn_failed, 1);
+    // The survivor ends up serving everything still outstanding.
+    assert!(
+        r.bytes_served_per_dtn[1] >= r.bytes_served_per_dtn[0],
+        "survivor served the bulk: {:?}",
+        r.bytes_served_per_dtn
+    );
+    assert_eq!(r.bytes_served_per_node, vec![0]);
+}
+
+/// The `dtn-offload-4` scenario runs on the simulator at smoke scale
+/// (the CI bench-smoke job runs the same scenario via the CLI), and its
+/// report satisfies the per-source aggregation contract.
+#[test]
+fn dtn_offload_4_scenario_smokes() {
+    let mut spec = Scenario::DtnOffload4.spec();
+    spec.n_jobs = 48;
+    spec.input_bytes = Bytes(50_000_000);
+    spec.testbed.monitor_bin = SimTime::from_secs(5);
+    let report = Experiment::custom("dtn-offload-smoke", spec).run().unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.n_data_nodes, 4);
+    assert_eq!(report.n_submit_nodes, 1);
+    assert_eq!(report.source_plan, "dedicated-dtn");
+    assert_eq!(report.per_dtn_series.len(), 4);
+    for (d, s) in report.per_dtn_series.iter().enumerate() {
+        assert!(s.total_bytes() > 0.0, "dtn {d} idle");
+    }
+    assert_eq!(report.per_node_series[0].total_bytes(), 0.0);
+    assert_eq!(report.router.routed_per_dtn.iter().sum::<u64>(), 48);
+}
+
+/// Sources survive a *schedule-node* failure: with 2 submit nodes and a
+/// DTN fleet, killing submit node 0 re-admits its transfers on node 1,
+/// and the re-admissions pick fresh DTN sources (scheduling failover
+/// composes with the data plane).
+#[test]
+fn schedule_node_failure_composes_with_dtn_sources() {
+    use htcdm::mover::TransferRequest;
+    let mut router = PoolRouter::sim(
+        2,
+        1,
+        ThrottlePolicy::MaxConcurrent(2).into(),
+        RouterPolicy::RoundRobin,
+    )
+    .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0, 1.0]);
+    for t in 0..8 {
+        router.request(TransferRequest::new(t, "o", 1000));
+    }
+    assert_eq!(router.active(), 4, "2 per node");
+    let rescued = router.fail_node(0);
+    assert!(rescued.is_empty(), "survivor already at its limit");
+    // Drain node 1; every admission along the way carries a DTN source.
+    let mut pending: Vec<u32> = (0..8)
+        .filter(|&t| router.global_shard_of(t).is_some())
+        .collect();
+    let mut done = 0u32;
+    let mut guard = 0;
+    while let Some(t) = pending.pop() {
+        guard += 1;
+        assert!(guard < 100, "drain deadlocked");
+        done += 1;
+        for a in router.complete(t) {
+            assert_eq!(a.node, 1, "survivor schedules everything");
+            assert!(
+                matches!(a.source, DataSource::Dtn { .. }),
+                "re-admissions stay on the data plane: {:?}",
+                a.source
+            );
+            pending.push(a.ticket);
+        }
+    }
+    assert_eq!(done, 8);
+    assert!(
+        router.router_stats().routed_per_dtn.iter().sum::<u64>() >= 8,
+        "every admission (including re-admissions) got a DTN source"
+    );
+}
