@@ -30,7 +30,7 @@
 use htcdm::coordinator::engine::EngineSpec;
 use htcdm::coordinator::{Experiment, Scenario};
 use htcdm::fabric::{run_real_pool, RealPoolConfig};
-use htcdm::mover::{AdmissionConfig, RouterPolicy, SourcePlan};
+use htcdm::mover::{AdmissionConfig, RouterPolicy, SourcePlan, SourceSelector};
 use htcdm::netsim::topology::TestbedSpec;
 use htcdm::transfer::ThrottlePolicy;
 
@@ -249,6 +249,47 @@ fn main() -> anyhow::Result<()> {
          payload bytes through the submit node)",
         dtn_gbps / funnel_gbps
     );
+
+    println!("\n=== source-selector row (cache-aware vs the round-robin baseline) ===");
+    println!("  the benchmark dataset is ONE hard-linked extent, so the cache-aware");
+    println!("  selector homes the whole burst on a single data node:");
+    println!("  selector          goodput     wall      per-dtn jobs");
+    for &(label, selector) in &[
+        ("round-robin", SourceSelector::RoundRobin),
+        ("cache-aware", SourceSelector::CacheAware),
+    ] {
+        let cfg = RealPoolConfig {
+            n_jobs: if smoke { 8 } else { 32 },
+            workers: 8,
+            input_bytes: if smoke { 1 << 20 } else { 8 << 20 },
+            output_bytes: 4096,
+            use_xla_engine: false,
+            passphrase: "selector-sweep".into(),
+            data_nodes: 2,
+            source: SourcePlan::DedicatedDtn,
+            source_selector: selector,
+            ..Default::default()
+        };
+        let r = run_real_pool(cfg)?;
+        anyhow::ensure!(r.errors == 0, "transfer errors in selector row");
+        if selector == SourceSelector::CacheAware {
+            // The affinity claim is measured: one extent, one home.
+            anyhow::ensure!(
+                r.router.routed_per_dtn.iter().filter(|&&c| c > 0).count() == 1,
+                "cache-aware spread the single extent: {:?}",
+                r.router.routed_per_dtn
+            );
+        }
+        println!(
+            "  {:<14}   {:>7.3} Gbps  {:>6.2} s   {:?}",
+            label, r.gbps, r.wall_secs, r.router.routed_per_dtn
+        );
+        json_rows.push(format!(
+            "{{\"sweep\":\"source-selector\",\"selector\":\"{}\",\"gbps\":{:.4},\
+             \"wall_secs\":{:.3},\"routed_per_dtn\":{:?}}}",
+            label, r.gbps, r.wall_secs, r.router.routed_per_dtn
+        ));
+    }
 
     if let Ok(dir) = std::env::var("BENCH_REPORT_DIR") {
         std::fs::create_dir_all(&dir).ok();

@@ -14,11 +14,12 @@ use crate::metrics::BinSeries;
 use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan};
 use crate::mover::{
     AdmissionConfig, DataSource, MoverStats, PoolRouter, RouterPolicy, RouterStats, ShadowPool,
-    SourcePlan,
+    SourcePlan, SourceSelector,
 };
 use crate::netsim::topology::{Testbed, TestbedSpec};
 use crate::netsim::{calib, FlowId};
 use crate::sim::EventQueue;
+use crate::storage::{DeviceProfile, ExtentId, Storage};
 use crate::transfer::ThrottlePolicy;
 use crate::util::units::{Bytes, Gbps, SimTime};
 use crate::util::Prng;
@@ -58,6 +59,18 @@ pub struct EngineSpec {
     /// by the scheduling node's funnel (the paper baseline), the DTN
     /// fleet, or a size-split hybrid.
     pub source: SourcePlan,
+    /// Which-DTN selection strategy within the plan's fleet
+    /// (round-robin / cache-aware / owner-affinity /
+    /// weighted-by-capacity).
+    pub source_selector: SourceSelector,
+    /// Per-DTN admission budget: max concurrent transfers one data node
+    /// serves (0 = unlimited). A saturated DTN defers placements to its
+    /// peers and overflows to the funnel when the whole fleet is full.
+    pub dtn_slots: u32,
+    /// Distinct physical extents behind the job inputs (1 = the paper's
+    /// single hard-linked extent; >1 gives cache-aware selection a
+    /// working set to place — job `p` reads extent `p % n_extents`).
+    pub n_extents: u32,
     /// Distinct job owners, round-robined over procs (1 = the paper's
     /// single benchmark user; >1 makes fair-share scheduling visible).
     pub n_owners: u32,
@@ -87,6 +100,9 @@ impl EngineSpec {
             router: RouterPolicy::LeastLoaded,
             n_data_nodes: 0,
             source: SourcePlan::SubmitFunnel,
+            source_selector: SourceSelector::RoundRobin,
+            dtn_slots: 0,
+            n_extents: 1,
             n_owners: 1,
             faults: FaultPlan::default(),
             seed: 20210901, // eScience 2021
@@ -110,10 +126,16 @@ impl EngineSpec {
     /// DATA_NODES = 4
     /// SOURCE_PLAN = DEDICATED_DTN
     /// DTN_THRESHOLD = 64MB
+    /// SOURCE_SELECTOR = CACHE_AWARE
+    /// DTN_MAX_CONCURRENT = 50
+    /// N_EXTENTS = 8
     /// FAULT_PLAN = kill:1@300; recover:1@900
     /// STEAL_THRESHOLD = 4
     /// RECOVERY_RAMP = 32
     /// ```
+    ///
+    /// `docs/KNOBS.md` is the complete reference for every knob, CLI
+    /// flag and environment variable.
     pub fn apply_config(
         &mut self,
         cfg: &crate::config::Config,
@@ -159,6 +181,11 @@ impl EngineSpec {
         } else if let SourcePlan::Hybrid { ref mut threshold } = self.source {
             *threshold = cfg.get_bytes("DTN_THRESHOLD", *threshold)?;
         }
+        if cfg.raw("SOURCE_SELECTOR").is_some() {
+            self.source_selector = SourceSelector::from_config(cfg)?;
+        }
+        self.dtn_slots = cfg.get_u64("DTN_MAX_CONCURRENT", self.dtn_slots as u64)? as u32;
+        self.n_extents = (cfg.get_u64("N_EXTENTS", self.n_extents as u64)? as u32).max(1);
         // Heterogeneous data fleets: DATA_NODE_GBPS = 100, 25 sets
         // per-DTN NIC capacity.
         if let Some(raw) = cfg.raw("DATA_NODE_GBPS") {
@@ -217,6 +244,9 @@ enum FlowKind {
 struct FlowCtx {
     proc_: u32,
     kind: FlowKind,
+    /// Endpoint serving the flow's bytes; a DTN-sourced INPUT flow holds
+    /// one of that node's device-reader slots until it finishes/aborts.
+    source: DataSource,
 }
 
 /// Raw engine outputs, consumed by `experiment::Report`.
@@ -237,6 +267,11 @@ pub struct EngineResult {
     pub peak_concurrent_transfers: u32,
     pub total_input_bytes: f64,
     pub errors: u64,
+    /// DTN storage-cache accounting summed over the fleet: reads served
+    /// from a data node's page cache vs its (slower) device. (0, 0) with
+    /// no DTN fleet.
+    pub dtn_cache_hits: u64,
+    pub dtn_cache_misses: u64,
     /// Aggregate data-mover accounting (per-shard routing node-major,
     /// admission totals, failed/recovered-node and work-stealing counts).
     pub mover: MoverStats,
@@ -269,6 +304,14 @@ pub struct Engine {
     /// `StartInputFlow` events from a superseded routing are stale.
     epoch_by_proc: HashMap<u32, u32>,
     flows: HashMap<FlowId, FlowCtx>,
+    /// Per-data-node storage view (catalog + page cache): the sim's
+    /// model of what a DTN serves fast (cache) vs slow (device). The
+    /// router's cache-aware residency view is re-synced from this truth
+    /// after every read.
+    dtn_storage: Vec<Storage>,
+    /// Input flows currently reading from each DTN's storage (device
+    /// concurrency for the seek-degradation model).
+    dtn_readers: Vec<u32>,
     bg_nominal_gbps: f64,
     /// The spec's fault plan, sorted by injection time (`Ev::Fault`
     /// carries an index into this).
@@ -301,7 +344,9 @@ impl Engine {
             .map(|d| spec.testbed.data_node_nic_gbps(d))
             .collect();
         let router = PoolRouter::new(nodes, capacities, spec.router)
-            .with_source_plan(spec.source, dtn_caps);
+            .with_source_plan(spec.source, dtn_caps)
+            .with_source_selector(spec.source_selector)
+            .with_dtn_budget(spec.dtn_slots);
         Engine::with_router(spec, router)
     }
 
@@ -324,10 +369,46 @@ impl Engine {
         spec.n_data_nodes = router.dtn_count() as u32;
         spec.testbed.n_data_nodes = router.dtn_count() as u32;
         spec.source = router.source_plan();
+        spec.source_selector = router.source_selector();
+        spec.dtn_slots = router.dtn_budget();
         if let Some(ramp) = spec.faults.recovery_ramp {
             router.set_recovery_ramp(ramp);
         }
         let tb = Testbed::build(spec.testbed.clone());
+        // The data-node storage model: every DTN serves the same
+        // hard-linked catalog (names `input_0..n_jobs-1` over
+        // `n_extents` physical extents) but owns its OWN page cache.
+        // Extents are pre-warmed block-wise across the fleet — extent
+        // `e` is staged hot on node `e * n_dtns / n_extents`, the
+        // natural layout after a staging pass — and the router's
+        // cache-aware residency view is seeded to match, so a
+        // cache-aware burst starts warm while a placement-blind one
+        // pays the device rate.
+        let n_dtns = router.dtn_count();
+        let n_ext = spec.n_extents.max(1).min(spec.n_jobs.max(1)) as usize;
+        let mut dtn_storage: Vec<Storage> = Vec::with_capacity(n_dtns);
+        for d in 0..n_dtns {
+            let device = if spec.testbed.dtn_spinning {
+                DeviceProfile::spinning()
+            } else {
+                DeviceProfile::nvme()
+            };
+            let mut st = Storage::new(device, spec.testbed.dtn_cache_bytes);
+            for p in 0..spec.n_jobs as usize {
+                if p < n_ext {
+                    st.create(&format!("input_{p}"), spec.input_bytes.0);
+                } else {
+                    st.hardlink(&format!("input_{}", p % n_ext), &format!("input_{p}"))
+                        .expect("extent representative exists");
+                }
+            }
+            for e in 0..n_ext {
+                if e * n_dtns / n_ext == d && st.warm(&format!("input_{e}")) {
+                    router.note_extent_resident(d, ExtentId(e as u64));
+                }
+            }
+            dtn_storage.push(st);
+        }
         let schedd = Schedd::with_router("schedd@submit", router);
         let startds: Vec<Startd> = spec
             .testbed
@@ -355,6 +436,8 @@ impl Engine {
             source_by_proc: HashMap::new(),
             epoch_by_proc: HashMap::new(),
             flows: HashMap::new(),
+            dtn_readers: vec![0; dtn_storage.len()],
+            dtn_storage,
             bg_nominal_gbps,
             faults,
             chaos: ChaosTimeline::default(),
@@ -367,6 +450,7 @@ impl Engine {
     /// admission policies have something to schedule between.
     fn job_specs(&self) -> Vec<JobSpec> {
         let n_owners = self.spec.n_owners.max(1);
+        let n_ext = self.spec.n_extents.max(1).min(self.spec.n_jobs.max(1));
         (0..self.spec.n_jobs)
             .map(|p| JobSpec {
                 id: crate::jobs::JobId { cluster: 1, proc: p },
@@ -376,6 +460,7 @@ impl Engine {
                     format!("user{}", p % n_owners)
                 },
                 input_file: format!("input_{p}"),
+                input_extent: Some(ExtentId((p % n_ext) as u64)),
                 input_bytes: self.spec.input_bytes,
                 output_bytes: self.spec.output_bytes,
                 runtime_median_s: self.spec.runtime_median_s,
@@ -497,6 +582,8 @@ impl Engine {
         let monitor = BinSeries::sum(&all);
         let mover = self.schedd.mover.stats();
         let router = self.schedd.mover.router_stats();
+        let dtn_cache_hits: u64 = self.dtn_storage.iter().map(|s| s.cache_hits).sum();
+        let dtn_cache_misses: u64 = self.dtn_storage.iter().map(|s| s.cache_misses).sum();
         Ok(EngineResult {
             total_input_bytes: self.spec.n_jobs as f64 * self.spec.input_bytes.0 as f64,
             peak_concurrent_transfers: mover.peak_active,
@@ -507,6 +594,8 @@ impl Engine {
             finished_at,
             negotiation_cycles: self.negotiator.cycles,
             errors: 0,
+            dtn_cache_hits,
+            dtn_cache_misses,
             mover,
             router,
             chaos: self.chaos,
@@ -606,7 +695,14 @@ impl Engine {
             .unwrap_or(DataSource::Funnel { node });
         self.schedd.input_started(proc_, t);
         let path = self.source_path(source, slot.worker as usize);
-        let cap = self.tb.path_profile().stream_cap_bps();
+        let mut cap = self.tb.path_profile().stream_cap_bps();
+        if let DataSource::Dtn { dtn } = source {
+            // The storage model: a cache-hot extent streams at page-cache
+            // rate (never the bottleneck); a cold one is capped by the
+            // node's device, degraded by its concurrent readers.
+            cap = cap.min(self.dtn_read_bps(dtn, proc_));
+            self.dtn_readers[dtn] += 1;
+        }
         let bytes = self.schedd.job(proc_).spec.input_bytes.0 as f64;
         let fid = self.tb.net.start_flow(path, bytes, cap);
         self.flows.insert(
@@ -614,11 +710,42 @@ impl Engine {
             FlowCtx {
                 proc_,
                 kind: FlowKind::Input,
+                source,
             },
         );
     }
 
+    /// Effective per-stream read bandwidth for `proc_`'s input on data
+    /// node `dtn`: [`calib::PAGE_CACHE_BPS`]-class on a cache hit, the
+    /// device's concurrency-degraded aggregate share on a miss
+    /// ([`DeviceProfile::aggregate_bps`]). Reading admits the extent to
+    /// the node's cache, and the router's cache-aware residency view is
+    /// re-synced from the storage truth (so evictions are visible).
+    fn dtn_read_bps(&mut self, dtn: usize, proc_: u32) -> f64 {
+        let name = self.schedd.job(proc_).spec.input_file.clone();
+        let Some(src) = self.dtn_storage[dtn].open_read(&name) else {
+            return f64::INFINITY; // name unknown to the catalog: unmodeled
+        };
+        let resident = self.dtn_storage[dtn].cached_extents();
+        self.schedd.mover.set_dtn_residency(dtn, &resident);
+        if src.cached {
+            src.bps
+        } else {
+            let readers = self.dtn_readers[dtn] + 1;
+            self.dtn_storage[dtn].device().aggregate_bps(readers) / readers as f64
+        }
+    }
+
+    /// An input flow left the wire (completed or aborted): free its DTN
+    /// device-reader slot, if it held one.
+    fn release_reader(&mut self, ctx: &FlowCtx) {
+        if let (FlowKind::Input, DataSource::Dtn { dtn }) = (ctx.kind, ctx.source) {
+            self.dtn_readers[dtn] = self.dtn_readers[dtn].saturating_sub(1);
+        }
+    }
+
     fn on_flow_done(&mut self, ctx: FlowCtx, t: SimTime) {
+        self.release_reader(&ctx);
         match ctx.kind {
             FlowKind::Input => {
                 let admitted = self.schedd.input_done(ctx.proc_, t);
@@ -691,6 +818,7 @@ impl Engine {
             FlowCtx {
                 proc_,
                 kind: FlowKind::Output,
+                source,
             },
         );
     }
@@ -725,6 +853,7 @@ impl Engine {
             .collect();
         for fid in aborted {
             let ctx = self.flows.remove(&fid).expect("aborted flow has context");
+            self.release_reader(&ctx);
             self.tb.net.finish_flow(fid);
             self.schedd.input_aborted(ctx.proc_, t);
         }
@@ -776,6 +905,10 @@ impl Engine {
                 self.tb.set_submit_nic_gbps(node, gbps);
             }
             FaultEvent::KillDtn { dtn, .. } => {
+                // The node's page cache dies with the crash (the router
+                // clears its residency view in `fail_dtn` below): a
+                // recovered node reads cold until re-warmed.
+                self.dtn_storage[dtn].clear_cache();
                 // The data node's in-flight INPUT transfers die with it;
                 // scheduling state (admission slots) survives — the
                 // router re-sources the tickets and fresh starts are
@@ -850,6 +983,9 @@ mod tests {
             router: RouterPolicy::LeastLoaded,
             n_data_nodes: 0,
             source: SourcePlan::SubmitFunnel,
+            source_selector: SourceSelector::RoundRobin,
+            dtn_slots: 0,
+            n_extents: 1,
             n_owners: 1,
             faults: FaultPlan::default(),
             seed: 1,
@@ -1015,6 +1151,49 @@ mod tests {
     }
 
     #[test]
+    fn cache_aware_run_hits_every_warm_extent() {
+        // 4 extents pre-warmed block-wise over 2 DTNs: the cache-aware
+        // selector routes every read to its extent's home, so the whole
+        // burst is served from page cache.
+        let mut spec = tiny_spec();
+        spec.n_data_nodes = 2;
+        spec.source = SourcePlan::DedicatedDtn;
+        spec.source_selector = SourceSelector::CacheAware;
+        spec.n_extents = 4;
+        spec.testbed.dtn_cache_bytes = 2 * spec.input_bytes.0;
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 40);
+        assert_eq!(r.dtn_cache_misses, 0, "{} hits", r.dtn_cache_hits);
+        assert_eq!(r.dtn_cache_hits, 40, "one read per job");
+        // Extents 0,1 home on dtn 0 and 2,3 on dtn 1 — an even split of
+        // the p % 4 workload.
+        assert_eq!(r.router.routed_per_dtn, vec![20, 20]);
+    }
+
+    #[test]
+    fn dtn_budget_caps_per_node_concurrency_in_sim() {
+        let mut spec = tiny_spec();
+        spec.n_data_nodes = 2;
+        spec.source = SourcePlan::DedicatedDtn;
+        spec.dtn_slots = 1;
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 40);
+        // 8 slots feed 2 single-slot DTNs: the budget pushed back.
+        let st = &r.mover;
+        assert!(
+            st.dtn_deferred > 0 || st.dtn_overflow_to_funnel > 0,
+            "a 1-deep budget under an 8-wide burst must defer or overflow"
+        );
+        // Overflowed transfers ride the funnel; everything still lands.
+        let funnel_bytes: f64 = r.monitors.iter().map(|m| m.total_bytes()).sum();
+        let dtn_bytes: f64 = r.dtn_monitors.iter().map(|m| m.total_bytes()).sum();
+        assert!(
+            funnel_bytes + dtn_bytes >= r.total_input_bytes,
+            "funnel {funnel_bytes} + dtn {dtn_bytes} < inputs"
+        );
+    }
+
+    #[test]
     fn dtn_plan_without_data_nodes_errors() {
         let mut spec = tiny_spec();
         spec.source = SourcePlan::DedicatedDtn; // no data nodes
@@ -1090,6 +1269,9 @@ mod tests {
              DATA_NODES = 2\n\
              SOURCE_PLAN = HYBRID\n\
              DTN_THRESHOLD = 50MB\n\
+             SOURCE_SELECTOR = CACHE_AWARE\n\
+             DTN_MAX_CONCURRENT = 6\n\
+             N_EXTENTS = 4\n\
              DATA_NODE_GBPS = 100, 40\n\
              FAULT_PLAN = kill:1@5; recover:1@20\n\
              STEAL_THRESHOLD = 3\n\
@@ -1108,6 +1290,9 @@ mod tests {
                 threshold: 50_000_000
             }
         );
+        assert_eq!(spec.source_selector, SourceSelector::CacheAware);
+        assert_eq!(spec.dtn_slots, 6);
+        assert_eq!(spec.n_extents, 4);
         assert_eq!(spec.testbed.data_node_gbps, vec![100.0, 40.0]);
         assert_eq!(spec.n_jobs, 12);
         assert_eq!(spec.input_bytes, Bytes(10_000_000));

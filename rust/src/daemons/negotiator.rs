@@ -93,6 +93,7 @@ mod tests {
             id: JobId { cluster: 1, proc: p },
             owner: "a".into(),
             input_file: format!("f{p}"),
+            input_extent: None,
             input_bytes: Bytes::gib(2),
             output_bytes: Bytes::kib(4),
             runtime_median_s: 5.0,

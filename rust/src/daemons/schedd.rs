@@ -125,7 +125,8 @@ impl Schedd {
         job.t_matched = Some(t);
         job.t_transfer_queued = Some(t);
         let id = job.spec.id;
-        let req = TransferRequest::new(proc_, job.spec.owner.clone(), job.spec.input_bytes.0);
+        let mut req = TransferRequest::new(proc_, job.spec.owner.clone(), job.spec.input_bytes.0);
+        req.extent = job.spec.input_extent;
         self.log.record(t, id, EventKind::TransferInputQueued);
         self.mover.request(req)
     }
@@ -218,6 +219,7 @@ mod tests {
                 id: JobId { cluster: 1, proc: p },
                 owner: "a".into(),
                 input_file: format!("f{p}"),
+                input_extent: None,
                 input_bytes: Bytes::mib(1),
                 output_bytes: Bytes::kib(1),
                 runtime_median_s: 5.0,

@@ -167,6 +167,7 @@ mod tests {
             id: jid(),
             owner: "a".into(),
             input_file: "f".into(),
+            input_extent: None,
             input_bytes: crate::util::units::Bytes::gib(2),
             output_bytes: crate::util::units::Bytes::kib(4),
             runtime_median_s: 5.0,

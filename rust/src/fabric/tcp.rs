@@ -27,7 +27,7 @@ use crate::jobs::JobSpec;
 use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan};
 use crate::mover::{
     AdmissionConfig, DataSource, MoverStats, PoolRouter, Routed, RouterPolicy, RouterStats,
-    ShadowPool, SourcePlan, TransferRequest,
+    ShadowPool, SourcePlan, SourceSelector, TransferRequest,
 };
 use crate::runtime::engine::{NativeEngine, SealEngine};
 use crate::runtime::service::{EngineHandle, EngineService};
@@ -408,6 +408,14 @@ pub struct RealPoolConfig {
     pub data_nodes: u32,
     /// Data-source plan choosing funnel vs DTN per admitted transfer.
     pub source: SourcePlan,
+    /// Which-DTN selection strategy within the fleet (the same knob the
+    /// simulator takes: round-robin / cache-aware / owner-affinity /
+    /// weighted-by-capacity).
+    pub source_selector: SourceSelector,
+    /// Per-DTN admission budget: max concurrent transfers one data node
+    /// serves (0 = unlimited). A saturated DTN defers placements to its
+    /// peers and overflows to the funnel when the whole fleet is full.
+    pub dtn_slots: u32,
     /// Fault-injection schedule (wall-clock seconds from burst start):
     /// `KillNode` crashes the node's file server mid-burst (in-flight
     /// connections break; workers retry through the router),
@@ -434,6 +442,8 @@ impl Default for RealPoolConfig {
             node_capacities: Vec::new(),
             data_nodes: 0,
             source: SourcePlan::SubmitFunnel,
+            source_selector: SourceSelector::RoundRobin,
+            dtn_slots: 0,
             faults: FaultPlan::default(),
         }
     }
@@ -466,6 +476,8 @@ pub struct RealPoolReport {
     pub bytes_served_per_dtn: Vec<u64>,
     /// Data-source plan label the run executed with.
     pub source_plan: String,
+    /// Which-DTN selection-strategy label the run executed with.
+    pub source_selector: String,
     /// Per-node fault timeline (empty for fault-free runs).
     pub chaos: ChaosTimeline,
 }
@@ -585,7 +597,9 @@ pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
         );
     };
     let router = PoolRouter::new(nodes, capacities, cfg.router)
-        .with_source_plan(cfg.source, vec![1.0; cfg.data_nodes as usize]);
+        .with_source_plan(cfg.source, vec![1.0; cfg.data_nodes as usize])
+        .with_source_selector(cfg.source_selector)
+        .with_dtn_budget(cfg.dtn_slots);
     let (report, _router) = run_real_pool_router(&cfg, router)?;
     Ok(report)
 }
@@ -915,8 +929,9 @@ pub fn run_real_pool_router(
                 let (lock, cv) = &*gate;
                 let admission = {
                     let mut g = lock.lock().unwrap();
-                    let req =
+                    let mut req =
                         TransferRequest::new(ticket, job.owner.clone(), job.input_bytes.0);
+                    req.extent = job.input_extent;
                     for a in g.router.request(req) {
                         g.ready.insert(a.ticket, a);
                     }
@@ -1113,6 +1128,7 @@ pub fn run_real_pool_router(
         errors,
         mover: router.stats(),
         source_plan: router.source_plan().label(),
+        source_selector: router.source_selector().label().to_string(),
         router: router.router_stats(),
         bytes_served_per_node,
         bytes_served_per_dtn,
@@ -1142,6 +1158,8 @@ mod tests {
             node_capacities: Vec::new(),
             data_nodes: 0,
             source: SourcePlan::SubmitFunnel,
+            source_selector: SourceSelector::RoundRobin,
+            dtn_slots: 0,
             faults: FaultPlan::default(),
         }
     }
@@ -1288,6 +1306,52 @@ mod tests {
                 assert_eq!(funnel_served, 8 * (256 << 10) as u64);
             }
         }
+    }
+
+    #[test]
+    fn real_pool_cache_aware_selector_homes_the_shared_extent() {
+        // benchmark_burst hard-links every input name to ONE extent:
+        // the first placement homes it on a data node and every later
+        // transfer affines to the same node.
+        let mut cfg = base_cfg();
+        cfg.data_nodes = 2;
+        cfg.source = SourcePlan::DedicatedDtn;
+        cfg.source_selector = SourceSelector::CacheAware;
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.jobs_completed, 8);
+        assert_eq!(r.source_selector, "cache-aware");
+        assert_eq!(r.router.routed_per_dtn.iter().sum::<u64>(), 8);
+        assert_eq!(
+            r.router.routed_per_dtn.iter().filter(|&&c| c > 0).count(),
+            1,
+            "one extent, one home: {:?}",
+            r.router.routed_per_dtn
+        );
+    }
+
+    #[test]
+    fn real_pool_dtn_budget_overflows_to_funnel() {
+        // 4 workers pop their first jobs near-simultaneously against a
+        // single 1-slot data node: the budget pushes the overlap onto
+        // the funnel, whose server demonstrably serves payload.
+        let mut cfg = base_cfg();
+        cfg.data_nodes = 1;
+        cfg.source = SourcePlan::DedicatedDtn;
+        cfg.dtn_slots = 1;
+        cfg.workers = 4;
+        cfg.input_bytes = 2 << 20;
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.jobs_completed, 8);
+        assert!(
+            r.mover.dtn_overflow_to_funnel > 0,
+            "a 4-wide burst against one slot must overflow"
+        );
+        let funnel: u64 = r.bytes_served_per_node.iter().sum();
+        let dtns: u64 = r.bytes_served_per_dtn.iter().sum();
+        assert!(funnel > 0, "overflowed transfers rode the funnel");
+        assert_eq!(funnel + dtns, 8 * (2 << 20) as u64, "nothing lost");
     }
 
     #[test]

@@ -58,6 +58,11 @@ pub struct JobSpec {
     pub owner: String,
     /// Input sandbox file name (resolved in the submit node's storage).
     pub input_file: String,
+    /// Physical extent behind `input_file` (hard-linked names share one
+    /// extent — the paper's §III dataset). Cache-aware source selection
+    /// uses it to route the transfer to the data node already holding
+    /// the extent hot; `None` = unknown.
+    pub input_extent: Option<crate::storage::ExtentId>,
     pub input_bytes: Bytes,
     pub output_bytes: Bytes,
     /// Requested wall time of the payload (sampled at run time around
@@ -158,6 +163,7 @@ mod tests {
             },
             owner: "alice".into(),
             input_file: format!("input_{proc_}"),
+            input_extent: None,
             input_bytes: Bytes::gib(2),
             output_bytes: Bytes::kib(4),
             runtime_median_s: 5.0,

@@ -118,6 +118,7 @@ pub fn expand(d: &SubmitDescription, cluster: u32) -> Vec<JobSpec> {
             id: JobId { cluster, proc: proc_ },
             owner: d.owner.clone(),
             input_file: substitute(&d.transfer_input_files, proc_, cluster),
+            input_extent: None,
             input_bytes: d.input_size.unwrap_or(Bytes::gib(2)),
             output_bytes: d.output_size.unwrap_or(Bytes::kib(4)),
             runtime_median_s: d.runtime_median_s,

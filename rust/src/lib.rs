@@ -24,6 +24,12 @@
 //! executes them from the transfer hot path — Python is never on the
 //! request path.
 //!
+//! Prose companions to this rustdoc live in `docs/`:
+//! `docs/ARCHITECTURE.md` (the layered tour with diagrams),
+//! `docs/KNOBS.md` (every config knob, CLI flag and environment
+//! variable) and `docs/REPORTS.md` (the schemas of everything a run
+//! emits). CI link-checks them alongside `cargo doc`.
+//!
 //! ## Data mover architecture
 //!
 //! Sandbox data movement is owned end-to-end by the [`mover`] subsystem,
@@ -83,13 +89,31 @@
 //!   `DATA_NODE_GBPS` in [`config`], `--data-nodes` / `--source` on the
 //!   CLI, and the `dtn-offload-4` scenario (4 × 100 Gbps DTNs behind
 //!   one scheduling node).
-//! * Selection is deterministic (round-robin over the live fleet;
-//!   hybrid compares `bytes >= threshold`), and failure-aware: a killed
-//!   DTN's in-flight transfers re-source onto survivors or fall back to
-//!   the funnel ([`mover::PoolRouter::fail_dtn`]), without touching
-//!   their admission slots. Chaos plans address data nodes with the
-//!   `dN` spelling (`kill:d0@30`), and `flap:N@T:PERIOD:GBPS` expands
-//!   into periodic slow-NIC degrade/restore cycles.
+//! * *Which* live data node serves a fleet-bound transfer is the
+//!   [`mover::SourceSelector`]'s call (`SOURCE_SELECTOR` /
+//!   `--source-selector`): the deterministic round-robin rotation,
+//!   **cache-aware** placement steering a transfer to the DTN already
+//!   holding its [`storage::ExtentId`] hot (per-DTN residency tracked
+//!   by the router and, in the sim, backed by a real per-node
+//!   [`storage::Storage`] cache model — warm extents stream at
+//!   page-cache rate, cold ones at the device's), **owner-affinity**
+//!   pinning each owner's sandboxes to a stable DTN with failure-aware
+//!   re-pinning, or **weighted-by-capacity** deficit selection matching
+//!   heterogeneous `DATA_NODE_GBPS` fleets. Every DTN also carries its
+//!   own admission budget (`DTN_MAX_CONCURRENT` / `--dtn-cap`): a
+//!   saturated node pushes back (`MoverStats::dtn_deferred`), and a
+//!   fully saturated fleet overflows to the funnel
+//!   (`MoverStats::dtn_overflow_to_funnel`). The `cache-affine-4`
+//!   scenario proves the steering pays: on a warm-extent burst the
+//!   cache-aware selector beats blind round-robin on both makespan and
+//!   goodput.
+//! * Selection is failure-aware: a killed DTN's in-flight transfers
+//!   re-source onto survivors or fall back to the funnel
+//!   ([`mover::PoolRouter::fail_dtn`]), without touching their
+//!   admission slots — and the dead node's residency and owner pins die
+//!   with it. Chaos plans address data nodes with the `dN` spelling
+//!   (`kill:d0@30`), and `flap:N@T:PERIOD:GBPS` expands into periodic
+//!   slow-NIC degrade/restore cycles.
 //! * Reports carry one NIC series per source (`Report::per_node_series`
 //!   + `Report::per_dtn_series`, summing element-wise to
 //!   `Report::series`), so the acceptance experiment is a one-liner:

@@ -24,24 +24,30 @@ fn usage() -> ! {
          \n\
          commands:\n\
            experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay|fair-share|sharded-4|\n\
-                       multi-submit-4|hetero-25-100|kill-recover-4|dtn-offload-4>\n\
+                       multi-submit-4|hetero-25-100|kill-recover-4|dtn-offload-4|\n\
+                       cache-affine-4>\n\
                       [--scale N] [--csv FILE] [--config FILE]\n\
                       run a paper experiment on the simulated testbed;\n\
                       --config applies condor-style knobs (JOBS, INPUT_SIZE,\n\
                       N_OWNERS, TRANSFER_QUEUE_POLICY, SHADOW_POOL_SIZE,\n\
                       N_SUBMIT_NODES, ROUTER_POLICY, DATA_NODES,\n\
-                      SOURCE_PLAN, DTN_THRESHOLD, FAULT_PLAN,\n\
-                      STEAL_THRESHOLD, RECOVERY_RAMP...)\n\
+                      SOURCE_PLAN, DTN_THRESHOLD, SOURCE_SELECTOR,\n\
+                      DTN_MAX_CONCURRENT, N_EXTENTS, FAULT_PLAN,\n\
+                      STEAL_THRESHOLD, RECOVERY_RAMP...;\n\
+                      docs/KNOBS.md is the full reference)\n\
            pool       [--jobs N] [--workers W] [--mb SIZE] [--native]\n\
                       [--shadows N] [--policy disabled|disk-load|max-concurrent|fair-share|weighted-by-size]\n\
                       [--cap N] [--submit-nodes N] [--node-gbps G1,G2,...]\n\
                       [--router round-robin|least-loaded|owner-affinity|weighted-by-capacity]\n\
                       [--data-nodes N] [--source funnel|dtn|hybrid[:BYTES]]\n\
-                      [--fault PLAN] [--steal N] [--ramp N]\n\
+                      [--source-selector round-robin|cache-aware|owner-affinity|weighted-by-capacity]\n\
+                      [--dtn-cap N] [--fault PLAN] [--steal N] [--ramp N]\n\
                       run a real-mode loopback pool (sealed bytes via PJRT);\n\
                       --submit-nodes > 1 runs one file server per submit node\n\
                       behind the pool router; --data-nodes N serves bytes\n\
-                      from N dedicated DTN file servers under --source;\n\
+                      from N dedicated DTN file servers under --source,\n\
+                      placed by --source-selector with --dtn-cap slots\n\
+                      of admission budget per data node (0 = unlimited);\n\
                       --fault injects chaos, e.g. 'kill:1@0.5; recover:1@2;\n\
                       kill:d0@1' (wall-clock seconds, dN = data node), with\n\
                       --steal N enabling work-stealing past an N-deep\n\
@@ -90,6 +96,7 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
         Some("hetero-25-100") => Scenario::Hetero25100,
         Some("kill-recover-4") => Scenario::KillRecover4,
         Some("dtn-offload-4") => Scenario::DtnOffload4,
+        Some("cache-affine-4") => Scenario::CacheAffine4,
         _ => usage(),
     };
     let scale: u32 = arg_value(args, "--scale")
@@ -128,10 +135,11 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
     }
     if report.n_data_nodes > 0 {
         println!(
-            "sources: {} over {} data nodes | per-dtn jobs {:?} | per-dtn GB {:?} | \
+            "sources: {} over {} data nodes by {} | per-dtn jobs {:?} | per-dtn GB {:?} | \
              submit-NIC GB {:?}",
             report.source_plan,
             report.n_data_nodes,
+            report.source_selector,
             report.router.routed_per_dtn,
             report
                 .router
@@ -208,6 +216,13 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
             usage()
         }),
     };
+    let source_selector = match arg_value(args, "--source-selector") {
+        None => htcdm::mover::SourceSelector::RoundRobin,
+        Some(name) => htcdm::mover::SourceSelector::parse(&name).unwrap_or_else(|| {
+            eprintln!("unknown --source-selector '{name}'");
+            usage()
+        }),
+    };
     let cfg = RealPoolConfig {
         n_jobs: arg_value(args, "--jobs").map(|v| v.parse().unwrap()).unwrap_or(40),
         workers: arg_value(args, "--workers").map(|v| v.parse().unwrap()).unwrap_or(4),
@@ -234,6 +249,10 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
             .map(|v| v.parse().expect("--data-nodes N"))
             .unwrap_or(0),
         source,
+        source_selector,
+        dtn_slots: arg_value(args, "--dtn-cap")
+            .map(|v| v.parse().expect("--dtn-cap N"))
+            .unwrap_or(0),
         faults,
         ..Default::default()
     };
@@ -278,9 +297,10 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
     }
     if !r.bytes_served_per_dtn.is_empty() {
         println!(
-            "sources: {} | per-dtn jobs {:?} | per-dtn MiB served {:?} | submit MiB served {:?} \
+            "sources: {} by {} | per-dtn jobs {:?} | per-dtn MiB served {:?} | submit MiB served {:?} \
              | failed dtns {}",
             r.source_plan,
+            r.source_selector,
             r.router.routed_per_dtn,
             r.bytes_served_per_dtn
                 .iter()

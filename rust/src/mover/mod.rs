@@ -26,7 +26,13 @@
 //!   node's own funnel (the paper baseline) or by a dedicated
 //!   data-transfer node (DTN), so the submit funnel becomes one
 //!   configuration of a pluggable endpoint layer. Every routing
-//!   decision is a `(schedule node, data source)` pair.
+//!   decision is a `(schedule node, data source)` pair. A pluggable
+//!   [`SourceSelector`] picks *which* live data node serves a DTN-bound
+//!   transfer (round-robin / cache-aware over `storage::ExtentId`
+//!   residency / owner-affinity with failure-aware re-pinning /
+//!   weighted-by-capacity), composing with per-DTN admission budgets so
+//!   a saturated data node pushes back
+//!   ([`MoverStats::dtn_deferred`] / [`MoverStats::dtn_overflow_to_funnel`]).
 //! * [`chaos`] — fault injection: a [`FaultPlan`] of ordered
 //!   `KillNode` / `RecoverNode` / `DegradeNic` events (plus their DTN
 //!   counterparts and parse-time-expanded `flap` schedules) executed
@@ -58,7 +64,9 @@ pub use policy::{ActiveView, AdmissionConfig, AdmissionPolicy};
 pub use pool::ShadowPool;
 pub use queue::AdmissionQueue;
 pub use router::{PoolRouter, Routed, RouterPolicy, RouterStats};
-pub use source::{DataSource, SourcePlan, DEFAULT_DTN_THRESHOLD};
+pub use source::{DataSource, SourcePlan, SourceSelector, DEFAULT_DTN_THRESHOLD};
+
+use crate::storage::ExtentId;
 
 /// One sandbox-transfer request entering the mover.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -69,6 +77,11 @@ pub struct TransferRequest {
     pub owner: String,
     /// Sandbox size, the weighted-by-size scheduling key.
     pub bytes: u64,
+    /// Physical extent behind the input sandbox (hard-linked names share
+    /// one extent — the paper's §III dataset trick). Cache-aware source
+    /// selection routes a transfer to the data node already holding this
+    /// extent hot; `None` means no cache information is available.
+    pub extent: Option<ExtentId>,
 }
 
 impl TransferRequest {
@@ -77,7 +90,14 @@ impl TransferRequest {
             ticket,
             owner: owner.into(),
             bytes,
+            extent: None,
         }
+    }
+
+    /// Attach the input sandbox's extent identity (builder style).
+    pub fn with_extent(mut self, extent: ExtentId) -> TransferRequest {
+        self.extent = Some(extent);
+        self
     }
 }
 
@@ -118,6 +138,13 @@ pub struct MoverStats {
     /// executor retries it through the router (the real fabric's workers
     /// reconnect to the survivor; the sim engine restarts the flow).
     pub retried_after_fault: u64,
+    /// DTN-bound transfers whose selector-preferred data node was at its
+    /// admission budget, deferring them onto a peer with a free slot
+    /// (see [`PoolRouter::with_dtn_budget`]).
+    pub dtn_deferred: u64,
+    /// DTN-bound transfers that overflowed to the scheduling node's
+    /// funnel because every live data node was at its admission budget.
+    pub dtn_overflow_to_funnel: u64,
 }
 
 impl MoverStats {

@@ -198,6 +198,8 @@ impl ShadowPool {
             node_recovered: 0,
             stolen: 0,
             retried_after_fault: 0,
+            dtn_deferred: 0,
+            dtn_overflow_to_funnel: 0,
         }
     }
 

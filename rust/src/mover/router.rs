@@ -34,10 +34,17 @@
 //! Under the default [`SourcePlan::SubmitFunnel`] the source is the
 //! scheduling node itself — the paper's funnel. With a DTN fleet
 //! configured ([`PoolRouter::with_source_plan`]) the plan may place the
-//! bytes on a dedicated data node instead, round-robining over the live
-//! fleet; [`PoolRouter::fail_dtn`] re-sources a dead DTN's in-flight
-//! transfers onto survivors (or back onto the funnel), the data-plane
-//! analogue of [`PoolRouter::fail_node`]'s re-routing.
+//! bytes on a dedicated data node instead; *which* node is the
+//! [`SourceSelector`]'s call (round-robin rotation, cache-aware over
+//! per-DTN extent residency, stable owner pins with failure-aware
+//! re-pinning, or capacity-weighted deficit counters —
+//! [`PoolRouter::with_source_selector`]), bounded by per-DTN admission
+//! budgets ([`PoolRouter::with_dtn_budget`]) so a saturated data node
+//! pushes back instead of silently queueing. [`PoolRouter::fail_dtn`]
+//! re-sources a dead DTN's in-flight transfers onto survivors (or back
+//! onto the funnel), the data-plane analogue of
+//! [`PoolRouter::fail_node`]'s re-routing; it also drops the dead
+//! node's residency and owner pins — its page cache died with it.
 //!
 //! Recovery is hysteretic when a ramp is configured
 //! ([`PoolRouter::set_recovery_ramp`]): a node recovered by
@@ -53,13 +60,14 @@
 
 use super::policy::AdmissionConfig;
 use super::pool::ShadowPool;
-use super::source::{DataSource, SourcePlan};
+use super::source::{DataSource, SourcePlan, SourceSelector};
 use super::{Admitted, DataMover, MoverStats, TransferRequest};
 use crate::config::{Config, ConfigError};
 use crate::runtime::engine::SealEngine;
 use crate::runtime::service::EngineHandle;
+use crate::storage::ExtentId;
 use anyhow::Result;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 /// Pool-level routing strategy across submit nodes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -191,7 +199,31 @@ pub struct PoolRouter {
     /// As-built DTN budgets, restored by [`PoolRouter::recover_dtn`].
     dtn_nominal: Vec<f64>,
     /// Round-robin cursor over the DTN fleet (deterministic selection).
+    /// The cursor survives fleet churn: it advances only when the
+    /// rotation actually picks a data node, so funnel failovers and
+    /// small-sandbox hybrid placements never skew it.
     dtn_cursor: usize,
+    /// Which-DTN selection strategy (see [`SourceSelector`]).
+    selector: SourceSelector,
+    /// Per-DTN admission budget: max concurrent transfers one data node
+    /// serves (0 = unlimited — data nodes admit whatever the schedule
+    /// node admitted, the pre-budget behavior).
+    dtn_slots: u32,
+    /// Placed (not yet completed or re-sourced) transfers per DTN — the
+    /// fleet's admission-slot bookkeeping.
+    dtn_active: Vec<u32>,
+    /// Owner → pinned data node (owner-affinity selection). A killed
+    /// DTN's pins are dropped so its owners re-pin, stably, on the live
+    /// fleet.
+    dtn_pin: HashMap<String, usize>,
+    /// Extents hot on each data node (cache-aware selection). Seeded by
+    /// the fabric, grown by serving, cleared by a kill — a crashed
+    /// node's page cache dies with it.
+    dtn_residency: Vec<HashSet<ExtentId>>,
+    /// Deficit counters for weighted-by-capacity selection.
+    dtn_credit: Vec<f64>,
+    dtn_deferred: u64,
+    dtn_overflow_to_funnel: u64,
     /// Data source of every admitted, not-yet-completed ticket.
     source_of: HashMap<u32, DataSource>,
     routed_per_dtn: Vec<u64>,
@@ -261,6 +293,14 @@ impl PoolRouter {
             dtn_capacity: Vec::new(),
             dtn_nominal: Vec::new(),
             dtn_cursor: 0,
+            selector: SourceSelector::RoundRobin,
+            dtn_slots: 0,
+            dtn_active: Vec::new(),
+            dtn_pin: HashMap::new(),
+            dtn_residency: Vec::new(),
+            dtn_credit: Vec::new(),
+            dtn_deferred: 0,
+            dtn_overflow_to_funnel: 0,
             source_of: HashMap::new(),
             routed_per_dtn: Vec::new(),
             bytes_per_dtn: Vec::new(),
@@ -321,8 +361,29 @@ impl PoolRouter {
         self.dtn_nominal = dtn_capacity.clone();
         self.dtn_capacity = dtn_capacity;
         self.dtn_down = vec![false; n];
+        self.dtn_active = vec![0; n];
+        self.dtn_residency = vec![HashSet::new(); n];
+        self.dtn_credit = vec![0.0; n];
         self.routed_per_dtn = vec![0; n];
         self.bytes_per_dtn = vec![0; n];
+        self
+    }
+
+    /// Pick the which-DTN selection strategy (builder style; the default
+    /// is the deterministic round-robin rotation).
+    pub fn with_source_selector(mut self, selector: SourceSelector) -> PoolRouter {
+        self.selector = selector;
+        self
+    }
+
+    /// Give every data node its own admission budget of `slots`
+    /// concurrent transfers (builder style; 0 = unlimited). A saturated
+    /// DTN pushes back: the selector defers the transfer to a peer with
+    /// a free slot ([`MoverStats::dtn_deferred`]) and overflows to the
+    /// scheduling node's funnel when the whole fleet is full
+    /// ([`MoverStats::dtn_overflow_to_funnel`]).
+    pub fn with_dtn_budget(mut self, slots: u32) -> PoolRouter {
+        self.dtn_slots = slots;
         self
     }
 
@@ -339,6 +400,16 @@ impl PoolRouter {
         self.plan
     }
 
+    /// The which-DTN selection strategy this router places bytes with.
+    pub fn source_selector(&self) -> SourceSelector {
+        self.selector
+    }
+
+    /// Per-DTN admission budget (0 = unlimited).
+    pub fn dtn_budget(&self) -> u32 {
+        self.dtn_slots
+    }
+
     /// Data-transfer-node fleet size (0 = funnel-only pool).
     pub fn dtn_count(&self) -> usize {
         self.dtn_down.len()
@@ -348,42 +419,194 @@ impl PoolRouter {
         self.dtn_down[dtn]
     }
 
+    /// Currently placed (admission-slot-holding) transfers per DTN.
+    pub fn dtn_active_per_node(&self) -> Vec<u32> {
+        self.dtn_active.clone()
+    }
+
+    /// The data node an owner's sandboxes are pinned to (owner-affinity
+    /// selection; `None` until the owner's first DTN placement).
+    pub fn dtn_pin_of(&self, owner: &str) -> Option<usize> {
+        self.dtn_pin.get(owner).copied()
+    }
+
+    /// Mark one extent hot on a data node (cache-aware selection; the
+    /// fabric seeds pre-warmed extents through this).
+    pub fn note_extent_resident(&mut self, dtn: usize, extent: ExtentId) {
+        self.dtn_residency[dtn].insert(extent);
+    }
+
+    /// Replace a data node's residency view wholesale (the sim re-syncs
+    /// it from the node's `storage::Storage` truth after every read, so
+    /// evictions are reflected).
+    pub fn set_dtn_residency(&mut self, dtn: usize, extents: &[ExtentId]) {
+        self.dtn_residency[dtn] = extents.iter().copied().collect();
+    }
+
     /// Data source of an admitted, not-yet-completed ticket.
     pub fn source_of(&self, ticket: u32) -> Option<DataSource> {
         self.source_of.get(&ticket).copied()
     }
 
-    /// Pick the data source for one admitted transfer under the plan.
-    /// Deterministic: round-robin over live DTNs; `Hybrid` compares
-    /// `bytes >= threshold`; an all-dead fleet fails over to `node`'s
-    /// funnel.
-    fn select_source(&mut self, bytes: u64, node: usize) -> DataSource {
+    /// Does data node `d` have a free admission slot?
+    fn dtn_has_slot(&self, d: usize) -> bool {
+        self.dtn_slots == 0 || self.dtn_active[d] < self.dtn_slots
+    }
+
+    /// Next live data node in rotation, advancing the cursor past the
+    /// pick. Caller guarantees at least one live DTN.
+    fn rr_preferred(&mut self) -> usize {
+        loop {
+            let d = self.dtn_cursor % self.dtn_down.len();
+            self.dtn_cursor += 1;
+            if !self.dtn_down[d] {
+                return d;
+            }
+        }
+    }
+
+    /// Pick the data source for one admitted transfer: the plan decides
+    /// funnel-vs-fleet (`Hybrid` compares `bytes >= threshold`), the
+    /// selector places the transfer within the live fleet, and per-DTN
+    /// admission budgets push back on saturated nodes. Deterministic
+    /// for every selector; an all-dead fleet fails over to `node`'s
+    /// funnel WITHOUT advancing the rotation cursor, so the rotation
+    /// resumes exactly where it left off after recovery.
+    fn select_source(
+        &mut self,
+        bytes: u64,
+        owner: &str,
+        extent: Option<ExtentId>,
+        node: usize,
+    ) -> DataSource {
         let via_dtn = match self.plan {
             SourcePlan::SubmitFunnel => false,
             SourcePlan::DedicatedDtn => true,
             SourcePlan::Hybrid { threshold } => bytes >= threshold,
         };
-        if !via_dtn || self.dtn_down.iter().all(|&d| d) {
+        if !via_dtn {
             return DataSource::Funnel { node };
         }
-        let dtn = loop {
-            let d = self.dtn_cursor % self.dtn_down.len();
-            self.dtn_cursor += 1;
-            if !self.dtn_down[d] {
-                break d;
+        let live: Vec<usize> = (0..self.dtn_down.len())
+            .filter(|&d| !self.dtn_down[d])
+            .collect();
+        if live.is_empty() {
+            return DataSource::Funnel { node };
+        }
+        // Snapshot the rotation cursor: if this transfer ends up on the
+        // funnel after all (budget overflow below), the cursor is
+        // restored — only an actual DTN placement may advance it.
+        let cursor_before = self.dtn_cursor;
+        let preferred = match self.selector {
+            SourceSelector::RoundRobin => self.rr_preferred(),
+            SourceSelector::CacheAware => {
+                // The lowest-indexed live DTN holding the extent hot; an
+                // extent nobody holds takes the rotation, which makes
+                // its first server its sticky home (serving warms it).
+                let hit = extent.and_then(|e| {
+                    live.iter()
+                        .copied()
+                        .find(|&d| self.dtn_residency[d].contains(&e))
+                });
+                match hit {
+                    Some(d) => d,
+                    None => self.rr_preferred(),
+                }
+            }
+            SourceSelector::OwnerAffinity => match self.dtn_pin.get(owner).copied() {
+                Some(d) if !self.dtn_down[d] => d,
+                _ => {
+                    // First sighting, or the pinned DTN died: (re-)pin by
+                    // the stable owner hash over the live fleet. The new
+                    // pin sticks even after the old node recovers — no
+                    // flap-back.
+                    let d = live[(owner_hash(owner) % live.len() as u64) as usize];
+                    self.dtn_pin.insert(owner.to_string(), d);
+                    d
+                }
+            },
+            SourceSelector::WeightedByCapacity => {
+                // Deficit round-robin over the live fleet, mirroring the
+                // node-routing algorithm one layer up; chaos re-rates
+                // (`set_dtn_capacity`) shift the split mid-run.
+                let total: f64 = live.iter().map(|&d| self.dtn_capacity[d]).sum();
+                if total > 0.0 {
+                    for &d in &live {
+                        self.dtn_credit[d] += self.dtn_capacity[d] / total;
+                    }
+                }
+                *live
+                    .iter()
+                    .max_by(|&&a, &&b| {
+                        self.dtn_credit[a]
+                            .partial_cmp(&self.dtn_credit[b])
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(b.cmp(&a)) // ties → lowest index
+                    })
+                    .expect("live is non-empty")
             }
         };
-        DataSource::Dtn { dtn }
+        let chosen = if self.dtn_has_slot(preferred) {
+            Some(preferred)
+        } else {
+            // The preferred data node's admission budget is full: it
+            // pushes back, and the transfer defers to the next live DTN
+            // (scanning from the preferred node, so deferrals spread).
+            self.dtn_deferred += 1;
+            let n = self.dtn_down.len();
+            (1..n)
+                .map(|k| (preferred + k) % n)
+                .find(|&d| !self.dtn_down[d] && self.dtn_has_slot(d))
+        };
+        match chosen {
+            Some(d) => {
+                if self.selector == SourceSelector::WeightedByCapacity {
+                    self.dtn_credit[d] -= 1.0;
+                }
+                DataSource::Dtn { dtn: d }
+            }
+            None => {
+                // Every live DTN is at its budget: the fleet as a whole
+                // pushes back and the bytes overflow to the scheduling
+                // node's funnel (whose own admission already gated this
+                // transfer). No DTN was picked, so the rotation cursor
+                // rewinds — funnel placements never skew the rotation.
+                self.dtn_overflow_to_funnel += 1;
+                self.dtn_cursor = cursor_before;
+                DataSource::Funnel { node }
+            }
+        }
+    }
+
+    /// Drop a ticket's data-source placement (completion, node failure,
+    /// or the re-source half of a DTN failure), releasing its DTN
+    /// admission slot.
+    fn release_source(&mut self, ticket: u32) {
+        if let Some(DataSource::Dtn { dtn }) = self.source_of.remove(&ticket) {
+            self.dtn_active[dtn] = self.dtn_active[dtn].saturating_sub(1);
+        }
     }
 
     /// Assign (and account) the data source of a freshly admitted
-    /// ticket.
+    /// ticket. A re-source first releases the ticket's previous
+    /// placement so per-DTN admission slots can't leak.
     fn assign_source(&mut self, ticket: u32, node: usize) -> DataSource {
-        let bytes = self.requests.get(&ticket).map(|r| r.bytes).unwrap_or(0);
-        let source = self.select_source(bytes, node);
+        self.release_source(ticket);
+        let (bytes, owner, extent) = match self.requests.get(&ticket) {
+            Some(r) => (r.bytes, r.owner.clone(), r.extent),
+            None => (0, String::new(), None),
+        };
+        let source = self.select_source(bytes, &owner, extent, node);
         if let DataSource::Dtn { dtn } = source {
             self.routed_per_dtn[dtn] += 1;
             self.bytes_per_dtn[dtn] += bytes;
+            self.dtn_active[dtn] += 1;
+            // Serving the extent warms it on the chosen node (the sim
+            // later re-syncs this from storage truth; the real fabric's
+            // file servers share one dataset, so the note stands).
+            if let Some(e) = extent {
+                self.dtn_residency[dtn].insert(e);
+            }
         }
         self.source_of.insert(ticket, source);
         source
@@ -417,6 +640,11 @@ impl PoolRouter {
         }
         self.dtn_down[dtn] = true;
         self.dtn_failed_count += 1;
+        // The node's page cache dies with it, and its pinned owners
+        // re-pin (stably) onto the live fleet at their next placement —
+        // which, for its in-flight transfers, is the re-source below.
+        self.dtn_residency[dtn].clear();
+        self.dtn_pin.retain(|_, &mut d| d != dtn);
         let mut affected: Vec<u32> = self
             .source_of
             .iter()
@@ -445,19 +673,22 @@ impl PoolRouter {
     }
 
     /// Un-poison a data node: it rejoins source selection with its
-    /// as-built budget. Nothing is re-driven (new admissions reach it
-    /// via the round-robin cursor). Idempotent.
+    /// as-built budget, a clean deficit counter and a cold cache (its
+    /// residency died with the crash). Nothing is re-driven (new
+    /// admissions reach it via the selector). Idempotent.
     pub fn recover_dtn(&mut self, dtn: usize) {
         self.dtn_capacity[dtn] = self.dtn_nominal[dtn];
         if !self.dtn_down[dtn] {
             return;
         }
         self.dtn_down[dtn] = false;
+        self.dtn_credit[dtn] = 0.0;
         self.dtn_recovered_count += 1;
     }
 
-    /// Re-rate a data node's relative NIC budget (fault injection;
-    /// informational — source selection stays round-robin).
+    /// Re-rate a data node's relative NIC budget (fault injection).
+    /// The weighted-by-capacity selector tracks the new budget on its
+    /// next deposit; the other selectors ignore capacity.
     pub fn set_dtn_capacity(&mut self, dtn: usize, capacity: f64) {
         self.dtn_capacity[dtn] = capacity.max(0.0);
     }
@@ -637,7 +868,7 @@ impl PoolRouter {
     /// no-ghost contract as the node queues' `cancelled_waiting` path.
     pub fn complete(&mut self, ticket: u32) -> Vec<Routed> {
         self.requests.remove(&ticket);
-        self.source_of.remove(&ticket);
+        self.release_source(ticket);
         let Some(node) = self.node_of.remove(&ticket) else {
             if let Some(pos) = self.stranded.iter().position(|r| r.ticket == ticket) {
                 self.stranded.remove(pos);
@@ -682,7 +913,7 @@ impl PoolRouter {
             Vec::with_capacity(inflight.len() + waiting.len());
         for t in inflight {
             self.node_of.remove(&t);
-            self.source_of.remove(&t); // a fresh source is chosen on re-admission
+            self.release_source(t); // a fresh source is chosen on re-admission
             let _ = self.nodes[node].complete(t); // queue already drained: admits nothing
             if let Some(req) = self.requests.get(&t) {
                 self.retried_after_fault += 1;
@@ -839,12 +1070,19 @@ impl PoolRouter {
             node_recovered: self.node_recovered,
             stolen: self.stolen,
             retried_after_fault: self.retried_after_fault,
+            dtn_deferred: self.dtn_deferred,
+            dtn_overflow_to_funnel: self.dtn_overflow_to_funnel,
         }
     }
 
     pub fn describe(&self) -> String {
         let sources = if self.dtn_count() > 0 {
-            format!(", {} over {} dtn(s)", self.plan.label(), self.dtn_count())
+            format!(
+                ", {} over {} dtn(s) by {}",
+                self.plan.label(),
+                self.dtn_count(),
+                self.selector.label()
+            )
         } else {
             String::new()
         };
@@ -1386,6 +1624,151 @@ mod tests {
             1,
             "recover is idempotent"
         );
+    }
+
+    #[test]
+    fn rr_cursor_survives_fleet_churn_and_funnel_failover() {
+        // Regression: the hybrid plan's all-DTNs-dead funnel failover
+        // must neither reset nor advance the round-robin cursor, so the
+        // rotation resumes exactly where it left off after recovery.
+        let mut router =
+            rr_router(1).with_source_plan(SourcePlan::Hybrid { threshold: 100 }, vec![1.0; 3]);
+        assert_eq!(router.request(r(0, "o", 100))[0].source, DataSource::Dtn { dtn: 0 });
+        assert_eq!(router.request(r(1, "o", 100))[0].source, DataSource::Dtn { dtn: 1 });
+        // Nothing in flight when the fleet dies (in-flight re-sources
+        // are themselves rotation picks and legitimately advance it).
+        router.complete(0);
+        router.complete(1);
+        // Small sandboxes ride the funnel without consuming rotation
+        // slots...
+        assert_eq!(router.request(r(2, "o", 99))[0].source, DataSource::Funnel { node: 0 });
+        // ...and so do large ones while the whole fleet is dead.
+        router.fail_dtn(0);
+        router.fail_dtn(1);
+        router.fail_dtn(2);
+        assert_eq!(router.request(r(3, "o", 100))[0].source, DataSource::Funnel { node: 0 });
+        assert_eq!(router.request(r(4, "o", 100))[0].source, DataSource::Funnel { node: 0 });
+        router.recover_dtn(0);
+        router.recover_dtn(1);
+        router.recover_dtn(2);
+        // After d1 comes d2: the failover episode did not skew the
+        // rotation.
+        assert_eq!(router.request(r(5, "o", 100))[0].source, DataSource::Dtn { dtn: 2 });
+        assert_eq!(router.request(r(6, "o", 100))[0].source, DataSource::Dtn { dtn: 0 });
+    }
+
+    #[test]
+    fn dtn_budget_defers_then_overflows_to_funnel() {
+        let mut router = rr_router(1)
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 2])
+            .with_dtn_budget(1);
+        assert_eq!(router.dtn_budget(), 1);
+        // Two admissions fill both data nodes' single slots.
+        assert_eq!(router.request(r(0, "o", 5))[0].source, DataSource::Dtn { dtn: 0 });
+        assert_eq!(router.request(r(1, "o", 5))[0].source, DataSource::Dtn { dtn: 1 });
+        assert_eq!(router.dtn_active_per_node(), vec![1, 1]);
+        // The fleet is saturated: the next transfer overflows to the
+        // funnel (its schedule-node admission already gated it).
+        assert_eq!(router.request(r(2, "o", 5))[0].source, DataSource::Funnel { node: 0 });
+        let st = router.stats();
+        assert_eq!(st.dtn_overflow_to_funnel, 1);
+        assert_eq!(st.dtn_deferred, 1, "the preferred node pushed back first");
+        // Completion frees dtn 0's slot. The overflow rewound the
+        // rotation cursor (funnel placements never skew it), so the
+        // rotation prefers dtn 0 directly — no deferral this time.
+        router.complete(0);
+        assert_eq!(router.dtn_active_per_node(), vec![0, 1]);
+        let adm = router.request(r(3, "o", 5));
+        assert_eq!(adm[0].source, DataSource::Dtn { dtn: 0 });
+        let st = router.stats();
+        assert_eq!(st.dtn_deferred, 1, "the restored rotation hit a free slot");
+        assert_eq!(st.dtn_overflow_to_funnel, 1);
+        // The funnel-overflowed ticket holds no DTN slot to release.
+        router.complete(2);
+        assert_eq!(router.dtn_active_per_node(), vec![1, 1]);
+    }
+
+    #[test]
+    fn cache_aware_selector_homes_extents_and_forgets_on_kill() {
+        use crate::storage::ExtentId;
+        let mut router = rr_router(1)
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 3])
+            .with_source_selector(SourceSelector::CacheAware);
+        // Pre-warmed residency wins over the rotation.
+        router.note_extent_resident(2, ExtentId(7));
+        let req = |t: u32, e: u64| r(t, "o", 10).with_extent(ExtentId(e));
+        assert_eq!(router.request(req(0, 7))[0].source, DataSource::Dtn { dtn: 2 });
+        // An unknown extent takes the rotation and becomes sticky there.
+        let first = router.request(req(1, 3))[0].source;
+        assert_eq!(first, DataSource::Dtn { dtn: 0 });
+        assert_eq!(router.request(req(2, 3))[0].source, first, "extent homed");
+        // A kill clears the dead node's residency: the extent re-homes
+        // on a live node and sticks to it.
+        router.complete(1);
+        router.complete(2);
+        router.fail_dtn(0);
+        let rehomed = router.request(req(3, 3))[0].source;
+        assert!(matches!(rehomed, DataSource::Dtn { dtn } if dtn != 0));
+        router.recover_dtn(0);
+        assert_eq!(
+            router.request(req(4, 3))[0].source,
+            rehomed,
+            "no flap-back to the recovered node"
+        );
+        // The sim's truth re-sync replaces the residency view wholesale.
+        router.set_dtn_residency(1, &[ExtentId(9)]);
+        assert_eq!(router.request(req(5, 9))[0].source, DataSource::Dtn { dtn: 1 });
+    }
+
+    #[test]
+    fn owner_affinity_selector_pins_and_repins_on_kill() {
+        let mut router = rr_router(1)
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 3])
+            .with_source_selector(SourceSelector::OwnerAffinity);
+        let first = router.request(r(0, "alice", 10))[0].source;
+        let DataSource::Dtn { dtn: home } = first else {
+            panic!("dedicated plan placed {first:?}");
+        };
+        assert_eq!(router.dtn_pin_of("alice"), Some(home));
+        for t in 1..6 {
+            assert_eq!(router.request(r(t, "alice", 10))[0].source, first);
+        }
+        // Kill the pinned node: its in-flight transfers re-source AND
+        // re-pin the owner onto one stable live node.
+        let moved = router.fail_dtn(home);
+        assert_eq!(moved.len(), 6, "alice's whole in-flight set re-sources");
+        let new_home = router.dtn_pin_of("alice").expect("re-pinned");
+        assert_ne!(new_home, home);
+        assert!(moved
+            .iter()
+            .all(|m| m.source == DataSource::Dtn { dtn: new_home }));
+        // The new pin survives the old node's recovery (no flap-back).
+        router.recover_dtn(home);
+        assert_eq!(
+            router.request(r(6, "alice", 10))[0].source,
+            DataSource::Dtn { dtn: new_home }
+        );
+        assert_eq!(router.stats().retried_after_fault, 6);
+    }
+
+    #[test]
+    fn weighted_selector_splits_by_dtn_capacity() {
+        let mut router = rr_router(1)
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![100.0, 25.0])
+            .with_source_selector(SourceSelector::WeightedByCapacity);
+        for t in 0..100 {
+            router.request(r(t, "o", 1));
+        }
+        let st = router.router_stats();
+        assert_eq!(st.routed_per_dtn, vec![80, 20], "100:25 split of 100 requests");
+        // A chaos re-rate shifts the split for the next batch.
+        router.set_dtn_capacity(0, 25.0);
+        for t in 100..200 {
+            router.request(r(t, "o", 1));
+        }
+        let st = router.router_stats();
+        assert_eq!(st.routed_per_dtn[0] - 80, 50, "even split after degrade");
+        assert_eq!(st.routed_per_dtn[1] - 20, 50);
     }
 
     #[test]

@@ -23,14 +23,40 @@
 //!
 //! The [`PoolRouter`](super::PoolRouter) owns the plan: every admission
 //! it reports ([`Routed`](super::Routed)) now carries a `(schedule
-//! node, data source)` pair. Source selection is deterministic — a
-//! round-robin cursor over the live DTN fleet, with `Hybrid` comparing
-//! `bytes >= threshold` — so the same request sequence always produces
-//! the same placement (`tests/props.rs` holds this as a property).
-//! When every DTN is dead, selection fails over to the funnel, and a
-//! killed DTN's in-flight transfers are re-sourced onto survivors (or
-//! the funnel) by [`PoolRouter::fail_dtn`](super::PoolRouter::fail_dtn),
-//! mirroring what `fail_node` does one layer up.
+//! node, data source)` pair. *Which* live data node serves a DTN-bound
+//! transfer is a second, orthogonal knob — the [`SourceSelector`]:
+//!
+//! * `RoundRobin` — deterministic rotation over the live fleet (the
+//!   original PR-4 behavior, and still the default).
+//! * `CacheAware` — route the transfer to the DTN already holding its
+//!   [`ExtentId`](crate::storage::ExtentId) hot, the Petascale DTN
+//!   lesson that data-node fleets only hit their rated throughput when
+//!   transfers are steered by endpoint state. The router tracks per-DTN
+//!   extent residency (seeded by the fabric, grown by serving, cleared
+//!   by a kill); the simulator additionally models the cached-read
+//!   speedup through each DTN's `storage::Storage` view.
+//! * `OwnerAffinity` — pin each owner's sandboxes to a stable data node
+//!   for claim/cache locality, mirroring what
+//!   `RouterPolicy::OwnerAffinity` does one layer up, with
+//!   failure-aware re-pinning: a killed DTN's owners re-pin (once,
+//!   stably) onto the live fleet.
+//! * `WeightedByCapacity` — deficit round-robin proportional to per-DTN
+//!   NIC budgets, matching heterogeneous data fleets like
+//!   `DATA_NODE_GBPS = 100, 25`.
+//!
+//! Selection is deterministic for every selector — the same request
+//! sequence always produces the same placement (`tests/props.rs` holds
+//! this as a property) — and composes with per-DTN admission budgets
+//! ([`PoolRouter::with_dtn_budget`](super::PoolRouter::with_dtn_budget)):
+//! a saturated data node pushes back, deferring the transfer to a peer
+//! (`MoverStats::dtn_deferred`) or overflowing to the funnel when the
+//! whole fleet is full (`MoverStats::dtn_overflow_to_funnel`).
+//! When every DTN is dead, selection fails over to the funnel — without
+//! advancing the round-robin cursor, so the rotation resumes exactly
+//! where it left off once the fleet recovers — and a killed DTN's
+//! in-flight transfers are re-sourced onto survivors (or the funnel) by
+//! [`PoolRouter::fail_dtn`](super::PoolRouter::fail_dtn), mirroring
+//! what `fail_node` does one layer up.
 
 use crate::config::{Config, ConfigError};
 
@@ -152,6 +178,61 @@ impl SourcePlan {
     }
 }
 
+/// Strategy picking *which* live data node serves a DTN-bound transfer
+/// (the [`SourcePlan`] decides funnel-vs-fleet; the selector places the
+/// transfer within the fleet). See the module docs for the rationale
+/// behind each strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SourceSelector {
+    /// Deterministic rotation over the live fleet (the default).
+    #[default]
+    RoundRobin,
+    /// Route to the data node already holding the transfer's extent hot
+    /// (falls back to the rotation when no node does, which also makes
+    /// the first placement of each extent its sticky home).
+    CacheAware,
+    /// Stable per-owner pinning with failure-aware re-pinning.
+    OwnerAffinity,
+    /// Deficit round-robin weighted by per-DTN NIC budgets.
+    WeightedByCapacity,
+}
+
+impl SourceSelector {
+    /// Short label for reports and bench tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SourceSelector::RoundRobin => "round-robin",
+            SourceSelector::CacheAware => "cache-aware",
+            SourceSelector::OwnerAffinity => "owner-affinity",
+            SourceSelector::WeightedByCapacity => "weighted-by-capacity",
+        }
+    }
+
+    /// Parse a selector name (CLI flag / config value spellings).
+    pub fn parse(name: &str) -> Option<SourceSelector> {
+        match name.trim().to_ascii_uppercase().replace('-', "_").as_str() {
+            "ROUND_ROBIN" => Some(SourceSelector::RoundRobin),
+            "CACHE_AWARE" | "CACHE" => Some(SourceSelector::CacheAware),
+            "OWNER_AFFINITY" | "OWNER" => Some(SourceSelector::OwnerAffinity),
+            "WEIGHTED_BY_CAPACITY" | "WEIGHTED" => Some(SourceSelector::WeightedByCapacity),
+            _ => None,
+        }
+    }
+
+    /// The `SOURCE_SELECTOR` condor-style knob (default: round-robin).
+    ///
+    /// ```text
+    /// SOURCE_SELECTOR = CACHE_AWARE  # ROUND_ROBIN | CACHE_AWARE |
+    ///                                # OWNER_AFFINITY | WEIGHTED_BY_CAPACITY
+    /// ```
+    pub fn from_config(cfg: &Config) -> Result<SourceSelector, ConfigError> {
+        let name = cfg.get_or("SOURCE_SELECTOR", "ROUND_ROBIN");
+        SourceSelector::parse(&name).ok_or_else(|| {
+            ConfigError::Type("SOURCE_SELECTOR".into(), "source selector name", name)
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +302,40 @@ mod tests {
         ] {
             assert_eq!(SourcePlan::parse(&plan.label()), Some(plan));
         }
+    }
+
+    #[test]
+    fn selector_parse_label_and_config() {
+        for sel in [
+            SourceSelector::RoundRobin,
+            SourceSelector::CacheAware,
+            SourceSelector::OwnerAffinity,
+            SourceSelector::WeightedByCapacity,
+        ] {
+            assert_eq!(SourceSelector::parse(sel.label()), Some(sel));
+        }
+        assert_eq!(
+            SourceSelector::parse("CACHE"),
+            Some(SourceSelector::CacheAware)
+        );
+        assert_eq!(
+            SourceSelector::parse("weighted"),
+            Some(SourceSelector::WeightedByCapacity)
+        );
+        assert_eq!(SourceSelector::parse("random"), None);
+
+        let cfg = Config::parse("SOURCE_SELECTOR = OWNER_AFFINITY").unwrap();
+        assert_eq!(
+            SourceSelector::from_config(&cfg).unwrap(),
+            SourceSelector::OwnerAffinity
+        );
+        let dflt = Config::parse("").unwrap();
+        assert_eq!(
+            SourceSelector::from_config(&dflt).unwrap(),
+            SourceSelector::RoundRobin
+        );
+        let bad = Config::parse("SOURCE_SELECTOR = LOTTERY").unwrap();
+        assert!(SourceSelector::from_config(&bad).is_err());
     }
 
     #[test]

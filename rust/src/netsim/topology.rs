@@ -58,6 +58,15 @@ pub struct TestbedSpec {
     /// Per-data-node NIC overrides in Gbps (same fallback semantics as
     /// `submit_node_gbps`).
     pub data_node_gbps: Vec<f64>,
+    /// Page-cache capacity of each data node in bytes (the engine's
+    /// storage model behind cache-aware source selection: warm extents
+    /// stream at page-cache rate, cold ones at the device's).
+    pub dtn_cache_bytes: u64,
+    /// Model each data node's bulk store as a spinning device
+    /// (seek-bound under concurrent readers) instead of NVMe flash —
+    /// the archive-grade GridFTP/DTN deployments the Petascale DTN
+    /// project benchmarked.
+    pub dtn_spinning: bool,
     pub workers: Vec<WorkerSpec>,
     pub wan: Option<WanSpec>,
     /// Submit node runs behind the Calico VPN overlay (unprivileged pod).
@@ -76,6 +85,8 @@ impl TestbedSpec {
             n_data_nodes: 0,
             data_nic_gbps: 100.0,
             data_node_gbps: Vec::new(),
+            dtn_cache_bytes: 8 << 30,
+            dtn_spinning: false,
             workers: (0..6)
                 .map(|i| WorkerSpec {
                     nic_gbps: 100.0,
@@ -106,6 +117,8 @@ impl TestbedSpec {
             n_data_nodes: 0,
             data_nic_gbps: 100.0,
             data_node_gbps: Vec::new(),
+            dtn_cache_bytes: 8 << 30,
+            dtn_spinning: false,
             workers,
             wan: Some(WanSpec {
                 rtt_s: calib::WAN_RTT_S,

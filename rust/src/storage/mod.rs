@@ -199,6 +199,24 @@ impl Storage {
         self.cache_used
     }
 
+    /// Is the extent currently resident in the page cache?
+    pub fn contains_extent(&self, ext: ExtentId) -> bool {
+        self.cache.contains_key(&ext)
+    }
+
+    /// Extents currently resident in the page cache, in id order (the
+    /// truth the router's cache-aware residency view is re-synced from).
+    pub fn cached_extents(&self) -> Vec<ExtentId> {
+        self.cache.keys().copied().collect()
+    }
+
+    /// Drop the entire page cache — a crashed node's cache dies with it
+    /// (fault injection: the recovered node starts cold).
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+        self.cache_used = 0;
+    }
+
     /// Aggregate source bandwidth with `n` concurrent readers, assuming
     /// `cached_fraction` of streams hit cache.
     pub fn aggregate_read_bps(&self, n: u32, cached_fraction: f64) -> f64 {
@@ -288,6 +306,23 @@ mod tests {
         s.open_read("b");
         s.open_read("c"); // evicts something
         assert!(s.cached_bytes() <= 2 << 30);
+    }
+
+    #[test]
+    fn residency_view_tracks_cache_and_clears_on_crash() {
+        let mut s = Storage::new(DeviceProfile::nvme(), 4 << 30);
+        let a = s.create("a", 1 << 30);
+        let b = s.create("b", 1 << 30);
+        s.open_read("a");
+        assert!(s.contains_extent(a));
+        assert!(!s.contains_extent(b));
+        assert_eq!(s.cached_extents(), vec![a]);
+        s.open_read("b");
+        assert_eq!(s.cached_extents(), vec![a, b]);
+        s.clear_cache();
+        assert_eq!(s.cached_bytes(), 0);
+        assert!(s.cached_extents().is_empty());
+        assert!(!s.open_read("a").unwrap().cached, "cold after the crash");
     }
 
     #[test]

@@ -36,6 +36,8 @@ pub fn benchmark_burst(n: u32, input_bytes: Bytes, output_bytes: Bytes) -> Vec<J
             id: JobId { cluster: 1, proc: p },
             owner: "benchmark".into(),
             input_file: format!("input_{p}"),
+            // Every benchmark name hard-links the same single extent.
+            input_extent: Some(crate::storage::ExtentId(0)),
             input_bytes,
             output_bytes,
             runtime_median_s: 5.0,
@@ -66,6 +68,7 @@ pub fn spiky_workload(
                     id: JobId { cluster: 2, proc: proc_ },
                     owner: "spiky".into(),
                     input_file: format!("spiky_{proc_}"),
+                    input_extent: None,
                     input_bytes: Bytes(bytes),
                     output_bytes: Bytes(4_000),
                     runtime_median_s: 30.0,

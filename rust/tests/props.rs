@@ -4,9 +4,10 @@ use htcdm::classad::{matches, parse_expr, Ad, Value};
 use htcdm::metrics::BinSeries;
 use htcdm::mover::{
     AdmissionConfig, AdmissionQueue, DataSource, PoolRouter, RouterPolicy, SourcePlan,
-    TransferRequest,
+    SourceSelector, TransferRequest,
 };
 use htcdm::netsim::NetSim;
+use htcdm::storage::ExtentId;
 use htcdm::security::chacha;
 use htcdm::transfer::{ThrottlePolicy, TransferQueue};
 use htcdm::util::testkit::check;
@@ -551,6 +552,141 @@ fn prop_hybrid_source_selection_deterministic_and_threshold_exact() {
             a.router_stats().routed_per_dtn,
             b.router_stats().routed_per_dtn
         );
+    });
+}
+
+/// Cache-aware source selection is deterministic and affine: two
+/// identical routers fed the same burst (same extents, same completion
+/// churn) make identical placements, and once an extent has been served
+/// by some data node every later transfer of that extent lands on the
+/// SAME node — serving warmed it there.
+#[test]
+fn prop_cache_affinity_deterministic_and_sticky() {
+    check("cache-affinity-deterministic", 30, |g| {
+        let n_dtns = g.rng.range_usize(2, 4);
+        let n_ext = g.rng.range_u64(2, 6);
+        let make = || {
+            PoolRouter::sim(
+                1,
+                1,
+                AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+                RouterPolicy::LeastLoaded,
+            )
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; n_dtns])
+            .with_source_selector(SourceSelector::CacheAware)
+        };
+        let mut a = make();
+        let mut b = make();
+        let mut home: std::collections::HashMap<u64, usize> = HashMap::new();
+        let mut inflight: Vec<u32> = Vec::new();
+        for t in 0..80u32 {
+            let e = g.rng.range_u64(0, n_ext - 1);
+            let req = TransferRequest::new(t, "o", 100).with_extent(ExtentId(e));
+            let adm_a = a.request(req.clone());
+            let adm_b = b.request(req);
+            assert_eq!(adm_a.len(), 1, "unthrottled: admits immediately");
+            assert_eq!(
+                adm_a[0].source, adm_b[0].source,
+                "two identical routers disagree on ticket {t} (extent {e})"
+            );
+            let DataSource::Dtn { dtn } = adm_a[0].source else {
+                panic!("dedicated plan placed {:?}", adm_a[0].source);
+            };
+            let prev = home.entry(e).or_insert(dtn);
+            assert_eq!(*prev, dtn, "extent {e} moved data node mid-run");
+            inflight.push(t);
+            // Completion churn must not perturb either determinism or
+            // affinity (residency outlives the transfer).
+            if g.rng.next_f64() < 0.4 && !inflight.is_empty() {
+                let i = g.rng.range_usize(0, inflight.len() - 1);
+                let done = inflight.swap_remove(i);
+                a.complete(done);
+                b.complete(done);
+            }
+        }
+        assert_eq!(
+            a.router_stats().routed_per_dtn,
+            b.router_stats().routed_per_dtn
+        );
+    });
+}
+
+/// Owner-affinity source selection re-pins on kill: an owner's sandboxes
+/// ride one stable data node; when that node dies, the owner's in-flight
+/// transfers re-source AND the owner re-pins onto exactly one live node,
+/// where it stays — even after the dead node recovers (no flap-back).
+#[test]
+fn prop_owner_affinity_source_repins_on_kill() {
+    check("owner-affinity-repin", 25, |g| {
+        let n_dtns = g.rng.range_usize(2, 4);
+        let owners = ["alice", "bob", "carol"];
+        let mut router = PoolRouter::sim(
+            1,
+            1,
+            AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+            RouterPolicy::LeastLoaded,
+        )
+        .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; n_dtns])
+        .with_source_selector(SourceSelector::OwnerAffinity);
+
+        // Establish pins under churn; each owner must never move.
+        let mut pin: HashMap<&str, usize> = HashMap::new();
+        let mut t = 0u32;
+        let mut inflight: Vec<u32> = Vec::new();
+        for _ in 0..8 {
+            for &o in &owners {
+                let adm = router.request(TransferRequest::new(t, o, 10));
+                let DataSource::Dtn { dtn } = adm[0].source else {
+                    panic!("dedicated plan placed {:?}", adm[0].source);
+                };
+                assert_eq!(*pin.entry(o).or_insert(dtn), dtn, "{o} moved pre-kill");
+                inflight.push(t);
+                t += 1;
+                if g.rng.next_f64() < 0.3 && !inflight.is_empty() {
+                    let i = g.rng.range_usize(0, inflight.len() - 1);
+                    router.complete(inflight.swap_remove(i));
+                }
+            }
+        }
+
+        // Kill a pinned node: every re-sourced transfer lands on a live
+        // node, and each affected owner's new pin is stable.
+        let victim = pin["alice"];
+        let moved = router.fail_dtn(victim);
+        for m in &moved {
+            match m.source {
+                DataSource::Dtn { dtn } => {
+                    assert_ne!(dtn, victim, "re-sourced back onto the corpse")
+                }
+                DataSource::Funnel { .. } => {
+                    assert_eq!(n_dtns, 1, "funnel only when no DTN survives")
+                }
+            }
+        }
+        for &o in &owners {
+            let adm = router.request(TransferRequest::new(t, o, 10));
+            t += 1;
+            let DataSource::Dtn { dtn } = adm[0].source else {
+                panic!("live fleet exists, got {:?}", adm[0].source);
+            };
+            assert!(!router.is_dtn_failed(dtn));
+            if pin[o] != victim {
+                assert_eq!(dtn, pin[o], "unaffected owner {o} moved");
+            }
+            assert_eq!(router.dtn_pin_of(o), Some(dtn));
+        }
+        // Recovery does not flap owners back to the recovered node.
+        router.recover_dtn(victim);
+        for &o in &owners {
+            let before = router.dtn_pin_of(o).expect("pinned");
+            let adm = router.request(TransferRequest::new(t, o, 10));
+            t += 1;
+            assert_eq!(
+                adm[0].source,
+                DataSource::Dtn { dtn: before },
+                "{o} flapped after recovery"
+            );
+        }
     });
 }
 

@@ -8,7 +8,7 @@
 use htcdm::coordinator::engine::{Engine, EngineSpec};
 use htcdm::coordinator::{Experiment, Scenario};
 use htcdm::fabric::{run_real_pool, run_real_pool_router, RealPoolConfig};
-use htcdm::mover::{DataSource, FaultPlan, PoolRouter, RouterPolicy, SourcePlan};
+use htcdm::mover::{DataSource, FaultPlan, PoolRouter, RouterPolicy, SourcePlan, SourceSelector};
 use htcdm::netsim::topology::TestbedSpec;
 use htcdm::transfer::ThrottlePolicy;
 use htcdm::util::units::{Bytes, SimTime};
@@ -176,6 +176,73 @@ fn dtn_offload_4_scenario_smokes() {
     }
     assert_eq!(report.per_node_series[0].total_bytes(), 0.0);
     assert_eq!(report.router.routed_per_dtn.iter().sum::<u64>(), 48);
+}
+
+/// One owner-affinity `SourceSelector` drives BOTH fabrics, including a
+/// DTN-kill re-pin on the real one: the sim phase pins the benchmark
+/// owner's whole burst onto one data node; the real phase then kills
+/// exactly that node at burst start, the router re-pins the owner onto
+/// the survivor, and every job still completes — selector state (the
+/// pin) carrying across fabrics through the one router object.
+#[test]
+fn same_source_selector_drives_sim_and_real_fabric_with_repin() {
+    let router = PoolRouter::sim(
+        1,
+        2,
+        ThrottlePolicy::Disabled.into(),
+        RouterPolicy::LeastLoaded,
+    )
+    .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0, 1.0])
+    .with_source_selector(SourceSelector::OwnerAffinity);
+
+    // Phase 1 (sim): one owner, one pin — the whole burst rides a
+    // single data node.
+    let sim_jobs = 16u32;
+    let result = Engine::with_router(tiny_sim_spec(sim_jobs), router)
+        .run()
+        .unwrap();
+    assert_eq!(result.schedd.completed_count(), sim_jobs as usize);
+    let placed = result.router.routed_per_dtn.clone();
+    assert_eq!(placed.iter().sum::<u64>(), sim_jobs as u64);
+    assert_eq!(
+        placed.iter().filter(|&&c| c > 0).count(),
+        1,
+        "owner pinned to one data node: {placed:?}"
+    );
+    let pinned = placed.iter().position(|&c| c > 0).unwrap();
+
+    let mut schedd = result.schedd;
+    let router = schedd.take_router();
+    assert_eq!(router.source_selector(), SourceSelector::OwnerAffinity);
+    assert_eq!(router.dtn_pin_of("benchmark"), Some(pinned));
+
+    // Phase 2 (real): kill the pinned node at burst start. The same
+    // router re-pins the owner; the survivor serves the burst.
+    let mut cfg = real_cfg(8);
+    cfg.workers = 2;
+    cfg.faults = FaultPlan::default().kill_dtn(pinned, 0.0);
+    let (report, router) = run_real_pool_router(&cfg, router).unwrap();
+    assert_eq!(report.errors, 0, "burst survives the dead pinned node");
+    assert_eq!(report.jobs_completed, 8);
+    assert_eq!(report.source_selector, "owner-affinity");
+    assert_eq!(report.router.dtn_failed, 1);
+    let survivor = 1 - pinned;
+    assert_eq!(
+        router.dtn_pin_of("benchmark"),
+        Some(survivor),
+        "the kill re-pinned the owner onto the survivor"
+    );
+    let served: u64 = report.bytes_served_per_dtn.iter().sum();
+    assert!(
+        served >= 8 * (128 << 10) as u64,
+        "the fleet served the whole real burst: {served}"
+    );
+    assert!(
+        report.bytes_served_per_dtn[survivor] >= report.bytes_served_per_dtn[pinned],
+        "survivor carried the bulk: {:?}",
+        report.bytes_served_per_dtn
+    );
+    assert_eq!(report.bytes_served_per_node, vec![0]);
 }
 
 /// Sources survive a *schedule-node* failure: with 2 submit nodes and a

@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Check intra-doc markdown links.
+
+Scans the given markdown files (default: docs/*.md plus ROADMAP.md) for
+inline links `[text](target)` and verifies that
+
+* relative file targets exist (resolved against the linking file's dir),
+* `#anchor` fragments match a heading in the target file (GitHub-style
+  slugs: lowercase, punctuation stripped, spaces -> hyphens).
+
+External links (http/https/mailto) are skipped — this is an offline
+repo and CI must not depend on the network. Exits non-zero with one
+line per broken link.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def slugify(heading: str) -> str:
+    """Approximate GitHub's anchor slugger."""
+    text = heading.strip().lower().replace("`", "")
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def headings(path: Path) -> set[str]:
+    slugs = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            slugs.add(slugify(m.group(1)))
+    return slugs
+
+
+def links(path: Path):
+    in_fence = False
+    for lineno, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [Path(a) for a in argv]
+    else:
+        files = sorted(Path("docs").glob("*.md")) + [Path("ROADMAP.md")]
+    files = [f for f in files if f.exists()]
+    if not files:
+        print("check_doc_links: no markdown files found", file=sys.stderr)
+        return 2
+
+    errors = []
+    for f in files:
+        for lineno, target in links(f):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = f if not path_part else (f.parent / path_part)
+            if not dest.exists():
+                errors.append(f"{f}:{lineno}: broken link target '{target}'")
+                continue
+            if anchor and dest.suffix == ".md":
+                if slugify(anchor) not in headings(dest):
+                    errors.append(
+                        f"{f}:{lineno}: anchor '#{anchor}' not found in {dest}"
+                    )
+
+    for e in errors:
+        print(e, file=sys.stderr)
+    checked = ", ".join(str(f) for f in files)
+    if errors:
+        print(f"check_doc_links: {len(errors)} broken link(s) in {checked}",
+              file=sys.stderr)
+        return 1
+    print(f"check_doc_links: OK ({checked})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
