@@ -1,0 +1,310 @@
+//! Bench: million-owner control plane — router decision throughput.
+//!
+//! The paper's burst came from one benchmark user, but a campus pool
+//! routes for every owner at once. This bench proves the sharded router
+//! state keeps the per-decision cost flat as the owner population grows
+//! from 10^3 to 10^6 across a 100-node x 100-DTN fleet:
+//!
+//! * a DECISION sweep: policies x source selectors x owner counts
+//!   {1e3, 1e5, 1e6}, each combo routing a fixed-size burst through a
+//!   sliding in-flight window (request + complete, the full control
+//!   loop), reporting ns/decision and decisions/sec,
+//! * a STATS-MERGE row per combo: the cost of folding per-node,
+//!   per-shard accounting into one `MoverStats` under that load,
+//! * a SCALING GATE per combo: the 1e6-owner decision cost must stay
+//!   within 3x the 1e3-owner cost — the flat-cost claim, asserted
+//!   in-bench so CI fails if sharding regresses,
+//! * a BATCH row: `route_batch` in negotiator-style cycles vs the same
+//!   burst routed one `request` at a time, with the decisions checked
+//!   identical (the batch API is a pure batching of the single path).
+//!
+//! Every row is also recorded as a JSON object; set `BENCH_REPORT_DIR`
+//! to write them to `router_throughput.json` (the CI bench-smoke job
+//! uploads them as artifacts).
+//!
+//! Run: cargo bench --bench router_throughput
+//! CI smoke: cargo bench --bench router_throughput -- --smoke
+//! (fewer combos, {1e3, 1e6} owners only; the 3x gate still runs)
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use htcdm::mover::{PoolRouter, RouterPolicy, SourcePlan, SourceSelector, TransferRequest};
+use htcdm::storage::ExtentId;
+use htcdm::transfer::ThrottlePolicy;
+
+/// `--smoke` (or `BENCH_SMOKE=1`): shrink the sweep so CI can execute
+/// the bench end-to-end on each PR. The scaling gate still runs.
+fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke") || std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+const N_NODES: u32 = 100;
+const N_DTNS: usize = 100;
+const N_EXTENTS: u64 = 1024;
+/// Sliding in-flight window: matches a saturated pool where completes
+/// arrive at roughly the admission rate.
+const WINDOW: usize = 4096;
+
+fn selector_label(s: SourceSelector) -> &'static str {
+    match s {
+        SourceSelector::RoundRobin => "round-robin",
+        SourceSelector::CacheAware => "cache-aware",
+        SourceSelector::OwnerAffinity => "owner-affinity",
+        SourceSelector::WeightedByCapacity => "weighted",
+    }
+}
+
+fn build_router(policy: RouterPolicy, selector: SourceSelector) -> PoolRouter {
+    PoolRouter::sim(N_NODES, 1, ThrottlePolicy::Disabled.into(), policy)
+        .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; N_DTNS])
+        .with_source_selector(selector)
+}
+
+/// Deterministic owner pick: a Knuth multiplicative walk over the owner
+/// population, so every owner count sees the same request stream shape.
+fn owner_index(i: u32, n_owners: usize) -> usize {
+    ((i as u64).wrapping_mul(2_654_435_761) % n_owners as u64) as usize
+}
+
+struct ComboTiming {
+    ns_per_decision: f64,
+    stats_merge_ns: f64,
+    routed: usize,
+}
+
+/// Route `decisions` requests through a fresh router with a sliding
+/// completion window, then time the stats merge under the final load.
+fn run_combo(
+    policy: RouterPolicy,
+    selector: SourceSelector,
+    owners: &[String],
+    decisions: u32,
+) -> ComboTiming {
+    let mut router = build_router(policy, selector);
+    let mut inflight: VecDeque<u32> = VecDeque::with_capacity(WINDOW + 1);
+    let mut routed = 0usize;
+    let t0 = Instant::now();
+    for t in 0..decisions {
+        let idx = owner_index(t, owners.len());
+        let req = TransferRequest::new(t, owners[idx].as_str(), 1 << 20)
+            .with_extent(ExtentId(idx as u64 % N_EXTENTS));
+        routed += router.request(req).len();
+        inflight.push_back(t);
+        if inflight.len() > WINDOW {
+            let done = inflight.pop_front().expect("window is non-empty");
+            router.complete(done);
+        }
+    }
+    let route_elapsed = t0.elapsed();
+
+    // Stats-merge cost: fold the per-node, per-shard accounting into one
+    // MoverStats (plus the router-level view) under the loaded maps.
+    const MERGE_ITERS: u32 = 32;
+    let t1 = Instant::now();
+    for _ in 0..MERGE_ITERS {
+        std::hint::black_box(router.stats());
+        std::hint::black_box(router.router_stats());
+    }
+    let merge_elapsed = t1.elapsed();
+
+    ComboTiming {
+        ns_per_decision: route_elapsed.as_nanos() as f64 / decisions as f64,
+        stats_merge_ns: merge_elapsed.as_nanos() as f64 / MERGE_ITERS as f64,
+        routed,
+    }
+}
+
+/// Best-of-2 so one scheduler hiccup can't fail the scaling gate.
+fn run_combo_best(
+    policy: RouterPolicy,
+    selector: SourceSelector,
+    owners: &[String],
+    decisions: u32,
+) -> ComboTiming {
+    let a = run_combo(policy, selector, owners, decisions);
+    let b = run_combo(policy, selector, owners, decisions);
+    if b.ns_per_decision < a.ns_per_decision {
+        b
+    } else {
+        a
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = smoke_mode();
+    let mut json_rows: Vec<String> = Vec::new();
+    if smoke {
+        println!("[smoke mode: 2 combos, {{1e3, 1e6}} owners, short bursts]");
+    }
+
+    let owner_counts: &[usize] = if smoke {
+        &[1_000, 1_000_000]
+    } else {
+        &[1_000, 100_000, 1_000_000]
+    };
+    let decisions: u32 = if smoke { 120_000 } else { 300_000 };
+    let combos: &[(RouterPolicy, SourceSelector)] = if smoke {
+        &[
+            (RouterPolicy::LeastLoaded, SourceSelector::RoundRobin),
+            (RouterPolicy::OwnerAffinity, SourceSelector::CacheAware),
+        ]
+    } else {
+        &[
+            (RouterPolicy::RoundRobin, SourceSelector::RoundRobin),
+            (RouterPolicy::RoundRobin, SourceSelector::CacheAware),
+            (RouterPolicy::RoundRobin, SourceSelector::OwnerAffinity),
+            (RouterPolicy::LeastLoaded, SourceSelector::RoundRobin),
+            (RouterPolicy::LeastLoaded, SourceSelector::CacheAware),
+            (RouterPolicy::LeastLoaded, SourceSelector::OwnerAffinity),
+            (RouterPolicy::OwnerAffinity, SourceSelector::RoundRobin),
+            (RouterPolicy::OwnerAffinity, SourceSelector::CacheAware),
+            (RouterPolicy::OwnerAffinity, SourceSelector::OwnerAffinity),
+        ]
+    };
+
+    // One owner table at the max population; smaller counts slice it so
+    // the same names (and extents) recur across scales.
+    let max_owners = *owner_counts.iter().max().expect("non-empty owner counts");
+    let owners: Vec<String> = (0..max_owners).map(|i| format!("u{i}")).collect();
+
+    println!(
+        "=== router decision sweep ({N_NODES} nodes x {N_DTNS} DTNs, \
+         {decisions} decisions/combo, window {WINDOW}) ==="
+    );
+    println!("  policy       selector         owners     ns/decision   Mdec/s   stats-merge");
+    let gate_limit = 3.0;
+    for &(policy, selector) in combos {
+        let mut small_ns = 0.0f64;
+        for &n_owners in owner_counts {
+            let t = run_combo_best(policy, selector, &owners[..n_owners], decisions);
+            anyhow::ensure!(
+                t.routed == decisions as usize,
+                "{} decisions routed, expected {decisions}",
+                t.routed
+            );
+            let mdec_per_sec = 1e3 / t.ns_per_decision;
+            println!(
+                "  {:<12} {:<15} {:>8}   {:>9.1} ns  {:>6.2}   {:>9.1} us",
+                policy.label(),
+                selector_label(selector),
+                n_owners,
+                t.ns_per_decision,
+                mdec_per_sec,
+                t.stats_merge_ns / 1e3
+            );
+            json_rows.push(format!(
+                "{{\"section\":\"decisions\",\"policy\":\"{}\",\"selector\":\"{}\",\
+                 \"owners\":{},\"decisions\":{},\"ns_per_decision\":{:.1},\
+                 \"decisions_per_sec\":{:.0},\"stats_merge_ns\":{:.0}}}",
+                policy.label(),
+                selector_label(selector),
+                n_owners,
+                decisions,
+                t.ns_per_decision,
+                1e9 / t.ns_per_decision,
+                t.stats_merge_ns
+            ));
+            if n_owners == owner_counts[0] {
+                small_ns = t.ns_per_decision;
+            } else if n_owners == max_owners {
+                // The flat-cost gate: a million owners may not cost more
+                // than 3x a thousand owners on the same decision stream.
+                let ratio = t.ns_per_decision / small_ns.max(1.0);
+                println!(
+                    "    scaling {}k -> {}M owners: {:.2}x (gate {:.1}x)",
+                    owner_counts[0] / 1_000,
+                    max_owners / 1_000_000,
+                    ratio,
+                    gate_limit
+                );
+                json_rows.push(format!(
+                    "{{\"section\":\"scaling-gate\",\"policy\":\"{}\",\"selector\":\"{}\",\
+                     \"owners_small\":{},\"owners_big\":{},\"ratio\":{:.3},\"limit\":{:.1}}}",
+                    policy.label(),
+                    selector_label(selector),
+                    owner_counts[0],
+                    max_owners,
+                    ratio,
+                    gate_limit
+                ));
+                anyhow::ensure!(
+                    ratio <= gate_limit,
+                    "decision cost not flat for {}/{}: {:.2}x from {} to {} owners \
+                     (gate {:.1}x)",
+                    policy.label(),
+                    selector_label(selector),
+                    ratio,
+                    owner_counts[0],
+                    max_owners,
+                    gate_limit
+                );
+            }
+        }
+    }
+
+    println!("\n=== batched admission: route_batch cycles vs single requests ===");
+    let batch_reqs: u32 = if smoke { 20_000 } else { 100_000 };
+    let cycle = 256usize;
+    let n_owners = owner_counts[0];
+    let make_reqs = || -> Vec<TransferRequest> {
+        (0..batch_reqs)
+            .map(|t| {
+                let idx = owner_index(t, n_owners);
+                TransferRequest::new(t, owners[idx].as_str(), 1 << 20)
+                    .with_extent(ExtentId(idx as u64 % N_EXTENTS))
+            })
+            .collect()
+    };
+    let (policy, selector) = (RouterPolicy::LeastLoaded, SourceSelector::CacheAware);
+
+    let mut single_router = build_router(policy, selector);
+    let t0 = Instant::now();
+    let mut single_out = Vec::with_capacity(batch_reqs as usize);
+    for req in make_reqs() {
+        single_out.extend(single_router.request(req));
+    }
+    let single_ns = t0.elapsed().as_nanos() as f64 / batch_reqs as f64;
+
+    let mut batch_router = build_router(policy, selector);
+    let all = make_reqs();
+    let t1 = Instant::now();
+    let mut batch_out = Vec::with_capacity(batch_reqs as usize);
+    for chunk in all.chunks(cycle) {
+        batch_out.extend(batch_router.route_batch(chunk.to_vec()));
+    }
+    let batch_ns = t1.elapsed().as_nanos() as f64 / batch_reqs as f64;
+
+    // The batch API is a pure batching of the single path: identical
+    // decisions and identical accounting, or the bench fails.
+    anyhow::ensure!(
+        single_out == batch_out,
+        "route_batch diverged from single routing"
+    );
+    anyhow::ensure!(
+        single_router.stats() == batch_router.stats(),
+        "route_batch accounting diverged from single routing"
+    );
+    println!("  mode        reqs      ns/decision");
+    println!("  single   {:>8}   {:>9.1} ns", batch_reqs, single_ns);
+    println!(
+        "  batch    {:>8}   {:>9.1} ns  (cycle {cycle}, decisions verified identical)",
+        batch_reqs, batch_ns
+    );
+    json_rows.push(format!(
+        "{{\"section\":\"batch\",\"mode\":\"single\",\"reqs\":{batch_reqs},\
+         \"ns_per_decision\":{single_ns:.1}}}"
+    ));
+    json_rows.push(format!(
+        "{{\"section\":\"batch\",\"mode\":\"cycle-{cycle}\",\"reqs\":{batch_reqs},\
+         \"ns_per_decision\":{batch_ns:.1}}}"
+    ));
+
+    if let Ok(dir) = std::env::var("BENCH_REPORT_DIR") {
+        std::fs::create_dir_all(&dir).ok();
+        let path = format!("{dir}/router_throughput.json");
+        std::fs::write(&path, format!("[{}]\n", json_rows.join(",\n ")))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}

@@ -67,6 +67,21 @@ pub struct EngineSpec {
     /// serves (0 = unlimited). A saturated DTN defers placements to its
     /// peers and overflows to the funnel when the whole fleet is full.
     pub dtn_slots: u32,
+    /// Per-DTN bounded wait-queue depth (0 = disabled): with queues on,
+    /// a budget-full fleet parks transfers on a data node's queue
+    /// instead of overflowing to the funnel, promoting each into the
+    /// next slot that node frees.
+    pub dtn_queue_depth: u32,
+    /// Router state shards (`ROUTER_SHARDS` knob): lock shards for the
+    /// router's ticket/owner maps. Pure partitioning — decisions are
+    /// identical for every value; more shards only cut real-fabric lock
+    /// contention.
+    pub router_shards: usize,
+    /// Admission-cycle batch size (`CYCLE_SIZE` knob): matches handed to
+    /// the router per `route_batch` call within one negotiation cycle
+    /// (0 = the whole cycle in one batch). Batching is
+    /// behavior-preserving — it only amortizes per-call overhead.
+    pub cycle_size: usize,
     /// Distinct physical extents behind the job inputs (1 = the paper's
     /// single hard-linked extent; >1 gives cache-aware selection a
     /// working set to place — job `p` reads extent `p % n_extents`).
@@ -102,6 +117,9 @@ impl EngineSpec {
             source: SourcePlan::SubmitFunnel,
             source_selector: SourceSelector::RoundRobin,
             dtn_slots: 0,
+            dtn_queue_depth: 0,
+            router_shards: crate::mover::DEFAULT_ROUTER_SHARDS,
+            cycle_size: 0,
             n_extents: 1,
             n_owners: 1,
             faults: FaultPlan::default(),
@@ -185,6 +203,11 @@ impl EngineSpec {
             self.source_selector = SourceSelector::from_config(cfg)?;
         }
         self.dtn_slots = cfg.get_u64("DTN_MAX_CONCURRENT", self.dtn_slots as u64)? as u32;
+        self.dtn_queue_depth = cfg.get_u64("DTN_QUEUE_DEPTH", self.dtn_queue_depth as u64)? as u32;
+        if cfg.raw("ROUTER_SHARDS").is_some() {
+            self.router_shards = crate::mover::shards_from_config(cfg)?;
+        }
+        self.cycle_size = cfg.get_u64("CYCLE_SIZE", self.cycle_size as u64)? as usize;
         self.n_extents = (cfg.get_u64("N_EXTENTS", self.n_extents as u64)? as u32).max(1);
         // Heterogeneous data fleets: DATA_NODE_GBPS = 100, 25 sets
         // per-DTN NIC capacity.
@@ -346,7 +369,9 @@ impl Engine {
         let router = PoolRouter::new(nodes, capacities, spec.router)
             .with_source_plan(spec.source, dtn_caps)
             .with_source_selector(spec.source_selector)
-            .with_dtn_budget(spec.dtn_slots);
+            .with_dtn_budget(spec.dtn_slots)
+            .with_dtn_queue(spec.dtn_queue_depth)
+            .with_state_shards(spec.router_shards);
         Engine::with_router(spec, router)
     }
 
@@ -371,6 +396,8 @@ impl Engine {
         spec.source = router.source_plan();
         spec.source_selector = router.source_selector();
         spec.dtn_slots = router.dtn_budget();
+        spec.dtn_queue_depth = router.dtn_queue_depth();
+        spec.router_shards = router.state_shards();
         if let Some(ramp) = spec.faults.recovery_ramp {
             router.set_recovery_ramp(ramp);
         }
@@ -624,7 +651,12 @@ impl Engine {
             }
         }
         let result = self.negotiator.negotiate(&idle, &slots);
-        let mut to_start: Vec<crate::mover::Routed> = Vec::new();
+        // Claim/activate bookkeeping per match, then hand the whole
+        // cycle's matches to the mover in `cycle_size`-job admission
+        // batches (0 = one batch) — the negotiator-style control plane.
+        // Batching is behavior-preserving (`route_batch` ≡ the same
+        // singles in order); it amortizes the per-call plumbing.
+        let mut matched: Vec<u32> = Vec::with_capacity(result.matches.len());
         for (job_id, slot_id) in result.matches {
             let proc_ = job_id.proc;
             self.schedd.take_idle(proc_);
@@ -634,7 +666,16 @@ impl Engine {
             self.collector
                 .advertise(&slot_id.to_string(), sd.slot_ad(slot_id.slot));
             self.assignment.insert(proc_, slot_id);
-            to_start.extend(self.schedd.job_matched(proc_, t));
+            matched.push(proc_);
+        }
+        let chunk = if self.spec.cycle_size == 0 {
+            matched.len().max(1)
+        } else {
+            self.spec.cycle_size
+        };
+        let mut to_start: Vec<crate::mover::Routed> = Vec::new();
+        for batch in matched.chunks(chunk) {
+            to_start.extend(self.schedd.job_matched_batch(batch, t));
         }
         self.start_routed(to_start, t);
         // Re-negotiate while unmatched jobs and unclaimed slots remain.
@@ -985,6 +1026,9 @@ mod tests {
             source: SourcePlan::SubmitFunnel,
             source_selector: SourceSelector::RoundRobin,
             dtn_slots: 0,
+            dtn_queue_depth: 0,
+            router_shards: crate::mover::DEFAULT_ROUTER_SHARDS,
+            cycle_size: 0,
             n_extents: 1,
             n_owners: 1,
             faults: FaultPlan::default(),
@@ -1275,7 +1319,10 @@ mod tests {
              DATA_NODE_GBPS = 100, 40\n\
              FAULT_PLAN = kill:1@5; recover:1@20\n\
              STEAL_THRESHOLD = 3\n\
-             RECOVERY_RAMP = 8\n",
+             RECOVERY_RAMP = 8\n\
+             DTN_QUEUE_DEPTH = 4\n\
+             ROUTER_SHARDS = 8\n\
+             CYCLE_SIZE = 32\n",
         )
         .unwrap();
         let mut spec = tiny_spec();
@@ -1292,6 +1339,9 @@ mod tests {
         );
         assert_eq!(spec.source_selector, SourceSelector::CacheAware);
         assert_eq!(spec.dtn_slots, 6);
+        assert_eq!(spec.dtn_queue_depth, 4);
+        assert_eq!(spec.router_shards, 8);
+        assert_eq!(spec.cycle_size, 32);
         assert_eq!(spec.n_extents, 4);
         assert_eq!(spec.testbed.data_node_gbps, vec![100.0, 40.0]);
         assert_eq!(spec.n_jobs, 12);

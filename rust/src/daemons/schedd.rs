@@ -119,16 +119,31 @@ impl Schedd {
     /// Returns routed transfers that may START now (ticket = proc, plus
     /// the submit node and shadow shard serving it).
     pub fn job_matched(&mut self, proc_: u32, t: SimTime) -> Vec<Routed> {
-        let job = &mut self.jobs[proc_ as usize];
-        debug_assert_eq!(job.state, JobState::Idle);
-        job.state = JobState::TransferQueued;
-        job.t_matched = Some(t);
-        job.t_transfer_queued = Some(t);
-        let id = job.spec.id;
-        let mut req = TransferRequest::new(proc_, job.spec.owner.clone(), job.spec.input_bytes.0);
-        req.extent = job.spec.input_extent;
-        self.log.record(t, id, EventKind::TransferInputQueued);
-        self.mover.request(req)
+        self.job_matched_batch(&[proc_], t)
+    }
+
+    /// One admission cycle's worth of matches: every job's lifecycle
+    /// bookkeeping runs first, then the whole slice enters the mover in
+    /// one `route_batch` call — equivalent to per-proc
+    /// [`Schedd::job_matched`] calls in order, with the router's
+    /// per-call plumbing (and, on the real fabric, the gate lock)
+    /// amortized across the cycle.
+    pub fn job_matched_batch(&mut self, procs: &[u32], t: SimTime) -> Vec<Routed> {
+        let mut reqs = Vec::with_capacity(procs.len());
+        for &proc_ in procs {
+            let job = &mut self.jobs[proc_ as usize];
+            debug_assert_eq!(job.state, JobState::Idle);
+            job.state = JobState::TransferQueued;
+            job.t_matched = Some(t);
+            job.t_transfer_queued = Some(t);
+            let id = job.spec.id;
+            let mut req =
+                TransferRequest::new(proc_, job.spec.owner.clone(), job.spec.input_bytes.0);
+            req.extent = job.spec.input_extent;
+            self.log.record(t, id, EventKind::TransferInputQueued);
+            reqs.push(req);
+        }
+        self.mover.route_batch(reqs)
     }
 
     /// Admitted transfer goes on the wire.

@@ -416,6 +416,18 @@ pub struct RealPoolConfig {
     /// serves (0 = unlimited). A saturated DTN defers placements to its
     /// peers and overflows to the funnel when the whole fleet is full.
     pub dtn_slots: u32,
+    /// Per-DTN bounded wait-queue depth (0 = disabled): with queues on,
+    /// a budget-full fleet parks transfers on a data node's queue
+    /// instead of overflowing to the funnel.
+    pub dtn_queue_depth: u32,
+    /// Router state shards (`ROUTER_SHARDS`): how many lock shards the
+    /// router's ticket/owner maps split into. Decisions are identical
+    /// for every value; more shards cut worker-side lock contention.
+    pub router_shards: usize,
+    /// Admission-cycle batch size (`CYCLE_SIZE`): requests handed to the
+    /// router per `route_batch` call when a gate holder drains the
+    /// combining buffer (0 = drain everything in one batch).
+    pub cycle_size: usize,
     /// Fault-injection schedule (wall-clock seconds from burst start):
     /// `KillNode` crashes the node's file server mid-burst (in-flight
     /// connections break; workers retry through the router),
@@ -444,6 +456,9 @@ impl Default for RealPoolConfig {
             source: SourcePlan::SubmitFunnel,
             source_selector: SourceSelector::RoundRobin,
             dtn_slots: 0,
+            dtn_queue_depth: 0,
+            router_shards: crate::mover::DEFAULT_ROUTER_SHARDS,
+            cycle_size: 0,
             faults: FaultPlan::default(),
         }
     }
@@ -599,7 +614,9 @@ pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
     let router = PoolRouter::new(nodes, capacities, cfg.router)
         .with_source_plan(cfg.source, vec![1.0; cfg.data_nodes as usize])
         .with_source_selector(cfg.source_selector)
-        .with_dtn_budget(cfg.dtn_slots);
+        .with_dtn_budget(cfg.dtn_slots)
+        .with_dtn_queue(cfg.dtn_queue_depth)
+        .with_state_shards(cfg.router_shards);
     let (report, _router) = run_real_pool_router(&cfg, router)?;
     Ok(report)
 }
@@ -767,6 +784,10 @@ pub fn run_real_pool_router(
         .collect(),
     ));
 
+    // Read-side handle onto the router's sharded ticket state: workers
+    // answer "where is my ticket now?" probes through one shard lock
+    // each instead of re-deriving everything from the router object.
+    let state = router.state_handle();
     let gate = Arc::new((
         Mutex::new(GateState {
             router,
@@ -774,6 +795,12 @@ pub fn run_real_pool_router(
         }),
         Condvar::new(),
     ));
+    // The admission combining buffer: workers park their requests here,
+    // and whoever takes the gate next routes the whole backlog as ONE
+    // negotiator-style admission cycle (`route_batch` in `cycle_size`
+    // chunks) — the gate is taken once per cycle, not once per request.
+    // Lock order: gate, then pending; never the reverse.
+    let pending: Arc<Mutex<Vec<TransferRequest>>> = Arc::new(Mutex::new(Vec::new()));
 
     let t0 = std::time::Instant::now();
     let chaos_log: Arc<Mutex<ChaosTimeline>> = Arc::new(Mutex::new(ChaosTimeline::default()));
@@ -910,6 +937,9 @@ pub fn run_real_pool_router(
         let stats = stats.clone();
         let key = pool_key.clone();
         let gate = gate.clone();
+        let state = state.clone();
+        let pending = pending.clone();
+        let cycle_size = cfg.cycle_size;
         let addrs = addrs.clone();
         let dtn_addrs = dtn_addrs.clone();
         let out_bytes = cfg.output_bytes;
@@ -927,21 +957,35 @@ pub fn run_real_pool_router(
                 // gives up after ~30 s instead of wedging the pool —
                 // same backstop as the mid-transfer retry path below.
                 let (lock, cv) = &*gate;
+                let mut req = TransferRequest::new(ticket, job.owner.clone(), job.input_bytes.0);
+                req.extent = job.input_extent;
+                // Park the request; the gate holder below drains the
+                // whole buffer (this request plus any other workers'
+                // parked ones) through the batched cycle API.
+                pending.lock().unwrap().push(req);
                 let admission = {
                     let mut g = lock.lock().unwrap();
-                    let mut req =
-                        TransferRequest::new(ticket, job.owner.clone(), job.input_bytes.0);
-                    req.extent = job.input_extent;
-                    for a in g.router.request(req) {
-                        g.ready.insert(a.ticket, a);
+                    let backlog: Vec<TransferRequest> =
+                        pending.lock().unwrap().drain(..).collect();
+                    if !backlog.is_empty() {
+                        let chunk = if cycle_size == 0 {
+                            backlog.len()
+                        } else {
+                            cycle_size.max(1)
+                        };
+                        for cycle in backlog.chunks(chunk) {
+                            for a in g.router.route_batch(cycle.to_vec()) {
+                                g.ready.insert(a.ticket, a);
+                            }
+                        }
+                        cv.notify_all();
                     }
-                    cv.notify_all();
                     let mut strand_waits = 0u32;
                     loop {
                         if let Some(ns) = g.ready.remove(&ticket) {
                             break Some(ns);
                         }
-                        if g.router.node_of(ticket).is_some() {
+                        if state.node_of(ticket).is_some() {
                             // Queued on a live node: the admission will
                             // be signalled as the pool drains.
                             strand_waits = 0;
@@ -999,19 +1043,21 @@ pub fn run_real_pool_router(
                             // moved this ticket off the endpoint we just
                             // failed against (its node or DTN died —
                             // even if it has since recovered).
+                            // Probes go through the sharded state handle
+                            // (one shard lock each); holding the gate
+                            // keeps them serialized with the chaos
+                            // thread, exactly like the old router reads.
                             let rerouted = g.ready.contains_key(&ticket)
                                 || match routed.source {
                                     DataSource::Funnel { node } => {
-                                        g.router.is_failed(node)
-                                            || g
-                                                .router
+                                        state.is_node_down(node)
+                                            || state
                                                 .node_of(ticket)
                                                 .is_some_and(|n| n != node)
                                     }
                                     DataSource::Dtn { dtn } => {
-                                        g.router.is_dtn_failed(dtn)
-                                            || g
-                                                .router
+                                        state.is_dtn_down(dtn)
+                                            || state
                                                 .source_of(ticket)
                                                 .is_some_and(|s| s != routed.source)
                                     }
@@ -1031,7 +1077,7 @@ pub fn run_real_pool_router(
                                 if let Some(ns) = g.ready.remove(&ticket) {
                                     break Some(ns);
                                 }
-                                if g.router.node_of(ticket).is_some() {
+                                if state.node_of(ticket).is_some() {
                                     strand_waits = 0;
                                 } else {
                                     strand_waits += 1;
@@ -1160,6 +1206,9 @@ mod tests {
             source: SourcePlan::SubmitFunnel,
             source_selector: SourceSelector::RoundRobin,
             dtn_slots: 0,
+            dtn_queue_depth: 0,
+            router_shards: crate::mover::DEFAULT_ROUTER_SHARDS,
+            cycle_size: 0,
             faults: FaultPlan::default(),
         }
     }

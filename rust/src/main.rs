@@ -32,7 +32,8 @@ fn usage() -> ! {
                       N_OWNERS, TRANSFER_QUEUE_POLICY, SHADOW_POOL_SIZE,\n\
                       N_SUBMIT_NODES, ROUTER_POLICY, DATA_NODES,\n\
                       SOURCE_PLAN, DTN_THRESHOLD, SOURCE_SELECTOR,\n\
-                      DTN_MAX_CONCURRENT, N_EXTENTS, FAULT_PLAN,\n\
+                      DTN_MAX_CONCURRENT, DTN_QUEUE_DEPTH, N_EXTENTS,\n\
+                      ROUTER_SHARDS, CYCLE_SIZE, FAULT_PLAN,\n\
                       STEAL_THRESHOLD, RECOVERY_RAMP...;\n\
                       docs/KNOBS.md is the full reference)\n\
            pool       [--jobs N] [--workers W] [--mb SIZE] [--native]\n\
@@ -41,13 +42,18 @@ fn usage() -> ! {
                       [--router round-robin|least-loaded|owner-affinity|weighted-by-capacity]\n\
                       [--data-nodes N] [--source funnel|dtn|hybrid[:BYTES]]\n\
                       [--source-selector round-robin|cache-aware|owner-affinity|weighted-by-capacity]\n\
-                      [--dtn-cap N] [--fault PLAN] [--steal N] [--ramp N]\n\
+                      [--dtn-cap N] [--dtn-queue N] [--router-shards K]\n\
+                      [--cycle N] [--fault PLAN] [--steal N] [--ramp N]\n\
                       run a real-mode loopback pool (sealed bytes via PJRT);\n\
                       --submit-nodes > 1 runs one file server per submit node\n\
                       behind the pool router; --data-nodes N serves bytes\n\
                       from N dedicated DTN file servers under --source,\n\
                       placed by --source-selector with --dtn-cap slots\n\
-                      of admission budget per data node (0 = unlimited);\n\
+                      of admission budget per data node (0 = unlimited)\n\
+                      and --dtn-queue N wait-queue entries behind them;\n\
+                      --router-shards K shards the router's ticket maps\n\
+                      (identical decisions, less lock contention) and\n\
+                      --cycle N batches admission in N-request cycles;\n\
                       --fault injects chaos, e.g. 'kill:1@0.5; recover:1@2;\n\
                       kill:d0@1' (wall-clock seconds, dN = data node), with\n\
                       --steal N enabling work-stealing past an N-deep\n\
@@ -252,6 +258,15 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
         source_selector,
         dtn_slots: arg_value(args, "--dtn-cap")
             .map(|v| v.parse().expect("--dtn-cap N"))
+            .unwrap_or(0),
+        dtn_queue_depth: arg_value(args, "--dtn-queue")
+            .map(|v| v.parse().expect("--dtn-queue N"))
+            .unwrap_or(0),
+        router_shards: arg_value(args, "--router-shards")
+            .map(|v| v.parse().expect("--router-shards K"))
+            .unwrap_or(htcdm::mover::DEFAULT_ROUTER_SHARDS),
+        cycle_size: arg_value(args, "--cycle")
+            .map(|v| v.parse().expect("--cycle N"))
             .unwrap_or(0),
         faults,
         ..Default::default()

@@ -23,8 +23,9 @@
 //!   verbatim by both consumers: kill poisons + drains
 //!   ([`PoolRouter::fail_node`]), recover un-poisons + re-routes
 //!   stranded work ([`PoolRouter::recover_node`]), degrade re-rates the
-//!   node's routing weight, and each event triggers threshold
-//!   work-stealing ([`PoolRouter::rebalance`]).
+//!   node's routing weight, and each applied batch ends with ONE
+//!   threshold work-stealing pass ([`PoolRouter::rebalance`] via
+//!   [`apply_batch`]).
 //! * [`ChaosTimeline`] — the per-node fault timeline reports carry: what
 //!   was applied, when, how many transfers it re-admitted, and how many
 //!   bytes the node had served at that instant.
@@ -434,23 +435,40 @@ pub fn apply_to_router(
     router: &mut PoolRouter,
     steal_threshold: Option<usize>,
 ) -> Vec<Routed> {
-    let mut out = match *ev {
-        FaultEvent::KillNode { node, .. } => router.fail_node(node),
-        FaultEvent::RecoverNode { node, .. } => router.recover_node(node),
-        FaultEvent::DegradeNic { node, gbps, .. } => {
-            router.set_node_capacity(node, gbps);
-            Vec::new()
-        }
-        FaultEvent::KillDtn { dtn, .. } => router.fail_dtn(dtn),
-        FaultEvent::RecoverDtn { dtn, .. } => {
-            router.recover_dtn(dtn);
-            Vec::new()
-        }
-        FaultEvent::DegradeDtnNic { dtn, gbps, .. } => {
-            router.set_dtn_capacity(dtn, gbps);
-            Vec::new()
-        }
-    };
+    apply_batch(std::slice::from_ref(ev), router, steal_threshold)
+}
+
+/// The batched form of [`apply_to_router`]: apply every event's
+/// router-side half, then run ONE threshold work-stealing pass over the
+/// result. Callers firing several co-due events (one chaos wakeup, one
+/// sim tick) use this so the steal plan is computed once per cycle
+/// against the final post-fault queue lengths, instead of once per
+/// event against intermediate states.
+pub fn apply_batch(
+    events: &[FaultEvent],
+    router: &mut PoolRouter,
+    steal_threshold: Option<usize>,
+) -> Vec<Routed> {
+    let mut out = Vec::new();
+    for ev in events {
+        out.extend(match *ev {
+            FaultEvent::KillNode { node, .. } => router.fail_node(node),
+            FaultEvent::RecoverNode { node, .. } => router.recover_node(node),
+            FaultEvent::DegradeNic { node, gbps, .. } => {
+                router.set_node_capacity(node, gbps);
+                Vec::new()
+            }
+            FaultEvent::KillDtn { dtn, .. } => router.fail_dtn(dtn),
+            FaultEvent::RecoverDtn { dtn, .. } => {
+                router.recover_dtn(dtn);
+                Vec::new()
+            }
+            FaultEvent::DegradeDtnNic { dtn, gbps, .. } => {
+                router.set_dtn_capacity(dtn, gbps);
+                Vec::new()
+            }
+        });
+    }
     if let Some(threshold) = steal_threshold {
         out.extend(router.rebalance(threshold));
     }

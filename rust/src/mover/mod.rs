@@ -58,6 +58,7 @@ pub mod pool;
 pub mod queue;
 pub mod router;
 pub mod source;
+pub mod state;
 
 pub use chaos::{ChaosTimeline, FaultEvent, FaultPlan, FaultRecord};
 pub use policy::{ActiveView, AdmissionConfig, AdmissionPolicy};
@@ -65,6 +66,7 @@ pub use pool::ShadowPool;
 pub use queue::AdmissionQueue;
 pub use router::{PoolRouter, Routed, RouterPolicy, RouterStats};
 pub use source::{DataSource, SourcePlan, SourceSelector, DEFAULT_DTN_THRESHOLD};
+pub use state::{shards_from_config, RouterStateHandle, DEFAULT_ROUTER_SHARDS};
 
 use crate::storage::ExtentId;
 
@@ -143,8 +145,14 @@ pub struct MoverStats {
     /// (see [`PoolRouter::with_dtn_budget`]).
     pub dtn_deferred: u64,
     /// DTN-bound transfers that overflowed to the scheduling node's
-    /// funnel because every live data node was at its admission budget.
+    /// funnel because every live data node was at its admission budget
+    /// AND (with queues enabled) every wait queue was full.
     pub dtn_overflow_to_funnel: u64,
+    /// DTN-bound transfers parked in a data node's bounded wait queue
+    /// because the whole fleet was at budget (see
+    /// [`PoolRouter::with_dtn_queue`]); each is promoted into the next
+    /// slot its DTN frees. Always 0 with `DTN_QUEUE_DEPTH = 0`.
+    pub dtn_queued: u64,
 }
 
 impl MoverStats {

@@ -200,6 +200,7 @@ impl ShadowPool {
             retried_after_fault: 0,
             dtn_deferred: 0,
             dtn_overflow_to_funnel: 0,
+            dtn_queued: 0,
         }
     }
 

@@ -61,13 +61,14 @@
 use super::policy::AdmissionConfig;
 use super::pool::ShadowPool;
 use super::source::{DataSource, SourcePlan, SourceSelector};
+use super::state::{owner_hash, RouterState, RouterStateHandle, DEFAULT_ROUTER_SHARDS};
 use super::{Admitted, DataMover, MoverStats, TransferRequest};
 use crate::config::{Config, ConfigError};
 use crate::runtime::engine::SealEngine;
 use crate::runtime::service::EngineHandle;
 use crate::storage::ExtentId;
 use anyhow::Result;
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeSet, HashMap, HashSet, VecDeque};
 
 /// Pool-level routing strategy across submit nodes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -162,15 +163,76 @@ pub struct RouterStats {
     pub dtn_recovered: u64,
 }
 
-/// FNV-1a over the owner string: stable across runs and processes, so
-/// owner-affinity is deterministic (a property `tests/props.rs` checks).
-fn owner_hash(owner: &str) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in owner.as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
+/// Sort tickets collected from the sharded maps (whose iteration order
+/// is arbitrary) so every re-route/steal plan emits deterministically.
+/// Every failure path MUST funnel its affected-ticket list through this
+/// helper — it replaces the per-call-site `sort_unstable` workarounds
+/// that `fail_node`/`fail_dtn` used to carry, so no new call site can
+/// forget the sort.
+fn sorted_tickets(mut tickets: Vec<u32>) -> Vec<u32> {
+    tickets.sort_unstable();
+    tickets
+}
+
+/// A source-selection outcome before ticket accounting: either the
+/// scheduling node's funnel, or a data node — possibly via its bounded
+/// wait queue when the whole fleet is at budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Placement {
+    Funnel,
+    Dtn { dtn: usize, queued: bool },
+}
+
+/// The data-source plane's selection state, split out of [`PoolRouter`]
+/// so the hot path can borrow it alongside the sharded ticket/owner
+/// maps ([`RouterState`]) without cloning the owner string per
+/// decision.
+#[derive(Debug)]
+struct SourceSel {
+    plan: SourcePlan,
+    selector: SourceSelector,
+    /// Per-DTN down flags (empty with no DTN fleet).
+    dtn_down: Vec<bool>,
+    /// Cached live-DTN list (ascending), rebuilt on fail/recover — the
+    /// hot path never re-filters the fleet per decision.
+    dtn_live: Vec<usize>,
+    /// Relative NIC budget per DTN.
+    dtn_capacity: Vec<f64>,
+    /// As-built DTN budgets, restored by [`PoolRouter::recover_dtn`].
+    dtn_nominal: Vec<f64>,
+    /// Round-robin cursor over the DTN fleet (deterministic selection).
+    /// The cursor survives fleet churn: it advances only when the
+    /// rotation actually picks a data node, so funnel failovers and
+    /// small-sandbox hybrid placements never skew it.
+    dtn_cursor: usize,
+    /// Per-DTN admission budget (0 = unlimited).
+    dtn_slots: u32,
+    /// Placed (not yet completed or re-sourced) transfers per DTN.
+    dtn_active: Vec<u32>,
+    /// Extents hot on each data node (cache-aware selection). Seeded by
+    /// the fabric, grown by serving, cleared by a kill.
+    dtn_residency: Vec<HashSet<ExtentId>>,
+    /// Inverse residency index: extent → the DTNs holding it, kept
+    /// sorted so "lowest-indexed live holder" is one ascending probe
+    /// instead of a linear scan over the fleet. Maintained
+    /// incrementally on stage/serve/`fail_dtn`/`set_dtn_residency`.
+    extent_home: HashMap<ExtentId, BTreeSet<usize>>,
+    /// Deficit counters for weighted-by-capacity selection.
+    dtn_credit: Vec<f64>,
+    /// Bounded per-DTN wait-queue depth (`DTN_QUEUE_DEPTH`; 0 disables
+    /// queueing — the pre-queue behavior of overflowing straight to the
+    /// funnel).
+    queue_depth: u32,
+    /// Tickets queued on a budget-full DTN, drained (promoted into the
+    /// freed slot) on `release_source`.
+    waitq: Vec<VecDeque<u32>>,
+    dtn_queued: u64,
+    dtn_deferred: u64,
+    dtn_overflow_to_funnel: u64,
+    routed_per_dtn: Vec<u64>,
+    bytes_per_dtn: Vec<u64>,
+    dtn_failed_count: u64,
+    dtn_recovered_count: u64,
 }
 
 /// A pool-level router over per-submit-node [`ShadowPool`]s. See the
@@ -188,59 +250,24 @@ pub struct PoolRouter {
     /// Deficit counters for weighted-by-capacity routing.
     credit: Vec<f64>,
     failed: Vec<bool>,
-    /// Data-source plan: where admitted transfers' bytes are served
-    /// from (default: the scheduling node's own funnel).
-    plan: SourcePlan,
-    /// Per-DTN down flags (empty with no DTN fleet).
-    dtn_down: Vec<bool>,
-    /// Relative NIC budget per DTN (informational; selection is
-    /// round-robin over the live fleet).
-    dtn_capacity: Vec<f64>,
-    /// As-built DTN budgets, restored by [`PoolRouter::recover_dtn`].
-    dtn_nominal: Vec<f64>,
-    /// Round-robin cursor over the DTN fleet (deterministic selection).
-    /// The cursor survives fleet churn: it advances only when the
-    /// rotation actually picks a data node, so funnel failovers and
-    /// small-sandbox hybrid placements never skew it.
-    dtn_cursor: usize,
-    /// Which-DTN selection strategy (see [`SourceSelector`]).
-    selector: SourceSelector,
-    /// Per-DTN admission budget: max concurrent transfers one data node
-    /// serves (0 = unlimited — data nodes admit whatever the schedule
-    /// node admitted, the pre-budget behavior).
-    dtn_slots: u32,
-    /// Placed (not yet completed or re-sourced) transfers per DTN — the
-    /// fleet's admission-slot bookkeeping.
-    dtn_active: Vec<u32>,
-    /// Owner → pinned data node (owner-affinity selection). A killed
-    /// DTN's pins are dropped so its owners re-pin, stably, on the live
-    /// fleet.
-    dtn_pin: HashMap<String, usize>,
-    /// Extents hot on each data node (cache-aware selection). Seeded by
-    /// the fabric, grown by serving, cleared by a kill — a crashed
-    /// node's page cache dies with it.
-    dtn_residency: Vec<HashSet<ExtentId>>,
-    /// Deficit counters for weighted-by-capacity selection.
-    dtn_credit: Vec<f64>,
-    dtn_deferred: u64,
-    dtn_overflow_to_funnel: u64,
-    /// Data source of every admitted, not-yet-completed ticket.
-    source_of: HashMap<u32, DataSource>,
-    routed_per_dtn: Vec<u64>,
-    bytes_per_dtn: Vec<u64>,
-    dtn_failed_count: u64,
-    dtn_recovered_count: u64,
+    /// Cached live-node list (ascending), rebuilt on fail/recover so
+    /// the hot path never allocates a per-decision filter.
+    live_nodes: Vec<usize>,
+    /// Cached per-node active counts and their pool-wide total, so
+    /// per-admission peak tracking is O(1) instead of O(nodes).
+    active_cache: Vec<u32>,
+    active_total: u32,
+    /// Data-source selection state (the byte-endpoint plane).
+    sel: SourceSel,
+    /// Sharded ticket maps and owner pins, shared read-side with the
+    /// fabric via [`PoolRouter::state_handle`].
+    state: RouterState,
     /// Recovery hysteresis: decisions a recovered node's routing weight
     /// takes to ramp back to full (0 = step-restore, the default).
     ramp_decisions: u32,
     /// Remaining ramp decisions per node (counts down on every routing
     /// decision; a node at 0 routes at full weight).
     ramp_left: Vec<u32>,
-    /// Submit node of every in-router (waiting or active) ticket.
-    node_of: HashMap<u32, usize>,
-    /// Request bodies of in-router tickets, kept so a node failure can
-    /// re-route its whole backlog — waiting AND in-flight.
-    requests: HashMap<u32, TransferRequest>,
     /// Requests held because every node has failed.
     stranded: VecDeque<TransferRequest>,
     routed_per_node: Vec<u64>,
@@ -266,13 +293,312 @@ impl std::fmt::Debug for PoolRouter {
         f.debug_struct("PoolRouter")
             .field("nodes", &self.nodes.len())
             .field("policy", &self.policy)
+            .field("state_shards", &self.state.shard_count())
             .field("active", &self.active())
             .field("waiting", &self.waiting())
             .field("failed", &self.failed.iter().filter(|&&x| x).count())
             .finish()
     }
 }
+impl SourceSel {
+    fn empty() -> SourceSel {
+        SourceSel {
+            plan: SourcePlan::SubmitFunnel,
+            selector: SourceSelector::RoundRobin,
+            dtn_down: Vec::new(),
+            dtn_live: Vec::new(),
+            dtn_capacity: Vec::new(),
+            dtn_nominal: Vec::new(),
+            dtn_cursor: 0,
+            dtn_slots: 0,
+            dtn_active: Vec::new(),
+            dtn_residency: Vec::new(),
+            extent_home: HashMap::new(),
+            dtn_credit: Vec::new(),
+            queue_depth: 0,
+            waitq: Vec::new(),
+            dtn_queued: 0,
+            dtn_deferred: 0,
+            dtn_overflow_to_funnel: 0,
+            routed_per_dtn: Vec::new(),
+            bytes_per_dtn: Vec::new(),
+            dtn_failed_count: 0,
+            dtn_recovered_count: 0,
+        }
+    }
 
+    fn configure_fleet(&mut self, plan: SourcePlan, dtn_capacity: Vec<f64>) {
+        let n = dtn_capacity.len();
+        self.plan = plan;
+        self.dtn_nominal = dtn_capacity.clone();
+        self.dtn_capacity = dtn_capacity;
+        self.dtn_down = vec![false; n];
+        self.dtn_live = (0..n).collect();
+        self.dtn_active = vec![0; n];
+        self.dtn_residency = vec![HashSet::new(); n];
+        self.extent_home = HashMap::new();
+        self.dtn_credit = vec![0.0; n];
+        self.waitq = vec![VecDeque::new(); n];
+        self.routed_per_dtn = vec![0; n];
+        self.bytes_per_dtn = vec![0; n];
+    }
+
+    fn dtn_count(&self) -> usize {
+        self.dtn_down.len()
+    }
+
+    fn rebuild_live(&mut self) {
+        self.dtn_live = (0..self.dtn_down.len())
+            .filter(|&d| !self.dtn_down[d])
+            .collect();
+    }
+
+    /// Does data node `d` have a free admission slot?
+    fn has_slot(&self, d: usize) -> bool {
+        self.dtn_slots == 0 || self.dtn_active[d] < self.dtn_slots
+    }
+
+    /// Next live data node in rotation, advancing the cursor past the
+    /// pick. Caller guarantees at least one live DTN.
+    fn rr_preferred(&mut self) -> usize {
+        loop {
+            let d = self.dtn_cursor % self.dtn_down.len();
+            self.dtn_cursor += 1;
+            if !self.dtn_down[d] {
+                return d;
+            }
+        }
+    }
+
+    /// Pick the data source for one admitted transfer: the plan decides
+    /// funnel-vs-fleet (`Hybrid` compares `bytes >= threshold`), the
+    /// selector places the transfer within the live fleet, and per-DTN
+    /// admission budgets push back on saturated nodes — first deferring
+    /// to a peer with a free slot, then (with `DTN_QUEUE_DEPTH > 0`)
+    /// queueing on a DTN with wait-queue room, and only then
+    /// overflowing to the funnel. Deterministic for every selector; an
+    /// all-dead fleet fails over to the funnel WITHOUT advancing the
+    /// rotation cursor, so the rotation resumes exactly where it left
+    /// off after recovery. Owner pins live in the sharded `state` (the
+    /// pin-shard lock nests inside the caller's ticket-shard lock; see
+    /// `mover::state` for the lock order).
+    fn select(
+        &mut self,
+        state: &RouterState,
+        bytes: u64,
+        owner: &str,
+        extent: Option<ExtentId>,
+    ) -> Placement {
+        let via_dtn = match self.plan {
+            SourcePlan::SubmitFunnel => false,
+            SourcePlan::DedicatedDtn => true,
+            SourcePlan::Hybrid { threshold } => bytes >= threshold,
+        };
+        if !via_dtn || self.dtn_live.is_empty() {
+            return Placement::Funnel;
+        }
+        // Snapshot the rotation cursor: if this transfer ends up on the
+        // funnel after all (budget overflow below), the cursor is
+        // restored — only an actual DTN placement may advance it.
+        let cursor_before = self.dtn_cursor;
+        let preferred = match self.selector {
+            SourceSelector::RoundRobin => self.rr_preferred(),
+            SourceSelector::CacheAware => {
+                // The lowest-indexed live DTN holding the extent hot
+                // (one ascending probe of the extent→DTN index); an
+                // extent nobody holds takes the rotation, which makes
+                // its first server its sticky home (serving warms it).
+                let hit = extent.and_then(|e| {
+                    self.extent_home
+                        .get(&e)
+                        .and_then(|homes| homes.iter().copied().find(|&d| !self.dtn_down[d]))
+                });
+                match hit {
+                    Some(d) => d,
+                    None => self.rr_preferred(),
+                }
+            }
+            SourceSelector::OwnerAffinity => match state.pin_of(owner) {
+                Some(d) if !self.dtn_down[d] => d,
+                _ => {
+                    // First sighting, or the pinned DTN died: (re-)pin by
+                    // the stable owner hash over the live fleet. The new
+                    // pin sticks even after the old node recovers — no
+                    // flap-back.
+                    let d = self.dtn_live[(owner_hash(owner) % self.dtn_live.len() as u64) as usize];
+                    state.set_pin(owner, d);
+                    d
+                }
+            },
+            SourceSelector::WeightedByCapacity => {
+                // Deficit round-robin over the live fleet, mirroring the
+                // node-routing algorithm one layer up; chaos re-rates
+                // (`set_dtn_capacity`) shift the split mid-run.
+                let total: f64 = self.dtn_live.iter().map(|&d| self.dtn_capacity[d]).sum();
+                if total > 0.0 {
+                    let SourceSel {
+                        dtn_live,
+                        dtn_credit,
+                        dtn_capacity,
+                        ..
+                    } = self;
+                    for &d in dtn_live.iter() {
+                        dtn_credit[d] += dtn_capacity[d] / total;
+                    }
+                }
+                *self
+                    .dtn_live
+                    .iter()
+                    .max_by(|&&a, &&b| {
+                        self.dtn_credit[a]
+                            .partial_cmp(&self.dtn_credit[b])
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(b.cmp(&a)) // ties → lowest index
+                    })
+                    .expect("live is non-empty")
+            }
+        };
+        let chosen = if self.has_slot(preferred) {
+            Some((preferred, false))
+        } else {
+            // The preferred data node's admission budget is full: it
+            // pushes back, and the transfer defers to the next live DTN
+            // (scanning from the preferred node, so deferrals spread).
+            self.dtn_deferred += 1;
+            let n = self.dtn_down.len();
+            match (1..n)
+                .map(|k| (preferred + k) % n)
+                .find(|&d| !self.dtn_down[d] && self.has_slot(d))
+            {
+                Some(d) => Some((d, false)),
+                None if self.queue_depth > 0 => {
+                    // Every live DTN is at budget, but wait queues are
+                    // on: the transfer queues (scanning from the
+                    // preferred node) instead of overflowing, and is
+                    // promoted into the next freed slot on release.
+                    (0..n)
+                        .map(|k| (preferred + k) % n)
+                        .find(|&d| {
+                            !self.dtn_down[d] && (self.waitq[d].len() as u32) < self.queue_depth
+                        })
+                        .map(|d| (d, true))
+                }
+                None => None,
+            }
+        };
+        match chosen {
+            Some((d, queued)) => {
+                if self.selector == SourceSelector::WeightedByCapacity {
+                    self.dtn_credit[d] -= 1.0;
+                }
+                Placement::Dtn { dtn: d, queued }
+            }
+            None => {
+                // Every live DTN is at its budget AND (if enabled) its
+                // wait queue is full: the fleet as a whole pushes back
+                // and the bytes overflow to the scheduling node's
+                // funnel (whose own admission already gated this
+                // transfer). No DTN was picked, so the rotation cursor
+                // rewinds — funnel placements never skew the rotation.
+                self.dtn_overflow_to_funnel += 1;
+                self.dtn_cursor = cursor_before;
+                Placement::Funnel
+            }
+        }
+    }
+
+    /// Account a placement chosen by [`SourceSel::select`]: serving
+    /// counters, the admission slot (or wait-queue entry), and the
+    /// serve-warms-it residency note.
+    fn place(&mut self, ticket: u32, dtn: usize, bytes: u64, extent: Option<ExtentId>, queued: bool) {
+        self.routed_per_dtn[dtn] += 1;
+        self.bytes_per_dtn[dtn] += bytes;
+        if queued {
+            self.waitq[dtn].push_back(ticket);
+            self.dtn_queued += 1;
+        } else {
+            self.dtn_active[dtn] += 1;
+        }
+        // Serving the extent warms it on the chosen node (the sim
+        // later re-syncs this from storage truth; the real fabric's
+        // file servers share one dataset, so the note stands).
+        if let Some(e) = extent {
+            self.note_resident(dtn, e);
+        }
+    }
+
+    /// Release a ticket's DTN placement: a still-queued ticket just
+    /// frees its wait-queue entry; a slot holder frees the slot, which
+    /// immediately promotes the longest-queued waiter into it.
+    fn release_dtn(&mut self, ticket: u32, dtn: usize) {
+        if let Some(q) = self.waitq.get_mut(dtn) {
+            if let Some(pos) = q.iter().position(|&t| t == ticket) {
+                q.remove(pos);
+                return;
+            }
+        }
+        self.dtn_active[dtn] = self.dtn_active[dtn].saturating_sub(1);
+        if let Some(q) = self.waitq.get_mut(dtn) {
+            if q.pop_front().is_some() {
+                // The promoted ticket now holds the freed slot; its
+                // placement (and source bookkeeping) is unchanged.
+                self.dtn_active[dtn] += 1;
+            }
+        }
+    }
+
+    /// Mark one extent hot on a data node, maintaining the inverse
+    /// extent→DTN index alongside the residency set.
+    fn note_resident(&mut self, dtn: usize, extent: ExtentId) {
+        if self.dtn_residency[dtn].insert(extent) {
+            self.extent_home.entry(extent).or_default().insert(dtn);
+        }
+    }
+
+    fn unindex(extent_home: &mut HashMap<ExtentId, BTreeSet<usize>>, e: &ExtentId, dtn: usize) {
+        if let Some(homes) = extent_home.get_mut(e) {
+            homes.remove(&dtn);
+            if homes.is_empty() {
+                extent_home.remove(e);
+            }
+        }
+    }
+
+    /// Drop a dead node's whole residency (its page cache died),
+    /// scrubbing the extent→DTN index with it.
+    fn clear_residency(&mut self, dtn: usize) {
+        let SourceSel {
+            dtn_residency,
+            extent_home,
+            ..
+        } = self;
+        for e in dtn_residency[dtn].drain() {
+            SourceSel::unindex(extent_home, &e, dtn);
+        }
+    }
+
+    /// Replace a data node's residency view wholesale, diffing against
+    /// the old view so the extent→DTN index stays exact.
+    fn set_residency(&mut self, dtn: usize, extents: &[ExtentId]) {
+        let new: HashSet<ExtentId> = extents.iter().copied().collect();
+        let SourceSel {
+            dtn_residency,
+            extent_home,
+            ..
+        } = self;
+        for e in dtn_residency[dtn].iter() {
+            if !new.contains(e) {
+                SourceSel::unindex(extent_home, e, dtn);
+            }
+        }
+        for e in new.iter() {
+            if !dtn_residency[dtn].contains(e) {
+                extent_home.entry(*e).or_default().insert(dtn);
+            }
+        }
+        dtn_residency[dtn] = new;
+    }
+}
 impl PoolRouter {
     /// A router over the given per-node pools with explicit NIC budgets
     /// (`capacity` must match `nodes` in length; values are relative).
@@ -280,6 +606,8 @@ impl PoolRouter {
         assert!(!nodes.is_empty(), "router needs at least one node");
         assert_eq!(nodes.len(), capacity.len(), "one capacity per node");
         let n = nodes.len();
+        let active_cache: Vec<u32> = nodes.iter().map(|p| p.active()).collect();
+        let active_total = active_cache.iter().sum();
         PoolRouter {
             nodes,
             nominal_capacity: capacity.clone(),
@@ -288,28 +616,13 @@ impl PoolRouter {
             rr_cursor: 0,
             credit: vec![0.0; n],
             failed: vec![false; n],
-            plan: SourcePlan::SubmitFunnel,
-            dtn_down: Vec::new(),
-            dtn_capacity: Vec::new(),
-            dtn_nominal: Vec::new(),
-            dtn_cursor: 0,
-            selector: SourceSelector::RoundRobin,
-            dtn_slots: 0,
-            dtn_active: Vec::new(),
-            dtn_pin: HashMap::new(),
-            dtn_residency: Vec::new(),
-            dtn_credit: Vec::new(),
-            dtn_deferred: 0,
-            dtn_overflow_to_funnel: 0,
-            source_of: HashMap::new(),
-            routed_per_dtn: Vec::new(),
-            bytes_per_dtn: Vec::new(),
-            dtn_failed_count: 0,
-            dtn_recovered_count: 0,
+            live_nodes: (0..n).collect(),
+            active_cache,
+            active_total,
+            sel: SourceSel::empty(),
+            state: RouterState::new(DEFAULT_ROUTER_SHARDS, n),
             ramp_decisions: 0,
             ramp_left: vec![0; n],
-            node_of: HashMap::new(),
-            requests: HashMap::new(),
             stranded: VecDeque::new(),
             routed_per_node: vec![0; n],
             bytes_per_node: vec![0; n],
@@ -357,22 +670,15 @@ impl PoolRouter {
     /// that needs DTNs).
     pub fn with_source_plan(mut self, plan: SourcePlan, dtn_capacity: Vec<f64>) -> PoolRouter {
         let n = dtn_capacity.len();
-        self.plan = plan;
-        self.dtn_nominal = dtn_capacity.clone();
-        self.dtn_capacity = dtn_capacity;
-        self.dtn_down = vec![false; n];
-        self.dtn_active = vec![0; n];
-        self.dtn_residency = vec![HashSet::new(); n];
-        self.dtn_credit = vec![0.0; n];
-        self.routed_per_dtn = vec![0; n];
-        self.bytes_per_dtn = vec![0; n];
+        self.sel.configure_fleet(plan, dtn_capacity);
+        self.state.set_dtn_count(n);
         self
     }
 
     /// Pick the which-DTN selection strategy (builder style; the default
     /// is the deterministic round-robin rotation).
     pub fn with_source_selector(mut self, selector: SourceSelector) -> PoolRouter {
-        self.selector = selector;
+        self.sel.selector = selector;
         self
     }
 
@@ -381,9 +687,31 @@ impl PoolRouter {
     /// DTN pushes back: the selector defers the transfer to a peer with
     /// a free slot ([`MoverStats::dtn_deferred`]) and overflows to the
     /// scheduling node's funnel when the whole fleet is full
-    /// ([`MoverStats::dtn_overflow_to_funnel`]).
+    /// ([`MoverStats::dtn_overflow_to_funnel`]) — unless per-DTN wait
+    /// queues are enabled ([`PoolRouter::with_dtn_queue`]).
     pub fn with_dtn_budget(mut self, slots: u32) -> PoolRouter {
-        self.dtn_slots = slots;
+        self.sel.dtn_slots = slots;
+        self
+    }
+
+    /// Bound each data node's wait queue at `depth` tickets (builder
+    /// style; 0 — the default — disables queueing). With queues on, a
+    /// budget-full fleet queues transfers ([`MoverStats::dtn_queued`])
+    /// instead of overflowing to the funnel; each queued ticket is
+    /// promoted into the next slot freed on that DTN by
+    /// `release_source`, and the funnel remains the overflow of last
+    /// resort once every queue is full too.
+    pub fn with_dtn_queue(mut self, depth: u32) -> PoolRouter {
+        self.sel.queue_depth = depth;
+        self
+    }
+
+    /// Re-shard the router's ticket/owner state into `shards` lock
+    /// shards (builder style; must run before any request enters the
+    /// router). Sharding is pure partitioning: decisions are
+    /// byte-identical for every shard count (`ROUTER_SHARDS` knob).
+    pub fn with_state_shards(mut self, shards: usize) -> PoolRouter {
+        self.state.set_shards(shards);
         self
     }
 
@@ -395,220 +723,112 @@ impl PoolRouter {
         self.ramp_decisions = decisions;
     }
 
+    /// A read-side handle onto this router's sharded state: fabric
+    /// workers answer `node_of`/`source_of`/liveness probes through it
+    /// by locking one state shard, instead of serializing on the gate
+    /// mutex wrapping the whole router.
+    pub fn state_handle(&self) -> RouterStateHandle {
+        self.state.handle()
+    }
+
+    /// Number of state shards (the `ROUTER_SHARDS` knob).
+    pub fn state_shards(&self) -> usize {
+        self.state.shard_count()
+    }
+
     /// The data-source plan this router places bytes with.
     pub fn source_plan(&self) -> SourcePlan {
-        self.plan
+        self.sel.plan
     }
 
     /// The which-DTN selection strategy this router places bytes with.
     pub fn source_selector(&self) -> SourceSelector {
-        self.selector
+        self.sel.selector
     }
 
     /// Per-DTN admission budget (0 = unlimited).
     pub fn dtn_budget(&self) -> u32 {
-        self.dtn_slots
+        self.sel.dtn_slots
+    }
+
+    /// Per-DTN wait-queue depth (0 = queueing disabled).
+    pub fn dtn_queue_depth(&self) -> u32 {
+        self.sel.queue_depth
     }
 
     /// Data-transfer-node fleet size (0 = funnel-only pool).
     pub fn dtn_count(&self) -> usize {
-        self.dtn_down.len()
+        self.sel.dtn_count()
     }
 
     pub fn is_dtn_failed(&self, dtn: usize) -> bool {
-        self.dtn_down[dtn]
+        self.sel.dtn_down[dtn]
     }
 
     /// Currently placed (admission-slot-holding) transfers per DTN.
     pub fn dtn_active_per_node(&self) -> Vec<u32> {
-        self.dtn_active.clone()
+        self.sel.dtn_active.clone()
+    }
+
+    /// Tickets currently sitting in each DTN's wait queue.
+    pub fn dtn_queued_per_node(&self) -> Vec<usize> {
+        self.sel.waitq.iter().map(|q| q.len()).collect()
     }
 
     /// The data node an owner's sandboxes are pinned to (owner-affinity
     /// selection; `None` until the owner's first DTN placement).
     pub fn dtn_pin_of(&self, owner: &str) -> Option<usize> {
-        self.dtn_pin.get(owner).copied()
+        self.state.pin_of(owner)
     }
 
     /// Mark one extent hot on a data node (cache-aware selection; the
     /// fabric seeds pre-warmed extents through this).
     pub fn note_extent_resident(&mut self, dtn: usize, extent: ExtentId) {
-        self.dtn_residency[dtn].insert(extent);
+        self.sel.note_resident(dtn, extent);
     }
 
     /// Replace a data node's residency view wholesale (the sim re-syncs
     /// it from the node's `storage::Storage` truth after every read, so
     /// evictions are reflected).
     pub fn set_dtn_residency(&mut self, dtn: usize, extents: &[ExtentId]) {
-        self.dtn_residency[dtn] = extents.iter().copied().collect();
+        self.sel.set_residency(dtn, extents);
     }
 
     /// Data source of an admitted, not-yet-completed ticket.
     pub fn source_of(&self, ticket: u32) -> Option<DataSource> {
-        self.source_of.get(&ticket).copied()
-    }
-
-    /// Does data node `d` have a free admission slot?
-    fn dtn_has_slot(&self, d: usize) -> bool {
-        self.dtn_slots == 0 || self.dtn_active[d] < self.dtn_slots
-    }
-
-    /// Next live data node in rotation, advancing the cursor past the
-    /// pick. Caller guarantees at least one live DTN.
-    fn rr_preferred(&mut self) -> usize {
-        loop {
-            let d = self.dtn_cursor % self.dtn_down.len();
-            self.dtn_cursor += 1;
-            if !self.dtn_down[d] {
-                return d;
-            }
-        }
-    }
-
-    /// Pick the data source for one admitted transfer: the plan decides
-    /// funnel-vs-fleet (`Hybrid` compares `bytes >= threshold`), the
-    /// selector places the transfer within the live fleet, and per-DTN
-    /// admission budgets push back on saturated nodes. Deterministic
-    /// for every selector; an all-dead fleet fails over to `node`'s
-    /// funnel WITHOUT advancing the rotation cursor, so the rotation
-    /// resumes exactly where it left off after recovery.
-    fn select_source(
-        &mut self,
-        bytes: u64,
-        owner: &str,
-        extent: Option<ExtentId>,
-        node: usize,
-    ) -> DataSource {
-        let via_dtn = match self.plan {
-            SourcePlan::SubmitFunnel => false,
-            SourcePlan::DedicatedDtn => true,
-            SourcePlan::Hybrid { threshold } => bytes >= threshold,
-        };
-        if !via_dtn {
-            return DataSource::Funnel { node };
-        }
-        let live: Vec<usize> = (0..self.dtn_down.len())
-            .filter(|&d| !self.dtn_down[d])
-            .collect();
-        if live.is_empty() {
-            return DataSource::Funnel { node };
-        }
-        // Snapshot the rotation cursor: if this transfer ends up on the
-        // funnel after all (budget overflow below), the cursor is
-        // restored — only an actual DTN placement may advance it.
-        let cursor_before = self.dtn_cursor;
-        let preferred = match self.selector {
-            SourceSelector::RoundRobin => self.rr_preferred(),
-            SourceSelector::CacheAware => {
-                // The lowest-indexed live DTN holding the extent hot; an
-                // extent nobody holds takes the rotation, which makes
-                // its first server its sticky home (serving warms it).
-                let hit = extent.and_then(|e| {
-                    live.iter()
-                        .copied()
-                        .find(|&d| self.dtn_residency[d].contains(&e))
-                });
-                match hit {
-                    Some(d) => d,
-                    None => self.rr_preferred(),
-                }
-            }
-            SourceSelector::OwnerAffinity => match self.dtn_pin.get(owner).copied() {
-                Some(d) if !self.dtn_down[d] => d,
-                _ => {
-                    // First sighting, or the pinned DTN died: (re-)pin by
-                    // the stable owner hash over the live fleet. The new
-                    // pin sticks even after the old node recovers — no
-                    // flap-back.
-                    let d = live[(owner_hash(owner) % live.len() as u64) as usize];
-                    self.dtn_pin.insert(owner.to_string(), d);
-                    d
-                }
-            },
-            SourceSelector::WeightedByCapacity => {
-                // Deficit round-robin over the live fleet, mirroring the
-                // node-routing algorithm one layer up; chaos re-rates
-                // (`set_dtn_capacity`) shift the split mid-run.
-                let total: f64 = live.iter().map(|&d| self.dtn_capacity[d]).sum();
-                if total > 0.0 {
-                    for &d in &live {
-                        self.dtn_credit[d] += self.dtn_capacity[d] / total;
-                    }
-                }
-                *live
-                    .iter()
-                    .max_by(|&&a, &&b| {
-                        self.dtn_credit[a]
-                            .partial_cmp(&self.dtn_credit[b])
-                            .unwrap_or(std::cmp::Ordering::Equal)
-                            .then(b.cmp(&a)) // ties → lowest index
-                    })
-                    .expect("live is non-empty")
-            }
-        };
-        let chosen = if self.dtn_has_slot(preferred) {
-            Some(preferred)
-        } else {
-            // The preferred data node's admission budget is full: it
-            // pushes back, and the transfer defers to the next live DTN
-            // (scanning from the preferred node, so deferrals spread).
-            self.dtn_deferred += 1;
-            let n = self.dtn_down.len();
-            (1..n)
-                .map(|k| (preferred + k) % n)
-                .find(|&d| !self.dtn_down[d] && self.dtn_has_slot(d))
-        };
-        match chosen {
-            Some(d) => {
-                if self.selector == SourceSelector::WeightedByCapacity {
-                    self.dtn_credit[d] -= 1.0;
-                }
-                DataSource::Dtn { dtn: d }
-            }
-            None => {
-                // Every live DTN is at its budget: the fleet as a whole
-                // pushes back and the bytes overflow to the scheduling
-                // node's funnel (whose own admission already gated this
-                // transfer). No DTN was picked, so the rotation cursor
-                // rewinds — funnel placements never skew the rotation.
-                self.dtn_overflow_to_funnel += 1;
-                self.dtn_cursor = cursor_before;
-                DataSource::Funnel { node }
-            }
-        }
+        self.state.source_of(ticket)
     }
 
     /// Drop a ticket's data-source placement (completion, node failure,
     /// or the re-source half of a DTN failure), releasing its DTN
-    /// admission slot.
+    /// admission slot (or wait-queue entry).
     fn release_source(&mut self, ticket: u32) {
-        if let Some(DataSource::Dtn { dtn }) = self.source_of.remove(&ticket) {
-            self.dtn_active[dtn] = self.dtn_active[dtn].saturating_sub(1);
+        if let Some(DataSource::Dtn { dtn }) = self.state.remove_source(ticket) {
+            self.sel.release_dtn(ticket, dtn);
         }
     }
 
     /// Assign (and account) the data source of a freshly admitted
     /// ticket. A re-source first releases the ticket's previous
-    /// placement so per-DTN admission slots can't leak.
+    /// placement so per-DTN admission slots can't leak. The request
+    /// body is read in place under its shard lock — no owner-string
+    /// clone per decision.
     fn assign_source(&mut self, ticket: u32, node: usize) -> DataSource {
         self.release_source(ticket);
-        let (bytes, owner, extent) = match self.requests.get(&ticket) {
-            Some(r) => (r.bytes, r.owner.clone(), r.extent),
-            None => (0, String::new(), None),
-        };
-        let source = self.select_source(bytes, &owner, extent, node);
-        if let DataSource::Dtn { dtn } = source {
-            self.routed_per_dtn[dtn] += 1;
-            self.bytes_per_dtn[dtn] += bytes;
-            self.dtn_active[dtn] += 1;
-            // Serving the extent warms it on the chosen node (the sim
-            // later re-syncs this from storage truth; the real fabric's
-            // file servers share one dataset, so the note stands).
-            if let Some(e) = extent {
-                self.dtn_residency[dtn].insert(e);
+        let sel = &mut self.sel;
+        let state = &self.state;
+        let (placement, bytes, extent) = state.with_request(ticket, |req| match req {
+            Some(r) => (sel.select(state, r.bytes, &r.owner, r.extent), r.bytes, r.extent),
+            None => (sel.select(state, 0, "", None), 0, None),
+        });
+        let source = match placement {
+            Placement::Funnel => DataSource::Funnel { node },
+            Placement::Dtn { dtn, queued } => {
+                self.sel.place(ticket, dtn, bytes, extent, queued);
+                DataSource::Dtn { dtn }
             }
-        }
-        self.source_of.insert(ticket, source);
+        };
+        self.state.set_source(ticket, source);
         source
     }
 
@@ -617,8 +837,8 @@ impl PoolRouter {
     /// else `node`'s funnel.
     pub fn output_source(&self, preferred: DataSource, node: usize) -> DataSource {
         match preferred {
-            DataSource::Dtn { dtn } if self.dtn_down.get(dtn).copied().unwrap_or(true) => {
-                match self.dtn_down.iter().position(|&d| !d) {
+            DataSource::Dtn { dtn } if self.sel.dtn_down.get(dtn).copied().unwrap_or(true) => {
+                match self.sel.dtn_down.iter().position(|&d| !d) {
                     Some(live) => DataSource::Dtn { dtn: live },
                     None => DataSource::Funnel { node },
                 }
@@ -635,26 +855,22 @@ impl PoolRouter {
     /// transfer against the new source) and is returned so the fabric
     /// can re-drive it. Idempotent per DTN.
     pub fn fail_dtn(&mut self, dtn: usize) -> Vec<Routed> {
-        if self.dtn_down[dtn] {
+        if self.sel.dtn_down[dtn] {
             return Vec::new();
         }
-        self.dtn_down[dtn] = true;
-        self.dtn_failed_count += 1;
+        self.sel.dtn_down[dtn] = true;
+        self.sel.dtn_failed_count += 1;
+        self.sel.rebuild_live();
+        self.state.set_dtn_down(dtn, true);
         // The node's page cache dies with it, and its pinned owners
         // re-pin (stably) onto the live fleet at their next placement —
         // which, for its in-flight transfers, is the re-source below.
-        self.dtn_residency[dtn].clear();
-        self.dtn_pin.retain(|_, &mut d| d != dtn);
-        let mut affected: Vec<u32> = self
-            .source_of
-            .iter()
-            .filter(|&(_, &s)| s == DataSource::Dtn { dtn })
-            .map(|(&t, _)| t)
-            .collect();
-        affected.sort_unstable(); // HashMap order is arbitrary; re-source deterministically
+        self.sel.clear_residency(dtn);
+        self.state.drop_pins_to(dtn);
+        let affected = sorted_tickets(self.state.tickets_on_dtn(dtn));
         let mut out = Vec::new();
         for ticket in affected {
-            let Some(&node) = self.node_of.get(&ticket) else {
+            let Some(node) = self.state.node_of(ticket) else {
                 continue;
             };
             let Some(shard) = self.nodes[node].shard_of(ticket) else {
@@ -677,20 +893,22 @@ impl PoolRouter {
     /// residency died with the crash). Nothing is re-driven (new
     /// admissions reach it via the selector). Idempotent.
     pub fn recover_dtn(&mut self, dtn: usize) {
-        self.dtn_capacity[dtn] = self.dtn_nominal[dtn];
-        if !self.dtn_down[dtn] {
+        self.sel.dtn_capacity[dtn] = self.sel.dtn_nominal[dtn];
+        if !self.sel.dtn_down[dtn] {
             return;
         }
-        self.dtn_down[dtn] = false;
-        self.dtn_credit[dtn] = 0.0;
-        self.dtn_recovered_count += 1;
+        self.sel.dtn_down[dtn] = false;
+        self.sel.dtn_credit[dtn] = 0.0;
+        self.sel.dtn_recovered_count += 1;
+        self.sel.rebuild_live();
+        self.state.set_dtn_down(dtn, false);
     }
 
     /// Re-rate a data node's relative NIC budget (fault injection).
     /// The weighted-by-capacity selector tracks the new budget on its
     /// next deposit; the other selectors ignore capacity.
     pub fn set_dtn_capacity(&mut self, dtn: usize, capacity: f64) {
-        self.dtn_capacity[dtn] = capacity.max(0.0);
+        self.sel.dtn_capacity[dtn] = capacity.max(0.0);
     }
 
     /// Spawn per-shard engine services on every node that has none yet
@@ -734,7 +952,7 @@ impl PoolRouter {
 
     /// Submit node of an in-router (waiting or admitted) ticket.
     pub fn node_of(&self, ticket: u32) -> Option<usize> {
-        self.node_of.get(&ticket).copied()
+        self.state.node_of(ticket)
     }
 
     pub fn is_failed(&self, node: usize) -> bool {
@@ -753,28 +971,24 @@ impl PoolRouter {
         self.nodes[..node].iter().map(|n| n.shard_count()).sum()
     }
 
-    fn live_nodes(&self) -> Vec<usize> {
-        (0..self.nodes.len()).filter(|&i| !self.failed[i]).collect()
+    fn rebuild_live_nodes(&mut self) {
+        self.live_nodes = (0..self.nodes.len()).filter(|&i| !self.failed[i]).collect();
     }
 
-    /// A node's routing weight right now: its capacity scaled down while
-    /// the recovery ramp is still running (a node `k` decisions into an
-    /// `n`-decision ramp weighs `capacity * (k + 1) / (n + 1)`).
-    fn effective_capacity(&self, node: usize) -> f64 {
-        if self.ramp_decisions > 0 && self.ramp_left[node] > 0 {
-            let total = self.ramp_decisions as f64;
-            let done = (self.ramp_decisions - self.ramp_left[node]) as f64;
-            self.capacity[node] * (done + 1.0) / (total + 1.0)
-        } else {
-            self.capacity[node]
-        }
+    /// Re-read one node's active count into the O(1) pool-wide cache
+    /// (every request/complete on a node must be followed by this).
+    fn refresh_active(&mut self, node: usize) {
+        let a = self.nodes[node].active();
+        self.active_total = self.active_total - self.active_cache[node] + a;
+        self.active_cache[node] = a;
     }
-
+}
+impl PoolRouter {
     /// Pick the submit node for a request under the routing policy, or
-    /// `None` when every node has failed.
+    /// `None` when every node has failed. Allocation-free: the live
+    /// set is cached and rebuilt only on fail/recover.
     fn pick_node(&mut self, req: &TransferRequest) -> Option<usize> {
-        let live = self.live_nodes();
-        if live.is_empty() {
+        if self.live_nodes.is_empty() {
             return None;
         }
         // Every routing decision advances all running recovery ramps.
@@ -789,34 +1003,52 @@ impl PoolRouter {
                     break n;
                 }
             },
-            RouterPolicy::LeastLoaded => live
-                .into_iter()
+            RouterPolicy::LeastLoaded => self
+                .live_nodes
+                .iter()
+                .copied()
                 .min_by_key(|&i| (self.nodes[i].active(), self.nodes[i].waiting(), i))
                 .expect("live is non-empty"),
             RouterPolicy::OwnerAffinity => {
-                live[(owner_hash(&req.owner) % live.len() as u64) as usize]
+                self.live_nodes[(owner_hash(&req.owner) % self.live_nodes.len() as u64) as usize]
             }
             RouterPolicy::WeightedByCapacity => {
                 // Deficit round-robin: every request deposits one request's
                 // worth of credit, split proportionally to live capacity
-                // (ramping recovered nodes count at their reduced weight);
-                // the node deepest in credit serves it.
-                let total: f64 = live.iter().map(|&i| self.effective_capacity(i)).sum();
+                // (ramping recovered nodes count at their reduced weight —
+                // a node `k` decisions into an `n`-decision ramp weighs
+                // `capacity * (k + 1) / (n + 1)`); the node deepest in
+                // credit serves it.
+                let rd = self.ramp_decisions;
+                let capacity = &self.capacity;
+                let ramp_left = &self.ramp_left;
+                let live = &self.live_nodes;
+                let credit = &mut self.credit;
+                let eff = |i: usize| -> f64 {
+                    if rd > 0 && ramp_left[i] > 0 {
+                        let total = rd as f64;
+                        let done = (rd - ramp_left[i]) as f64;
+                        capacity[i] * (done + 1.0) / (total + 1.0)
+                    } else {
+                        capacity[i]
+                    }
+                };
+                let total: f64 = live.iter().map(|&i| eff(i)).sum();
                 if total > 0.0 {
-                    for &i in &live {
-                        self.credit[i] += self.effective_capacity(i) / total;
+                    for &i in live.iter() {
+                        credit[i] += eff(i) / total;
                     }
                 }
                 let &best = live
                     .iter()
                     .max_by(|&&a, &&b| {
-                        self.credit[a]
-                            .partial_cmp(&self.credit[b])
+                        credit[a]
+                            .partial_cmp(&credit[b])
                             .unwrap_or(std::cmp::Ordering::Equal)
                             .then(b.cmp(&a)) // ties → lowest index
                     })
                     .expect("live is non-empty");
-                self.credit[best] -= 1.0;
+                credit[best] -= 1.0;
                 best
             }
         })
@@ -826,7 +1058,7 @@ impl PoolRouter {
     fn route_to(&mut self, node: usize, req: TransferRequest) -> Vec<Routed> {
         self.routed_per_node[node] += 1;
         self.bytes_per_node[node] += req.bytes;
-        self.node_of.insert(req.ticket, node);
+        self.state.set_node(req.ticket, node);
         let admitted = self.nodes[node].request(req);
         self.after_op(node, admitted)
     }
@@ -844,15 +1076,15 @@ impl PoolRouter {
                 source,
             });
         }
-        let active: u32 = self.nodes.iter().map(|n| n.active()).sum();
-        self.peak_active = self.peak_active.max(active);
+        self.refresh_active(node);
+        self.peak_active = self.peak_active.max(self.active_total);
         out
     }
 
     /// Submit a transfer request; returns every transfer (possibly on a
     /// different node) admitted *now*.
     pub fn request(&mut self, req: TransferRequest) -> Vec<Routed> {
-        self.requests.insert(req.ticket, req.clone());
+        self.state.insert_request(&req);
         match self.pick_node(&req) {
             Some(node) => self.route_to(node, req),
             None => {
@@ -862,14 +1094,42 @@ impl PoolRouter {
         }
     }
 
+    /// One negotiator-style admission cycle: route a whole burst slice
+    /// through the router in one call, amortizing the fabric's gate
+    /// acquisition and the per-call bookkeeping across the batch.
+    /// Behaviorally identical to calling [`PoolRouter::request`] once
+    /// per element in order (a property `tests/props.rs` pins down) —
+    /// batching changes *where* the lock round-trips happen, never what
+    /// is decided.
+    pub fn route_batch(&mut self, reqs: Vec<TransferRequest>) -> Vec<Routed> {
+        let mut out = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            out.extend(self.request(req));
+        }
+        out
+    }
+
+    /// The completion half of an admission cycle: retire a slice of
+    /// tickets in one call. Equivalent to per-ticket
+    /// [`PoolRouter::complete`] calls in order.
+    pub fn complete_batch(&mut self, tickets: &[u32]) -> Vec<Routed> {
+        let mut out = Vec::new();
+        for &t in tickets {
+            out.extend(self.complete(t));
+        }
+        out
+    }
+
     /// A transfer finished (or failed); returns newly admitted transfers
     /// on that ticket's node. A complete for a STRANDED ticket (queued
     /// while every node was failed) cancels its entry — same
     /// no-ghost contract as the node queues' `cancelled_waiting` path.
     pub fn complete(&mut self, ticket: u32) -> Vec<Routed> {
-        self.requests.remove(&ticket);
-        self.release_source(ticket);
-        let Some(node) = self.node_of.remove(&ticket) else {
+        let (source, node) = self.state.scrub(ticket);
+        if let Some(DataSource::Dtn { dtn }) = source {
+            self.sel.release_dtn(ticket, dtn);
+        }
+        let Some(node) = node else {
             if let Some(pos) = self.stranded.iter().position(|r| r.ticket == ticket) {
                 self.stranded.remove(pos);
                 self.cancelled_stranded += 1;
@@ -892,34 +1152,32 @@ impl PoolRouter {
         }
         self.failed[node] = true;
         self.shard_failed += 1;
+        self.rebuild_live_nodes();
+        self.state.set_node_down(node, true);
 
         // Waiting requests leave the dead node's queue wholesale…
         let waiting = self.nodes[node].drain_waiting();
         for req in &waiting {
-            self.node_of.remove(&req.ticket);
+            self.state.remove_node(req.ticket);
         }
         // …and transfers in flight on the dead node are lost with it:
         // clear their bookkeeping there, then resubmit them elsewhere.
         // (After the waiting drain, tickets still mapped to this node are
-        // exactly the admitted ones.)
-        let mut inflight: Vec<u32> = self
-            .node_of
-            .iter()
-            .filter(|&(_, &n)| n == node)
-            .map(|(&t, _)| t)
-            .collect();
-        inflight.sort_unstable(); // HashMap order is arbitrary; re-route deterministically
+        // exactly the admitted ones; `sorted_tickets` makes the re-route
+        // order deterministic regardless of shard iteration order.)
+        let inflight = sorted_tickets(self.state.tickets_on_node(node));
         let mut to_reroute: Vec<TransferRequest> =
             Vec::with_capacity(inflight.len() + waiting.len());
         for t in inflight {
-            self.node_of.remove(&t);
+            self.state.remove_node(t);
             self.release_source(t); // a fresh source is chosen on re-admission
             let _ = self.nodes[node].complete(t); // queue already drained: admits nothing
-            if let Some(req) = self.requests.get(&t) {
+            if let Some(req) = self.state.request_clone(t) {
                 self.retried_after_fault += 1;
-                to_reroute.push(req.clone());
+                to_reroute.push(req);
             }
         }
+        self.refresh_active(node);
         to_reroute.extend(waiting);
 
         let mut out = Vec::new();
@@ -950,6 +1208,8 @@ impl PoolRouter {
         self.failed[node] = false;
         self.credit[node] = 0.0;
         self.node_recovered += 1;
+        self.rebuild_live_nodes();
+        self.state.set_node_down(node, false);
         // Hysteresis: re-enter weighted routing at reduced weight and
         // ramp back over the configured number of decisions.
         self.ramp_left[node] = self.ramp_decisions;
@@ -964,42 +1224,61 @@ impl PoolRouter {
         out
     }
 
-    /// Threshold-triggered work-stealing: while some live node's waiting
-    /// queue is more than `threshold` longer than the shortest live
-    /// queue (and moving a request would strictly shrink the gap), the
-    /// most recently queued request moves from the longest queue to the
-    /// shortest — so a recovered or idle node absorbs the survivors'
-    /// backlog. Moves count in [`MoverStats::stolen`]; returns the
-    /// transfers target nodes admitted NOW.
+    /// Threshold-triggered work-stealing, batched negotiator-style:
+    /// each cycle computes ONE steal plan against a projection of the
+    /// live queue lengths — move the most recently queued request from
+    /// the (projected) longest queue to the (projected) shortest while
+    /// the gap exceeds `threshold` (and moving strictly shrinks it) —
+    /// then executes the whole plan in a single pass. Because a steal
+    /// landing on an idle node may be admitted instead of queued, the
+    /// cycle repeats until a plan comes up empty, so the final
+    /// max/min waiting-queue gap meets the same criterion the old
+    /// per-transfer loop enforced. Moves count in
+    /// [`MoverStats::stolen`]; returns the transfers target nodes
+    /// admitted NOW.
     pub fn rebalance(&mut self, threshold: usize) -> Vec<Routed> {
         let mut out = Vec::new();
+        if self.live_nodes.len() < 2 {
+            return out;
+        }
         loop {
-            let live = self.live_nodes();
-            if live.len() < 2 {
-                return out;
-            }
-            let mut hi = live[0];
-            let mut lo = live[0];
-            for &i in &live {
-                if self.nodes[i].waiting() > self.nodes[hi].waiting() {
-                    hi = i;
+            // Plan one cycle's steals on projected queue lengths…
+            let mut lens: Vec<usize> = self.nodes.iter().map(|n| n.waiting()).collect();
+            let mut moves: Vec<(usize, usize)> = Vec::new();
+            loop {
+                let mut hi = self.live_nodes[0];
+                let mut lo = self.live_nodes[0];
+                for &i in &self.live_nodes {
+                    if lens[i] > lens[hi] {
+                        hi = i;
+                    }
+                    if lens[i] < lens[lo] {
+                        lo = i;
+                    }
                 }
-                if self.nodes[i].waiting() < self.nodes[lo].waiting() {
-                    lo = i;
+                let gap = lens[hi] - lens[lo];
+                // gap >= 2 also guards the ping-pong a zero threshold
+                // would otherwise loop on (moving across a gap of 1
+                // just swaps it).
+                if gap <= threshold || gap < 2 {
+                    break;
                 }
+                lens[hi] -= 1;
+                lens[lo] += 1;
+                moves.push((hi, lo));
             }
-            let gap = self.nodes[hi].waiting() - self.nodes[lo].waiting();
-            // gap >= 2 also guards the ping-pong a zero threshold would
-            // otherwise loop on (moving across a gap of 1 just swaps it).
-            if gap <= threshold || gap < 2 {
+            if moves.is_empty() {
                 return out;
             }
-            let Some(req) = self.nodes[hi].steal_waiting() else {
-                return out;
-            };
-            self.stolen += 1;
-            self.node_of.remove(&req.ticket);
-            out.extend(self.route_to(lo, req));
+            // …then execute the plan in one pass.
+            for (hi, lo) in moves {
+                let Some(req) = self.nodes[hi].steal_waiting() else {
+                    continue;
+                };
+                self.stolen += 1;
+                self.state.remove_node(req.ticket);
+                out.extend(self.route_to(lo, req));
+            }
         }
     }
 
@@ -1015,9 +1294,10 @@ impl PoolRouter {
         self.failed.iter().position(|&f| !f)
     }
 
-    /// Currently admitted (in-flight) transfers across all nodes.
+    /// Currently admitted (in-flight) transfers across all nodes
+    /// (cached; O(1)).
     pub fn active(&self) -> u32 {
-        self.nodes.iter().map(|n| n.active()).sum()
+        self.active_total
     }
 
     /// Requests waiting for admission (including stranded ones).
@@ -1039,10 +1319,10 @@ impl PoolRouter {
             bytes_per_node: self.bytes_per_node.clone(),
             shard_failed: self.shard_failed,
             stranded: self.stranded.len(),
-            routed_per_dtn: self.routed_per_dtn.clone(),
-            bytes_per_dtn: self.bytes_per_dtn.clone(),
-            dtn_failed: self.dtn_failed_count,
-            dtn_recovered: self.dtn_recovered_count,
+            routed_per_dtn: self.sel.routed_per_dtn.clone(),
+            bytes_per_dtn: self.sel.bytes_per_dtn.clone(),
+            dtn_failed: self.sel.dtn_failed_count,
+            dtn_recovered: self.sel.dtn_recovered_count,
         }
     }
 
@@ -1070,8 +1350,9 @@ impl PoolRouter {
             node_recovered: self.node_recovered,
             stolen: self.stolen,
             retried_after_fault: self.retried_after_fault,
-            dtn_deferred: self.dtn_deferred,
-            dtn_overflow_to_funnel: self.dtn_overflow_to_funnel,
+            dtn_deferred: self.sel.dtn_deferred,
+            dtn_overflow_to_funnel: self.sel.dtn_overflow_to_funnel,
+            dtn_queued: self.sel.dtn_queued,
         }
     }
 
@@ -1079,9 +1360,9 @@ impl PoolRouter {
         let sources = if self.dtn_count() > 0 {
             format!(
                 ", {} over {} dtn(s) by {}",
-                self.plan.label(),
+                self.sel.plan.label(),
                 self.dtn_count(),
-                self.selector.label()
+                self.sel.selector.label()
             )
         } else {
             String::new()
@@ -1147,7 +1428,6 @@ impl DataMover for PoolRouter {
         PoolRouter::describe(self)
     }
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1869,5 +2149,122 @@ mod tests {
         let st = router.router_stats();
         assert_eq!(st.routed_per_node[0] - 80, 50, "even split after restore");
         assert_eq!(st.routed_per_node[1] - 20, 50);
+    }
+
+    #[test]
+    fn dtn_wait_queue_holds_then_promotes() {
+        let mut router = rr_router(1)
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 2])
+            .with_dtn_budget(1)
+            .with_dtn_queue(1);
+        assert_eq!(router.dtn_queue_depth(), 1);
+        // t0/t1 take the two slots; t2/t3 queue (one per DTN); t4 finds
+        // every slot AND every queue full and overflows to the funnel.
+        for t in 0..4 {
+            let adm = router.request(r(t, "o", 10));
+            assert!(matches!(adm[0].source, DataSource::Dtn { .. }));
+        }
+        assert_eq!(router.dtn_active_per_node(), vec![1, 1]);
+        assert_eq!(router.dtn_queued_per_node(), vec![1, 1]);
+        let adm = router.request(r(4, "o", 10));
+        assert_eq!(adm[0].source, DataSource::Funnel { node: 0 });
+        let st = router.stats();
+        assert_eq!(st.dtn_queued, 2, "two tickets rode the wait queues");
+        assert_eq!(st.dtn_overflow_to_funnel, 1, "funnel only when queues full");
+        // Completing a slot holder promotes that DTN's queued ticket
+        // into the freed slot.
+        router.complete(0);
+        assert_eq!(router.dtn_active_per_node(), vec![1, 1]);
+        assert_eq!(router.dtn_queued_per_node(), vec![0, 1]);
+    }
+
+    #[test]
+    fn completing_queued_ticket_frees_queue_entry() {
+        let mut router = rr_router(1)
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 1])
+            .with_dtn_budget(1)
+            .with_dtn_queue(2);
+        for t in 0..3 {
+            router.request(r(t, "o", 10));
+        }
+        assert_eq!(router.dtn_active_per_node(), vec![1]);
+        assert_eq!(router.dtn_queued_per_node(), vec![2]);
+        // A queued ticket cancelled mid-wait must not free a slot…
+        router.complete(1);
+        assert_eq!(router.dtn_active_per_node(), vec![1]);
+        assert_eq!(router.dtn_queued_per_node(), vec![1]);
+        // …and the slot holder's completion promotes the survivor.
+        router.complete(0);
+        assert_eq!(router.dtn_active_per_node(), vec![1]);
+        assert_eq!(router.dtn_queued_per_node(), vec![0]);
+    }
+
+    #[test]
+    fn route_batch_matches_single_routing() {
+        let build = || {
+            PoolRouter::sim(
+                3,
+                2,
+                ThrottlePolicy::MaxConcurrent(2).into(),
+                RouterPolicy::LeastLoaded,
+            )
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 2])
+            .with_dtn_budget(2)
+        };
+        let reqs: Vec<TransferRequest> = (0..40)
+            .map(|t| r(t, ["a", "b", "c"][t as usize % 3], 10 + t as u64))
+            .collect();
+        let mut singles = build();
+        let mut one_by_one = Vec::new();
+        for req in reqs.clone() {
+            one_by_one.extend(singles.request(req));
+        }
+        let mut batched = build();
+        let cycle = batched.route_batch(reqs);
+        assert_eq!(cycle, one_by_one, "one cycle ≡ the same singles in order");
+        assert_eq!(batched.stats(), singles.stats());
+        let done: Vec<u32> = (0..40).collect();
+        let mut singles_out = Vec::new();
+        for &t in &done {
+            singles_out.extend(singles.complete(t));
+        }
+        assert_eq!(batched.complete_batch(&done), singles_out);
+        assert_eq!(batched.stats(), singles.stats());
+    }
+
+    #[test]
+    fn state_shards_do_not_change_decisions() {
+        let run = |shards: usize| {
+            let mut router = PoolRouter::sim(
+                4,
+                1,
+                ThrottlePolicy::MaxConcurrent(3).into(),
+                RouterPolicy::OwnerAffinity,
+            )
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 3])
+            .with_source_selector(SourceSelector::OwnerAffinity)
+            .with_state_shards(shards);
+            let mut out = Vec::new();
+            for t in 0..60 {
+                out.extend(router.request(r(t, &format!("u{}", t % 7), 10)));
+            }
+            out.extend(router.fail_node(1));
+            out.extend(router.fail_dtn(0));
+            for t in 0..30 {
+                out.extend(router.complete(t));
+            }
+            out.extend(router.recover_node(1));
+            router.recover_dtn(0);
+            for t in 60..90 {
+                out.extend(router.request(r(t, &format!("u{}", t % 7), 10)));
+            }
+            (out, router.stats())
+        };
+        let (routed_1, stats_1) = run(1);
+        for k in [2, 7, DEFAULT_ROUTER_SHARDS] {
+            let (routed_k, stats_k) = run(k);
+            assert_eq!(routed_k, routed_1, "sharding is pure partitioning (K={k})");
+            assert_eq!(stats_k, stats_1);
+        }
     }
 }

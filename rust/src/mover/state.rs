@@ -1,0 +1,376 @@
+//! Sharded, concurrently-readable router state.
+//!
+//! At million-owner scale the [`PoolRouter`](super::PoolRouter)'s
+//! per-ticket maps (`source_of`, `node_of`, `requests`) and its
+//! per-owner affinity pins (`dtn_pin`) dominate both memory traffic and
+//! lock hold time: on the real TCP fabric every worker that wants to
+//! know "which node serves my ticket?" had to take the *one* mutex
+//! wrapping the whole router. [`RouterState`] splits that state into K
+//! independently locked shards — ticket maps sharded by ticket, owner
+//! pins sharded by the stable FNV-1a owner hash — so
+//!
+//! * the router's own mutations touch exactly one ticket shard (and at
+//!   most one pin shard) per decision instead of one global map, and
+//! * the fabric's readers ([`RouterStateHandle`]) answer
+//!   `node_of`/`source_of`/liveness probes by locking one shard,
+//!   concurrently with each other and without the router-wide gate.
+//!
+//! Sharding is pure partitioning: for any shard count the maps hold
+//! exactly the same entries, so routing decisions are byte-identical
+//! across K (a property `tests/props.rs` checks). The shard count is
+//! the `ROUTER_SHARDS` knob ([`shards_from_config`]).
+//!
+//! Lock order: a ticket-shard lock may be held while taking a pin-shard
+//! lock (the selector pins an owner while reading the request body),
+//! never the reverse — the two live in disjoint mutex sets, handle
+//! readers take exactly one lock at a time, and the router's mutating
+//! half is serialized by `&mut self`, so the nesting cannot deadlock.
+
+use super::source::DataSource;
+use super::TransferRequest;
+use crate::config::{Config, ConfigError};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default `ROUTER_SHARDS`: enough to keep real-fabric readers off each
+/// other's locks without bloating the sim's per-router footprint.
+pub const DEFAULT_ROUTER_SHARDS: usize = 16;
+
+/// The `ROUTER_SHARDS` condor-style knob (default
+/// [`DEFAULT_ROUTER_SHARDS`]; clamped to at least 1).
+///
+/// ```text
+/// ROUTER_SHARDS = 32   # state shards per router
+/// ```
+pub fn shards_from_config(cfg: &Config) -> Result<usize, ConfigError> {
+    Ok((cfg.get_u64("ROUTER_SHARDS", DEFAULT_ROUTER_SHARDS as u64)?).max(1) as usize)
+}
+
+/// FNV-1a over the owner string — the same stable hash the router's
+/// owner-affinity policy uses, so pin placement is deterministic.
+pub(crate) fn owner_hash(owner: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in owner.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One ticket shard: the per-ticket maps for tickets hashing here.
+#[derive(Debug, Default)]
+struct TicketShard {
+    /// Data source of every admitted, not-yet-completed ticket.
+    source_of: HashMap<u32, DataSource>,
+    /// Submit node of every in-router (waiting or active) ticket.
+    node_of: HashMap<u32, usize>,
+    /// Request bodies of in-router tickets, kept so a node failure can
+    /// re-route its whole backlog — waiting AND in-flight.
+    requests: HashMap<u32, TransferRequest>,
+}
+
+/// One pin shard: owner → pinned data node for owners hashing here.
+#[derive(Debug, Default)]
+struct PinShard {
+    dtn_pin: HashMap<String, usize>,
+}
+
+#[derive(Debug)]
+struct StateInner {
+    tickets: Vec<Mutex<TicketShard>>,
+    pins: Vec<Mutex<PinShard>>,
+    /// Submit-node down flags, readable without any shard lock.
+    node_down: Vec<AtomicBool>,
+    /// DTN down flags (empty with no DTN fleet).
+    dtn_down: Vec<AtomicBool>,
+}
+
+/// The router's sharded ticket/owner state. Cheap to hand out as a
+/// read-side [`RouterStateHandle`]; all map operations lock exactly one
+/// shard.
+#[derive(Debug)]
+pub struct RouterState {
+    inner: Arc<StateInner>,
+}
+
+impl RouterState {
+    pub fn new(shards: usize, n_nodes: usize) -> RouterState {
+        let k = shards.max(1);
+        RouterState {
+            inner: Arc::new(StateInner {
+                tickets: (0..k).map(|_| Mutex::new(TicketShard::default())).collect(),
+                pins: (0..k).map(|_| Mutex::new(PinShard::default())).collect(),
+                node_down: (0..n_nodes).map(|_| AtomicBool::new(false)).collect(),
+                dtn_down: Vec::new(),
+            }),
+        }
+    }
+
+    /// Number of state shards.
+    pub fn shard_count(&self) -> usize {
+        self.inner.tickets.len()
+    }
+
+    /// Builder-phase reconfiguration (shard count / DTN fleet size).
+    /// Panics if a [`RouterStateHandle`] was already taken — resizing
+    /// would strand readers on stale shards.
+    fn rebuild(&mut self, shards: usize, dtns: usize) {
+        let n_nodes = self.inner.node_down.len();
+        assert!(
+            Arc::get_mut(&mut self.inner).is_some(),
+            "configure router state before taking handles"
+        );
+        let k = shards.max(1);
+        self.inner = Arc::new(StateInner {
+            tickets: (0..k).map(|_| Mutex::new(TicketShard::default())).collect(),
+            pins: (0..k).map(|_| Mutex::new(PinShard::default())).collect(),
+            node_down: (0..n_nodes).map(|_| AtomicBool::new(false)).collect(),
+            dtn_down: (0..dtns).map(|_| AtomicBool::new(false)).collect(),
+        });
+    }
+
+    /// Re-shard to `shards` (builder phase: maps must be empty).
+    pub(crate) fn set_shards(&mut self, shards: usize) {
+        let dtns = self.inner.dtn_down.len();
+        self.rebuild(shards, dtns);
+    }
+
+    /// Size the DTN down-flag set (builder phase).
+    pub(crate) fn set_dtn_count(&mut self, dtns: usize) {
+        let k = self.inner.tickets.len();
+        self.rebuild(k, dtns);
+    }
+
+    fn tshard(&self, ticket: u32) -> &Mutex<TicketShard> {
+        &self.inner.tickets[ticket as usize % self.inner.tickets.len()]
+    }
+
+    fn pshard(&self, owner: &str) -> &Mutex<PinShard> {
+        &self.inner.pins[(owner_hash(owner) % self.inner.pins.len() as u64) as usize]
+    }
+
+    pub(crate) fn insert_request(&self, req: &TransferRequest) {
+        let mut s = self.tshard(req.ticket).lock().unwrap();
+        s.requests.insert(req.ticket, req.clone());
+    }
+
+    pub(crate) fn request_clone(&self, ticket: u32) -> Option<TransferRequest> {
+        self.tshard(ticket).lock().unwrap().requests.get(&ticket).cloned()
+    }
+
+    /// Read the request body under the shard lock without cloning the
+    /// owner string — the hot path's per-decision view.
+    pub(crate) fn with_request<R>(
+        &self,
+        ticket: u32,
+        f: impl FnOnce(Option<&TransferRequest>) -> R,
+    ) -> R {
+        let s = self.tshard(ticket).lock().unwrap();
+        f(s.requests.get(&ticket))
+    }
+
+    pub(crate) fn set_source(&self, ticket: u32, source: DataSource) {
+        self.tshard(ticket).lock().unwrap().source_of.insert(ticket, source);
+    }
+
+    pub(crate) fn remove_source(&self, ticket: u32) -> Option<DataSource> {
+        self.tshard(ticket).lock().unwrap().source_of.remove(&ticket)
+    }
+
+    pub(crate) fn source_of(&self, ticket: u32) -> Option<DataSource> {
+        self.tshard(ticket).lock().unwrap().source_of.get(&ticket).copied()
+    }
+
+    pub(crate) fn set_node(&self, ticket: u32, node: usize) {
+        self.tshard(ticket).lock().unwrap().node_of.insert(ticket, node);
+    }
+
+    pub(crate) fn remove_node(&self, ticket: u32) -> Option<usize> {
+        self.tshard(ticket).lock().unwrap().node_of.remove(&ticket)
+    }
+
+    pub(crate) fn node_of(&self, ticket: u32) -> Option<usize> {
+        self.tshard(ticket).lock().unwrap().node_of.get(&ticket).copied()
+    }
+
+    /// Completion scrub: drop the ticket's request body, source
+    /// placement and node mapping in one shard lock.
+    pub(crate) fn scrub(&self, ticket: u32) -> (Option<DataSource>, Option<usize>) {
+        let mut s = self.tshard(ticket).lock().unwrap();
+        s.requests.remove(&ticket);
+        (s.source_of.remove(&ticket), s.node_of.remove(&ticket))
+    }
+
+    /// Tickets currently mapped to submit node `node`, in arbitrary
+    /// shard-major order — callers re-routing them must sort first
+    /// (`router::sorted_tickets`).
+    pub(crate) fn tickets_on_node(&self, node: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        for shard in &self.inner.tickets {
+            let s = shard.lock().unwrap();
+            out.extend(s.node_of.iter().filter(|&(_, &n)| n == node).map(|(&t, _)| t));
+        }
+        out
+    }
+
+    /// Tickets currently placed on DTN `dtn` (slot holders and queued
+    /// alike), in arbitrary shard-major order — sort before re-sourcing.
+    pub(crate) fn tickets_on_dtn(&self, dtn: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        for shard in &self.inner.tickets {
+            let s = shard.lock().unwrap();
+            out.extend(
+                s.source_of
+                    .iter()
+                    .filter(|&(_, &src)| src == DataSource::Dtn { dtn })
+                    .map(|(&t, _)| t),
+            );
+        }
+        out
+    }
+
+    pub(crate) fn pin_of(&self, owner: &str) -> Option<usize> {
+        self.pshard(owner).lock().unwrap().dtn_pin.get(owner).copied()
+    }
+
+    pub(crate) fn set_pin(&self, owner: &str, dtn: usize) {
+        self.pshard(owner).lock().unwrap().dtn_pin.insert(owner.to_string(), dtn);
+    }
+
+    /// Drop every owner pin pointing at `dtn` (its page cache died).
+    pub(crate) fn drop_pins_to(&self, dtn: usize) {
+        for shard in &self.inner.pins {
+            shard.lock().unwrap().dtn_pin.retain(|_, &mut d| d != dtn);
+        }
+    }
+
+    pub(crate) fn set_node_down(&self, node: usize, down: bool) {
+        self.inner.node_down[node].store(down, Ordering::Relaxed);
+    }
+
+    pub(crate) fn set_dtn_down(&self, dtn: usize, down: bool) {
+        self.inner.dtn_down[dtn].store(down, Ordering::Relaxed);
+    }
+
+    /// A read-side handle sharing this router's state. Readers lock one
+    /// shard per query — never the router, never the fabric gate.
+    pub fn handle(&self) -> RouterStateHandle {
+        RouterStateHandle {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+/// Concurrent read access to a router's sharded state, for fabric
+/// workers that only need ticket lookups and liveness probes (the
+/// mid-transfer retry path). Cloning is an `Arc` bump.
+#[derive(Debug, Clone)]
+pub struct RouterStateHandle {
+    inner: Arc<StateInner>,
+}
+
+impl RouterStateHandle {
+    fn tshard(&self, ticket: u32) -> &Mutex<TicketShard> {
+        &self.inner.tickets[ticket as usize % self.inner.tickets.len()]
+    }
+
+    /// Submit node of an in-router (waiting or admitted) ticket.
+    pub fn node_of(&self, ticket: u32) -> Option<usize> {
+        self.tshard(ticket).lock().unwrap().node_of.get(&ticket).copied()
+    }
+
+    /// Data source of an admitted, not-yet-completed ticket.
+    pub fn source_of(&self, ticket: u32) -> Option<DataSource> {
+        self.tshard(ticket).lock().unwrap().source_of.get(&ticket).copied()
+    }
+
+    /// Is the submit node poisoned right now?
+    pub fn is_node_down(&self, node: usize) -> bool {
+        self.inner
+            .node_down
+            .get(node)
+            .map(|f| f.load(Ordering::Relaxed))
+            .unwrap_or(false)
+    }
+
+    /// Is the data node poisoned right now?
+    pub fn is_dtn_down(&self, dtn: usize) -> bool {
+        self.inner
+            .dtn_down
+            .get(dtn)
+            .map(|f| f.load(Ordering::Relaxed))
+            .unwrap_or(false)
+    }
+
+    /// Number of state shards (reporting/bench visibility).
+    pub fn shard_count(&self) -> usize {
+        self.inner.tickets.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticket_maps_shard_and_scrub() {
+        let st = RouterState::new(4, 2);
+        for t in 0..32 {
+            st.insert_request(&TransferRequest::new(t, format!("u{t}"), 10));
+            st.set_node(t, (t % 2) as usize);
+            st.set_source(t, DataSource::Funnel { node: 0 });
+        }
+        assert_eq!(st.node_of(7), Some(1));
+        assert!(st.with_request(9, |r| r.map(|r| r.bytes)) == Some(10));
+        let mut on0 = st.tickets_on_node(0);
+        on0.sort_unstable();
+        assert_eq!(on0.len(), 16);
+        let (src, node) = st.scrub(7);
+        assert_eq!(src, Some(DataSource::Funnel { node: 0 }));
+        assert_eq!(node, Some(1));
+        assert_eq!(st.node_of(7), None);
+        assert!(st.request_clone(7).is_none());
+    }
+
+    #[test]
+    fn pins_shard_by_owner_and_drop_by_dtn() {
+        let st = RouterState::new(8, 1);
+        st.set_pin("alice", 2);
+        st.set_pin("bob", 3);
+        assert_eq!(st.pin_of("alice"), Some(2));
+        st.drop_pins_to(2);
+        assert_eq!(st.pin_of("alice"), None);
+        assert_eq!(st.pin_of("bob"), Some(3));
+    }
+
+    #[test]
+    fn handle_reads_concurrently_with_down_flags() {
+        let mut st = RouterState::new(2, 3);
+        st.set_dtn_count(2);
+        st.set_node(5, 1);
+        st.set_source(5, DataSource::Dtn { dtn: 1 });
+        let h = st.handle();
+        assert_eq!(h.node_of(5), Some(1));
+        assert_eq!(h.source_of(5), Some(DataSource::Dtn { dtn: 1 }));
+        assert!(!h.is_node_down(2));
+        st.set_node_down(2, true);
+        assert!(h.is_node_down(2));
+        st.set_dtn_down(0, true);
+        assert!(h.is_dtn_down(0));
+        assert!(!h.is_dtn_down(1));
+        // Out-of-range probes are "not down", matching an empty fleet.
+        assert!(!h.is_dtn_down(99));
+        assert_eq!(h.shard_count(), 2);
+    }
+
+    #[test]
+    fn shards_knob_parses_and_clamps() {
+        let cfg = Config::parse("ROUTER_SHARDS = 32").unwrap();
+        assert_eq!(shards_from_config(&cfg).unwrap(), 32);
+        let dflt = Config::parse("").unwrap();
+        assert_eq!(shards_from_config(&dflt).unwrap(), DEFAULT_ROUTER_SHARDS);
+        let zero = Config::parse("ROUTER_SHARDS = 0").unwrap();
+        assert_eq!(shards_from_config(&zero).unwrap(), 1);
+    }
+}

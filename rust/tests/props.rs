@@ -3,7 +3,7 @@
 use htcdm::classad::{matches, parse_expr, Ad, Value};
 use htcdm::metrics::BinSeries;
 use htcdm::mover::{
-    AdmissionConfig, AdmissionQueue, DataSource, PoolRouter, RouterPolicy, SourcePlan,
+    AdmissionConfig, AdmissionQueue, DataSource, PoolRouter, Routed, RouterPolicy, SourcePlan,
     SourceSelector, TransferRequest,
 };
 use htcdm::netsim::NetSim;
@@ -687,6 +687,208 @@ fn prop_owner_affinity_source_repins_on_kill() {
                 "{o} flapped after recovery"
             );
         }
+    });
+}
+
+/// Shard-count transparency: the sharded router state is a pure
+/// partitioning of the old flat maps, so for ANY shard count the router
+/// must emit byte-identical `Routed` decisions — across random
+/// policies, source selectors, budgets, queue depths, and a churn of
+/// requests, completes, node/DTN kills and recoveries, and rebalances.
+#[test]
+fn prop_state_shards_do_not_change_decisions() {
+    #[derive(Clone)]
+    enum Op {
+        Request { ticket: u32, owner: u8, bytes: u64, extent: u64 },
+        Complete(u32),
+        FailNode(usize),
+        RecoverNode(usize),
+        FailDtn(usize),
+        RecoverDtn(usize),
+        Rebalance(usize),
+    }
+    check("state-shards-transparent", 20, |g| {
+        let n_nodes = g.rng.range_u64(2, 5) as u32;
+        let n_dtns = g.rng.range_usize(2, 4);
+        let budget = g.rng.range_u64(0, 3) as u32;
+        let depth = g.rng.range_u64(0, 2) as u32;
+        let policy = [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::OwnerAffinity,
+        ][g.rng.range_usize(0, 2)];
+        let selector = [
+            SourceSelector::RoundRobin,
+            SourceSelector::CacheAware,
+            SourceSelector::OwnerAffinity,
+        ][g.rng.range_usize(0, 2)];
+        let limit = g.rng.range_u64(1, 4) as u32;
+
+        // Materialize one random op tape, then replay it against routers
+        // that differ ONLY in their state shard count.
+        let mut ops: Vec<Op> = Vec::new();
+        let mut outstanding: Vec<u32> = Vec::new();
+        let mut ticket = 0u32;
+        for _ in 0..160 {
+            match g.rng.range_u64(0, 9) {
+                0..=4 => {
+                    ops.push(Op::Request {
+                        ticket,
+                        owner: g.rng.range_u64(0, 6) as u8,
+                        bytes: g.rng.range_u64(1, 1_000_000),
+                        extent: g.rng.range_u64(0, 4),
+                    });
+                    outstanding.push(ticket);
+                    ticket += 1;
+                }
+                5..=6 => {
+                    if !outstanding.is_empty() {
+                        let i = g.rng.range_usize(0, outstanding.len() - 1);
+                        ops.push(Op::Complete(outstanding.swap_remove(i)));
+                    }
+                }
+                7 => {
+                    let node = g.rng.range_usize(0, n_nodes as usize - 1);
+                    ops.push(if g.rng.next_f64() < 0.5 {
+                        Op::FailNode(node)
+                    } else {
+                        Op::RecoverNode(node)
+                    });
+                }
+                8 => {
+                    let dtn = g.rng.range_usize(0, n_dtns - 1);
+                    ops.push(if g.rng.next_f64() < 0.5 {
+                        Op::FailDtn(dtn)
+                    } else {
+                        Op::RecoverDtn(dtn)
+                    });
+                }
+                _ => ops.push(Op::Rebalance(g.rng.range_u64(1, 3) as usize)),
+            }
+        }
+
+        let run = |shards: usize| -> (Vec<Routed>, htcdm::mover::MoverStats, Vec<u64>) {
+            let mut router = PoolRouter::sim(
+                n_nodes,
+                1,
+                AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(limit)),
+                policy,
+            )
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; n_dtns])
+            .with_source_selector(selector)
+            .with_dtn_budget(budget)
+            .with_dtn_queue(depth)
+            .with_state_shards(shards);
+            let mut decisions: Vec<Routed> = Vec::new();
+            for op in &ops {
+                match *op {
+                    Op::Request { ticket, owner, bytes, extent } => decisions.extend(
+                        router.request(
+                            TransferRequest::new(ticket, format!("u{owner}"), bytes)
+                                .with_extent(ExtentId(extent)),
+                        ),
+                    ),
+                    Op::Complete(t) => decisions.extend(router.complete(t)),
+                    Op::FailNode(n) => decisions.extend(router.fail_node(n)),
+                    Op::RecoverNode(n) => decisions.extend(router.recover_node(n)),
+                    Op::FailDtn(d) => decisions.extend(router.fail_dtn(d)),
+                    Op::RecoverDtn(d) => router.recover_dtn(d),
+                    Op::Rebalance(th) => decisions.extend(router.rebalance(th)),
+                }
+            }
+            (decisions, router.stats(), router.router_stats().routed_per_dtn)
+        };
+
+        let baseline = run(1);
+        for shards in [2, 7, htcdm::mover::DEFAULT_ROUTER_SHARDS] {
+            let sharded = run(shards);
+            assert_eq!(
+                baseline.0, sharded.0,
+                "decisions diverged at {shards} shards ({policy:?}/{selector:?})"
+            );
+            assert_eq!(baseline.1, sharded.1, "stats diverged at {shards} shards");
+            assert_eq!(baseline.2, sharded.2, "DTN placement diverged at {shards} shards");
+        }
+    });
+}
+
+/// Batched admission is a pure batching of the single-request path: for
+/// any request stream and any cycle chunking, `route_batch` emits the
+/// same decisions in the same order as one `request` call per transfer,
+/// and `complete_batch` likewise mirrors per-ticket `complete` calls —
+/// with identical accounting afterwards.
+#[test]
+fn prop_route_batch_equals_single_requests() {
+    check("route-batch-equals-singles", 25, |g| {
+        let n_nodes = g.rng.range_u64(1, 4) as u32;
+        let n_dtns = g.rng.range_usize(1, 3);
+        let limit = g.rng.range_u64(1, 5) as u32;
+        let policy = [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::OwnerAffinity,
+        ][g.rng.range_usize(0, 2)];
+        let make = || {
+            PoolRouter::sim(
+                n_nodes,
+                1,
+                AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(limit)),
+                policy,
+            )
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; n_dtns])
+            .with_source_selector(SourceSelector::CacheAware)
+        };
+        let n_reqs = g.rng.range_u64(10, 80) as u32;
+        let reqs: Vec<TransferRequest> = (0..n_reqs)
+            .map(|t| {
+                TransferRequest::new(
+                    t,
+                    format!("u{}", g.rng.range_u64(0, 4)),
+                    g.rng.range_u64(1, 1_000_000),
+                )
+                .with_extent(ExtentId(g.rng.range_u64(0, 3)))
+            })
+            .collect();
+
+        // Route: one request() per transfer vs route_batch() over random
+        // cycle chunks.
+        let mut single = make();
+        let mut single_out: Vec<Routed> = Vec::new();
+        for req in reqs.clone() {
+            single_out.extend(single.request(req));
+        }
+        let mut batch = make();
+        let mut batch_out: Vec<Routed> = Vec::new();
+        let mut rest: &[TransferRequest] = &reqs;
+        while !rest.is_empty() {
+            let take = g.rng.range_usize(1, rest.len());
+            let (cycle, tail) = rest.split_at(take);
+            batch_out.extend(batch.route_batch(cycle.to_vec()));
+            rest = tail;
+        }
+        assert_eq!(single_out, batch_out, "route_batch diverged from singles");
+        assert_eq!(single.stats(), batch.stats(), "routing accounting diverged");
+
+        // Complete: per-ticket complete() vs complete_batch() over the
+        // same random chunking of a shuffled ticket order.
+        let mut order: Vec<u32> = (0..n_reqs).collect();
+        g.rng.shuffle(&mut order);
+        let mut single_done: Vec<Routed> = Vec::new();
+        for &t in &order {
+            single_done.extend(single.complete(t));
+        }
+        let mut batch_done: Vec<Routed> = Vec::new();
+        let mut rest: &[u32] = &order;
+        while !rest.is_empty() {
+            let take = g.rng.range_usize(1, rest.len());
+            let (cycle, tail) = rest.split_at(take);
+            batch_done.extend(batch.complete_batch(cycle));
+            rest = tail;
+        }
+        assert_eq!(single_done, batch_done, "complete_batch diverged from singles");
+        assert_eq!(single.stats(), batch.stats(), "completion accounting diverged");
+        assert_eq!(single.active(), 0);
+        assert_eq!(batch.active(), 0);
     });
 }
 
