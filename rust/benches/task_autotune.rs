@@ -1,0 +1,150 @@
+//! Bench: the durable-task auto-tuner closing the loop on the static
+//! `CHUNK` knob (`benches/chunk_sweep.rs` sweeps it by hand; the tuner
+//! walks it — and the concurrency cap — from observed per-window
+//! goodput).
+//!
+//! * a SIM sweep: the same 32 x 50 MB task run with the tuner off
+//!   (static concurrency 1) and on, from several starting chunk sizes —
+//!   reporting makespan, the knob trajectory endpoints, and the
+//!   tuned-vs-static speedup, asserted > 1x in-bench so CI fails if the
+//!   tuner stops climbing,
+//! * a REAL row: a small loopback task with the tuner on, proving the
+//!   trajectory is recorded while real sealed bytes move.
+//!
+//! Every row is also recorded as a JSON object; set `BENCH_REPORT_DIR`
+//! to write them to `task_autotune.json` (the CI bench-smoke job uploads
+//! them as artifacts).
+//!
+//! Run: cargo bench --bench task_autotune
+//! CI smoke: cargo bench --bench task_autotune -- --smoke
+
+use htcdm::coordinator::engine::{run_task_sim, EngineSpec};
+use htcdm::fabric::{run_real_task, RealTaskConfig};
+use htcdm::mover::{TaskJournal, TaskRunner, TransferTask};
+use htcdm::netsim::topology::TestbedSpec;
+use htcdm::transfer::ThrottlePolicy;
+
+/// `--smoke` (or `BENCH_SMOKE=1`): shrink the sweep so CI can execute
+/// the bench end-to-end on each PR. The speedup gate still runs.
+fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke") || std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+const N_FILES: usize = 32;
+const FILE_BYTES: u64 = 50_000_000;
+
+fn sim_spec() -> EngineSpec {
+    EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled)
+}
+
+fn sim_task(autotune: bool, chunk_words: usize) -> TransferTask {
+    TransferTask::new("bench-task", "alice")
+        .with_uniform_files("input", N_FILES, FILE_BYTES)
+        .with_concurrency(1)
+        .with_chunk_words(chunk_words)
+        .with_autotune(autotune)
+        .with_tune_window_s(0.2)
+}
+
+fn run_sim(autotune: bool, chunk_words: usize) -> anyhow::Result<(f64, u32, usize, usize)> {
+    let mut runner = TaskRunner::new(sim_task(autotune, chunk_words), TaskJournal::memory())?;
+    let r = run_task_sim(&sim_spec(), &mut runner)?;
+    anyhow::ensure!(
+        r.progress.files_done == N_FILES,
+        "sim task incomplete: {}/{N_FILES}",
+        r.progress.files_done
+    );
+    Ok((
+        r.makespan_s,
+        r.progress.concurrency,
+        r.progress.chunk_words,
+        r.tuner.len(),
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = smoke_mode();
+    let mut json_rows: Vec<String> = Vec::new();
+    if smoke {
+        println!("[smoke mode: one starting chunk size]");
+    }
+
+    println!(
+        "=== task auto-tuner vs static knobs (sim, {N_FILES} x {} MB) ===",
+        FILE_BYTES / 1_000_000
+    );
+    println!("  mode        chunk0    makespan    final conc  final chunk  windows");
+    let (static_makespan, _, _, _) = run_sim(false, 1024)?;
+    println!(
+        "  static        1024   {static_makespan:>8.2} s   {:>9}   {:>9}   {:>6}",
+        1, 1024, 0
+    );
+    json_rows.push(format!(
+        "{{\"section\":\"sim\",\"mode\":\"static\",\"chunk0\":1024,\
+         \"makespan_s\":{static_makespan:.3},\"final_concurrency\":1,\
+         \"final_chunk_words\":1024,\"windows\":0}}"
+    ));
+
+    let chunk0s: &[usize] = if smoke { &[1024] } else { &[256, 1024, 16384] };
+    for &chunk0 in chunk0s {
+        let (makespan, conc, chunk, windows) = run_sim(true, chunk0)?;
+        let speedup = static_makespan / makespan.max(1e-9);
+        println!(
+            "  autotune    {chunk0:>6}   {makespan:>8.2} s   {conc:>9}   {chunk:>9}   \
+             {windows:>6}   ({speedup:.2}x vs static)"
+        );
+        json_rows.push(format!(
+            "{{\"section\":\"sim\",\"mode\":\"autotune\",\"chunk0\":{chunk0},\
+             \"makespan_s\":{makespan:.3},\"final_concurrency\":{conc},\
+             \"final_chunk_words\":{chunk},\"windows\":{windows},\
+             \"speedup_vs_static\":{speedup:.3}}}"
+        ));
+        // The climb gate: from concurrency 1 the tuner must beat the
+        // static knobs it started with, or the loop is broken.
+        anyhow::ensure!(
+            makespan < static_makespan,
+            "tuner never beat static knobs from chunk0={chunk0}: \
+             {makespan:.2}s vs {static_makespan:.2}s"
+        );
+        anyhow::ensure!(windows >= 2, "tuner recorded {windows} windows");
+    }
+
+    println!("\n=== real loopback task with the tuner on ===");
+    let task = TransferTask::new("bench-task-real", "alice")
+        .with_uniform_files("input", 8, 256 << 10)
+        .with_concurrency(1)
+        .with_autotune(true)
+        .with_tune_window_s(0.05);
+    let runner = TaskRunner::new(task, TaskJournal::memory())?;
+    let cfg = RealTaskConfig {
+        workers: 4,
+        chunk_words: 1024,
+        passphrase: "bench".into(),
+        ..RealTaskConfig::default()
+    };
+    let (r, _runner) = run_real_task(&cfg, runner)?;
+    anyhow::ensure!(r.errors == 0, "real task errors: {}", r.errors);
+    anyhow::ensure!(r.progress.files_done == 8, "real task incomplete");
+    println!(
+        "  8 x 256 KiB | {:.2} s wall | final concurrency {} | {} tuner windows",
+        r.wall_secs,
+        r.progress.concurrency,
+        r.tuner.len()
+    );
+    json_rows.push(format!(
+        "{{\"section\":\"real\",\"files\":8,\"file_bytes\":{},\
+         \"wall_secs\":{:.3},\"final_concurrency\":{},\"windows\":{}}}",
+        256 << 10,
+        r.wall_secs,
+        r.progress.concurrency,
+        r.tuner.len()
+    ));
+
+    if let Ok(dir) = std::env::var("BENCH_REPORT_DIR") {
+        std::fs::create_dir_all(&dir).ok();
+        let path = format!("{dir}/task_autotune.json");
+        std::fs::write(&path, format!("[{}]\n", json_rows.join(",\n ")))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}

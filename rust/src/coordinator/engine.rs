@@ -12,6 +12,7 @@ use crate::daemons::{Collector, Negotiator, Schedd, SlotId, Startd};
 use crate::jobs::JobSpec;
 use crate::metrics::BinSeries;
 use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan};
+use crate::mover::task::{TaskProgress, TaskRunner, TunerSample};
 use crate::mover::{
     AdmissionConfig, DataSource, MoverStats, PoolRouter, RouterPolicy, RouterStats, ShadowPool,
     SourcePlan, SourceSelector,
@@ -97,6 +98,17 @@ pub struct EngineSpec {
     pub seed: u64,
     /// Negotiator cycle interval (HTCondor default: 60 s).
     pub negotiation_interval_s: f64,
+    /// Per-task admission rate limit in bytes/s (`TASK_RATE_BPS` knob;
+    /// 0 = unlimited). Applied on top of a
+    /// [`TransferTask`](crate::mover::task::TransferTask)'s own value by
+    /// the task drivers ([`run_task_sim`], the real fabric's task
+    /// runner) — not by the plain burst engine.
+    pub task_rate_bps: u64,
+    /// Per-task deadline in seconds (`TASK_DEADLINE_S` knob; 0 = none).
+    pub task_deadline_s: f64,
+    /// Closed-loop task auto-tuning (`AUTOTUNE` knob): adjust a task's
+    /// concurrency and chunk size from observed per-window goodput.
+    pub autotune: bool,
 }
 
 impl EngineSpec {
@@ -125,6 +137,9 @@ impl EngineSpec {
             faults: FaultPlan::default(),
             seed: 20210901, // eScience 2021
             negotiation_interval_s: 60.0,
+            task_rate_bps: 0,
+            task_deadline_s: 0.0,
+            autotune: false,
         }
     }
 
@@ -208,6 +223,9 @@ impl EngineSpec {
             self.router_shards = crate::mover::shards_from_config(cfg)?;
         }
         self.cycle_size = cfg.get_u64("CYCLE_SIZE", self.cycle_size as u64)? as usize;
+        self.task_rate_bps = cfg.get_bytes("TASK_RATE_BPS", self.task_rate_bps)?;
+        self.task_deadline_s = cfg.get_f64("TASK_DEADLINE_S", self.task_deadline_s)?;
+        self.autotune = cfg.get_bool("AUTOTUNE", self.autotune)?;
         self.n_extents = (cfg.get_u64("N_EXTENTS", self.n_extents as u64)? as u32).max(1);
         // Heterogeneous data fleets: DATA_NODE_GBPS = 100, 25 sets
         // per-DTN NIC capacity.
@@ -343,35 +361,41 @@ pub struct Engine {
     chaos: ChaosTimeline,
 }
 
+/// Build the spec's pool router: the submit-node fleet, NIC-budget
+/// weights, data-source plane and state sharding, exactly as
+/// [`Engine::new`] wires them. Shared with the task drivers
+/// ([`run_task_sim`]) so a durable task and a plain burst route through
+/// identically configured control planes.
+///
+/// The spec and its testbed both carry a submit-node count (the
+/// testbed's is honored by `Testbed::build` standalone); whichever was
+/// raised wins, so neither knob is silently a no-op. Router NIC budgets
+/// mirror the topology's per-node capacities, so weighted-by-capacity
+/// routing tracks heterogeneous fleets; the DTN fleet mirrors the
+/// data-node NIC budgets the same way.
+pub fn router_from_spec(spec: &EngineSpec) -> PoolRouter {
+    let n = spec.n_submit_nodes.max(spec.testbed.n_submit_nodes).max(1) as usize;
+    let nodes: Vec<ShadowPool> = (0..n)
+        .map(|_| ShadowPool::sim(spec.shadows.max(1), spec.policy.clone()))
+        .collect();
+    let capacities: Vec<f64> = (0..n)
+        .map(|s| spec.testbed.submit_node_nic_gbps(s))
+        .collect();
+    let n_dtns = spec.n_data_nodes.max(spec.testbed.n_data_nodes) as usize;
+    let dtn_caps: Vec<f64> = (0..n_dtns)
+        .map(|d| spec.testbed.data_node_nic_gbps(d))
+        .collect();
+    PoolRouter::new(nodes, capacities, spec.router)
+        .with_source_plan(spec.source, dtn_caps)
+        .with_source_selector(spec.source_selector)
+        .with_dtn_budget(spec.dtn_slots)
+        .with_dtn_queue(spec.dtn_queue_depth)
+        .with_state_shards(spec.router_shards)
+}
+
 impl Engine {
     pub fn new(spec: EngineSpec) -> Engine {
-        // The spec and its testbed both carry a submit-node count (the
-        // testbed's is honored by Testbed::build standalone); whichever
-        // was raised wins, so neither knob is silently a no-op.
-        // Router NIC budgets mirror the topology's per-node capacities,
-        // so weighted-by-capacity routing tracks heterogeneous fleets.
-        let n = spec
-            .n_submit_nodes
-            .max(spec.testbed.n_submit_nodes)
-            .max(1) as usize;
-        let nodes: Vec<ShadowPool> = (0..n)
-            .map(|_| ShadowPool::sim(spec.shadows.max(1), spec.policy.clone()))
-            .collect();
-        let capacities: Vec<f64> = (0..n)
-            .map(|s| spec.testbed.submit_node_nic_gbps(s))
-            .collect();
-        // The data-source plane: the DTN fleet mirrors the topology's
-        // data-node NIC budgets, like submit capacities above.
-        let n_dtns = spec.n_data_nodes.max(spec.testbed.n_data_nodes) as usize;
-        let dtn_caps: Vec<f64> = (0..n_dtns)
-            .map(|d| spec.testbed.data_node_nic_gbps(d))
-            .collect();
-        let router = PoolRouter::new(nodes, capacities, spec.router)
-            .with_source_plan(spec.source, dtn_caps)
-            .with_source_selector(spec.source_selector)
-            .with_dtn_budget(spec.dtn_slots)
-            .with_dtn_queue(spec.dtn_queue_depth)
-            .with_state_shards(spec.router_shards);
+        let router = router_from_spec(&spec);
         Engine::with_router(spec, router)
     }
 
@@ -1001,6 +1025,205 @@ impl Engine {
     }
 }
 
+/// Outcome of driving one durable task through the simulated fabric.
+#[derive(Debug)]
+pub struct TaskSimReport {
+    /// Per-task progress snapshot (files/bytes done, resumed, retries,
+    /// deadline flag, final knob values); see `docs/REPORTS.md`.
+    pub progress: TaskProgress,
+    /// Auto-tuner trajectory (empty without `AUTOTUNE`).
+    pub tuner: Vec<TunerSample>,
+    /// Virtual seconds from task start to the last event this run saw.
+    pub makespan_s: f64,
+    pub mover: MoverStats,
+    pub router: RouterStats,
+    /// The run was cut short by `kill_after_files` (the chaos hook).
+    pub killed: bool,
+}
+
+/// Transfer efficiency of the task's chunk size on the simulated wire:
+/// each chunk pays one fixed round of per-chunk overhead (framing, seal
+/// hand-off), so per-stream goodput scales as `w / (w + 1024)` — the
+/// fluid-model analogue of what the `chunk_sweep` bench measures on the
+/// real fabric. Monotone in `w`, which is what lets the auto-tuner's
+/// hill-climb find the ceiling.
+fn chunk_efficiency(chunk_words: usize) -> f64 {
+    let w = chunk_words as f64;
+    w / (w + 1024.0)
+}
+
+/// Drive a durable task to completion (or its deadline) on the
+/// simulated fabric: the sim-side counterpart of
+/// `fabric::tcp::run_real_task`, sharing the same [`TaskRunner`] object
+/// per the repo's sim/real unification invariant. Admission, rate
+/// limiting, deadlines and auto-tuning all live in the runner; this
+/// driver supplies virtual time, the routed data plane
+/// ([`router_from_spec`]) and a fluid flow model whose per-stream rate
+/// honors the runner's live chunk size ([`chunk_efficiency`]) and
+/// shares each source NIC among its concurrent flows.
+pub fn run_task_sim(spec: &EngineSpec, runner: &mut TaskRunner) -> Result<TaskSimReport> {
+    run_task_sim_with_kill(spec, runner, None)
+}
+
+/// [`run_task_sim`] with a chaos hook: kill the coordinator after this
+/// many file completions *this run* — admissions stop, in-flight flows
+/// are abandoned (exactly what a crash does), and the journal keeps the
+/// last checkpoint for a later resume.
+pub fn run_task_sim_with_kill(
+    spec: &EngineSpec,
+    runner: &mut TaskRunner,
+    kill_after_files: Option<usize>,
+) -> Result<TaskSimReport> {
+    if spec.task_rate_bps > 0 {
+        runner.set_rate_bps(spec.task_rate_bps);
+    }
+    if spec.task_deadline_s > 0.0 {
+        runner.set_deadline_s(spec.task_deadline_s);
+    }
+    if spec.autotune {
+        runner.set_autotune(true);
+    }
+    let mut schedd = Schedd::with_router("schedd@task", router_from_spec(spec));
+    if let Err(e) = schedd
+        .mover
+        .source_plan()
+        .validate(schedd.mover.dtn_count())
+    {
+        bail!("invalid source plan: {e}");
+    }
+    let mapping = schedd.submit_task(runner.task(), SimTime::ZERO);
+    let file_of: HashMap<u32, usize> = mapping.iter().copied().collect();
+    let proc_of: HashMap<usize, u32> = mapping.iter().map(|&(p, i)| (i, p)).collect();
+
+    struct Flow {
+        remaining: f64,
+        source: DataSource,
+    }
+    let mut flows: HashMap<u32, Flow> = HashMap::new();
+    let start = |routed: Vec<crate::mover::Routed>,
+                     flows: &mut HashMap<u32, Flow>,
+                     schedd: &mut Schedd,
+                     now: f64| {
+        for r in routed {
+            schedd.input_started(r.ticket, SimTime::from_secs_f64(now));
+            flows.insert(
+                r.ticket,
+                Flow {
+                    remaining: schedd.job(r.ticket).spec.input_bytes.0 as f64,
+                    source: r.source,
+                },
+            );
+        }
+    };
+
+    let mut now = 0.0f64;
+    let mut killed = false;
+    let mut done_this_run = 0usize;
+    let mut guard = 0u64;
+    loop {
+        guard += 1;
+        if guard > 200_000 {
+            bail!("task sim exceeded iteration budget — likely stuck");
+        }
+        if !killed {
+            let mut routed = Vec::new();
+            for idx in runner.next_files(now) {
+                let proc_ = proc_of[&idx];
+                schedd.take_idle(proc_);
+                routed.extend(schedd.job_matched(proc_, SimTime::from_secs_f64(now)));
+            }
+            start(routed, &mut flows, &mut schedd, now);
+        }
+        runner.observe_window(now);
+        if flows.is_empty() {
+            if killed || runner.done() || runner.deadline_exceeded() {
+                break;
+            }
+            // Rate-limited idle gap: jump to the limiter's next token.
+            match runner.next_admission_time() {
+                Some(t) if t > now => {
+                    now = t;
+                    continue;
+                }
+                Some(_) => continue,
+                None => break,
+            }
+        }
+        // Fluid rates: each flow takes the per-stream TCP ceiling scaled
+        // by the task's chunk efficiency, capped by an even share of its
+        // source NIC (protocol-derated, split among that source's flows).
+        let stream_bps = calib::PER_STREAM_ENDPOINT_BPS * chunk_efficiency(runner.chunk_words());
+        let rate_of = |f: &Flow, flows: &HashMap<u32, Flow>, spec: &EngineSpec| {
+            let nic_gbps = match f.source {
+                DataSource::Funnel { node } => spec.testbed.submit_node_nic_gbps(node),
+                DataSource::Dtn { dtn } => spec.testbed.data_node_nic_gbps(dtn),
+            };
+            let sharing = flows.values().filter(|o| o.source == f.source).count().max(1);
+            let nic_share =
+                nic_gbps * 1e9 / 8.0 * calib::NIC_PROTOCOL_EFFICIENCY / sharing as f64;
+            stream_bps.min(nic_share).max(1.0)
+        };
+        let mut dt = f64::INFINITY;
+        for f in flows.values() {
+            dt = dt.min(f.remaining / rate_of(f, &flows, spec));
+        }
+        if let Some(wd) = runner.next_window_deadline() {
+            if wd > now {
+                dt = dt.min(wd - now);
+            }
+        }
+        if let Some(at) = runner.next_admission_time() {
+            if at > now {
+                dt = dt.min(at - now);
+            }
+        }
+        let dt = dt.max(1e-9);
+        let rates: HashMap<u32, f64> = flows
+            .iter()
+            .map(|(&p, f)| (p, rate_of(f, &flows, spec)))
+            .collect();
+        now += dt;
+        let mut completed: Vec<u32> = Vec::new();
+        for (&p, f) in flows.iter_mut() {
+            f.remaining -= rates[&p] * dt;
+            if f.remaining <= 0.5 {
+                completed.push(p);
+            }
+        }
+        completed.sort_unstable();
+        for proc_ in completed {
+            flows.remove(&proc_);
+            let t = SimTime::from_secs_f64(now);
+            let admitted = schedd.input_done(proc_, t);
+            schedd.run_done(proc_, t);
+            schedd.job_completed(proc_, t);
+            let idx = file_of[&proc_];
+            let (name, bytes) = {
+                let f = runner.file(idx);
+                (f.name.clone(), f.bytes)
+            };
+            runner.file_done(idx, &crate::mover::task::synth_file_sha256(&name, bytes), now)?;
+            done_this_run += 1;
+            if kill_after_files == Some(done_this_run) {
+                // Coordinator crash: in-flight transfers die on the
+                // floor; the journal holds the checkpoint just written.
+                killed = true;
+                flows.clear();
+                break;
+            }
+            start(admitted, &mut flows, &mut schedd, now);
+        }
+    }
+    Ok(TaskSimReport {
+        progress: runner.progress(),
+        tuner: runner.tuner_trajectory().to_vec(),
+        makespan_s: now,
+        mover: schedd.mover.stats(),
+        router: schedd.mover.router_stats(),
+        killed,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1034,6 +1257,9 @@ mod tests {
             faults: FaultPlan::default(),
             seed: 1,
             negotiation_interval_s: 60.0,
+            task_rate_bps: 0,
+            task_deadline_s: 0.0,
+            autotune: false,
         }
     }
 
@@ -1411,5 +1637,145 @@ mod tests {
         assert_eq!(r.schedd.completed_count(), 40);
         assert!(r.peak_concurrent_transfers <= 4);
         assert_eq!(r.errors, 0);
+    }
+
+    use crate::mover::task::{synth_file_sha256, FileState, TaskJournal, TransferTask};
+
+    fn sim_task(n: usize, bytes: u64) -> TransferTask {
+        TransferTask::new("sim-task", "alice").with_uniform_files("input", n, bytes)
+    }
+
+    #[test]
+    fn task_knobs_parse_from_config() {
+        let cfg = crate::config::Config::parse(
+            "TASK_RATE_BPS = 100MB\n\
+             TASK_DEADLINE_S = 30\n\
+             AUTOTUNE = true\n",
+        )
+        .unwrap();
+        let mut spec = tiny_spec();
+        spec.apply_config(&cfg).unwrap();
+        assert_eq!(spec.task_rate_bps, 100_000_000);
+        assert_eq!(spec.task_deadline_s, 30.0);
+        assert!(spec.autotune);
+        // Absent knobs leave the spec untouched.
+        let empty = crate::config::Config::parse("").unwrap();
+        let mut spec2 = tiny_spec();
+        spec2.task_rate_bps = 7;
+        spec2.apply_config(&empty).unwrap();
+        assert_eq!(spec2.task_rate_bps, 7);
+        assert!(!spec2.autotune);
+    }
+
+    #[test]
+    fn task_sim_completes_and_verifies_every_file() {
+        let mut runner =
+            TaskRunner::new(sim_task(6, 50_000_000), TaskJournal::memory()).unwrap();
+        let r = run_task_sim(&tiny_spec(), &mut runner).unwrap();
+        assert!(!r.killed);
+        assert_eq!(r.progress.files_done, 6);
+        assert_eq!(r.progress.verified_bytes, 6 * 50_000_000);
+        assert!(!r.progress.deadline_exceeded);
+        assert!(r.makespan_s > 0.0);
+        for i in 0..6 {
+            let f = runner.file(i);
+            assert_eq!(
+                f.state,
+                FileState::Done {
+                    sha256: synth_file_sha256(&f.name, f.bytes)
+                },
+                "file {i} carries its content hash"
+            );
+        }
+        // Every admitted byte went through the router's data plane.
+        let routed: u64 = r.router.bytes_per_node.iter().sum();
+        assert_eq!(routed, 6 * 50_000_000);
+    }
+
+    #[test]
+    fn task_sim_rate_limit_paces_admission() {
+        let fast = {
+            let mut runner =
+                TaskRunner::new(sim_task(4, 10_000_000), TaskJournal::memory()).unwrap();
+            run_task_sim(&tiny_spec(), &mut runner).unwrap()
+        };
+        let mut spec = tiny_spec();
+        spec.task_rate_bps = 10_000_000; // one 10 MB file per second
+        let mut runner =
+            TaskRunner::new(sim_task(4, 10_000_000), TaskJournal::memory()).unwrap();
+        let slow = run_task_sim(&spec, &mut runner).unwrap();
+        assert_eq!(slow.progress.files_done, 4);
+        assert!(
+            slow.makespan_s >= 3.0,
+            "4 files at 1 file/s admission: {} s",
+            slow.makespan_s
+        );
+        assert!(slow.makespan_s > fast.makespan_s * 2.0);
+    }
+
+    #[test]
+    fn task_sim_deadline_cuts_the_task_short() {
+        let mut spec = tiny_spec();
+        spec.task_rate_bps = 10_000_000;
+        spec.task_deadline_s = 1.5; // room for ~2 of 4 admissions
+        let mut runner =
+            TaskRunner::new(sim_task(4, 10_000_000), TaskJournal::memory()).unwrap();
+        let r = run_task_sim(&spec, &mut runner).unwrap();
+        assert!(r.progress.deadline_exceeded);
+        assert!(r.progress.files_done < 4, "{} done", r.progress.files_done);
+        assert!(r.progress.files_done >= 1);
+    }
+
+    #[test]
+    fn task_sim_kill_and_resume_never_retransfers_done_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("htcdm-engine-task-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = tiny_spec();
+        let run1 = {
+            let mut runner =
+                TaskRunner::new(sim_task(6, 50_000_000), TaskJournal::dir(&dir).unwrap())
+                    .unwrap();
+            run_task_sim_with_kill(&spec, &mut runner, Some(2)).unwrap()
+        };
+        assert!(run1.killed);
+        assert_eq!(run1.progress.files_done, 2);
+        // Restart: a fresh runner over the same journal resumes from the
+        // checkpoint; the new run's router moves ONLY the remaining
+        // bytes — completed files are never re-transferred.
+        let mut runner =
+            TaskRunner::new(sim_task(6, 50_000_000), TaskJournal::dir(&dir).unwrap()).unwrap();
+        assert_eq!(runner.files_resumed(), 2);
+        let run2 = run_task_sim(&spec, &mut runner).unwrap();
+        assert!(!run2.killed);
+        assert_eq!(run2.progress.files_done, 6);
+        assert_eq!(run2.progress.files_resumed, 2);
+        assert_eq!(run2.progress.verified_bytes, 6 * 50_000_000);
+        let routed2: u64 = run2.router.bytes_per_node.iter().sum();
+        assert_eq!(routed2, 4 * 50_000_000, "only the 4 unfinished files moved");
+        for i in 0..6 {
+            let f = runner.file(i);
+            assert_eq!(
+                f.state,
+                FileState::Done {
+                    sha256: synth_file_sha256(&f.name, f.bytes)
+                }
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn task_sim_autotune_climbs_concurrency() {
+        let mut spec = tiny_spec();
+        spec.autotune = true;
+        let mut task = sim_task(24, 20_000_000).with_concurrency(1);
+        task.tune_window_s = 0.15;
+        let mut runner = TaskRunner::new(task, TaskJournal::memory()).unwrap();
+        let r = run_task_sim(&spec, &mut runner).unwrap();
+        assert_eq!(r.progress.files_done, 24);
+        assert!(r.tuner.len() >= 2, "tuner observed multiple windows");
+        let max_c = r.tuner.iter().map(|s| s.concurrency).max().unwrap();
+        assert!(max_c > 1, "hill-climb raised the cap: {:?}", r.tuner);
     }
 }

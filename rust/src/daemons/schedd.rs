@@ -9,9 +9,10 @@
 
 use crate::jobs::log::{EventKind, UserLog};
 use crate::jobs::{Job, JobId, JobSpec, JobState};
+use crate::mover::task::TransferTask;
 use crate::mover::{PoolRouter, Routed, ShadowPool, TransferRequest};
 use crate::transfer::ThrottlePolicy;
-use crate::util::units::SimTime;
+use crate::util::units::{Bytes, SimTime};
 use std::collections::VecDeque;
 
 #[derive(Debug)]
@@ -76,6 +77,42 @@ impl Schedd {
             self.idle.push_back(id.proc);
             self.jobs.push(Job::new(spec, t));
         }
+    }
+
+    /// Submit a durable transfer task's *remaining* work as jobs: every
+    /// file the task's checkpoint does not record as done becomes one
+    /// job (input = the file, no compute, no output) in a single submit
+    /// transaction. Returns `(proc, file index)` pairs so the driving
+    /// fabric can report completions back to the
+    /// [`TaskRunner`](crate::mover::task::TaskRunner) that owns the
+    /// checkpoint. Already-done files are skipped entirely — on a
+    /// resumed task they never re-enter the queue, which is what the
+    /// byte counters in `tests/task_unified.rs` prove.
+    pub fn submit_task(&mut self, task: &TransferTask, t: SimTime) -> Vec<(u32, usize)> {
+        let base = self.jobs.len() as u32;
+        let mut mapping = Vec::new();
+        let mut specs = Vec::new();
+        for (idx, f) in task.files.iter().enumerate() {
+            if f.is_done() {
+                continue;
+            }
+            let proc_ = base + specs.len() as u32;
+            specs.push(JobSpec {
+                id: JobId {
+                    cluster: 1,
+                    proc: proc_,
+                },
+                owner: task.owner.clone(),
+                input_file: f.name.clone(),
+                input_extent: f.extent,
+                input_bytes: Bytes(f.bytes),
+                output_bytes: Bytes(0),
+                runtime_median_s: 0.0,
+            });
+            mapping.push((proc_, idx));
+        }
+        self.submit_transaction(specs, t);
+        mapping
     }
 
     pub fn job(&self, proc_: u32) -> &Job {
@@ -293,6 +330,22 @@ mod tests {
         assert_eq!(s.take_next_idle(), Some(1));
         assert!(s.take_idle(2));
         assert_eq!(s.take_next_idle(), None);
+    }
+
+    #[test]
+    fn submit_task_skips_done_files_and_maps_procs() {
+        use crate::mover::task::FileState;
+        let mut task = TransferTask::new("t", "alice").with_uniform_files("input", 4, 1000);
+        task.files[1].state = FileState::Done {
+            sha256: "00".repeat(32),
+        };
+        let mut s = Schedd::new("schedd", ThrottlePolicy::Disabled);
+        let mapping = s.submit_task(&task, SimTime::ZERO);
+        assert_eq!(mapping, vec![(0, 0), (1, 2), (2, 3)], "done file skipped");
+        assert_eq!(s.jobs.len(), 3);
+        assert_eq!(s.job(1).spec.input_file, "input_2");
+        assert_eq!(s.job(1).spec.owner, "alice");
+        assert_eq!(s.job(1).spec.input_bytes, Bytes(1000));
     }
 
     #[test]

@@ -10,6 +10,6 @@
 pub mod tcp;
 
 pub use tcp::{
-    run_real_pool, run_real_pool_router, run_real_pool_with, FileServer, RealPoolConfig,
-    RealPoolReport, ServerRole,
+    run_real_pool, run_real_pool_router, run_real_pool_with, run_real_task, FileServer,
+    RealPoolConfig, RealPoolReport, RealTaskConfig, RealTaskReport, ServerRole,
 };

@@ -25,6 +25,7 @@
 
 use crate::jobs::JobSpec;
 use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan};
+use crate::mover::task::{sha256_hex, synth_file_bytes, TaskProgress, TaskRunner, TunerSample};
 use crate::mover::{
     AdmissionConfig, DataSource, MoverStats, PoolRouter, Routed, RouterPolicy, RouterStats,
     ShadowPool, SourcePlan, SourceSelector, TransferRequest,
@@ -349,6 +350,22 @@ pub fn run_job(
     shard: usize,
     rng: &mut Prng,
 ) -> Result<(StreamStats, f64)> {
+    let (_input, stats, secs) = run_job_fetch(addr, pool_key, spec_input, output, shard, rng)?;
+    Ok((stats, secs))
+}
+
+/// [`run_job`] that also returns the fetched input payload, for callers
+/// that verify content end-to-end (the durable-task layer hashes every
+/// received file with the in-crate SHA-256 before checkpointing it as
+/// done — see [`run_real_task`]).
+pub fn run_job_fetch(
+    addr: std::net::SocketAddr,
+    pool_key: &PoolKey,
+    spec_input: &str,
+    output: &[u8],
+    shard: usize,
+    rng: &mut Prng,
+) -> Result<(Vec<u8>, StreamStats, f64)> {
     let t0 = std::time::Instant::now();
     let mut sock = TcpStream::connect(addr).context("connect to submit")?;
     sock.set_nodelay(true).ok();
@@ -359,7 +376,7 @@ pub fn run_job(
     sock.write_all(spec_input.as_bytes())?;
 
     let mut engine = NativeEngine::new(sess.method);
-    let (_input, stats) = recv_stream(&mut sock, &mut engine, &sess.key_words, &sess.nonce_words)?;
+    let (input, stats) = recv_stream(&mut sock, &mut engine, &sess.key_words, &sess.nonce_words)?;
 
     // "Run" the validation script: the data is already integrity-checked
     // frame by frame; job output is tiny, as in the paper.
@@ -372,7 +389,7 @@ pub fn run_job(
         output,
         256,
     )?;
-    Ok((stats, t0.elapsed().as_secs_f64()))
+    Ok((input, stats, t0.elapsed().as_secs_f64()))
 }
 
 /// Configuration for a real-mode pool run.
@@ -1183,6 +1200,413 @@ pub fn run_real_pool_router(
     Ok((report, router))
 }
 
+/// Knobs for a real-fabric durable-task run ([`run_real_task`]).
+///
+/// Deliberately smaller than [`RealPoolConfig`]: the dataset comes from
+/// the task itself (one deterministic synthetic file per
+/// [`FileEntry`](crate::mover::task::FileEntry), not a shared
+/// hard-linked extent), pacing/deadline/concurrency come from the
+/// [`TaskRunner`], and the chaos hook is a coordinator kill rather than
+/// a fault schedule.
+#[derive(Debug, Clone)]
+pub struct RealTaskConfig {
+    /// Worker threads pulling admitted files. Effective transfer
+    /// parallelism is `min(workers, task concurrency)` — the runner's
+    /// admission cap is the binding knob; workers are just executors.
+    pub workers: u32,
+    /// Server-side send chunking (words), fixed for the whole run: on
+    /// the real fabric the auto-tuner adjusts *concurrency* only,
+    /// because the file servers are started once with this chunk size
+    /// (chunk-size tuning closes the loop in the simulator, where the
+    /// chunk is re-read every window).
+    pub chunk_words: usize,
+    /// Use the PJRT artifact engine for sealing (falls back to native).
+    pub use_xla_engine: bool,
+    pub passphrase: String,
+    /// Shadow shards per endpoint (funnel node and DTN alike).
+    pub shadows: u32,
+    pub n_submit_nodes: u32,
+    pub router: RouterPolicy,
+    /// Data-transfer-node fleet size (0 = funnel-only).
+    pub data_nodes: u32,
+    pub source: SourcePlan,
+    pub source_selector: SourceSelector,
+    pub dtn_slots: u32,
+    pub dtn_queue_depth: u32,
+    /// Chaos hook: kill the coordinator after this many files complete
+    /// *this run* — workers stop immediately, in-flight transfers are
+    /// abandoned uncheckpointed and the fleet shuts down. A fresh
+    /// [`TaskRunner`] over the same journal resumes from the last
+    /// checkpoint without re-transferring completed files.
+    pub kill_after_files: Option<usize>,
+}
+
+impl Default for RealTaskConfig {
+    fn default() -> Self {
+        RealTaskConfig {
+            workers: 4,
+            chunk_words: crate::transfer::stream::DEFAULT_CHUNK_WORDS,
+            use_xla_engine: false,
+            passphrase: "htcdm-task".into(),
+            shadows: 1,
+            n_submit_nodes: 1,
+            router: RouterPolicy::LeastLoaded,
+            data_nodes: 0,
+            source: SourcePlan::SubmitFunnel,
+            source_selector: SourceSelector::RoundRobin,
+            dtn_slots: 0,
+            dtn_queue_depth: 0,
+            kill_after_files: None,
+        }
+    }
+}
+
+/// Results of one real-fabric task run — one coordinator lifetime. A
+/// killed run reports how far it got; the resumed run's
+/// `bytes_served_per_node` / `bytes_served_per_dtn` totals prove that
+/// checkpointed files were never re-transferred (only the remaining
+/// files' bytes hit the wire).
+#[derive(Debug)]
+pub struct RealTaskReport {
+    /// Task progress at shutdown (includes files resumed from the
+    /// journal, which this run never moved).
+    pub progress: TaskProgress,
+    /// Auto-tuner trajectory (empty without `AUTOTUNE`).
+    pub tuner: Vec<TunerSample>,
+    pub wall_secs: f64,
+    pub errors: u32,
+    /// Files completed AND checkpointed this run (excludes resumed).
+    pub files_transferred: u32,
+    /// Payload bytes received and verified by workers this run.
+    pub payload_bytes: u64,
+    pub mover: MoverStats,
+    pub router: RouterStats,
+    pub bytes_served_per_node: Vec<u64>,
+    pub bytes_served_per_dtn: Vec<u64>,
+    /// True when `kill_after_files` fired — the run ended as a
+    /// simulated coordinator crash, not by draining the task.
+    pub killed: bool,
+}
+
+/// Drive a [`TaskRunner`] through the real TCP loopback fabric: the
+/// same durable-task object the simulator runs
+/// (`coordinator::engine::run_task_sim`), here moving real sealed
+/// bytes. Each admitted file is routed through the pool router, fetched
+/// whole with [`run_job_fetch`], hashed with the in-crate SHA-256 and
+/// only then checkpointed done — so a resumed task re-verifies nothing
+/// and re-transfers nothing that already landed.
+///
+/// Returns the report and the runner (whose journal holds the final
+/// checkpoint) so callers can resume, inspect or re-run it.
+pub fn run_real_task(
+    cfg: &RealTaskConfig,
+    runner: TaskRunner,
+) -> Result<(RealTaskReport, TaskRunner)> {
+    let pool_key = PoolKey::from_passphrase(&cfg.passphrase);
+    let n_nodes = cfg.n_submit_nodes.max(1) as usize;
+    let nodes: Vec<ShadowPool> = (0..n_nodes)
+        .map(|_| {
+            ShadowPool::sim(
+                cfg.shadows.max(1),
+                AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+            )
+        })
+        .collect();
+    let mut router = PoolRouter::new(nodes, vec![1.0; n_nodes], cfg.router)
+        .with_source_plan(cfg.source, vec![1.0; cfg.data_nodes as usize])
+        .with_source_selector(cfg.source_selector)
+        .with_dtn_budget(cfg.dtn_slots)
+        .with_dtn_queue(cfg.dtn_queue_depth);
+    router.ensure_engines(shard_engine_factory(cfg.use_xla_engine));
+    if let Err(e) = router.source_plan().validate(router.dtn_count()) {
+        bail!("invalid source plan: {e}");
+    }
+
+    // The task's dataset: one deterministic synthetic file per entry,
+    // content keyed by file name so both fabrics (and both sides of a
+    // kill/resume boundary) agree on every file's bytes and hash.
+    let owner = runner.task().owner.clone();
+    let file_meta: Vec<(String, u64, Option<crate::storage::ExtentId>)> = runner
+        .task()
+        .files
+        .iter()
+        .map(|f| (f.name.clone(), f.bytes, f.extent))
+        .collect();
+    let mut files: HashMap<String, Arc<Vec<u8>>> = HashMap::new();
+    for (name, bytes, _) in &file_meta {
+        files.insert(name.clone(), Arc::new(synth_file_bytes(name, *bytes)));
+    }
+
+    let mut server_vec: Vec<Option<FileServer>> = Vec::with_capacity(n_nodes);
+    for node in 0..n_nodes {
+        server_vec.push(Some(FileServer::start(
+            files.clone(),
+            pool_key.clone(),
+            router.handles(node),
+            cfg.chunk_words,
+        )?));
+    }
+    let addrs: Arc<Mutex<Vec<std::net::SocketAddr>>> = Arc::new(Mutex::new(
+        server_vec
+            .iter()
+            .map(|s| s.as_ref().expect("just started").addr)
+            .collect(),
+    ));
+    let servers: Arc<Mutex<Vec<Option<FileServer>>>> = Arc::new(Mutex::new(server_vec));
+    let served_totals: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n_nodes).map(|_| AtomicU64::new(0)).collect());
+
+    // DTN fleet, only when the plan can reach it (no fault schedule
+    // here — the task layer's chaos hook is the coordinator kill).
+    let n_dtns = if router.source_plan().uses_dtns() {
+        router.dtn_count()
+    } else {
+        0
+    };
+    let mut dtn_services: Vec<EngineService> = Vec::new();
+    let mut dtn_handles: Vec<Vec<EngineHandle>> = Vec::with_capacity(n_dtns);
+    for _ in 0..n_dtns {
+        let mut handles = Vec::with_capacity(cfg.shadows.max(1) as usize);
+        for _ in 0..cfg.shadows.max(1) {
+            let svc = EngineService::spawn({
+                let f = shard_engine_factory(cfg.use_xla_engine);
+                move || f(0)
+            });
+            handles.push(svc.handle());
+            dtn_services.push(svc);
+        }
+        dtn_handles.push(handles);
+    }
+    let mut dtn_server_vec: Vec<Option<FileServer>> = Vec::with_capacity(n_dtns);
+    for handles in &dtn_handles {
+        dtn_server_vec.push(Some(FileServer::start_with_role(
+            ServerRole::Dtn,
+            files.clone(),
+            pool_key.clone(),
+            handles.clone(),
+            cfg.chunk_words,
+        )?));
+    }
+    let dtn_addrs: Arc<Mutex<Vec<std::net::SocketAddr>>> = Arc::new(Mutex::new(
+        dtn_server_vec
+            .iter()
+            .map(|s| s.as_ref().expect("just started").addr)
+            .collect(),
+    ));
+    let dtn_servers: Arc<Mutex<Vec<Option<FileServer>>>> = Arc::new(Mutex::new(dtn_server_vec));
+    let dtn_served_totals: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n_dtns).map(|_| AtomicU64::new(0)).collect());
+
+    let gate = Arc::new((
+        Mutex::new(GateState {
+            router,
+            ready: HashMap::new(),
+        }),
+        Condvar::new(),
+    ));
+    // The coordinator state every worker shares: the runner (admission
+    // pacing, checkpoints, tuner), the admitted-but-unclaimed file
+    // queue, and the kill switch. Lock order: gate, then runner; a
+    // worker never holds both (admission uses the gate, checkpointing
+    // uses the runner).
+    let runner = Arc::new(Mutex::new(runner));
+    let admitted: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let done_this_run = Arc::new(AtomicU64::new(0));
+    let payload_total = Arc::new(AtomicU64::new(0));
+    let errors_total = Arc::new(AtomicU64::new(0));
+    let t0 = std::time::Instant::now();
+
+    let mut worker_threads = Vec::new();
+    for w in 0..cfg.workers.max(1) {
+        let runner = runner.clone();
+        let admitted = admitted.clone();
+        let stop = stop.clone();
+        let done_this_run = done_this_run.clone();
+        let payload_total = payload_total.clone();
+        let errors_total = errors_total.clone();
+        let gate = gate.clone();
+        let addrs = addrs.clone();
+        let dtn_addrs = dtn_addrs.clone();
+        let key = pool_key.clone();
+        let owner = owner.clone();
+        let file_meta = file_meta.clone();
+        let kill_after = cfg.kill_after_files;
+        worker_threads.push(std::thread::spawn(move || {
+            let mut rng = Prng::new(0x7A53_0000 + w as u64);
+            // Tiny fixed "job output" — the task layer moves input
+            // sandboxes; the return stream is just the protocol's ack.
+            let output = vec![0x5Au8; 64];
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let now = t0.elapsed().as_secs_f64();
+                let next = admitted.lock().unwrap().pop();
+                let idx = match next {
+                    Some(i) => i,
+                    None => {
+                        let (fresh, finished) = {
+                            let mut r = runner.lock().unwrap();
+                            r.observe_window(now);
+                            let fresh = r.next_files(now);
+                            (fresh, r.done() || r.deadline_exceeded())
+                        };
+                        if fresh.is_empty() {
+                            if finished {
+                                break;
+                            }
+                            // Rate-paced, or peers hold the in-flight
+                            // files: wait for admission or a retry.
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            continue;
+                        }
+                        let mut q = admitted.lock().unwrap();
+                        q.extend(fresh);
+                        match q.pop() {
+                            Some(i) => i,
+                            None => continue,
+                        }
+                    }
+                };
+                let (name, bytes, extent) = file_meta[idx].clone();
+                let ticket = idx as u32;
+
+                // Route + wait for admission. No fault schedule runs
+                // here, so a ticket unadmitted after ~30 s is stranded:
+                // cancel it and send the file back to pending.
+                let (lock, cv) = &*gate;
+                let admission = {
+                    let mut g = lock.lock().unwrap();
+                    let mut req = TransferRequest::new(ticket, owner.clone(), bytes);
+                    req.extent = extent;
+                    for a in g.router.route_batch(vec![req]) {
+                        g.ready.insert(a.ticket, a);
+                    }
+                    cv.notify_all();
+                    let mut waits = 0u32;
+                    loop {
+                        if let Some(r) = g.ready.remove(&ticket) {
+                            break Some(r);
+                        }
+                        if stop.load(Ordering::Relaxed) || waits >= 600 {
+                            break None;
+                        }
+                        waits += 1;
+                        let (g2, _) = cv
+                            .wait_timeout(g, std::time::Duration::from_millis(50))
+                            .unwrap();
+                        g = g2;
+                    }
+                };
+                let Some(routed) = admission else {
+                    {
+                        let mut g = lock.lock().unwrap();
+                        g.ready.remove(&ticket);
+                        for a in g.router.complete(ticket) {
+                            g.ready.insert(a.ticket, a);
+                        }
+                        cv.notify_all();
+                    }
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    log::error!("task file {name} stranded waiting for admission");
+                    errors_total.fetch_add(1, Ordering::Relaxed);
+                    let _ = runner.lock().unwrap().file_failed(idx);
+                    continue;
+                };
+
+                let addr = match routed.source {
+                    DataSource::Funnel { node } => addrs.lock().unwrap()[node],
+                    DataSource::Dtn { dtn } => dtn_addrs.lock().unwrap()[dtn],
+                };
+                let result = run_job_fetch(addr, &key, &name, &output, routed.shard, &mut rng);
+                {
+                    let mut g = lock.lock().unwrap();
+                    g.ready.remove(&ticket);
+                    for a in g.router.complete(ticket) {
+                        g.ready.insert(a.ticket, a);
+                    }
+                    cv.notify_all();
+                }
+                if stop.load(Ordering::Relaxed) {
+                    // Coordinator killed while this transfer was on the
+                    // wire: abandon it uncheckpointed — the resumed run
+                    // re-transfers it (never the checkpointed ones).
+                    break;
+                }
+                match result {
+                    Ok((input, st, _secs)) => {
+                        let digest = sha256_hex(&input);
+                        let now = t0.elapsed().as_secs_f64();
+                        let done = runner.lock().unwrap().file_done(idx, &digest, now);
+                        match done {
+                            Ok(()) => {
+                                payload_total.fetch_add(st.payload_bytes, Ordering::Relaxed);
+                                let n = done_this_run.fetch_add(1, Ordering::Relaxed) + 1;
+                                if kill_after == Some(n as usize) {
+                                    stop.store(true, Ordering::Relaxed);
+                                    cv.notify_all();
+                                }
+                            }
+                            Err(e) => {
+                                log::error!("task file {name} checkpoint failed: {e:#}");
+                                errors_total.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        log::error!("task file {name} transfer failed: {e:#}");
+                        errors_total.fetch_add(1, Ordering::Relaxed);
+                        let _ = runner.lock().unwrap().file_failed(idx);
+                    }
+                }
+            }
+        }));
+    }
+    for t in worker_threads {
+        t.join().map_err(|_| anyhow!("task worker thread panicked"))?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    stop_fleet(&servers, &served_totals);
+    stop_fleet(&dtn_servers, &dtn_served_totals);
+    drop(dtn_services);
+    let bytes_served_per_node: Vec<u64> = served_totals
+        .iter()
+        .map(|t| t.load(Ordering::Relaxed))
+        .collect();
+    let bytes_served_per_dtn: Vec<u64> = dtn_served_totals
+        .iter()
+        .map(|t| t.load(Ordering::Relaxed))
+        .collect();
+
+    let router = Arc::try_unwrap(gate)
+        .map_err(|_| anyhow!("admission gate still referenced after join"))?
+        .0
+        .into_inner()
+        .map_err(|_| anyhow!("admission gate poisoned"))?
+        .router;
+    let runner = Arc::try_unwrap(runner)
+        .map_err(|_| anyhow!("task runner still referenced after join"))?
+        .into_inner()
+        .map_err(|_| anyhow!("task runner poisoned"))?;
+    let report = RealTaskReport {
+        progress: runner.progress(),
+        tuner: runner.tuner_trajectory().to_vec(),
+        wall_secs: wall,
+        errors: errors_total.load(Ordering::Relaxed) as u32,
+        files_transferred: done_this_run.load(Ordering::Relaxed) as u32,
+        payload_bytes: payload_total.load(Ordering::Relaxed),
+        mover: router.stats(),
+        router: router.router_stats(),
+        bytes_served_per_node,
+        bytes_served_per_dtn,
+        killed: stop.load(Ordering::Relaxed),
+    };
+    Ok((report, runner))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1464,5 +1888,105 @@ mod tests {
         let err = run_job(server.addr, &bad, "f", &[0u8; 16], 0, &mut rng);
         assert!(err.is_err(), "bad pool key must fail the handshake");
         server.stop();
+    }
+
+    use crate::mover::task::{synth_file_sha256, TaskJournal, TransferTask};
+
+    const TASK_FILE_BYTES: u64 = 256 << 10;
+
+    fn task_cfg() -> RealTaskConfig {
+        RealTaskConfig {
+            workers: 2,
+            chunk_words: 1024, // 4 KiB frames keep the test quick
+            passphrase: "test".into(),
+            ..RealTaskConfig::default()
+        }
+    }
+
+    fn six_file_task(name: &str) -> TransferTask {
+        TransferTask::new(name, "alice").with_uniform_files("input", 6, TASK_FILE_BYTES)
+    }
+
+    #[test]
+    fn real_task_completes_and_verifies_every_file() {
+        let runner =
+            TaskRunner::new(six_file_task("tcp-task"), TaskJournal::memory()).unwrap();
+        let (r, runner) = run_real_task(&task_cfg(), runner).unwrap();
+        assert_eq!(r.errors, 0);
+        assert!(!r.killed);
+        assert!(runner.done());
+        assert_eq!(r.progress.files_done, 6);
+        assert_eq!(r.files_transferred, 6);
+        assert_eq!(r.payload_bytes, 6 * TASK_FILE_BYTES);
+        assert_eq!(r.bytes_served_per_node.iter().sum::<u64>(), 6 * TASK_FILE_BYTES);
+        for i in 0..6 {
+            let f = runner.file(i);
+            assert_eq!(
+                f.state,
+                crate::mover::task::FileState::Done {
+                    sha256: synth_file_sha256(&f.name, f.bytes)
+                },
+                "file {i} must verify against its deterministic content"
+            );
+        }
+    }
+
+    #[test]
+    fn real_task_routes_bytes_through_dtn_fleet() {
+        let mut cfg = task_cfg();
+        cfg.data_nodes = 2;
+        cfg.source = SourcePlan::DedicatedDtn;
+        let runner =
+            TaskRunner::new(six_file_task("tcp-task-dtn"), TaskJournal::memory()).unwrap();
+        let (r, _runner) = run_real_task(&cfg, runner).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.progress.files_done, 6);
+        assert_eq!(r.bytes_served_per_node.iter().sum::<u64>(), 0);
+        assert_eq!(r.bytes_served_per_dtn.iter().sum::<u64>(), 6 * TASK_FILE_BYTES);
+    }
+
+    #[test]
+    fn real_task_kill_and_resume_skips_checkpointed_files() {
+        let dir = std::env::temp_dir().join(format!("htcdm-tcp-task-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let mut cfg = task_cfg();
+        cfg.kill_after_files = Some(2);
+        let runner = TaskRunner::new(
+            six_file_task("tcp-resume"),
+            TaskJournal::dir(dir.clone()).unwrap(),
+        )
+        .unwrap();
+        let (r1, _dead) = run_real_task(&cfg, runner).unwrap();
+        assert!(r1.killed, "the kill switch must have fired");
+        let done1 = r1.progress.files_done;
+        assert!((2..6).contains(&done1), "killed mid-task: {done1} done");
+
+        // A brand-new coordinator over the same journal: resumes the
+        // checkpointed files and moves ONLY the remaining ones — the
+        // server-side byte counter is the proof.
+        cfg.kill_after_files = None;
+        let runner = TaskRunner::new(
+            six_file_task("tcp-resume"),
+            TaskJournal::dir(dir.clone()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(runner.files_resumed(), done1);
+        let (r2, runner) = run_real_task(&cfg, runner).unwrap();
+        assert_eq!(r2.errors, 0);
+        assert!(!r2.killed);
+        assert_eq!(r2.progress.files_done, 6);
+        assert_eq!(r2.progress.files_resumed, done1);
+        assert_eq!(r2.files_transferred as usize, 6 - done1);
+        assert_eq!(
+            r2.bytes_served_per_node.iter().sum::<u64>(),
+            (6 - done1) as u64 * TASK_FILE_BYTES,
+            "checkpointed files must not hit the wire again"
+        );
+        for i in 0..6 {
+            let f = runner.file(i);
+            assert!(f.is_done(), "file {i} incomplete after resume");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

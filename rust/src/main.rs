@@ -3,6 +3,7 @@
 //! ```text
 //! htcdm experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay> [--scale N] [--csv FILE]
 //! htcdm pool [--jobs N] [--workers W] [--mb SIZE] [--native]
+//! htcdm task [--files N] [--mb SIZE] [--task-dir DIR] [--sim] [--kill-after N]
 //! htcdm submit <submit-file>       # parse + print the expanded transaction
 //! htcdm verify                     # cross-check PJRT artifact vs native engine
 //! htcdm sizing                     # the paper's §II steady-state arithmetic
@@ -58,6 +59,21 @@ fn usage() -> ! {
                       kill:d0@1' (wall-clock seconds, dN = data node), with\n\
                       --steal N enabling work-stealing past an N-deep\n\
                       queue imbalance and --ramp N hysteretic recovery\n\
+           task       [--files N] [--mb SIZE] [--name NAME] [--owner NAME]\n\
+                      [--task-dir DIR] [--rate-mbps R] [--deadline-s S]\n\
+                      [--autotune] [--concurrency N] [--workers W] [--sim]\n\
+                      [--kill-after N] [--data-nodes N]\n\
+                      [--source funnel|dtn|hybrid[:BYTES]] [--native]\n\
+                      run a durable multi-file transfer task: per-file\n\
+                      checkpoints journalled under --task-dir survive a\n\
+                      coordinator restart (re-run the same command to\n\
+                      resume; completed files are never re-transferred,\n\
+                      every file is SHA-256-verified); --rate-mbps and\n\
+                      --deadline-s bound admission, --autotune closes the\n\
+                      concurrency/chunk loop on observed goodput,\n\
+                      --kill-after N simulates a coordinator crash after\n\
+                      N files, --sim drives the virtual-time engine\n\
+                      instead of the loopback fabric\n\
            submit     <file>   parse a submit description and print the jobs\n\
            verify              cross-check the PJRT artifact vs the native engine\n\
            sizing              print the paper's steady-state pool arithmetic"
@@ -76,6 +92,7 @@ fn main() -> anyhow::Result<()> {
     match args.first().map(|s| s.as_str()) {
         Some("experiment") => cmd_experiment(&args[1..]),
         Some("pool") => cmd_pool(&args[1..]),
+        Some("task") => cmd_task(&args[1..]),
         Some("submit") => cmd_submit(&args[1..]),
         Some("verify") => cmd_verify(),
         Some("sizing") => {
@@ -334,6 +351,113 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
             "chaos: recovered {} | retried-after-fault {} | work-stolen {}",
             r.mover.node_recovered, r.mover.retried_after_fault, r.mover.stolen
         );
+    }
+    Ok(())
+}
+
+fn cmd_task(args: &[String]) -> anyhow::Result<()> {
+    use htcdm::fabric::{run_real_task, RealTaskConfig};
+    use htcdm::mover::{tuner_json, TaskJournal, TaskRunner, TransferTask};
+
+    let n_files: usize = arg_value(args, "--files")
+        .map(|v| v.parse().expect("--files N"))
+        .unwrap_or(8);
+    let mb: u64 = arg_value(args, "--mb")
+        .map(|v| v.parse().expect("--mb SIZE"))
+        .unwrap_or(4);
+    let name = arg_value(args, "--name").unwrap_or_else(|| "task".into());
+    let owner = arg_value(args, "--owner").unwrap_or_else(|| "cli".into());
+    let mut task = TransferTask::new(name.as_str(), owner.as_str()).with_uniform_files(
+        "input",
+        n_files,
+        mb << 20,
+    );
+    if let Some(r) = arg_value(args, "--rate-mbps") {
+        let mbps: f64 = r.parse().expect("--rate-mbps R");
+        task = task.with_rate_bps((mbps * 1e6) as u64);
+    }
+    if let Some(d) = arg_value(args, "--deadline-s") {
+        task = task.with_deadline_s(d.parse().expect("--deadline-s S"));
+    }
+    if args.iter().any(|a| a == "--autotune") {
+        task = task.with_autotune(true);
+    }
+    if let Some(c) = arg_value(args, "--concurrency") {
+        task = task.with_concurrency(c.parse().expect("--concurrency N"));
+    }
+    let journal = match arg_value(args, "--task-dir") {
+        Some(dir) => TaskJournal::dir(std::path::PathBuf::from(dir))?,
+        None => TaskJournal::memory(),
+    };
+    let runner = TaskRunner::new(task, journal)?;
+    if runner.files_resumed() > 0 {
+        eprintln!(
+            "resuming '{name}': {} of {n_files} files already checkpointed done",
+            runner.files_resumed()
+        );
+    }
+    let kill_after: Option<usize> =
+        arg_value(args, "--kill-after").map(|v| v.parse().expect("--kill-after N"));
+
+    if args.iter().any(|a| a == "--sim") {
+        use htcdm::coordinator::engine::{run_task_sim_with_kill, EngineSpec};
+        use htcdm::netsim::topology::TestbedSpec;
+        let spec = EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled);
+        let mut runner = runner;
+        let r = run_task_sim_with_kill(&spec, &mut runner, kill_after)?;
+        println!(
+            "sim task '{}': {}/{} files done ({} resumed) | {:.1} MiB verified | {:.2} s \
+             makespan | retries {} | killed {}",
+            name,
+            r.progress.files_done,
+            r.progress.files_total,
+            r.progress.files_resumed,
+            r.progress.verified_bytes as f64 / (1 << 20) as f64,
+            r.makespan_s,
+            r.progress.retries,
+            r.killed,
+        );
+        println!("{}", r.progress.to_json());
+        if !r.tuner.is_empty() {
+            println!("tuner trajectory: {}", tuner_json(&r.tuner));
+        }
+    } else {
+        let source = match arg_value(args, "--source") {
+            None => htcdm::mover::SourcePlan::SubmitFunnel,
+            Some(s) => htcdm::mover::SourcePlan::parse(&s).unwrap_or_else(|| {
+                eprintln!("unknown --source '{s}'");
+                usage()
+            }),
+        };
+        let cfg = RealTaskConfig {
+            workers: arg_value(args, "--workers")
+                .map(|v| v.parse().expect("--workers W"))
+                .unwrap_or(4),
+            use_xla_engine: !args.iter().any(|a| a == "--native"),
+            data_nodes: arg_value(args, "--data-nodes")
+                .map(|v| v.parse().expect("--data-nodes N"))
+                .unwrap_or(0),
+            source,
+            kill_after_files: kill_after,
+            ..Default::default()
+        };
+        let (r, _runner) = run_real_task(&cfg, runner)?;
+        println!(
+            "real task '{}': {}/{} files done ({} resumed) | {:.1} MiB moved | {:.2} s wall | \
+             errors {} | killed {}",
+            name,
+            r.progress.files_done,
+            r.progress.files_total,
+            r.progress.files_resumed,
+            r.payload_bytes as f64 / (1 << 20) as f64,
+            r.wall_secs,
+            r.errors,
+            r.killed,
+        );
+        println!("{}", r.progress.to_json());
+        if !r.tuner.is_empty() {
+            println!("tuner trajectory: {}", tuner_json(&r.tuner));
+        }
     }
     Ok(())
 }

@@ -39,6 +39,12 @@
 //!   identically by the simulator (flows abort, NICs re-rate) and the
 //!   real TCP fabric (file servers crash and restart, workers retry
 //!   through the router), with per-node fault timelines in the reports.
+//! * [`task`] — the durable managed-transfer layer above the router:
+//!   [`TransferTask`] / [`TaskRunner`] / [`TaskJournal`] make named,
+//!   checkpointed multi-file tasks (per-file pending / in-flight /
+//!   done+sha256, resumable across coordinator restarts) the unit the
+//!   control plane owns, with per-task rate limits, deadlines, and a
+//!   goodput-driven auto-tuner over concurrency and chunk size.
 //! * [`pool`] — [`ShadowPool`]: the [`DataMover`] implementation that
 //!   shards admitted transfers across N shadow workers, each with its
 //!   *own* [`SealEngine`](crate::runtime::engine::SealEngine) service —
@@ -59,6 +65,7 @@ pub mod queue;
 pub mod router;
 pub mod source;
 pub mod state;
+pub mod task;
 
 pub use chaos::{ChaosTimeline, FaultEvent, FaultPlan, FaultRecord};
 pub use policy::{ActiveView, AdmissionConfig, AdmissionPolicy};
@@ -67,6 +74,10 @@ pub use queue::AdmissionQueue;
 pub use router::{PoolRouter, Routed, RouterPolicy, RouterStats};
 pub use source::{DataSource, SourcePlan, SourceSelector, DEFAULT_DTN_THRESHOLD};
 pub use state::{shards_from_config, RouterStateHandle, DEFAULT_ROUTER_SHARDS};
+pub use task::{
+    sha256_hex, synth_file_bytes, synth_file_sha256, tuner_json, FileState, TaskJournal,
+    TaskProgress, TaskRunner, TransferTask, TunerSample,
+};
 
 use crate::storage::ExtentId;
 

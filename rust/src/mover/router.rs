@@ -529,7 +529,11 @@ impl SourceSel {
 
     /// Release a ticket's DTN placement: a still-queued ticket just
     /// frees its wait-queue entry; a slot holder frees the slot, which
-    /// immediately promotes the longest-queued waiter into it.
+    /// immediately promotes the longest-queued waiter into it — unless
+    /// the node is down: during [`PoolRouter::fail_dtn`]'s re-source
+    /// loop every queued waiter is itself about to be re-sourced, and
+    /// promoting one into the freed slot would have it transiently
+    /// holding a slot on a dead node.
     fn release_dtn(&mut self, ticket: u32, dtn: usize) {
         if let Some(q) = self.waitq.get_mut(dtn) {
             if let Some(pos) = q.iter().position(|&t| t == ticket) {
@@ -538,6 +542,9 @@ impl SourceSel {
             }
         }
         self.dtn_active[dtn] = self.dtn_active[dtn].saturating_sub(1);
+        if self.dtn_down.get(dtn).copied().unwrap_or(false) {
+            return;
+        }
         if let Some(q) = self.waitq.get_mut(dtn) {
             if q.pop_front().is_some() {
                 // The promoted ticket now holds the freed slot; its
@@ -545,6 +552,62 @@ impl SourceSel {
                 self.dtn_active[dtn] += 1;
             }
         }
+    }
+
+    /// Pick a surviving data node for a transfer whose preferred
+    /// endpoint died but that is NOT going through admission again
+    /// (e.g. a job output): the active selector spreads the failover
+    /// traffic under the same policy as admissions — rotation for the
+    /// cursor-based selectors (outputs carry no owner/extent context),
+    /// the deficit counters for weighted-by-capacity — and a
+    /// budget-aware forward scan prefers a node with a free admission
+    /// slot. No slot is consumed: outputs are not budget-gated, the
+    /// scan only steers them away from saturated nodes. `None` when
+    /// the whole fleet is down.
+    fn failover_dtn(&mut self) -> Option<usize> {
+        if self.dtn_live.is_empty() {
+            return None;
+        }
+        let preferred = match self.selector {
+            SourceSelector::WeightedByCapacity => {
+                let total: f64 = self.dtn_live.iter().map(|&d| self.dtn_capacity[d]).sum();
+                if total > 0.0 {
+                    let SourceSel {
+                        dtn_live,
+                        dtn_credit,
+                        dtn_capacity,
+                        ..
+                    } = self;
+                    for &d in dtn_live.iter() {
+                        dtn_credit[d] += dtn_capacity[d] / total;
+                    }
+                }
+                *self
+                    .dtn_live
+                    .iter()
+                    .max_by(|&&a, &&b| {
+                        self.dtn_credit[a]
+                            .partial_cmp(&self.dtn_credit[b])
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(b.cmp(&a)) // ties → lowest index
+                    })
+                    .expect("live is non-empty")
+            }
+            _ => self.rr_preferred(),
+        };
+        let chosen = if self.has_slot(preferred) {
+            preferred
+        } else {
+            let n = self.dtn_down.len();
+            (1..n)
+                .map(|k| (preferred + k) % n)
+                .find(|&d| !self.dtn_down[d] && self.has_slot(d))
+                .unwrap_or(preferred)
+        };
+        if self.selector == SourceSelector::WeightedByCapacity {
+            self.dtn_credit[chosen] -= 1.0;
+        }
+        Some(chosen)
     }
 
     /// Mark one extent hot on a data node, maintaining the inverse
@@ -833,12 +896,14 @@ impl PoolRouter {
     }
 
     /// The source an already-admitted transfer (e.g. a job output)
-    /// should use NOW: `preferred` if still live, else a surviving DTN,
-    /// else `node`'s funnel.
-    pub fn output_source(&self, preferred: DataSource, node: usize) -> DataSource {
+    /// should use NOW: `preferred` if still live, else a surviving DTN
+    /// picked by the active [`SourceSelector`] (so failover traffic
+    /// spreads across the fleet instead of hammering the lowest-indexed
+    /// survivor), else `node`'s funnel.
+    pub fn output_source(&mut self, preferred: DataSource, node: usize) -> DataSource {
         match preferred {
             DataSource::Dtn { dtn } if self.sel.dtn_down.get(dtn).copied().unwrap_or(true) => {
-                match self.sel.dtn_down.iter().position(|&d| !d) {
+                match self.sel.failover_dtn() {
                     Some(live) => DataSource::Dtn { dtn: live },
                     None => DataSource::Funnel { node },
                 }
@@ -885,6 +950,13 @@ impl PoolRouter {
                 source,
             });
         }
+        // Each re-source above pulled its ticket out of the dead node's
+        // wait queue (and the down flag blocks promotions into freed
+        // slots), so by here both the queue and the slot count must be
+        // empty — drain defensively so recovery starts clean even if a
+        // ticket was skipped for missing node/shard bookkeeping.
+        self.sel.waitq[dtn].clear();
+        self.sel.dtn_active[dtn] = 0;
         out
     }
 
@@ -2070,6 +2142,63 @@ mod tests {
         );
         let funnel = DataSource::Funnel { node: 0 };
         assert_eq!(router.output_source(funnel, 0), funnel);
+    }
+
+    #[test]
+    fn output_failover_spreads_across_survivors() {
+        let mut router = rr_router(1).with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 4]);
+        router.fail_dtn(0);
+        let mut counts = [0u32; 4];
+        for _ in 0..30 {
+            match router.output_source(DataSource::Dtn { dtn: 0 }, 0) {
+                DataSource::Dtn { dtn } => counts[dtn] += 1,
+                other => panic!("expected a DTN failover, got {other:?}"),
+            }
+        }
+        assert_eq!(counts[0], 0, "dead node serves nothing");
+        for (d, &c) in counts.iter().enumerate().skip(1) {
+            assert_eq!(c, 10, "rotation spreads outputs evenly, dtn {d} got {c}");
+        }
+    }
+
+    #[test]
+    fn output_failover_follows_weighted_selector() {
+        let mut router = rr_router(1)
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0, 75.0, 25.0])
+            .with_source_selector(SourceSelector::WeightedByCapacity);
+        router.fail_dtn(0);
+        let mut counts = [0u32; 3];
+        for _ in 0..100 {
+            match router.output_source(DataSource::Dtn { dtn: 0 }, 0) {
+                DataSource::Dtn { dtn } => counts[dtn] += 1,
+                other => panic!("expected a DTN failover, got {other:?}"),
+            }
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[1], 75, "capacity-weighted failover split");
+        assert_eq!(counts[2], 25);
+    }
+
+    #[test]
+    fn output_failover_prefers_free_admission_slots() {
+        let mut router = rr_router(1)
+            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 3])
+            .with_dtn_budget(1);
+        // Saturate dtn 1's only slot, then kill dtn 0: the rotation
+        // would hand the next failover to dtn 1, but the budget scan
+        // steers it to dtn 2's free slot instead.
+        for t in 0..3 {
+            let adm = router.request(r(t, "o", 10));
+            assert_eq!(adm[0].source, DataSource::Dtn { dtn: t as usize });
+        }
+        router.complete(0);
+        router.complete(2);
+        router.fail_dtn(0);
+        assert_eq!(
+            router.output_source(DataSource::Dtn { dtn: 0 }, 0),
+            DataSource::Dtn { dtn: 2 },
+            "budget-aware scan skips the saturated survivor"
+        );
     }
 
     #[test]

@@ -1,0 +1,1271 @@
+//! Durable transfer tasks: the managed-transfer service layer above
+//! [`PoolRouter`](crate::mover::PoolRouter).
+//!
+//! Everything below the router is fire-and-forget per burst: a
+//! coordinator restart silently abandons every in-flight transfer,
+//! because the unit the control plane owns is a socket. This module
+//! makes *tasks* the owned unit (the Globus-service model): a
+//! [`TransferTask`] is a named multi-file dataset transfer with a
+//! JSON-serializable checkpoint — per-file state pending / in-flight /
+//! done+sha256 — persisted through a [`TaskJournal`] (in-memory for the
+//! simulator, file-backed under `--task-dir` for the real fabric). Kill
+//! the coordinator mid-task, restart it, rebuild a [`TaskRunner`] from
+//! the same journal, and the task resumes from its last checkpoint:
+//! completed files are never re-transferred, and every completed file
+//! carries an end-to-end SHA-256 recorded at completion.
+//!
+//! The runner also owns the task-scoped control loops:
+//!
+//! * **admission**: per-task concurrency cap, rate limit
+//!   (`TASK_RATE_BPS`, a leaky-bucket arrival curve on admitted bytes)
+//!   and deadline (`TASK_DEADLINE_S`, past which nothing further is
+//!   admitted) — all enforced in [`TaskRunner::next_files`];
+//! * **auto-tuning** (`AUTOTUNE`): a deterministic hill-climb
+//!   ([`AutoTuner`]) that adjusts the task's concurrency and chunk size
+//!   from observed per-window goodput, closing the loop on the static
+//!   `CHUNK` knob and the `chunk_sweep` bench.
+//!
+//! Both fabrics drive the *same* runner object
+//! (`coordinator::engine::run_task_sim` / `fabric::tcp::run_real_task`;
+//! `tests/task_unified.rs` moves one task through both), per the repo's
+//! sim/real unification invariant.
+
+use crate::security::sha256::Sha256;
+use crate::storage::ExtentId;
+use crate::util::Prng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Auto-tuner floor for a task's concurrent-file cap.
+pub const MIN_CONCURRENCY: u32 = 1;
+/// Auto-tuner ceiling for a task's concurrent-file cap.
+pub const MAX_CONCURRENCY: u32 = 64;
+/// Auto-tuner floor for a task's transfer chunk size (words).
+pub const MIN_CHUNK_WORDS: usize = 256;
+/// Auto-tuner ceiling for a task's transfer chunk size (words).
+pub const MAX_CHUNK_WORDS: usize = 64 * 1024;
+
+/// Per-file transfer state inside a task's checkpoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FileState {
+    /// Not yet admitted.
+    Pending,
+    /// Admitted; bytes (possibly) on the wire. A checkpoint loaded with
+    /// files in this state demotes them to [`FileState::Pending`] — the
+    /// transfer died with the coordinator that was running it.
+    InFlight,
+    /// Transferred and verified: the receiver's SHA-256 over the full
+    /// payload, recorded at completion. A resumed task never re-admits
+    /// a done file.
+    Done {
+        /// Lowercase hex SHA-256 of the received payload.
+        sha256: String,
+    },
+}
+
+/// One file of a task's dataset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileEntry {
+    /// Name in the source catalog (`FileServer` key / sim storage name).
+    pub name: String,
+    pub bytes: u64,
+    /// Physical extent behind the name, for cache-aware source
+    /// selection (`None` = unknown).
+    pub extent: Option<ExtentId>,
+    pub state: FileState,
+    /// Failed attempts so far (the file returned to pending each time).
+    pub retries: u32,
+}
+
+impl FileEntry {
+    pub fn is_done(&self) -> bool {
+        matches!(self.state, FileState::Done { .. })
+    }
+}
+
+/// A named, durable multi-file transfer task: the dataset plus the
+/// task-scoped knobs, all of it JSON-serializable as the checkpoint a
+/// [`TaskJournal`] persists.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferTask {
+    /// Task name — the journal key (one checkpoint file per name).
+    pub name: String,
+    /// Owner, the router's fair-share / affinity key.
+    pub owner: String,
+    pub files: Vec<FileEntry>,
+    /// Admission rate limit in bytes/second (0 = unlimited): cumulative
+    /// admitted bytes never exceed `rate_bps × elapsed`.
+    pub rate_bps: u64,
+    /// Deadline in seconds from task start (0 = none): past it nothing
+    /// further is admitted (in-flight files drain) and the task reports
+    /// `deadline_exceeded`.
+    pub deadline_s: f64,
+    /// Closed-loop tuning of `concurrency` / `chunk_words` from
+    /// observed per-window goodput.
+    pub autotune: bool,
+    /// Max concurrently admitted files (the auto-tuner's first knob).
+    pub concurrency: u32,
+    /// Transfer chunk size in words (the auto-tuner's second knob; the
+    /// static `CHUNK` default otherwise).
+    pub chunk_words: usize,
+    /// Goodput observation window for the auto-tuner, seconds.
+    pub tune_window_s: f64,
+}
+
+impl TransferTask {
+    pub fn new(name: impl Into<String>, owner: impl Into<String>) -> TransferTask {
+        TransferTask {
+            name: name.into(),
+            owner: owner.into(),
+            files: Vec::new(),
+            rate_bps: 0,
+            deadline_s: 0.0,
+            autotune: false,
+            concurrency: 4,
+            chunk_words: crate::transfer::stream::DEFAULT_CHUNK_WORDS,
+            tune_window_s: 1.0,
+        }
+    }
+
+    /// Append one pending file (builder style).
+    pub fn with_file(mut self, name: impl Into<String>, bytes: u64) -> TransferTask {
+        self.files.push(FileEntry {
+            name: name.into(),
+            bytes,
+            extent: None,
+            state: FileState::Pending,
+            retries: 0,
+        });
+        self
+    }
+
+    /// Append `n` uniform pending files named `<stem>_0..n-1`.
+    pub fn with_uniform_files(mut self, stem: &str, n: usize, bytes: u64) -> TransferTask {
+        for i in 0..n {
+            self = self.with_file(format!("{stem}_{i}"), bytes);
+        }
+        self
+    }
+
+    pub fn with_rate_bps(mut self, bps: u64) -> TransferTask {
+        self.rate_bps = bps;
+        self
+    }
+
+    pub fn with_deadline_s(mut self, s: f64) -> TransferTask {
+        self.deadline_s = s;
+        self
+    }
+
+    pub fn with_autotune(mut self, on: bool) -> TransferTask {
+        self.autotune = on;
+        self
+    }
+
+    pub fn with_concurrency(mut self, c: u32) -> TransferTask {
+        self.concurrency = c.max(1);
+        self
+    }
+
+    pub fn with_chunk_words(mut self, w: usize) -> TransferTask {
+        self.chunk_words = w.clamp(MIN_CHUNK_WORDS, MAX_CHUNK_WORDS);
+        self
+    }
+
+    pub fn with_tune_window_s(mut self, s: f64) -> TransferTask {
+        self.tune_window_s = s.max(1e-6);
+        self
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.bytes).sum()
+    }
+
+    /// Serialize the full checkpoint (dataset states + knobs).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(192 + self.files.len() * 96);
+        out.push_str(&format!(
+            "{{\"name\":{},\"owner\":{},\"rate_bps\":{},\"deadline_s\":{},\
+             \"autotune\":{},\"concurrency\":{},\"chunk_words\":{},\"tune_window_s\":{},\
+             \"files\":[",
+            json::escape(&self.name),
+            json::escape(&self.owner),
+            self.rate_bps,
+            self.deadline_s,
+            self.autotune,
+            self.concurrency,
+            self.chunk_words,
+            self.tune_window_s,
+        ));
+        for (i, f) in self.files.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let extent = match f.extent {
+                Some(ExtentId(e)) => e.to_string(),
+                None => "null".to_string(),
+            };
+            match &f.state {
+                FileState::Done { sha256 } => out.push_str(&format!(
+                    "{{\"name\":{},\"bytes\":{},\"extent\":{},\"retries\":{},\
+                     \"state\":\"done\",\"sha256\":{}}}",
+                    json::escape(&f.name),
+                    f.bytes,
+                    extent,
+                    f.retries,
+                    json::escape(sha256),
+                )),
+                state => out.push_str(&format!(
+                    "{{\"name\":{},\"bytes\":{},\"extent\":{},\"retries\":{},\"state\":\"{}\"}}",
+                    json::escape(&f.name),
+                    f.bytes,
+                    extent,
+                    f.retries,
+                    if *state == FileState::InFlight {
+                        "in-flight"
+                    } else {
+                        "pending"
+                    },
+                )),
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Parse a checkpoint written by [`TransferTask::to_json`].
+    pub fn from_json(text: &str) -> Result<TransferTask> {
+        let v = json::parse(text).context("task checkpoint")?;
+        let mut task = TransferTask::new(
+            v.str_field("name")?.to_string(),
+            v.str_field("owner")?.to_string(),
+        );
+        task.rate_bps = v.u64_field("rate_bps")?;
+        task.deadline_s = v.f64_field("deadline_s")?;
+        task.autotune = v.bool_field("autotune")?;
+        task.concurrency = (v.u64_field("concurrency")? as u32).max(1);
+        task.chunk_words =
+            (v.u64_field("chunk_words")? as usize).clamp(MIN_CHUNK_WORDS, MAX_CHUNK_WORDS);
+        task.tune_window_s = v.f64_field("tune_window_s")?.max(1e-6);
+        for fv in v.arr_field("files")? {
+            let state = match fv.str_field("state")? {
+                "done" => FileState::Done {
+                    sha256: fv.str_field("sha256")?.to_string(),
+                },
+                "in-flight" => FileState::InFlight,
+                "pending" => FileState::Pending,
+                other => bail!("unknown file state '{other}'"),
+            };
+            task.files.push(FileEntry {
+                name: fv.str_field("name")?.to_string(),
+                bytes: fv.u64_field("bytes")?,
+                extent: fv.opt_u64_field("extent")?.map(ExtentId),
+                state,
+                retries: fv.u64_field("retries")? as u32,
+            });
+        }
+        Ok(task)
+    }
+}
+
+/// Minimal JSON reader for task checkpoints (the crate is fully offline
+/// — no serde): objects, arrays, strings with the escapes
+/// [`escape`](json::escape) emits, numbers, booleans, null.
+mod json {
+    use anyhow::{bail, Result};
+
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Val {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Val>),
+        Obj(Vec<(String, Val)>),
+    }
+
+    impl Val {
+        fn field(&self, key: &str) -> Result<&Val> {
+            match self {
+                Val::Obj(kv) => kv
+                    .iter()
+                    .find(|(k, _)| k == key)
+                    .map(|(_, v)| v)
+                    .ok_or_else(|| anyhow::anyhow!("missing field '{key}'")),
+                _ => bail!("'{key}' looked up on a non-object"),
+            }
+        }
+
+        pub fn str_field(&self, key: &str) -> Result<&str> {
+            match self.field(key)? {
+                Val::Str(s) => Ok(s),
+                v => bail!("field '{key}' is not a string: {v:?}"),
+            }
+        }
+
+        pub fn f64_field(&self, key: &str) -> Result<f64> {
+            match self.field(key)? {
+                Val::Num(n) => Ok(*n),
+                v => bail!("field '{key}' is not a number: {v:?}"),
+            }
+        }
+
+        pub fn u64_field(&self, key: &str) -> Result<u64> {
+            let n = self.f64_field(key)?;
+            if n < 0.0 || n.fract() != 0.0 {
+                bail!("field '{key}' is not a non-negative integer: {n}");
+            }
+            Ok(n as u64)
+        }
+
+        /// `null` → `None`; a number → `Some`.
+        pub fn opt_u64_field(&self, key: &str) -> Result<Option<u64>> {
+            match self.field(key)? {
+                Val::Null => Ok(None),
+                Val::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(Some(*n as u64)),
+                v => bail!("field '{key}' is not null or an integer: {v:?}"),
+            }
+        }
+
+        pub fn bool_field(&self, key: &str) -> Result<bool> {
+            match self.field(key)? {
+                Val::Bool(b) => Ok(*b),
+                v => bail!("field '{key}' is not a bool: {v:?}"),
+            }
+        }
+
+        pub fn arr_field(&self, key: &str) -> Result<&[Val]> {
+            match self.field(key)? {
+                Val::Arr(a) => Ok(a),
+                v => bail!("field '{key}' is not an array: {v:?}"),
+            }
+        }
+    }
+
+    /// Quote and escape a string for embedding in JSON output.
+    pub fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+        out
+    }
+
+    pub fn parse(text: &str) -> Result<Val> {
+        let b = text.as_bytes();
+        let mut pos = 0;
+        let v = value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        if pos != b.len() {
+            bail!("trailing garbage at byte {pos}");
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], pos: &mut usize) {
+        while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+            *pos += 1;
+        }
+    }
+
+    fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<()> {
+        if *pos < b.len() && b[*pos] == c {
+            *pos += 1;
+            Ok(())
+        } else {
+            bail!("expected '{}' at byte {}", c as char, *pos)
+        }
+    }
+
+    fn value(b: &[u8], pos: &mut usize) -> Result<Val> {
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b'{') => object(b, pos),
+            Some(b'[') => array(b, pos),
+            Some(b'"') => Ok(Val::Str(string(b, pos)?)),
+            Some(b't') => lit(b, pos, "true", Val::Bool(true)),
+            Some(b'f') => lit(b, pos, "false", Val::Bool(false)),
+            Some(b'n') => lit(b, pos, "null", Val::Null),
+            Some(_) => number(b, pos),
+            None => bail!("unexpected end of input"),
+        }
+    }
+
+    fn lit(b: &[u8], pos: &mut usize, word: &str, v: Val) -> Result<Val> {
+        if b[*pos..].starts_with(word.as_bytes()) {
+            *pos += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", *pos)
+        }
+    }
+
+    fn object(b: &[u8], pos: &mut usize) -> Result<Val> {
+        expect(b, pos, b'{')?;
+        let mut kv = Vec::new();
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b'}') {
+            *pos += 1;
+            return Ok(Val::Obj(kv));
+        }
+        loop {
+            skip_ws(b, pos);
+            let key = string(b, pos)?;
+            skip_ws(b, pos);
+            expect(b, pos, b':')?;
+            kv.push((key, value(b, pos)?));
+            skip_ws(b, pos);
+            match b.get(*pos) {
+                Some(b',') => *pos += 1,
+                Some(b'}') => {
+                    *pos += 1;
+                    return Ok(Val::Obj(kv));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", *pos),
+            }
+        }
+    }
+
+    fn array(b: &[u8], pos: &mut usize) -> Result<Val> {
+        expect(b, pos, b'[')?;
+        let mut items = Vec::new();
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b']') {
+            *pos += 1;
+            return Ok(Val::Arr(items));
+        }
+        loop {
+            items.push(value(b, pos)?);
+            skip_ws(b, pos);
+            match b.get(*pos) {
+                Some(b',') => *pos += 1,
+                Some(b']') => {
+                    *pos += 1;
+                    return Ok(Val::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", *pos),
+            }
+        }
+    }
+
+    fn string(b: &[u8], pos: &mut usize) -> Result<String> {
+        expect(b, pos, b'"')?;
+        let mut out = Vec::new();
+        while *pos < b.len() {
+            match b[*pos] {
+                b'"' => {
+                    *pos += 1;
+                    return String::from_utf8(out).map_err(|_| anyhow::anyhow!("bad utf8"));
+                }
+                b'\\' => {
+                    *pos += 1;
+                    match b.get(*pos) {
+                        Some(b'"') => out.push(b'"'),
+                        Some(b'\\') => out.push(b'\\'),
+                        Some(b'/') => out.push(b'/'),
+                        Some(b'n') => out.push(b'\n'),
+                        Some(b'r') => out.push(b'\r'),
+                        Some(b't') => out.push(b'\t'),
+                        Some(b'u') => {
+                            let hex = b
+                                .get(*pos + 1..*pos + 5)
+                                .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                            let c = char::from_u32(code)
+                                .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?;
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                            *pos += 4;
+                        }
+                        _ => bail!("bad escape at byte {}", *pos),
+                    }
+                    *pos += 1;
+                }
+                c => {
+                    out.push(c);
+                    *pos += 1;
+                }
+            }
+        }
+        bail!("unterminated string")
+    }
+
+    fn number(b: &[u8], pos: &mut usize) -> Result<Val> {
+        let start = *pos;
+        while *pos < b.len()
+            && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            *pos += 1;
+        }
+        let s = std::str::from_utf8(&b[start..*pos])?;
+        Ok(Val::Num(s.parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("bad number '{s}' at byte {start}")
+        })?))
+    }
+}
+
+/// Where task checkpoints live: the simulator keeps them in memory, the
+/// real fabric writes one `<name>.json` per task under a directory
+/// (`--task-dir`), atomically (tmp + rename) so a crash mid-write never
+/// corrupts the last good checkpoint.
+#[derive(Debug)]
+pub enum TaskJournal {
+    Memory(HashMap<String, String>),
+    Dir(PathBuf),
+}
+
+impl TaskJournal {
+    /// In-memory journal (the simulator; also unit tests).
+    pub fn memory() -> TaskJournal {
+        TaskJournal::Memory(HashMap::new())
+    }
+
+    /// File-backed journal under `dir` (created if missing).
+    pub fn dir(dir: impl Into<PathBuf>) -> Result<TaskJournal> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create task dir {}", dir.display()))?;
+        Ok(TaskJournal::Dir(dir))
+    }
+
+    fn path_for(dir: &std::path::Path, name: &str) -> PathBuf {
+        // Task names key file names: keep them path-safe.
+        let safe: String = name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
+        dir.join(format!("{safe}.json"))
+    }
+
+    /// Persist one checkpoint under the task's name.
+    pub fn save(&mut self, task: &TransferTask) -> Result<()> {
+        let text = task.to_json();
+        match self {
+            TaskJournal::Memory(map) => {
+                map.insert(task.name.clone(), text);
+                Ok(())
+            }
+            TaskJournal::Dir(dir) => {
+                let path = TaskJournal::path_for(dir, &task.name);
+                let tmp = path.with_extension("json.tmp");
+                std::fs::write(&tmp, &text)
+                    .with_context(|| format!("write {}", tmp.display()))?;
+                std::fs::rename(&tmp, &path)
+                    .with_context(|| format!("rename into {}", path.display()))?;
+                Ok(())
+            }
+        }
+    }
+
+    /// Load the last checkpoint saved under `name`, if any.
+    pub fn load(&self, name: &str) -> Result<Option<TransferTask>> {
+        let text = match self {
+            TaskJournal::Memory(map) => map.get(name).cloned(),
+            TaskJournal::Dir(dir) => {
+                let path = TaskJournal::path_for(dir, name);
+                match std::fs::read_to_string(&path) {
+                    Ok(t) => Some(t),
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+                    Err(e) => {
+                        return Err(anyhow!(e)).context(format!("read {}", path.display()))
+                    }
+                }
+            }
+        };
+        text.map(|t| TransferTask::from_json(&t)).transpose()
+    }
+}
+
+/// One auto-tuner observation: the knob settings that produced one
+/// window's goodput (recorded *before* the post-window adjustment).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunerSample {
+    /// Window end, seconds from task start.
+    pub t_s: f64,
+    pub goodput_bps: f64,
+    pub concurrency: u32,
+    pub chunk_words: usize,
+}
+
+/// Serialize a tuner trajectory as a JSON array (the `tuner` field of
+/// the per-task report; schema in `docs/REPORTS.md`).
+pub fn tuner_json(samples: &[TunerSample]) -> String {
+    let rows: Vec<String> = samples
+        .iter()
+        .map(|s| {
+            format!(
+                "{{\"t_s\":{:.6},\"goodput_bps\":{:.0},\"concurrency\":{},\"chunk_words\":{}}}",
+                s.t_s, s.goodput_bps, s.concurrency, s.chunk_words
+            )
+        })
+        .collect();
+    format!("[{}]", rows.join(","))
+}
+
+/// Deterministic hill-climber over a task's (concurrency, chunk size):
+/// each goodput window adjusts one knob in the current direction,
+/// alternating knobs between windows; a ≥5% goodput drop against the
+/// previous window reverses direction. No randomness — identical inputs
+/// produce identical trajectories on both fabrics.
+#[derive(Debug, Default)]
+pub struct AutoTuner {
+    /// +1 = raising the active knob, -1 = lowering.
+    direction: i8,
+    /// Alternates each window between the two knobs.
+    tune_chunk: bool,
+    last_goodput: Option<f64>,
+    trajectory: Vec<TunerSample>,
+}
+
+impl AutoTuner {
+    pub fn new() -> AutoTuner {
+        AutoTuner {
+            direction: 1,
+            tune_chunk: false,
+            last_goodput: None,
+            trajectory: Vec::new(),
+        }
+    }
+
+    pub fn trajectory(&self) -> &[TunerSample] {
+        &self.trajectory
+    }
+
+    /// Fold in one window's goodput and adjust the live knobs in place.
+    fn step(&mut self, t_s: f64, goodput_bps: f64, concurrency: &mut u32, chunk_words: &mut usize) {
+        self.trajectory.push(TunerSample {
+            t_s,
+            goodput_bps,
+            concurrency: *concurrency,
+            chunk_words: *chunk_words,
+        });
+        if let Some(prev) = self.last_goodput {
+            if goodput_bps < prev * 0.95 {
+                self.direction = -self.direction;
+            }
+        }
+        self.last_goodput = Some(goodput_bps);
+        if self.tune_chunk {
+            *chunk_words = if self.direction > 0 {
+                (*chunk_words * 2).min(MAX_CHUNK_WORDS)
+            } else {
+                (*chunk_words / 2).max(MIN_CHUNK_WORDS)
+            };
+        } else {
+            let step = (*concurrency / 4).max(1);
+            *concurrency = if self.direction > 0 {
+                (*concurrency + step).min(MAX_CONCURRENCY)
+            } else {
+                concurrency.saturating_sub(step).max(MIN_CONCURRENCY)
+            };
+        }
+        self.tune_chunk = !self.tune_chunk;
+    }
+}
+
+/// A task's progress snapshot for reports (schema in `docs/REPORTS.md`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskProgress {
+    pub name: String,
+    pub files_total: usize,
+    pub files_done: usize,
+    /// Files already done when the runner was built — restored from the
+    /// journal's checkpoint, never re-transferred.
+    pub files_resumed: usize,
+    pub bytes_total: u64,
+    /// Bytes of completed files, each carrying its recorded SHA-256.
+    pub verified_bytes: u64,
+    /// Failed attempts across the task's lifetime (summed over files;
+    /// survives checkpoints).
+    pub retries: u64,
+    pub deadline_exceeded: bool,
+    /// Live (possibly auto-tuned) knob values.
+    pub concurrency: u32,
+    pub chunk_words: usize,
+}
+
+impl TaskProgress {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"task\":{},\"files_total\":{},\"files_done\":{},\"files_resumed\":{},\
+             \"bytes_total\":{},\"verified_bytes\":{},\"retries\":{},\
+             \"deadline_exceeded\":{},\"concurrency\":{},\"chunk_words\":{}}}",
+            json::escape(&self.name),
+            self.files_total,
+            self.files_done,
+            self.files_resumed,
+            self.bytes_total,
+            self.verified_bytes,
+            self.retries,
+            self.deadline_exceeded,
+            self.concurrency,
+            self.chunk_words,
+        )
+    }
+}
+
+/// The durable executor of one [`TransferTask`]: owns the live file
+/// states, enforces the task's admission knobs, checkpoints through the
+/// journal after every completion, and (with `autotune`) closes the
+/// goodput feedback loop. Both fabrics drive the same runner API:
+/// [`TaskRunner::next_files`] to admit, [`TaskRunner::file_done`] /
+/// [`TaskRunner::file_failed`] to report, [`TaskRunner::observe_window`]
+/// to tick the tuner.
+#[derive(Debug)]
+pub struct TaskRunner {
+    task: TransferTask,
+    journal: TaskJournal,
+    tuner: AutoTuner,
+    /// Task-relative clock origin, set on the first admission call.
+    clock0: Option<f64>,
+    window_start: Option<f64>,
+    window_bytes: u64,
+    /// Cumulative admitted bytes (the rate limiter's arrival curve).
+    admitted_bytes: u64,
+    files_resumed: usize,
+    deadline_exceeded: bool,
+    /// Live knob values (start from the task's, then auto-tuned).
+    concurrency: u32,
+    chunk_words: usize,
+}
+
+impl TaskRunner {
+    /// Build a runner, resuming from the journal's checkpoint when one
+    /// exists under the task's name: files the checkpoint records as
+    /// done (matched by name AND size) stay done — they are never
+    /// re-admitted — and checkpointed in-flight files demote to pending
+    /// (their transfer died with the previous coordinator). Tuned knob
+    /// values persist across the restart. Saves a fresh checkpoint.
+    pub fn new(task: TransferTask, journal: TaskJournal) -> Result<TaskRunner> {
+        let mut task = task;
+        for f in &mut task.files {
+            if f.state == FileState::InFlight {
+                f.state = FileState::Pending;
+            }
+        }
+        if let Some(saved) = journal.load(&task.name)? {
+            task.concurrency = saved.concurrency.max(1);
+            task.chunk_words = saved.chunk_words.clamp(MIN_CHUNK_WORDS, MAX_CHUNK_WORDS);
+            for sf in saved.files {
+                let Some(f) = task
+                    .files
+                    .iter_mut()
+                    .find(|f| f.name == sf.name && f.bytes == sf.bytes)
+                else {
+                    continue;
+                };
+                f.retries = f.retries.max(sf.retries);
+                if sf.is_done() && !f.is_done() {
+                    f.state = sf.state;
+                }
+            }
+        }
+        let files_resumed = task.files.iter().filter(|f| f.is_done()).count();
+        let concurrency = task.concurrency.max(1);
+        let chunk_words = task.chunk_words.clamp(MIN_CHUNK_WORDS, MAX_CHUNK_WORDS);
+        let mut runner = TaskRunner {
+            task,
+            journal,
+            tuner: AutoTuner::new(),
+            clock0: None,
+            window_start: None,
+            window_bytes: 0,
+            admitted_bytes: 0,
+            files_resumed,
+            deadline_exceeded: false,
+            concurrency,
+            chunk_words,
+        };
+        runner.checkpoint()?;
+        Ok(runner)
+    }
+
+    pub fn task(&self) -> &TransferTask {
+        &self.task
+    }
+
+    pub fn file(&self, idx: usize) -> &FileEntry {
+        &self.task.files[idx]
+    }
+
+    pub fn concurrency(&self) -> u32 {
+        self.concurrency
+    }
+
+    pub fn chunk_words(&self) -> usize {
+        self.chunk_words
+    }
+
+    pub fn deadline_exceeded(&self) -> bool {
+        self.deadline_exceeded
+    }
+
+    pub fn files_resumed(&self) -> usize {
+        self.files_resumed
+    }
+
+    pub fn tuner_trajectory(&self) -> &[TunerSample] {
+        self.tuner.trajectory()
+    }
+
+    /// Spec-level knob overrides (the `TASK_RATE_BPS` /
+    /// `TASK_DEADLINE_S` / `AUTOTUNE` config path).
+    pub fn set_rate_bps(&mut self, bps: u64) {
+        self.task.rate_bps = bps;
+    }
+
+    pub fn set_deadline_s(&mut self, s: f64) {
+        self.task.deadline_s = s;
+    }
+
+    pub fn set_autotune(&mut self, on: bool) {
+        self.task.autotune = on;
+    }
+
+    /// Every file transferred (and verified).
+    pub fn done(&self) -> bool {
+        self.task.files.iter().all(|f| f.is_done())
+    }
+
+    fn in_flight(&self) -> usize {
+        self.task
+            .files
+            .iter()
+            .filter(|f| f.state == FileState::InFlight)
+            .count()
+    }
+
+    /// Admission: return (and mark in-flight) the pending files that may
+    /// start *now*, under the task's concurrency cap, rate limit and
+    /// deadline. `now_s` is fabric time — virtual seconds in the sim,
+    /// wall-clock seconds on the real fabric; the first call pins the
+    /// task's clock origin.
+    pub fn next_files(&mut self, now_s: f64) -> Vec<usize> {
+        let t0 = *self.clock0.get_or_insert(now_s);
+        self.window_start.get_or_insert(now_s);
+        let elapsed = (now_s - t0).max(0.0);
+        let pending_left = self.task.files.iter().any(|f| f.state == FileState::Pending);
+        if self.task.deadline_s > 0.0 && elapsed >= self.task.deadline_s {
+            // Past the deadline nothing further is admitted; in-flight
+            // files drain. The flag only trips when work was cut off.
+            if pending_left {
+                self.deadline_exceeded = true;
+            }
+            return Vec::new();
+        }
+        let mut admitted = Vec::new();
+        let mut in_flight = self.in_flight();
+        for idx in 0..self.task.files.len() {
+            if self.task.files[idx].state != FileState::Pending {
+                continue;
+            }
+            if in_flight + admitted.len() >= self.concurrency as usize {
+                break;
+            }
+            // Leaky-bucket arrival curve: cumulative admitted bytes stay
+            // under rate × elapsed (the first file always passes at 0).
+            if self.task.rate_bps > 0
+                && self.admitted_bytes as f64 > self.task.rate_bps as f64 * elapsed
+            {
+                break;
+            }
+            self.admitted_bytes += self.task.files[idx].bytes;
+            self.task.files[idx].state = FileState::InFlight;
+            admitted.push(idx);
+        }
+        if !admitted.is_empty() {
+            in_flight += admitted.len();
+            let _ = in_flight; // bookkeeping clarity; state is authoritative
+        }
+        admitted
+    }
+
+    /// Earliest instant [`TaskRunner::next_files`] could next admit a
+    /// pending file — the rate limiter's next token instant, clamped to
+    /// the deadline (where admission flips to deadline-exceeded
+    /// instead). Virtual-time drivers use this to advance the clock
+    /// through rate-limited idle gaps. `None` when nothing further will
+    /// ever be admitted.
+    pub fn next_admission_time(&self) -> Option<f64> {
+        let t0 = self.clock0?;
+        if self.deadline_exceeded {
+            return None;
+        }
+        if !self.task.files.iter().any(|f| f.state == FileState::Pending) {
+            return None;
+        }
+        let mut t = t0;
+        if self.task.rate_bps > 0 {
+            t = t.max(t0 + self.admitted_bytes as f64 / self.task.rate_bps as f64);
+        }
+        if self.task.deadline_s > 0.0 {
+            t = t.min(t0 + self.task.deadline_s);
+        }
+        Some(t)
+    }
+
+    /// End of the current goodput window, for virtual-time drivers.
+    pub fn next_window_deadline(&self) -> Option<f64> {
+        if !self.task.autotune {
+            return None;
+        }
+        Some(self.window_start? + self.task.tune_window_s)
+    }
+
+    /// A file's transfer completed; `sha256_hex` is the receiver's hash
+    /// over the full payload. Checkpoints the task through the journal
+    /// before returning — this is the durability point.
+    pub fn file_done(&mut self, idx: usize, sha256_hex: &str, now_s: f64) -> Result<()> {
+        let f = self
+            .task
+            .files
+            .get_mut(idx)
+            .ok_or_else(|| anyhow!("file index {idx} out of range"))?;
+        if f.is_done() {
+            bail!("file {idx} ('{}') completed twice", f.name);
+        }
+        f.state = FileState::Done {
+            sha256: sha256_hex.to_string(),
+        };
+        self.window_bytes += f.bytes;
+        let _ = now_s;
+        self.checkpoint()
+    }
+
+    /// A file's transfer failed: back to pending for re-admission (its
+    /// admitted bytes stay on the rate limiter's ledger — the attempt
+    /// consumed real bandwidth). Checkpoints the retry count.
+    pub fn file_failed(&mut self, idx: usize) -> Result<()> {
+        let f = self
+            .task
+            .files
+            .get_mut(idx)
+            .ok_or_else(|| anyhow!("file index {idx} out of range"))?;
+        if f.is_done() {
+            bail!("file {idx} ('{}') failed after completing", f.name);
+        }
+        f.state = FileState::Pending;
+        f.retries += 1;
+        self.checkpoint()
+    }
+
+    /// Tick the auto-tuner: when a goodput window has elapsed, fold its
+    /// observed goodput into the hill-climb and adjust the live
+    /// concurrency / chunk knobs. No-op without `autotune`.
+    pub fn observe_window(&mut self, now_s: f64) {
+        if !self.task.autotune {
+            return;
+        }
+        let Some(ws) = self.window_start else { return };
+        if now_s - ws < self.task.tune_window_s {
+            return;
+        }
+        let t0 = self.clock0.unwrap_or(ws);
+        let goodput = self.window_bytes as f64 / (now_s - ws);
+        self.tuner
+            .step(now_s - t0, goodput, &mut self.concurrency, &mut self.chunk_words);
+        self.window_start = Some(now_s);
+        self.window_bytes = 0;
+    }
+
+    pub fn progress(&self) -> TaskProgress {
+        let files_done = self.task.files.iter().filter(|f| f.is_done()).count();
+        let verified_bytes = self
+            .task
+            .files
+            .iter()
+            .filter(|f| f.is_done())
+            .map(|f| f.bytes)
+            .sum();
+        let retries = self.task.files.iter().map(|f| f.retries as u64).sum();
+        TaskProgress {
+            name: self.task.name.clone(),
+            files_total: self.task.files.len(),
+            files_done,
+            files_resumed: self.files_resumed,
+            bytes_total: self.task.total_bytes(),
+            verified_bytes,
+            retries,
+            deadline_exceeded: self.deadline_exceeded,
+            concurrency: self.concurrency,
+            chunk_words: self.chunk_words,
+        }
+    }
+
+    /// Persist the current state (live knob values included, so a
+    /// restart resumes with the tuned settings).
+    fn checkpoint(&mut self) -> Result<()> {
+        self.task.concurrency = self.concurrency;
+        self.task.chunk_words = self.chunk_words;
+        self.journal.save(&self.task)
+    }
+}
+
+/// Lowercase hex SHA-256 of `data` (the end-to-end integrity hash a
+/// completed file records in its checkpoint).
+pub fn sha256_hex(data: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(data);
+    let digest = h.finalize();
+    let mut out = String::with_capacity(64);
+    for b in digest {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+/// Deterministic synthetic content for task file `name`: both fabrics
+/// generate (and serve / hash) the same bytes, so a checkpoint's
+/// SHA-256 is portable across the simulator and the real fabric.
+pub fn synth_file_bytes(name: &str, bytes: u64) -> Vec<u8> {
+    let mut rng = Prng::new(0x7461_736b).derive(name); // "task"
+    let mut buf = vec![0u8; bytes as usize];
+    rng.fill_bytes(&mut buf);
+    buf
+}
+
+/// SHA-256 a file's synthetic content would hash to (what a verified
+/// transfer of [`synth_file_bytes`] must record).
+pub fn synth_file_sha256(name: &str, bytes: u64) -> String {
+    sha256_hex(&synth_file_bytes(name, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_task() -> TransferTask {
+        TransferTask::new("t", "alice").with_uniform_files("input", 4, 1000)
+    }
+
+    fn temp_journal_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("htcdm-task-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn sha256_hex_known_vector() {
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn synth_content_is_deterministic_and_name_keyed() {
+        assert_eq!(synth_file_sha256("f0", 4096), synth_file_sha256("f0", 4096));
+        assert_ne!(synth_file_sha256("f0", 4096), synth_file_sha256("f1", 4096));
+    }
+
+    #[test]
+    fn checkpoint_json_roundtrips_every_state() {
+        let mut task = tiny_task()
+            .with_rate_bps(1_000_000)
+            .with_deadline_s(60.0)
+            .with_autotune(true)
+            .with_concurrency(8)
+            .with_chunk_words(4096);
+        task.files[0].state = FileState::Done {
+            sha256: synth_file_sha256("input_0", 1000),
+        };
+        task.files[1].state = FileState::InFlight;
+        task.files[1].retries = 2;
+        task.files[2].extent = Some(ExtentId(7));
+        let parsed = TransferTask::from_json(&task.to_json()).unwrap();
+        assert_eq!(parsed, task);
+    }
+
+    #[test]
+    fn checkpoint_json_escapes_names() {
+        let task = TransferTask::new("we\"ird\\name\n", "bob \"the\" owner").with_file("f", 1);
+        let parsed = TransferTask::from_json(&task.to_json()).unwrap();
+        assert_eq!(parsed.name, task.name);
+        assert_eq!(parsed.owner, task.owner);
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(TransferTask::from_json("not json").is_err());
+        assert!(TransferTask::from_json("{\"name\":\"x\"}").is_err());
+        assert!(TransferTask::from_json("{} trailing").is_err());
+    }
+
+    #[test]
+    fn memory_journal_roundtrips() {
+        let mut j = TaskJournal::memory();
+        assert!(j.load("t").unwrap().is_none());
+        let task = tiny_task();
+        j.save(&task).unwrap();
+        assert_eq!(j.load("t").unwrap().unwrap(), task);
+    }
+
+    #[test]
+    fn dir_journal_roundtrips_and_overwrites() {
+        let dir = temp_journal_dir("journal");
+        let mut j = TaskJournal::dir(&dir).unwrap();
+        assert!(j.load("t").unwrap().is_none());
+        let mut task = tiny_task();
+        j.save(&task).unwrap();
+        task.files[3].state = FileState::Done {
+            sha256: synth_file_sha256("input_3", 1000),
+        };
+        j.save(&task).unwrap();
+        let j2 = TaskJournal::dir(&dir).unwrap();
+        assert_eq!(j2.load("t").unwrap().unwrap(), task);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn runner_enforces_concurrency_cap() {
+        let task = tiny_task().with_concurrency(2);
+        let mut r = TaskRunner::new(task, TaskJournal::memory()).unwrap();
+        assert_eq!(r.next_files(0.0), vec![0, 1], "cap of 2");
+        assert!(r.next_files(0.0).is_empty(), "both slots busy");
+        r.file_done(0, &synth_file_sha256("input_0", 1000), 1.0).unwrap();
+        assert_eq!(r.next_files(1.0), vec![2], "completion freed a slot");
+    }
+
+    #[test]
+    fn runner_paces_admission_to_the_rate_limit() {
+        // 1000-byte files against 1000 B/s: one admission per second.
+        let task = tiny_task().with_rate_bps(1000).with_concurrency(8);
+        let mut r = TaskRunner::new(task, TaskJournal::memory()).unwrap();
+        assert_eq!(r.next_files(0.0), vec![0], "first file rides the empty bucket");
+        assert!(r.next_files(0.5).is_empty(), "bucket refills at 1000 B/s");
+        assert_eq!(r.next_admission_time(), Some(1.0));
+        assert_eq!(r.next_files(1.0), vec![1]);
+        assert_eq!(r.next_files(3.0), vec![2, 3], "burst after a long gap");
+    }
+
+    #[test]
+    fn runner_deadline_stops_admission_and_flags() {
+        let task = tiny_task().with_deadline_s(2.0).with_concurrency(1);
+        let mut r = TaskRunner::new(task, TaskJournal::memory()).unwrap();
+        assert_eq!(r.next_files(0.0), vec![0]);
+        r.file_done(0, &synth_file_sha256("input_0", 1000), 1.0).unwrap();
+        assert!(r.next_files(2.5).is_empty(), "past the deadline");
+        assert!(r.deadline_exceeded());
+        assert!(r.next_admission_time().is_none());
+        assert!(!r.done());
+    }
+
+    #[test]
+    fn runner_resumes_from_checkpoint_without_readmitting_done_files() {
+        let dir = temp_journal_dir("resume");
+        {
+            let mut r =
+                TaskRunner::new(tiny_task(), TaskJournal::dir(&dir).unwrap()).unwrap();
+            let admitted = r.next_files(0.0);
+            assert_eq!(admitted, vec![0, 1, 2, 3]);
+            r.file_done(0, &synth_file_sha256("input_0", 1000), 0.5).unwrap();
+            r.file_done(2, &synth_file_sha256("input_2", 1000), 0.7).unwrap();
+            // Coordinator "dies" here: files 1 and 3 stay in-flight.
+        }
+        let mut r2 = TaskRunner::new(tiny_task(), TaskJournal::dir(&dir).unwrap()).unwrap();
+        assert_eq!(r2.files_resumed(), 2);
+        let p = r2.progress();
+        assert_eq!(p.files_done, 2);
+        assert_eq!(p.verified_bytes, 2000);
+        assert_eq!(
+            r2.next_files(0.0),
+            vec![1, 3],
+            "in-flight demoted to pending; done files never re-admitted"
+        );
+        r2.file_done(1, &synth_file_sha256("input_1", 1000), 0.2).unwrap();
+        r2.file_done(3, &synth_file_sha256("input_3", 1000), 0.3).unwrap();
+        assert!(r2.done());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn runner_retries_failed_files_and_counts_them() {
+        let task = tiny_task().with_concurrency(1);
+        let mut r = TaskRunner::new(task, TaskJournal::memory()).unwrap();
+        assert_eq!(r.next_files(0.0), vec![0]);
+        r.file_failed(0).unwrap();
+        assert_eq!(r.next_files(0.1), vec![0], "failed file re-admitted");
+        r.file_done(0, &synth_file_sha256("input_0", 1000), 0.2).unwrap();
+        assert_eq!(r.progress().retries, 1);
+        assert!(r.file_done(0, "beef", 0.3).is_err(), "double complete rejected");
+    }
+
+    #[test]
+    fn autotuner_climbs_under_rising_goodput_and_reverses_on_drop() {
+        let mut tuner = AutoTuner::new();
+        let mut c = 4u32;
+        let mut w = 1024usize;
+        tuner.step(1.0, 1e6, &mut c, &mut w);
+        assert_eq!(c, 5, "first window raises concurrency");
+        tuner.step(2.0, 2e6, &mut c, &mut w);
+        assert_eq!(w, 2048, "second window raises chunk");
+        tuner.step(3.0, 1e6, &mut c, &mut w);
+        assert_eq!(c, 4, "50% goodput drop reverses direction");
+        assert_eq!(tuner.trajectory().len(), 3);
+        assert_eq!(tuner.trajectory()[0].concurrency, 4, "pre-adjust values recorded");
+    }
+
+    #[test]
+    fn runner_windows_drive_the_tuner() {
+        let task = tiny_task().with_autotune(true).with_tune_window_s(1.0).with_concurrency(2);
+        let mut r = TaskRunner::new(task, TaskJournal::memory()).unwrap();
+        r.next_files(0.0);
+        r.file_done(0, &synth_file_sha256("input_0", 1000), 0.4).unwrap();
+        r.observe_window(0.5);
+        assert!(r.tuner_trajectory().is_empty(), "window not elapsed yet");
+        r.observe_window(1.25);
+        assert_eq!(r.tuner_trajectory().len(), 1);
+        assert!((r.tuner_trajectory()[0].goodput_bps - 800.0).abs() < 1.0, "1000 B / 1.25 s");
+        assert_eq!(r.concurrency(), 3, "tuner raised the cap");
+        assert_eq!(r.next_window_deadline(), Some(2.25));
+    }
+
+    #[test]
+    fn tuned_knobs_survive_a_restart() {
+        let dir = temp_journal_dir("tuned");
+        {
+            let task = tiny_task().with_autotune(true).with_tune_window_s(0.5);
+            let mut r = TaskRunner::new(task, TaskJournal::dir(&dir).unwrap()).unwrap();
+            r.next_files(0.0);
+            r.file_done(0, &synth_file_sha256("input_0", 1000), 0.4).unwrap();
+            r.observe_window(0.6);
+            assert_eq!(r.concurrency(), 5);
+            // checkpoint() runs inside file_done; force one more with the
+            // tuned values by completing another file.
+            r.file_done(1, &synth_file_sha256("input_1", 1000), 0.7).unwrap();
+        }
+        let r2 = TaskRunner::new(tiny_task(), TaskJournal::dir(&dir).unwrap()).unwrap();
+        assert_eq!(r2.concurrency(), 5, "tuned concurrency resumed");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn progress_json_matches_reports_schema() {
+        let r = TaskRunner::new(tiny_task(), TaskJournal::memory()).unwrap();
+        let json = r.progress().to_json();
+        let v = TransferTask::from_json(&json);
+        assert!(v.is_err(), "progress is not a task checkpoint");
+        assert!(json.contains("\"task\":\"t\""));
+        assert!(json.contains("\"files_total\":4"));
+        assert!(json.contains("\"deadline_exceeded\":false"));
+        let tuner = tuner_json(&[TunerSample {
+            t_s: 1.0,
+            goodput_bps: 2.5e9,
+            concurrency: 8,
+            chunk_words: 16384,
+        }]);
+        assert!(tuner.starts_with('['), "{tuner}");
+        assert!(tuner.contains("\"concurrency\":8"));
+    }
+}

@@ -690,6 +690,98 @@ fn prop_owner_affinity_source_repins_on_kill() {
     });
 }
 
+/// DTN slot accounting under failure: after `fail_dtn` on a data node
+/// carrying both slot-holders and queued waiters, the dead node's slot
+/// count and wait queue are exactly empty, every affected ticket is
+/// re-sourced exactly once off the corpse, and fleet-wide accounting is
+/// conserved (every DTN-sourced ticket holds exactly one slot or queue
+/// entry) — no leaked or double-released slots, for every selector.
+#[test]
+fn prop_dtn_slot_accounting_exact_under_fail() {
+    check("dtn-slot-accounting-fail", 40, |g| {
+        let n_dtns = g.rng.range_usize(2, 5);
+        let slots = g.rng.range_u64(1, 3) as u32;
+        let depth = g.rng.range_u64(1, 3) as u32;
+        let selector = [
+            SourceSelector::RoundRobin,
+            SourceSelector::CacheAware,
+            SourceSelector::OwnerAffinity,
+            SourceSelector::WeightedByCapacity,
+        ][g.rng.range_usize(0, 3)];
+        let mut router = PoolRouter::sim(
+            2,
+            1,
+            AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+            RouterPolicy::RoundRobin,
+        )
+        .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; n_dtns])
+        .with_source_selector(selector)
+        .with_dtn_budget(slots)
+        .with_dtn_queue(depth);
+
+        // Enough traffic to fill every slot and park waiters somewhere.
+        let full = n_dtns * (slots + depth) as usize;
+        let n_req = g.rng.range_usize(n_dtns * slots as usize + 2, full + 4);
+        let mut tickets: Vec<u32> = Vec::new();
+        for t in 0..n_req as u32 {
+            let owner = format!("u{}", g.rng.range_u64(0, 5));
+            let adm = router
+                .request(TransferRequest::new(t, owner, 10).with_extent(ExtentId(t as u64 % 3)));
+            assert_eq!(adm.len(), 1, "disabled throttle admits immediately");
+            tickets.push(t);
+        }
+        let victim = g.rng.range_usize(0, n_dtns - 1);
+        let active_before = router.dtn_active_per_node()[victim] as usize;
+        let queued_before = router.dtn_queued_per_node()[victim];
+        let on_victim: Vec<u32> = tickets
+            .iter()
+            .copied()
+            .filter(|&t| router.source_of(t) == Some(DataSource::Dtn { dtn: victim }))
+            .collect();
+        assert_eq!(on_victim.len(), active_before + queued_before);
+
+        let moved = router.fail_dtn(victim);
+
+        // Every affected ticket is re-sourced exactly once, off the corpse.
+        let mut moved_tickets: Vec<u32> = moved.iter().map(|m| m.ticket).collect();
+        moved_tickets.sort_unstable();
+        let mut expected = on_victim.clone();
+        expected.sort_unstable();
+        assert_eq!(moved_tickets, expected, "re-source set != affected set");
+        for m in &moved {
+            if let DataSource::Dtn { dtn } = m.source {
+                assert_ne!(dtn, victim, "re-sourced onto the corpse");
+            }
+        }
+
+        // The dead node's accounting is exactly zero…
+        assert_eq!(router.dtn_active_per_node()[victim], 0, "slots leaked on the corpse");
+        assert_eq!(router.dtn_queued_per_node()[victim], 0, "waiters leaked on the corpse");
+
+        // …and fleet-wide accounting is conserved: every ticket with a
+        // DTN source holds exactly one slot or queue entry.
+        let dtn_sourced = tickets
+            .iter()
+            .filter(|&&t| matches!(router.source_of(t), Some(DataSource::Dtn { .. })))
+            .count();
+        let held: usize = router
+            .dtn_active_per_node()
+            .iter()
+            .map(|&a| a as usize)
+            .sum::<usize>()
+            + router.dtn_queued_per_node().iter().sum::<usize>();
+        assert_eq!(held, dtn_sourced, "slot+queue entries != DTN-sourced tickets");
+
+        // Completing everything drains back to zero: no double releases.
+        for t in tickets {
+            router.complete(t);
+        }
+        assert!(router.dtn_active_per_node().iter().all(|&a| a == 0));
+        assert!(router.dtn_queued_per_node().iter().all(|&q| q == 0));
+        assert_eq!(router.stats().released_without_active, 0);
+    });
+}
+
 /// Shard-count transparency: the sharded router state is a pure
 /// partitioning of the old flat maps, so for ANY shard count the router
 /// must emit byte-identical `Routed` decisions — across random
