@@ -2,13 +2,17 @@
 //!
 //! The paper-scale run re-solves the fluid network on every flow arrival/
 //! departure (~20k times for 10k jobs). This bench measures solver cost vs
-//! concurrent flow count and the end-to-end events/sec of the engine.
+//! concurrent flow count, the end-to-end events/sec of the engine under
+//! BOTH flow solvers, and the sim-vs-real goodput calibration (written as
+//! JSON under `BENCH_REPORT_DIR` for the CI artifact).
 //! Run: cargo bench --bench netsim_solver
 //! CI smoke: cargo bench --bench netsim_solver -- --smoke
 //! (one solver point, single iteration, 1/100-scale engine run)
 
 use htcdm::coordinator::engine::EngineSpec;
 use htcdm::coordinator::Experiment;
+use htcdm::fabric::{run_calibration, CalibrationConfig};
+use htcdm::netsim::solver::SolverKind;
 use htcdm::netsim::topology::TestbedSpec;
 use htcdm::netsim::NetSim;
 use htcdm::transfer::ThrottlePolicy;
@@ -48,23 +52,76 @@ fn main() -> anyhow::Result<()> {
         println!("  {nflows:>5}   {:>5}   {:>9.1} us", 10, per * 1e6);
     }
 
-    println!("\n=== end-to-end engine throughput (paper-scale fig1 run) ===");
-    let mut spec = EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled);
-    spec.input_bytes = Bytes(2_000_000_000);
-    if smoke {
-        spec.n_jobs = 100;
+    println!("\n=== end-to-end engine throughput (paper-scale fig1 run, both solvers) ===");
+    for kind in [SolverKind::FairShare, SolverKind::TcpDynamic] {
+        let mut spec = EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled);
+        spec.input_bytes = Bytes(2_000_000_000);
+        spec.solver = kind;
+        if smoke {
+            spec.n_jobs = 100;
+        }
+        let n_jobs = spec.n_jobs as f64;
+        let t0 = std::time::Instant::now();
+        let r = Experiment::custom("fig1-perf", spec).run()?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  [{}] {:.0} jobs, {:.1} TB virtual traffic simulated in {:.2} s wall ({:.0} jobs/s)",
+            kind.label(),
+            n_jobs,
+            n_jobs * 2e9 / 1e12,
+            wall,
+            n_jobs / wall
+        );
+        println!(
+            "  [{}] sustained {:.1} Gbps, makespan {:.1} min",
+            kind.label(),
+            r.sustained_gbps(),
+            r.makespan.as_mins_f64()
+        );
     }
-    let n_jobs = spec.n_jobs as f64;
-    let t0 = std::time::Instant::now();
-    let r = Experiment::custom("fig1-perf", spec).run()?;
-    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n=== sim-vs-real goodput calibration (loopback burst, both solvers) ===");
+    let cal_cfg = if smoke {
+        CalibrationConfig {
+            n_jobs: 8,
+            input_bytes: 1 << 20,
+            workers: 2,
+            ..CalibrationConfig::default()
+        }
+    } else {
+        CalibrationConfig {
+            n_jobs: 48,
+            input_bytes: 8 << 20,
+            workers: 4,
+            ..CalibrationConfig::default()
+        }
+    };
+    let cal = run_calibration(&cal_cfg)?;
     println!(
-        "  {:.0} jobs, {:.1} TB virtual traffic simulated in {:.2} s wall ({:.0} jobs/s)",
-        n_jobs,
-        n_jobs * 2e9 / 1e12,
-        wall,
-        n_jobs / wall
+        "  real-tcp: {:.3} Gbps aggregate, {:.1} MB/s per stream",
+        cal.real_gbps,
+        cal.real_stream_bps / 1e6
     );
-    println!("  sustained {:.1} Gbps, makespan {:.1} min", r.sustained_gbps(), r.makespan.as_mins_f64());
+    for p in &cal.points {
+        println!(
+            "  {:>12}: {:.3} Gbps predicted (ratio {:.3}{})",
+            p.solver,
+            p.sim_gbps,
+            p.ratio,
+            if (0.5..=2.0).contains(&p.ratio) { ", in band" } else { ", OUT OF BAND" }
+        );
+    }
+    if let Some(dir) = std::env::var_os("BENCH_REPORT_DIR") {
+        let dir = std::path::PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join("solver_calibration.json");
+        std::fs::write(&path, cal.to_json())?;
+        println!("  wrote {}", path.display());
+    }
+    anyhow::ensure!(
+        cal.within_band(2.0),
+        "solver calibration left the factor-2 band: {}",
+        cal.to_json()
+    );
     Ok(())
 }

@@ -29,7 +29,10 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use htcdm::mover::{PoolRouter, RouterPolicy, SourcePlan, SourceSelector, TransferRequest};
+use htcdm::mover::{
+    PoolRouter, RouterConfig, RouterPolicy, ShadowPool, SourcePlan, SourceSelector,
+    TransferRequest,
+};
 use htcdm::storage::ExtentId;
 use htcdm::transfer::ThrottlePolicy;
 
@@ -56,9 +59,20 @@ fn selector_label(s: SourceSelector) -> &'static str {
 }
 
 fn build_router(policy: RouterPolicy, selector: SourceSelector) -> PoolRouter {
-    PoolRouter::sim(N_NODES, 1, ThrottlePolicy::Disabled.into(), policy)
-        .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; N_DTNS])
-        .with_source_selector(selector)
+    let nodes = (0..N_NODES)
+        .map(|_| ShadowPool::sim(1, ThrottlePolicy::Disabled.into()))
+        .collect();
+    PoolRouter::from_config(
+        nodes,
+        vec![1.0; N_NODES as usize],
+        policy,
+        RouterConfig {
+            source_plan: SourcePlan::DedicatedDtn,
+            dtn_capacity: vec![1.0; N_DTNS],
+            source_selector: selector,
+            ..RouterConfig::default()
+        },
+    )
 }
 
 /// Deterministic owner pick: a Knuth multiplicative walk over the owner

@@ -14,9 +14,10 @@ use crate::metrics::BinSeries;
 use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan};
 use crate::mover::task::{TaskProgress, TaskRunner, TunerSample};
 use crate::mover::{
-    AdmissionConfig, DataSource, MoverStats, PoolRouter, RouterPolicy, RouterStats, ShadowPool,
-    SourcePlan, SourceSelector,
+    AdmissionConfig, DataSource, MoverStats, PoolRouter, RouterConfig, RouterPolicy, RouterStats,
+    ShadowPool, SourcePlan, SourceSelector,
 };
+use crate::netsim::solver::SolverKind;
 use crate::netsim::topology::{Testbed, TestbedSpec};
 use crate::netsim::{calib, FlowId};
 use crate::sim::EventQueue;
@@ -109,6 +110,13 @@ pub struct EngineSpec {
     /// Closed-loop task auto-tuning (`AUTOTUNE` knob): adjust a task's
     /// concurrency and chunk size from observed per-window goodput.
     pub autotune: bool,
+    /// Rate solver for the fluid network (`SOLVER` knob / `--solver`
+    /// flag): steady-state max-min fair share (the default) or per-flow
+    /// TCP windows with slow start, AIMD and sampled loss
+    /// ([`SolverKind::TcpDynamic`]). Under the dynamic solver the
+    /// per-stream cap drops its Mathis loss term and setup latency its
+    /// ramp allowance — both are modeled in-band by the windows.
+    pub solver: SolverKind,
 }
 
 impl EngineSpec {
@@ -140,6 +148,7 @@ impl EngineSpec {
             task_rate_bps: 0,
             task_deadline_s: 0.0,
             autotune: false,
+            solver: SolverKind::FairShare,
         }
     }
 
@@ -223,6 +232,24 @@ impl EngineSpec {
             self.router_shards = crate::mover::shards_from_config(cfg)?;
         }
         self.cycle_size = cfg.get_u64("CYCLE_SIZE", self.cycle_size as u64)? as usize;
+        // SOLVER picks the rate model; LINK_RTT_MS / LINK_LOSS override
+        // the path RTT and loss probability the topology (and a dynamic
+        // solver) see — absent knobs keep the calibrated defaults.
+        if let Some(raw) = cfg.raw("SOLVER") {
+            self.solver = SolverKind::parse(raw).ok_or_else(|| {
+                crate::config::ConfigError::Type(
+                    "SOLVER".into(),
+                    "fair-share | tcp-dynamic",
+                    raw.to_string(),
+                )
+            })?;
+        }
+        if cfg.raw("LINK_RTT_MS").is_some() {
+            self.testbed.link_rtt_ms = Some(cfg.get_f64("LINK_RTT_MS", 0.0)?);
+        }
+        if cfg.raw("LINK_LOSS").is_some() {
+            self.testbed.link_loss = Some(cfg.get_f64("LINK_LOSS", 0.0)?);
+        }
         self.task_rate_bps = cfg.get_bytes("TASK_RATE_BPS", self.task_rate_bps)?;
         self.task_deadline_s = cfg.get_f64("TASK_DEADLINE_S", self.task_deadline_s)?;
         self.autotune = cfg.get_bool("AUTOTUNE", self.autotune)?;
@@ -385,12 +412,20 @@ pub fn router_from_spec(spec: &EngineSpec) -> PoolRouter {
     let dtn_caps: Vec<f64> = (0..n_dtns)
         .map(|d| spec.testbed.data_node_nic_gbps(d))
         .collect();
-    PoolRouter::new(nodes, capacities, spec.router)
-        .with_source_plan(spec.source, dtn_caps)
-        .with_source_selector(spec.source_selector)
-        .with_dtn_budget(spec.dtn_slots)
-        .with_dtn_queue(spec.dtn_queue_depth)
-        .with_state_shards(spec.router_shards)
+    PoolRouter::from_config(
+        nodes,
+        capacities,
+        spec.router,
+        RouterConfig {
+            source_plan: spec.source,
+            dtn_capacity: dtn_caps,
+            source_selector: spec.source_selector,
+            dtn_slots: spec.dtn_slots,
+            dtn_queue_depth: spec.dtn_queue_depth,
+            state_shards: spec.router_shards,
+            recovery_ramp: spec.faults.recovery_ramp.unwrap_or(0),
+        },
+    )
 }
 
 impl Engine {
@@ -423,9 +458,10 @@ impl Engine {
         spec.dtn_queue_depth = router.dtn_queue_depth();
         spec.router_shards = router.state_shards();
         if let Some(ramp) = spec.faults.recovery_ramp {
-            router.set_recovery_ramp(ramp);
+            router.set_ramp_decisions(ramp);
         }
-        let tb = Testbed::build(spec.testbed.clone());
+        let mut tb = Testbed::build(spec.testbed.clone());
+        tb.net.set_solver(spec.solver.build(spec.seed));
         // The data-node storage model: every DTN serves the same
         // hard-linked catalog (names `input_0..n_jobs-1` over
         // `n_extents` physical extents) but owns its OWN page cache.
@@ -734,10 +770,34 @@ impl Engine {
         }
     }
 
+    /// Per-stream TCP cap under the active solver. Fair share folds the
+    /// full steady-state model (window, Mathis loss, endpoint) into a
+    /// static cap; the dynamic solver models loss and the ramp through
+    /// its windows, so its cap keeps only the window/endpoint ceilings —
+    /// folding Mathis in too would count loss twice.
+    fn stream_cap(&self) -> f64 {
+        let p = self.tb.path_profile();
+        match self.spec.solver {
+            SolverKind::FairShare => p.stream_cap_bps(),
+            SolverKind::TcpDynamic => p.stream_cap_loss_free_bps(),
+        }
+    }
+
+    /// Connection-setup latency under the active solver: fair share adds
+    /// a slow-start ramp allowance, the dynamic solver replays the ramp
+    /// in-band and pays only the auth handshake.
+    fn setup_latency_s(&self) -> f64 {
+        let p = self.tb.path_profile();
+        match self.spec.solver {
+            SolverKind::FairShare => p.setup_latency_s(),
+            SolverKind::TcpDynamic => p.handshake_latency_s(),
+        }
+    }
+
     /// Admitted by the transfer queue: connection setup (auth handshake +
     /// slow start) delays the wire by the path's setup latency.
     fn schedule_input_start(&mut self, proc_: u32, epoch: u32, t: SimTime) {
-        let setup = self.tb.path_profile().setup_latency_s();
+        let setup = self.setup_latency_s();
         self.events.push(
             t + SimTime::from_secs_f64(setup),
             Ev::StartInputFlow { proc_, epoch },
@@ -760,7 +820,7 @@ impl Engine {
             .unwrap_or(DataSource::Funnel { node });
         self.schedd.input_started(proc_, t);
         let path = self.source_path(source, slot.worker as usize);
-        let mut cap = self.tb.path_profile().stream_cap_bps();
+        let mut cap = self.stream_cap();
         if let DataSource::Dtn { dtn } = source {
             // The storage model: a cache-hot extent streams at page-cache
             // rate (never the bottleneck); a cold one is capped by the
@@ -816,11 +876,15 @@ impl Engine {
                 let admitted = self.schedd.input_done(ctx.proc_, t);
                 self.start_routed(admitted, t);
                 // Execute the payload: the paper's validation script,
-                // median ≈ 5 s, mild spread.
-                let runtime = self
-                    .rng
-                    .lognormal(self.schedd.job(ctx.proc_).spec.runtime_median_s, 0.25)
-                    .clamp(0.5, 600.0);
+                // median ≈ 5 s, mild spread. A non-positive median means
+                // a pure-transfer burst (the calibration harness): no
+                // payload, the output goes straight on the wire.
+                let median = self.schedd.job(ctx.proc_).spec.runtime_median_s;
+                let runtime = if median <= 0.0 {
+                    0.0
+                } else {
+                    self.rng.lognormal(median, 0.25).clamp(0.5, 600.0)
+                };
                 self.events.push(
                     t + SimTime::from_secs_f64(runtime),
                     Ev::RunDone { proc_: ctx.proc_ },
@@ -875,7 +939,7 @@ impl Engine {
             DataSource::Funnel { node } => self.tb.path_from_worker(node, slot.worker as usize),
             DataSource::Dtn { dtn } => self.tb.dtn_path_from_worker(dtn, slot.worker as usize),
         };
-        let cap = self.tb.path_profile().stream_cap_bps();
+        let cap = self.stream_cap();
         let bytes = self.schedd.job(proc_).spec.output_bytes.0.max(1) as f64;
         let fid = self.tb.net.start_flow(path, bytes, cap);
         self.flows.insert(
@@ -1260,6 +1324,7 @@ mod tests {
             task_rate_bps: 0,
             task_deadline_s: 0.0,
             autotune: false,
+            solver: SolverKind::FairShare,
         }
     }
 

@@ -21,6 +21,7 @@ use crate::mover::{
     AdmissionConfig, ChaosTimeline, FaultPlan, MoverStats, RouterPolicy, RouterStats, SourcePlan,
     SourceSelector,
 };
+use crate::netsim::solver::SolverKind;
 use crate::netsim::topology::TestbedSpec;
 use crate::transfer::ThrottlePolicy;
 use crate::util::units::{Gbps, SimTime};
@@ -35,6 +36,11 @@ pub enum Scenario {
     LanPaper,
     /// §IV / Fig. 2: WAN (NY workers), same workload.
     WanPaper,
+    /// WanPaper re-run under the dynamic per-flow TCP solver
+    /// ([`SolverKind::TcpDynamic`]): same topology and workload, but
+    /// every flow replays slow start, AIMD and Bernoulli loss against
+    /// the 58 ms RTT instead of jumping to its Mathis steady state.
+    WanTcpDynamic,
     /// §III narrative: same as LanPaper but with the default disk-load
     /// transfer-queue throttle — paper observed ~2× the makespan.
     LanDefaultQueue,
@@ -75,6 +81,7 @@ impl Scenario {
         match self {
             Scenario::LanPaper => "fig1-lan",
             Scenario::WanPaper => "fig2-wan",
+            Scenario::WanTcpDynamic => "wan-tcp",
             Scenario::LanDefaultQueue => "queue-default",
             Scenario::LanVpn => "vpn-overlay",
             Scenario::LanFairShare => "fair-share",
@@ -94,6 +101,12 @@ impl Scenario {
             }
             Scenario::WanPaper => {
                 EngineSpec::paper(TestbedSpec::wan_paper(), ThrottlePolicy::Disabled)
+            }
+            Scenario::WanTcpDynamic => {
+                let mut spec =
+                    EngineSpec::paper(TestbedSpec::wan_paper(), ThrottlePolicy::Disabled);
+                spec.solver = SolverKind::TcpDynamic;
+                spec
             }
             Scenario::LanDefaultQueue => EngineSpec::paper(
                 TestbedSpec::lan_paper(),
@@ -177,7 +190,8 @@ impl Scenario {
     pub fn paper_sustained_gbps(&self) -> Option<f64> {
         match self {
             Scenario::LanPaper => Some(90.0),
-            Scenario::WanPaper => Some(60.0),
+            // Same paper figure either way: both solvers model §IV's WAN.
+            Scenario::WanPaper | Scenario::WanTcpDynamic => Some(60.0),
             Scenario::LanDefaultQueue => None,
             Scenario::LanVpn => Some(25.0),
             Scenario::LanFairShare
@@ -193,7 +207,7 @@ impl Scenario {
     pub fn paper_makespan_min(&self) -> Option<f64> {
         match self {
             Scenario::LanPaper => Some(32.0),
-            Scenario::WanPaper => Some(49.0),
+            Scenario::WanPaper | Scenario::WanTcpDynamic => Some(49.0),
             Scenario::LanDefaultQueue => Some(64.0),
             Scenario::LanVpn => None,
             Scenario::LanFairShare
@@ -290,6 +304,9 @@ pub struct Report {
     pub errors: u64,
     /// Admission-policy label driving each node's data mover.
     pub policy: String,
+    /// Network-solver label the run's fluid flows were rated with
+    /// (`fair-share` / `tcp-dynamic`, the `SOLVER` knob).
+    pub solver: String,
     /// Shadow shards across the whole pool (nodes × per-node shards).
     pub shards: usize,
     /// Submit-node count.
@@ -371,6 +388,7 @@ impl Report {
             negotiation_cycles: r.negotiation_cycles,
             errors: r.errors,
             policy: spec.policy.label(),
+            solver: spec.solver.label().to_string(),
             shards: r.mover.bytes_per_shard.len(),
             n_submit_nodes: r.monitors.len(),
             router_policy: spec.router.label().to_string(),
@@ -436,6 +454,12 @@ mod tests {
         let wan = Scenario::WanPaper.spec();
         assert!(wan.testbed.wan.is_some());
         assert_eq!(wan.testbed.total_slots(), 200);
+        assert_eq!(wan.solver, SolverKind::FairShare, "steady-state default");
+
+        let wt = Scenario::WanTcpDynamic.spec();
+        assert_eq!(wt.solver, SolverKind::TcpDynamic);
+        assert!(wt.testbed.wan.is_some(), "same WAN topology as fig2-wan");
+        assert_eq!(wt.n_jobs, wan.n_jobs, "same workload as fig2-wan");
 
         let q = Scenario::LanDefaultQueue.spec();
         assert_ne!(q.policy, AdmissionConfig::from(ThrottlePolicy::Disabled));
@@ -678,6 +702,7 @@ mod tests {
         let report = Experiment::custom("sharded-smoke", spec).run().unwrap();
         assert_eq!(report.shards, 4);
         assert_eq!(report.policy, "fifo/disabled");
+        assert_eq!(report.solver, "fair-share", "default solver stamped");
         assert_eq!(report.mover.total_admitted, 40);
         assert_eq!(report.mover.released_without_active, 0);
         let routed: u64 = report.mover.bytes_per_shard.iter().sum();

@@ -31,15 +31,12 @@ impl Schedd {
     /// A schedd with a single-node, single-shard mover running the given
     /// classic throttle (the paper's configuration space).
     pub fn new(name: &str, policy: ThrottlePolicy) -> Schedd {
-        Schedd::with_mover(name, ShadowPool::sim(1, policy.into()))
+        Schedd::with_router(name, PoolRouter::single(ShadowPool::sim(1, policy.into())))
     }
 
-    /// A schedd delegating sandbox movement to one submit node's pool.
-    pub fn with_mover(name: &str, mover: ShadowPool) -> Schedd {
-        Schedd::with_router(name, PoolRouter::single(mover))
-    }
-
-    /// A schedd delegating sandbox movement to a multi-node pool router.
+    /// A schedd delegating sandbox movement to a multi-node pool router
+    /// (wrap a single [`ShadowPool`] with [`PoolRouter::single`] for the
+    /// paper's one-submit-node shape).
     pub fn with_router(name: &str, router: PoolRouter) -> Schedd {
         Schedd {
             name: name.to_string(),
@@ -58,14 +55,6 @@ impl Schedd {
             &mut self.mover,
             PoolRouter::single(ShadowPool::sim(1, ThrottlePolicy::Disabled.into())),
         )
-    }
-
-    /// [`Schedd::take_router`] for the single-node case, recovering the
-    /// inner [`ShadowPool`]. Panics on a multi-node router.
-    pub fn take_mover(&mut self) -> ShadowPool {
-        self.take_router()
-            .into_single()
-            .unwrap_or_else(|r| panic!("take_mover on a {}-node router", r.node_count()))
     }
 
     /// One submit transaction (the paper queued all 10k jobs in one).
@@ -359,7 +348,7 @@ mod tests {
     fn schedd_delegates_to_custom_mover() {
         use crate::mover::{AdmissionConfig, ShadowPool};
         let mover = ShadowPool::sim(2, AdmissionConfig::WeightedBySize { limit: 1 });
-        let mut s = Schedd::with_mover("schedd", mover);
+        let mut s = Schedd::with_router("schedd", PoolRouter::single(mover));
         // Three jobs with distinct sizes; proc 2 is the smallest.
         let mut sp = specs(3);
         sp[0].input_bytes = Bytes::mib(100);
@@ -380,7 +369,7 @@ mod tests {
         let next = s.input_done(0, SimTime::from_secs(5));
         assert_eq!(tickets(&next), vec![2], "weighted-by-size admits the smallest");
         assert_eq!(s.mover.stats().total_admitted, 2);
-        let taken = s.take_mover();
+        let taken = s.take_router().into_single().unwrap();
         assert_eq!(taken.stats().total_admitted, 2, "mover state travels");
     }
 }

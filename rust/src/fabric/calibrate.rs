@@ -1,0 +1,325 @@
+//! Sim-vs-real calibration harness: one measured loopback burst, the
+//! same burst replayed through the virtual-time engine under every
+//! flow solver, and the goodput ratios between them.
+//!
+//! The real run is the ground truth: `run_real_pool` moves sealed
+//! bytes over the kernel's actual TCP stack and reports aggregate
+//! goodput plus the median per-stream transfer time. The harness then
+//! builds an [`EngineSpec`] that mirrors the burst — same job count,
+//! same payload size, one worker node with as many slots as the real
+//! pool had worker threads, zero job runtime (pure transfer burst) —
+//! and pins the sim's per-stream endpoint ceiling to the measured
+//! loopback rate. Replaying that spec under [`SolverKind::FairShare`]
+//! and [`SolverKind::TcpDynamic`] yields one [`SolverPoint`] per
+//! solver whose `ratio` answers the calibration question directly:
+//! how far is each solver's predicted goodput from the wire?
+//!
+//! ## Tolerance band
+//!
+//! The documented acceptance band is a **factor of two** in aggregate
+//! goodput (`0.5 <= ratio <= 2.0`). The sim inherits the measured
+//! per-stream rate, so the residual error is scheduling shape — ramp-up
+//! and drain tails at the burst edges, admission serialization, and
+//! (under TcpDynamic) the modelled slow-start allowance — none of
+//! which should cost more than 2× on a burst of at least a few jobs
+//! per worker. CI enforces the band in `calibration_within_band`
+//! (tier 1, small burst) and `calibration_within_band_heavy`
+//! (`--ignored` chaos tier, paper-shaped burst).
+
+use anyhow::{ensure, Result};
+
+use super::{run_real_pool, RealPoolConfig};
+use crate::coordinator::engine::{Engine, EngineSpec};
+use crate::mover::AdmissionConfig;
+use crate::netsim::solver::SolverKind;
+use crate::netsim::topology::{TestbedSpec, WorkerSpec};
+use crate::transfer::ThrottlePolicy;
+use crate::util::units::{Bytes, SimTime};
+
+/// Shape of one calibration burst (shared by the real and sim legs).
+#[derive(Debug, Clone)]
+pub struct CalibrationConfig {
+    /// Jobs in the burst; keep it a multiple of `workers` so the real
+    /// pool runs full rounds and the edge tails stay small.
+    pub n_jobs: u32,
+    /// Input payload per job in bytes.
+    pub input_bytes: usize,
+    /// Real-pool worker threads == sim execute slots (the burst's
+    /// transfer concurrency).
+    pub workers: u32,
+    /// Seal through the PJRT artifact on the real leg (falls back to
+    /// native when the artifact is absent). Calibration defaults to
+    /// native so the measurement does not depend on `make artifacts`.
+    pub use_xla_engine: bool,
+    /// Sim engine seed (the real leg is wall-clock, not seeded).
+    pub seed: u64,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        CalibrationConfig {
+            n_jobs: 12,
+            input_bytes: 1 << 20,
+            workers: 3,
+            use_xla_engine: false,
+            seed: 11,
+        }
+    }
+}
+
+/// One solver's replay of the measured burst.
+#[derive(Debug, Clone)]
+pub struct SolverPoint {
+    /// Solver label as stamped in sim reports (`fair-share` /
+    /// `tcp-dynamic`).
+    pub solver: String,
+    /// Aggregate sim goodput: burst bytes over the sim makespan.
+    pub sim_gbps: f64,
+    /// `sim_gbps / real_gbps` — 1.0 is a perfect prediction; the
+    /// acceptance band is [0.5, 2.0].
+    pub ratio: f64,
+}
+
+/// The full sim-vs-real comparison for one burst.
+#[derive(Debug, Clone)]
+pub struct SolverCalibration {
+    pub n_jobs: u32,
+    pub input_bytes: u64,
+    pub workers: u32,
+    /// Label of the ground-truth leg (always `real-tcp`, from
+    /// [`super::RealPoolReport::solver`]).
+    pub real_solver: String,
+    /// Measured aggregate loopback goodput in Gbps.
+    pub real_gbps: f64,
+    /// Measured per-stream loopback rate in bytes/sec (payload bytes
+    /// over the median full-job time) — the endpoint ceiling the sim
+    /// legs are pinned to, same unit as [`TestbedSpec`]'s
+    /// `endpoint_bps`.
+    pub real_stream_bps: f64,
+    /// One point per solver, in [`SolverKind`] declaration order.
+    pub points: Vec<SolverPoint>,
+}
+
+impl SolverCalibration {
+    /// The point for one solver, if that solver was replayed.
+    pub fn point(&self, kind: SolverKind) -> Option<&SolverPoint> {
+        self.points.iter().find(|p| p.solver == kind.label())
+    }
+
+    /// True when every replayed solver landed inside the documented
+    /// factor-`band` goodput band around the real measurement.
+    pub fn within_band(&self, band: f64) -> bool {
+        !self.points.is_empty()
+            && self
+                .points
+                .iter()
+                .all(|p| p.ratio >= 1.0 / band && p.ratio <= band)
+    }
+
+    /// Machine-readable record for CI artifacts (no serde in tree, so
+    /// the object is assembled by hand).
+    pub fn to_json(&self) -> String {
+        let points: Vec<String> = self
+            .points
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"solver\":\"{}\",\"gbps\":{:.6},\"ratio\":{:.6}}}",
+                    p.solver, p.sim_gbps, p.ratio
+                )
+            })
+            .collect();
+        format!(
+            "{{\"burst\":{{\"jobs\":{},\"input_bytes\":{},\"workers\":{}}},\
+             \"real\":{{\"solver\":\"{}\",\"gbps\":{:.6},\"stream_bytes_per_sec\":{:.1}}},\
+             \"sim\":[{}]}}",
+            self.n_jobs,
+            self.input_bytes,
+            self.workers,
+            self.real_solver,
+            self.real_gbps,
+            self.real_stream_bps,
+            points.join(",")
+        )
+    }
+}
+
+/// The sim mirror of a measured burst: one worker node whose slot
+/// count equals the real pool's worker-thread count, per-stream
+/// endpoint ceiling pinned to the measured loopback rate, NICs left at
+/// the paper's 100 Gbps so only the endpoint cap binds, and zero job
+/// runtime so the makespan is pure data movement.
+fn sim_spec(cfg: &CalibrationConfig, real_stream_bps: f64, kind: SolverKind) -> EngineSpec {
+    let mut tb = TestbedSpec::lan_paper();
+    tb.workers = vec![WorkerSpec {
+        nic_gbps: 100.0,
+        slots: cfg.workers.max(1),
+    }];
+    tb.monitor_bin = SimTime::from_secs(1);
+    tb.endpoint_bps = Some(real_stream_bps);
+    let mut spec = EngineSpec::paper(tb, ThrottlePolicy::Disabled);
+    spec.n_jobs = cfg.n_jobs;
+    spec.input_bytes = Bytes(cfg.input_bytes as u64);
+    spec.output_bytes = Bytes(512); // matches the real leg's tiny result upload
+    spec.runtime_median_s = 0.0;
+    spec.seed = cfg.seed;
+    spec.solver = kind;
+    spec
+}
+
+/// Replay one already-measured burst through the sim under `kind` and
+/// return its point. Exposed for the bench harness, which reuses one
+/// real measurement across many sim replays.
+pub fn replay_sim(
+    cfg: &CalibrationConfig,
+    real_gbps: f64,
+    real_stream_bps: f64,
+    kind: SolverKind,
+) -> Result<SolverPoint> {
+    let result = Engine::new(sim_spec(cfg, real_stream_bps, kind)).run()?;
+    ensure!(
+        result.schedd.completed_count() == cfg.n_jobs as usize,
+        "sim replay under {} completed {}/{} jobs",
+        kind.label(),
+        result.schedd.completed_count(),
+        cfg.n_jobs
+    );
+    let makespan_s = result
+        .schedd
+        .makespan()
+        .unwrap_or(SimTime::ZERO)
+        .as_secs_f64()
+        .max(1e-9);
+    let sim_gbps = cfg.n_jobs as f64 * cfg.input_bytes as f64 * 8.0 / makespan_s / 1e9;
+    Ok(SolverPoint {
+        solver: kind.label().to_string(),
+        sim_gbps,
+        ratio: sim_gbps / real_gbps.max(1e-9),
+    })
+}
+
+/// Run the full harness: measure one real loopback burst, replay it
+/// under both solvers, and return the comparison.
+pub fn run_calibration(cfg: &CalibrationConfig) -> Result<SolverCalibration> {
+    let real = run_real_pool(RealPoolConfig {
+        n_jobs: cfg.n_jobs,
+        workers: cfg.workers.max(1),
+        input_bytes: cfg.input_bytes,
+        output_bytes: 512,
+        use_xla_engine: cfg.use_xla_engine,
+        passphrase: "calibrate".into(),
+        policy: AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+        ..RealPoolConfig::default()
+    })?;
+    ensure!(
+        real.errors == 0 && real.jobs_completed == cfg.n_jobs,
+        "real calibration burst failed: {}/{} jobs, {} errors",
+        real.jobs_completed,
+        cfg.n_jobs,
+        real.errors
+    );
+    let median_s = real.transfer_secs.median().max(1e-9);
+    // Bytes/sec to match `TestbedSpec::endpoint_bps` — the median covers
+    // the full job cycle (connect, handshake, sealed fetch, output), so
+    // the pinned ceiling carries the real leg's crypto cost too.
+    let real_stream_bps = cfg.input_bytes as f64 / median_s;
+    let mut points = Vec::new();
+    for kind in [SolverKind::FairShare, SolverKind::TcpDynamic] {
+        points.push(replay_sim(cfg, real.gbps, real_stream_bps, kind)?);
+    }
+    Ok(SolverCalibration {
+        n_jobs: cfg.n_jobs,
+        input_bytes: cfg.input_bytes as u64,
+        workers: cfg.workers,
+        real_solver: real.solver,
+        real_gbps: real.gbps,
+        real_stream_bps,
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tier-1 capstone: a small measured loopback burst and both sim
+    /// solvers land within the documented factor-2 goodput band.
+    #[test]
+    fn calibration_within_band() {
+        let cfg = CalibrationConfig {
+            n_jobs: 8,
+            input_bytes: 1 << 20,
+            workers: 2,
+            use_xla_engine: false,
+            seed: 5,
+        };
+        let cal = run_calibration(&cfg).unwrap();
+        assert_eq!(cal.points.len(), 2);
+        assert_eq!(cal.real_solver, "real-tcp");
+        assert!(cal.real_gbps > 0.0 && cal.real_stream_bps > 0.0);
+        for p in &cal.points {
+            assert!(
+                p.ratio >= 0.5 && p.ratio <= 2.0,
+                "{} predicted {:.3} Gbps vs real {:.3} Gbps (ratio {:.3}) — \
+                 outside the factor-2 calibration band",
+                p.solver,
+                p.sim_gbps,
+                cal.real_gbps,
+                p.ratio
+            );
+        }
+        assert!(cal.within_band(2.0));
+        let json = cal.to_json();
+        assert!(json.contains("\"fair-share\"") && json.contains("\"tcp-dynamic\""));
+        assert!(json.contains("\"real-tcp\""));
+    }
+
+    /// Chaos-tier variant: a paper-shaped burst (more jobs, bigger
+    /// payloads, more workers) under the same band.
+    #[test]
+    #[ignore = "heavier loopback burst; run in the chaos tier"]
+    fn calibration_within_band_heavy() {
+        let cfg = CalibrationConfig {
+            n_jobs: 48,
+            input_bytes: 4 << 20,
+            workers: 4,
+            use_xla_engine: false,
+            seed: 7,
+        };
+        let cal = run_calibration(&cfg).unwrap();
+        assert!(
+            cal.within_band(2.0),
+            "calibration out of band: {}",
+            cal.to_json()
+        );
+    }
+
+    /// Both solver points are addressable by kind, and the TcpDynamic
+    /// replay of a LAN burst stays close to FairShare. The two model
+    /// the slow-start ramp differently — FairShare as a static setup
+    /// allowance, TcpDynamic in-band through the window — so either
+    /// may edge out the other depending on the measured loopback rate,
+    /// but on a sub-millisecond-RTT path the gap stays small.
+    #[test]
+    fn replay_points_addressable_by_kind() {
+        let cfg = CalibrationConfig {
+            n_jobs: 6,
+            input_bytes: 256 << 10,
+            workers: 2,
+            use_xla_engine: false,
+            seed: 3,
+        };
+        let cal = run_calibration(&cfg).unwrap();
+        let fs = cal.point(SolverKind::FairShare).unwrap();
+        let tcp = cal.point(SolverKind::TcpDynamic).unwrap();
+        assert!(fs.sim_gbps > 0.0 && tcp.sim_gbps > 0.0);
+        let rel = (tcp.sim_gbps - fs.sim_gbps).abs() / fs.sim_gbps;
+        assert!(
+            rel < 0.2,
+            "LAN replays of the same burst diverged: tcp-dynamic \
+             {:.3} Gbps vs fair-share {:.3} Gbps",
+            tcp.sim_gbps,
+            fs.sim_gbps
+        );
+    }
+}

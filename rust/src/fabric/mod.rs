@@ -7,8 +7,10 @@
 //! `examples/quickstart.rs` and the end-to-end tests; this is the proof
 //! that all three layers compose.
 
+pub mod calibrate;
 pub mod tcp;
 
+pub use calibrate::{run_calibration, CalibrationConfig, SolverCalibration, SolverPoint};
 pub use tcp::{
     run_real_pool, run_real_pool_router, run_real_pool_with, run_real_task, FileServer,
     RealPoolConfig, RealPoolReport, RealTaskConfig, RealTaskReport, ServerRole,

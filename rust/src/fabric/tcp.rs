@@ -27,8 +27,8 @@ use crate::jobs::JobSpec;
 use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan};
 use crate::mover::task::{sha256_hex, synth_file_bytes, TaskProgress, TaskRunner, TunerSample};
 use crate::mover::{
-    AdmissionConfig, DataSource, MoverStats, PoolRouter, Routed, RouterPolicy, RouterStats,
-    ShadowPool, SourcePlan, SourceSelector, TransferRequest,
+    AdmissionConfig, DataSource, MoverStats, PoolRouter, Routed, RouterConfig, RouterPolicy,
+    RouterStats, ShadowPool, SourcePlan, SourceSelector, TransferRequest,
 };
 use crate::runtime::engine::{NativeEngine, SealEngine};
 use crate::runtime::service::{EngineHandle, EngineService};
@@ -510,6 +510,12 @@ pub struct RealPoolReport {
     pub source_plan: String,
     /// Which-DTN selection-strategy label the run executed with.
     pub source_selector: String,
+    /// Flow-solver label for sim-vs-real joins: the real fabric always
+    /// moves bytes over the kernel's actual TCP stack, so this is the
+    /// constant `real-tcp` — the calibration harness
+    /// (`fabric::calibrate`) compares it against sim reports labelled
+    /// `fair-share` or `tcp-dynamic`.
+    pub solver: String,
     /// Per-node fault timeline (empty for fault-free runs).
     pub chaos: ChaosTimeline,
 }
@@ -628,12 +634,20 @@ pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
             n_nodes
         );
     };
-    let router = PoolRouter::new(nodes, capacities, cfg.router)
-        .with_source_plan(cfg.source, vec![1.0; cfg.data_nodes as usize])
-        .with_source_selector(cfg.source_selector)
-        .with_dtn_budget(cfg.dtn_slots)
-        .with_dtn_queue(cfg.dtn_queue_depth)
-        .with_state_shards(cfg.router_shards);
+    let router = PoolRouter::from_config(
+        nodes,
+        capacities,
+        cfg.router,
+        RouterConfig {
+            source_plan: cfg.source,
+            dtn_capacity: vec![1.0; cfg.data_nodes as usize],
+            source_selector: cfg.source_selector,
+            dtn_slots: cfg.dtn_slots,
+            dtn_queue_depth: cfg.dtn_queue_depth,
+            state_shards: cfg.router_shards,
+            recovery_ramp: cfg.faults.recovery_ramp.unwrap_or(0),
+        },
+    );
     let (report, _router) = run_real_pool_router(&cfg, router)?;
     Ok(report)
 }
@@ -673,7 +687,7 @@ pub fn run_real_pool_router(
         bail!("invalid source plan: {e}");
     }
     if let Some(ramp) = cfg.faults.recovery_ramp {
-        router.set_recovery_ramp(ramp);
+        router.set_ramp_decisions(ramp);
     }
     for node in 0..router.node_count() {
         if router.node_config(node).limit() == 0 {
@@ -1192,6 +1206,7 @@ pub fn run_real_pool_router(
         mover: router.stats(),
         source_plan: router.source_plan().label(),
         source_selector: router.source_selector().label().to_string(),
+        solver: "real-tcp".to_string(),
         router: router.router_stats(),
         bytes_served_per_node,
         bytes_served_per_dtn,
@@ -1312,11 +1327,19 @@ pub fn run_real_task(
             )
         })
         .collect();
-    let mut router = PoolRouter::new(nodes, vec![1.0; n_nodes], cfg.router)
-        .with_source_plan(cfg.source, vec![1.0; cfg.data_nodes as usize])
-        .with_source_selector(cfg.source_selector)
-        .with_dtn_budget(cfg.dtn_slots)
-        .with_dtn_queue(cfg.dtn_queue_depth);
+    let mut router = PoolRouter::from_config(
+        nodes,
+        vec![1.0; n_nodes],
+        cfg.router,
+        RouterConfig {
+            source_plan: cfg.source,
+            dtn_capacity: vec![1.0; cfg.data_nodes as usize],
+            source_selector: cfg.source_selector,
+            dtn_slots: cfg.dtn_slots,
+            dtn_queue_depth: cfg.dtn_queue_depth,
+            ..RouterConfig::default()
+        },
+    );
     router.ensure_engines(shard_engine_factory(cfg.use_xla_engine));
     if let Err(e) = router.source_plan().validate(router.dtn_count()) {
         bail!("invalid source plan: {e}");

@@ -147,7 +147,7 @@
 //!   `RECOVERY_RAMP` / `--ramp` set, recovery is hysteretic: the node's
 //!   weighted-by-capacity routing weight ramps back over that many
 //!   decisions instead of step-restoring
-//!   ([`mover::PoolRouter::set_recovery_ramp`]). Reports carry the
+//!   ([`mover::RouterConfig::recovery_ramp`]). Reports carry the
 //!   per-node fault timeline (`Report::chaos`,
 //!   `RealPoolReport::chaos`).
 //! * [`mover::AdmissionPolicy`] generalizes HTCondor's

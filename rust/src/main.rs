@@ -1,7 +1,7 @@
 //! `htcdm` CLI — leader entrypoint.
 //!
 //! ```text
-//! htcdm experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay> [--scale N] [--csv FILE]
+//! htcdm experiment <fig1-lan|fig2-wan|wan-tcp|queue-default|vpn-overlay> [--scale N] [--csv FILE]
 //! htcdm pool [--jobs N] [--workers W] [--mb SIZE] [--native]
 //! htcdm task [--files N] [--mb SIZE] [--task-dir DIR] [--sim] [--kill-after N]
 //! htcdm submit <submit-file>       # parse + print the expanded transaction
@@ -24,18 +24,23 @@ fn usage() -> ! {
         "usage: htcdm <command>\n\
          \n\
          commands:\n\
-           experiment <fig1-lan|fig2-wan|queue-default|vpn-overlay|fair-share|sharded-4|\n\
-                       multi-submit-4|hetero-25-100|kill-recover-4|dtn-offload-4|\n\
-                       cache-affine-4>\n\
+           experiment <fig1-lan|fig2-wan|wan-tcp|queue-default|vpn-overlay|fair-share|\n\
+                       sharded-4|multi-submit-4|hetero-25-100|kill-recover-4|\n\
+                       dtn-offload-4|cache-affine-4>\n\
                       [--scale N] [--csv FILE] [--config FILE]\n\
+                      [--solver fair-share|tcp-dynamic]\n\
                       run a paper experiment on the simulated testbed;\n\
+                      --solver swaps the netsim flow solver (fair-share is\n\
+                      the steady-state max-min default, tcp-dynamic models\n\
+                      per-flow slow start / AIMD over the link RTT+loss);\n\
                       --config applies condor-style knobs (JOBS, INPUT_SIZE,\n\
                       N_OWNERS, TRANSFER_QUEUE_POLICY, SHADOW_POOL_SIZE,\n\
                       N_SUBMIT_NODES, ROUTER_POLICY, DATA_NODES,\n\
                       SOURCE_PLAN, DTN_THRESHOLD, SOURCE_SELECTOR,\n\
                       DTN_MAX_CONCURRENT, DTN_QUEUE_DEPTH, N_EXTENTS,\n\
                       ROUTER_SHARDS, CYCLE_SIZE, FAULT_PLAN,\n\
-                      STEAL_THRESHOLD, RECOVERY_RAMP...;\n\
+                      STEAL_THRESHOLD, RECOVERY_RAMP, SOLVER,\n\
+                      LINK_RTT_MS, LINK_LOSS...;\n\
                       docs/KNOBS.md is the full reference)\n\
            pool       [--jobs N] [--workers W] [--mb SIZE] [--native]\n\
                       [--shadows N] [--policy disabled|disk-load|max-concurrent|fair-share|weighted-by-size]\n\
@@ -111,6 +116,7 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
     let scenario = match args.first().map(|s| s.as_str()) {
         Some("fig1-lan") => Scenario::LanPaper,
         Some("fig2-wan") => Scenario::WanPaper,
+        Some("wan-tcp") => Scenario::WanTcpDynamic,
         Some("queue-default") => Scenario::LanDefaultQueue,
         Some("vpn-overlay") => Scenario::LanVpn,
         Some("fair-share") => Scenario::LanFairShare,
@@ -131,7 +137,18 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
         exp.spec.apply_config(&cfg)?;
         eprintln!("applied config {path}");
     }
-    eprintln!("running {} ({} jobs)...", exp.label, exp.spec.n_jobs);
+    if let Some(name) = arg_value(args, "--solver") {
+        exp.spec.solver = htcdm::netsim::solver::SolverKind::parse(&name).unwrap_or_else(|| {
+            eprintln!("unknown --solver '{name}'");
+            usage()
+        });
+    }
+    eprintln!(
+        "running {} ({} jobs, {} solver)...",
+        exp.label,
+        exp.spec.n_jobs,
+        exp.spec.solver.label()
+    );
     let report = exp.run()?;
     println!(
         "{}",
@@ -303,8 +320,9 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
     );
     let r = run_real_pool(cfg)?;
     println!(
-        "engine {} | {} jobs | {:.1} MiB moved | {:.2} s wall | {:.3} Gbps | median transfer {:.3} s | errors {}",
+        "engine {} | solver {} | {} jobs | {:.1} MiB moved | {:.2} s wall | {:.3} Gbps | median transfer {:.3} s | errors {}",
         r.engine_desc,
+        r.solver,
         r.jobs_completed,
         r.total_payload_bytes as f64 / (1 << 20) as f64,
         r.wall_secs,

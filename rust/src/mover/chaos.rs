@@ -16,7 +16,7 @@
 //!   slow-NIC flap model.
 //! * [`FaultPlan`] — an ordered list of events plus an optional
 //!   work-stealing threshold and recovery-ramp width (hysteresis:
-//!   [`PoolRouter::set_recovery_ramp`]), attached to `EngineSpec`,
+//!   [`super::RouterConfig::recovery_ramp`]), attached to `EngineSpec`,
 //!   `RealPoolConfig` and the `kill-recover-4` scenario, and parseable
 //!   from the `FAULT_PLAN` condor-style knob / `--fault` CLI flag.
 //! * [`apply_to_router`] — the router-side half of every event, shared
@@ -129,8 +129,8 @@ pub struct FaultPlan {
     pub steal_threshold: Option<usize>,
     /// When set, a recovered node's routing weight ramps back over this
     /// many routing decisions instead of step-restoring
-    /// ([`PoolRouter::set_recovery_ramp`]); both fabrics arm the router
-    /// with it before the burst.
+    /// ([`super::RouterConfig::recovery_ramp`]); both fabrics arm the
+    /// router with it before the burst.
     pub recovery_ramp: Option<u32>,
 }
 
@@ -697,14 +697,20 @@ mod tests {
 
     #[test]
     fn apply_to_router_drives_dtn_kill_and_recover() {
-        use crate::mover::{DataSource, SourcePlan};
-        let mut router = PoolRouter::sim(
-            1,
-            1,
-            AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+        use crate::mover::{DataSource, RouterConfig, ShadowPool, SourcePlan};
+        let mut router = PoolRouter::from_config(
+            vec![ShadowPool::sim(
+                1,
+                AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+            )],
+            vec![1.0],
             RouterPolicy::RoundRobin,
-        )
-        .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0, 1.0]);
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0, 1.0],
+                ..RouterConfig::default()
+            },
+        );
         for t in 0..4 {
             router.request(TransferRequest::new(t, "o", 5));
         }

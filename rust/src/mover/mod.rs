@@ -71,7 +71,7 @@ pub use chaos::{ChaosTimeline, FaultEvent, FaultPlan, FaultRecord};
 pub use policy::{ActiveView, AdmissionConfig, AdmissionPolicy};
 pub use pool::ShadowPool;
 pub use queue::AdmissionQueue;
-pub use router::{PoolRouter, Routed, RouterPolicy, RouterStats};
+pub use router::{PoolRouter, Routed, RouterConfig, RouterPolicy, RouterStats};
 pub use source::{DataSource, SourcePlan, SourceSelector, DEFAULT_DTN_THRESHOLD};
 pub use state::{shards_from_config, RouterStateHandle, DEFAULT_ROUTER_SHARDS};
 pub use task::{
@@ -153,7 +153,7 @@ pub struct MoverStats {
     pub retried_after_fault: u64,
     /// DTN-bound transfers whose selector-preferred data node was at its
     /// admission budget, deferring them onto a peer with a free slot
-    /// (see [`PoolRouter::with_dtn_budget`]).
+    /// (see [`router::RouterConfig::dtn_slots`]).
     pub dtn_deferred: u64,
     /// DTN-bound transfers that overflowed to the scheduling node's
     /// funnel because every live data node was at its admission budget
@@ -161,8 +161,8 @@ pub struct MoverStats {
     pub dtn_overflow_to_funnel: u64,
     /// DTN-bound transfers parked in a data node's bounded wait queue
     /// because the whole fleet was at budget (see
-    /// [`PoolRouter::with_dtn_queue`]); each is promoted into the next
-    /// slot its DTN frees. Always 0 with `DTN_QUEUE_DEPTH = 0`.
+    /// [`router::RouterConfig::dtn_queue_depth`]); each is promoted into
+    /// the next slot its DTN frees. Always 0 with `DTN_QUEUE_DEPTH = 0`.
     pub dtn_queued: u64,
 }
 

@@ -33,21 +33,25 @@
 //! every admission it reports is a `(schedule node, data source)` pair.
 //! Under the default [`SourcePlan::SubmitFunnel`] the source is the
 //! scheduling node itself — the paper's funnel. With a DTN fleet
-//! configured ([`PoolRouter::with_source_plan`]) the plan may place the
-//! bytes on a dedicated data node instead; *which* node is the
-//! [`SourceSelector`]'s call (round-robin rotation, cache-aware over
-//! per-DTN extent residency, stable owner pins with failure-aware
-//! re-pinning, or capacity-weighted deficit counters —
-//! [`PoolRouter::with_source_selector`]), bounded by per-DTN admission
-//! budgets ([`PoolRouter::with_dtn_budget`]) so a saturated data node
+//! configured ([`RouterConfig::source_plan`] + [`RouterConfig::dtn_capacity`])
+//! the plan may place the bytes on a dedicated data node instead; *which*
+//! node is the [`SourceSelector`]'s call (round-robin rotation,
+//! cache-aware over per-DTN extent residency, stable owner pins with
+//! failure-aware re-pinning, or capacity-weighted deficit counters —
+//! [`RouterConfig::source_selector`]), bounded by per-DTN admission
+//! budgets ([`RouterConfig::dtn_slots`]) so a saturated data node
 //! pushes back instead of silently queueing. [`PoolRouter::fail_dtn`]
 //! re-sources a dead DTN's in-flight transfers onto survivors (or back
 //! onto the funnel), the data-plane analogue of
 //! [`PoolRouter::fail_node`]'s re-routing; it also drops the dead
 //! node's residency and owner pins — its page cache died with it.
 //!
+//! All of these data-plane and state-plane settings live in one
+//! [`RouterConfig`] struct consumed by [`PoolRouter::from_config`]; the
+//! old per-setting builder methods survive as deprecated wrappers.
+//!
 //! Recovery is hysteretic when a ramp is configured
-//! ([`PoolRouter::set_recovery_ramp`]): a node recovered by
+//! ([`RouterConfig::recovery_ramp`]): a node recovered by
 //! [`PoolRouter::recover_node`] re-enters weighted-by-capacity routing
 //! at a fraction of its as-built weight and ramps back to full weight
 //! over the configured number of routing decisions, so a freshly
@@ -69,6 +73,48 @@ use crate::runtime::service::EngineHandle;
 use crate::storage::ExtentId;
 use anyhow::Result;
 use std::collections::{BTreeSet, HashMap, HashSet, VecDeque};
+
+/// The router's data-plane and state-plane configuration in one place —
+/// replaces the builder-method sprawl (`with_source_plan`,
+/// `with_source_selector`, `with_dtn_budget`, `with_dtn_queue`,
+/// `with_state_shards`, `set_recovery_ramp`, all now deprecated thin
+/// wrappers). Build a router with [`PoolRouter::from_config`]; the
+/// scheduling-plane arguments (nodes, NIC capacities, routing policy)
+/// stay positional because they have no sensible defaults.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Data-source plan (funnel / dedicated-DTN / hybrid-by-size).
+    pub source_plan: SourcePlan,
+    /// One relative NIC budget per data node; the vector's length is the
+    /// DTN fleet size (empty = funnel-only pool).
+    pub dtn_capacity: Vec<f64>,
+    /// Which-DTN selection strategy within the plan's fleet.
+    pub source_selector: SourceSelector,
+    /// Per-DTN admission budget of concurrent transfers (0 = unlimited).
+    pub dtn_slots: u32,
+    /// Per-DTN bounded wait-queue depth (0 = queueing disabled).
+    pub dtn_queue_depth: u32,
+    /// Router state lock shards (`ROUTER_SHARDS` knob); pure
+    /// partitioning, byte-identical decisions for every value.
+    pub state_shards: usize,
+    /// Recovery hysteresis: routing decisions over which a recovered
+    /// node ramps its weight back to full (0 disables the ramp).
+    pub recovery_ramp: u32,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            source_plan: SourcePlan::SubmitFunnel,
+            dtn_capacity: Vec::new(),
+            source_selector: SourceSelector::RoundRobin,
+            dtn_slots: 0,
+            dtn_queue_depth: 0,
+            state_shards: DEFAULT_ROUTER_SHARDS,
+            recovery_ramp: 0,
+        }
+    }
+}
 
 /// Pool-level routing strategy across submit nodes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -726,11 +772,40 @@ impl PoolRouter {
         }
     }
 
-    /// Attach a data-source plan and a DTN fleet (builder style). Each
-    /// entry of `dtn_capacity` is one data node's relative NIC budget.
-    /// With an empty fleet every plan degenerates to the submit funnel
-    /// (callers should [`SourcePlan::validate`] before running a plan
-    /// that needs DTNs).
+    /// A router over the given per-node pools, fully configured from a
+    /// [`RouterConfig`] in one shot — the replacement for the old
+    /// per-setting builder chain. `cfg.dtn_capacity` attaches a DTN
+    /// fleet (each entry one data node's relative NIC budget; empty =
+    /// funnel-only; callers should [`SourcePlan::validate`] before
+    /// running a plan that needs DTNs). A saturated DTN pushes back:
+    /// the selector defers the transfer to a peer with a free slot
+    /// ([`MoverStats::dtn_deferred`]) and overflows to the scheduling
+    /// node's funnel when the whole fleet is full
+    /// ([`MoverStats::dtn_overflow_to_funnel`]) — unless per-DTN wait
+    /// queues are enabled (`cfg.dtn_queue_depth > 0`), in which case
+    /// budget-full transfers queue ([`MoverStats::dtn_queued`]) and are
+    /// promoted into the next slot freed on that DTN, the funnel
+    /// remaining the overflow of last resort once every queue is full.
+    pub fn from_config(
+        nodes: Vec<ShadowPool>,
+        capacity: Vec<f64>,
+        policy: RouterPolicy,
+        cfg: RouterConfig,
+    ) -> PoolRouter {
+        let mut r = PoolRouter::new(nodes, capacity, policy);
+        let n_dtn = cfg.dtn_capacity.len();
+        r.sel.configure_fleet(cfg.source_plan, cfg.dtn_capacity);
+        r.state.set_dtn_count(n_dtn);
+        r.sel.selector = cfg.source_selector;
+        r.sel.dtn_slots = cfg.dtn_slots;
+        r.sel.queue_depth = cfg.dtn_queue_depth;
+        r.state.set_shards(cfg.state_shards);
+        r.ramp_decisions = cfg.recovery_ramp;
+        r
+    }
+
+    /// Attach a data-source plan and a DTN fleet (builder style).
+    #[deprecated(note = "fold into a RouterConfig and build with PoolRouter::from_config")]
     pub fn with_source_plan(mut self, plan: SourcePlan, dtn_capacity: Vec<f64>) -> PoolRouter {
         let n = dtn_capacity.len();
         self.sel.configure_fleet(plan, dtn_capacity);
@@ -738,32 +813,24 @@ impl PoolRouter {
         self
     }
 
-    /// Pick the which-DTN selection strategy (builder style; the default
-    /// is the deterministic round-robin rotation).
+    /// Pick the which-DTN selection strategy (builder style).
+    #[deprecated(note = "fold into a RouterConfig and build with PoolRouter::from_config")]
     pub fn with_source_selector(mut self, selector: SourceSelector) -> PoolRouter {
         self.sel.selector = selector;
         self
     }
 
     /// Give every data node its own admission budget of `slots`
-    /// concurrent transfers (builder style; 0 = unlimited). A saturated
-    /// DTN pushes back: the selector defers the transfer to a peer with
-    /// a free slot ([`MoverStats::dtn_deferred`]) and overflows to the
-    /// scheduling node's funnel when the whole fleet is full
-    /// ([`MoverStats::dtn_overflow_to_funnel`]) — unless per-DTN wait
-    /// queues are enabled ([`PoolRouter::with_dtn_queue`]).
+    /// concurrent transfers (builder style; 0 = unlimited).
+    #[deprecated(note = "fold into a RouterConfig and build with PoolRouter::from_config")]
     pub fn with_dtn_budget(mut self, slots: u32) -> PoolRouter {
         self.sel.dtn_slots = slots;
         self
     }
 
     /// Bound each data node's wait queue at `depth` tickets (builder
-    /// style; 0 — the default — disables queueing). With queues on, a
-    /// budget-full fleet queues transfers ([`MoverStats::dtn_queued`])
-    /// instead of overflowing to the funnel; each queued ticket is
-    /// promoted into the next slot freed on that DTN by
-    /// `release_source`, and the funnel remains the overflow of last
-    /// resort once every queue is full too.
+    /// style; 0 disables queueing).
+    #[deprecated(note = "fold into a RouterConfig and build with PoolRouter::from_config")]
     pub fn with_dtn_queue(mut self, depth: u32) -> PoolRouter {
         self.sel.queue_depth = depth;
         self
@@ -771,17 +838,25 @@ impl PoolRouter {
 
     /// Re-shard the router's ticket/owner state into `shards` lock
     /// shards (builder style; must run before any request enters the
-    /// router). Sharding is pure partitioning: decisions are
-    /// byte-identical for every shard count (`ROUTER_SHARDS` knob).
+    /// router).
+    #[deprecated(note = "fold into a RouterConfig and build with PoolRouter::from_config")]
     pub fn with_state_shards(mut self, shards: usize) -> PoolRouter {
         self.state.set_shards(shards);
         self
     }
 
-    /// Configure recovery hysteresis: a node recovered by
-    /// [`PoolRouter::recover_node`] ramps its weighted-by-capacity
-    /// routing weight back to full over `decisions` routing decisions
-    /// instead of step-restoring it (0 disables the ramp).
+    /// Configure recovery hysteresis after construction: a node
+    /// recovered by [`PoolRouter::recover_node`] ramps its
+    /// weighted-by-capacity routing weight back to full over
+    /// `decisions` routing decisions instead of step-restoring it
+    /// (0 disables the ramp). Internal knob-application path; external
+    /// callers set [`RouterConfig::recovery_ramp`] instead.
+    pub(crate) fn set_ramp_decisions(&mut self, decisions: u32) {
+        self.ramp_decisions = decisions;
+    }
+
+    /// Configure recovery hysteresis (see [`RouterConfig::recovery_ramp`]).
+    #[deprecated(note = "fold into a RouterConfig and build with PoolRouter::from_config")]
     pub fn set_recovery_ramp(&mut self, decisions: u32) {
         self.ramp_decisions = decisions;
     }
@@ -1518,6 +1593,15 @@ mod tests {
         )
     }
 
+    /// Round-robin sim router built through the one-shot config path.
+    fn rr_cfg(nodes: u32, cfg: RouterConfig) -> PoolRouter {
+        let n = nodes.max(1) as usize;
+        let pools = (0..n)
+            .map(|_| ShadowPool::sim(1, ThrottlePolicy::Disabled.into()))
+            .collect();
+        PoolRouter::from_config(pools, vec![1.0; n], RouterPolicy::RoundRobin, cfg)
+    }
+
     #[test]
     fn round_robin_rotates_nodes() {
         let mut router = rr_router(3);
@@ -1897,7 +1981,14 @@ mod tests {
 
     #[test]
     fn dedicated_dtn_round_robins_live_fleet() {
-        let mut router = rr_router(2).with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 3]);
+        let mut router = rr_cfg(
+            2,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; 3],
+                ..RouterConfig::default()
+            },
+        );
         assert_eq!(router.dtn_count(), 3);
         for t in 0..6 {
             let adm = router.request(r(t, "o", 10));
@@ -1920,8 +2011,14 @@ mod tests {
 
     #[test]
     fn hybrid_respects_threshold_at_the_boundary() {
-        let mut router =
-            rr_router(1).with_source_plan(SourcePlan::Hybrid { threshold: 100 }, vec![1.0; 2]);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::Hybrid { threshold: 100 },
+                dtn_capacity: vec![1.0; 2],
+                ..RouterConfig::default()
+            },
+        );
         let small = router.request(r(0, "o", 99));
         assert_eq!(small[0].source, DataSource::Funnel { node: 0 });
         let exact = router.request(r(1, "o", 100));
@@ -1932,7 +2029,14 @@ mod tests {
 
     #[test]
     fn fail_dtn_resources_inflight_then_fails_over_to_funnel() {
-        let mut router = rr_router(1).with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 2]);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; 2],
+                ..RouterConfig::default()
+            },
+        );
         for t in 0..4 {
             router.request(r(t, "o", 5));
         }
@@ -1983,8 +2087,14 @@ mod tests {
         // Regression: the hybrid plan's all-DTNs-dead funnel failover
         // must neither reset nor advance the round-robin cursor, so the
         // rotation resumes exactly where it left off after recovery.
-        let mut router =
-            rr_router(1).with_source_plan(SourcePlan::Hybrid { threshold: 100 }, vec![1.0; 3]);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::Hybrid { threshold: 100 },
+                dtn_capacity: vec![1.0; 3],
+                ..RouterConfig::default()
+            },
+        );
         assert_eq!(router.request(r(0, "o", 100))[0].source, DataSource::Dtn { dtn: 0 });
         assert_eq!(router.request(r(1, "o", 100))[0].source, DataSource::Dtn { dtn: 1 });
         // Nothing in flight when the fleet dies (in-flight re-sources
@@ -2011,9 +2121,15 @@ mod tests {
 
     #[test]
     fn dtn_budget_defers_then_overflows_to_funnel() {
-        let mut router = rr_router(1)
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 2])
-            .with_dtn_budget(1);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; 2],
+                dtn_slots: 1,
+                ..RouterConfig::default()
+            },
+        );
         assert_eq!(router.dtn_budget(), 1);
         // Two admissions fill both data nodes' single slots.
         assert_eq!(router.request(r(0, "o", 5))[0].source, DataSource::Dtn { dtn: 0 });
@@ -2043,9 +2159,15 @@ mod tests {
     #[test]
     fn cache_aware_selector_homes_extents_and_forgets_on_kill() {
         use crate::storage::ExtentId;
-        let mut router = rr_router(1)
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 3])
-            .with_source_selector(SourceSelector::CacheAware);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; 3],
+                source_selector: SourceSelector::CacheAware,
+                ..RouterConfig::default()
+            },
+        );
         // Pre-warmed residency wins over the rotation.
         router.note_extent_resident(2, ExtentId(7));
         let req = |t: u32, e: u64| r(t, "o", 10).with_extent(ExtentId(e));
@@ -2074,9 +2196,15 @@ mod tests {
 
     #[test]
     fn owner_affinity_selector_pins_and_repins_on_kill() {
-        let mut router = rr_router(1)
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 3])
-            .with_source_selector(SourceSelector::OwnerAffinity);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; 3],
+                source_selector: SourceSelector::OwnerAffinity,
+                ..RouterConfig::default()
+            },
+        );
         let first = router.request(r(0, "alice", 10))[0].source;
         let DataSource::Dtn { dtn: home } = first else {
             panic!("dedicated plan placed {first:?}");
@@ -2105,9 +2233,15 @@ mod tests {
 
     #[test]
     fn weighted_selector_splits_by_dtn_capacity() {
-        let mut router = rr_router(1)
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![100.0, 25.0])
-            .with_source_selector(SourceSelector::WeightedByCapacity);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![100.0, 25.0],
+                source_selector: SourceSelector::WeightedByCapacity,
+                ..RouterConfig::default()
+            },
+        );
         for t in 0..100 {
             router.request(r(t, "o", 1));
         }
@@ -2125,7 +2259,14 @@ mod tests {
 
     #[test]
     fn output_source_prefers_live_preferred_then_survivor_then_funnel() {
-        let mut router = rr_router(1).with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 2]);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; 2],
+                ..RouterConfig::default()
+            },
+        );
         let d0 = DataSource::Dtn { dtn: 0 };
         assert_eq!(router.output_source(d0, 0), d0, "live preferred wins");
         router.fail_dtn(0);
@@ -2146,7 +2287,14 @@ mod tests {
 
     #[test]
     fn output_failover_spreads_across_survivors() {
-        let mut router = rr_router(1).with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 4]);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; 4],
+                ..RouterConfig::default()
+            },
+        );
         router.fail_dtn(0);
         let mut counts = [0u32; 4];
         for _ in 0..30 {
@@ -2163,9 +2311,15 @@ mod tests {
 
     #[test]
     fn output_failover_follows_weighted_selector() {
-        let mut router = rr_router(1)
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0, 75.0, 25.0])
-            .with_source_selector(SourceSelector::WeightedByCapacity);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0, 75.0, 25.0],
+                source_selector: SourceSelector::WeightedByCapacity,
+                ..RouterConfig::default()
+            },
+        );
         router.fail_dtn(0);
         let mut counts = [0u32; 3];
         for _ in 0..100 {
@@ -2181,9 +2335,15 @@ mod tests {
 
     #[test]
     fn output_failover_prefers_free_admission_slots() {
-        let mut router = rr_router(1)
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 3])
-            .with_dtn_budget(1);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; 3],
+                dtn_slots: 1,
+                ..RouterConfig::default()
+            },
+        );
         // Saturate dtn 1's only slot, then kill dtn 0: the rotation
         // would hand the next failover to dtn 1, but the budget scan
         // steers it to dtn 2's free slot instead.
@@ -2207,9 +2367,15 @@ mod tests {
             ShadowPool::sim(1, ThrottlePolicy::Disabled.into()),
             ShadowPool::sim(1, ThrottlePolicy::Disabled.into()),
         ];
-        let mut router =
-            PoolRouter::new(nodes, vec![100.0, 100.0], RouterPolicy::WeightedByCapacity);
-        router.set_recovery_ramp(40);
+        let mut router = PoolRouter::from_config(
+            nodes,
+            vec![100.0, 100.0],
+            RouterPolicy::WeightedByCapacity,
+            RouterConfig {
+                recovery_ramp: 40,
+                ..RouterConfig::default()
+            },
+        );
         router.fail_node(1);
         router.recover_node(1);
         // First batch: node 1 is still ramping, so node 0 carries more.
@@ -2282,10 +2448,16 @@ mod tests {
 
     #[test]
     fn dtn_wait_queue_holds_then_promotes() {
-        let mut router = rr_router(1)
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 2])
-            .with_dtn_budget(1)
-            .with_dtn_queue(1);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; 2],
+                dtn_slots: 1,
+                dtn_queue_depth: 1,
+                ..RouterConfig::default()
+            },
+        );
         assert_eq!(router.dtn_queue_depth(), 1);
         // t0/t1 take the two slots; t2/t3 queue (one per DTN); t4 finds
         // every slot AND every queue full and overflows to the funnel.
@@ -2309,10 +2481,16 @@ mod tests {
 
     #[test]
     fn completing_queued_ticket_frees_queue_entry() {
-        let mut router = rr_router(1)
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 1])
-            .with_dtn_budget(1)
-            .with_dtn_queue(2);
+        let mut router = rr_cfg(
+            1,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; 1],
+                dtn_slots: 1,
+                dtn_queue_depth: 2,
+                ..RouterConfig::default()
+            },
+        );
         for t in 0..3 {
             router.request(r(t, "o", 10));
         }
@@ -2331,14 +2509,20 @@ mod tests {
     #[test]
     fn route_batch_matches_single_routing() {
         let build = || {
-            PoolRouter::sim(
-                3,
-                2,
-                ThrottlePolicy::MaxConcurrent(2).into(),
+            let pools = (0..3)
+                .map(|_| ShadowPool::sim(2, ThrottlePolicy::MaxConcurrent(2).into()))
+                .collect();
+            PoolRouter::from_config(
+                pools,
+                vec![1.0; 3],
                 RouterPolicy::LeastLoaded,
+                RouterConfig {
+                    source_plan: SourcePlan::DedicatedDtn,
+                    dtn_capacity: vec![1.0; 2],
+                    dtn_slots: 2,
+                    ..RouterConfig::default()
+                },
             )
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 2])
-            .with_dtn_budget(2)
         };
         let reqs: Vec<TransferRequest> = (0..40)
             .map(|t| r(t, ["a", "b", "c"][t as usize % 3], 10 + t as u64))
@@ -2364,15 +2548,21 @@ mod tests {
     #[test]
     fn state_shards_do_not_change_decisions() {
         let run = |shards: usize| {
-            let mut router = PoolRouter::sim(
-                4,
-                1,
-                ThrottlePolicy::MaxConcurrent(3).into(),
+            let pools = (0..4)
+                .map(|_| ShadowPool::sim(1, ThrottlePolicy::MaxConcurrent(3).into()))
+                .collect();
+            let mut router = PoolRouter::from_config(
+                pools,
+                vec![1.0; 4],
                 RouterPolicy::OwnerAffinity,
-            )
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; 3])
-            .with_source_selector(SourceSelector::OwnerAffinity)
-            .with_state_shards(shards);
+                RouterConfig {
+                    source_plan: SourcePlan::DedicatedDtn,
+                    dtn_capacity: vec![1.0; 3],
+                    source_selector: SourceSelector::OwnerAffinity,
+                    state_shards: shards,
+                    ..RouterConfig::default()
+                },
+            );
             let mut out = Vec::new();
             for t in 0..60 {
                 out.extend(router.request(r(t, &format!("u{}", t % 7), 10)));

@@ -47,7 +47,7 @@
 //! Selection is deterministic for every selector — the same request
 //! sequence always produces the same placement (`tests/props.rs` holds
 //! this as a property) — and composes with per-DTN admission budgets
-//! ([`PoolRouter::with_dtn_budget`](super::PoolRouter::with_dtn_budget)):
+//! ([`RouterConfig::dtn_slots`](super::RouterConfig::dtn_slots)):
 //! a saturated data node pushes back, deferring the transfer to a peer
 //! (`MoverStats::dtn_deferred`) or overflowing to the funnel when the
 //! whole fleet is full (`MoverStats::dtn_overflow_to_funnel`).

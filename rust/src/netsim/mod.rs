@@ -35,6 +35,11 @@ pub struct Link {
     pub name: String,
     /// Capacity in bytes/sec (already derated by protocol efficiency).
     pub capacity_bps: f64,
+    /// Round-trip contribution of this hop in seconds (dynamic solvers
+    /// sum it over a flow's path; 0 for same-rack hops).
+    pub rtt_s: f64,
+    /// Per-packet loss probability contributed by this hop.
+    pub loss: f64,
     /// Cumulative bytes carried (for monitors / figures).
     pub bytes_carried: f64,
     /// Optional throughput monitor (binned timeseries).
@@ -86,6 +91,9 @@ pub struct NetSim {
     /// Incremented on every topology/flow change; used by the engine to
     /// invalidate stale completion events.
     pub epoch: u64,
+    solver: Box<dyn solver::Solver>,
+    /// Next solver-requested re-solve instant (dynamic solvers only).
+    pending_update: Option<SimTime>,
     solver_scratch: solver::Scratch,
 }
 
@@ -104,8 +112,24 @@ impl NetSim {
             now: SimTime::ZERO,
             dirty: false,
             epoch: 0,
+            solver: Box::new(solver::FairShare),
+            pending_update: None,
             solver_scratch: solver::Scratch::default(),
         }
+    }
+
+    /// Install a rate solver (default: [`solver::FairShare`]). Rates are
+    /// re-solved from the current instant.
+    pub fn set_solver(&mut self, solver: Box<dyn solver::Solver>) {
+        self.solver = solver;
+        self.pending_update = None;
+        self.dirty = true;
+        self.epoch += 1;
+    }
+
+    /// Report label of the installed solver.
+    pub fn solver_label(&self) -> &'static str {
+        self.solver.label()
     }
 
     pub fn now(&self) -> SimTime {
@@ -116,10 +140,21 @@ impl NetSim {
         self.links.push(Link {
             name: name.to_string(),
             capacity_bps: capacity.bytes_per_sec(),
+            rtt_s: 0.0,
+            loss: 0.0,
             bytes_carried: 0.0,
             monitor: None,
         });
         LinkId(self.links.len() - 1)
+    }
+
+    /// Annotate a link with its RTT contribution and per-packet loss
+    /// probability (consumed by dynamic solvers; ignored by fair-share).
+    pub fn set_link_profile(&mut self, link: LinkId, rtt_s: f64, loss: f64) {
+        self.links[link.0].rtt_s = rtt_s;
+        self.links[link.0].loss = loss;
+        self.dirty = true;
+        self.epoch += 1;
     }
 
     /// Attach a throughput monitor with the given bin width.
@@ -174,12 +209,15 @@ impl NetSim {
         self.flows.len()
     }
 
-    /// Re-run the max-min solver if the flow set or capacities changed.
+    /// Re-run the rate solver if the flow set, capacities, or (for a
+    /// dynamic solver) a scheduled window-update instant changed.
     pub fn resolve(&mut self) {
         if !self.dirty {
             return;
         }
-        solver::solve(&self.links, &mut self.flows, &mut self.solver_scratch);
+        self.solver
+            .solve(self.now, &self.links, &mut self.flows, &mut self.solver_scratch);
+        self.pending_update = self.solver.next_update(self.now);
         self.dirty = false;
     }
 
@@ -213,10 +251,19 @@ impl NetSim {
             }
         }
         self.now = t;
+        // Crossing a solver-scheduled update instant invalidates rates
+        // (and any completion event computed from them).
+        if self.pending_update.is_some_and(|u| u <= self.now) {
+            self.pending_update = None;
+            self.dirty = true;
+            self.epoch += 1;
+        }
     }
 
-    /// Earliest instant at which some active flow completes under current
-    /// rates (None if no active flows or all rates are zero).
+    /// Earliest instant at which the engine must act: some flow completes
+    /// under current rates, or a dynamic solver wants a window update
+    /// (None if no active flows or all rates are zero and no update is
+    /// pending).
     pub fn next_completion(&mut self) -> Option<SimTime> {
         self.resolve();
         let mut best: Option<f64> = None;
@@ -233,7 +280,12 @@ impl NetSim {
         // returned instant always consumes the full remaining bytes —
         // rounding down would leave sub-byte remainders and livelock the
         // event loop on zero-length advances.
-        best.map(|eta| self.now + SimTime((eta * 1e9).ceil() as u64 + 1))
+        let completion = best.map(|eta| self.now + SimTime((eta * 1e9).ceil() as u64 + 1));
+        let update = self.solver.next_update(self.now);
+        match (completion, update) {
+            (Some(c), Some(u)) => Some(c.min(u)),
+            (c, u) => c.or(u),
+        }
     }
 
     /// Flows that have finished by the current instant.

@@ -1,14 +1,33 @@
-//! Max-min fair-share solver (progressive filling / water-filling).
+//! Rate solvers: how concurrent flows share the capacitated links.
 //!
-//! Each flow is additionally constrained by its per-flow cap (its TCP
-//! throughput ceiling), modeled as a private pseudo-link. The algorithm is
-//! the textbook one: repeatedly find the most-constrained resource (the one
-//! with the smallest fair share among its unfrozen flows), freeze its flows
-//! at that share, subtract, repeat. Complexity O(iterations × flows ×
-//! path-length); with the paper's ~200 concurrent transfers over ~20
-//! resources a solve is microseconds (see `benches/netsim_solver.rs`).
+//! Two [`Solver`] implementations share one progressive-filling core:
+//!
+//! * [`FairShare`] — the steady-state max-min model (the default). Each
+//!   flow is additionally constrained by its per-flow cap (its TCP
+//!   throughput ceiling), modeled as a private pseudo-link. The algorithm
+//!   is the textbook one: repeatedly find the most-constrained resource
+//!   (the one with the smallest fair share among its unfrozen flows),
+//!   freeze its flows at that share, subtract, repeat. Complexity
+//!   O(iterations × flows × path-length); with the paper's ~200 concurrent
+//!   transfers over ~20 resources a solve is microseconds (see
+//!   `benches/netsim_solver.rs`).
+//! * [`TcpDynamic`] — per-flow congestion windows evolved in virtual
+//!   time: slow start (IW ≈ 10 MSS, doubling per RTT), AIMD congestion
+//!   avoidance (+1 MSS per RTT, halve on loss), Bernoulli per-packet loss
+//!   sampled per RTT from the path's loss rate. Each flow's *effective*
+//!   cap becomes `min(cap_bps, cwnd/RTT)` and the same max-min filling
+//!   distributes link capacity under those dynamic ceilings, so the
+//!   RTT-dependent ramp the paper observes on its ~58 ms cross-US paths
+//!   is reproduced instead of assumed away. In the zero-loss, zero-RTT
+//!   limit (path RTT floors at the calibrated LAN value, where even the
+//!   initial window sustains IW/RTT ≈ 73 MB/s) any flow whose fair share
+//!   sits below that never sees its window bind, and the solver
+//!   degenerates to [`FairShare`] exactly (property-tested in
+//!   `tests/props.rs`).
 
-use super::{Flow, FlowId, Link};
+use super::{calib, Flow, FlowId, Link};
+use crate::util::units::SimTime;
+use crate::util::Prng;
 use std::collections::HashMap;
 
 /// Reusable allocations for the solver hot path.
@@ -18,35 +37,54 @@ pub struct Scratch {
     count: Vec<u32>,
     order: Vec<FlowId>,
     frozen: Vec<bool>,
+    /// Effective per-flow cap for this solve (indexed like `order`).
+    eff_cap: Vec<f64>,
+}
+
+impl Scratch {
+    /// Fill `order` (deterministic flow order — HashMap iteration is not)
+    /// and size the per-link/per-flow work arrays.
+    fn prepare(&mut self, links: &[Link], flows: &HashMap<FlowId, Flow>) {
+        self.order.clear();
+        self.order.extend(flows.keys().copied());
+        self.order.sort();
+
+        self.rem.clear();
+        self.rem.extend(links.iter().map(|l| l.capacity_bps));
+        self.count.clear();
+        self.count.resize(links.len(), 0);
+        self.frozen.clear();
+        self.frozen.resize(flows.len(), false);
+        self.eff_cap.clear();
+        self.eff_cap.resize(flows.len(), f64::INFINITY);
+
+        for id in &self.order {
+            for l in &flows[id].path {
+                self.count[l.0] += 1;
+            }
+        }
+    }
 }
 
 /// Compute max-min fair rates for `flows` over `links`, writing each
-/// flow's `rate`.
+/// flow's `rate`. Caps come from each flow's own `cap_bps` (the
+/// steady-state [`FairShare`] model).
 pub fn solve(links: &[Link], flows: &mut HashMap<FlowId, Flow>, scratch: &mut Scratch) {
-    let n = flows.len();
-    if n == 0 {
+    if flows.is_empty() {
         return;
     }
-
-    // Deterministic flow order (HashMap iteration is not).
-    scratch.order.clear();
-    scratch.order.extend(flows.keys().copied());
-    scratch.order.sort();
-
-    scratch.rem.clear();
-    scratch.rem.extend(links.iter().map(|l| l.capacity_bps));
-    scratch.count.clear();
-    scratch.count.resize(links.len(), 0);
-    scratch.frozen.clear();
-    scratch.frozen.resize(n, false);
-
-    for id in &scratch.order {
-        for l in &flows[id].path {
-            scratch.count[l.0] += 1;
-        }
+    scratch.prepare(links, flows);
+    for (fi, id) in scratch.order.iter().enumerate() {
+        scratch.eff_cap[fi] = flows[id].cap_bps;
     }
+    fill(flows, scratch);
+}
 
-    let mut unfrozen = n;
+/// Progressive filling over prepared scratch state: distribute link
+/// capacity max-min fairly, each flow ceilinged at `scratch.eff_cap`.
+/// Callers must have run [`Scratch::prepare`] and set `eff_cap`.
+fn fill(flows: &mut HashMap<FlowId, Flow>, scratch: &mut Scratch) {
+    let mut unfrozen = scratch.order.len();
     // Progressive filling: each iteration freezes at least one flow.
     while unfrozen > 0 {
         // Smallest fair share among saturable links and flow caps.
@@ -57,9 +95,9 @@ pub fn solve(links: &[Link], flows: &mut HashMap<FlowId, Flow>, scratch: &mut Sc
             }
         }
         let mut cap_limited = false;
-        for (fi, id) in scratch.order.iter().enumerate() {
+        for fi in 0..scratch.order.len() {
             if !scratch.frozen[fi] {
-                let cap = flows[id].cap_bps;
+                let cap = scratch.eff_cap[fi];
                 if cap <= limit {
                     limit = cap;
                     cap_limited = true;
@@ -80,13 +118,14 @@ pub fn solve(links: &[Link], flows: &mut HashMap<FlowId, Flow>, scratch: &mut Sc
                 continue;
             }
             let f = &flows[id];
-            let at_cap = cap_limited && f.cap_bps <= limit * (1.0 + 1e-12);
+            let cap = scratch.eff_cap[fi];
+            let at_cap = cap_limited && cap <= limit * (1.0 + 1e-12);
             let on_bottleneck = f.path.iter().any(|l| {
                 scratch.count[l.0] > 0
                     && scratch.rem[l.0] / scratch.count[l.0] as f64 <= limit * (1.0 + 1e-9)
             });
             if at_cap || on_bottleneck {
-                let rate = limit.min(f.cap_bps);
+                let rate = limit.min(cap);
                 let path = f.path.clone();
                 flows.get_mut(id).unwrap().rate = rate;
                 scratch.frozen[fi] = true;
@@ -103,12 +142,270 @@ pub fn solve(links: &[Link], flows: &mut HashMap<FlowId, Flow>, scratch: &mut Sc
             // Defensive: freeze everything at the limit to avoid a hang.
             for (fi, id) in scratch.order.iter().enumerate() {
                 if !scratch.frozen[fi] {
-                    flows.get_mut(id).unwrap().rate = limit.min(flows[id].cap_bps);
+                    flows.get_mut(id).unwrap().rate = limit.min(scratch.eff_cap[fi]);
                     scratch.frozen[fi] = true;
                     unfrozen -= 1;
                 }
             }
         }
+    }
+}
+
+/// A rate solver: given the current instant, links, and active flows,
+/// write each flow's `rate`. Dynamic solvers additionally publish the
+/// next virtual instant at which rates must be re-solved even though no
+/// flow arrived or departed ([`Solver::next_update`]).
+pub trait Solver: std::fmt::Debug + Send {
+    /// Short machine-readable name stamped into reports ("fair-share",
+    /// "tcp-dynamic").
+    fn label(&self) -> &'static str;
+
+    /// Recompute every flow's `rate` as of `now`.
+    fn solve(
+        &mut self,
+        now: SimTime,
+        links: &[Link],
+        flows: &mut HashMap<FlowId, Flow>,
+        scratch: &mut Scratch,
+    );
+
+    /// Next instant (strictly after `now`) at which this solver wants to
+    /// re-run with no topology change — `None` for steady-state solvers
+    /// and once every window has saturated.
+    fn next_update(&self, _now: SimTime) -> Option<SimTime> {
+        None
+    }
+}
+
+/// Which solver to install — the `SOLVER` knob / `--solver` flag, parsed
+/// from its report label.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    FairShare,
+    TcpDynamic,
+}
+
+impl SolverKind {
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fair-share" | "fairshare" | "fair_share" => Some(SolverKind::FairShare),
+            "tcp-dynamic" | "tcpdynamic" | "tcp_dynamic" | "tcp" => Some(SolverKind::TcpDynamic),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SolverKind::FairShare => "fair-share",
+            SolverKind::TcpDynamic => "tcp-dynamic",
+        }
+    }
+
+    /// Construct the solver. `seed` feeds [`TcpDynamic`]'s per-flow loss
+    /// sampling (ignored by [`FairShare`]).
+    pub fn build(&self, seed: u64) -> Box<dyn Solver> {
+        match self {
+            SolverKind::FairShare => Box::new(FairShare),
+            SolverKind::TcpDynamic => Box::new(TcpDynamic::new(seed)),
+        }
+    }
+}
+
+impl Default for SolverKind {
+    fn default() -> Self {
+        SolverKind::FairShare
+    }
+}
+
+/// The steady-state max-min solver (default): flows jump to their
+/// fair-share rate instantly; caps are static.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FairShare;
+
+impl Solver for FairShare {
+    fn label(&self) -> &'static str {
+        "fair-share"
+    }
+
+    fn solve(
+        &mut self,
+        _now: SimTime,
+        links: &[Link],
+        flows: &mut HashMap<FlowId, Flow>,
+        scratch: &mut Scratch,
+    ) {
+        solve(links, flows, scratch);
+    }
+}
+
+/// TCP initial window (RFC 6928): 10 segments.
+const INIT_CWND_BYTES: f64 = 10.0 * calib::MSS_BYTES;
+/// Congestion-avoidance flows re-solve every this many RTTs (slow-start
+/// flows every RTT) — coarse enough to keep the event count linear in
+/// virtual time, fine enough that AIMD sawtooth averages out per bin.
+const CA_TICK_RTTS: f64 = 8.0;
+/// Floor on the re-solve cadence so sub-millisecond LAN RTTs cannot
+/// flood the event loop.
+const MIN_TICK_S: f64 = 1e-4;
+/// Cap on per-flow RTT steps replayed in one solve (a clamp, not a
+/// cadence: the update schedule keeps elapsed time ≈ one tick).
+const MAX_STEPS_PER_SOLVE: u64 = 256;
+
+/// Per-flow congestion state evolved by [`TcpDynamic`].
+#[derive(Debug)]
+struct TcpFlowState {
+    /// Congestion window in bytes.
+    cwnd: f64,
+    /// Slow-start threshold in bytes.
+    ssthresh: f64,
+    /// Path round trip (sum of link RTTs, floored at the LAN RTT).
+    rtt_s: f64,
+    /// Path loss probability (per packet).
+    loss: f64,
+    /// Instant up to which window dynamics have been replayed.
+    last: SimTime,
+    slow_start: bool,
+    /// True once the window can no longer bind (zero-loss path, cwnd at
+    /// the kernel ceiling or past the flow's static cap): stop ticking.
+    saturated: bool,
+    prng: Prng,
+}
+
+/// Dynamic TCP solver: slow start + AIMD + Bernoulli loss per flow,
+/// layered under the same max-min filling as [`FairShare`].
+#[derive(Debug)]
+pub struct TcpDynamic {
+    seed: u64,
+    states: HashMap<FlowId, TcpFlowState>,
+    pending: Option<SimTime>,
+}
+
+impl TcpDynamic {
+    pub fn new(seed: u64) -> TcpDynamic {
+        TcpDynamic {
+            seed,
+            states: HashMap::new(),
+            pending: None,
+        }
+    }
+
+    /// Path RTT / loss of a flow from its links' annotations. RTT floors
+    /// at the calibrated LAN RTT so a zero-RTT topology still has a
+    /// well-defined (and instantly-saturating) window dynamic.
+    fn path_profile(links: &[Link], f: &Flow) -> (f64, f64) {
+        let rtt: f64 = f.path.iter().map(|l| links[l.0].rtt_s).sum();
+        let loss: f64 = f.path.iter().map(|l| links[l.0].loss).sum();
+        (rtt.max(calib::LAN_RTT_S), loss.clamp(0.0, 1.0))
+    }
+
+    /// Replay window dynamics for one flow up to `now`, one RTT per step.
+    fn evolve(s: &mut TcpFlowState, now: SimTime) {
+        if s.saturated {
+            return;
+        }
+        let elapsed = now.since(s.last).as_secs_f64();
+        let whole_rtts = (elapsed / s.rtt_s).floor() as u64;
+        if whole_rtts == 0 {
+            return;
+        }
+        let steps = whole_rtts.min(MAX_STEPS_PER_SOLVE);
+        for _ in 0..steps {
+            let packets = (s.cwnd / calib::MSS_BYTES).max(1.0);
+            // Probability at least one of this RTT's packets is lost.
+            let p_event = if s.loss > 0.0 {
+                1.0 - (1.0 - s.loss).powf(packets)
+            } else {
+                0.0
+            };
+            if p_event > 0.0 && s.prng.next_f64() < p_event {
+                // Loss event: multiplicative decrease, leave slow start.
+                s.ssthresh = (s.cwnd / 2.0).max(2.0 * calib::MSS_BYTES);
+                s.cwnd = s.ssthresh;
+                s.slow_start = false;
+            } else if s.slow_start {
+                s.cwnd = (s.cwnd * 2.0).min(s.ssthresh.min(calib::TCP_WINDOW_BYTES));
+                if s.cwnd >= s.ssthresh || s.cwnd >= calib::TCP_WINDOW_BYTES {
+                    s.slow_start = false;
+                }
+            } else {
+                // Additive increase: one MSS per RTT.
+                s.cwnd = (s.cwnd + calib::MSS_BYTES).min(calib::TCP_WINDOW_BYTES);
+            }
+        }
+        s.last = if whole_rtts > steps {
+            now // clamped replay: drop sub-RTT phase rather than lag behind
+        } else {
+            s.last + SimTime((steps as f64 * s.rtt_s * 1e9) as u64)
+        };
+    }
+}
+
+impl Solver for TcpDynamic {
+    fn label(&self) -> &'static str {
+        "tcp-dynamic"
+    }
+
+    fn solve(
+        &mut self,
+        now: SimTime,
+        links: &[Link],
+        flows: &mut HashMap<FlowId, Flow>,
+        scratch: &mut Scratch,
+    ) {
+        self.states.retain(|id, _| flows.contains_key(id));
+        if flows.is_empty() {
+            self.pending = None;
+            return;
+        }
+        scratch.prepare(links, flows);
+        let mut min_tick = f64::INFINITY;
+        for (fi, id) in scratch.order.iter().enumerate() {
+            let f = &flows[id];
+            let seed = self.seed ^ id.0.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            let s = self.states.entry(*id).or_insert_with(|| {
+                let (rtt_s, loss) = TcpDynamic::path_profile(links, f);
+                TcpFlowState {
+                    cwnd: INIT_CWND_BYTES,
+                    ssthresh: f64::INFINITY,
+                    rtt_s,
+                    loss,
+                    last: f.started,
+                    slow_start: true,
+                    saturated: false,
+                    prng: Prng::new(seed),
+                }
+            });
+            TcpDynamic::evolve(s, now);
+            let window_limit = s.cwnd / s.rtt_s;
+            // A zero-loss window only grows: once it stops binding (flow
+            // cap or kernel ceiling reached) it never binds again.
+            if s.loss == 0.0
+                && (window_limit >= f.cap_bps || s.cwnd >= calib::TCP_WINDOW_BYTES)
+            {
+                s.saturated = true;
+            }
+            scratch.eff_cap[fi] = f.cap_bps.min(window_limit);
+            if !s.saturated {
+                let tick = if s.slow_start {
+                    s.rtt_s
+                } else {
+                    CA_TICK_RTTS * s.rtt_s
+                };
+                min_tick = min_tick.min(tick.max(MIN_TICK_S));
+            }
+        }
+        fill(flows, scratch);
+        self.pending = if min_tick.is_finite() {
+            Some(now + SimTime((min_tick * 1e9).ceil() as u64))
+        } else {
+            None
+        };
+    }
+
+    fn next_update(&self, now: SimTime) -> Option<SimTime> {
+        // Strictly in the future: an update at/before `now` would stall
+        // the event loop on zero-length advances.
+        self.pending.map(|t| t.max(now + SimTime(1)))
     }
 }
 
@@ -123,6 +420,8 @@ mod tests {
         Link {
             name: "l".into(),
             capacity_bps: Gbps(cap_gbps).bytes_per_sec(),
+            rtt_s: 0.0,
+            loss: 0.0,
             bytes_carried: 0.0,
             monitor: None,
         }
@@ -191,10 +490,7 @@ mod tests {
     #[test]
     fn all_capped_below_fair_share() {
         let links = vec![mklink(80.0)]; // 10 GB/s
-        let rates = run(
-            &links,
-            (0..5).map(|_| mkflow(vec![0], 0.2e9)).collect(),
-        );
+        let rates = run(&links, (0..5).map(|_| mkflow(vec![0], 0.2e9)).collect());
         for r in rates {
             assert!((r - 0.2e9).abs() < 1.0);
         }
@@ -306,5 +602,100 @@ mod tests {
                 Some(prev) => assert_eq!(prev, &rates),
             }
         }
+    }
+
+    #[test]
+    fn solver_kind_parse_and_label_roundtrip() {
+        for kind in [SolverKind::FairShare, SolverKind::TcpDynamic] {
+            assert_eq!(SolverKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(SolverKind::parse("tcp"), Some(SolverKind::TcpDynamic));
+        assert_eq!(SolverKind::parse("nope"), None);
+        assert_eq!(SolverKind::default(), SolverKind::FairShare);
+    }
+
+    /// On a long-RTT path the dynamic solver's early rate is window-bound
+    /// far below the link, then ramps toward it; the steady-state solver
+    /// starts at full rate.
+    #[test]
+    fn tcp_dynamic_slow_start_ramps() {
+        let mut net = NetSim::new();
+        let l = net.add_link("wan", Gbps(8.0)); // 1 GB/s
+        net.set_link_profile(l, 0.1, 0.0); // 100 ms RTT, lossless
+        net.set_solver(SolverKind::TcpDynamic.build(7));
+        let f = net.start_flow(vec![l], 1e12, f64::INFINITY);
+        let r0 = net.flow_rate(f).unwrap();
+        assert!(
+            (r0 - INIT_CWND_BYTES / 0.1).abs() < 1.0,
+            "first RTT is IW-bound: got {r0}"
+        );
+        // Step through solver updates: the rate must double per RTT until
+        // the 16 MiB kernel window ceiling (160 MB/s at 100 ms) binds.
+        let mut last = r0;
+        for _ in 0..16 {
+            let Some(t) = net.next_completion() else { break };
+            net.advance_to(t);
+            let r = net.flow_rate(f).unwrap();
+            assert!(r >= last - 1.0, "ramp is monotone on a lossless path");
+            last = r;
+        }
+        let ceiling = calib::TCP_WINDOW_BYTES / 0.1;
+        assert!(
+            (last - ceiling).abs() < 1.0,
+            "ramp converges to window/RTT = {ceiling}, got {last}"
+        );
+    }
+
+    /// Loss keeps the window (and thus the rate) strictly below the
+    /// lossless ceiling — the Mathis mechanism, emerging from sampling.
+    #[test]
+    fn tcp_dynamic_loss_limits_rate() {
+        let run_with = |loss: f64| -> f64 {
+            let mut net = NetSim::new();
+            let l = net.add_link("wan", Gbps(80.0));
+            net.set_link_profile(l, 0.058, loss);
+            net.set_solver(SolverKind::TcpDynamic.build(11));
+            let f = net.start_flow(vec![l], 5e10, f64::INFINITY);
+            let mut rates = Vec::new();
+            for _ in 0..200 {
+                let Some(t) = net.next_completion() else { break };
+                net.advance_to(t);
+                if net.completed().contains(&f) {
+                    break;
+                }
+                rates.push(net.flow_rate(f).unwrap());
+            }
+            let tail = &rates[rates.len() / 2..];
+            tail.iter().sum::<f64>() / tail.len() as f64
+        };
+        let lossless = run_with(0.0);
+        let lossy = run_with(1e-4);
+        assert!(
+            lossy < lossless * 0.5,
+            "1e-4 loss must sit well below the lossless rate: {lossy} vs {lossless}"
+        );
+    }
+
+    /// Per-flow PRNG streams make the loss process deterministic for a
+    /// given seed and event sequence.
+    #[test]
+    fn tcp_dynamic_deterministic_across_runs() {
+        let run_once = || -> Vec<f64> {
+            let mut net = NetSim::new();
+            let l = net.add_link("wan", Gbps(8.0));
+            net.set_link_profile(l, 0.05, 1e-5);
+            net.set_solver(SolverKind::TcpDynamic.build(42));
+            let f1 = net.start_flow(vec![l], 1e11, f64::INFINITY);
+            let f2 = net.start_flow(vec![l], 1e11, f64::INFINITY);
+            let mut rates = Vec::new();
+            for _ in 0..50 {
+                let Some(t) = net.next_completion() else { break };
+                net.advance_to(t);
+                rates.push(net.flow_rate(f1).unwrap_or(0.0));
+                rates.push(net.flow_rate(f2).unwrap_or(0.0));
+            }
+            rates
+        };
+        assert_eq!(run_once(), run_once());
     }
 }

@@ -63,6 +63,15 @@ impl PathProfile {
         window_limit.min(loss_limit).min(self.endpoint_bps)
     }
 
+    /// Steady-state cap of one stream with the loss term excluded
+    /// (bytes/sec): window and endpoint ceilings only. This is the cap a
+    /// *dynamic* solver should see — it models loss and the ramp in-band
+    /// via the congestion window, so folding the Mathis limit in here
+    /// would count loss twice.
+    pub fn stream_cap_loss_free_bps(&self) -> f64 {
+        (self.window_bytes / self.rtt_s).min(self.endpoint_bps)
+    }
+
     /// Connection + auth handshake latency before bytes flow (seconds).
     pub fn setup_latency_s(&self) -> f64 {
         // Handshake round trips + slow-start ramp to reach the cap:
@@ -71,6 +80,13 @@ impl PathProfile {
         let target_w = (cap * self.rtt_s).max(calib::MSS_BYTES * 10.0);
         let ramp_rtts = (target_w / (calib::MSS_BYTES * 10.0)).log2().max(0.0);
         (calib::HANDSHAKE_RTTS + ramp_rtts) * self.rtt_s
+    }
+
+    /// Handshake-only setup latency (seconds) — the companion of
+    /// [`PathProfile::stream_cap_loss_free_bps`] for dynamic solvers,
+    /// which replay the slow-start ramp themselves.
+    pub fn handshake_latency_s(&self) -> f64 {
+        calib::HANDSHAKE_RTTS * self.rtt_s
     }
 }
 
@@ -121,6 +137,25 @@ mod tests {
         let worse = p.stream_cap_bps();
         assert!(worse < base);
         assert!((base / worse - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn loss_free_cap_excludes_mathis_term() {
+        let p = PathProfile::wan();
+        assert!(
+            p.stream_cap_loss_free_bps() > p.stream_cap_bps(),
+            "WAN is loss-bound, so dropping the Mathis term must raise the cap"
+        );
+        // LAN has no loss: both caps agree (endpoint-bound).
+        let lan = PathProfile::lan();
+        assert!((lan.stream_cap_loss_free_bps() - lan.stream_cap_bps()).abs() < 1.0);
+    }
+
+    #[test]
+    fn handshake_latency_excludes_ramp() {
+        let p = PathProfile::wan();
+        assert!(p.handshake_latency_s() < p.setup_latency_s());
+        assert!((p.handshake_latency_s() - calib::HANDSHAKE_RTTS * p.rtt_s).abs() < 1e-12);
     }
 
     #[test]

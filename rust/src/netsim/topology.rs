@@ -73,6 +73,16 @@ pub struct TestbedSpec {
     pub vpn_on_submit: bool,
     /// Width of the throughput monitor bins on the submit NIC.
     pub monitor_bin: SimTime,
+    /// Override the path round trip in milliseconds (`LINK_RTT_MS` knob).
+    /// Takes precedence over the WAN spec's RTT; on LAN-only topologies
+    /// it annotates the sender NIC hop. `None` = the calibrated default.
+    pub link_rtt_ms: Option<f64>,
+    /// Override the per-packet path loss probability (`LINK_LOSS` knob);
+    /// same precedence as `link_rtt_ms`.
+    pub link_loss: Option<f64>,
+    /// Override the per-stream endpoint ceiling in bytes/sec (the
+    /// calibration harness pins this to a measured loopback rate).
+    pub endpoint_bps: Option<f64>,
 }
 
 impl TestbedSpec {
@@ -97,6 +107,9 @@ impl TestbedSpec {
             wan: None,
             vpn_on_submit: false,
             monitor_bin: SimTime::from_secs(60),
+            link_rtt_ms: None,
+            link_loss: None,
+            endpoint_bps: None,
         }
     }
 
@@ -127,6 +140,9 @@ impl TestbedSpec {
             }),
             vpn_on_submit: false,
             monitor_bin: SimTime::from_secs(60),
+            link_rtt_ms: None,
+            link_loss: None,
+            endpoint_bps: None,
         }
     }
 
@@ -221,6 +237,27 @@ impl Testbed {
             .map(|(i, w)| net.add_link(&format!("worker{i}.nic.rx"), Gbps(w.nic_gbps * eff)))
             .collect();
 
+        // RTT/loss annotations for dynamic solvers. The WAN's latency and
+        // loss live on the backbone hop; explicit `link_rtt_ms`/`link_loss`
+        // overrides take precedence and, on LAN-only topologies, land on
+        // the sender NIC hops (once per path — worker rx stays clean so a
+        // path never double-counts).
+        let rtt_s = spec
+            .link_rtt_ms
+            .map(|ms| ms / 1000.0)
+            .or(spec.wan.map(|w| w.rtt_s));
+        let loss = spec.link_loss.or(spec.wan.map(|w| w.loss));
+        if rtt_s.is_some() || loss.is_some() {
+            let (r, l) = (rtt_s.unwrap_or(0.0), loss.unwrap_or(0.0));
+            if let Some(b) = backbone {
+                net.set_link_profile(b, r, l);
+            } else {
+                for &tx in submit_txs.iter().chain(data_txs.iter()) {
+                    net.set_link_profile(tx, r, l);
+                }
+            }
+        }
+
         Testbed {
             net,
             spec,
@@ -307,9 +344,11 @@ impl Testbed {
         self.net.set_capacity(link, Gbps(gbps.max(0.001) * eff));
     }
 
-    /// TCP path profile for transfers to any worker in this testbed.
+    /// TCP path profile for transfers to any worker in this testbed,
+    /// with the spec's `link_rtt_ms`/`link_loss`/`endpoint_bps`
+    /// overrides applied.
     pub fn path_profile(&self) -> PathProfile {
-        match self.spec.wan {
+        let mut p = match self.spec.wan {
             None => PathProfile::lan(),
             Some(w) => PathProfile {
                 rtt_s: w.rtt_s,
@@ -317,7 +356,17 @@ impl Testbed {
                 window_bytes: calib::TCP_WINDOW_BYTES,
                 endpoint_bps: calib::PER_STREAM_ENDPOINT_BPS,
             },
+        };
+        if let Some(ms) = self.spec.link_rtt_ms {
+            p.rtt_s = ms / 1000.0;
         }
+        if let Some(l) = self.spec.link_loss {
+            p.loss = l;
+        }
+        if let Some(e) = self.spec.endpoint_bps {
+            p.endpoint_bps = e;
+        }
+        p
     }
 
     /// Background-traffic parameters for the shared path, if any:
@@ -475,6 +524,44 @@ mod tests {
         let mut rev = tb.path_from_worker(0, 1);
         rev.reverse();
         assert_eq!(fwd, rev);
+    }
+
+    #[test]
+    fn wan_rtt_and_loss_stamped_on_backbone() {
+        let tb = Testbed::build(TestbedSpec::wan_paper());
+        let b = tb.net.link(tb.backbone.unwrap());
+        assert!((b.rtt_s - calib::WAN_RTT_S).abs() < 1e-12);
+        assert!((b.loss - calib::WAN_LOSS).abs() < 1e-15);
+        // LAN links stay unannotated.
+        assert_eq!(tb.net.link(tb.submit_txs[0]).rtt_s, 0.0);
+    }
+
+    #[test]
+    fn link_overrides_beat_wan_defaults_and_reach_lan_nics() {
+        let mut spec = TestbedSpec::wan_paper();
+        spec.link_rtt_ms = Some(200.0);
+        spec.link_loss = Some(1e-5);
+        let tb = Testbed::build(spec);
+        let b = tb.net.link(tb.backbone.unwrap());
+        assert!((b.rtt_s - 0.2).abs() < 1e-12);
+        assert!((b.loss - 1e-5).abs() < 1e-15);
+        assert!((tb.path_profile().rtt_s - 0.2).abs() < 1e-12);
+
+        let mut spec = TestbedSpec::lan_paper();
+        spec.n_data_nodes = 1;
+        spec.link_rtt_ms = Some(50.0);
+        let tb = Testbed::build(spec);
+        assert!((tb.net.link(tb.submit_txs[0]).rtt_s - 0.05).abs() < 1e-12);
+        assert!((tb.net.link(tb.data_txs[0]).rtt_s - 0.05).abs() < 1e-12);
+        assert_eq!(tb.net.link(tb.worker_rx[0]).rtt_s, 0.0, "once per path");
+    }
+
+    #[test]
+    fn endpoint_override_reaches_path_profile() {
+        let mut spec = TestbedSpec::lan_paper();
+        spec.endpoint_bps = Some(42e6);
+        let tb = Testbed::build(spec);
+        assert!((tb.path_profile().endpoint_bps - 42e6).abs() < 1.0);
     }
 
     #[test]

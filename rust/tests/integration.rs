@@ -138,6 +138,60 @@ fn scenario_ordering_holds_at_small_scale() {
     }
 }
 
+/// Regression: on a long-RTT WAN path the TcpDynamic solver's slow-start
+/// ramp is visible in the submit-NIC bin series — the first full bin
+/// after bytes start flowing sits far below the plateau, where FairShare
+/// jumps straight to its (Mathis-capped) steady rate after setup.
+#[test]
+fn wan_slow_start_ramp_shows_in_nic_bins() {
+    use htcdm::netsim::solver::SolverKind;
+    let run = |kind: SolverKind| {
+        let mut tb = TestbedSpec::wan_paper();
+        tb.link_rtt_ms = Some(200.0); // stretch the ramp across several bins
+        tb.monitor_bin = SimTime::from_secs_f64(0.5);
+        let mut spec = EngineSpec::paper(tb, ThrottlePolicy::Disabled);
+        spec.n_jobs = 40;
+        spec.input_bytes = Bytes(400_000_000);
+        spec.output_bytes = Bytes(4_000);
+        spec.runtime_median_s = 0.0;
+        spec.seed = 42;
+        spec.solver = kind;
+        Experiment::custom("ramp", spec).run().unwrap()
+    };
+    let fs = run(SolverKind::FairShare);
+    let tcp = run(SolverKind::TcpDynamic);
+    assert_eq!(fs.errors, 0);
+    assert_eq!(tcp.errors, 0);
+    assert_eq!(fs.solver, "fair-share");
+    assert_eq!(tcp.solver, "tcp-dynamic");
+
+    // Rate of the second non-empty bin relative to the series peak: the
+    // first non-empty bin only partially overlaps flow start, the second
+    // is entirely inside the transfer.
+    let early_vs_peak = |r: &htcdm::coordinator::Report| -> f64 {
+        let rates: Vec<f64> = r.series.gbps_series().iter().map(|&(_, g)| g.0).collect();
+        let peak = rates.iter().cloned().fold(0.0, f64::max);
+        assert!(peak > 0.0, "no bytes monitored for {}", r.solver);
+        let second = rates
+            .iter()
+            .cloned()
+            .filter(|v| *v > peak * 1e-3)
+            .nth(1)
+            .expect("at least two non-empty bins");
+        second / peak
+    };
+    let fs_early = early_vs_peak(&fs);
+    let tcp_early = early_vs_peak(&tcp);
+    assert!(
+        fs_early > 0.6,
+        "fair-share should start at its steady rate, got {fs_early:.3} of peak"
+    );
+    assert!(
+        tcp_early < 0.3,
+        "tcp-dynamic should still be in slow start one bin in, got {tcp_early:.3} of peak"
+    );
+}
+
 /// Storage hardlink dataset + engine: the 10k-names-one-extent trick.
 #[test]
 fn paper_dataset_feeds_pool() {

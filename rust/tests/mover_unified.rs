@@ -44,7 +44,7 @@ fn same_mover_object_drives_sim_and_real_fabric() {
 
     // Extract the very same mover object from the sim schedd.
     let mut schedd = result.schedd;
-    let mover = schedd.take_mover();
+    let mover = schedd.take_router().into_single().unwrap();
     assert_eq!(mover.stats().total_admitted, sim_jobs as u64);
 
     // Phase 2: the real TCP fabric moves sealed bytes through the same

@@ -3,8 +3,8 @@
 use htcdm::classad::{matches, parse_expr, Ad, Value};
 use htcdm::metrics::BinSeries;
 use htcdm::mover::{
-    AdmissionConfig, AdmissionQueue, DataSource, PoolRouter, Routed, RouterPolicy, SourcePlan,
-    SourceSelector, TransferRequest,
+    AdmissionConfig, AdmissionQueue, DataSource, PoolRouter, Routed, RouterConfig, RouterPolicy,
+    ShadowPool, SourcePlan, SourceSelector, TransferRequest,
 };
 use htcdm::netsim::NetSim;
 use htcdm::storage::ExtentId;
@@ -13,6 +13,19 @@ use htcdm::transfer::{ThrottlePolicy, TransferQueue};
 use htcdm::util::testkit::check;
 use htcdm::util::units::{Gbps, SimTime};
 use std::collections::HashMap;
+
+/// Uniform sim router built through the one-shot config path: `n_nodes`
+/// single-shard nodes, each with its own copy of the admission policy.
+fn cfg_router(
+    n_nodes: u32,
+    admission: AdmissionConfig,
+    policy: RouterPolicy,
+    cfg: RouterConfig,
+) -> PoolRouter {
+    let n = n_nodes.max(1) as usize;
+    let nodes = (0..n).map(|_| ShadowPool::sim(1, admission.clone())).collect();
+    PoolRouter::from_config(nodes, vec![1.0; n], policy, cfg)
+}
 
 /// Sealed roundtrip through random chunking always restores plaintext and
 /// digests XOR-combine across the chunk boundary structure.
@@ -77,6 +90,55 @@ fn prop_netsim_byte_conservation() {
         let carried = net.link(link).bytes_carried;
         let rel = (carried - total).abs() / total;
         assert!(rel < 1e-6, "carried {carried} vs total {total}");
+    });
+}
+
+/// TcpDynamic degenerates to FairShare in the zero-loss, vanishing-RTT
+/// limit. The solver floors path RTT at the calibrated LAN value
+/// (0.2 ms), so the initial window already sustains IW/RTT ≈ 73 MB/s;
+/// with link caps <= 1 Gbps and >= 2 flows every fair share sits below
+/// that, the window never binds, and the dynamic solver must reproduce
+/// max-min completion times exactly.
+#[test]
+fn prop_tcp_dynamic_matches_fair_share_in_limit() {
+    use htcdm::netsim::solver::SolverKind;
+    use htcdm::netsim::FlowId;
+    check("tcp-fair-share-limit", 15, |g| {
+        let cap = Gbps(g.rng.range_f64(0.1, 1.0));
+        let n = g.rng.range_usize(2, 12);
+        let sizes: Vec<f64> = (0..n).map(|_| g.rng.range_f64(10e6, 500e6)).collect();
+        let run = |kind: SolverKind| -> Vec<f64> {
+            let mut net = NetSim::new();
+            net.set_solver(kind.build(17));
+            let link = net.add_link("nic", cap);
+            net.set_link_profile(link, 1e-6, 0.0); // zero loss, ~zero RTT
+            let ids: Vec<FlowId> = sizes
+                .iter()
+                .map(|b| net.start_flow(vec![link], *b, f64::INFINITY))
+                .collect();
+            let mut done: HashMap<FlowId, f64> = HashMap::new();
+            let mut guard = 0;
+            while net.active_flows() > 0 {
+                guard += 1;
+                assert!(guard < 100_000, "stuck under {}", kind.label());
+                let t = net.next_completion().expect("flows active");
+                net.advance_to(t);
+                for f in net.completed() {
+                    net.finish_flow(f);
+                    done.insert(f, net.now().as_secs_f64());
+                }
+            }
+            ids.iter().map(|f| done[f]).collect()
+        };
+        let fs = run(SolverKind::FairShare);
+        let tcp = run(SolverKind::TcpDynamic);
+        for (i, (a, b)) in fs.iter().zip(&tcp).enumerate() {
+            let rel = (a - b).abs() / a.max(1e-9);
+            assert!(
+                rel < 1e-3,
+                "flow {i}: fair-share finished at {a:.6}s, tcp-dynamic at {b:.6}s"
+            );
+        }
     });
 }
 
@@ -500,13 +562,16 @@ fn prop_hybrid_source_selection_deterministic_and_threshold_exact() {
         let n_dtns = g.rng.range_usize(1, 4);
         let threshold = g.rng.range_u64(2, 1_000_000);
         let make = || {
-            PoolRouter::sim(
-                1,
+            cfg_router(
                 1,
                 AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
                 RouterPolicy::LeastLoaded,
+                RouterConfig {
+                    source_plan: SourcePlan::Hybrid { threshold },
+                    dtn_capacity: vec![1.0; n_dtns],
+                    ..RouterConfig::default()
+                },
             )
-            .with_source_plan(SourcePlan::Hybrid { threshold }, vec![1.0; n_dtns])
         };
         let mut a = make();
         let mut b = make();
@@ -566,14 +631,17 @@ fn prop_cache_affinity_deterministic_and_sticky() {
         let n_dtns = g.rng.range_usize(2, 4);
         let n_ext = g.rng.range_u64(2, 6);
         let make = || {
-            PoolRouter::sim(
-                1,
+            cfg_router(
                 1,
                 AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
                 RouterPolicy::LeastLoaded,
+                RouterConfig {
+                    source_plan: SourcePlan::DedicatedDtn,
+                    dtn_capacity: vec![1.0; n_dtns],
+                    source_selector: SourceSelector::CacheAware,
+                    ..RouterConfig::default()
+                },
             )
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; n_dtns])
-            .with_source_selector(SourceSelector::CacheAware)
         };
         let mut a = make();
         let mut b = make();
@@ -620,14 +688,17 @@ fn prop_owner_affinity_source_repins_on_kill() {
     check("owner-affinity-repin", 25, |g| {
         let n_dtns = g.rng.range_usize(2, 4);
         let owners = ["alice", "bob", "carol"];
-        let mut router = PoolRouter::sim(
-            1,
+        let mut router = cfg_router(
             1,
             AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
             RouterPolicy::LeastLoaded,
-        )
-        .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; n_dtns])
-        .with_source_selector(SourceSelector::OwnerAffinity);
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; n_dtns],
+                source_selector: SourceSelector::OwnerAffinity,
+                ..RouterConfig::default()
+            },
+        );
 
         // Establish pins under churn; each owner must never move.
         let mut pin: HashMap<&str, usize> = HashMap::new();
@@ -708,16 +779,19 @@ fn prop_dtn_slot_accounting_exact_under_fail() {
             SourceSelector::OwnerAffinity,
             SourceSelector::WeightedByCapacity,
         ][g.rng.range_usize(0, 3)];
-        let mut router = PoolRouter::sim(
+        let mut router = cfg_router(
             2,
-            1,
             AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
             RouterPolicy::RoundRobin,
-        )
-        .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; n_dtns])
-        .with_source_selector(selector)
-        .with_dtn_budget(slots)
-        .with_dtn_queue(depth);
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; n_dtns],
+                source_selector: selector,
+                dtn_slots: slots,
+                dtn_queue_depth: depth,
+                ..RouterConfig::default()
+            },
+        );
 
         // Enough traffic to fill every slot and park waiters somewhere.
         let full = n_dtns * (slots + depth) as usize;
@@ -860,17 +934,20 @@ fn prop_state_shards_do_not_change_decisions() {
         }
 
         let run = |shards: usize| -> (Vec<Routed>, htcdm::mover::MoverStats, Vec<u64>) {
-            let mut router = PoolRouter::sim(
+            let mut router = cfg_router(
                 n_nodes,
-                1,
                 AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(limit)),
                 policy,
-            )
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; n_dtns])
-            .with_source_selector(selector)
-            .with_dtn_budget(budget)
-            .with_dtn_queue(depth)
-            .with_state_shards(shards);
+                RouterConfig {
+                    source_plan: SourcePlan::DedicatedDtn,
+                    dtn_capacity: vec![1.0; n_dtns],
+                    source_selector: selector,
+                    dtn_slots: budget,
+                    dtn_queue_depth: depth,
+                    state_shards: shards,
+                    ..RouterConfig::default()
+                },
+            );
             let mut decisions: Vec<Routed> = Vec::new();
             for op in &ops {
                 match *op {
@@ -921,14 +998,17 @@ fn prop_route_batch_equals_single_requests() {
             RouterPolicy::OwnerAffinity,
         ][g.rng.range_usize(0, 2)];
         let make = || {
-            PoolRouter::sim(
+            cfg_router(
                 n_nodes,
-                1,
                 AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(limit)),
                 policy,
+                RouterConfig {
+                    source_plan: SourcePlan::DedicatedDtn,
+                    dtn_capacity: vec![1.0; n_dtns],
+                    source_selector: SourceSelector::CacheAware,
+                    ..RouterConfig::default()
+                },
             )
-            .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0; n_dtns])
-            .with_source_selector(SourceSelector::CacheAware)
         };
         let n_reqs = g.rng.range_u64(10, 80) as u32;
         let reqs: Vec<TransferRequest> = (0..n_reqs)

@@ -8,7 +8,10 @@
 use htcdm::coordinator::engine::{Engine, EngineSpec};
 use htcdm::coordinator::{Experiment, Scenario};
 use htcdm::fabric::{run_real_pool, run_real_pool_router, RealPoolConfig};
-use htcdm::mover::{DataSource, FaultPlan, PoolRouter, RouterPolicy, SourcePlan, SourceSelector};
+use htcdm::mover::{
+    DataSource, FaultPlan, PoolRouter, RouterConfig, RouterPolicy, ShadowPool, SourcePlan,
+    SourceSelector,
+};
 use htcdm::netsim::topology::TestbedSpec;
 use htcdm::transfer::ThrottlePolicy;
 use htcdm::util::units::{Bytes, SimTime};
@@ -47,13 +50,16 @@ fn real_cfg(n_jobs: u32) -> RealPoolConfig {
 fn same_source_plan_drives_sim_and_real_fabric() {
     let sim_jobs = 24u32;
     let real_jobs = 8u32;
-    let router = PoolRouter::sim(
-        1,
-        2,
-        ThrottlePolicy::Disabled.into(),
+    let router = PoolRouter::from_config(
+        vec![ShadowPool::sim(2, ThrottlePolicy::Disabled.into())],
+        vec![1.0],
         RouterPolicy::LeastLoaded,
-    )
-    .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0, 1.0]);
+        RouterConfig {
+            source_plan: SourcePlan::DedicatedDtn,
+            dtn_capacity: vec![1.0, 1.0],
+            ..RouterConfig::default()
+        },
+    );
     assert_eq!(router.dtn_count(), 2);
 
     // Phase 1: the simulated fabric routes every input flow over the
@@ -186,14 +192,17 @@ fn dtn_offload_4_scenario_smokes() {
 /// pin) carrying across fabrics through the one router object.
 #[test]
 fn same_source_selector_drives_sim_and_real_fabric_with_repin() {
-    let router = PoolRouter::sim(
-        1,
-        2,
-        ThrottlePolicy::Disabled.into(),
+    let router = PoolRouter::from_config(
+        vec![ShadowPool::sim(2, ThrottlePolicy::Disabled.into())],
+        vec![1.0],
         RouterPolicy::LeastLoaded,
-    )
-    .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0, 1.0])
-    .with_source_selector(SourceSelector::OwnerAffinity);
+        RouterConfig {
+            source_plan: SourcePlan::DedicatedDtn,
+            dtn_capacity: vec![1.0, 1.0],
+            source_selector: SourceSelector::OwnerAffinity,
+            ..RouterConfig::default()
+        },
+    );
 
     // Phase 1 (sim): one owner, one pin — the whole burst rides a
     // single data node.
@@ -252,13 +261,18 @@ fn same_source_selector_drives_sim_and_real_fabric_with_repin() {
 #[test]
 fn schedule_node_failure_composes_with_dtn_sources() {
     use htcdm::mover::TransferRequest;
-    let mut router = PoolRouter::sim(
-        2,
-        1,
-        ThrottlePolicy::MaxConcurrent(2).into(),
+    let mut router = PoolRouter::from_config(
+        (0..2)
+            .map(|_| ShadowPool::sim(1, ThrottlePolicy::MaxConcurrent(2).into()))
+            .collect(),
+        vec![1.0; 2],
         RouterPolicy::RoundRobin,
-    )
-    .with_source_plan(SourcePlan::DedicatedDtn, vec![1.0, 1.0]);
+        RouterConfig {
+            source_plan: SourcePlan::DedicatedDtn,
+            dtn_capacity: vec![1.0, 1.0],
+            ..RouterConfig::default()
+        },
+    );
     for t in 0..8 {
         router.request(TransferRequest::new(t, "o", 1000));
     }
