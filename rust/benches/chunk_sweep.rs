@@ -2,7 +2,8 @@
 //!
 //! Frame size trades per-frame overhead (header+digest+engine dispatch)
 //! against latency and memory; this locates the knee for the native
-//! engine. See EXPERIMENTS.md §Perf for the artifact-engine variant.
+//! engine. See docs/ARCHITECTURE.md §Data-path performance for the
+//! byte-path framing this sweeps over.
 //! Run: cargo bench --bench chunk_sweep
 
 use htcdm::fabric::{run_real_pool, RealPoolConfig};

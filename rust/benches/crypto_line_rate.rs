@@ -3,8 +3,8 @@
 //!
 //! Measures the native engines (ChaCha20, AES-256-CTR, integrity-only) per
 //! chunk size, and — with HTCDM_BENCH_XLA=1 — the PJRT artifact engine
-//! (interpret-mode Pallas; see EXPERIMENTS.md §Perf for why that path is
-//! structural, not line-rate, on CPU).
+//! (interpret-mode Pallas; see docs/ARCHITECTURE.md §Data-path performance
+//! for why that path is structural, not line-rate, on CPU).
 //! Run: cargo bench --bench crypto_line_rate
 
 use htcdm::runtime::engine::{Kind, NativeEngine, SealEngine};

@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
         r.median_wire_transfer.as_mins_f64()
     );
     println!("  errors                0          {}", r.errors);
-    println!("  * see EXPERIMENTS.md: the paper's 2.6 min is inconsistent with");
+    println!("  * the paper's 2.6 min is inconsistent with");
     println!("    200 slots at 90 Gbps; our emergent value is reported.");
     println!("\nFig. 1 reproduction (5-min bins):\n{}", r.figure(100.0));
     println!("[bench wall time: {:.2} s]", t0.elapsed().as_secs_f64());

@@ -1,0 +1,349 @@
+//! Bench: sealed-stream goodput of the zero-copy byte data path.
+//!
+//! Three sections, each emitted as JSON rows (set `BENCH_REPORT_DIR` to
+//! write them to `stream_goodput.json`; schema in docs/REPORTS.md):
+//!
+//! * per-core send goodput — `send_stream` into a null sink, per cipher
+//!   and chunk size (seal cost + framing, no socket),
+//! * per-core recv goodput — `recv_stream` from a prebuilt wire image,
+//! * a loopback single-stream row over a real TCP socket at the default
+//!   64 KiB chunk: the pre-PR word-path code (kept verbatim in the
+//!   `legacy` module below) vs the zero-copy v2 path, gated in-bench at
+//!   `MIN_RATIO`x so CI fails if the byte path regresses to word-path
+//!   speeds. See docs/ARCHITECTURE.md §Data-path performance.
+//!
+//! Run: cargo bench --bench stream_goodput
+//! CI smoke: cargo bench --bench stream_goodput -- --smoke
+
+use htcdm::runtime::engine::NativeEngine;
+use htcdm::security::Method;
+use htcdm::transfer::stream::{
+    recv_stream, seal_threads_from_env, send_stream, send_stream_opts, StreamOpts,
+    DEFAULT_CHUNK_WORDS, V2,
+};
+use htcdm::util::Prng;
+use std::io::{BufReader, IoSlice, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The zero-copy loopback stream must beat the pre-PR word path by at
+/// least this factor at the default chunk size, or the bench errors.
+const MIN_RATIO: f64 = 2.0;
+
+/// The pre-PR word-path sender/receiver, copied verbatim so the
+/// baseline stays honest as the crate evolves. The word-level seal
+/// functions it drives (`chacha::seal_chunk` and friends) are the
+/// crate's frozen scalar reference, so this is exactly the data path
+/// shipped before the byte-path rewrite.
+mod legacy {
+    use anyhow::{bail, Context, Result};
+    use htcdm::runtime::engine::{Kind, SealEngine};
+    use htcdm::security::chacha::bytes_to_words;
+    use htcdm::transfer::stream::{StreamStats, MAGIC};
+    use std::io::{Read, Write};
+
+    fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+        w.write_all(&v.to_le_bytes()).context("write u32")
+    }
+
+    fn read_u32(r: &mut impl Read) -> Result<u32> {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b).context("read u32")?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn send_stream_words(
+        w: &mut impl Write,
+        engine: &mut dyn SealEngine,
+        key: &[u32; 8],
+        nonce: &[u32; 3],
+        data: &[u8],
+        chunk_words: usize,
+    ) -> Result<StreamStats> {
+        assert!(chunk_words % 16 == 0 && chunk_words > 0);
+        let mut stats = StreamStats::default();
+        w.write_all(MAGIC)?;
+        write_u32(w, 1)?;
+        w.write_all(&(data.len() as u64).to_le_bytes())?;
+        write_u32(w, chunk_words as u32)?;
+        stats.wire_bytes += 4 + 4 + 8 + 4;
+        let words = bytes_to_words(data);
+        let mut counter0: u32 = 0;
+        let mut frame_buf: Vec<u8> = Vec::with_capacity(chunk_words * 4 + 32);
+        for chunk in words.chunks(chunk_words) {
+            let mut buf = chunk.to_vec();
+            let digest = engine.process(Kind::Seal, key, nonce, counter0, &mut buf)?;
+            frame_buf.clear();
+            frame_buf.extend_from_slice(&counter0.to_le_bytes());
+            frame_buf.extend_from_slice(&(buf.len() as u32).to_le_bytes());
+            for word in &buf {
+                frame_buf.extend_from_slice(&word.to_le_bytes());
+            }
+            for d in &digest {
+                frame_buf.extend_from_slice(&d.to_le_bytes());
+            }
+            w.write_all(&frame_buf)?;
+            stats.wire_bytes += 8 + buf.len() as u64 * 4 + 16;
+            stats.frames += 1;
+            counter0 = counter0.wrapping_add((buf.len() / 16) as u32);
+        }
+        stats.payload_bytes = data.len() as u64;
+        w.flush()?;
+        Ok(stats)
+    }
+
+    pub fn recv_stream_words(
+        r: &mut impl Read,
+        engine: &mut dyn SealEngine,
+        key: &[u32; 8],
+        nonce: &[u32; 3],
+    ) -> Result<(Vec<u8>, StreamStats)> {
+        let mut stats = StreamStats::default();
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).context("read magic")?;
+        if &magic != MAGIC {
+            bail!("bad stream magic {magic:?}");
+        }
+        let version = read_u32(r)?;
+        if version != 1 {
+            bail!("unsupported stream version {version}");
+        }
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8).context("read u64")?;
+        let file_bytes = u64::from_le_bytes(b8) as usize;
+        let chunk_words = read_u32(r)? as usize;
+        if chunk_words == 0 || chunk_words % 16 != 0 || chunk_words > (1 << 24) {
+            bail!("bad chunk_words {chunk_words}");
+        }
+        stats.wire_bytes += 4 + 4 + 8 + 4;
+        let total_words = file_bytes.div_ceil(64) * 16;
+        let mut bytes: Vec<u8> = Vec::with_capacity(total_words * 4);
+        let mut received_words = 0usize;
+        let mut expect_counter: u32 = 0;
+        let mut byte_buf: Vec<u8> = Vec::new();
+        let mut frame_words: Vec<u32> = Vec::new();
+        while received_words < total_words {
+            let counter0 = read_u32(r)?;
+            if counter0 != expect_counter {
+                bail!("frame counter {counter0} != expected {expect_counter}");
+            }
+            let n_words = read_u32(r)? as usize;
+            if n_words == 0 || n_words % 16 != 0 || n_words > chunk_words {
+                bail!("bad frame n_words {n_words}");
+            }
+            byte_buf.resize(n_words * 4, 0);
+            r.read_exact(&mut byte_buf).context("read frame payload")?;
+            frame_words.clear();
+            frame_words.extend(
+                byte_buf
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap())),
+            );
+            let mut digest = [0u32; 4];
+            for d in digest.iter_mut() {
+                *d = read_u32(r)?;
+            }
+            let computed = engine.process(Kind::Unseal, key, nonce, counter0, &mut frame_words)?;
+            if computed != digest {
+                bail!("integrity failure at counter {counter0}");
+            }
+            stats.wire_bytes += 8 + n_words as u64 * 4 + 16;
+            stats.frames += 1;
+            expect_counter = expect_counter.wrapping_add((n_words / 16) as u32);
+            received_words += n_words;
+            for w in &frame_words {
+                bytes.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        bytes.truncate(file_bytes);
+        stats.payload_bytes = file_bytes as u64;
+        Ok((bytes, stats))
+    }
+}
+
+fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke") || std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+/// Discards everything, including vectored writes, so send benchmarks
+/// measure sealing + framing without a socket.
+struct NullWriter;
+
+impl Write for NullWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        Ok(buf.len())
+    }
+    fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> std::io::Result<usize> {
+        Ok(bufs.iter().map(|b| b.len()).sum())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+fn payload(bytes: usize) -> Vec<u8> {
+    let mut rng = Prng::new(42);
+    (0..bytes).map(|_| rng.next_u32() as u8).collect()
+}
+
+fn method_name(m: Method) -> &'static str {
+    match m {
+        Method::Chacha20 => "chacha20",
+        Method::Aes256Ctr => "aes256ctr",
+        Method::Plain => "plain",
+    }
+}
+
+fn bench_send(method: Method, chunk_words: usize, data: &[u8], secs: f64) -> anyhow::Result<f64> {
+    let mut engine = NativeEngine::new(method);
+    let key = [7u32; 8];
+    let nonce = [1, 2, 3];
+    send_stream(&mut NullWriter, &mut engine, &key, &nonce, data, chunk_words)?;
+    let t0 = Instant::now();
+    let mut bytes = 0u64;
+    while t0.elapsed().as_secs_f64() < secs {
+        send_stream(&mut NullWriter, &mut engine, &key, &nonce, data, chunk_words)?;
+        bytes += data.len() as u64;
+    }
+    Ok(bytes as f64 * 8.0 / t0.elapsed().as_secs_f64() / 1e9)
+}
+
+fn bench_recv(method: Method, chunk_words: usize, data: &[u8], secs: f64) -> anyhow::Result<f64> {
+    let mut engine = NativeEngine::new(method);
+    let key = [7u32; 8];
+    let nonce = [1, 2, 3];
+    let mut wire = Vec::new();
+    send_stream(&mut wire, &mut engine, &key, &nonce, data, chunk_words)?;
+    let (out, _) = recv_stream(&mut std::io::Cursor::new(&wire), &mut engine, &key, &nonce)?;
+    anyhow::ensure!(out == data, "recv bench roundtrip mismatch");
+    let t0 = Instant::now();
+    let mut bytes = 0u64;
+    while t0.elapsed().as_secs_f64() < secs {
+        recv_stream(&mut std::io::Cursor::new(&wire), &mut engine, &key, &nonce)?;
+        bytes += data.len() as u64;
+    }
+    Ok(bytes as f64 * 8.0 / t0.elapsed().as_secs_f64() / 1e9)
+}
+
+/// One sealed transfer over a real loopback socket; returns goodput in
+/// Gbps measured wall-to-wall on the receiving side (connect to last
+/// payload byte, so the sender's sealing is on the clock too).
+fn loopback_once(data: &Arc<Vec<u8>>, legacy_path: bool) -> anyhow::Result<f64> {
+    let key = [7u32; 8];
+    let nonce = [4, 5, 6];
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let tx_data = Arc::clone(data);
+    let server = std::thread::spawn(move || -> anyhow::Result<()> {
+        let (mut sock, _) = listener.accept()?;
+        let mut engine = NativeEngine::new(Method::Chacha20);
+        if legacy_path {
+            legacy::send_stream_words(
+                &mut sock,
+                &mut engine,
+                &key,
+                &nonce,
+                &tx_data,
+                DEFAULT_CHUNK_WORDS,
+            )?;
+        } else {
+            let opts = StreamOpts {
+                chunk_words: DEFAULT_CHUNK_WORDS,
+                seal_threads: seal_threads_from_env(),
+                version: V2,
+            };
+            send_stream_opts(&mut sock, &mut engine, &key, &nonce, &tx_data, &opts)?;
+        }
+        Ok(())
+    });
+    let t0 = Instant::now();
+    let sock = TcpStream::connect(addr)?;
+    let mut r = BufReader::with_capacity(1 << 20, sock);
+    let mut engine = NativeEngine::new(Method::Chacha20);
+    let out = if legacy_path {
+        legacy::recv_stream_words(&mut r, &mut engine, &key, &nonce)?.0
+    } else {
+        recv_stream(&mut r, &mut engine, &key, &nonce)?.0
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    server
+        .join()
+        .map_err(|_| anyhow::anyhow!("loopback sender panicked"))??;
+    anyhow::ensure!(out == **data, "loopback payload mismatch");
+    Ok(data.len() as f64 * 8.0 / secs / 1e9)
+}
+
+fn loopback_best(data: &Arc<Vec<u8>>, legacy_path: bool, reps: usize) -> anyhow::Result<f64> {
+    let mut best = 0.0f64;
+    for _ in 0..reps {
+        best = best.max(loopback_once(data, legacy_path)?);
+    }
+    Ok(best)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = smoke_mode();
+    let mut json_rows: Vec<String> = Vec::new();
+    let core_bytes = if smoke { 2 << 20 } else { 8 << 20 };
+    let secs = if smoke { 0.2 } else { 1.0 };
+    let data = payload(core_bytes);
+    if smoke {
+        println!("[smoke mode: small payloads, short windows]");
+    }
+
+    println!("=== per-core sealed-stream goodput (zero-copy byte path, single thread) ===");
+    println!("  dir   cipher       chunk        Gbps");
+    for method in [Method::Chacha20, Method::Aes256Ctr] {
+        for chunk_words in [4096usize, 16384, 65536] {
+            let tx = bench_send(method, chunk_words, &data, secs)?;
+            let rx = bench_recv(method, chunk_words, &data, secs)?;
+            let kib = chunk_words * 4 / 1024;
+            println!("  send  {:<10} {kib:>5} KiB  {tx:>8.3}", method_name(method));
+            println!("  recv  {:<10} {kib:>5} KiB  {rx:>8.3}", method_name(method));
+            for (dir, gbps) in [("send", tx), ("recv", rx)] {
+                json_rows.push(format!(
+                    "{{\"section\":\"per_core\",\"dir\":\"{dir}\",\"method\":\"{}\",\
+                     \"chunk_words\":{chunk_words},\"gbps\":{gbps:.3}}}",
+                    method_name(method)
+                ));
+            }
+        }
+    }
+
+    let loop_bytes = if smoke { 16 << 20 } else { 64 << 20 };
+    let reps = if smoke { 2 } else { 3 };
+    let loop_data = Arc::new(payload(loop_bytes));
+    println!("\n=== loopback single stream (ChaCha20, 64 KiB chunk, best of {reps}) ===");
+    let baseline = loopback_best(&loop_data, true, reps)?;
+    let v2 = loopback_best(&loop_data, false, reps)?;
+    let ratio = v2 / baseline.max(1e-9);
+    let threads = seal_threads_from_env();
+    println!("  legacy v1 word path   {baseline:>8.3} Gbps");
+    println!("  zero-copy v2 path     {v2:>8.3} Gbps  (SEAL_THREADS={threads})");
+    println!("  speedup               {ratio:>8.2}x  (gate: >= {MIN_RATIO}x)");
+    for (path, gbps) in [("legacy_v1_words", baseline), ("zero_copy_v2", v2)] {
+        json_rows.push(format!(
+            "{{\"section\":\"loopback\",\"path\":\"{path}\",\"payload_bytes\":{loop_bytes},\
+             \"seal_threads\":{threads},\"gbps\":{gbps:.3}}}"
+        ));
+    }
+    json_rows.push(format!(
+        "{{\"section\":\"gate\",\"baseline_gbps\":{baseline:.3},\"v2_gbps\":{v2:.3},\
+         \"ratio\":{ratio:.3},\"min_ratio\":{MIN_RATIO}}}"
+    ));
+
+    if let Ok(dir) = std::env::var("BENCH_REPORT_DIR") {
+        std::fs::create_dir_all(&dir).ok();
+        let path = format!("{dir}/stream_goodput.json");
+        std::fs::write(&path, format!("[{}]\n", json_rows.join(",\n ")))?;
+        eprintln!("wrote {path}");
+    }
+
+    anyhow::ensure!(
+        ratio >= MIN_RATIO,
+        "zero-copy stream goodput regressed: {v2:.3} Gbps vs word-path {baseline:.3} Gbps \
+         ({ratio:.2}x < {MIN_RATIO}x)"
+    );
+    Ok(())
+}

@@ -12,6 +12,6 @@ pub mod tcp;
 
 pub use calibrate::{run_calibration, CalibrationConfig, SolverCalibration, SolverPoint};
 pub use tcp::{
-    run_real_pool, run_real_pool_router, run_real_pool_with, run_real_task, FileServer,
-    RealPoolConfig, RealPoolReport, RealTaskConfig, RealTaskReport, ServerRole,
+    run_real_pool, run_real_pool_router, run_real_pool_with, run_real_task, ChunkProposal,
+    FileServer, RealPoolConfig, RealPoolReport, RealTaskConfig, RealTaskReport, ServerRole,
 };

@@ -25,7 +25,7 @@
 
 use crate::jobs::JobSpec;
 use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan};
-use crate::mover::task::{sha256_hex, synth_file_bytes, TaskProgress, TaskRunner, TunerSample};
+use crate::mover::task::{synth_file_bytes, TaskProgress, TaskRunner, TunerSample};
 use crate::mover::{
     AdmissionConfig, DataSource, MoverStats, PoolRouter, Routed, RouterConfig, RouterPolicy,
     RouterStats, ShadowPool, SourcePlan, SourceSelector, TransferRequest,
@@ -33,8 +33,12 @@ use crate::mover::{
 use crate::runtime::engine::{NativeEngine, SealEngine};
 use crate::runtime::service::{EngineHandle, EngineService};
 use crate::security::session::{self, PoolKey};
+use crate::security::sha256::Sha256;
 use crate::security::Method;
-use crate::transfer::stream::{recv_stream, send_stream, StreamStats};
+use crate::transfer::stream::{
+    recv_stream, recv_stream_with, seal_threads_from_env, send_stream, send_stream_opts,
+    StreamOpts, StreamStats, MAX_WIRE_CHUNK_WORDS, V1, V2,
+};
 use crate::transfer::ThrottlePolicy;
 use crate::util::{OnlineStats, Prng};
 use anyhow::{anyhow, bail, Context, Result};
@@ -160,6 +164,11 @@ pub struct FileServer {
     stop: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<()>>,
     pub bytes_served: Arc<AtomicU64>,
+    /// Wire bytes this server put on (and accepted from) its sockets:
+    /// payload plus stream headers, frame heads and digests. The
+    /// payload/wire split is what the reports surface as framing
+    /// overhead.
+    pub wire_bytes_served: Arc<AtomicU64>,
     pub outputs_received: Arc<AtomicU64>,
     /// Live connection sockets (keyed by connection sequence, removed
     /// when their serving thread finishes); [`FileServer::stop`] shuts
@@ -200,11 +209,13 @@ impl FileServer {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let bytes_served = Arc::new(AtomicU64::new(0));
+        let wire_bytes_served = Arc::new(AtomicU64::new(0));
         let outputs_received = Arc::new(AtomicU64::new(0));
         let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::new(Mutex::new(Vec::new()));
 
         let stop2 = stop.clone();
         let bytes2 = bytes_served.clone();
+        let wire2 = wire_bytes_served.clone();
         let outputs2 = outputs_received.clone();
         let conns2 = conns.clone();
         let thread = std::thread::Builder::new()
@@ -223,6 +234,7 @@ impl FileServer {
                             let key = pool_key.clone();
                             let engines = engines.clone();
                             let bytes3 = bytes2.clone();
+                            let wire3 = wire2.clone();
                             let outputs3 = outputs2.clone();
                             let conns3 = conns2.clone();
                             let seq = conn_seq;
@@ -230,7 +242,7 @@ impl FileServer {
                                 let mut rng = Prng::new(0xF11E_5E17 ^ seq);
                                 if let Err(e) = serve_one(
                                     sock, &files, &key, &engines, &mut rng, chunk_words, &bytes3,
-                                    &outputs3,
+                                    &wire3, &outputs3,
                                 ) {
                                     log::warn!("connection {seq}: {e:#}");
                                 }
@@ -259,6 +271,7 @@ impl FileServer {
             stop,
             thread: Some(thread),
             bytes_served,
+            wire_bytes_served,
             outputs_received,
             conns,
         })
@@ -284,6 +297,36 @@ impl Drop for FileServer {
     }
 }
 
+/// High bit of the shard-announcement word: set by v2 clients to open a
+/// chunk negotiation (a `u32` proposal follows; the server echoes the
+/// agreed value). Unflagged announcements get the exact v1 protocol and
+/// the server's configured chunk, so v1 peers interoperate untouched.
+pub const NEGOTIATE_FLAG: u32 = 0x8000_0000;
+
+/// The client's chunk-size stance for one connection (wire format v2
+/// negotiation; see [`NEGOTIATE_FLAG`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkProposal {
+    /// Pre-negotiation v1 protocol: announce only the shard.
+    Legacy,
+    /// Negotiate, but let the server pick its configured chunk.
+    ServerDefault,
+    /// Negotiate this many words per frame. The server validates and
+    /// falls back to its configured chunk on a bad value.
+    Words(usize),
+}
+
+/// Server side of the chunk negotiation: validate the client's proposal
+/// and pick the connection's chunk (0 = "server default").
+fn negotiate_chunk_words(proposed: u32, configured: usize) -> usize {
+    let p = proposed as usize;
+    if p == 0 || p % 16 != 0 || p > MAX_WIRE_CHUNK_WORDS {
+        configured
+    } else {
+        p
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn serve_one(
     mut sock: TcpStream,
@@ -293,14 +336,24 @@ fn serve_one(
     rng: &mut Prng,
     chunk_words: usize,
     bytes_served: &AtomicU64,
+    wire_bytes_served: &AtomicU64,
     outputs_received: &AtomicU64,
 ) -> Result<()> {
     sock.set_nodelay(true).ok();
     let sess = server_handshake(&mut sock, key, rng)?;
 
     // Shadow-shard announcement: the mover assigned this transfer a
-    // shard at admission; its engine seals this connection.
-    let shard = read_u32(&mut sock)? as usize;
+    // shard at admission; its engine seals this connection. A v2 client
+    // sets the high bit and follows with its chunk proposal.
+    let shard_word = read_u32(&mut sock)?;
+    let (shard, chunk, version) = if shard_word & NEGOTIATE_FLAG != 0 {
+        let proposed = read_u32(&mut sock)?;
+        let agreed = negotiate_chunk_words(proposed, chunk_words);
+        write_u32(&mut sock, agreed as u32)?;
+        ((shard_word & !NEGOTIATE_FLAG) as usize, agreed, V2)
+    } else {
+        (shard_word as usize, chunk_words, V1)
+    };
     let mut engine = engines[shard % engines.len()].clone();
 
     // File request.
@@ -316,32 +369,40 @@ fn serve_one(
         .ok_or_else(|| anyhow!("no such input file '{name}'"))?
         .clone();
 
-    let stats = send_stream(
+    let opts = StreamOpts {
+        chunk_words: chunk,
+        seal_threads: seal_threads_from_env(),
+        version,
+    };
+    let stats = send_stream_opts(
         &mut sock,
         &mut engine,
         &sess.key_words,
         &sess.nonce_words,
         &content,
-        chunk_words,
+        &opts,
     )?;
     bytes_served.fetch_add(stats.payload_bytes, Ordering::Relaxed);
+    wire_bytes_served.fetch_add(stats.wire_bytes, Ordering::Relaxed);
 
     // Output sandbox comes back on the same session. The output stream's
     // counters continue after the input's (no keystream reuse).
     let mut rx_engine = NativeEngine::new(sess.method);
-    let (_output, _ostats) = recv_stream(
+    let (_output, ostats) = recv_stream(
         &mut sock,
         &mut rx_engine,
         &sess.key_words,
         &sess.nonce_words,
     )?;
+    wire_bytes_served.fetch_add(ostats.wire_bytes, Ordering::Relaxed);
     outputs_received.fetch_add(1, Ordering::Relaxed);
     Ok(())
 }
 
 /// One worker job cycle against the server: handshake, announce the
-/// mover-assigned shard, fetch input, validate, send output. Returns
-/// (input stats, wall seconds).
+/// mover-assigned shard (negotiating the server's default chunk),
+/// fetch input, validate, send output. Returns (input stats, wall
+/// seconds).
 pub fn run_job(
     addr: std::net::SocketAddr,
     pool_key: &PoolKey,
@@ -350,33 +411,117 @@ pub fn run_job(
     shard: usize,
     rng: &mut Prng,
 ) -> Result<(StreamStats, f64)> {
-    let (_input, stats, secs) = run_job_fetch(addr, pool_key, spec_input, output, shard, rng)?;
+    let proposal = ChunkProposal::ServerDefault;
+    let (_input, stats, secs) =
+        run_job_fetch(addr, pool_key, spec_input, output, shard, proposal, rng)?;
     Ok((stats, secs))
 }
 
 /// [`run_job`] that also returns the fetched input payload, for callers
-/// that verify content end-to-end (the durable-task layer hashes every
-/// received file with the in-crate SHA-256 before checkpointing it as
-/// done — see [`run_real_task`]).
+/// that verify content end-to-end. Callers that only need the payload's
+/// hash should prefer [`run_job_fetch_digest`], which folds SHA-256
+/// into the receive loop instead of buffering and re-reading the file.
 pub fn run_job_fetch(
     addr: std::net::SocketAddr,
     pool_key: &PoolKey,
     spec_input: &str,
     output: &[u8],
     shard: usize,
+    proposal: ChunkProposal,
     rng: &mut Prng,
 ) -> Result<(Vec<u8>, StreamStats, f64)> {
+    let mut input = Vec::new();
+    let (stats, secs) = run_job_sink(
+        addr,
+        pool_key,
+        spec_input,
+        output,
+        shard,
+        proposal,
+        rng,
+        |chunk| input.extend_from_slice(chunk),
+    )?;
+    Ok((input, stats, secs))
+}
+
+/// [`run_job_fetch`] for the durable-task layer: the fetched file is
+/// hashed with the in-crate SHA-256 *as frames arrive* — each frame's
+/// payload is already integrity-verified before the sink sees it — so
+/// checkpoint verification costs no second pass over the buffered file.
+/// Returns the lowercase hex digest in place of the payload.
+#[allow(clippy::too_many_arguments)]
+pub fn run_job_fetch_digest(
+    addr: std::net::SocketAddr,
+    pool_key: &PoolKey,
+    spec_input: &str,
+    output: &[u8],
+    shard: usize,
+    proposal: ChunkProposal,
+    rng: &mut Prng,
+) -> Result<(String, StreamStats, f64)> {
+    let mut hasher = Sha256::new();
+    let (stats, secs) = run_job_sink(
+        addr,
+        pool_key,
+        spec_input,
+        output,
+        shard,
+        proposal,
+        rng,
+        |chunk| hasher.update(chunk),
+    )?;
+    let mut hex = String::with_capacity(64);
+    for b in hasher.finalize() {
+        hex.push_str(&format!("{b:02x}"));
+    }
+    Ok((hex, stats, secs))
+}
+
+/// The shared client cycle: handshake, shard announcement (with v2
+/// chunk negotiation unless [`ChunkProposal::Legacy`]), streamed input
+/// delivery into `sink`, then the output sandbox send.
+#[allow(clippy::too_many_arguments)]
+fn run_job_sink(
+    addr: std::net::SocketAddr,
+    pool_key: &PoolKey,
+    spec_input: &str,
+    output: &[u8],
+    shard: usize,
+    proposal: ChunkProposal,
+    rng: &mut Prng,
+    mut sink: impl FnMut(&[u8]),
+) -> Result<(StreamStats, f64)> {
     let t0 = std::time::Instant::now();
     let mut sock = TcpStream::connect(addr).context("connect to submit")?;
     sock.set_nodelay(true).ok();
     let sess = client_handshake(&mut sock, pool_key, rng, &[Method::Chacha20, Method::Aes256Ctr])?;
 
-    write_u32(&mut sock, shard as u32)?;
+    match proposal {
+        ChunkProposal::Legacy => write_u32(&mut sock, shard as u32)?,
+        ChunkProposal::ServerDefault | ChunkProposal::Words(_) => {
+            write_u32(&mut sock, NEGOTIATE_FLAG | shard as u32)?;
+            let words = match proposal {
+                ChunkProposal::Words(w) => w as u32,
+                _ => 0,
+            };
+            write_u32(&mut sock, words)?;
+            let _agreed = read_u32(&mut sock)?;
+        }
+    }
     write_u32(&mut sock, spec_input.len() as u32)?;
     sock.write_all(spec_input.as_bytes())?;
 
     let mut engine = NativeEngine::new(sess.method);
-    let (input, stats) = recv_stream(&mut sock, &mut engine, &sess.key_words, &sess.nonce_words)?;
+    let stats = recv_stream_with(
+        &mut sock,
+        &mut engine,
+        &sess.key_words,
+        &sess.nonce_words,
+        |_h, chunk| {
+            sink(chunk);
+            Ok(())
+        },
+    )?;
 
     // "Run" the validation script: the data is already integrity-checked
     // frame by frame; job output is tiny, as in the paper.
@@ -389,7 +534,7 @@ pub fn run_job_fetch(
         output,
         256,
     )?;
-    Ok((input, stats, t0.elapsed().as_secs_f64()))
+    Ok((stats, t0.elapsed().as_secs_f64()))
 }
 
 /// Configuration for a real-mode pool run.
@@ -486,6 +631,11 @@ impl Default for RealPoolConfig {
 pub struct RealPoolReport {
     pub jobs_completed: u32,
     pub total_payload_bytes: u64,
+    /// Wire bytes workers received fetching inputs: payload plus stream
+    /// headers, frame heads and digests. `total_wire_bytes -
+    /// total_payload_bytes` is the framing overhead the goodput gap
+    /// comes from.
+    pub total_wire_bytes: u64,
     pub wall_secs: f64,
     pub gbps: f64,
     pub transfer_secs: OnlineStats,
@@ -506,6 +656,13 @@ pub struct RealPoolReport {
     /// DTN fleet). Under `SourcePlan::DedicatedDtn` these carry the
     /// whole burst while `bytes_served_per_node` stays ~0.
     pub bytes_served_per_dtn: Vec<u64>,
+    /// Wire bytes each submit node's file servers moved (payload plus
+    /// framing, both directions; same indexing and generation rules as
+    /// `bytes_served_per_node`).
+    pub wire_bytes_per_node: Vec<u64>,
+    /// Wire bytes each data node's file servers moved (see
+    /// `wire_bytes_per_node`).
+    pub wire_bytes_per_dtn: Vec<u64>,
     /// Data-source plan label the run executed with.
     pub source_plan: String,
     /// Which-DTN selection-strategy label the run executed with.
@@ -556,6 +713,7 @@ struct GateState {
 fn crash_server(
     servers: &Mutex<Vec<Option<FileServer>>>,
     totals: &[AtomicU64],
+    wire_totals: &[AtomicU64],
     node: usize,
 ) -> u64 {
     match servers.lock().unwrap()[node].take() {
@@ -563,6 +721,8 @@ fn crash_server(
             server.stop();
             let b = server.bytes_served.load(Ordering::Relaxed);
             totals[node].fetch_add(b, Ordering::Relaxed);
+            let w = server.wire_bytes_served.load(Ordering::Relaxed);
+            wire_totals[node].fetch_add(w, Ordering::Relaxed);
             b
         }
         None => 0,
@@ -572,13 +732,19 @@ fn crash_server(
 /// End-of-run shutdown: stop every live server in a fleet (funnel or
 /// DTN) and fold its served bytes into the cross-generation totals —
 /// the same stop-and-accumulate contract as [`crash_server`].
-fn stop_fleet(servers: &Mutex<Vec<Option<FileServer>>>, totals: &[AtomicU64]) {
+fn stop_fleet(
+    servers: &Mutex<Vec<Option<FileServer>>>,
+    totals: &[AtomicU64],
+    wire_totals: &[AtomicU64],
+) {
     let mut servers = servers.lock().unwrap();
     for (node, slot) in servers.iter_mut().enumerate() {
         if let Some(server) = slot.as_mut() {
             server.stop();
             totals[node]
                 .fetch_add(server.bytes_served.load(Ordering::Relaxed), Ordering::Relaxed);
+            let w = server.wire_bytes_served.load(Ordering::Relaxed);
+            wire_totals[node].fetch_add(w, Ordering::Relaxed);
         }
         *slot = None;
     }
@@ -757,7 +923,10 @@ pub fn run_real_pool_router(
     let servers: Arc<Mutex<Vec<Option<FileServer>>>> = Arc::new(Mutex::new(server_vec));
     // Bytes served per node, accumulated across server generations
     // (a killed node's total carries over into its recovered server).
+    // Wire totals ride alongside under the same rules.
     let served_totals: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n_nodes).map(|_| AtomicU64::new(0)).collect());
+    let wire_totals: Arc<Vec<AtomicU64>> =
         Arc::new((0..n_nodes).map(|_| AtomicU64::new(0)).collect());
 
     // The DTN fleet: one ServerRole::Dtn file server per data node, each
@@ -803,6 +972,8 @@ pub fn run_real_pool_router(
     let dtn_servers: Arc<Mutex<Vec<Option<FileServer>>>> = Arc::new(Mutex::new(dtn_server_vec));
     let dtn_served_totals: Arc<Vec<AtomicU64>> =
         Arc::new((0..n_dtns).map(|_| AtomicU64::new(0)).collect());
+    let dtn_wire_totals: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n_dtns).map(|_| AtomicU64::new(0)).collect());
 
     let queue: Arc<Mutex<Vec<JobSpec>>> = Arc::new(Mutex::new(
         crate::workload::benchmark_burst(
@@ -845,9 +1016,11 @@ pub fn run_real_pool_router(
         let servers = servers.clone();
         let addrs = addrs.clone();
         let served_totals = served_totals.clone();
+        let wire_totals = wire_totals.clone();
         let dtn_servers = dtn_servers.clone();
         let dtn_addrs = dtn_addrs.clone();
         let dtn_served_totals = dtn_served_totals.clone();
+        let dtn_wire_totals = dtn_wire_totals.clone();
         let dtn_handles = dtn_handles.clone();
         let chaos_log = chaos_log.clone();
         let burst_done = burst_done.clone();
@@ -942,10 +1115,16 @@ pub fn run_real_pool_router(
                         // killed data node likewise, with its tickets
                         // already re-sourced.
                         if matches!(ev, FaultEvent::KillNode { .. }) {
-                            bytes_before += crash_server(&servers, &served_totals, node);
+                            bytes_before +=
+                                crash_server(&servers, &served_totals, &wire_totals, node);
                         }
                         if matches!(ev, FaultEvent::KillDtn { .. }) {
-                            bytes_before += crash_server(&dtn_servers, &dtn_served_totals, node);
+                            bytes_before += crash_server(
+                                &dtn_servers,
+                                &dtn_served_totals,
+                                &dtn_wire_totals,
+                                node,
+                            );
                         }
                         chaos_log.lock().unwrap().record(
                             node,
@@ -961,7 +1140,8 @@ pub fn run_real_pool_router(
         )
     };
 
-    let stats = Arc::new(Mutex::new((OnlineStats::new(), 0u64, 0u32))); // (times, bytes, errors)
+    // (times, payload bytes, wire bytes, errors)
+    let stats = Arc::new(Mutex::new((OnlineStats::new(), 0u64, 0u64, 0u32)));
     let mut worker_threads = Vec::new();
     for w in 0..cfg.workers {
         let queue = queue.clone();
@@ -1047,7 +1227,7 @@ pub fn run_real_pool_router(
                         cv.notify_all();
                     }
                     log::error!("job {} stranded: every submit node is down", job.id);
-                    stats.lock().unwrap().2 += 1;
+                    stats.lock().unwrap().3 += 1;
                     continue;
                 };
 
@@ -1153,10 +1333,11 @@ pub fn run_real_pool_router(
                         let mut s = stats.lock().unwrap();
                         s.0.push(secs);
                         s.1 += st.payload_bytes;
+                        s.2 += st.wire_bytes;
                     }
                     Err(e) => {
                         log::error!("job {} failed: {e:#}", job.id);
-                        stats.lock().unwrap().2 += 1;
+                        stats.lock().unwrap().3 += 1;
                     }
                 }
             }
@@ -1170,20 +1351,19 @@ pub fn run_real_pool_router(
     if let Some(t) = chaos_thread {
         t.join().map_err(|_| anyhow!("chaos thread panicked"))?;
     }
-    stop_fleet(&servers, &served_totals);
-    stop_fleet(&dtn_servers, &dtn_served_totals);
-    let bytes_served_per_node: Vec<u64> = served_totals
-        .iter()
-        .map(|t| t.load(Ordering::Relaxed))
-        .collect();
-    let bytes_served_per_dtn: Vec<u64> = dtn_served_totals
-        .iter()
-        .map(|t| t.load(Ordering::Relaxed))
-        .collect();
+    stop_fleet(&servers, &served_totals, &wire_totals);
+    stop_fleet(&dtn_servers, &dtn_served_totals, &dtn_wire_totals);
+    let load_all = |v: &[AtomicU64]| -> Vec<u64> {
+        v.iter().map(|t| t.load(Ordering::Relaxed)).collect()
+    };
+    let bytes_served_per_node = load_all(&served_totals);
+    let bytes_served_per_dtn = load_all(&dtn_served_totals);
+    let wire_bytes_per_node = load_all(&wire_totals);
+    let wire_bytes_per_dtn = load_all(&dtn_wire_totals);
 
-    let (times, bytes, errors) = {
+    let (times, bytes, wire, errors) = {
         let s = stats.lock().unwrap();
-        (s.0.clone(), s.1, s.2)
+        (s.0.clone(), s.1, s.2, s.3)
     };
     let router = Arc::try_unwrap(gate)
         .map_err(|_| anyhow!("admission gate still referenced after join"))?
@@ -1198,6 +1378,7 @@ pub fn run_real_pool_router(
     let report = RealPoolReport {
         jobs_completed: cfg.n_jobs - errors,
         total_payload_bytes: bytes,
+        total_wire_bytes: wire,
         wall_secs: wall,
         gbps: bytes as f64 * 8.0 / wall / 1e9,
         transfer_secs: times,
@@ -1210,6 +1391,8 @@ pub fn run_real_pool_router(
         router: router.router_stats(),
         bytes_served_per_node,
         bytes_served_per_dtn,
+        wire_bytes_per_node,
+        wire_bytes_per_dtn,
         chaos,
     };
     Ok((report, router))
@@ -1229,11 +1412,11 @@ pub struct RealTaskConfig {
     /// parallelism is `min(workers, task concurrency)` — the runner's
     /// admission cap is the binding knob; workers are just executors.
     pub workers: u32,
-    /// Server-side send chunking (words), fixed for the whole run: on
-    /// the real fabric the auto-tuner adjusts *concurrency* only,
-    /// because the file servers are started once with this chunk size
-    /// (chunk-size tuning closes the loop in the simulator, where the
-    /// chunk is re-read every window).
+    /// Server-side default send chunking (words). Workers negotiate a
+    /// per-connection chunk at the shard announcement (wire format v2),
+    /// proposing the [`TaskRunner`]'s current `chunk_words` — so the
+    /// auto-tuner's chunk moves apply on the real fabric too, and this
+    /// value only serves v1 peers and invalid proposals.
     pub chunk_words: usize,
     /// Use the PJRT artifact engine for sealing (falls back to native).
     pub use_xla_engine: bool,
@@ -1294,10 +1477,17 @@ pub struct RealTaskReport {
     pub files_transferred: u32,
     /// Payload bytes received and verified by workers this run.
     pub payload_bytes: u64,
+    /// Wire bytes workers received fetching those payloads (payload
+    /// plus stream headers, frame heads and digests).
+    pub wire_bytes: u64,
     pub mover: MoverStats,
     pub router: RouterStats,
     pub bytes_served_per_node: Vec<u64>,
     pub bytes_served_per_dtn: Vec<u64>,
+    /// Per-endpoint wire bytes (payload plus framing, both directions;
+    /// same indexing as the `bytes_served_*` fields).
+    pub wire_bytes_per_node: Vec<u64>,
+    pub wire_bytes_per_dtn: Vec<u64>,
     /// True when `kill_after_files` fired — the run ended as a
     /// simulated coordinator crash, not by draining the task.
     pub killed: bool,
@@ -1307,9 +1497,11 @@ pub struct RealTaskReport {
 /// same durable-task object the simulator runs
 /// (`coordinator::engine::run_task_sim`), here moving real sealed
 /// bytes. Each admitted file is routed through the pool router, fetched
-/// whole with [`run_job_fetch`], hashed with the in-crate SHA-256 and
-/// only then checkpointed done — so a resumed task re-verifies nothing
-/// and re-transfers nothing that already landed.
+/// with [`run_job_fetch_digest`] — which negotiates the tuner's current
+/// chunk size onto the wire and folds the in-crate SHA-256 over each
+/// verified frame as it arrives — and only then checkpointed done, so a
+/// resumed task re-verifies nothing and re-transfers nothing that
+/// already landed.
 ///
 /// Returns the report and the runner (whose journal holds the final
 /// checkpoint) so callers can resume, inspect or re-run it.
@@ -1378,6 +1570,8 @@ pub fn run_real_task(
     let servers: Arc<Mutex<Vec<Option<FileServer>>>> = Arc::new(Mutex::new(server_vec));
     let served_totals: Arc<Vec<AtomicU64>> =
         Arc::new((0..n_nodes).map(|_| AtomicU64::new(0)).collect());
+    let wire_totals: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n_nodes).map(|_| AtomicU64::new(0)).collect());
 
     // DTN fleet, only when the plan can reach it (no fault schedule
     // here — the task layer's chaos hook is the coordinator kill).
@@ -1419,6 +1613,8 @@ pub fn run_real_task(
     let dtn_servers: Arc<Mutex<Vec<Option<FileServer>>>> = Arc::new(Mutex::new(dtn_server_vec));
     let dtn_served_totals: Arc<Vec<AtomicU64>> =
         Arc::new((0..n_dtns).map(|_| AtomicU64::new(0)).collect());
+    let dtn_wire_totals: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n_dtns).map(|_| AtomicU64::new(0)).collect());
 
     let gate = Arc::new((
         Mutex::new(GateState {
@@ -1437,6 +1633,7 @@ pub fn run_real_task(
     let stop = Arc::new(AtomicBool::new(false));
     let done_this_run = Arc::new(AtomicU64::new(0));
     let payload_total = Arc::new(AtomicU64::new(0));
+    let wire_total = Arc::new(AtomicU64::new(0));
     let errors_total = Arc::new(AtomicU64::new(0));
     let t0 = std::time::Instant::now();
 
@@ -1447,6 +1644,7 @@ pub fn run_real_task(
         let stop = stop.clone();
         let done_this_run = done_this_run.clone();
         let payload_total = payload_total.clone();
+        let wire_total = wire_total.clone();
         let errors_total = errors_total.clone();
         let gate = gate.clone();
         let addrs = addrs.clone();
@@ -1544,7 +1742,18 @@ pub fn run_real_task(
                     DataSource::Funnel { node } => addrs.lock().unwrap()[node],
                     DataSource::Dtn { dtn } => dtn_addrs.lock().unwrap()[dtn],
                 };
-                let result = run_job_fetch(addr, &key, &name, &output, routed.shard, &mut rng);
+                // Propose the runner's *current* chunk size: the tuner's
+                // chunk moves reach the wire through v2 negotiation.
+                let chunk = runner.lock().unwrap().chunk_words();
+                let result = run_job_fetch_digest(
+                    addr,
+                    &key,
+                    &name,
+                    &output,
+                    routed.shard,
+                    ChunkProposal::Words(chunk),
+                    &mut rng,
+                );
                 {
                     let mut g = lock.lock().unwrap();
                     g.ready.remove(&ticket);
@@ -1560,13 +1769,15 @@ pub fn run_real_task(
                     break;
                 }
                 match result {
-                    Ok((input, st, _secs)) => {
-                        let digest = sha256_hex(&input);
+                    Ok((digest, st, _secs)) => {
+                        // The digest was folded in frame by frame during
+                        // the receive — no second pass over the payload.
                         let now = t0.elapsed().as_secs_f64();
                         let done = runner.lock().unwrap().file_done(idx, &digest, now);
                         match done {
                             Ok(()) => {
                                 payload_total.fetch_add(st.payload_bytes, Ordering::Relaxed);
+                                wire_total.fetch_add(st.wire_bytes, Ordering::Relaxed);
                                 let n = done_this_run.fetch_add(1, Ordering::Relaxed) + 1;
                                 if kill_after == Some(n as usize) {
                                     stop.store(true, Ordering::Relaxed);
@@ -1592,17 +1803,16 @@ pub fn run_real_task(
         t.join().map_err(|_| anyhow!("task worker thread panicked"))?;
     }
     let wall = t0.elapsed().as_secs_f64();
-    stop_fleet(&servers, &served_totals);
-    stop_fleet(&dtn_servers, &dtn_served_totals);
+    stop_fleet(&servers, &served_totals, &wire_totals);
+    stop_fleet(&dtn_servers, &dtn_served_totals, &dtn_wire_totals);
     drop(dtn_services);
-    let bytes_served_per_node: Vec<u64> = served_totals
-        .iter()
-        .map(|t| t.load(Ordering::Relaxed))
-        .collect();
-    let bytes_served_per_dtn: Vec<u64> = dtn_served_totals
-        .iter()
-        .map(|t| t.load(Ordering::Relaxed))
-        .collect();
+    let load_all = |v: &[AtomicU64]| -> Vec<u64> {
+        v.iter().map(|t| t.load(Ordering::Relaxed)).collect()
+    };
+    let bytes_served_per_node = load_all(&served_totals);
+    let bytes_served_per_dtn = load_all(&dtn_served_totals);
+    let wire_bytes_per_node = load_all(&wire_totals);
+    let wire_bytes_per_dtn = load_all(&dtn_wire_totals);
 
     let router = Arc::try_unwrap(gate)
         .map_err(|_| anyhow!("admission gate still referenced after join"))?
@@ -1621,10 +1831,13 @@ pub fn run_real_task(
         errors: errors_total.load(Ordering::Relaxed) as u32,
         files_transferred: done_this_run.load(Ordering::Relaxed) as u32,
         payload_bytes: payload_total.load(Ordering::Relaxed),
+        wire_bytes: wire_total.load(Ordering::Relaxed),
         mover: router.stats(),
         router: router.router_stats(),
         bytes_served_per_node,
         bytes_served_per_dtn,
+        wire_bytes_per_node,
+        wire_bytes_per_dtn,
         killed: stop.load(Ordering::Relaxed),
     };
     Ok((report, runner))
@@ -1666,6 +1879,17 @@ mod tests {
         assert_eq!(r.errors, 0);
         assert_eq!(r.jobs_completed, 8);
         assert_eq!(r.total_payload_bytes, 8 * (256 << 10) as u64);
+        assert!(
+            r.total_wire_bytes > r.total_payload_bytes,
+            "wire bytes include framing: {} vs {}",
+            r.total_wire_bytes,
+            r.total_payload_bytes
+        );
+        let node_wire: u64 = r.wire_bytes_per_node.iter().sum();
+        assert!(
+            node_wire >= r.total_wire_bytes,
+            "server wire ({node_wire}) covers at least the input streams"
+        );
         assert!(r.gbps > 0.0);
         assert_eq!(r.transfer_secs.count(), 8);
         assert_eq!(r.mover.total_admitted, 8);
@@ -1913,6 +2137,44 @@ mod tests {
         server.stop();
     }
 
+    #[test]
+    fn chunk_negotiation_serves_v1_and_v2_clients() {
+        // One server configured at 1024 words (4 KiB frames) serving a
+        // 256 KiB file: the negotiated chunk is observable as the frame
+        // count of the client's received stream.
+        let key = PoolKey::from_passphrase("nego");
+        let files: HashMap<String, Arc<Vec<u8>>> =
+            [("f".to_string(), Arc::new(vec![7u8; 256 << 10]))].into();
+        let svc = EngineService::spawn(|| {
+            Ok(Box::new(NativeEngine::new(Method::Chacha20)) as Box<dyn SealEngine>)
+        });
+        let mut server = FileServer::start(files, key.clone(), vec![svc.handle()], 1024).unwrap();
+        let mut rng = Prng::new(7);
+        let cases = [
+            // v1 client: no negotiation, configured chunk.
+            (ChunkProposal::Legacy, 1024usize),
+            // v2 client deferring to the server: configured chunk.
+            (ChunkProposal::ServerDefault, 1024),
+            // v2 client proposing its own chunk: honored.
+            (ChunkProposal::Words(256), 256),
+            (ChunkProposal::Words(4096), 4096),
+            // Invalid proposal (not a multiple of 16): server default.
+            (ChunkProposal::Words(100), 1024),
+        ];
+        for (proposal, chunk) in cases {
+            let (input, st, _) =
+                run_job_fetch(server.addr, &key, "f", &[0u8; 16], 0, proposal, &mut rng).unwrap();
+            assert_eq!(input.len(), 256 << 10, "{proposal:?}");
+            let frames = ((256 << 10) / (chunk * 4)) as u64;
+            assert_eq!(st.frames, frames, "{proposal:?} → {chunk} words");
+            // Exact wire accounting: header + per-frame head and digest.
+            let wire = 20 + frames * (8 + chunk as u64 * 4 + 16);
+            assert_eq!(st.wire_bytes, wire, "{proposal:?}");
+        }
+        assert!(server.wire_bytes_served.load(Ordering::Relaxed) > 0);
+        server.stop();
+    }
+
     use crate::mover::task::{synth_file_sha256, TaskJournal, TransferTask};
 
     const TASK_FILE_BYTES: u64 = 256 << 10;
@@ -1941,7 +2203,14 @@ mod tests {
         assert_eq!(r.progress.files_done, 6);
         assert_eq!(r.files_transferred, 6);
         assert_eq!(r.payload_bytes, 6 * TASK_FILE_BYTES);
+        assert!(
+            r.wire_bytes > r.payload_bytes,
+            "wire bytes include framing: {} vs {}",
+            r.wire_bytes,
+            r.payload_bytes
+        );
         assert_eq!(r.bytes_served_per_node.iter().sum::<u64>(), 6 * TASK_FILE_BYTES);
+        assert!(r.wire_bytes_per_node.iter().sum::<u64>() >= r.wire_bytes);
         for i in 0..6 {
             let f = runner.file(i);
             assert_eq!(

@@ -803,6 +803,10 @@ impl TaskRunner {
         self.concurrency
     }
 
+    /// Live transfer chunk size (words). Real-fabric task workers
+    /// propose this through wire-format-v2 chunk negotiation
+    /// ([`crate::fabric::ChunkProposal::Words`]), so the tuner's chunk
+    /// moves reach the socket instead of staying simulator-only.
     pub fn chunk_words(&self) -> usize {
         self.chunk_words
     }

@@ -34,6 +34,40 @@ pub trait SealEngine {
         data: &mut [u32],
     ) -> Result<[u32; 4]>;
 
+    /// Byte-slice variant of [`SealEngine::process`] for the zero-copy
+    /// wire path: `data.len()` must be a multiple of 64 (whole blocks,
+    /// little-endian words). The default implementation round-trips
+    /// through words so every engine stays correct; engines with a
+    /// native byte path ([`NativeEngine`], the service handle) override
+    /// it to skip the copies. See docs/ARCHITECTURE.md §Data-path
+    /// performance.
+    fn process_bytes(
+        &mut self,
+        kind: Kind,
+        key: &[u32; 8],
+        nonce: &[u32; 3],
+        counter0: u32,
+        data: &mut [u8],
+    ) -> Result<[u32; 4]> {
+        if data.len() % 64 != 0 {
+            bail!("chunk must be whole 64-byte blocks, got {} bytes", data.len());
+        }
+        let mut words = chacha::bytes_to_words(data);
+        let digest = self.process(kind, key, nonce, counter0, &mut words)?;
+        for (b, w) in data.chunks_exact_mut(4).zip(words.iter()) {
+            b.copy_from_slice(&w.to_le_bytes());
+        }
+        Ok(digest)
+    }
+
+    /// A second, independent engine for the same configuration, used by
+    /// the pipelined stream sealer to run frames in parallel. Engines
+    /// that hold exclusive resources (the PJRT runtime) return `None`
+    /// and the stream layer falls back to serial sealing.
+    fn fork(&self) -> Option<Box<dyn SealEngine + Send>> {
+        None
+    }
+
     /// Human-readable engine description for logs/reports.
     fn describe(&self) -> String;
 }
@@ -73,6 +107,37 @@ impl SealEngine for NativeEngine {
                 chacha::digest_finalize(&lane, data.len() as u32, nonce)
             }
         })
+    }
+
+    fn process_bytes(
+        &mut self,
+        kind: Kind,
+        key: &[u32; 8],
+        nonce: &[u32; 3],
+        counter0: u32,
+        data: &mut [u8],
+    ) -> Result<[u32; 4]> {
+        if data.len() % 64 != 0 {
+            bail!("chunk must be whole 64-byte blocks, got {} bytes", data.len());
+        }
+        Ok(match (self.method, kind) {
+            (Method::Chacha20, Kind::Seal) => chacha::seal_chunk_bytes(key, nonce, counter0, data),
+            (Method::Chacha20, Kind::Unseal) => {
+                chacha::unseal_chunk_bytes(key, nonce, counter0, data)
+            }
+            (Method::Aes256Ctr, Kind::Seal) => aesctr::seal_chunk_bytes(key, nonce, counter0, data),
+            (Method::Aes256Ctr, Kind::Unseal) => {
+                aesctr::unseal_chunk_bytes(key, nonce, counter0, data)
+            }
+            (Method::Plain, _) => {
+                let lane = chacha::poly16_digest_bytes(data, counter0);
+                chacha::digest_finalize(&lane, (data.len() / 4) as u32, nonce)
+            }
+        })
+    }
+
+    fn fork(&self) -> Option<Box<dyn SealEngine + Send>> {
+        Some(Box::new(self.clone()))
     }
 
     fn describe(&self) -> String {
@@ -277,6 +342,52 @@ mod tests {
         let d = e.process(Kind::Seal, &key, &nonce, 0, &mut data).unwrap();
         assert_eq!(data, orig, "plain method does not encrypt");
         assert_ne!(d, [0u32; 4]);
+    }
+
+    #[test]
+    fn process_bytes_matches_process() {
+        for method in [Method::Chacha20, Method::Aes256Ctr, Method::Plain] {
+            let mut e = NativeEngine::new(method);
+            let key = [3u32; 8];
+            let nonce = [4, 5, 6];
+            let bytes: Vec<u8> = (0..192).map(|i| i as u8).collect();
+            let mut words = chacha::bytes_to_words(&bytes);
+            let mut b = bytes.clone();
+            let dw = e.process(Kind::Seal, &key, &nonce, 2, &mut words).unwrap();
+            let db = e.process_bytes(Kind::Seal, &key, &nonce, 2, &mut b).unwrap();
+            assert_eq!(dw, db, "digest parity for {method:?}");
+            assert_eq!(chacha::words_to_bytes(&words), b, "ciphertext parity");
+        }
+    }
+
+    #[test]
+    fn default_process_bytes_roundtrips_through_words() {
+        // An engine relying on the trait-default byte path must agree
+        // with the native override bit for bit.
+        struct WordOnly(NativeEngine);
+        impl SealEngine for WordOnly {
+            fn process(
+                &mut self,
+                kind: Kind,
+                key: &[u32; 8],
+                nonce: &[u32; 3],
+                counter0: u32,
+                data: &mut [u32],
+            ) -> Result<[u32; 4]> {
+                self.0.process(kind, key, nonce, counter0, data)
+            }
+            fn describe(&self) -> String {
+                "word-only".into()
+            }
+        }
+        let mut w = WordOnly(NativeEngine::new(Method::Chacha20));
+        let mut n = NativeEngine::new(Method::Chacha20);
+        let mut a: Vec<u8> = (0..128).map(|i| (i * 3) as u8).collect();
+        let mut b = a.clone();
+        let da = w.process_bytes(Kind::Seal, &[1; 8], &[2; 3], 0, &mut a).unwrap();
+        let db = n.process_bytes(Kind::Seal, &[1; 8], &[2; 3], 0, &mut b).unwrap();
+        assert_eq!(da, db);
+        assert_eq!(a, b);
     }
 
     #[test]

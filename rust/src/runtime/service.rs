@@ -20,6 +20,14 @@ enum Req {
         data: Vec<u32>,
         reply: mpsc::Sender<Result<(Vec<u32>, [u32; 4])>>,
     },
+    ProcessBytes {
+        kind: Kind,
+        key: [u32; 8],
+        nonce: [u32; 3],
+        counter0: u32,
+        data: Vec<u8>,
+        reply: mpsc::Sender<Result<(Vec<u8>, [u32; 4])>>,
+    },
     Describe {
         reply: mpsc::Sender<String>,
     },
@@ -57,6 +65,9 @@ impl EngineService {
                                 Req::Process { reply, .. } => {
                                     let _ = reply.send(Err(anyhow!("engine init failed: {e}")));
                                 }
+                                Req::ProcessBytes { reply, .. } => {
+                                    let _ = reply.send(Err(anyhow!("engine init failed: {e}")));
+                                }
                                 Req::Describe { reply } => {
                                     let _ = reply.send(format!("failed: {e}"));
                                 }
@@ -77,6 +88,19 @@ impl EngineService {
                         } => {
                             let r = engine
                                 .process(kind, &key, &nonce, counter0, &mut data)
+                                .map(|digest| (data, digest));
+                            let _ = reply.send(r);
+                        }
+                        Req::ProcessBytes {
+                            kind,
+                            key,
+                            nonce,
+                            counter0,
+                            mut data,
+                            reply,
+                        } => {
+                            let r = engine
+                                .process_bytes(kind, &key, &nonce, counter0, &mut data)
                                 .map(|digest| (data, digest));
                             let _ = reply.send(r);
                         }
@@ -144,6 +168,39 @@ impl SealEngine for EngineHandle {
         Ok(digest)
     }
 
+    fn process_bytes(
+        &mut self,
+        kind: Kind,
+        key: &[u32; 8],
+        nonce: &[u32; 3],
+        counter0: u32,
+        data: &mut [u8],
+    ) -> Result<[u32; 4]> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Req::ProcessBytes {
+                kind,
+                key: *key,
+                nonce: *nonce,
+                counter0,
+                data: data.to_vec(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("crypto service gone"))?;
+        let (out, digest) = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("crypto service dropped reply"))??;
+        data.copy_from_slice(&out);
+        Ok(digest)
+    }
+
+    /// Handles fork freely: clones serialize through the same service
+    /// thread, so a sealer pool over one service overlaps sealing with
+    /// socket writes without extra crypto parallelism.
+    fn fork(&self) -> Option<Box<dyn SealEngine + Send>> {
+        Some(Box::new(self.clone()))
+    }
+
     fn describe(&self) -> String {
         let (reply_tx, reply_rx) = mpsc::channel();
         if self.tx.send(Req::Describe { reply: reply_tx }).is_err() {
@@ -201,6 +258,25 @@ mod tests {
         for t in handles {
             t.join().unwrap();
         }
+    }
+
+    #[test]
+    fn service_byte_path_matches_direct_engine() {
+        let svc = EngineService::spawn(|| {
+            Ok(Box::new(NativeEngine::new(Method::Chacha20)) as Box<dyn SealEngine>)
+        });
+        let mut h = svc.handle();
+        let key = [1u32; 8];
+        let nonce = [2, 3, 4];
+        let mut data: Vec<u8> = (0..256).map(|i| i as u8).collect();
+        let mut expect = data.clone();
+        let d_expect = chacha::seal_chunk_bytes(&key, &nonce, 9, &mut expect);
+        let d = h.process_bytes(Kind::Seal, &key, &nonce, 9, &mut data).unwrap();
+        assert_eq!(data, expect);
+        assert_eq!(d, d_expect);
+        let mut f = h.fork().expect("handles fork");
+        let d2 = f.process_bytes(Kind::Unseal, &key, &nonce, 9, &mut data).unwrap();
+        assert_eq!(d2, d_expect, "forked handle serves the same engine");
     }
 
     #[test]

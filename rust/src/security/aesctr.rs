@@ -8,7 +8,7 @@
 //! (counter, nonce) addressing so the same (chunk counter0) framing works.
 
 use super::aes_core::Aes256;
-use super::chacha::{digest_finalize, poly16_digest};
+use super::chacha::{digest_finalize, poly16_digest, poly16_digest_bytes};
 
 /// AES-256-CTR keystream XOR over whole 64-byte "rows" (4 AES blocks per
 /// row, so row counters advance by 4 AES blocks).
@@ -57,6 +57,26 @@ impl AesCtr {
             }
         }
     }
+
+    /// Byte-slice twin of [`AesCtr::xor_stream`]: `data.len()` must be
+    /// a multiple of 64 (whole rows, little-endian words). The AES
+    /// block cipher dominates this path, so it stays scalar; the shared
+    /// poly16 digest is the vectorized one from the ChaCha module.
+    pub fn xor_stream_bytes(&self, row0: u32, data: &mut [u8]) {
+        assert!(data.len() % 64 == 0, "data must be whole 64-byte rows");
+        for (row, chunk) in data.chunks_exact_mut(64).enumerate() {
+            let base = (row0 as u64 + row as u64) * 4;
+            for b in 0..4 {
+                let ks = self.keystream_words(base + b as u64);
+                for (j, k) in ks.iter().enumerate() {
+                    let o = b * 16 + j * 4;
+                    let w =
+                        u32::from_le_bytes([chunk[o], chunk[o + 1], chunk[o + 2], chunk[o + 3]]);
+                    chunk[o..o + 4].copy_from_slice(&(w ^ k).to_le_bytes());
+                }
+            }
+        }
+    }
 }
 
 /// Seal with AES-256-CTR + poly16 (encrypt-then-digest).
@@ -73,6 +93,33 @@ pub fn unseal_chunk(key: &[u32; 8], nonce: &[u32; 3], counter0: u32, data: &mut 
     let digest = digest_finalize(&lane, data.len() as u32, nonce);
     let ctr = AesCtr::new(key, nonce);
     ctr.xor_stream(counter0, data);
+    digest
+}
+
+/// Byte-slice twin of [`seal_chunk`] (`data.len()` multiple of 64).
+pub fn seal_chunk_bytes(
+    key: &[u32; 8],
+    nonce: &[u32; 3],
+    counter0: u32,
+    data: &mut [u8],
+) -> [u32; 4] {
+    let ctr = AesCtr::new(key, nonce);
+    ctr.xor_stream_bytes(counter0, data);
+    let lane = poly16_digest_bytes(data, counter0);
+    digest_finalize(&lane, (data.len() / 4) as u32, nonce)
+}
+
+/// Byte-slice twin of [`unseal_chunk`] (`data.len()` multiple of 64).
+pub fn unseal_chunk_bytes(
+    key: &[u32; 8],
+    nonce: &[u32; 3],
+    counter0: u32,
+    data: &mut [u8],
+) -> [u32; 4] {
+    let lane = poly16_digest_bytes(data, counter0);
+    let digest = digest_finalize(&lane, (data.len() / 4) as u32, nonce);
+    let ctr = AesCtr::new(key, nonce);
+    ctr.xor_stream_bytes(counter0, data);
     digest
 }
 
@@ -118,6 +165,24 @@ mod tests {
         c.xor_stream(12, &mut tail);
         assert_eq!(&whole[..32], &head[..]);
         assert_eq!(&whole[32..], &tail[..]);
+    }
+
+    #[test]
+    fn byte_path_matches_word_path() {
+        let key = [5u32, 4, 3, 2, 1, 0, 255, 128];
+        let nonce = [21, 42, 84];
+        for blocks in [0usize, 1, 3, 9] {
+            let bytes: Vec<u8> = (0..blocks * 64).map(|i| (i * 7 % 256) as u8).collect();
+            let mut words = super::super::chacha::bytes_to_words(&bytes);
+            let mut b = bytes.clone();
+            let dw = seal_chunk(&key, &nonce, 3, &mut words);
+            let db = seal_chunk_bytes(&key, &nonce, 3, &mut b);
+            assert_eq!(dw, db, "digest parity at {blocks} blocks");
+            assert_eq!(super::super::chacha::words_to_bytes(&words), b);
+            let du = unseal_chunk_bytes(&key, &nonce, 3, &mut b);
+            assert_eq!(du, dw);
+            assert_eq!(b, bytes);
+        }
     }
 
     #[test]

@@ -69,10 +69,11 @@ pub fn keystream_block(key: &[u32; 8], nonce: &[u32; 3], counter: u32) -> [u32; 
 /// XOR `data` (length must be a multiple of 16 words) with the keystream
 /// starting at block counter `counter0`. Encrypt == decrypt.
 pub fn xor_stream(key: &[u32; 8], nonce: &[u32; 3], counter0: u32, data: &mut [u32]) {
-    // NOTE(perf): a 4-way transposed-state variant was tried and measured
-    // *slower* than this scalar form on this CPU (1.9 vs 3.5 Gbps — the
-    // [[u32;4];16] layout defeats auto-vectorization); reverted. See
-    // EXPERIMENTS.md §Perf iteration log.
+    // NOTE(perf): this scalar form is the frozen reference. A 4-way
+    // transposed-state [[u32;4];16] variant measured *slower* (1.9 vs
+    // 3.5 Gbps — the layout defeats auto-vectorization) and was
+    // reverted; the wire path instead uses the AVX2 byte-slice twin
+    // below (see docs/ARCHITECTURE.md §Data-path performance).
     assert!(data.len() % 16 == 0, "data must be whole 64-byte blocks");
     for (i, block) in data.chunks_mut(16).enumerate() {
         let ks = keystream_block(key, nonce, counter0.wrapping_add(i as u32));
@@ -142,6 +143,308 @@ pub fn unseal_chunk(key: &[u32; 8], nonce: &[u32; 3], counter0: u32, data: &mut 
     let digest = digest_finalize(&lane, data.len() as u32, nonce);
     xor_stream(key, nonce, counter0, data);
     digest
+}
+
+// ---- byte-slice data path (zero-copy wire format) --------------------------
+//
+// The wire path keeps payloads as bytes end to end; these are the
+// byte-slice twins of `xor_stream` / `poly16_digest` / `seal_chunk` /
+// `unseal_chunk`, bit-identical to the word path (data is little-endian
+// u32 words on the wire). On x86-64 with AVX2 they run an 8-block
+// vertical keystream and a row-parallel digest, runtime-detected with
+// the scalar form as fallback and as the cross-checked reference
+// (`byte_path_matches_word_path` below). The scalar word path above
+// stays untouched so sim, XLA-verify, and the frozen bench baselines
+// keep their meaning. See docs/ARCHITECTURE.md §Data-path performance.
+
+/// XOR one 64-byte block of `chunk` (bytes, little-endian words).
+fn xor_block_bytes(key: &[u32; 8], nonce: &[u32; 3], counter: u32, chunk: &mut [u8]) {
+    let ks = keystream_block(key, nonce, counter);
+    for (j, k) in ks.iter().enumerate() {
+        let o = j * 4;
+        let w = u32::from_le_bytes([chunk[o], chunk[o + 1], chunk[o + 2], chunk[o + 3]]) ^ k;
+        chunk[o..o + 4].copy_from_slice(&w.to_le_bytes());
+    }
+}
+
+/// Byte-slice twin of [`xor_stream`]: `data.len()` must be a multiple
+/// of 64 (whole ChaCha blocks). Encrypt == decrypt.
+pub fn xor_stream_bytes(key: &[u32; 8], nonce: &[u32; 3], counter0: u32, data: &mut [u8]) {
+    assert!(data.len() % 64 == 0, "data must be whole 64-byte blocks");
+    let done = xor_stream_bytes_accel(key, nonce, counter0, data);
+    let ctr = counter0.wrapping_add((done / 64) as u32);
+    for (i, block) in data[done..].chunks_exact_mut(64).enumerate() {
+        xor_block_bytes(key, nonce, ctr.wrapping_add(i as u32), block);
+    }
+}
+
+/// Byte-slice twin of [`poly16_digest`] (little-endian words).
+pub fn poly16_digest_bytes(data: &[u8], row0: u32) -> [u32; 16] {
+    assert!(data.len() % 64 == 0, "data must be whole 64-byte blocks");
+    if let Some(acc) = poly16_digest_bytes_accel(data, row0) {
+        return acc;
+    }
+    let mut acc = [0u32; 16];
+    for (i, block) in data.chunks_exact(64).enumerate() {
+        let r = row0.wrapping_add(i as u32);
+        let row_tweak = r.wrapping_add(1).wrapping_mul(PHI32);
+        for (j, acc_j) in acc.iter_mut().enumerate() {
+            let o = j * 4;
+            let w = u32::from_le_bytes([block[o], block[o + 1], block[o + 2], block[o + 3]]);
+            let tweak = row_tweak.wrapping_add((j as u32).wrapping_mul(LANE_C));
+            *acc_j ^= mix32(w.wrapping_add(tweak));
+        }
+    }
+    acc
+}
+
+/// Byte-slice twin of [`seal_chunk`]: encrypt in place, digest the
+/// ciphertext. `data.len()` must be a multiple of 64.
+pub fn seal_chunk_bytes(
+    key: &[u32; 8],
+    nonce: &[u32; 3],
+    counter0: u32,
+    data: &mut [u8],
+) -> [u32; 4] {
+    xor_stream_bytes(key, nonce, counter0, data);
+    let lane = poly16_digest_bytes(data, counter0);
+    digest_finalize(&lane, (data.len() / 4) as u32, nonce)
+}
+
+/// Byte-slice twin of [`unseal_chunk`]: digest the (input) ciphertext,
+/// then decrypt in place. `data.len()` must be a multiple of 64.
+pub fn unseal_chunk_bytes(
+    key: &[u32; 8],
+    nonce: &[u32; 3],
+    counter0: u32,
+    data: &mut [u8],
+) -> [u32; 4] {
+    let lane = poly16_digest_bytes(data, counter0);
+    let digest = digest_finalize(&lane, (data.len() / 4) as u32, nonce);
+    xor_stream_bytes(key, nonce, counter0, data);
+    digest
+}
+
+#[cfg(target_arch = "x86_64")]
+fn xor_stream_bytes_accel(
+    key: &[u32; 8],
+    nonce: &[u32; 3],
+    counter0: u32,
+    data: &mut [u8],
+) -> usize {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: AVX2 presence checked at runtime just above.
+        unsafe { avx2::xor_stream(key, nonce, counter0, data) }
+    } else {
+        0
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn xor_stream_bytes_accel(
+    _key: &[u32; 8],
+    _nonce: &[u32; 3],
+    _counter0: u32,
+    _data: &mut [u8],
+) -> usize {
+    0
+}
+
+#[cfg(target_arch = "x86_64")]
+fn poly16_digest_bytes_accel(data: &[u8], row0: u32) -> Option<[u32; 16]> {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: AVX2 presence checked at runtime just above.
+        Some(unsafe { avx2::poly16_digest(data, row0) })
+    } else {
+        None
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn poly16_digest_bytes_accel(_data: &[u8], _row0: u32) -> Option<[u32; 16]> {
+    None
+}
+
+/// AVX2 lanes of the byte-slice data path: an 8-block vertical ChaCha20
+/// keystream and a row-parallel poly16 digest, bit-identical to the
+/// scalar path (asserted by the RFC vectors plus the scalar-parity
+/// tests below). Callers must check `is_x86_feature_detected!("avx2")`.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{CONSTANTS, LANE_C, MIX_M1, MIX_M2, PHI32};
+    use std::arch::x86_64::*;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn rotl16(x: __m256i) -> __m256i {
+        _mm256_or_si256(_mm256_slli_epi32::<16>(x), _mm256_srli_epi32::<16>(x))
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn rotl12(x: __m256i) -> __m256i {
+        _mm256_or_si256(_mm256_slli_epi32::<12>(x), _mm256_srli_epi32::<20>(x))
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn rotl8(x: __m256i) -> __m256i {
+        _mm256_or_si256(_mm256_slli_epi32::<8>(x), _mm256_srli_epi32::<24>(x))
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn rotl7(x: __m256i) -> __m256i {
+        _mm256_or_si256(_mm256_slli_epi32::<7>(x), _mm256_srli_epi32::<25>(x))
+    }
+
+    /// One quarter-round across all 8 block lanes at once.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn vqr(v: &mut [__m256i; 16], a: usize, b: usize, c: usize, d: usize) {
+        v[a] = _mm256_add_epi32(v[a], v[b]);
+        v[d] = rotl16(_mm256_xor_si256(v[d], v[a]));
+        v[c] = _mm256_add_epi32(v[c], v[d]);
+        v[b] = rotl12(_mm256_xor_si256(v[b], v[c]));
+        v[a] = _mm256_add_epi32(v[a], v[b]);
+        v[d] = rotl8(_mm256_xor_si256(v[d], v[a]));
+        v[c] = _mm256_add_epi32(v[c], v[d]);
+        v[b] = rotl7(_mm256_xor_si256(v[b], v[c]));
+    }
+
+    /// Transpose 8 vectors of 8 u32 lanes: `out[b]` lane `j` == `v[j]`
+    /// lane `b` (vertical state words -> contiguous keystream blocks).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn transpose8(v: &[__m256i; 8]) -> [__m256i; 8] {
+        let t0 = _mm256_unpacklo_epi32(v[0], v[1]);
+        let t1 = _mm256_unpackhi_epi32(v[0], v[1]);
+        let t2 = _mm256_unpacklo_epi32(v[2], v[3]);
+        let t3 = _mm256_unpackhi_epi32(v[2], v[3]);
+        let t4 = _mm256_unpacklo_epi32(v[4], v[5]);
+        let t5 = _mm256_unpackhi_epi32(v[4], v[5]);
+        let t6 = _mm256_unpacklo_epi32(v[6], v[7]);
+        let t7 = _mm256_unpackhi_epi32(v[6], v[7]);
+        let u0 = _mm256_unpacklo_epi64(t0, t2);
+        let u1 = _mm256_unpackhi_epi64(t0, t2);
+        let u2 = _mm256_unpacklo_epi64(t1, t3);
+        let u3 = _mm256_unpackhi_epi64(t1, t3);
+        let u4 = _mm256_unpacklo_epi64(t4, t6);
+        let u5 = _mm256_unpackhi_epi64(t4, t6);
+        let u6 = _mm256_unpacklo_epi64(t5, t7);
+        let u7 = _mm256_unpackhi_epi64(t5, t7);
+        [
+            _mm256_permute2x128_si256::<0x20>(u0, u4),
+            _mm256_permute2x128_si256::<0x20>(u1, u5),
+            _mm256_permute2x128_si256::<0x20>(u2, u6),
+            _mm256_permute2x128_si256::<0x20>(u3, u7),
+            _mm256_permute2x128_si256::<0x31>(u0, u4),
+            _mm256_permute2x128_si256::<0x31>(u1, u5),
+            _mm256_permute2x128_si256::<0x31>(u2, u6),
+            _mm256_permute2x128_si256::<0x31>(u3, u7),
+        ]
+    }
+
+    /// XOR the keystream into whole 8-block (512-byte) groups of `data`;
+    /// returns the number of bytes processed (the < 8-block tail is the
+    /// caller's).
+    ///
+    /// # Safety
+    /// AVX2 must be available (runtime-detected by the caller).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_stream(
+        key: &[u32; 8],
+        nonce: &[u32; 3],
+        counter0: u32,
+        data: &mut [u8],
+    ) -> usize {
+        let groups = data.len() / 512;
+        let lane_idx = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+        let mut base = [0u32; 16];
+        base[..4].copy_from_slice(&CONSTANTS);
+        base[4..12].copy_from_slice(key);
+        base[13..16].copy_from_slice(nonce);
+        for g in 0..groups {
+            let ctr = counter0.wrapping_add((g * 8) as u32);
+            let mut init = [_mm256_setzero_si256(); 16];
+            for (iv, b) in init.iter_mut().zip(base.iter()) {
+                *iv = _mm256_set1_epi32(*b as i32);
+            }
+            init[12] = _mm256_add_epi32(_mm256_set1_epi32(ctr as i32), lane_idx);
+            let mut v = init;
+            for _ in 0..10 {
+                vqr(&mut v, 0, 4, 8, 12);
+                vqr(&mut v, 1, 5, 9, 13);
+                vqr(&mut v, 2, 6, 10, 14);
+                vqr(&mut v, 3, 7, 11, 15);
+                vqr(&mut v, 0, 5, 10, 15);
+                vqr(&mut v, 1, 6, 11, 12);
+                vqr(&mut v, 2, 7, 8, 13);
+                vqr(&mut v, 3, 4, 9, 14);
+            }
+            for (x, iv) in v.iter_mut().zip(init.iter()) {
+                *x = _mm256_add_epi32(*x, *iv);
+            }
+            let lo: [__m256i; 8] = v[..8].try_into().unwrap();
+            let hi: [__m256i; 8] = v[8..].try_into().unwrap();
+            let lo = transpose8(&lo); // lo[b] = words 0..8 of block b
+            let hi = transpose8(&hi); // hi[b] = words 8..16 of block b
+            let group = data.as_mut_ptr().add(g * 512);
+            for b in 0..8 {
+                let p = group.add(b * 64);
+                let d0 = _mm256_loadu_si256(p as *const __m256i);
+                let d1 = _mm256_loadu_si256(p.add(32) as *const __m256i);
+                _mm256_storeu_si256(p as *mut __m256i, _mm256_xor_si256(d0, lo[b]));
+                _mm256_storeu_si256(p.add(32) as *mut __m256i, _mm256_xor_si256(d1, hi[b]));
+            }
+        }
+        groups * 512
+    }
+
+    /// `mix32` across 8 lanes at once.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mix32v(x: __m256i, m1: __m256i, m2: __m256i) -> __m256i {
+        let mut x = _mm256_xor_si256(x, _mm256_srli_epi32::<16>(x));
+        x = _mm256_mullo_epi32(x, m1);
+        x = _mm256_xor_si256(x, _mm256_srli_epi32::<15>(x));
+        x = _mm256_mullo_epi32(x, m2);
+        _mm256_xor_si256(x, _mm256_srli_epi32::<16>(x))
+    }
+
+    /// Row-parallel poly16 over all of `data` (whole 64-byte rows): the
+    /// 16 digest lanes live in two ymm accumulators, one row per
+    /// iteration.
+    ///
+    /// # Safety
+    /// AVX2 must be available (runtime-detected by the caller).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn poly16_digest(data: &[u8], row0: u32) -> [u32; 16] {
+        let m1 = _mm256_set1_epi32(MIX_M1 as i32);
+        let m2 = _mm256_set1_epi32(MIX_M2 as i32);
+        let mut lane = [0u32; 16];
+        for (j, l) in lane.iter_mut().enumerate() {
+            *l = (j as u32).wrapping_mul(LANE_C);
+        }
+        let l0 = _mm256_loadu_si256(lane.as_ptr() as *const __m256i);
+        let l1 = _mm256_loadu_si256(lane.as_ptr().add(8) as *const __m256i);
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        for (i, row) in data.chunks_exact(64).enumerate() {
+            let r = row0.wrapping_add(i as u32);
+            let rt = _mm256_set1_epi32(r.wrapping_add(1).wrapping_mul(PHI32) as i32);
+            let b0 = _mm256_loadu_si256(row.as_ptr() as *const __m256i);
+            let b1 = _mm256_loadu_si256(row.as_ptr().add(32) as *const __m256i);
+            let t0 = _mm256_add_epi32(b0, _mm256_add_epi32(rt, l0));
+            let t1 = _mm256_add_epi32(b1, _mm256_add_epi32(rt, l1));
+            acc0 = _mm256_xor_si256(acc0, mix32v(t0, m1, m2));
+            acc1 = _mm256_xor_si256(acc1, mix32v(t1, m1, m2));
+        }
+        let mut out = [0u32; 16];
+        _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, acc0);
+        _mm256_storeu_si256(out.as_mut_ptr().add(8) as *mut __m256i, acc1);
+        out
+    }
 }
 
 // ---- byte-level helpers ----------------------------------------------------
@@ -289,6 +592,45 @@ mod tests {
         xor_stream(&key, &nonce, 102, &mut tail);
         assert_eq!(&whole[..32], &head[..]);
         assert_eq!(&whole[32..], &tail[..]);
+    }
+
+    #[test]
+    fn byte_path_matches_word_path() {
+        // 0..=20 blocks spans empty input, the scalar byte tail, and
+        // (on AVX2 hardware) several 8-block SIMD groups plus their
+        // remainders; the counter start crosses the u32 wrap boundary.
+        let key = rfc_key();
+        let nonce = [7, 11, 13];
+        for blocks in 0..=20usize {
+            let bytes: Vec<u8> = (0..blocks * 64)
+                .map(|i| (i as u32).wrapping_mul(2654435761) as u8)
+                .collect();
+            let mut words = bytes_to_words(&bytes);
+            let mut b = bytes.clone();
+            let ctr = 0xFFFF_FFF0u32;
+            let dw = seal_chunk(&key, &nonce, ctr, &mut words);
+            let db = seal_chunk_bytes(&key, &nonce, ctr, &mut b);
+            assert_eq!(dw, db, "digest parity at {blocks} blocks");
+            assert_eq!(words_to_bytes(&words), b, "ciphertext parity at {blocks} blocks");
+            let du = unseal_chunk_bytes(&key, &nonce, ctr, &mut b);
+            assert_eq!(du, dw, "unseal digest is over the same ciphertext");
+            assert_eq!(b, bytes, "byte-path roundtrip restores plaintext");
+        }
+    }
+
+    #[test]
+    fn rfc7539_encryption_vector_byte_path() {
+        let plaintext: &[u8] = b"Ladies and Gentlemen of the class of '99: If I could offer you only one tip for the future, sunscreen would be it.";
+        let nonce = [0x0000_0000, 0x4a00_0000, 0x0000_0000];
+        let mut buf = plaintext.to_vec();
+        buf.resize(plaintext.len().div_ceil(64) * 64, 0);
+        xor_stream_bytes(&rfc_key(), &nonce, 1, &mut buf);
+        let expected_prefix = [
+            0x6e, 0x2e, 0x35, 0x9a, 0x25, 0x68, 0xf9, 0x80, 0x41, 0xba, 0x07, 0x28, 0xdd, 0x0d,
+            0x69, 0x81,
+        ];
+        assert_eq!(&buf[..16], &expected_prefix);
+        assert_eq!(&buf[plaintext.len() - 2..plaintext.len()], &[0x87, 0x4d]);
     }
 
     #[test]

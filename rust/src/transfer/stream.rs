@@ -7,43 +7,54 @@
 //! frame:   u32 counter0 | u32 n_words | n_words×u32 ciphertext | 4×u32 digest
 //! ```
 //!
-//! All integers little-endian. Each frame is sealed by a
-//! [`SealEngine`](crate::runtime::engine::SealEngine) — ChaCha20+poly16
-//! through the PJRT artifact on the submit side, verified and decrypted on
-//! the worker side. `counter0` advances by the number of 64-byte blocks
-//! consumed, so the keystream never repeats within a session and chunking
-//! is transparent (see the counter-continuity tests in `security::chacha`).
+//! All integers little-endian. Versions [`V1`] and [`V2`] share this
+//! exact layout; v2 is stamped by peers that negotiated `chunk_words` at
+//! connection setup (see [`crate::fabric::tcp`]), letting the chunk knob
+//! move per connection while v1 peers interoperate untouched. Each frame
+//! is sealed by a [`SealEngine`](crate::runtime::engine::SealEngine) —
+//! ChaCha20+poly16 through the PJRT artifact on the submit side,
+//! verified and decrypted on the worker side. `counter0` advances by the
+//! number of 64-byte blocks consumed, so the keystream never repeats
+//! within a session and chunking is transparent (see the
+//! counter-continuity tests in `security::chacha`).
+//!
+//! The hot path is zero-copy: payloads stay bytes end to end
+//! (`SealEngine::process_bytes` seals one reusable buffer in place),
+//! frames go out as one vectored write of head+payload+digest, and the
+//! `SEAL_THREADS` knob enables a small sealer pool so frame N+1 is
+//! sealed while frame N is on the socket. Receivers can consume frames
+//! as they are verified via [`recv_stream_with`] instead of buffering
+//! the whole payload. See docs/ARCHITECTURE.md §Data-path performance.
 
 use crate::runtime::engine::{Kind, SealEngine};
-use crate::security::chacha::bytes_to_words;
-use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{IoSlice, Read, Write};
+use std::sync::mpsc;
 
 pub const MAGIC: &[u8; 4] = b"HTCF";
-pub const VERSION: u32 = 1;
+
+/// Original wire-format version.
+pub const V1: u32 = 1;
+/// Chunk-negotiated wire-format version (same frame layout as v1; the
+/// version stamp records that `chunk_words` was agreed at handshake).
+pub const V2: u32 = 2;
 
 /// Default chunk: 64 KiB of payload = 1024 blocks = 16384 words (matches
 /// the `64k` artifact geometry).
 pub const DEFAULT_CHUNK_WORDS: usize = 1024 * 16;
 
-fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
-    w.write_all(&v.to_le_bytes()).context("write u32")
-}
+/// Largest `chunk_words` either side accepts (bounds per-frame buffers).
+pub const MAX_WIRE_CHUNK_WORDS: usize = 1 << 24;
 
-fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
-    w.write_all(&v.to_le_bytes()).context("write u64")
-}
+/// Cap on the receiver's upfront buffer reservation: a forged
+/// `file_bytes` header can no longer trigger an unbounded allocation;
+/// honest large streams grow amortized as verified frames arrive.
+pub const MAX_RECV_PREALLOC: usize = 16 << 20;
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b).context("read u32")?;
     Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b).context("read u64")?;
-    Ok(u64::from_le_bytes(b))
 }
 
 /// Statistics from one side of a transfer.
@@ -54,8 +65,45 @@ pub struct StreamStats {
     pub frames: u64,
 }
 
-/// Send `data` as a sealed stream. `session` provides key+nonce; the
-/// engine seals each chunk with an advancing block counter.
+/// Tuning for [`send_stream_opts`]. The plain [`send_stream`] wrapper
+/// uses v1 with inline sealing, which is the pre-negotiation behavior.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamOpts {
+    /// Words per frame: positive multiple of 16, at most
+    /// [`MAX_WIRE_CHUNK_WORDS`].
+    pub chunk_words: usize,
+    /// Sealer threads overlapping sealing with socket writes (capped at
+    /// 8); 0 seals inline, the right default for single-core hosts. See
+    /// docs/KNOBS.md.
+    pub seal_threads: usize,
+    /// Wire version to stamp ([`V1`] or [`V2`]).
+    pub version: u32,
+}
+
+impl Default for StreamOpts {
+    fn default() -> Self {
+        StreamOpts {
+            chunk_words: DEFAULT_CHUNK_WORDS,
+            seal_threads: 0,
+            version: V1,
+        }
+    }
+}
+
+/// The `SEAL_THREADS` knob: sealer threads per sending stream (0 =
+/// inline, the default). See docs/KNOBS.md.
+pub fn seal_threads_from_env() -> usize {
+    std::env::var("SEAL_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|n| n.min(8))
+        .unwrap_or(0)
+}
+
+/// Send `data` as a sealed v1 stream with inline sealing (the
+/// historical signature; see [`send_stream_opts`] for the tunable
+/// form). `key`+`nonce` come from the session; the engine seals each
+/// chunk with an advancing block counter.
 pub fn send_stream(
     w: &mut impl Write,
     engine: &mut dyn SealEngine,
@@ -64,79 +112,250 @@ pub fn send_stream(
     data: &[u8],
     chunk_words: usize,
 ) -> Result<StreamStats> {
-    assert!(chunk_words % 16 == 0 && chunk_words > 0);
+    let opts = StreamOpts {
+        chunk_words,
+        ..StreamOpts::default()
+    };
+    send_stream_opts(w, engine, key, nonce, data, &opts)
+}
+
+/// Send `data` as a sealed stream under explicit [`StreamOpts`].
+pub fn send_stream_opts(
+    w: &mut impl Write,
+    engine: &mut dyn SealEngine,
+    key: &[u32; 8],
+    nonce: &[u32; 3],
+    data: &[u8],
+    opts: &StreamOpts,
+) -> Result<StreamStats> {
+    let chunk_words = opts.chunk_words;
+    if chunk_words == 0 || chunk_words % 16 != 0 || chunk_words > MAX_WIRE_CHUNK_WORDS {
+        bail!("bad chunk_words {chunk_words} (positive multiple of 16, <= {MAX_WIRE_CHUNK_WORDS})");
+    }
+    if opts.version != V1 && opts.version != V2 {
+        bail!("unsupported stream version {}", opts.version);
+    }
     let mut stats = StreamStats::default();
+    let mut header = [0u8; 20];
+    header[..4].copy_from_slice(MAGIC);
+    header[4..8].copy_from_slice(&opts.version.to_le_bytes());
+    header[8..16].copy_from_slice(&(data.len() as u64).to_le_bytes());
+    header[16..20].copy_from_slice(&(chunk_words as u32).to_le_bytes());
+    w.write_all(&header).context("write header")?;
+    stats.wire_bytes += 20;
 
-    w.write_all(MAGIC)?;
-    write_u32(w, VERSION)?;
-    write_u64(w, data.len() as u64)?;
-    write_u32(w, chunk_words as u32)?;
-    stats.wire_bytes += 4 + 4 + 8 + 4;
+    let chunk_bytes = chunk_words * 4;
+    let n_frames = data.len().div_ceil(chunk_bytes);
+    // Pipelining needs at least two frames in flight and an engine that
+    // can fork; otherwise seal inline.
+    let sealers = if n_frames > 1 {
+        opts.seal_threads.min(8).min(n_frames)
+    } else {
+        0
+    };
+    let forks = if sealers > 0 {
+        collect_forks(engine, sealers)
+    } else {
+        None
+    };
+    if let Some(forks) = forks {
+        send_frames_pipelined(w, forks, key, nonce, data, chunk_bytes, &mut stats)?;
+        stats.payload_bytes = data.len() as u64;
+        w.flush()?;
+        return Ok(stats);
+    }
 
-    let words = bytes_to_words(data);
+    // Serial path: one reusable payload buffer, sealed in place.
+    let mut payload: Vec<u8> = Vec::new();
     let mut counter0: u32 = 0;
-    let mut frame_buf: Vec<u8> = Vec::with_capacity(chunk_words * 4 + 32);
-    for chunk in words.chunks(chunk_words) {
-        let mut buf = chunk.to_vec();
-        // Tail chunks are padded to whole blocks by bytes_to_words already;
-        // pad further to a multiple of 16 words is guaranteed. Seal.
-        let digest = engine.process(Kind::Seal, key, nonce, counter0, &mut buf)?;
-        // One buffered write per frame: serializing word-by-word costs a
-        // write call per 4 bytes and was the top loopback bottleneck
-        // (see EXPERIMENTS.md §Perf).
-        frame_buf.clear();
-        frame_buf.extend_from_slice(&counter0.to_le_bytes());
-        frame_buf.extend_from_slice(&(buf.len() as u32).to_le_bytes());
-        for word in &buf {
-            frame_buf.extend_from_slice(&word.to_le_bytes());
-        }
-        for d in &digest {
-            frame_buf.extend_from_slice(&d.to_le_bytes());
-        }
-        w.write_all(&frame_buf)?;
-        stats.wire_bytes += 8 + buf.len() as u64 * 4 + 16;
-        stats.frames += 1;
-        counter0 = counter0.wrapping_add((buf.len() / 16) as u32);
+    for chunk in data.chunks(chunk_bytes) {
+        let padded = chunk.len().div_ceil(64) * 64;
+        payload.clear();
+        payload.resize(padded, 0);
+        payload[..chunk.len()].copy_from_slice(chunk);
+        let digest = engine.process_bytes(Kind::Seal, key, nonce, counter0, &mut payload)?;
+        write_frame(w, counter0, &payload, &digest, &mut stats)?;
+        counter0 = counter0.wrapping_add((padded / 64) as u32);
     }
     stats.payload_bytes = data.len() as u64;
     w.flush()?;
     Ok(stats)
 }
 
+fn collect_forks(engine: &mut dyn SealEngine, n: usize) -> Option<Vec<Box<dyn SealEngine + Send>>> {
+    let mut forks = Vec::with_capacity(n);
+    for _ in 0..n {
+        forks.push(engine.fork()?);
+    }
+    Some(forks)
+}
+
+/// Double-buffered sealer pool: frame i is sealed by fork `i % s` and
+/// collected in order, so sealing overlaps the socket write while the
+/// wire bytes stay identical to the serial path. Buffers are recycled
+/// (at most `2 * s` live), and dropping the work senders on any error
+/// shuts the pool down cleanly.
+fn send_frames_pipelined(
+    w: &mut impl Write,
+    forks: Vec<Box<dyn SealEngine + Send>>,
+    key: &[u32; 8],
+    nonce: &[u32; 3],
+    data: &[u8],
+    chunk_bytes: usize,
+    stats: &mut StreamStats,
+) -> Result<()> {
+    struct Work {
+        buf: Vec<u8>,
+        counter0: u32,
+    }
+    struct Sealed {
+        buf: Vec<u8>,
+        counter0: u32,
+        digest: [u32; 4],
+    }
+    let s = forks.len();
+    let key = *key;
+    let nonce = *nonce;
+    std::thread::scope(|scope| -> Result<()> {
+        let mut work_txs = Vec::with_capacity(s);
+        let mut res_rxs = Vec::with_capacity(s);
+        for mut eng in forks {
+            let (wtx, wrx) = mpsc::channel::<Work>();
+            let (rtx, rrx) = mpsc::channel::<Result<Sealed>>();
+            work_txs.push(wtx);
+            res_rxs.push(rrx);
+            scope.spawn(move || {
+                while let Ok(mut wk) = wrx.recv() {
+                    let r = eng
+                        .process_bytes(Kind::Seal, &key, &nonce, wk.counter0, &mut wk.buf)
+                        .map(|digest| Sealed {
+                            buf: wk.buf,
+                            counter0: wk.counter0,
+                            digest,
+                        });
+                    if rtx.send(r).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        let n_frames = data.len().div_ceil(chunk_bytes);
+        let max_inflight = 2 * s;
+        let mut free: Vec<Vec<u8>> = Vec::new();
+        let mut chunks = data.chunks(chunk_bytes);
+        let mut counter0: u32 = 0;
+        let mut dispatched = 0usize;
+        let mut collected = 0usize;
+        while collected < n_frames {
+            while dispatched < n_frames && dispatched - collected < max_inflight {
+                let chunk = chunks.next().expect("chunk count matches frame count");
+                let padded = chunk.len().div_ceil(64) * 64;
+                let mut buf = free.pop().unwrap_or_default();
+                buf.clear();
+                buf.resize(padded, 0);
+                buf[..chunk.len()].copy_from_slice(chunk);
+                work_txs[dispatched % s]
+                    .send(Work { buf, counter0 })
+                    .map_err(|_| anyhow!("sealer thread exited early"))?;
+                counter0 = counter0.wrapping_add((padded / 64) as u32);
+                dispatched += 1;
+            }
+            let sealed = res_rxs[collected % s]
+                .recv()
+                .map_err(|_| anyhow!("sealer thread died"))??;
+            write_frame(w, sealed.counter0, &sealed.buf, &sealed.digest, stats)?;
+            free.push(sealed.buf);
+            collected += 1;
+        }
+        drop(work_txs);
+        Ok(())
+    })
+}
+
+/// One vectored write of [8-byte head][sealed payload][16-byte digest]:
+/// no frame-assembly copy, no per-word appends.
+fn write_frame(
+    w: &mut impl Write,
+    counter0: u32,
+    payload: &[u8],
+    digest: &[u32; 4],
+    stats: &mut StreamStats,
+) -> Result<()> {
+    let mut head = [0u8; 8];
+    head[..4].copy_from_slice(&counter0.to_le_bytes());
+    head[4..].copy_from_slice(&((payload.len() / 4) as u32).to_le_bytes());
+    let mut dig = [0u8; 16];
+    for (i, d) in digest.iter().enumerate() {
+        dig[i * 4..i * 4 + 4].copy_from_slice(&d.to_le_bytes());
+    }
+    let mut bufs = [IoSlice::new(&head), IoSlice::new(payload), IoSlice::new(&dig)];
+    let mut slices: &mut [IoSlice<'_>] = &mut bufs;
+    while !slices.is_empty() {
+        match w.write_vectored(slices) {
+            Ok(0) => bail!("write_vectored wrote 0 bytes (peer closed?)"),
+            Ok(n) => IoSlice::advance_slices(&mut slices, n),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("write frame"),
+        }
+    }
+    stats.wire_bytes += 8 + payload.len() as u64 + 16;
+    stats.frames += 1;
+    Ok(())
+}
+
+/// Parsed stream header, handed to the [`recv_stream_with`] sink.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamHeader {
+    pub version: u32,
+    pub file_bytes: u64,
+    pub chunk_words: usize,
+}
+
 /// Receive a sealed stream, verifying every frame's digest before
-/// trusting its plaintext. Returns the payload bytes.
-pub fn recv_stream(
-    r: &mut impl Read,
+/// trusting its plaintext. The sink is called once per verified frame
+/// with the parsed header and that frame's payload slice (padding
+/// already stripped), so consumers can hash or persist incrementally
+/// without buffering the whole file.
+pub fn recv_stream_with<R, S>(
+    r: &mut R,
     engine: &mut dyn SealEngine,
     key: &[u32; 8],
     nonce: &[u32; 3],
-) -> Result<(Vec<u8>, StreamStats)> {
+    mut sink: S,
+) -> Result<StreamStats>
+where
+    R: Read,
+    S: FnMut(&StreamHeader, &[u8]) -> Result<()>,
+{
     let mut stats = StreamStats::default();
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic).context("read magic")?;
-    if &magic != MAGIC {
-        bail!("bad stream magic {magic:?}");
+    let mut hdr = [0u8; 20];
+    r.read_exact(&mut hdr).context("read header")?;
+    if &hdr[..4] != MAGIC {
+        bail!("bad stream magic {:?}", &hdr[..4]);
     }
-    let version = read_u32(r)?;
-    if version != VERSION {
+    let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+    if version != V1 && version != V2 {
         bail!("unsupported stream version {version}");
     }
-    let file_bytes = read_u64(r)? as usize;
-    let chunk_words = read_u32(r)? as usize;
-    if chunk_words == 0 || chunk_words % 16 != 0 || chunk_words > (1 << 24) {
+    let file_bytes = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+    let chunk_words = u32::from_le_bytes(hdr[16..20].try_into().unwrap()) as usize;
+    if chunk_words == 0 || chunk_words % 16 != 0 || chunk_words > MAX_WIRE_CHUNK_WORDS {
         bail!("bad chunk_words {chunk_words}");
     }
-    stats.wire_bytes += 4 + 4 + 8 + 4;
+    stats.wire_bytes += 20;
+    let header = StreamHeader {
+        version,
+        file_bytes,
+        chunk_words,
+    };
 
-    let total_words = file_bytes.div_ceil(64) * 16;
-    // Hot path: one reusable word scratch per stream (not a fresh
-    // collect() per frame), and plaintext bytes appended frame by frame
-    // (no whole-payload words_to_bytes copy at the end).
-    let mut bytes: Vec<u8> = Vec::with_capacity(total_words * 4);
-    let mut received_words = 0usize;
+    let total_words: u64 = file_bytes.div_ceil(64) * 16;
+    let mut received_words: u64 = 0;
+    let mut delivered: u64 = 0;
     let mut expect_counter: u32 = 0;
-    let mut byte_buf: Vec<u8> = Vec::new();
-    let mut frame_words: Vec<u32> = Vec::new();
+    // One reusable frame buffer, bounded by the validated chunk_words —
+    // never by the peer's file_bytes claim.
+    let mut buf: Vec<u8> = Vec::new();
     while received_words < total_words {
         let counter0 = read_u32(r)?;
         if counter0 != expect_counter {
@@ -146,19 +365,16 @@ pub fn recv_stream(
         if n_words == 0 || n_words % 16 != 0 || n_words > chunk_words {
             bail!("bad frame n_words {n_words}");
         }
-        byte_buf.resize(n_words * 4, 0);
-        r.read_exact(&mut byte_buf).context("read frame payload")?;
-        frame_words.clear();
-        frame_words.extend(
-            byte_buf
-                .chunks_exact(4)
-                .map(|c| u32::from_le_bytes(c.try_into().unwrap())),
-        );
+        buf.clear();
+        buf.resize(n_words * 4, 0);
+        r.read_exact(&mut buf).context("read frame payload")?;
+        let mut dig = [0u8; 16];
+        r.read_exact(&mut dig).context("read frame digest")?;
         let mut digest = [0u32; 4];
-        for d in digest.iter_mut() {
-            *d = read_u32(r)?;
+        for (i, d) in digest.iter_mut().enumerate() {
+            *d = u32::from_le_bytes(dig[i * 4..i * 4 + 4].try_into().unwrap());
         }
-        let computed = engine.process(Kind::Unseal, key, nonce, counter0, &mut frame_words)?;
+        let computed = engine.process_bytes(Kind::Unseal, key, nonce, counter0, &mut buf)?;
         if computed != digest {
             bail!(
                 "integrity failure in frame at counter {counter0}: {computed:08x?} != {digest:08x?}"
@@ -167,20 +383,41 @@ pub fn recv_stream(
         stats.wire_bytes += 8 + n_words as u64 * 4 + 16;
         stats.frames += 1;
         expect_counter = expect_counter.wrapping_add((n_words / 16) as u32);
-        received_words += n_words;
-        for w in &frame_words {
-            bytes.extend_from_slice(&w.to_le_bytes());
-        }
+        received_words += n_words as u64;
+        let take = ((n_words as u64 * 4).min(file_bytes - delivered)) as usize;
+        sink(&header, &buf[..take])?;
+        delivered += take as u64;
     }
-    bytes.truncate(file_bytes);
-    stats.payload_bytes = file_bytes as u64;
-    Ok((bytes, stats))
+    stats.payload_bytes = file_bytes;
+    Ok(stats)
+}
+
+/// Receive a sealed stream into a buffer (see [`recv_stream_with`] for
+/// the streaming form). The upfront reservation is capped at
+/// [`MAX_RECV_PREALLOC`] so a forged header cannot force an unbounded
+/// allocation.
+pub fn recv_stream(
+    r: &mut impl Read,
+    engine: &mut dyn SealEngine,
+    key: &[u32; 8],
+    nonce: &[u32; 3],
+) -> Result<(Vec<u8>, StreamStats)> {
+    let mut out: Vec<u8> = Vec::new();
+    let stats = recv_stream_with(r, engine, key, nonce, |h: &StreamHeader, chunk: &[u8]| {
+        if out.capacity() == 0 {
+            out.reserve(h.file_bytes.min(MAX_RECV_PREALLOC as u64) as usize);
+        }
+        out.extend_from_slice(chunk);
+        Ok(())
+    })?;
+    Ok((out, stats))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::runtime::engine::NativeEngine;
+    use crate::security::chacha::{bytes_to_words, seal_chunk, words_to_bytes};
     use crate::security::Method;
     use crate::util::Prng;
 
@@ -219,6 +456,145 @@ mod tests {
                 assert_eq!(tx.frames, expected_frames, "size {n}");
             }
         }
+    }
+
+    #[test]
+    fn golden_v2_frame_layout() {
+        // Pin the v2 wire layout byte for byte: header fields, frame
+        // head/digest serialization, tail zero-padding, and counter
+        // advance. The expected bytes are reconstructed from the scalar
+        // word-path primitives, independently of the byte/SIMD path the
+        // sender uses.
+        let key = [0x0101_0101u32; 8];
+        let nonce = [0xAA, 0xBB, 0xCC];
+        let data: Vec<u8> = (0..80u8).collect();
+        let mut tx = NativeEngine::new(Method::Chacha20);
+        let mut wire = Vec::new();
+        let opts = StreamOpts {
+            chunk_words: 16,
+            seal_threads: 0,
+            version: V2,
+        };
+        send_stream_opts(&mut wire, &mut tx, &key, &nonce, &data, &opts).unwrap();
+
+        let mut expected = Vec::new();
+        expected.extend_from_slice(b"HTCF");
+        expected.extend_from_slice(&2u32.to_le_bytes());
+        expected.extend_from_slice(&80u64.to_le_bytes());
+        expected.extend_from_slice(&16u32.to_le_bytes());
+        // Frame 0: bytes 0..64, counter0 = 0.
+        let mut blk0 = bytes_to_words(&data[..64]);
+        let d0 = seal_chunk(&key, &nonce, 0, &mut blk0);
+        expected.extend_from_slice(&0u32.to_le_bytes());
+        expected.extend_from_slice(&16u32.to_le_bytes());
+        expected.extend_from_slice(&words_to_bytes(&blk0));
+        for d in &d0 {
+            expected.extend_from_slice(&d.to_le_bytes());
+        }
+        // Frame 1: tail 16 bytes zero-padded to one block, counter0 = 1.
+        let mut blk1 = bytes_to_words(&data[64..]);
+        let d1 = seal_chunk(&key, &nonce, 1, &mut blk1);
+        expected.extend_from_slice(&1u32.to_le_bytes());
+        expected.extend_from_slice(&16u32.to_le_bytes());
+        expected.extend_from_slice(&words_to_bytes(&blk1));
+        for d in &d1 {
+            expected.extend_from_slice(&d.to_le_bytes());
+        }
+        assert_eq!(wire, expected, "v2 wire layout is pinned");
+
+        // And a v2 stream decodes like any other.
+        let mut rx = NativeEngine::new(Method::Chacha20);
+        let mut cur = std::io::Cursor::new(wire);
+        let (out, stats) = recv_stream(&mut cur, &mut rx, &key, &nonce).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(stats.frames, 2);
+    }
+
+    #[test]
+    fn pipelined_send_matches_serial_bytes() {
+        let key = [5u32; 8];
+        let nonce = [1, 2, 3];
+        let mut rng = Prng::new(11);
+        let mut data = vec![0u8; 300_000];
+        rng.fill_bytes(&mut data);
+        let mut serial_wire = Vec::new();
+        let mut piped_wire = Vec::new();
+        let mut e1 = NativeEngine::new(Method::Chacha20);
+        let mut e2 = NativeEngine::new(Method::Chacha20);
+        let base = StreamOpts {
+            chunk_words: 256,
+            seal_threads: 0,
+            version: V2,
+        };
+        let s = send_stream_opts(&mut serial_wire, &mut e1, &key, &nonce, &data, &base).unwrap();
+        let piped = StreamOpts {
+            seal_threads: 3,
+            ..base
+        };
+        let p = send_stream_opts(&mut piped_wire, &mut e2, &key, &nonce, &data, &piped).unwrap();
+        assert_eq!(serial_wire, piped_wire, "pipelined sealing is bit-identical");
+        assert_eq!(s.wire_bytes, p.wire_bytes);
+        assert_eq!(s.frames, p.frames);
+        let mut rx = NativeEngine::new(Method::Chacha20);
+        let mut cur = std::io::Cursor::new(piped_wire);
+        let (out, _) = recv_stream(&mut cur, &mut rx, &key, &nonce).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn recv_stream_with_streams_frames() {
+        let key = [3u32; 8];
+        let nonce = [9, 8, 7];
+        let mut tx = NativeEngine::new(Method::Chacha20);
+        let mut wire = Vec::new();
+        let data: Vec<u8> = (0..100_000u32).map(|i| i as u8).collect();
+        send_stream(&mut wire, &mut tx, &key, &nonce, &data, 256).unwrap();
+        let mut rx = NativeEngine::new(Method::Chacha20);
+        let mut seen = Vec::new();
+        let mut calls = 0u64;
+        let stats = recv_stream_with(
+            &mut std::io::Cursor::new(wire),
+            &mut rx,
+            &key,
+            &nonce,
+            |h: &StreamHeader, chunk: &[u8]| {
+                assert_eq!(h.version, V1);
+                assert_eq!(h.file_bytes, 100_000);
+                seen.extend_from_slice(chunk);
+                calls += 1;
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, data);
+        assert_eq!(calls, stats.frames);
+    }
+
+    #[test]
+    fn bad_chunk_words_is_err_not_panic() {
+        let mut e = NativeEngine::new(Method::Chacha20);
+        let mut wire = Vec::new();
+        for bad in [0usize, 8, 100] {
+            let err = send_stream(&mut wire, &mut e, &[0; 8], &[0; 3], b"x", bad).unwrap_err();
+            assert!(err.to_string().contains("chunk_words"), "{err}");
+        }
+        let over = MAX_WIRE_CHUNK_WORDS + 16;
+        assert!(send_stream(&mut wire, &mut e, &[0; 8], &[0; 3], b"x", over).is_err());
+    }
+
+    #[test]
+    fn forged_huge_file_bytes_does_not_preallocate() {
+        // Header claims 2^60 payload bytes, then the stream ends. The
+        // receiver must fail on the missing frame — it must not reserve
+        // a buffer sized from the hostile header.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(MAGIC);
+        wire.extend_from_slice(&V1.to_le_bytes());
+        wire.extend_from_slice(&(1u64 << 60).to_le_bytes());
+        wire.extend_from_slice(&16u32.to_le_bytes());
+        let mut rx = NativeEngine::new(Method::Chacha20);
+        let r = recv_stream(&mut std::io::Cursor::new(wire), &mut rx, &[0; 8], &[0; 3]);
+        assert!(r.is_err());
     }
 
     #[test]
@@ -289,14 +665,8 @@ mod tests {
     #[test]
     fn bad_magic_rejected() {
         let mut rx = NativeEngine::new(Method::Chacha20);
-        let wire = b"NOPE\0\0\0\0".to_vec();
-        assert!(recv_stream(
-            &mut std::io::Cursor::new(wire),
-            &mut rx,
-            &[0; 8],
-            &[0; 3]
-        )
-        .is_err());
+        let wire = b"NOPE\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0".to_vec();
+        assert!(recv_stream(&mut std::io::Cursor::new(wire), &mut rx, &[0; 8], &[0; 3]).is_err());
     }
 
     #[test]
