@@ -1,0 +1,126 @@
+//! Bench: multi-site WAN federation — the petascale transfer-week shape.
+//!
+//! Runs the `petascale-week-3x2` scenario (3 federated sites, round-robin
+//! site selection, per-pair WAN links) and reports the site×site goodput
+//! matrix, then runs the federated sim-vs-real site calibration on a
+//! 2-site loopback burst. Gates: the scenario must push a round-robin
+//! share of its goodput across the WAN (cross-site fraction within the
+//! factor-2 band around the ideal 2/3), and the calibration matrices must
+//! agree within the factor-2 band. Both records land in
+//! `wan_federation.json` under `BENCH_REPORT_DIR` for the CI artifact.
+//!
+//! Run: cargo bench --bench wan_federation
+//! CI smoke: cargo bench --bench wan_federation -- --smoke
+//! (1/33-scale burst, small calibration run)
+
+use htcdm::coordinator::{Experiment, Scenario};
+use htcdm::fabric::{run_site_calibration, CalibrationConfig};
+
+fn main() -> anyhow::Result<()> {
+    let smoke =
+        std::env::args().any(|a| a == "--smoke") || std::env::var_os("BENCH_SMOKE").is_some();
+    if smoke {
+        println!("[smoke mode: scaled-down burst and calibration]");
+    }
+
+    println!("=== petascale-week-3x2: 3-site federated transfer week ===");
+    let mut exp = Experiment::scenario(Scenario::PetascaleWeek3x2);
+    if smoke {
+        exp.spec.n_jobs = 300;
+    }
+    let n_jobs = exp.spec.n_jobs;
+    let t0 = std::time::Instant::now();
+    let report = exp.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let total_bytes: u64 = report.site_matrix_bytes.iter().flatten().sum();
+    let cross_bytes = report.cross_site_bytes();
+    let cross_fraction = cross_bytes as f64 / (total_bytes as f64).max(1.0);
+    let makespan_s = report.makespan.as_secs_f64().max(1e-9);
+    let total_gbps = total_bytes as f64 * 8.0 / makespan_s / 1e9;
+    let cross_gbps = cross_bytes as f64 * 8.0 / makespan_s / 1e9;
+    println!(
+        "  {} jobs over {} sites ({}) in {:.2} s wall | makespan {:.1} min",
+        n_jobs,
+        report.n_sites,
+        report.site_selector,
+        wall,
+        report.makespan.as_mins_f64()
+    );
+    println!(
+        "  sustained {total_gbps:.1} Gbps total | {cross_gbps:.1} Gbps cross-site \
+         ({:.0}% of bytes crossed the WAN)",
+        cross_fraction * 100.0
+    );
+    println!("  site×site GB:");
+    for (s, row) in report.site_matrix_bytes.iter().enumerate() {
+        let cells: Vec<String> = row.iter().map(|b| format!("{:>8.1}", *b as f64 / 1e9)).collect();
+        println!("    s{s} -> [{}]", cells.join(" "));
+    }
+    // Round-robin over 3 sites should send ~2/3 of the bytes cross-site;
+    // gate the observed fraction inside the factor-2 band around that.
+    let ideal = 2.0 / 3.0;
+    anyhow::ensure!(
+        cross_gbps > 0.0 && cross_fraction >= ideal / 2.0 && cross_fraction <= (ideal * 2.0).min(1.0),
+        "cross-site share {:.3} left the factor-2 band around {:.3} (cross {:.1} of {:.1} Gbps)",
+        cross_fraction,
+        ideal,
+        cross_gbps,
+        total_gbps
+    );
+
+    println!("\n=== federated sim-vs-real site calibration (2-site loopback burst) ===");
+    let cal_cfg = if smoke {
+        CalibrationConfig {
+            n_jobs: 8,
+            input_bytes: 1 << 20,
+            workers: 2,
+            ..CalibrationConfig::default()
+        }
+    } else {
+        CalibrationConfig {
+            n_jobs: 48,
+            input_bytes: 8 << 20,
+            workers: 4,
+            ..CalibrationConfig::default()
+        }
+    };
+    let cal = run_site_calibration(&cal_cfg, 2)?;
+    println!(
+        "  real {:.3} Gbps vs sim {:.3} Gbps (ratio {:.3}) | row ratios {:?}",
+        cal.real_gbps,
+        cal.sim_gbps,
+        cal.ratio,
+        cal.row_ratios()
+            .iter()
+            .map(|r| (r * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>()
+    );
+    println!("  real matrix {:?}", cal.real_matrix);
+    println!("  sim  matrix {:?}", cal.sim_matrix);
+
+    if let Some(dir) = std::env::var_os("BENCH_REPORT_DIR") {
+        let dir = std::path::PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join("wan_federation.json");
+        let json = format!(
+            "{{\"scenario\":{{\"name\":\"{}\",\"jobs\":{},\"total_gbps\":{:.6},\
+             \"cross_site_gbps\":{:.6},\"cross_site_fraction\":{:.6},\"matrix\":{}}},\
+             \"calibration\":{}}}",
+            report.label,
+            n_jobs,
+            total_gbps,
+            cross_gbps,
+            cross_fraction,
+            report.site_matrix_json(),
+            cal.to_json()
+        );
+        std::fs::write(&path, json)?;
+        println!("  wrote {}", path.display());
+    }
+    anyhow::ensure!(
+        cal.within_band(2.0),
+        "site calibration left the factor-2 band: {}",
+        cal.to_json()
+    );
+    Ok(())
+}

@@ -15,7 +15,7 @@ use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan}
 use crate::mover::task::{TaskProgress, TaskRunner, TunerSample};
 use crate::mover::{
     AdmissionConfig, DataSource, MoverStats, PoolRouter, RouterConfig, RouterPolicy, RouterStats,
-    ShadowPool, SourcePlan, SourceSelector,
+    ShadowPool, SiteSelector, SourcePlan, SourceSelector,
 };
 use crate::netsim::solver::SolverKind;
 use crate::netsim::topology::{Testbed, TestbedSpec};
@@ -65,6 +65,10 @@ pub struct EngineSpec {
     /// (round-robin / cache-aware / owner-affinity /
     /// weighted-by-capacity).
     pub source_selector: SourceSelector,
+    /// Which-site selection strategy above the DTN selector when the
+    /// testbed federates (`N_SITES > 1`): local-first / cache-aware /
+    /// round-robin. Irrelevant with one site.
+    pub site_selector: SiteSelector,
     /// Per-DTN admission budget: max concurrent transfers one data node
     /// serves (0 = unlimited). A saturated DTN defers placements to its
     /// peers and overflows to the funnel when the whole fleet is full.
@@ -136,6 +140,7 @@ impl EngineSpec {
             n_data_nodes: 0,
             source: SourcePlan::SubmitFunnel,
             source_selector: SourceSelector::RoundRobin,
+            site_selector: SiteSelector::LocalFirst,
             dtn_slots: 0,
             dtn_queue_depth: 0,
             router_shards: crate::mover::DEFAULT_ROUTER_SHARDS,
@@ -225,6 +230,17 @@ impl EngineSpec {
         }
         if cfg.raw("SOURCE_SELECTOR").is_some() {
             self.source_selector = SourceSelector::from_config(cfg)?;
+        }
+        // Federation knobs: site count, per-site border/WAN shape and
+        // the two-level site selector.
+        self.testbed.n_sites =
+            (cfg.get_u64("N_SITES", self.testbed.n_sites as u64)? as u32).max(1);
+        self.testbed.site_wan_gbps = cfg.get_f64("SITE_WAN_GBPS", self.testbed.site_wan_gbps)?;
+        self.testbed.site_wan_rtt_ms =
+            cfg.get_f64("SITE_WAN_RTT_MS", self.testbed.site_wan_rtt_ms)?;
+        self.testbed.site_wan_loss = cfg.get_f64("SITE_WAN_LOSS", self.testbed.site_wan_loss)?;
+        if cfg.raw("SITE_SELECTOR").is_some() {
+            self.site_selector = SiteSelector::from_config(cfg)?;
         }
         self.dtn_slots = cfg.get_u64("DTN_MAX_CONCURRENT", self.dtn_slots as u64)? as u32;
         self.dtn_queue_depth = cfg.get_u64("DTN_QUEUE_DEPTH", self.dtn_queue_depth as u64)? as u32;
@@ -347,6 +363,11 @@ pub struct EngineResult {
     pub router: RouterStats,
     /// Applied fault events (empty for fault-free runs).
     pub chaos: ChaosTimeline,
+    /// Site×site goodput matrix: `site_matrix[src][dst]` is the input
+    /// payload bytes served by a site-`src` source (funnel or DTN) to a
+    /// site-`dst` worker. A 1×1 matrix on unfederated runs; the
+    /// Petascale DTN transfer-matrix benchmark shape otherwise.
+    pub site_matrix: Vec<Vec<u64>>,
 }
 
 pub struct Engine {
@@ -386,6 +407,9 @@ pub struct Engine {
     faults: Vec<FaultEvent>,
     /// Applied-fault timeline for the report.
     chaos: ChaosTimeline,
+    /// Input payload bytes by (source site, worker site); see
+    /// [`EngineResult::site_matrix`].
+    site_matrix: Vec<Vec<u64>>,
 }
 
 /// Build the spec's pool router: the submit-node fleet, NIC-budget
@@ -424,6 +448,8 @@ pub fn router_from_spec(spec: &EngineSpec) -> PoolRouter {
             dtn_queue_depth: spec.dtn_queue_depth,
             state_shards: spec.router_shards,
             recovery_ramp: spec.faults.recovery_ramp.unwrap_or(0),
+            n_sites: spec.testbed.n_sites.max(1) as usize,
+            site_selector: spec.site_selector,
         },
     )
 }
@@ -454,6 +480,8 @@ impl Engine {
         spec.testbed.n_data_nodes = router.dtn_count() as u32;
         spec.source = router.source_plan();
         spec.source_selector = router.source_selector();
+        spec.testbed.n_sites = router.n_sites() as u32;
+        spec.site_selector = router.site_selector();
         spec.dtn_slots = router.dtn_budget();
         spec.dtn_queue_depth = router.dtn_queue_depth();
         spec.router_shards = router.state_shards();
@@ -509,7 +537,9 @@ impl Engine {
             .map(|(_, _, _, _, nominal)| nominal)
             .unwrap_or(0.0);
         let faults = spec.faults.sorted();
+        let n_sites = tb.n_sites();
         Engine {
+            site_matrix: vec![vec![0u64; n_sites]; n_sites],
             rng: Prng::new(spec.seed),
             spec,
             tb,
@@ -570,7 +600,11 @@ impl Engine {
         if let Err(e) = self
             .spec
             .faults
-            .validate(self.schedd.mover.node_count(), self.schedd.mover.dtn_count())
+            .validate(
+                self.schedd.mover.node_count(),
+                self.schedd.mover.dtn_count(),
+                self.schedd.mover.n_sites(),
+            )
         {
             bail!("invalid fault plan: {e}");
         }
@@ -686,6 +720,7 @@ impl Engine {
             mover,
             router,
             chaos: self.chaos,
+            site_matrix: self.site_matrix,
         })
     }
 
@@ -873,6 +908,17 @@ impl Engine {
         self.release_reader(&ctx);
         match ctx.kind {
             FlowKind::Input => {
+                // Site×site goodput accounting: credit the completed
+                // payload to (source site, worker site).
+                let src_site = match ctx.source {
+                    DataSource::Funnel { node } => self.tb.site_of_submit(node),
+                    DataSource::Dtn { dtn } => self.tb.site_of_dtn(dtn),
+                };
+                let dst_site = self
+                    .tb
+                    .site_of_worker(self.assignment[&ctx.proc_].worker as usize);
+                self.site_matrix[src_site][dst_site] +=
+                    self.schedd.job(ctx.proc_).spec.input_bytes.0;
                 let admitted = self.schedd.input_done(ctx.proc_, t);
                 self.start_routed(admitted, t);
                 // Execute the payload: the paper's validation script,
@@ -995,7 +1041,13 @@ impl Engine {
     fn apply_fault(&mut self, idx: usize, t: SimTime) {
         let ev = self.faults[idx];
         let node = ev.node();
-        let bytes_before = if ev.is_dtn() {
+        let bytes_before = if ev.is_site() {
+            self.tb
+                .site_borders
+                .get(node)
+                .map(|&l| self.tb.net.link(l).bytes_carried as u64)
+                .unwrap_or(0)
+        } else if ev.is_dtn() {
             self.tb.net.link(self.tb.data_txs[node]).bytes_carried as u64
         } else {
             self.tb.net.link(self.tb.submit_txs[node]).bytes_carried as u64
@@ -1070,6 +1122,84 @@ impl Engine {
             }
             FaultEvent::DegradeDtnNic { dtn, gbps, .. } => {
                 self.tb.set_data_nic_gbps(dtn, gbps);
+            }
+            FaultEvent::KillSite { site, .. } => {
+                // The whole site goes dark: its DTN page caches die, every
+                // transfer served by one of its members (funnel OR DTN
+                // source, from any scheduling node) is torn down, and its
+                // border link drains — `fail_site` below re-routes and
+                // re-sources the tickets onto surviving sites.
+                let dead_nodes: Vec<usize> = (0..self.schedd.mover.node_count())
+                    .filter(|&n| self.schedd.mover.site_of_node(n) == site)
+                    .collect();
+                let dead_dtns: Vec<usize> = (0..self.schedd.mover.dtn_count())
+                    .filter(|&d| self.schedd.mover.site_of_dtn(d) == site)
+                    .collect();
+                for &d in &dead_dtns {
+                    self.dtn_storage[d].clear_cache();
+                }
+                let node_procs: Vec<u32> = self
+                    .node_by_proc
+                    .iter()
+                    .filter(|&(_, n)| dead_nodes.contains(n))
+                    .map(|(&p, _)| p)
+                    .collect();
+                for &p in &node_procs {
+                    self.node_by_proc.remove(&p);
+                    if matches!(
+                        self.source_by_proc.get(&p),
+                        Some(DataSource::Funnel { node }) if dead_nodes.contains(node)
+                    ) {
+                        self.source_by_proc.remove(&p);
+                    }
+                }
+                let dtn_procs: Vec<u32> = self
+                    .source_by_proc
+                    .iter()
+                    .filter(
+                        |&(_, &s)| matches!(s, DataSource::Dtn { dtn } if dead_dtns.contains(&dtn)),
+                    )
+                    .map(|(&p, _)| p)
+                    .filter(|&p| {
+                        matches!(
+                            self.schedd.job(p).state,
+                            crate::jobs::JobState::TransferQueued
+                                | crate::jobs::JobState::TransferringInput
+                        )
+                    })
+                    .collect();
+                for &p in &dtn_procs {
+                    self.source_by_proc.remove(&p);
+                }
+                let mut torn = node_procs;
+                torn.extend(dtn_procs);
+                torn.sort_unstable();
+                torn.dedup();
+                self.abort_input_procs(&torn, t);
+                if !self.tb.site_borders.is_empty() {
+                    self.tb.set_site_border_gbps(site, 0.0);
+                }
+            }
+            FaultEvent::RecoverSite { site, .. } => {
+                // Restore the border and every member NIC (undoing the
+                // kill's drain and any earlier degrades), mirroring the
+                // per-member recover arms.
+                if !self.tb.site_borders.is_empty() {
+                    let gbps = self.tb.spec.site_wan_gbps;
+                    self.tb.set_site_border_gbps(site, gbps);
+                }
+                for n in 0..self.schedd.mover.node_count() {
+                    if self.schedd.mover.site_of_node(n) == site {
+                        let gbps = self.tb.spec.submit_node_nic_gbps(n);
+                        self.tb.set_submit_nic_gbps(n, gbps);
+                    }
+                }
+                for d in 0..self.schedd.mover.dtn_count() {
+                    if self.schedd.mover.site_of_dtn(d) == site {
+                        let gbps = self.tb.spec.data_node_nic_gbps(d);
+                        self.tb.set_data_nic_gbps(d, gbps);
+                    }
+                }
             }
         }
         let admitted = apply_to_router(
@@ -1312,6 +1442,7 @@ mod tests {
             n_data_nodes: 0,
             source: SourcePlan::SubmitFunnel,
             source_selector: SourceSelector::RoundRobin,
+            site_selector: SiteSelector::LocalFirst,
             dtn_slots: 0,
             dtn_queue_depth: 0,
             router_shards: crate::mover::DEFAULT_ROUTER_SHARDS,
@@ -1569,6 +1700,59 @@ mod tests {
             "only flap events fired"
         );
         assert!(r.chaos.count("degrade-dtn") >= 1);
+    }
+
+    #[test]
+    fn federated_sites_report_a_goodput_matrix() {
+        let mut spec = tiny_spec();
+        spec.testbed.n_sites = 2;
+        spec.n_submit_nodes = 2;
+        spec.n_data_nodes = 2;
+        spec.source = SourcePlan::DedicatedDtn;
+        spec.router = RouterPolicy::RoundRobin;
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 40);
+        assert_eq!(r.site_matrix.len(), 2);
+        assert!(r.site_matrix.iter().all(|row| row.len() == 2));
+        // Every input byte lands in exactly one matrix cell.
+        let total: u64 = r.site_matrix.iter().flatten().sum();
+        assert_eq!(total as f64, r.total_input_bytes);
+        // Both sites sourced traffic (round-robin nodes, local-first
+        // DTNs keep each node on its own site's fleet).
+        assert!(r.site_matrix[0].iter().sum::<u64>() > 0);
+        assert!(r.site_matrix[1].iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn unfederated_runs_report_a_one_by_one_matrix() {
+        let r = Engine::new(tiny_spec()).run().unwrap();
+        assert_eq!(r.site_matrix.len(), 1);
+        assert_eq!(r.site_matrix[0][0] as f64, r.total_input_bytes);
+    }
+
+    #[test]
+    fn site_kill_fails_over_to_the_surviving_site() {
+        let mut spec = tiny_spec();
+        spec.testbed.n_sites = 2;
+        spec.n_submit_nodes = 2;
+        spec.n_data_nodes = 2;
+        spec.source = SourcePlan::DedicatedDtn;
+        spec.router = RouterPolicy::RoundRobin;
+        spec.faults = FaultPlan::default().kill_site(0, 5.0);
+        let r = Engine::new(spec).run().unwrap();
+        assert_eq!(r.schedd.completed_count(), 40, "burst survives the dark site");
+        assert_eq!(r.chaos.count("kill-site"), 1);
+        assert_eq!(r.chaos.for_site(0).len(), 1);
+        assert_eq!(r.router.dtn_failed, 1, "site 0's single DTN failed");
+        assert_eq!(r.mover.shard_failed, 1, "site 0's single node failed");
+        // The surviving site served (at least) everything after the kill.
+        assert!(
+            r.router.routed_per_dtn[1] > r.router.routed_per_dtn[0],
+            "survivor serves more: {:?}",
+            r.router.routed_per_dtn
+        );
+        assert!(r.site_matrix[1].iter().sum::<u64>() > 0);
+        assert_eq!(r.errors, 0);
     }
 
     #[test]

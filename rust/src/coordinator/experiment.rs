@@ -18,8 +18,8 @@
 use super::engine::{Engine, EngineResult, EngineSpec};
 use crate::metrics::BinSeries;
 use crate::mover::{
-    AdmissionConfig, ChaosTimeline, FaultPlan, MoverStats, RouterPolicy, RouterStats, SourcePlan,
-    SourceSelector,
+    AdmissionConfig, ChaosTimeline, FaultPlan, MoverStats, RouterPolicy, RouterStats, SiteSelector,
+    SourcePlan, SourceSelector,
 };
 use crate::netsim::solver::SolverKind;
 use crate::netsim::topology::TestbedSpec;
@@ -74,6 +74,14 @@ pub enum Scenario {
     /// Petascale DTN lesson that fleets only reach rated throughput
     /// when endpoint state drives placement.
     CacheAffine4,
+    /// The Petascale DTN transfer-matrix shape the paper's DTN work
+    /// benchmarked for a week: 3 federated sites joined by WAN pair
+    /// links, each hosting one submit node, 2 dedicated data nodes and
+    /// 2 worker hosts, with round-robin site selection deliberately
+    /// forcing cross-site traffic so every site×site cell of the
+    /// goodput matrix carries bytes (fair-share admission across 3
+    /// owners, like the shared testbed).
+    PetascaleWeek3x2,
 }
 
 impl Scenario {
@@ -91,6 +99,7 @@ impl Scenario {
             Scenario::KillRecover4 => "kill-recover-4",
             Scenario::DtnOffload4 => "dtn-offload-4",
             Scenario::CacheAffine4 => "cache-affine-4",
+            Scenario::PetascaleWeek3x2 => "petascale-week-3x2",
         }
     }
 
@@ -182,6 +191,26 @@ impl Scenario {
                 spec.testbed.dtn_spinning = true;
                 spec
             }
+            Scenario::PetascaleWeek3x2 => {
+                let mut spec =
+                    EngineSpec::paper(TestbedSpec::lan_paper(), ThrottlePolicy::Disabled);
+                // 3 sites × (1 submit node + 2 DTNs + 2 workers): the
+                // contiguous-block partition puts exactly one submit
+                // node, two data nodes and two of lan_paper's six
+                // workers in each site.
+                spec.testbed.n_sites = 3;
+                spec.n_submit_nodes = 3;
+                spec.n_data_nodes = 6;
+                spec.source = SourcePlan::DedicatedDtn;
+                // Round-robin over sites fills every matrix cell — the
+                // Petascale benchmark measured all pairs, not just the
+                // local diagonal.
+                spec.site_selector = SiteSelector::RoundRobin;
+                spec.router = RouterPolicy::RoundRobin;
+                spec.policy = AdmissionConfig::FairShare { limit: 200 };
+                spec.n_owners = 3;
+                spec
+            }
         }
     }
 
@@ -200,7 +229,8 @@ impl Scenario {
             | Scenario::Hetero25100
             | Scenario::KillRecover4
             | Scenario::DtnOffload4
-            | Scenario::CacheAffine4 => None,
+            | Scenario::CacheAffine4
+            | Scenario::PetascaleWeek3x2 => None,
         }
     }
 
@@ -216,7 +246,8 @@ impl Scenario {
             | Scenario::Hetero25100
             | Scenario::KillRecover4
             | Scenario::DtnOffload4
-            | Scenario::CacheAffine4 => None,
+            | Scenario::CacheAffine4
+            | Scenario::PetascaleWeek3x2 => None,
         }
     }
 }
@@ -321,6 +352,17 @@ pub struct Report {
     /// Which-DTN selection-strategy label (`round-robin` /
     /// `cache-aware` / `owner-affinity` / `weighted-by-capacity`).
     pub source_selector: String,
+    /// Sites in the federation (1 = unfederated pool).
+    pub n_sites: usize,
+    /// Which-site selection-strategy label (`local-first` /
+    /// `cache-aware` / `round-robin`; only meaningful with
+    /// `n_sites > 1`).
+    pub site_selector: String,
+    /// Site×site goodput matrix: `site_matrix_bytes[src][dst]` is the
+    /// input payload bytes served by a site-`src` source (funnel or
+    /// DTN) to a site-`dst` worker. Always `n_sites × n_sites`; a 1×1
+    /// total on unfederated runs.
+    pub site_matrix_bytes: Vec<Vec<u64>>,
     /// DTN storage-cache accounting summed over the fleet: reads served
     /// from page cache vs the (slower) device. (0, 0) with no fleet.
     pub dtn_cache_hits: u64,
@@ -395,6 +437,9 @@ impl Report {
             n_data_nodes: r.dtn_monitors.len(),
             source_plan: spec.source.label(),
             source_selector: spec.source_selector.label().to_string(),
+            n_sites: r.site_matrix.len().max(1),
+            site_selector: spec.site_selector.label().to_string(),
+            site_matrix_bytes: r.site_matrix,
             dtn_cache_hits: r.dtn_cache_hits,
             dtn_cache_misses: r.dtn_cache_misses,
             mover: r.mover,
@@ -431,6 +476,42 @@ impl Report {
     /// Render the Fig. 1/2-style ASCII monitor chart.
     pub fn figure(&self, cap_gbps: f64) -> String {
         self.series_5min.ascii_chart(48, Gbps(cap_gbps))
+    }
+
+    /// Bytes that crossed the WAN: every off-diagonal cell of the
+    /// site×site matrix (0 on unfederated runs).
+    pub fn cross_site_bytes(&self) -> u64 {
+        self.site_matrix_bytes
+            .iter()
+            .enumerate()
+            .flat_map(|(s, row)| {
+                row.iter()
+                    .enumerate()
+                    .filter(move |(d, _)| *d != s)
+                    .map(|(_, b)| *b)
+            })
+            .sum()
+    }
+
+    /// The site×site goodput matrix as JSON (the `site_matrix` object
+    /// documented in docs/REPORTS.md) — what the `wan_federation` bench
+    /// writes under `BENCH_REPORT_DIR`.
+    pub fn site_matrix_json(&self) -> String {
+        let rows: Vec<String> = self
+            .site_matrix_bytes
+            .iter()
+            .map(|row| {
+                let cells: Vec<String> = row.iter().map(|b| b.to_string()).collect();
+                format!("[{}]", cells.join(","))
+            })
+            .collect();
+        format!(
+            "{{\"n_sites\":{},\"site_selector\":\"{}\",\"matrix_bytes\":[{}],\"cross_site_bytes\":{}}}",
+            self.n_sites,
+            self.site_selector,
+            rows.join(","),
+            self.cross_site_bytes()
+        )
     }
 }
 
@@ -488,7 +569,7 @@ mod tests {
         assert_eq!(kr.n_submit_nodes, 4);
         assert_eq!(kr.faults.events.len(), 2);
         assert_eq!(kr.faults.steal_threshold, Some(4));
-        assert!(kr.faults.validate(4, 0).is_ok());
+        assert!(kr.faults.validate(4, 0, 1).is_ok());
 
         let dtn = Scenario::DtnOffload4.spec();
         assert_eq!(dtn.n_data_nodes, 4);
@@ -505,6 +586,16 @@ mod tests {
             2 * ca.input_bytes.0,
             "each node caches exactly its 2 staged extents"
         );
+
+        let pw = Scenario::PetascaleWeek3x2.spec();
+        assert_eq!(pw.testbed.n_sites, 3);
+        assert_eq!(pw.n_submit_nodes, 3, "one submit node per site");
+        assert_eq!(pw.n_data_nodes, 6, "two DTNs per site");
+        assert_eq!(pw.testbed.workers.len(), 6, "two worker hosts per site");
+        assert_eq!(pw.source, SourcePlan::DedicatedDtn);
+        assert_eq!(pw.site_selector, SiteSelector::RoundRobin);
+        assert_eq!(pw.policy, AdmissionConfig::FairShare { limit: 200 });
+        assert_eq!(pw.n_owners, 3, "one benchmark owner per site");
     }
 
     /// The tentpole calibration: on a warm-extent burst (every extent
@@ -729,6 +820,61 @@ mod tests {
             assert!((a - b).abs() < 1e-6, "bin mismatch: {a} vs {b}");
         }
         assert_eq!(report.router.routed_per_node.iter().sum::<u64>(), 40);
+    }
+
+    /// The federated scenario's report carries the full site×site
+    /// goodput matrix: every site sources bytes (round-robin site
+    /// selection), every site receives bytes (more jobs than slots, so
+    /// all six workers run), cells sum to the burst's payload bytes,
+    /// and the JSON rendering round-trips the shape.
+    #[test]
+    fn petascale_report_carries_the_site_matrix() {
+        let mut spec = Scenario::PetascaleWeek3x2.spec();
+        spec.n_jobs = 54;
+        spec.input_bytes = Bytes(50_000_000);
+        spec.testbed.monitor_bin = SimTime::from_secs(5);
+        // 4 slots per worker: 54 jobs over 24 slots keeps every worker
+        // (so every destination site) busy.
+        for w in spec.testbed.workers.iter_mut() {
+            w.slots = 4;
+        }
+        let report = Experiment::custom("petascale-smoke", spec).run().unwrap();
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.n_sites, 3);
+        assert_eq!(report.site_selector, "round-robin");
+        assert_eq!(report.site_matrix_bytes.len(), 3);
+        assert!(report.site_matrix_bytes.iter().all(|row| row.len() == 3));
+        let total: u64 = report.site_matrix_bytes.iter().flatten().sum();
+        assert_eq!(total, 54 * 50_000_000, "every input byte lands in a cell");
+        for s in 0..3 {
+            let row: u64 = report.site_matrix_bytes[s].iter().sum();
+            assert!(row > 0, "site {s} sourced nothing under round-robin");
+            let col: u64 = report.site_matrix_bytes.iter().map(|r| r[s]).sum();
+            assert!(col > 0, "site {s} received nothing");
+        }
+        assert!(report.cross_site_bytes() > 0, "round-robin must cross the WAN");
+        assert!(report.cross_site_bytes() < total, "diagonal carries bytes too");
+        let json = report.site_matrix_json();
+        assert!(json.contains("\"n_sites\":3"));
+        assert!(json.contains("\"site_selector\":\"round-robin\""));
+        assert!(json.contains(&format!(
+            "\"cross_site_bytes\":{}",
+            report.cross_site_bytes()
+        )));
+    }
+
+    /// Unfederated reports collapse to a 1×1 matrix holding the whole
+    /// burst — no site machinery leaks into single-site runs.
+    #[test]
+    fn unfederated_report_has_one_by_one_matrix() {
+        let mut spec = Scenario::LanPaper.spec();
+        spec.n_jobs = 20;
+        spec.input_bytes = Bytes(50_000_000);
+        spec.testbed.monitor_bin = SimTime::from_secs(5);
+        let report = Experiment::custom("single-site", spec).run().unwrap();
+        assert_eq!(report.n_sites, 1);
+        assert_eq!(report.site_matrix_bytes, vec![vec![20 * 50_000_000u64]]);
+        assert_eq!(report.cross_site_bytes(), 0);
     }
 
     #[test]

@@ -25,12 +25,24 @@
 //! per worker. CI enforces the band in `calibration_within_band`
 //! (tier 1, small burst) and `calibration_within_band_heavy`
 //! (`--ignored` chaos tier, paper-shaped burst).
+//!
+//! ## Site×site matrix calibration
+//!
+//! [`run_site_calibration`] extends the harness to the federation
+//! layer: the real leg runs a federated loopback pool (one submit node
+//! + one DTN + equal workers per site, round-robin site selection) and
+//! the sim leg mirrors it with zero-cost WAN links — loopback has no
+//! real WAN, so the comparison isolates the *routing and accounting*
+//! path, not propagation. Both legs report the same site×site goodput
+//! matrix shape; the band applies to aggregate goodput and to each
+//! source site's row sum (tier 1), and per-pair cells in the chaos
+//! tier (`site_calibration_per_pair_within_band`).
 
 use anyhow::{ensure, Result};
 
 use super::{run_real_pool, RealPoolConfig};
 use crate::coordinator::engine::{Engine, EngineSpec};
-use crate::mover::AdmissionConfig;
+use crate::mover::{AdmissionConfig, SiteSelector, SourcePlan};
 use crate::netsim::solver::SolverKind;
 use crate::netsim::topology::{TestbedSpec, WorkerSpec};
 use crate::transfer::ThrottlePolicy;
@@ -238,6 +250,191 @@ pub fn run_calibration(cfg: &CalibrationConfig) -> Result<SolverCalibration> {
     })
 }
 
+/// The federated sim-vs-real comparison: one measured federated
+/// loopback burst and its sim mirror, each reporting the same
+/// site×site goodput matrix.
+#[derive(Debug, Clone)]
+pub struct SiteCalibration {
+    pub n_sites: usize,
+    pub n_jobs: u32,
+    pub input_bytes: u64,
+    /// Measured aggregate loopback goodput in Gbps.
+    pub real_gbps: f64,
+    /// Sim-mirror aggregate goodput in Gbps.
+    pub sim_gbps: f64,
+    /// `sim_gbps / real_gbps` — the aggregate band check.
+    pub ratio: f64,
+    /// The real leg's site×site payload matrix
+    /// ([`super::RealPoolReport::site_matrix_bytes`]).
+    pub real_matrix: Vec<Vec<u64>>,
+    /// The sim leg's site×site payload matrix
+    /// (`EngineResult::site_matrix`).
+    pub sim_matrix: Vec<Vec<u64>>,
+}
+
+impl SiteCalibration {
+    /// Per-source-site row-sum ratios, sim over real: how similarly the
+    /// two fabrics split the burst across source sites. Both totals are
+    /// the same burst, so 1.0 is a perfect split match.
+    pub fn row_ratios(&self) -> Vec<f64> {
+        (0..self.n_sites)
+            .map(|s| {
+                let real: u64 = self.real_matrix[s].iter().sum();
+                let sim: u64 = self.sim_matrix[s].iter().sum();
+                sim as f64 / (real as f64).max(1e-9)
+            })
+            .collect()
+    }
+
+    /// Per-pair cell ratios, sim over real, row-major. Cells empty on
+    /// BOTH legs ratio to exactly 1.0; a cell empty on one leg only is
+    /// an infinite/zero ratio and fails any band.
+    pub fn pair_ratios(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.n_sites * self.n_sites);
+        for s in 0..self.n_sites {
+            for d in 0..self.n_sites {
+                let real = self.real_matrix[s][d];
+                let sim = self.sim_matrix[s][d];
+                if real == 0 && sim == 0 {
+                    out.push(1.0);
+                } else {
+                    out.push(sim as f64 / (real as f64).max(1e-9));
+                }
+            }
+        }
+        out
+    }
+
+    /// True when the aggregate goodput ratio AND every source site's
+    /// row-sum ratio land inside the factor-`band` band.
+    pub fn within_band(&self, band: f64) -> bool {
+        let ok = |r: f64| r >= 1.0 / band && r <= band;
+        ok(self.ratio) && self.row_ratios().iter().all(|&r| ok(r))
+    }
+
+    /// Machine-readable record for CI artifacts (hand-assembled — no
+    /// serde in tree). Schema documented in docs/REPORTS.md.
+    pub fn to_json(&self) -> String {
+        let matrix = |m: &[Vec<u64>]| -> String {
+            let rows: Vec<String> = m
+                .iter()
+                .map(|row| {
+                    let cells: Vec<String> = row.iter().map(|b| b.to_string()).collect();
+                    format!("[{}]", cells.join(","))
+                })
+                .collect();
+            format!("[{}]", rows.join(","))
+        };
+        let rows: Vec<String> = self.row_ratios().iter().map(|r| format!("{r:.6}")).collect();
+        format!(
+            "{{\"n_sites\":{},\"burst\":{{\"jobs\":{},\"input_bytes\":{}}},\
+             \"real\":{{\"gbps\":{:.6},\"matrix_bytes\":{}}},\
+             \"sim\":{{\"gbps\":{:.6},\"ratio\":{:.6},\"matrix_bytes\":{}}},\
+             \"row_ratios\":[{}]}}",
+            self.n_sites,
+            self.n_jobs,
+            self.input_bytes,
+            self.real_gbps,
+            matrix(&self.real_matrix),
+            self.sim_gbps,
+            self.ratio,
+            matrix(&self.sim_matrix),
+            rows.join(",")
+        )
+    }
+}
+
+/// Run the federated harness over `n_sites` sites (each with one
+/// submit node, one DTN and an equal worker share): measure one real
+/// federated loopback burst, replay its sim mirror, and return both
+/// site×site matrices with their ratios.
+pub fn run_site_calibration(cfg: &CalibrationConfig, n_sites: usize) -> Result<SiteCalibration> {
+    ensure!(n_sites >= 2, "site calibration needs a federation (n_sites >= 2)");
+    let n_sites_u = n_sites as u32;
+    // Round workers up to a multiple of the site count so every site
+    // hosts the same number of destination threads.
+    let workers = cfg.workers.max(1).div_ceil(n_sites_u) * n_sites_u;
+    let real = run_real_pool(RealPoolConfig {
+        n_jobs: cfg.n_jobs,
+        workers,
+        input_bytes: cfg.input_bytes,
+        output_bytes: 512,
+        use_xla_engine: cfg.use_xla_engine,
+        passphrase: "calibrate-sites".into(),
+        policy: AdmissionConfig::Throttle(ThrottlePolicy::Disabled),
+        n_submit_nodes: n_sites_u,
+        data_nodes: n_sites_u,
+        source: SourcePlan::DedicatedDtn,
+        n_sites,
+        // Round-robin fills every source row deterministically — the
+        // transfer-matrix shape of the Petascale DTN benchmark.
+        site_selector: SiteSelector::RoundRobin,
+        ..RealPoolConfig::default()
+    })?;
+    ensure!(
+        real.errors == 0 && real.jobs_completed == cfg.n_jobs,
+        "real federated burst failed: {}/{} jobs, {} errors",
+        real.jobs_completed,
+        cfg.n_jobs,
+        real.errors
+    );
+    let median_s = real.transfer_secs.median().max(1e-9);
+    let real_stream_bps = cfg.input_bytes as f64 / median_s;
+
+    // The sim mirror: same federation shape, endpoint ceiling pinned to
+    // the measured loopback rate, and FREE WAN links (zero RTT, no
+    // loss, full rate) because the real leg's "WAN" is the same
+    // loopback device — the matrix comparison calibrates routing and
+    // accounting, not propagation.
+    let mut tb = TestbedSpec::lan_paper();
+    tb.n_sites = n_sites_u;
+    tb.site_wan_gbps = 100.0;
+    tb.site_wan_rtt_ms = 0.0;
+    tb.site_wan_loss = 0.0;
+    tb.workers = (0..n_sites)
+        .map(|_| WorkerSpec {
+            nic_gbps: 100.0,
+            slots: workers / n_sites_u,
+        })
+        .collect();
+    tb.monitor_bin = SimTime::from_secs(1);
+    tb.endpoint_bps = Some(real_stream_bps);
+    let mut spec = EngineSpec::paper(tb, ThrottlePolicy::Disabled);
+    spec.n_jobs = cfg.n_jobs;
+    spec.input_bytes = Bytes(cfg.input_bytes as u64);
+    spec.output_bytes = Bytes(512);
+    spec.runtime_median_s = 0.0;
+    spec.seed = cfg.seed;
+    spec.n_submit_nodes = n_sites_u;
+    spec.n_data_nodes = n_sites_u;
+    spec.source = SourcePlan::DedicatedDtn;
+    spec.site_selector = SiteSelector::RoundRobin;
+    let result = Engine::new(spec).run()?;
+    ensure!(
+        result.schedd.completed_count() == cfg.n_jobs as usize,
+        "sim mirror completed {}/{} jobs",
+        result.schedd.completed_count(),
+        cfg.n_jobs
+    );
+    let makespan_s = result
+        .schedd
+        .makespan()
+        .unwrap_or(SimTime::ZERO)
+        .as_secs_f64()
+        .max(1e-9);
+    let sim_gbps = cfg.n_jobs as f64 * cfg.input_bytes as f64 * 8.0 / makespan_s / 1e9;
+    Ok(SiteCalibration {
+        n_sites,
+        n_jobs: cfg.n_jobs,
+        input_bytes: cfg.input_bytes as u64,
+        real_gbps: real.gbps,
+        sim_gbps,
+        ratio: sim_gbps / real.gbps.max(1e-9),
+        real_matrix: real.site_matrix_bytes,
+        sim_matrix: result.site_matrix,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,6 +489,88 @@ mod tests {
             "calibration out of band: {}",
             cal.to_json()
         );
+    }
+
+    /// Tier-1 federation capstone: a small 2-site federated loopback
+    /// burst and its sim mirror report same-shape site×site matrices
+    /// that account for every payload byte, with aggregate goodput and
+    /// every source site's row sum inside the factor-2 band.
+    #[test]
+    fn site_calibration_matrices_within_band() {
+        let cfg = CalibrationConfig {
+            n_jobs: 8,
+            input_bytes: 1 << 20,
+            workers: 2,
+            use_xla_engine: false,
+            seed: 13,
+        };
+        let cal = run_site_calibration(&cfg, 2).unwrap();
+        assert_eq!(cal.n_sites, 2);
+        // Same shape on both legs...
+        assert_eq!(cal.real_matrix.len(), 2);
+        assert!(cal.real_matrix.iter().all(|row| row.len() == 2));
+        assert_eq!(cal.sim_matrix.len(), 2);
+        assert!(cal.sim_matrix.iter().all(|row| row.len() == 2));
+        // ...both accounting for every payload byte of the burst.
+        let burst = 8u64 * (1 << 20);
+        assert_eq!(cal.real_matrix.iter().flatten().sum::<u64>(), burst);
+        assert_eq!(cal.sim_matrix.iter().flatten().sum::<u64>(), burst);
+        // Round-robin splits sources exactly in half on both fabrics,
+        // so each row-sum ratio is exactly 1.0 — well inside the band.
+        for (s, r) in cal.row_ratios().iter().enumerate() {
+            assert!(
+                (0.5..=2.0).contains(r),
+                "source site {s} row-sum ratio {r:.3} out of band\nreal {:?}\nsim {:?}",
+                cal.real_matrix,
+                cal.sim_matrix
+            );
+        }
+        assert!(
+            cal.ratio >= 0.5 && cal.ratio <= 2.0,
+            "aggregate ratio {:.3} out of band (sim {:.3} vs real {:.3} Gbps)",
+            cal.ratio,
+            cal.sim_gbps,
+            cal.real_gbps
+        );
+        assert!(cal.within_band(2.0));
+        let json = cal.to_json();
+        assert!(json.contains("\"n_sites\":2"));
+        assert!(json.contains("\"row_ratios\""));
+        assert!(json.contains("\"matrix_bytes\""));
+    }
+
+    /// Chaos-tier variant: a bigger federated burst where every
+    /// site×site cell carries bytes on both legs, asserted per pair.
+    #[test]
+    #[ignore = "heavier federated loopback burst; run in the chaos tier"]
+    fn site_calibration_per_pair_within_band() {
+        let cfg = CalibrationConfig {
+            n_jobs: 96,
+            input_bytes: 2 << 20,
+            workers: 4,
+            use_xla_engine: false,
+            seed: 17,
+        };
+        let cal = run_site_calibration(&cfg, 2).unwrap();
+        assert!(
+            cal.real_matrix.iter().flatten().all(|&b| b > 0),
+            "real leg left a matrix cell empty: {:?}",
+            cal.real_matrix
+        );
+        assert!(
+            cal.sim_matrix.iter().flatten().all(|&b| b > 0),
+            "sim leg left a matrix cell empty: {:?}",
+            cal.sim_matrix
+        );
+        for (i, r) in cal.pair_ratios().iter().enumerate() {
+            assert!(
+                (0.5..=2.0).contains(r),
+                "pair cell {i} ratio {r:.3} out of band\nreal {:?}\nsim {:?}",
+                cal.real_matrix,
+                cal.sim_matrix
+            );
+        }
+        assert!(cal.within_band(2.0), "out of band: {}", cal.to_json());
     }
 
     /// Both solver points are addressable by kind, and the TcpDynamic

@@ -10,7 +10,10 @@
 pub mod calibrate;
 pub mod tcp;
 
-pub use calibrate::{run_calibration, CalibrationConfig, SolverCalibration, SolverPoint};
+pub use calibrate::{
+    run_calibration, run_site_calibration, CalibrationConfig, SiteCalibration, SolverCalibration,
+    SolverPoint,
+};
 pub use tcp::{
     run_real_pool, run_real_pool_router, run_real_pool_with, run_real_task, ChunkProposal,
     FileServer, RealPoolConfig, RealPoolReport, RealTaskConfig, RealTaskReport, ServerRole,

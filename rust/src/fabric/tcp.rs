@@ -28,7 +28,7 @@ use crate::mover::chaos::{apply_to_router, ChaosTimeline, FaultEvent, FaultPlan}
 use crate::mover::task::{synth_file_bytes, TaskProgress, TaskRunner, TunerSample};
 use crate::mover::{
     AdmissionConfig, DataSource, MoverStats, PoolRouter, Routed, RouterConfig, RouterPolicy,
-    RouterStats, ShadowPool, SourcePlan, SourceSelector, TransferRequest,
+    RouterStats, ShadowPool, SiteSelector, SourcePlan, SourceSelector, TransferRequest,
 };
 use crate::runtime::engine::{NativeEngine, SealEngine};
 use crate::runtime::service::{EngineHandle, EngineService};
@@ -40,7 +40,7 @@ use crate::transfer::stream::{
     StreamOpts, StreamStats, MAX_WIRE_CHUNK_WORDS, V1, V2,
 };
 use crate::transfer::ThrottlePolicy;
-use crate::util::{OnlineStats, Prng};
+use crate::util::{site_of_member, OnlineStats, Prng};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -574,6 +574,15 @@ pub struct RealPoolConfig {
     /// simulator takes: round-robin / cache-aware / owner-affinity /
     /// weighted-by-capacity).
     pub source_selector: SourceSelector,
+    /// Federation sites (1 = unfederated): the submit fleet, DTN fleet
+    /// and workers partition into `n_sites` contiguous blocks
+    /// ([`site_of_member`], the same partition the simulator builds),
+    /// and routing goes two-level — a [`SiteSelector`] picks the source
+    /// site, then `source_selector` picks the endpoint within it.
+    pub n_sites: usize,
+    /// Which-site selection strategy (the `SITE_SELECTOR` knob:
+    /// local-first / cache-aware / round-robin).
+    pub site_selector: SiteSelector,
     /// Per-DTN admission budget: max concurrent transfers one data node
     /// serves (0 = unlimited). A saturated DTN defers placements to its
     /// peers and overflows to the funnel when the whole fleet is full.
@@ -617,6 +626,8 @@ impl Default for RealPoolConfig {
             data_nodes: 0,
             source: SourcePlan::SubmitFunnel,
             source_selector: SourceSelector::RoundRobin,
+            n_sites: 1,
+            site_selector: SiteSelector::LocalFirst,
             dtn_slots: 0,
             dtn_queue_depth: 0,
             router_shards: crate::mover::DEFAULT_ROUTER_SHARDS,
@@ -667,6 +678,14 @@ pub struct RealPoolReport {
     pub source_plan: String,
     /// Which-DTN selection-strategy label the run executed with.
     pub source_selector: String,
+    /// Federation sites the run executed with (1 = unfederated).
+    pub n_sites: usize,
+    /// Site×site goodput matrix: `site_matrix_bytes[src][dst]` is the
+    /// verified payload bytes a site-`src` endpoint (funnel or DTN)
+    /// served to a site-`dst` worker — the same matrix the simulator's
+    /// `Report` carries, measured from real sockets. Always
+    /// `n_sites × n_sites`; a 1×1 total on unfederated runs.
+    pub site_matrix_bytes: Vec<Vec<u64>>,
     /// Flow-solver label for sim-vs-real joins: the real fabric always
     /// moves bytes over the kernel's actual TCP stack, so this is the
     /// constant `real-tcp` — the calibration harness
@@ -808,6 +827,8 @@ pub fn run_real_pool(cfg: RealPoolConfig) -> Result<RealPoolReport> {
             source_plan: cfg.source,
             dtn_capacity: vec![1.0; cfg.data_nodes as usize],
             source_selector: cfg.source_selector,
+            n_sites: cfg.n_sites.max(1),
+            site_selector: cfg.site_selector,
             dtn_slots: cfg.dtn_slots,
             dtn_queue_depth: cfg.dtn_queue_depth,
             state_shards: cfg.router_shards,
@@ -846,7 +867,8 @@ pub fn run_real_pool_router(
 ) -> Result<(RealPoolReport, PoolRouter)> {
     let pool_key = PoolKey::from_passphrase(&cfg.passphrase);
     router.ensure_engines(shard_engine_factory(cfg.use_xla_engine));
-    if let Err(e) = cfg.faults.validate(router.node_count(), router.dtn_count()) {
+    if let Err(e) = cfg.faults.validate(router.node_count(), router.dtn_count(), router.n_sites())
+    {
         bail!("invalid fault plan: {e}");
     }
     if let Err(e) = router.source_plan().validate(router.dtn_count()) {
@@ -937,7 +959,11 @@ pub fn run_real_pool_router(
     // reach — a SubmitFunnel plan with no DTN-addressed faults — is not
     // spawned at all (no idle listeners or crypto threads).
     let fleet_reachable = router.source_plan().uses_dtns()
-        || cfg.faults.events.iter().any(|e| e.is_dtn());
+        || cfg
+            .faults
+            .events
+            .iter()
+            .any(|e| e.is_dtn() || e.is_site());
     let n_dtns = if fleet_reachable { router.dtn_count() } else { 0 };
     let mut dtn_services: Vec<EngineService> = Vec::new();
     let mut dtn_handles: Vec<Vec<EngineHandle>> = Vec::with_capacity(n_dtns);
@@ -990,6 +1016,10 @@ pub fn run_real_pool_router(
     // answer "where is my ticket now?" probes through one shard lock
     // each instead of re-deriving everything from the router object.
     let state = router.state_handle();
+    // The federation partition, shared with the router and the sim
+    // engine: endpoint i of a fleet of `count` lives in
+    // `site_of_member(i, count, n_sites)`.
+    let n_sites = router.n_sites();
     let gate = Arc::new((
         Mutex::new(GateState {
             router,
@@ -1031,6 +1061,16 @@ pub fn run_real_pool_router(
             std::thread::Builder::new()
                 .name("htcdm-chaos".into())
                 .spawn(move || {
+                    // A site event fans out over the site's contiguous
+                    // member block in every fleet.
+                    let site_nodes = |site: usize| {
+                        (0..n_nodes)
+                            .filter(move |&n| site_of_member(n, n_nodes, n_sites) == site)
+                    };
+                    let site_dtns = |site: usize| {
+                        (0..n_dtns)
+                            .filter(move |&d| site_of_member(d, n_dtns, n_sites) == site)
+                    };
                     for ev in events {
                         // Wait for the event's wall-clock instant; give
                         // up only on events still in the future when the
@@ -1044,7 +1084,17 @@ pub fn run_real_pool_router(
                             std::thread::sleep(std::time::Duration::from_millis(5));
                         }
                         let node = ev.node();
-                        let mut bytes_before = if ev.is_dtn() {
+                        let mut bytes_before = if ev.is_site() {
+                            // A whole site's served total: its funnel
+                            // members plus its DTN members.
+                            let funnel: u64 = site_nodes(node)
+                                .map(|n| served_totals[n].load(Ordering::Relaxed))
+                                .sum();
+                            let dtns: u64 = site_dtns(node)
+                                .map(|d| dtn_served_totals[d].load(Ordering::Relaxed))
+                                .sum();
+                            funnel + dtns
+                        } else if ev.is_dtn() {
                             dtn_served_totals[node].load(Ordering::Relaxed)
                         } else {
                             served_totals[node].load(Ordering::Relaxed)
@@ -1096,6 +1146,58 @@ pub fn run_real_pool_router(
                                 continue;
                             }
                         }
+                        // A recovering site restarts every dead member
+                        // server — funnel nodes and DTNs — BEFORE the
+                        // router un-poisons the site and routes to it
+                        // again (same restart-before-unpoison protocol
+                        // as the single-endpoint recoveries above).
+                        if matches!(ev, FaultEvent::RecoverSite { .. }) {
+                            let mut ok = true;
+                            for n in site_nodes(node) {
+                                let (handles, was_failed) = {
+                                    let (lock, _) = &*gate;
+                                    let g = lock.lock().unwrap();
+                                    (g.router.handles(n), g.router.is_failed(n))
+                                };
+                                if was_failed
+                                    && !restart_server(
+                                        ServerRole::Funnel,
+                                        &files,
+                                        &key,
+                                        handles,
+                                        chunk_words,
+                                        &addrs,
+                                        &servers,
+                                        n,
+                                    )
+                                {
+                                    ok = false;
+                                }
+                            }
+                            for d in site_dtns(node) {
+                                let was_failed = {
+                                    let (lock, _) = &*gate;
+                                    lock.lock().unwrap().router.is_dtn_failed(d)
+                                };
+                                if was_failed
+                                    && !restart_server(
+                                        ServerRole::Dtn,
+                                        &files,
+                                        &key,
+                                        dtn_handles[d].clone(),
+                                        chunk_words,
+                                        &dtn_addrs,
+                                        &dtn_servers,
+                                        d,
+                                    )
+                                {
+                                    ok = false;
+                                }
+                            }
+                            if !ok {
+                                continue;
+                            }
+                        }
                         // Router-side half, shared verbatim with the sim
                         // engine: poison/drain/re-source, un-poison, or
                         // re-rate, plus threshold work-stealing.
@@ -1126,6 +1228,24 @@ pub fn run_real_pool_router(
                                 node,
                             );
                         }
+                        // A killed site crashes every member server,
+                        // DTNs first (they carry the payload), after the
+                        // router has already poisoned the whole site and
+                        // re-sourced its in-flight tickets.
+                        if matches!(ev, FaultEvent::KillSite { .. }) {
+                            for d in site_dtns(node) {
+                                bytes_before += crash_server(
+                                    &dtn_servers,
+                                    &dtn_served_totals,
+                                    &dtn_wire_totals,
+                                    d,
+                                );
+                            }
+                            for n in site_nodes(node) {
+                                bytes_before +=
+                                    crash_server(&servers, &served_totals, &wire_totals, n);
+                            }
+                        }
                         chaos_log.lock().unwrap().record(
                             node,
                             ev.label(),
@@ -1142,6 +1262,11 @@ pub fn run_real_pool_router(
 
     // (times, payload bytes, wire bytes, errors)
     let stats = Arc::new(Mutex::new((OnlineStats::new(), 0u64, 0u64, 0u32)));
+    // The site×site goodput matrix, flat row-major (src × n_sites +
+    // dst), accumulated lock-free by workers as their transfers verify.
+    let site_matrix: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n_sites * n_sites).map(|_| AtomicU64::new(0)).collect());
+    let n_workers = cfg.workers.max(1) as usize;
     let mut worker_threads = Vec::new();
     for w in 0..cfg.workers {
         let queue = queue.clone();
@@ -1154,6 +1279,11 @@ pub fn run_real_pool_router(
         let addrs = addrs.clone();
         let dtn_addrs = dtn_addrs.clone();
         let out_bytes = cfg.output_bytes;
+        let site_matrix = site_matrix.clone();
+        // The worker fleet partitions into sites exactly like the
+        // endpoint fleets: worker w is site_of_member(w, workers, sites)
+        // — the destination row of every byte it pulls.
+        let worker_site = site_of_member(w as usize, n_workers, n_sites);
         worker_threads.push(std::thread::spawn(move || {
             let mut rng = Prng::new(0xBEEF_0000 + w as u64);
             let output = vec![0xA5u8; out_bytes];
@@ -1330,6 +1460,17 @@ pub fn run_real_pool_router(
 
                 match result {
                     Ok((st, secs)) => {
+                        // `routed` is the placement the successful
+                        // attempt actually fetched from (retries update
+                        // it), so its source names the serving site.
+                        let src_site = match routed.source {
+                            DataSource::Funnel { node } => {
+                                site_of_member(node, n_nodes, n_sites)
+                            }
+                            DataSource::Dtn { dtn } => site_of_member(dtn, n_dtns, n_sites),
+                        };
+                        site_matrix[src_site * n_sites + worker_site]
+                            .fetch_add(st.payload_bytes, Ordering::Relaxed);
                         let mut s = stats.lock().unwrap();
                         s.0.push(secs);
                         s.1 += st.payload_bytes;
@@ -1387,6 +1528,14 @@ pub fn run_real_pool_router(
         mover: router.stats(),
         source_plan: router.source_plan().label(),
         source_selector: router.source_selector().label().to_string(),
+        n_sites,
+        site_matrix_bytes: (0..n_sites)
+            .map(|s| {
+                (0..n_sites)
+                    .map(|d| site_matrix[s * n_sites + d].load(Ordering::Relaxed))
+                    .collect()
+            })
+            .collect(),
         solver: "real-tcp".to_string(),
         router: router.router_stats(),
         bytes_served_per_node,
@@ -1865,6 +2014,8 @@ mod tests {
             data_nodes: 0,
             source: SourcePlan::SubmitFunnel,
             source_selector: SourceSelector::RoundRobin,
+            n_sites: 1,
+            site_selector: SiteSelector::LocalFirst,
             dtn_slots: 0,
             dtn_queue_depth: 0,
             router_shards: crate::mover::DEFAULT_ROUTER_SHARDS,
@@ -1894,6 +2045,38 @@ mod tests {
         assert_eq!(r.transfer_secs.count(), 8);
         assert_eq!(r.mover.total_admitted, 8);
         assert_eq!(r.mover.released_without_active, 0);
+        // Unfederated: the matrix collapses to a 1×1 total.
+        assert_eq!(r.n_sites, 1);
+        assert_eq!(r.site_matrix_bytes, vec![vec![8 * (256 << 10) as u64]]);
+    }
+
+    #[test]
+    fn real_pool_federated_site_matrix_accounts_every_byte() {
+        // 2 sites × (1 submit node + 1 DTN), round-robin site selection:
+        // each site sources half the burst, and every verified payload
+        // byte lands in exactly one site×site cell.
+        let mut cfg = base_cfg();
+        cfg.n_submit_nodes = 2;
+        cfg.data_nodes = 2;
+        cfg.source = SourcePlan::DedicatedDtn;
+        cfg.n_sites = 2;
+        cfg.site_selector = SiteSelector::RoundRobin;
+        cfg.workers = 2;
+        let r = run_real_pool(cfg).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.jobs_completed, 8);
+        assert_eq!(r.n_sites, 2);
+        assert_eq!(r.site_matrix_bytes.len(), 2);
+        assert!(r.site_matrix_bytes.iter().all(|row| row.len() == 2));
+        let total: u64 = r.site_matrix_bytes.iter().flatten().sum();
+        assert_eq!(total, 8 * (256 << 10) as u64, "every byte in some cell");
+        for s in 0..2 {
+            assert!(
+                r.site_matrix_bytes[s].iter().sum::<u64>() > 0,
+                "site {s} sourced nothing under round-robin: {:?}",
+                r.site_matrix_bytes
+            );
+        }
     }
 
     #[test]

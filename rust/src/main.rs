@@ -26,7 +26,7 @@ fn usage() -> ! {
          commands:\n\
            experiment <fig1-lan|fig2-wan|wan-tcp|queue-default|vpn-overlay|fair-share|\n\
                        sharded-4|multi-submit-4|hetero-25-100|kill-recover-4|\n\
-                       dtn-offload-4|cache-affine-4>\n\
+                       dtn-offload-4|cache-affine-4|petascale-week-3x2>\n\
                       [--scale N] [--csv FILE] [--config FILE]\n\
                       [--solver fair-share|tcp-dynamic]\n\
                       run a paper experiment on the simulated testbed;\n\
@@ -40,7 +40,8 @@ fn usage() -> ! {
                       DTN_MAX_CONCURRENT, DTN_QUEUE_DEPTH, N_EXTENTS,\n\
                       ROUTER_SHARDS, CYCLE_SIZE, FAULT_PLAN,\n\
                       STEAL_THRESHOLD, RECOVERY_RAMP, SOLVER,\n\
-                      LINK_RTT_MS, LINK_LOSS...;\n\
+                      LINK_RTT_MS, LINK_LOSS, N_SITES, SITE_WAN_GBPS,\n\
+                      SITE_WAN_RTT_MS, SITE_WAN_LOSS, SITE_SELECTOR...;\n\
                       docs/KNOBS.md is the full reference)\n\
            pool       [--jobs N] [--workers W] [--mb SIZE] [--native]\n\
                       [--shadows N] [--policy disabled|disk-load|max-concurrent|fair-share|weighted-by-size]\n\
@@ -50,6 +51,7 @@ fn usage() -> ! {
                       [--source-selector round-robin|cache-aware|owner-affinity|weighted-by-capacity]\n\
                       [--dtn-cap N] [--dtn-queue N] [--router-shards K]\n\
                       [--cycle N] [--fault PLAN] [--steal N] [--ramp N]\n\
+                      [--sites N] [--site-selector local-first|cache-aware|round-robin]\n\
                       run a real-mode loopback pool (sealed bytes via PJRT);\n\
                       --submit-nodes > 1 runs one file server per submit node\n\
                       behind the pool router; --data-nodes N serves bytes\n\
@@ -61,9 +63,13 @@ fn usage() -> ! {
                       (identical decisions, less lock contention) and\n\
                       --cycle N batches admission in N-request cycles;\n\
                       --fault injects chaos, e.g. 'kill:1@0.5; recover:1@2;\n\
-                      kill:d0@1' (wall-clock seconds, dN = data node), with\n\
-                      --steal N enabling work-stealing past an N-deep\n\
-                      queue imbalance and --ramp N hysteretic recovery\n\
+                      kill:d0@1; kill:s0@2' (wall-clock seconds, dN = data\n\
+                      node, sN = whole site), with --steal N enabling\n\
+                      work-stealing past an N-deep queue imbalance and\n\
+                      --ramp N hysteretic recovery; --sites N federates\n\
+                      the submit/DTN fleets into N sites and\n\
+                      --site-selector picks the source site before the\n\
+                      in-site selector runs\n\
            task       [--files N] [--mb SIZE] [--name NAME] [--owner NAME]\n\
                       [--task-dir DIR] [--rate-mbps R] [--deadline-s S]\n\
                       [--autotune] [--concurrency N] [--workers W] [--sim]\n\
@@ -126,6 +132,7 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
         Some("kill-recover-4") => Scenario::KillRecover4,
         Some("dtn-offload-4") => Scenario::DtnOffload4,
         Some("cache-affine-4") => Scenario::CacheAffine4,
+        Some("petascale-week-3x2") => Scenario::PetascaleWeek3x2,
         _ => usage(),
     };
     let scale: u32 = arg_value(args, "--scale")
@@ -191,6 +198,23 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
                 .per_node_series
                 .iter()
                 .map(|s| (s.total_bytes() / 1e9 * 10.0).round() / 10.0)
+                .collect::<Vec<_>>()
+        );
+    }
+    if report.n_sites > 1 {
+        println!(
+            "federation: {} site(s) by {} | cross-site GB {:.1} | site×site GB {:?}",
+            report.n_sites,
+            report.site_selector,
+            report.cross_site_bytes() as f64 / 1e9,
+            report
+                .site_matrix_bytes
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .map(|b| (*b as f64 / 1e9 * 10.0).round() / 10.0)
+                        .collect::<Vec<_>>()
+                })
                 .collect::<Vec<_>>()
         );
     }
@@ -263,6 +287,13 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
             usage()
         }),
     };
+    let site_selector = match arg_value(args, "--site-selector") {
+        None => htcdm::mover::SiteSelector::LocalFirst,
+        Some(name) => htcdm::mover::SiteSelector::parse(&name).unwrap_or_else(|| {
+            eprintln!("unknown --site-selector '{name}'");
+            usage()
+        }),
+    };
     let cfg = RealPoolConfig {
         n_jobs: arg_value(args, "--jobs").map(|v| v.parse().unwrap()).unwrap_or(40),
         workers: arg_value(args, "--workers").map(|v| v.parse().unwrap()).unwrap_or(4),
@@ -303,6 +334,10 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
             .map(|v| v.parse().expect("--cycle N"))
             .unwrap_or(0),
         faults,
+        n_sites: arg_value(args, "--sites")
+            .map(|v| v.parse().expect("--sites N"))
+            .unwrap_or(1),
+        site_selector,
         ..Default::default()
     };
     eprintln!(
@@ -361,6 +396,16 @@ fn cmd_pool(args: &[String]) -> anyhow::Result<()> {
                 .map(|b| b >> 20)
                 .collect::<Vec<_>>(),
             r.router.dtn_failed
+        );
+    }
+    if r.n_sites > 1 {
+        println!(
+            "federation: {} site(s) | site×site MiB {:?}",
+            r.n_sites,
+            r.site_matrix_bytes
+                .iter()
+                .map(|row| row.iter().map(|b| b >> 20).collect::<Vec<_>>())
+                .collect::<Vec<_>>()
         );
     }
     if !r.chaos.is_empty() {

@@ -68,6 +68,15 @@ pub enum FaultEvent {
     RecoverDtn { dtn: usize, at: f64 },
     /// The data node's NIC degrades to `gbps` (nominal).
     DegradeDtnNic { dtn: usize, at: f64, gbps: f64 },
+    /// A whole federation site goes dark (border-link cut, spelled `sN`
+    /// in plan text): every one of its data nodes AND submit nodes
+    /// fails in one stroke ([`PoolRouter::fail_site`]) — in-flight
+    /// transfers re-source and re-route onto surviving sites, and the
+    /// sim drains the site's border link like a killed node's NIC.
+    KillSite { site: usize, at: f64 },
+    /// The site's border link and fleets come back
+    /// ([`PoolRouter::recover_site`]).
+    RecoverSite { site: usize, at: f64 },
 }
 
 impl FaultEvent {
@@ -79,12 +88,15 @@ impl FaultEvent {
             | FaultEvent::DegradeNic { at, .. }
             | FaultEvent::KillDtn { at, .. }
             | FaultEvent::RecoverDtn { at, .. }
-            | FaultEvent::DegradeDtnNic { at, .. } => at,
+            | FaultEvent::DegradeDtnNic { at, .. }
+            | FaultEvent::KillSite { at, .. }
+            | FaultEvent::RecoverSite { at, .. } => at,
         }
     }
 
-    /// Index of the node the event targets — a submit node, or a data
-    /// node when [`FaultEvent::is_dtn`] is true.
+    /// Index of the node the event targets — a submit node, a data
+    /// node when [`FaultEvent::is_dtn`] is true, or a federation site
+    /// when [`FaultEvent::is_site`] is true.
     pub fn node(&self) -> usize {
         match *self {
             FaultEvent::KillNode { node, .. }
@@ -93,6 +105,7 @@ impl FaultEvent {
             FaultEvent::KillDtn { dtn, .. }
             | FaultEvent::RecoverDtn { dtn, .. }
             | FaultEvent::DegradeDtnNic { dtn, .. } => dtn,
+            FaultEvent::KillSite { site, .. } | FaultEvent::RecoverSite { site, .. } => site,
         }
     }
 
@@ -106,6 +119,14 @@ impl FaultEvent {
         )
     }
 
+    /// Does the event target a whole federation site?
+    pub fn is_site(&self) -> bool {
+        matches!(
+            self,
+            FaultEvent::KillSite { .. } | FaultEvent::RecoverSite { .. }
+        )
+    }
+
     /// Short action label for timelines and plan text.
     pub fn label(&self) -> &'static str {
         match self {
@@ -115,6 +136,8 @@ impl FaultEvent {
             FaultEvent::KillDtn { .. } => "kill-dtn",
             FaultEvent::RecoverDtn { .. } => "recover-dtn",
             FaultEvent::DegradeDtnNic { .. } => "degrade-dtn",
+            FaultEvent::KillSite { .. } => "kill-site",
+            FaultEvent::RecoverSite { .. } => "recover-site",
         }
     }
 }
@@ -172,6 +195,18 @@ impl FaultPlan {
     /// Append a `DegradeDtnNic` event (builder style).
     pub fn degrade_dtn(mut self, dtn: usize, at: f64, gbps: f64) -> FaultPlan {
         self.events.push(FaultEvent::DegradeDtnNic { dtn, at, gbps });
+        self
+    }
+
+    /// Append a `KillSite` event (builder style).
+    pub fn kill_site(mut self, site: usize, at: f64) -> FaultPlan {
+        self.events.push(FaultEvent::KillSite { site, at });
+        self
+    }
+
+    /// Append a `RecoverSite` event (builder style).
+    pub fn recover_site(mut self, site: usize, at: f64) -> FaultPlan {
+        self.events.push(FaultEvent::RecoverSite { site, at });
         self
     }
 
@@ -237,11 +272,20 @@ impl FaultPlan {
         v
     }
 
-    /// Check every event against the pool shape (submit nodes AND data
-    /// nodes) before running it.
-    pub fn validate(&self, n_nodes: usize, n_dtns: usize) -> Result<(), String> {
+    /// Check every event against the pool shape (submit nodes, data
+    /// nodes AND federation sites) before running it.
+    pub fn validate(&self, n_nodes: usize, n_dtns: usize, n_sites: usize) -> Result<(), String> {
         for ev in &self.events {
-            if ev.is_dtn() {
+            if ev.is_site() {
+                if ev.node() >= n_sites.max(1) {
+                    return Err(format!(
+                        "{} targets site {} but the pool has {} site(s)",
+                        ev.label(),
+                        ev.node(),
+                        n_sites.max(1)
+                    ));
+                }
+            } else if ev.is_dtn() {
                 if ev.node() >= n_dtns {
                     return Err(format!(
                         "{} targets data node {} but the pool has {} data node(s)",
@@ -281,11 +325,19 @@ impl FaultPlan {
     ///
     /// Events are `;`- or `,`-separated; each is `ACTION:NODE@SECONDS`,
     /// with degrade taking a trailing `:GBPS`. A node spelled `dN`
-    /// targets data node N instead of submit node N.
+    /// targets data node N instead of submit node N; `sN` targets
+    /// federation site N (kill/recover only — a site has no single NIC
+    /// to degrade or flap).
     /// `flap:NODE@START:PERIOD:GBPS` expands at parse time into
     /// [`FLAP_CYCLES`] periodic degrade/restore pairs (degrade at each
     /// cycle start, restore half a period later).
     pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        #[derive(Clone, Copy, PartialEq)]
+        enum Target {
+            Node,
+            Dtn,
+            Site,
+        }
         let mut plan = FaultPlan::default();
         for part in text.split([';', ',']) {
             let part = part.trim();
@@ -299,39 +351,53 @@ impl FaultPlan {
                 .split_once('@')
                 .ok_or_else(|| format!("'{part}': expected NODE@SECONDS"))?;
             let node_s = node_s.trim();
-            let (is_dtn, idx_s) = match node_s.strip_prefix(['d', 'D']) {
-                Some(idx) => (true, idx),
-                None => (false, node_s),
+            let (target, idx_s) = if let Some(idx) = node_s.strip_prefix(['d', 'D']) {
+                (Target::Dtn, idx)
+            } else if let Some(idx) = node_s.strip_prefix(['s', 'S']) {
+                (Target::Site, idx)
+            } else {
+                (Target::Node, node_s)
             };
             let node: usize = idx_s
                 .parse()
                 .map_err(|_| format!("'{part}': bad node index '{node_s}'"))?;
-            match (action.trim().to_ascii_lowercase().as_str(), is_dtn) {
-                ("kill", false) => {
+            match (action.trim().to_ascii_lowercase().as_str(), target) {
+                ("kill", Target::Node) => {
                     plan = plan.kill(node, parse_secs(time_s, part)?);
                 }
-                ("kill", true) => {
+                ("kill", Target::Dtn) => {
                     plan = plan.kill_dtn(node, parse_secs(time_s, part)?);
                 }
-                ("recover", false) => {
+                ("kill", Target::Site) => {
+                    plan = plan.kill_site(node, parse_secs(time_s, part)?);
+                }
+                ("recover", Target::Node) => {
                     plan = plan.recover(node, parse_secs(time_s, part)?);
                 }
-                ("recover", true) => {
+                ("recover", Target::Dtn) => {
                     plan = plan.recover_dtn(node, parse_secs(time_s, part)?);
                 }
-                ("degrade", dtn) => {
+                ("recover", Target::Site) => {
+                    plan = plan.recover_site(node, parse_secs(time_s, part)?);
+                }
+                ("degrade" | "flap", Target::Site) => {
+                    return Err(format!(
+                        "'{part}': a site has no single NIC — only kill/recover target sN"
+                    ))
+                }
+                ("degrade", target) => {
                     let (t_s, g_s) = time_s
                         .split_once(':')
                         .ok_or_else(|| format!("'{part}': degrade needs NODE@SECONDS:GBPS"))?;
                     let gbps = parse_gbps(g_s, part)?;
                     let at = parse_secs(t_s, part)?;
-                    plan = if dtn {
+                    plan = if target == Target::Dtn {
                         plan.degrade_dtn(node, at, gbps)
                     } else {
                         plan.degrade(node, at, gbps)
                     };
                 }
-                ("flap", dtn) => {
+                ("flap", target) => {
                     let mut it = time_s.split(':');
                     let t_s = it.next().unwrap_or("");
                     let (p_s, g_s) = match (it.next(), it.next(), it.next()) {
@@ -351,7 +417,7 @@ impl FaultPlan {
                         return Err(format!("'{part}': flap period must be > 0"));
                     }
                     let gbps = parse_gbps(g_s, part)?;
-                    plan = if dtn {
+                    plan = if target == Target::Dtn {
                         plan.flap_dtn(node, at, period, gbps)
                     } else {
                         plan.flap(node, at, period, gbps)
@@ -370,7 +436,7 @@ impl FaultPlan {
             Some(raw) => FaultPlan::parse(raw).map_err(|_| {
                 ConfigError::Type(
                     "FAULT_PLAN".into(),
-                    "fault plan (kill:N@T; recover:N@T; degrade:N@T:GBPS; flap:N@T:PERIOD:GBPS; dN targets data nodes)",
+                    "fault plan (kill:N@T; recover:N@T; degrade:N@T:GBPS; flap:N@T:PERIOD:GBPS; dN targets data nodes, sN whole sites)",
                     raw.to_string(),
                 )
             })?,
@@ -402,6 +468,8 @@ impl FaultPlan {
                 FaultEvent::DegradeDtnNic { dtn, at, gbps } => {
                     format!("degrade:d{dtn}@{at}:{gbps}")
                 }
+                FaultEvent::KillSite { site, at } => format!("kill:s{site}@{at}"),
+                FaultEvent::RecoverSite { site, at } => format!("recover:s{site}@{at}"),
             })
             .collect();
         parts.join("; ")
@@ -467,6 +535,8 @@ pub fn apply_batch(
                 router.set_dtn_capacity(dtn, gbps);
                 Vec::new()
             }
+            FaultEvent::KillSite { site, .. } => router.fail_site(site),
+            FaultEvent::RecoverSite { site, .. } => router.recover_site(site),
         });
     }
     if let Some(threshold) = steal_threshold {
@@ -476,13 +546,14 @@ pub fn apply_batch(
 }
 
 /// One applied fault, for reports. `node` indexes the submit fleet for
-/// plain actions and the DATA fleet for `*-dtn` actions
-/// ([`FaultRecord::is_dtn`] discriminates).
+/// plain actions, the DATA fleet for `*-dtn` actions, and the site list
+/// for `*-site` actions ([`FaultRecord::is_dtn`] /
+/// [`FaultRecord::is_site`] discriminate).
 #[derive(Debug, Clone)]
 pub struct FaultRecord {
     pub node: usize,
-    /// `"kill"` / `"recover"` / `"degrade"` and their `-dtn` variants
-    /// (see [`FaultEvent::label`]).
+    /// `"kill"` / `"recover"` / `"degrade"` and their `-dtn` and
+    /// `-site` variants (see [`FaultEvent::label`]).
     pub action: &'static str,
     /// When the plan scheduled the event (fabric-local seconds).
     pub planned_s: f64,
@@ -502,6 +573,11 @@ impl FaultRecord {
     /// Does this record target a data node (vs a submit node)?
     pub fn is_dtn(&self) -> bool {
         self.action.ends_with("-dtn")
+    }
+
+    /// Does this record target a whole federation site?
+    pub fn is_site(&self) -> bool {
+        self.action.ends_with("-site")
     }
 }
 
@@ -536,12 +612,12 @@ impl ChaosTimeline {
     }
 
     /// Records touching one SUBMIT node, in application order (data-node
-    /// records live in their own index space — see
-    /// [`ChaosTimeline::for_dtn`]).
+    /// and site records live in their own index spaces — see
+    /// [`ChaosTimeline::for_dtn`] / [`ChaosTimeline::for_site`]).
     pub fn for_node(&self, node: usize) -> Vec<&FaultRecord> {
         self.records
             .iter()
-            .filter(|r| !r.is_dtn() && r.node == node)
+            .filter(|r| !r.is_dtn() && !r.is_site() && r.node == node)
             .collect()
     }
 
@@ -550,6 +626,14 @@ impl ChaosTimeline {
         self.records
             .iter()
             .filter(|r| r.is_dtn() && r.node == dtn)
+            .collect()
+    }
+
+    /// Records touching one federation SITE, in application order.
+    pub fn for_site(&self, site: usize) -> Vec<&FaultRecord> {
+        self.records
+            .iter()
+            .filter(|r| r.is_site() && r.node == site)
             .collect()
     }
 
@@ -566,7 +650,13 @@ impl ChaosTimeline {
                 format!(
                     "{} {} {} @{:.2}s (planned {:.2}s): {} re-admitted, {} B served before",
                     r.action,
-                    if r.is_dtn() { "data node" } else { "node" },
+                    if r.is_dtn() {
+                        "data node"
+                    } else if r.is_site() {
+                        "site"
+                    } else {
+                        "node"
+                    },
                     r.node,
                     r.applied_s,
                     r.planned_s,
@@ -610,7 +700,7 @@ mod tests {
         assert!(
             FaultPlan::parse("degrade:1@3:0")
                 .unwrap()
-                .validate(2, 0)
+                .validate(2, 0, 1)
                 .is_err()
         );
         assert!(FaultPlan::parse("flap:1@3:20").is_err(), "flap needs Gbps");
@@ -622,16 +712,16 @@ mod tests {
     #[test]
     fn validate_checks_node_bounds() {
         let plan = FaultPlan::default().kill(3, 1.0);
-        assert!(plan.validate(4, 0).is_ok());
-        assert!(plan.validate(3, 0).is_err());
+        assert!(plan.validate(4, 0, 1).is_ok());
+        assert!(plan.validate(3, 0, 1).is_err());
     }
 
     #[test]
     fn validate_checks_dtn_bounds_separately() {
         // kill:d3 needs 4 DATA nodes, regardless of submit-node count.
         let plan = FaultPlan::default().kill_dtn(3, 1.0);
-        assert!(plan.validate(1, 4).is_ok());
-        assert!(plan.validate(8, 3).is_err());
+        assert!(plan.validate(1, 4, 1).is_ok());
+        assert!(plan.validate(8, 3, 1).is_err());
     }
 
     #[test]
@@ -681,7 +771,7 @@ mod tests {
         // events are already in time order.
         assert_eq!(FaultPlan::parse(&plan.describe()).unwrap(), plan);
         assert_eq!(plan.sorted(), plan.events);
-        assert!(plan.validate(2, 0).is_ok());
+        assert!(plan.validate(2, 0, 1).is_ok());
 
         // The same schedule against a data node.
         let dplan = FaultPlan::parse("flap:d0@0:10:5").unwrap();
@@ -691,8 +781,8 @@ mod tests {
             dplan.events[1],
             FaultEvent::RecoverDtn { dtn: 0, at: 5.0 }
         );
-        assert!(dplan.validate(1, 1).is_ok());
-        assert!(dplan.validate(1, 0).is_err());
+        assert!(dplan.validate(1, 1, 1).is_ok());
+        assert!(dplan.validate(1, 0, 1).is_err());
     }
 
     #[test]
@@ -788,17 +878,93 @@ mod tests {
         tl.record(1, "kill", 30.0, 30.1, 4, 1000);
         tl.record(1, "recover", 90.0, 90.0, 2, 1000);
         tl.record(0, "degrade", 10.0, 10.0, 0, 0);
-        // Data node 1's fault must NOT be conflated with submit node 1.
+        // Data node 1's fault must NOT be conflated with submit node 1,
+        // and neither may site 1's.
         tl.record(1, "kill-dtn", 40.0, 40.0, 3, 500);
+        tl.record(1, "kill-site", 50.0, 50.0, 2, 0);
         assert_eq!(tl.count("kill"), 1);
         assert_eq!(tl.count("kill-dtn"), 1);
+        assert_eq!(tl.count("kill-site"), 1);
         assert_eq!(tl.for_node(1).len(), 2, "submit records only");
         assert_eq!(tl.for_dtn(1).len(), 1);
-        assert!(tl.for_node(1).iter().all(|r| !r.is_dtn()));
+        assert_eq!(tl.for_site(1).len(), 1);
+        assert!(tl.for_node(1).iter().all(|r| !r.is_dtn() && !r.is_site()));
         assert!(!tl.is_empty());
         let text = tl.render();
         assert!(text.contains("kill node 1"), "{text}");
         assert!(text.contains("recover node 1"), "{text}");
         assert!(text.contains("kill-dtn data node 1"), "{text}");
+        assert!(text.contains("kill-site site 1"), "{text}");
+    }
+
+    #[test]
+    fn parse_site_events_roundtrip() {
+        let plan = FaultPlan::parse("kill:s0@30; recover:s0@90").unwrap();
+        assert_eq!(
+            plan.events,
+            vec![
+                FaultEvent::KillSite { site: 0, at: 30.0 },
+                FaultEvent::RecoverSite { site: 0, at: 90.0 },
+            ]
+        );
+        assert!(plan.events.iter().all(|e| e.is_site() && !e.is_dtn()));
+        assert_eq!(plan.events[0].label(), "kill-site");
+        assert_eq!(FaultPlan::parse(&plan.describe()).unwrap(), plan);
+        // A site has no single NIC: degrade/flap reject the `s` prefix.
+        assert!(FaultPlan::parse("degrade:s0@10:25").is_err());
+        assert!(FaultPlan::parse("flap:s1@0:10:5").is_err());
+        assert!(FaultPlan::parse("kill:sx@3").is_err());
+    }
+
+    #[test]
+    fn validate_checks_site_bounds() {
+        let plan = FaultPlan::default().kill_site(1, 5.0).recover_site(1, 9.0);
+        assert!(plan.validate(4, 4, 2).is_ok());
+        assert!(plan.validate(4, 4, 1).is_err());
+    }
+
+    #[test]
+    fn apply_to_router_drives_site_kill_and_recover() {
+        use crate::mover::{
+            DataSource, RouterConfig, ShadowPool, SiteSelector, SourcePlan,
+        };
+        let pools = (0..2)
+            .map(|_| ShadowPool::sim(1, AdmissionConfig::Throttle(ThrottlePolicy::Disabled)))
+            .collect();
+        let mut router = PoolRouter::from_config(
+            pools,
+            vec![1.0, 1.0],
+            RouterPolicy::RoundRobin,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0, 1.0],
+                n_sites: 2,
+                site_selector: SiteSelector::LocalFirst,
+                ..RouterConfig::default()
+            },
+        );
+        // Round-robin lands two transfers on each node; LocalFirst keeps
+        // each node on its own site's data node.
+        for t in 0..4 {
+            router.request(TransferRequest::new(t, "o", 5));
+        }
+        let moved = apply_to_router(&FaultEvent::KillSite { site: 0, at: 1.0 }, &mut router, None);
+        assert_eq!(moved.len(), 2, "site 0's transfers re-route and re-source");
+        assert!(moved
+            .iter()
+            .all(|m| m.node == 1 && m.source == DataSource::Dtn { dtn: 1 }));
+        assert!(router.is_failed(0));
+        assert!(router.is_dtn_failed(0));
+        assert!(!router.is_dtn_failed(1));
+
+        let back = apply_to_router(&FaultEvent::RecoverSite { site: 0, at: 2.0 }, &mut router, None);
+        assert!(back.is_empty(), "nothing was stranded waiting");
+        assert!(!router.is_failed(0));
+        assert!(!router.is_dtn_failed(0));
+        let st = router.router_stats();
+        assert_eq!(st.dtn_failed, 1);
+        assert_eq!(st.dtn_recovered, 1);
+        assert_eq!(router.stats().shard_failed, 1);
+        assert_eq!(router.stats().node_recovered, 1);
     }
 }

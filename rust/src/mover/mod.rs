@@ -72,7 +72,7 @@ pub use policy::{ActiveView, AdmissionConfig, AdmissionPolicy};
 pub use pool::ShadowPool;
 pub use queue::AdmissionQueue;
 pub use router::{PoolRouter, Routed, RouterConfig, RouterPolicy, RouterStats};
-pub use source::{DataSource, SourcePlan, SourceSelector, DEFAULT_DTN_THRESHOLD};
+pub use source::{DataSource, SiteSelector, SourcePlan, SourceSelector, DEFAULT_DTN_THRESHOLD};
 pub use state::{shards_from_config, RouterStateHandle, DEFAULT_ROUTER_SHARDS};
 pub use task::{
     sha256_hex, synth_file_bytes, synth_file_sha256, tuner_json, FileState, TaskJournal,

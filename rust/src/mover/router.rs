@@ -64,13 +64,14 @@
 
 use super::policy::AdmissionConfig;
 use super::pool::ShadowPool;
-use super::source::{DataSource, SourcePlan, SourceSelector};
+use super::source::{DataSource, SiteSelector, SourcePlan, SourceSelector};
 use super::state::{owner_hash, RouterState, RouterStateHandle, DEFAULT_ROUTER_SHARDS};
 use super::{Admitted, DataMover, MoverStats, TransferRequest};
 use crate::config::{Config, ConfigError};
 use crate::runtime::engine::SealEngine;
 use crate::runtime::service::EngineHandle;
 use crate::storage::ExtentId;
+use crate::util::site_of_member;
 use anyhow::Result;
 use std::collections::{BTreeSet, HashMap, HashSet, VecDeque};
 
@@ -100,6 +101,14 @@ pub struct RouterConfig {
     /// Recovery hysteresis: routing decisions over which a recovered
     /// node ramps its weight back to full (0 disables the ramp).
     pub recovery_ramp: u32,
+    /// Federation sites the pool is partitioned into (`N_SITES` knob;
+    /// 1 = the single-facility pool, bit-identical to the pre-site
+    /// router). Submit nodes and DTNs split into contiguous site blocks
+    /// by [`crate::util::site_of_member`].
+    pub n_sites: usize,
+    /// Which-site selection strategy — the first level of two-level
+    /// source selection (`SITE_SELECTOR` knob; inert with one site).
+    pub site_selector: SiteSelector,
 }
 
 impl Default for RouterConfig {
@@ -112,6 +121,8 @@ impl Default for RouterConfig {
             dtn_queue_depth: 0,
             state_shards: DEFAULT_ROUTER_SHARDS,
             recovery_ramp: 0,
+            n_sites: 1,
+            site_selector: SiteSelector::LocalFirst,
         }
     }
 }
@@ -237,6 +248,23 @@ enum Placement {
 struct SourceSel {
     plan: SourcePlan,
     selector: SourceSelector,
+    /// Federation sites the fleet partitions into (1 = single facility;
+    /// site selection is then inert and every decision is bit-identical
+    /// to the pre-site code).
+    n_sites: usize,
+    /// First-level (which-site) selection strategy.
+    site_selector: SiteSelector,
+    /// Site of each data node (contiguous blocks per
+    /// [`crate::util::site_of_member`]).
+    site_of: Vec<usize>,
+    /// Rotation cursor over sites (round-robin site selection); like
+    /// `dtn_cursor` it only advances when a DTN placement actually
+    /// lands, so funnel overflows never skew the site rotation.
+    site_cursor: usize,
+    /// Transient per-decision site mask set by `choose_site` — while
+    /// `Some(s)`, only site `s`'s DTNs are selectable; always `None`
+    /// outside `select` (and with one site).
+    allowed_site: Option<usize>,
     /// Per-DTN down flags (empty with no DTN fleet).
     dtn_down: Vec<bool>,
     /// Cached live-DTN list (ascending), rebuilt on fail/recover — the
@@ -351,6 +379,11 @@ impl SourceSel {
         SourceSel {
             plan: SourcePlan::SubmitFunnel,
             selector: SourceSelector::RoundRobin,
+            n_sites: 1,
+            site_selector: SiteSelector::LocalFirst,
+            site_of: Vec::new(),
+            site_cursor: 0,
+            allowed_site: None,
             dtn_down: Vec::new(),
             dtn_live: Vec::new(),
             dtn_capacity: Vec::new(),
@@ -387,6 +420,88 @@ impl SourceSel {
         self.waitq = vec![VecDeque::new(); n];
         self.routed_per_dtn = vec![0; n];
         self.bytes_per_dtn = vec![0; n];
+        self.site_of = (0..n).map(|d| site_of_member(d, n, self.n_sites)).collect();
+    }
+
+    /// Partition the fleet into `n_sites` contiguous blocks and install
+    /// the first-level selection strategy. Must follow
+    /// [`SourceSel::configure_fleet`] (the partition covers the fleet
+    /// as built).
+    fn set_sites(&mut self, n_sites: usize, selector: SiteSelector) {
+        let n = self.dtn_down.len();
+        self.n_sites = n_sites.max(1);
+        self.site_selector = selector;
+        self.site_of = (0..n).map(|d| site_of_member(d, n, self.n_sites)).collect();
+    }
+
+    /// May data node `d` serve the decision in flight? Down nodes never
+    /// may; while a site mask is set, only that site's nodes may.
+    fn allowed(&self, d: usize) -> bool {
+        !self.dtn_down[d] && self.allowed_site.is_none_or(|s| self.site_of[d] == s)
+    }
+
+    /// Does site `s` have at least one live data node?
+    fn site_has_live_dtn(&self, s: usize) -> bool {
+        self.dtn_live.iter().any(|&d| self.site_of[d] == s)
+    }
+
+    /// The live fleet narrowed by the current site mask (equal to
+    /// `dtn_live` when no mask is set).
+    fn allowed_live(&self) -> Vec<usize> {
+        match self.allowed_site {
+            None => self.dtn_live.clone(),
+            Some(s) => self
+                .dtn_live
+                .iter()
+                .copied()
+                .filter(|&d| self.site_of[d] == s)
+                .collect(),
+        }
+    }
+
+    /// First level of two-level selection: pick the *site* serving this
+    /// admission, or `None` when site selection is inert (one site, or
+    /// no site has a live DTN — the second level then works the whole
+    /// fleet, preserving its all-dead funnel failover). The chosen site
+    /// always has at least one live DTN.
+    fn choose_site(&mut self, local_site: usize, extent: Option<ExtentId>) -> Option<usize> {
+        if self.n_sites <= 1 {
+            return None;
+        }
+        let local_scan = |sel: &SourceSel| {
+            (0..sel.n_sites)
+                .map(|k| (local_site + k) % sel.n_sites)
+                .find(|&s| sel.site_has_live_dtn(s))
+        };
+        match self.site_selector {
+            SiteSelector::LocalFirst => local_scan(self),
+            SiteSelector::CacheAware => {
+                // The site of the lowest-indexed live DTN holding the
+                // extent hot — follow the data across the WAN; an
+                // extent nobody holds stays site-local (its first
+                // server becomes its home).
+                let hit = extent.and_then(|e| {
+                    self.extent_home
+                        .get(&e)
+                        .and_then(|homes| homes.iter().copied().find(|&d| !self.dtn_down[d]))
+                        .map(|d| self.site_of[d])
+                });
+                hit.or_else(|| local_scan(self))
+            }
+            SiteSelector::RoundRobin => {
+                // Deterministic rotation over sites with live DTNs —
+                // the Petascale transfer-matrix shape, every site pair
+                // carrying traffic.
+                for _ in 0..self.n_sites {
+                    let s = self.site_cursor % self.n_sites;
+                    self.site_cursor += 1;
+                    if self.site_has_live_dtn(s) {
+                        return Some(s);
+                    }
+                }
+                None
+            }
+        }
     }
 
     fn dtn_count(&self) -> usize {
@@ -404,13 +519,14 @@ impl SourceSel {
         self.dtn_slots == 0 || self.dtn_active[d] < self.dtn_slots
     }
 
-    /// Next live data node in rotation, advancing the cursor past the
-    /// pick. Caller guarantees at least one live DTN.
+    /// Next selectable data node in rotation, advancing the cursor past
+    /// the pick. Caller guarantees at least one live DTN in the current
+    /// site mask (or at all, when no mask is set).
     fn rr_preferred(&mut self) -> usize {
         loop {
             let d = self.dtn_cursor % self.dtn_down.len();
             self.dtn_cursor += 1;
-            if !self.dtn_down[d] {
+            if self.allowed(d) {
                 return d;
             }
         }
@@ -428,9 +544,18 @@ impl SourceSel {
     /// off after recovery. Owner pins live in the sharded `state` (the
     /// pin-shard lock nests inside the caller's ticket-shard lock; see
     /// `mover::state` for the lock order).
+    ///
+    /// With a multi-site partition the selection is two-level:
+    /// [`SourceSel::choose_site`] first narrows the fleet to one site
+    /// (by the requesting node's `local_site`, the extent's home, or
+    /// the site rotation — [`SiteSelector`]), then the
+    /// [`SourceSelector`] machinery below places the transfer within
+    /// that site; deferrals stay site-local and a saturated site
+    /// overflows to the funnel rather than silently crossing the WAN.
     fn select(
         &mut self,
         state: &RouterState,
+        local_site: usize,
         bytes: u64,
         owner: &str,
         extent: Option<ExtentId>,
@@ -443,21 +568,23 @@ impl SourceSel {
         if !via_dtn || self.dtn_live.is_empty() {
             return Placement::Funnel;
         }
-        // Snapshot the rotation cursor: if this transfer ends up on the
-        // funnel after all (budget overflow below), the cursor is
-        // restored — only an actual DTN placement may advance it.
+        // Snapshot the rotation cursors: if this transfer ends up on the
+        // funnel after all (budget overflow below), the cursors are
+        // restored — only an actual DTN placement may advance them.
         let cursor_before = self.dtn_cursor;
+        let site_cursor_before = self.site_cursor;
+        self.allowed_site = self.choose_site(local_site, extent);
         let preferred = match self.selector {
             SourceSelector::RoundRobin => self.rr_preferred(),
             SourceSelector::CacheAware => {
-                // The lowest-indexed live DTN holding the extent hot
-                // (one ascending probe of the extent→DTN index); an
+                // The lowest-indexed selectable DTN holding the extent
+                // hot (one ascending probe of the extent→DTN index); an
                 // extent nobody holds takes the rotation, which makes
                 // its first server its sticky home (serving warms it).
                 let hit = extent.and_then(|e| {
                     self.extent_home
                         .get(&e)
-                        .and_then(|homes| homes.iter().copied().find(|&d| !self.dtn_down[d]))
+                        .and_then(|homes| homes.iter().copied().find(|&d| self.allowed(d)))
                 });
                 match hit {
                     Some(d) => d,
@@ -465,35 +592,32 @@ impl SourceSel {
                 }
             }
             SourceSelector::OwnerAffinity => match state.pin_of(owner) {
-                Some(d) if !self.dtn_down[d] => d,
+                Some(d) if self.allowed(d) => d,
                 _ => {
-                    // First sighting, or the pinned DTN died: (re-)pin by
-                    // the stable owner hash over the live fleet. The new
-                    // pin sticks even after the old node recovers — no
+                    // First sighting, or the pinned DTN died (or sits
+                    // outside the chosen site): (re-)pin by the stable
+                    // owner hash over the selectable fleet. The new pin
+                    // sticks even after the old node recovers — no
                     // flap-back.
-                    let d = self.dtn_live[(owner_hash(owner) % self.dtn_live.len() as u64) as usize];
+                    let live = self.allowed_live();
+                    let d = live[(owner_hash(owner) % live.len() as u64) as usize];
                     state.set_pin(owner, d);
                     d
                 }
             },
             SourceSelector::WeightedByCapacity => {
-                // Deficit round-robin over the live fleet, mirroring the
-                // node-routing algorithm one layer up; chaos re-rates
-                // (`set_dtn_capacity`) shift the split mid-run.
-                let total: f64 = self.dtn_live.iter().map(|&d| self.dtn_capacity[d]).sum();
+                // Deficit round-robin over the selectable fleet,
+                // mirroring the node-routing algorithm one layer up;
+                // chaos re-rates (`set_dtn_capacity`) shift the split
+                // mid-run.
+                let live = self.allowed_live();
+                let total: f64 = live.iter().map(|&d| self.dtn_capacity[d]).sum();
                 if total > 0.0 {
-                    let SourceSel {
-                        dtn_live,
-                        dtn_credit,
-                        dtn_capacity,
-                        ..
-                    } = self;
-                    for &d in dtn_live.iter() {
-                        dtn_credit[d] += dtn_capacity[d] / total;
+                    for &d in live.iter() {
+                        self.dtn_credit[d] += self.dtn_capacity[d] / total;
                     }
                 }
-                *self
-                    .dtn_live
+                *live
                     .iter()
                     .max_by(|&&a, &&b| {
                         self.dtn_credit[a]
@@ -508,30 +632,33 @@ impl SourceSel {
             Some((preferred, false))
         } else {
             // The preferred data node's admission budget is full: it
-            // pushes back, and the transfer defers to the next live DTN
-            // (scanning from the preferred node, so deferrals spread).
+            // pushes back, and the transfer defers to the next
+            // selectable DTN (scanning from the preferred node, so
+            // deferrals spread — and stay inside the chosen site).
             self.dtn_deferred += 1;
             let n = self.dtn_down.len();
             match (1..n)
                 .map(|k| (preferred + k) % n)
-                .find(|&d| !self.dtn_down[d] && self.has_slot(d))
+                .find(|&d| self.allowed(d) && self.has_slot(d))
             {
                 Some(d) => Some((d, false)),
                 None if self.queue_depth > 0 => {
-                    // Every live DTN is at budget, but wait queues are
-                    // on: the transfer queues (scanning from the
-                    // preferred node) instead of overflowing, and is
-                    // promoted into the next freed slot on release.
+                    // Every selectable DTN is at budget, but wait
+                    // queues are on: the transfer queues (scanning
+                    // from the preferred node) instead of overflowing,
+                    // and is promoted into the next freed slot on
+                    // release.
                     (0..n)
                         .map(|k| (preferred + k) % n)
                         .find(|&d| {
-                            !self.dtn_down[d] && (self.waitq[d].len() as u32) < self.queue_depth
+                            self.allowed(d) && (self.waitq[d].len() as u32) < self.queue_depth
                         })
                         .map(|d| (d, true))
                 }
                 None => None,
             }
         };
+        self.allowed_site = None;
         match chosen {
             Some((d, queued)) => {
                 if self.selector == SourceSelector::WeightedByCapacity {
@@ -540,14 +667,16 @@ impl SourceSel {
                 Placement::Dtn { dtn: d, queued }
             }
             None => {
-                // Every live DTN is at its budget AND (if enabled) its
-                // wait queue is full: the fleet as a whole pushes back
+                // Every selectable DTN is at its budget AND (if
+                // enabled) its wait queue is full: the site pushes back
                 // and the bytes overflow to the scheduling node's
                 // funnel (whose own admission already gated this
-                // transfer). No DTN was picked, so the rotation cursor
-                // rewinds — funnel placements never skew the rotation.
+                // transfer). No DTN was picked, so both rotation
+                // cursors rewind — funnel placements never skew the
+                // rotations.
                 self.dtn_overflow_to_funnel += 1;
                 self.dtn_cursor = cursor_before;
+                self.site_cursor = site_cursor_before;
                 Placement::Funnel
             }
         }
@@ -799,6 +928,7 @@ impl PoolRouter {
         r.sel.selector = cfg.source_selector;
         r.sel.dtn_slots = cfg.dtn_slots;
         r.sel.queue_depth = cfg.dtn_queue_depth;
+        r.sel.set_sites(cfg.n_sites, cfg.site_selector);
         r.state.set_shards(cfg.state_shards);
         r.ramp_decisions = cfg.recovery_ramp;
         r
@@ -884,6 +1014,28 @@ impl PoolRouter {
         self.sel.selector
     }
 
+    /// Federation sites the pool partitions into (1 = single facility).
+    pub fn n_sites(&self) -> usize {
+        self.sel.n_sites
+    }
+
+    /// The which-site selection strategy (first level of two-level
+    /// source selection; inert with one site).
+    pub fn site_selector(&self) -> SiteSelector {
+        self.sel.site_selector
+    }
+
+    /// Site of a data node (contiguous blocks; see
+    /// [`crate::util::site_of_member`]).
+    pub fn site_of_dtn(&self, dtn: usize) -> usize {
+        self.sel.site_of.get(dtn).copied().unwrap_or(0)
+    }
+
+    /// Site of a submit node (same contiguous-block partition).
+    pub fn site_of_node(&self, node: usize) -> usize {
+        site_of_member(node, self.nodes.len(), self.sel.n_sites)
+    }
+
     /// Per-DTN admission budget (0 = unlimited).
     pub fn dtn_budget(&self) -> u32 {
         self.sel.dtn_slots
@@ -953,11 +1105,16 @@ impl PoolRouter {
     /// clone per decision.
     fn assign_source(&mut self, ticket: u32, node: usize) -> DataSource {
         self.release_source(ticket);
+        let local_site = site_of_member(node, self.nodes.len(), self.sel.n_sites);
         let sel = &mut self.sel;
         let state = &self.state;
         let (placement, bytes, extent) = state.with_request(ticket, |req| match req {
-            Some(r) => (sel.select(state, r.bytes, &r.owner, r.extent), r.bytes, r.extent),
-            None => (sel.select(state, 0, "", None), 0, None),
+            Some(r) => (
+                sel.select(state, local_site, r.bytes, &r.owner, r.extent),
+                r.bytes,
+                r.extent,
+            ),
+            None => (sel.select(state, local_site, 0, "", None), 0, None),
         });
         let source = match placement {
             Placement::Funnel => DataSource::Funnel { node },
@@ -995,18 +1152,39 @@ impl PoolRouter {
     /// transfer against the new source) and is returned so the fabric
     /// can re-drive it. Idempotent per DTN.
     pub fn fail_dtn(&mut self, dtn: usize) -> Vec<Routed> {
-        if self.sel.dtn_down[dtn] {
+        if !self.poison_dtn(dtn) {
             return Vec::new();
+        }
+        self.sel.rebuild_live();
+        self.drain_dtn(dtn)
+    }
+
+    /// The mark-dead half of [`PoolRouter::fail_dtn`]: flag the node
+    /// down, drop its residency and owner pins. Returns false (a no-op)
+    /// when the node is already down. The caller must
+    /// `sel.rebuild_live()` before re-sourcing anything — split out so
+    /// [`PoolRouter::fail_site`] can poison a site's WHOLE fleet before
+    /// draining any member, ensuring no re-source transiently lands on
+    /// a sibling that is itself about to die.
+    fn poison_dtn(&mut self, dtn: usize) -> bool {
+        if self.sel.dtn_down[dtn] {
+            return false;
         }
         self.sel.dtn_down[dtn] = true;
         self.sel.dtn_failed_count += 1;
-        self.sel.rebuild_live();
         self.state.set_dtn_down(dtn, true);
         // The node's page cache dies with it, and its pinned owners
         // re-pin (stably) onto the live fleet at their next placement —
-        // which, for its in-flight transfers, is the re-source below.
+        // which, for its in-flight transfers, is the re-source in
+        // `drain_dtn`.
         self.sel.clear_residency(dtn);
         self.state.drop_pins_to(dtn);
+        true
+    }
+
+    /// The re-source half of [`PoolRouter::fail_dtn`]: move a poisoned
+    /// node's in-flight transfers onto surviving DTNs (or the funnel).
+    fn drain_dtn(&mut self, dtn: usize) -> Vec<Routed> {
         let affected = sorted_tickets(self.state.tickets_on_dtn(dtn));
         let mut out = Vec::new();
         for ticket in affected {
@@ -1032,6 +1210,64 @@ impl PoolRouter {
         // ticket was skipped for missing node/shard bookkeeping.
         self.sel.waitq[dtn].clear();
         self.sel.dtn_active[dtn] = 0;
+        out
+    }
+
+    /// Drain a whole federation site — the border-link cut writ large:
+    /// every one of the site's data nodes is poisoned FIRST (so no
+    /// re-source transiently lands on a sibling that is itself about to
+    /// die), then each is drained onto surviving sites (or the funnel),
+    /// then the site's submit nodes fail one by one, re-routing their
+    /// waiting and in-flight admissions to surviving sites' nodes —
+    /// [`PoolRouter::fail_node`] semantics, scoped to the site block.
+    /// Returns every transfer the fabric must re-drive. Idempotent per
+    /// site.
+    pub fn fail_site(&mut self, site: usize) -> Vec<Routed> {
+        // Poison the site's whole DTN fleet up front but drain LAST:
+        // failing the site's submit nodes first re-routes their
+        // admissions with fresh (already-site-masked) sources, so the
+        // drain below only touches surviving nodes' tickets and no
+        // ticket is ever re-driven twice.
+        let dtns: Vec<usize> = (0..self.dtn_count())
+            .filter(|&d| self.site_of_dtn(d) == site)
+            .collect();
+        let poisoned: Vec<usize> = dtns
+            .into_iter()
+            .filter(|&d| self.poison_dtn(d))
+            .collect();
+        self.sel.rebuild_live();
+        let site_nodes: Vec<usize> = (0..self.node_count())
+            .filter(|&n| self.site_of_node(n) == site)
+            .collect();
+        let mut out = Vec::new();
+        for n in site_nodes {
+            out.extend(self.fail_node(n));
+        }
+        for d in poisoned {
+            out.extend(self.drain_dtn(d));
+        }
+        out
+    }
+
+    /// Un-drain a federation site: every one of its data nodes and
+    /// submit nodes recovers ([`PoolRouter::recover_dtn`] /
+    /// [`PoolRouter::recover_node`] semantics — cold caches, clean
+    /// deficit counters, stranded work re-routed). Returns the
+    /// transfers admitted NOW. Idempotent.
+    pub fn recover_site(&mut self, site: usize) -> Vec<Routed> {
+        let dtns: Vec<usize> = (0..self.dtn_count())
+            .filter(|&d| self.site_of_dtn(d) == site)
+            .collect();
+        for d in dtns {
+            self.recover_dtn(d);
+        }
+        let site_nodes: Vec<usize> = (0..self.node_count())
+            .filter(|&n| self.site_of_node(n) == site)
+            .collect();
+        let mut out = Vec::new();
+        for n in site_nodes {
+            out.extend(self.recover_node(n));
+        }
         out
     }
 
@@ -1505,11 +1741,21 @@ impl PoolRouter {
 
     pub fn describe(&self) -> String {
         let sources = if self.dtn_count() > 0 {
+            let federation = if self.n_sites() > 1 {
+                format!(
+                    " across {} sites by {}",
+                    self.n_sites(),
+                    self.sel.site_selector.label()
+                )
+            } else {
+                String::new()
+            };
             format!(
-                ", {} over {} dtn(s) by {}",
+                ", {} over {} dtn(s) by {}{}",
                 self.sel.plan.label(),
                 self.dtn_count(),
-                self.sel.selector.label()
+                self.sel.selector.label(),
+                federation
             )
         } else {
             String::new()
@@ -2585,5 +2831,173 @@ mod tests {
             assert_eq!(routed_k, routed_1, "sharding is pure partitioning (K={k})");
             assert_eq!(stats_k, stats_1);
         }
+    }
+
+    /// Round-robin-routed pool with `nodes` submit nodes and a DTN
+    /// fleet split over `n_sites` federation sites.
+    fn site_router(nodes: u32, dtns: usize, n_sites: usize, site_sel: SiteSelector) -> PoolRouter {
+        rr_cfg(
+            nodes,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; dtns],
+                n_sites,
+                site_selector: site_sel,
+                ..RouterConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn local_first_stays_site_local_until_the_site_dies() {
+        // 2 submit nodes / 4 DTNs / 2 sites: node 0 + DTNs {0,1} are
+        // site 0, node 1 + DTNs {2,3} are site 1.
+        let mut router = site_router(2, 4, 2, SiteSelector::LocalFirst);
+        assert_eq!(router.n_sites(), 2);
+        assert_eq!(router.site_of_node(0), 0);
+        assert_eq!(router.site_of_node(1), 1);
+        assert_eq!(
+            (0..4).map(|d| router.site_of_dtn(d)).collect::<Vec<_>>(),
+            vec![0, 0, 1, 1]
+        );
+        // The round-robin router alternates schedule nodes; each
+        // admission's bytes stay inside the scheduling node's site.
+        for t in 0..8 {
+            let adm = router.request(r(t, "o", 10));
+            let DataSource::Dtn { dtn } = adm[0].source else {
+                panic!("dedicated plan placed {:?}", adm[0].source);
+            };
+            assert_eq!(
+                router.site_of_dtn(dtn),
+                router.site_of_node(adm[0].node),
+                "local-first crossed the WAN with a live local fleet"
+            );
+        }
+        // Site 0's fleet dies: node 0's admissions now cross the WAN.
+        router.fail_dtn(0);
+        router.fail_dtn(1);
+        let adm = router.request(r(100, "o", 10));
+        if adm[0].node == 0 {
+            assert!(matches!(adm[0].source, DataSource::Dtn { dtn } if dtn >= 2));
+        }
+    }
+
+    #[test]
+    fn site_round_robin_carries_every_pair() {
+        // One submit node, 4 DTNs over 2 sites, rotating sites: the
+        // placement alternates site 0 / site 1 regardless of locality.
+        let mut router = site_router(1, 4, 2, SiteSelector::RoundRobin);
+        let mut per_site = [0u32; 2];
+        for t in 0..8 {
+            let adm = router.request(r(t, "o", 10));
+            let DataSource::Dtn { dtn } = adm[0].source else {
+                panic!("expected a DTN placement");
+            };
+            per_site[router.site_of_dtn(dtn)] += 1;
+        }
+        assert_eq!(per_site, [4, 4], "site rotation splits evenly");
+    }
+
+    #[test]
+    fn cache_aware_site_selection_follows_the_extent_home() {
+        use crate::storage::ExtentId;
+        let mut router = rr_cfg(
+            2,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; 4],
+                source_selector: SourceSelector::CacheAware,
+                n_sites: 2,
+                site_selector: SiteSelector::CacheAware,
+                ..RouterConfig::default()
+            },
+        );
+        // Extent 7 is hot only on dtn 3 (site 1): even node 0 (site 0)
+        // crosses the WAN to the cached replica.
+        router.note_extent_resident(3, ExtentId(7));
+        let adm = router.request(r(0, "o", 10).with_extent(ExtentId(7)));
+        assert_eq!(adm[0].node, 0, "round-robin starts at node 0");
+        assert_eq!(adm[0].source, DataSource::Dtn { dtn: 3 });
+        // An unhomed extent stays site-local (and then homes there).
+        let adm = router.request(r(1, "o", 10).with_extent(ExtentId(9)));
+        assert_eq!(adm[0].node, 1);
+        let DataSource::Dtn { dtn } = adm[0].source else {
+            panic!("expected a DTN placement");
+        };
+        assert_eq!(router.site_of_dtn(dtn), 1, "unhomed extent stays local");
+    }
+
+    #[test]
+    fn fail_site_drains_dtns_and_submit_nodes_to_survivors() {
+        let mut router = site_router(2, 4, 2, SiteSelector::LocalFirst);
+        for t in 0..8 {
+            router.request(r(t, "o", 10));
+        }
+        assert_eq!(router.active(), 8);
+        let moved = router.fail_site(0);
+        // Site 0's four transfers re-drive: their bytes re-source onto
+        // site 1's DTNs and their admissions re-route to node 1.
+        assert_eq!(moved.len(), 4, "site 0's transfers re-drive");
+        for m in &moved {
+            assert_eq!(m.node, 1, "survivor site schedules everything");
+            assert!(
+                matches!(m.source, DataSource::Dtn { dtn } if router.site_of_dtn(dtn) == 1),
+                "re-sourced bytes must come from the surviving site"
+            );
+        }
+        assert!(router.is_failed(0));
+        assert!(router.is_dtn_failed(0) && router.is_dtn_failed(1));
+        assert!(!router.is_dtn_failed(2) && !router.is_dtn_failed(3));
+        // Exact slot accounting: nothing lost, nothing duplicated.
+        assert_eq!(router.active(), 8);
+        assert_eq!(router.waiting(), 0);
+        assert!(router.fail_site(0).is_empty(), "idempotent per site");
+        let st = router.router_stats();
+        assert_eq!(st.dtn_failed, 2);
+        assert_eq!(st.shard_failed, 1);
+
+        // Recovery: the site rejoins scheduling and source selection.
+        assert!(router.recover_site(0).is_empty(), "no stranded work");
+        assert!(!router.is_failed(0));
+        assert!(!router.is_dtn_failed(0));
+        let adm = router.request(r(100, "o", 10));
+        assert_eq!(adm[0].node, 0, "round-robin resumes on the recovered node");
+        assert_eq!(router.router_stats().dtn_recovered, 2);
+    }
+
+    #[test]
+    fn saturated_site_overflows_to_funnel_not_across_the_wan() {
+        // 2 sites × 1 DTN, one slot each, local-first: when node 0's
+        // local DTN is at budget the transfer overflows to the funnel
+        // rather than silently paying WAN cost on the remote site.
+        let mut router = rr_cfg(
+            2,
+            RouterConfig {
+                source_plan: SourcePlan::DedicatedDtn,
+                dtn_capacity: vec![1.0; 2],
+                dtn_slots: 1,
+                n_sites: 2,
+                site_selector: SiteSelector::LocalFirst,
+                ..RouterConfig::default()
+            },
+        );
+        // t0 → node 0 / dtn 0 (site 0), t1 → node 1 / dtn 1 (site 1).
+        assert_eq!(router.request(r(0, "o", 5))[0].source, DataSource::Dtn { dtn: 0 });
+        assert_eq!(router.request(r(1, "o", 5))[0].source, DataSource::Dtn { dtn: 1 });
+        // t2 schedules on node 0 again; its site's only DTN is full and
+        // the remote site is NOT an overflow target.
+        let adm = router.request(r(2, "o", 5));
+        assert_eq!(adm[0].node, 0);
+        assert_eq!(adm[0].source, DataSource::Funnel { node: 0 });
+        let st = router.stats();
+        assert_eq!(st.dtn_overflow_to_funnel, 1);
+        // Once a site's whole fleet is DEAD (not just saturated),
+        // liveness wins over locality and the WAN carries the bytes:
+        // whichever node schedules t3, only site 1's DTN can serve it.
+        router.complete(0);
+        router.complete(1);
+        router.fail_dtn(0);
+        let adm = router.request(r(3, "o", 5));
+        assert_eq!(adm[0].source, DataSource::Dtn { dtn: 1 });
     }
 }

@@ -233,6 +233,66 @@ impl SourceSelector {
     }
 }
 
+/// Strategy picking *which site* serves a DTN-bound transfer in a
+/// multi-site federation — the first level of two-level source
+/// selection. The `SiteSelector` narrows the fleet to one site's DTNs,
+/// then the [`SourceSelector`] places the transfer within that site.
+/// With one site every selector degenerates to "the whole fleet" and
+/// the router's decisions are bit-identical to the single-site code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SiteSelector {
+    /// Prefer the requesting node's own site while it has a live DTN
+    /// (never pay WAN cost for bytes a local replica can serve); scan
+    /// outward to the next sites only when the local fleet is dead — a
+    /// merely saturated site overflows to its own funnel instead. The
+    /// default — and the Petascale DTN deployments' practice of staging
+    /// data site-locally before the transfer week.
+    #[default]
+    LocalFirst,
+    /// Follow the data: pick the site already holding the transfer's
+    /// extent resident on one of its DTNs (lowest such site wins, for
+    /// determinism), falling back to the local-first scan when no site
+    /// holds it. Trades WAN latency for cache hits.
+    CacheAware,
+    /// Deterministic rotation over sites with live DTNs — the
+    /// transfer-matrix shape of the Petascale DTN benchmark, where
+    /// every site pair must carry traffic.
+    RoundRobin,
+}
+
+impl SiteSelector {
+    /// Short label for reports and bench tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SiteSelector::LocalFirst => "local-first",
+            SiteSelector::CacheAware => "cache-aware",
+            SiteSelector::RoundRobin => "round-robin",
+        }
+    }
+
+    /// Parse a selector name (CLI flag / config value spellings).
+    pub fn parse(name: &str) -> Option<SiteSelector> {
+        match name.trim().to_ascii_uppercase().replace('-', "_").as_str() {
+            "LOCAL_FIRST" | "LOCAL" => Some(SiteSelector::LocalFirst),
+            "CACHE_AWARE" | "CACHE" => Some(SiteSelector::CacheAware),
+            "ROUND_ROBIN" => Some(SiteSelector::RoundRobin),
+            _ => None,
+        }
+    }
+
+    /// The `SITE_SELECTOR` condor-style knob (default: local-first).
+    ///
+    /// ```text
+    /// SITE_SELECTOR = ROUND_ROBIN  # LOCAL_FIRST | CACHE_AWARE | ROUND_ROBIN
+    /// ```
+    pub fn from_config(cfg: &Config) -> Result<SiteSelector, ConfigError> {
+        let name = cfg.get_or("SITE_SELECTOR", "LOCAL_FIRST");
+        SiteSelector::parse(&name).ok_or_else(|| {
+            ConfigError::Type("SITE_SELECTOR".into(), "site selector name", name)
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -336,6 +396,33 @@ mod tests {
         );
         let bad = Config::parse("SOURCE_SELECTOR = LOTTERY").unwrap();
         assert!(SourceSelector::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn site_selector_parse_label_and_config() {
+        for sel in [
+            SiteSelector::LocalFirst,
+            SiteSelector::CacheAware,
+            SiteSelector::RoundRobin,
+        ] {
+            assert_eq!(SiteSelector::parse(sel.label()), Some(sel));
+        }
+        assert_eq!(SiteSelector::parse("local"), Some(SiteSelector::LocalFirst));
+        assert_eq!(SiteSelector::parse("CACHE"), Some(SiteSelector::CacheAware));
+        assert_eq!(SiteSelector::parse("nearest"), None);
+
+        let cfg = Config::parse("SITE_SELECTOR = ROUND_ROBIN").unwrap();
+        assert_eq!(
+            SiteSelector::from_config(&cfg).unwrap(),
+            SiteSelector::RoundRobin
+        );
+        let dflt = Config::parse("").unwrap();
+        assert_eq!(
+            SiteSelector::from_config(&dflt).unwrap(),
+            SiteSelector::LocalFirst
+        );
+        let bad = Config::parse("SITE_SELECTOR = GRAVITY").unwrap();
+        assert!(SiteSelector::from_config(&bad).is_err());
     }
 
     #[test]

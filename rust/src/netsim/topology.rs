@@ -21,6 +21,7 @@
 use super::calib;
 use super::tcp::PathProfile;
 use super::{LinkId, NetSim};
+use crate::util::site_of_member;
 use crate::util::units::{Gbps, SimTime};
 
 /// One worker node: NIC capacity and number of execute slots.
@@ -83,6 +84,22 @@ pub struct TestbedSpec {
     /// Override the per-stream endpoint ceiling in bytes/sec (the
     /// calibration harness pins this to a measured loopback rate).
     pub endpoint_bps: Option<f64>,
+    /// Federation site count (`N_SITES` knob). 1 = the paper's single
+    /// deployment. With more, the submit fleet, data fleet and workers
+    /// partition into contiguous per-site blocks
+    /// ([`crate::util::site_of_member`]), each site gets a monitored
+    /// border link, and every site pair gets a WAN link — a transfer
+    /// whose source and worker live on different sites crosses
+    /// src-border → pair WAN → dst-border.
+    pub n_sites: u32,
+    /// Border-link capacity of every site in Gbps (`SITE_WAN_GBPS`),
+    /// the Petascale DTN per-site provisioning target.
+    pub site_wan_gbps: f64,
+    /// Round trip between any two sites in milliseconds
+    /// (`SITE_WAN_RTT_MS`), stamped on the pair WAN links.
+    pub site_wan_rtt_ms: f64,
+    /// Per-packet loss probability on the pair WAN links.
+    pub site_wan_loss: f64,
 }
 
 impl TestbedSpec {
@@ -110,6 +127,10 @@ impl TestbedSpec {
             link_rtt_ms: None,
             link_loss: None,
             endpoint_bps: None,
+            n_sites: 1,
+            site_wan_gbps: 100.0,
+            site_wan_rtt_ms: calib::WAN_RTT_S * 1000.0,
+            site_wan_loss: calib::WAN_LOSS,
         }
     }
 
@@ -143,6 +164,10 @@ impl TestbedSpec {
             link_rtt_ms: None,
             link_loss: None,
             endpoint_bps: None,
+            n_sites: 1,
+            site_wan_gbps: 100.0,
+            site_wan_rtt_ms: calib::WAN_RTT_S * 1000.0,
+            site_wan_loss: calib::WAN_LOSS,
         }
     }
 
@@ -192,6 +217,14 @@ pub struct Testbed {
     pub data_txs: Vec<LinkId>,
     pub backbone: Option<LinkId>,
     pub worker_rx: Vec<LinkId>,
+    /// One monitored border link per federation site (empty with
+    /// `n_sites <= 1`). Every byte leaving or entering a site crosses
+    /// its border; [`Testbed::set_site_border_gbps`] drains it on
+    /// `fail_site`.
+    pub site_borders: Vec<LinkId>,
+    /// One WAN link per unordered site pair, in triangular order
+    /// (0-1, 0-2, …, 1-2, …); [`Testbed::site_pair_link`] indexes it.
+    pub site_pairs: Vec<LinkId>,
 }
 
 impl Testbed {
@@ -237,6 +270,29 @@ impl Testbed {
             .map(|(i, w)| net.add_link(&format!("worker{i}.nic.rx"), Gbps(w.nic_gbps * eff)))
             .collect();
 
+        // Federation fabric: per-site border links plus a WAN link per
+        // site pair. RTT/loss live on the pair links only, so a
+        // cross-site path pays them exactly once.
+        let n_sites = spec.n_sites.max(1) as usize;
+        let mut site_borders = Vec::new();
+        let mut site_pairs = Vec::new();
+        if n_sites > 1 {
+            for s in 0..n_sites {
+                let border =
+                    net.add_link(&format!("site{s}.border"), Gbps(spec.site_wan_gbps * eff));
+                net.monitor_link(border, spec.monitor_bin);
+                site_borders.push(border);
+            }
+            for a in 0..n_sites {
+                for b in (a + 1)..n_sites {
+                    let wan =
+                        net.add_link(&format!("wan.s{a}-s{b}"), Gbps(spec.site_wan_gbps * eff));
+                    net.set_link_profile(wan, spec.site_wan_rtt_ms / 1000.0, spec.site_wan_loss);
+                    site_pairs.push(wan);
+                }
+            }
+        }
+
         // RTT/loss annotations for dynamic solvers. The WAN's latency and
         // loss live on the backbone hop; explicit `link_rtt_ms`/`link_loss`
         // overrides take precedence and, on LAN-only topologies, land on
@@ -266,6 +322,8 @@ impl Testbed {
             data_txs,
             backbone,
             worker_rx,
+            site_borders,
+            site_pairs,
         }
     }
 
@@ -279,6 +337,60 @@ impl Testbed {
         self.data_txs.len()
     }
 
+    /// Federation site count (1 = no federation fabric built).
+    pub fn n_sites(&self) -> usize {
+        self.site_borders.len().max(1)
+    }
+
+    /// Site of submit node `s` (canonical contiguous partition).
+    pub fn site_of_submit(&self, s: usize) -> usize {
+        site_of_member(s, self.submit_txs.len(), self.n_sites())
+    }
+
+    /// Site of data node `d`.
+    pub fn site_of_dtn(&self, d: usize) -> usize {
+        site_of_member(d, self.data_txs.len(), self.n_sites())
+    }
+
+    /// Site of worker `w`.
+    pub fn site_of_worker(&self, w: usize) -> usize {
+        site_of_member(w, self.worker_rx.len(), self.n_sites())
+    }
+
+    /// The WAN link between two distinct sites (triangular pair index);
+    /// `None` for a same-site pair or a federation-less testbed.
+    pub fn site_pair_link(&self, a: usize, b: usize) -> Option<LinkId> {
+        if a == b || self.site_borders.is_empty() {
+            return None;
+        }
+        let n = self.n_sites();
+        let (lo, hi) = (a.min(b), a.max(b));
+        let idx = lo * n - lo * (lo + 1) / 2 + (hi - lo - 1);
+        self.site_pairs.get(idx).copied()
+    }
+
+    /// Append the cross-site hops (src border → pair WAN → dst border)
+    /// when a path leaves its source's site; a no-op otherwise.
+    fn push_wan_hops(&self, p: &mut Vec<LinkId>, src_site: usize, dst_site: usize) {
+        if src_site == dst_site || self.site_borders.is_empty() {
+            return;
+        }
+        p.push(self.site_borders[src_site]);
+        if let Some(wan) = self.site_pair_link(src_site, dst_site) {
+            p.push(wan);
+        }
+        p.push(self.site_borders[dst_site]);
+    }
+
+    /// Re-rate one site's border link mid-run (`fail_site` drains it to
+    /// the positive-capacity floor, `recover_site` restores the spec
+    /// rate); same derating as every other NIC.
+    pub fn set_site_border_gbps(&mut self, site: usize, gbps: f64) {
+        let eff = calib::NIC_PROTOCOL_EFFICIENCY;
+        let link = self.site_borders[site];
+        self.net.set_capacity(link, Gbps(gbps.max(0.001) * eff));
+    }
+
     /// Re-rate one submit node's NIC mid-run (fault injection: degrade,
     /// or restore on recovery). `gbps` is nominal; protocol-efficiency
     /// derating applies exactly as in [`Testbed::build`]. A floor keeps
@@ -290,13 +402,20 @@ impl Testbed {
         self.net.set_capacity(link, Gbps(gbps.max(0.001) * eff));
     }
 
-    /// Links crossed by a submit node -> worker transfer.
+    /// Links crossed by a submit node -> worker transfer. When the node
+    /// and worker live on different federation sites, the path also
+    /// crosses both borders and the pair WAN link.
     pub fn path_to_worker(&self, submit_node: usize, worker: usize) -> Vec<LinkId> {
-        let mut p = Vec::with_capacity(4);
+        let mut p = Vec::with_capacity(7);
         if let Some(&v) = self.submit_vpns.get(submit_node) {
             p.push(v);
         }
         p.push(self.submit_txs[submit_node]);
+        self.push_wan_hops(
+            &mut p,
+            self.site_of_submit(submit_node),
+            self.site_of_worker(worker),
+        );
         if let Some(b) = self.backbone {
             p.push(b);
         }
@@ -315,10 +434,12 @@ impl Testbed {
     }
 
     /// Links crossed by a data node -> worker transfer. Data nodes sit
-    /// outside the VPN overlay (no encap hop).
+    /// outside the VPN overlay (no encap hop); cross-site transfers pay
+    /// the same border/WAN hops as the funnel path.
     pub fn dtn_path_to_worker(&self, dtn: usize, worker: usize) -> Vec<LinkId> {
-        let mut p = Vec::with_capacity(3);
+        let mut p = Vec::with_capacity(6);
         p.push(self.data_txs[dtn]);
+        self.push_wan_hops(&mut p, self.site_of_dtn(dtn), self.site_of_worker(worker));
         if let Some(b) = self.backbone {
             p.push(b);
         }
@@ -365,6 +486,18 @@ impl Testbed {
         }
         if let Some(e) = self.spec.endpoint_bps {
             p.endpoint_bps = e;
+        }
+        p
+    }
+
+    /// [`Testbed::path_profile`] for a transfer between two sites: a
+    /// cross-site path additionally pays the federation WAN's RTT and
+    /// compounds its loss. Same-site transfers see the base profile.
+    pub fn site_path_profile(&self, src_site: usize, dst_site: usize) -> PathProfile {
+        let mut p = self.path_profile();
+        if src_site != dst_site && !self.site_borders.is_empty() {
+            p.rtt_s += self.spec.site_wan_rtt_ms / 1000.0;
+            p.loss = 1.0 - (1.0 - p.loss) * (1.0 - self.spec.site_wan_loss);
         }
         p
     }
@@ -562,6 +695,103 @@ mod tests {
         spec.endpoint_bps = Some(42e6);
         let tb = Testbed::build(spec);
         assert!((tb.path_profile().endpoint_bps - 42e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn single_site_builds_no_federation_fabric() {
+        let tb = Testbed::build(TestbedSpec::lan_paper());
+        assert_eq!(tb.n_sites(), 1);
+        assert!(tb.site_borders.is_empty() && tb.site_pairs.is_empty());
+        assert_eq!(tb.site_of_worker(5), 0);
+        assert!(tb.site_pair_link(0, 0).is_none());
+    }
+
+    #[test]
+    fn federation_builds_borders_and_pair_wans() {
+        let mut spec = TestbedSpec::lan_paper();
+        spec.n_sites = 3;
+        spec.site_wan_gbps = 50.0;
+        spec.site_wan_rtt_ms = 40.0;
+        spec.site_wan_loss = 1e-6;
+        let tb = Testbed::build(spec);
+        assert_eq!(tb.n_sites(), 3);
+        assert_eq!(tb.site_borders.len(), 3);
+        assert_eq!(tb.site_pairs.len(), 3, "3 choose 2 pair links");
+        // Triangular pair index: (0,1) (0,2) (1,2), symmetric lookup.
+        assert_eq!(tb.site_pair_link(0, 1), Some(tb.site_pairs[0]));
+        assert_eq!(tb.site_pair_link(2, 0), Some(tb.site_pairs[1]));
+        assert_eq!(tb.site_pair_link(1, 2), Some(tb.site_pairs[2]));
+        // RTT/loss live on the pair links only; borders carry capacity.
+        let wan = tb.net.link(tb.site_pairs[0]);
+        assert!((wan.rtt_s - 0.04).abs() < 1e-12);
+        assert!((wan.loss - 1e-6).abs() < 1e-15);
+        assert_eq!(tb.net.link(tb.site_borders[0]).rtt_s, 0.0);
+        let cap = tb.net.link(tb.site_borders[0]).capacity_bps * 8.0 / 1e9;
+        assert!((cap - 45.5).abs() < 0.01, "50 Gbps derated: {cap}");
+        // The 6 workers partition 2 per site.
+        assert_eq!(tb.site_of_worker(0), 0);
+        assert_eq!(tb.site_of_worker(3), 1);
+        assert_eq!(tb.site_of_worker(5), 2);
+    }
+
+    #[test]
+    fn cross_site_paths_cross_borders_and_the_wan() {
+        let mut spec = TestbedSpec::lan_paper();
+        spec.n_sites = 2;
+        spec.n_submit_nodes = 2;
+        spec.n_data_nodes = 2;
+        let tb = Testbed::build(spec);
+        assert_eq!(tb.site_of_submit(0), 0);
+        assert_eq!(tb.site_of_submit(1), 1);
+        assert_eq!(tb.site_of_dtn(1), 1);
+        // Same-site path: untouched shape.
+        assert_eq!(
+            tb.path_to_worker(0, 0),
+            vec![tb.submit_txs[0], tb.worker_rx[0]]
+        );
+        // Cross-site: tx → src border → pair WAN → dst border → rx.
+        assert_eq!(
+            tb.path_to_worker(0, 4),
+            vec![
+                tb.submit_txs[0],
+                tb.site_borders[0],
+                tb.site_pairs[0],
+                tb.site_borders[1],
+                tb.worker_rx[4]
+            ]
+        );
+        assert_eq!(
+            tb.dtn_path_to_worker(1, 0),
+            vec![
+                tb.data_txs[1],
+                tb.site_borders[1],
+                tb.site_pairs[0],
+                tb.site_borders[0],
+                tb.worker_rx[0]
+            ]
+        );
+        // Reverse path is the same links reversed.
+        let mut rev = tb.path_from_worker(0, 4);
+        rev.reverse();
+        assert_eq!(rev, tb.path_to_worker(0, 4));
+        // Cross-site TCP profile pays the federation RTT; local doesn't.
+        let base = tb.path_profile().rtt_s;
+        assert!((tb.site_path_profile(0, 0).rtt_s - base).abs() < 1e-12);
+        let cross = tb.site_path_profile(0, 1).rtt_s;
+        assert!((cross - (base + tb.spec.site_wan_rtt_ms / 1000.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn site_border_rerates_with_floor() {
+        let mut spec = TestbedSpec::lan_paper();
+        spec.n_sites = 2;
+        let mut tb = Testbed::build(spec);
+        tb.set_site_border_gbps(0, 0.0);
+        let cap = tb.net.link(tb.site_borders[0]).capacity_bps * 8.0 / 1e9;
+        assert!(cap > 0.0 && cap < 0.001, "drained to the floor: {cap}");
+        tb.set_site_border_gbps(0, 100.0);
+        let cap = tb.net.link(tb.site_borders[0]).capacity_bps * 8.0 / 1e9;
+        assert!((cap - 91.0).abs() < 0.01, "restored: {cap}");
     }
 
     #[test]

@@ -9,3 +9,35 @@ pub mod units;
 pub use prng::Prng;
 pub use stats::{Histogram, OnlineStats};
 pub use units::{Bytes, Gbps, SimTime};
+
+/// Canonical member→site partition for the multi-site federation layer:
+/// member `idx` of a fleet of `count` (submit nodes, DTNs, or workers)
+/// belongs to site `idx * n_sites / count` — contiguous blocks, the same
+/// rule everywhere (topology paths, router placement, fault scoping,
+/// report matrices), so no layer can disagree about which site an
+/// endpoint lives in. With `n_sites <= 1` (or an empty fleet) everything
+/// is site 0.
+pub fn site_of_member(idx: usize, count: usize, n_sites: usize) -> usize {
+    if n_sites <= 1 || count == 0 {
+        return 0;
+    }
+    (idx.min(count - 1)) * n_sites / count
+}
+
+#[cfg(test)]
+mod site_tests {
+    use super::site_of_member;
+
+    #[test]
+    fn site_partition_is_contiguous_and_covers_every_site() {
+        // 6 members over 3 sites: blocks of 2.
+        let sites: Vec<usize> = (0..6).map(|i| site_of_member(i, 6, 3)).collect();
+        assert_eq!(sites, vec![0, 0, 1, 1, 2, 2]);
+        // Uneven split stays monotone and hits every site.
+        let sites: Vec<usize> = (0..5).map(|i| site_of_member(i, 5, 2)).collect();
+        assert_eq!(sites, vec![0, 0, 0, 1, 1]);
+        // Degenerate shapes collapse to site 0.
+        assert_eq!(site_of_member(3, 4, 1), 0);
+        assert_eq!(site_of_member(0, 0, 4), 0);
+    }
+}

@@ -1,0 +1,261 @@
+//! Federation acceptance tests: one `PoolRouter` partitioned into two
+//! sites drives BOTH fabrics — first the virtual-time simulator, then
+//! the real TCP loopback pool — with two-level (site → DTN) source
+//! selection, site×site byte matrices on both legs, and whole-site
+//! failure draining to the survivor with exact slot accounting
+//! (mirroring `router_unified.rs`, one federation layer up).
+
+use htcdm::coordinator::engine::{Engine, EngineSpec};
+use htcdm::fabric::{run_real_pool, run_real_pool_router, RealPoolConfig};
+use htcdm::mover::{
+    AdmissionConfig, DataSource, FaultPlan, PoolRouter, RouterConfig, RouterPolicy, ShadowPool,
+    SiteSelector, SourcePlan, SourceSelector, TransferRequest,
+};
+use htcdm::netsim::topology::TestbedSpec;
+use htcdm::transfer::ThrottlePolicy;
+use htcdm::util::units::Bytes;
+
+/// A 2-site federation: 2 submit nodes and 4 DTNs split 1+2 per site,
+/// round-robin site selection so both source rows carry traffic.
+fn federated_router(admission: AdmissionConfig, selector: SiteSelector) -> PoolRouter {
+    let nodes = (0..2).map(|_| ShadowPool::sim(1, admission.clone())).collect();
+    PoolRouter::from_config(
+        nodes,
+        vec![1.0; 2],
+        RouterPolicy::RoundRobin,
+        RouterConfig {
+            source_plan: SourcePlan::DedicatedDtn,
+            dtn_capacity: vec![1.0; 4],
+            source_selector: SourceSelector::RoundRobin,
+            n_sites: 2,
+            site_selector: selector,
+            ..RouterConfig::default()
+        },
+    )
+}
+
+fn tiny_sim_spec(n_jobs: u32) -> EngineSpec {
+    let mut tb = TestbedSpec::lan_paper();
+    tb.workers.truncate(2);
+    tb.workers[0].slots = 4;
+    tb.workers[1].slots = 4;
+    let mut spec = EngineSpec::paper(tb, ThrottlePolicy::Disabled);
+    spec.n_jobs = n_jobs;
+    spec.input_bytes = Bytes(50_000_000);
+    spec.runtime_median_s = 1.0;
+    spec.seed = 11;
+    spec
+}
+
+fn real_cfg(n_jobs: u32) -> RealPoolConfig {
+    RealPoolConfig {
+        n_jobs,
+        workers: 2,
+        input_bytes: 128 << 10,
+        output_bytes: 512,
+        chunk_words: 1024,
+        use_xla_engine: false,
+        passphrase: "federation-unified".into(),
+        ..RealPoolConfig::default()
+    }
+}
+
+/// One federated router object serves the simulator and then the real
+/// fabric: both legs run two-level selection through the same site
+/// partition, both report a 2×2 site×site matrix accounting for every
+/// payload byte, and routing statistics accumulate across the two runs.
+#[test]
+fn same_router_object_drives_federated_sim_and_real_fabric() {
+    let sim_jobs = 24u32;
+    let real_jobs = 8u32;
+    let router = federated_router(
+        AdmissionConfig::FairShare { limit: 4 },
+        SiteSelector::RoundRobin,
+    );
+    assert_eq!(router.n_sites(), 2);
+    assert_eq!(router.site_of_node(0), 0);
+    assert_eq!(router.site_of_node(1), 1);
+    assert_eq!(
+        (0..4).map(|d| router.site_of_dtn(d)).collect::<Vec<_>>(),
+        vec![0, 0, 1, 1]
+    );
+
+    // Phase 1: the simulated fabric. `with_router` adopts the router's
+    // federation shape (2 sites, DTN fleet, site selector) into the
+    // testbed, so border and pair-WAN links are built to match.
+    let mut spec = tiny_sim_spec(sim_jobs);
+    spec.n_owners = 3;
+    let result = Engine::with_router(spec, router).run().unwrap();
+    assert_eq!(result.schedd.completed_count(), sim_jobs as usize);
+    assert_eq!(result.mover.total_admitted, sim_jobs as u64);
+    assert_eq!(result.site_matrix.len(), 2, "2×2 sim site matrix");
+    assert!(result.site_matrix.iter().all(|row| row.len() == 2));
+    assert_eq!(
+        result.site_matrix.iter().flatten().sum::<u64>(),
+        sim_jobs as u64 * 50_000_000,
+        "sim matrix accounts every input byte"
+    );
+    for (s, row) in result.site_matrix.iter().enumerate() {
+        assert!(
+            row.iter().sum::<u64>() > 0,
+            "round-robin left source site {s} idle: {:?}",
+            result.site_matrix
+        );
+    }
+
+    // Extract the very same router object from the sim schedd.
+    let mut schedd = result.schedd;
+    let router = schedd.take_router();
+    assert_eq!(router.stats().total_admitted, sim_jobs as u64);
+
+    // Phase 2: the real TCP fabric — one file server per submit node,
+    // one DTN server per data node — drives sealed bytes through the
+    // same router and the same site partition.
+    let (report, router) = run_real_pool_router(&real_cfg(real_jobs), router).unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.jobs_completed, real_jobs);
+    assert_eq!(report.n_sites, 2);
+    assert_eq!(report.site_matrix_bytes.len(), 2, "2×2 real site matrix");
+    assert!(report.site_matrix_bytes.iter().all(|row| row.len() == 2));
+    assert_eq!(
+        report.site_matrix_bytes.iter().flatten().sum::<u64>(),
+        real_jobs as u64 * (128 << 10) as u64,
+        "real matrix accounts every payload byte"
+    );
+    for (s, row) in report.site_matrix_bytes.iter().enumerate() {
+        assert!(
+            row.iter().sum::<u64>() > 0,
+            "round-robin left source site {s} idle: {:?}",
+            report.site_matrix_bytes
+        );
+    }
+
+    // The SAME router accounted for both fabrics: admissions accumulate
+    // and every transfer landed on exactly one shard.
+    let stats = router.stats();
+    assert_eq!(stats.total_admitted, (sim_jobs + real_jobs) as u64);
+    assert_eq!(stats.released_without_active, 0);
+    assert_eq!(
+        stats.admitted_per_shard.iter().sum::<u64>(),
+        (sim_jobs + real_jobs) as u64
+    );
+}
+
+/// Whole-site failure mid-burst: `fail_site` drains site 0's submit node
+/// and both of its DTNs; every re-driven transfer lands on the surviving
+/// site's node AND the surviving site's DTNs, slot accounting stays
+/// exact throughout (no leak, no double release), and the burst drains
+/// without deadlock.
+#[test]
+fn fail_site_mid_burst_drains_to_surviving_site() {
+    let mut router = federated_router(
+        AdmissionConfig::Throttle(ThrottlePolicy::MaxConcurrent(3)),
+        SiteSelector::LocalFirst,
+    );
+    let n_jobs = 30u32;
+    let mut admitted: Vec<u32> = Vec::new();
+    for t in 0..n_jobs {
+        admitted.extend(
+            router
+                .request(TransferRequest::new(t, "o", 1000))
+                .iter()
+                .map(|a| a.ticket),
+        );
+    }
+    assert_eq!(router.active(), 6, "3 per node × 2 nodes");
+    assert_eq!(
+        router.active() as usize + router.waiting(),
+        n_jobs as usize,
+        "every ticket holds a slot or a queue entry"
+    );
+
+    // Mid-burst: complete a few, then site 0 (node 0 + DTNs 0,1) dies.
+    let mut completed = 0u32;
+    for _ in 0..4 {
+        let t = admitted.pop().expect("admitted transfers exist");
+        completed += 1;
+        admitted.extend(router.complete(t).iter().map(|a| a.ticket));
+    }
+    let rescued = router.fail_site(0);
+    assert_eq!(router.stats().shard_failed, 1, "site 0's one submit node");
+    assert!(router.is_failed(0) && !router.is_failed(1));
+    assert!(router.is_dtn_failed(0) && router.is_dtn_failed(1));
+    for r in &rescued {
+        assert_eq!(r.node, 1, "re-driven transfer scheduled off-survivor");
+        if let DataSource::Dtn { dtn } = r.source {
+            assert_eq!(router.site_of_dtn(dtn), 1, "re-sourced onto a dead site's DTN");
+        }
+    }
+    // Exact slot accounting after the site kill: the dead site holds
+    // nothing, the survivor is at its cap, and the outstanding burst is
+    // fully conserved between slots and wait queues.
+    let active = router.active_per_node();
+    assert_eq!(active[0], 0, "dead site still holds submit slots");
+    assert_eq!(active[1], 3, "survivor runs at its admission cap");
+    let dtn_active = router.dtn_active_per_node();
+    assert_eq!(dtn_active[0], 0, "dead DTN 0 still holds slots");
+    assert_eq!(dtn_active[1], 0, "dead DTN 1 still holds slots");
+    assert_eq!(
+        router.active() as usize + router.waiting(),
+        (n_jobs - completed) as usize,
+        "slot+queue accounting conserved across the site kill"
+    );
+    admitted.retain(|&t| router.global_shard_of(t).is_some());
+    admitted.extend(rescued.iter().map(|a| a.ticket));
+
+    // Drain on the survivor: every admission stays on node 1 and every
+    // DTN-sourced byte stays on site 1.
+    let mut guard = 0;
+    while completed < n_jobs {
+        guard += 1;
+        assert!(guard < 1000, "burst deadlocked after the site failure");
+        let t = admitted.pop().expect("no admitted transfer while jobs remain");
+        completed += 1;
+        for a in router.complete(t) {
+            assert_eq!(a.node, 1, "survivor serves the re-routed backlog");
+            if let DataSource::Dtn { dtn } = a.source {
+                assert_eq!(router.site_of_dtn(dtn), 1);
+            }
+            admitted.push(a.ticket);
+        }
+    }
+    assert_eq!(completed, n_jobs, "every job finished despite the dead site");
+    assert_eq!(router.active(), 0);
+    assert_eq!(router.waiting(), 0);
+    assert!(router.dtn_active_per_node().iter().all(|&a| a == 0));
+    assert_eq!(router.stats().released_without_active, 0);
+}
+
+/// Chaos-tier e2e: a real loopback burst loses site 0 mid-flight and
+/// gets it back — every job still completes, every byte is accounted in
+/// the site×site matrix, and the chaos timeline records the site events.
+#[test]
+#[ignore = "heavier federated loopback chaos burst; run in the chaos tier"]
+fn real_fabric_survives_site_kill_mid_burst() {
+    let mut cfg = real_cfg(24);
+    cfg.input_bytes = 256 << 10;
+    cfg.n_submit_nodes = 2;
+    cfg.data_nodes = 4;
+    cfg.source = SourcePlan::DedicatedDtn;
+    cfg.n_sites = 2;
+    cfg.site_selector = SiteSelector::LocalFirst;
+    cfg.faults = FaultPlan::default().kill_site(0, 0.2).recover_site(0, 1.2);
+    let r = run_real_pool(cfg).unwrap();
+    assert_eq!(r.errors, 0, "site kill must not surface as transfer errors");
+    assert_eq!(r.jobs_completed, 24);
+    assert_eq!(
+        r.total_payload_bytes,
+        24 * (256 << 10) as u64,
+        "every byte delivered despite the site outage"
+    );
+    assert_eq!(r.n_sites, 2);
+    assert_eq!(
+        r.site_matrix_bytes.iter().flatten().sum::<u64>(),
+        r.total_payload_bytes,
+        "site matrix accounts the full burst"
+    );
+    let site_records: Vec<_> = r.chaos.records.iter().filter(|rec| rec.is_site()).collect();
+    assert_eq!(site_records.len(), 2, "kill-site and recover-site recorded");
+    assert!(site_records.iter().any(|rec| rec.action == "kill-site"));
+    assert!(site_records.iter().any(|rec| rec.action == "recover-site"));
+}
